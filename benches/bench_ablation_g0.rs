@@ -1,0 +1,9 @@
+//! Regenerates g0 init ablation (ablation-g0) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp ablation-g0` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("ablation-g0", &["--rounds", "1500"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Wire-format ablation (ablation-wire) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp ablation-wire` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("ablation-wire", &[]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 1/5 autoencoder 3PCv2 vs EF21 (fig1) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig1` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig1", &["--workers", "10", "--rounds", "40", "--multipliers", "0.001,0.0001"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 2/17-20 CLAG heatmap (fig2) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig2` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig2", &["--ks", "1,11,22", "--zetas", "0,64", "--multipliers", "1,16,256", "--rounds", "500"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 3 EF21 sparsifiers (fig3) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig3` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig3", &["--workers", "10", "--rounds", "40", "--multipliers", "0.001,0.0001"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 4 MARINA vs 3PCv5 (fig4) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig4` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig4", &["--workers", "10", "--rounds", "40", "--multipliers", "0.001,0.0001"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 7 quadratic MARINA/3PCv5 (fig7) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig7` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig7", &["--d", "100", "--rounds", "1200", "--noise-scales", "0.8", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 10 (K1,K2) tuning (fig10) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig10` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig10", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 11 (K1,K2) tuning 0.02d (fig11) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig11` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig11", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

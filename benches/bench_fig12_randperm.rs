@@ -1,0 +1,9 @@
+//! Regenerates Fig 12 Rand-Perm tuning (fig12) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig12` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig12", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

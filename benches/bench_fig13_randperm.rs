@@ -1,0 +1,9 @@
+//! Regenerates Fig 13 Rand-Perm tuning 0.02d (fig13) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig13` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig13", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

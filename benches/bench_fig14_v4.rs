@@ -1,0 +1,9 @@
+//! Regenerates Fig 14 3PCv4 vs EF21 (fig14) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig14` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig14", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 15 3PCv4 vs EF21 0.02d (fig15) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig15` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig15", &["--d", "100", "--rounds", "1200", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

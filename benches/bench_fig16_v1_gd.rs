@@ -1,0 +1,9 @@
+//! Regenerates Fig 16 3PCv1 vs GD (fig16) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig16` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig16", &["--d", "100", "--rounds", "1200", "--noise-scales", "0.8", "--multipliers", "1,4,64", "--tol", "5e-3"]);
+}

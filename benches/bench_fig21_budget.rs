@@ -1,0 +1,9 @@
+//! Regenerates Figs 21-24 bit budget (fig21) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp fig21` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("fig21", &["--budget-mbits", "1.0", "--rounds", "800", "--zetas", "4,64", "--multipliers", "1,16,256"]);
+}

@@ -1,0 +1,94 @@
+//! Hot-path microbenchmarks — the perf-pass instrument (EXPERIMENTS.md
+//! §Perf). Targets from DESIGN.md §7:
+//!   * Top-K selection ≥ 1e8 coords/s (quickselect, no full sort);
+//!   * mechanism apply dominated by the compressor, not allocation;
+//!   * server fold O(nnz);
+//!   * full coordinator round at (n=100, d=25088) dominated by gradient
+//!     compute, coordination overhead < 10%.
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+use std::sync::Arc;
+use threepc::compressors::{Contractive, Ctx, CtxInfo, TopK};
+use threepc::coordinator::{train, TrainConfig};
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::quadratic;
+use threepc::util::rng::Pcg64;
+
+fn main() {
+    println!("== hot path microbenches ==");
+    let d = 25_088;
+    let mut rng = Pcg64::seed(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+
+    // Top-K selection throughput.
+    for k in [251usize, 2508] {
+        let top = TopK::new(k);
+        let s = benchkit::measure(&format!("topk select k={k} d={d}"), 10, 200, || {
+            std::hint::black_box(top.select(&x));
+        });
+        println!("    → {:.1}e6 coords/s", benchkit::throughput(&s, d) / 1e6);
+    }
+
+    // Full compressor (select + gather + alloc).
+    let info = CtxInfo::single(d);
+    let top = TopK::new(251);
+    benchkit::measure("topk compress k=251 (alloc+gather)", 10, 200, || {
+        let mut r = Pcg64::seed(2);
+        let mut ctx = Ctx::new(info, &mut r, 0);
+        std::hint::black_box(top.compress(&x, &mut ctx));
+    });
+
+    // Mechanism apply (EF21, CLAG skip and fire paths).
+    let ef = parse_mechanism("ef21:top251").unwrap();
+    let h = vec![0.0f32; d];
+    let y = vec![0.0f32; d];
+    benchkit::measure("EF21 apply d=25088", 10, 200, || {
+        let mut r = Pcg64::seed(3);
+        let mut ctx = Ctx::new(info, &mut r, 0);
+        std::hint::black_box(ef.apply(&h, &y, &x, &mut ctx));
+    });
+    let clag = parse_mechanism("clag:top251:1e9").unwrap(); // huge ζ → always skips
+    benchkit::measure("CLAG apply (skip path) d=25088", 10, 200, || {
+        let mut r = Pcg64::seed(3);
+        let mut ctx = Ctx::new(info, &mut r, 0);
+        std::hint::black_box(clag.apply(&x, &x, &x, &mut ctx));
+    });
+
+    // End-to-end round latency, n = 100 workers on the quadratic suite
+    // (cheap gradients → upper-bounds the coordination overhead).
+    println!("\n== coordinator round latency (cheap gradients → coordination overhead) ==");
+    for (n, threads) in [(100usize, 1usize), (100, 0), (1000, 0)] {
+        let suite = quadratic::generate(n, 1000, 1e-4, 0.5, 7);
+        let map = parse_mechanism("clag:top20:4.0").unwrap();
+        let rounds = 30;
+        let cfg = TrainConfig { gamma: 1e-3, max_rounds: rounds, threads, seed: 1, ..TrainConfig::default() };
+        let s = benchkit::measure(
+            &format!("train {rounds} rounds n={n} d=1000 threads={}", if threads == 0 { "auto".into() } else { threads.to_string() }),
+            1,
+            5,
+            || {
+                std::hint::black_box(train(&suite.problem, map.clone(), &cfg));
+            },
+        );
+        println!(
+            "    → {:.2} ms/round",
+            s.median.as_secs_f64() * 1e3 / rounds as f64
+        );
+    }
+
+    // Mean-aggregation fold cost alone.
+    println!("\n== server fold ==");
+    let deltas: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64; d]).collect();
+    let g0: Vec<&[f32]> = Vec::new();
+    drop(g0);
+    let mut server = threepc::coordinator::Server::new(vec![0.0f32; d], &[&x], &[0]);
+    benchkit::measure("fold 8 thread-partials d=25088", 10, 300, || {
+        for dd in &deltas {
+            server.fold_delta(std::hint::black_box(dd));
+        }
+    });
+
+    let _ = Arc::strong_count(&ef);
+}

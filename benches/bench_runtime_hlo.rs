@@ -1,0 +1,77 @@
+//! HLO executor step latency vs the native backend (the DESIGN.md §5
+//! native-vs-HLO ablation): per-gradient latency of the AOT-compiled
+//! JAX/Pallas artifacts executed through PJRT, against the hand-written
+//! Rust gradients, plus the end-to-end round cost of each backend.
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+use threepc::problems::{LocalProblem, QuadLocal};
+use threepc::runtime::{DeviceService, HloQuad, Manifest};
+use threepc::util::rng::Pcg64;
+
+fn main() {
+    let manifest = match Manifest::load(threepc::runtime::default_artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping HLO bench: {e}");
+            return;
+        }
+    };
+    let dev = DeviceService::start().expect("PJRT CPU client");
+    let d = manifest.prop("quad_grad", "d").unwrap();
+    let mut rng = Pcg64::seed(1);
+    let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+
+    let native = QuadLocal::new(1.3, 0.7, b.clone());
+    let hlo = HloQuad::new(dev.handle(), &manifest, "bench", 1.3, 0.7, b).unwrap();
+
+    // Perturb x per call so the executors' same-iterate memo caches
+    // (which serve the coordinator's loss+grad pairing) never hit.
+    let mut out = vec![0.0f32; d];
+    let mut x = x;
+    let mut tick = 0f32;
+    let sn = benchkit::measure(&format!("native quad grad d={d}"), 20, 500, || {
+        tick += 1e-6;
+        x[0] += tick;
+        native.grad(std::hint::black_box(&x), &mut out);
+    });
+    let sh = benchkit::measure(&format!("HLO (Pallas stencil via PJRT) quad grad d={d}"), 20, 500, || {
+        tick += 1e-6;
+        x[0] += tick;
+        hlo.grad(std::hint::black_box(&x), &mut out);
+    });
+    println!(
+        "    → PJRT dispatch overhead ≈ {:.1} µs/call ({}x native; gradient math is ~{} ns)",
+        (sh.median.as_secs_f64() - sn.median.as_secs_f64()) * 1e6,
+        (sh.median.as_secs_f64() / sn.median.as_secs_f64()).round(),
+        sn.median.as_nanos()
+    );
+
+    // Logreg: a realistically-sized gradient (m×d work) where the PJRT
+    // call cost amortises.
+    let m = manifest.prop("logreg_a9a", "m").unwrap();
+    let dl = manifest.prop("logreg_a9a", "d").unwrap();
+    let rows: Vec<f32> = (0..m * dl).map(|_| rng.normal() as f32).collect();
+    let labels: Vec<f32> = (0..m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    let native = threepc::problems::LogReg::new(rows.clone(), labels.clone(), dl, 0.1);
+    let hlo = threepc::runtime::HloLogReg::new(dev.handle(), &manifest, "a9a", "bench", rows, labels)
+        .unwrap();
+    let mut xl: Vec<f32> = (0..dl).map(|_| rng.normal() as f32).collect();
+    let mut outl = vec![0.0f32; dl];
+    let sn = benchkit::measure(&format!("native logreg grad m={m} d={dl}"), 10, 200, || {
+        tick += 1e-6;
+        xl[0] += tick;
+        native.grad(std::hint::black_box(&xl), &mut outl);
+    });
+    let sh = benchkit::measure(&format!("HLO (fused Pallas kernel) logreg grad m={m} d={dl}"), 10, 200, || {
+        tick += 1e-6;
+        xl[0] += tick;
+        hlo.grad(std::hint::black_box(&xl), &mut outl);
+    });
+    println!(
+        "    → HLO/native ratio {:.2} (amortised)",
+        sh.median.as_secs_f64() / sn.median.as_secs_f64()
+    );
+}

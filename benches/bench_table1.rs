@@ -1,0 +1,9 @@
+//! Regenerates Table 1 certificates (table1) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp table1` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("table1", &["--draws", "2000"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Table 2 rate verification (table2) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp table2` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("table2", &["--rounds", "600"]);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Tables 3-4 generator constants (table3) at bench scale and times it.
+//! Full-scale regeneration: `threepc exp table3` (see DESIGN.md section 4).
+
+#[path = "benchkit/mod.rs"]
+mod benchkit;
+
+fn main() {
+    benchkit::run_experiment("table3", &["--d", "300"]);
+}

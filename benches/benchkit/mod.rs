@@ -1,0 +1,68 @@
+//! Minimal benchmark harness (the offline image has no criterion).
+//!
+//! `measure` runs warmup + timed iterations and reports median / MAD /
+//! min; `run_experiment` times one paper-experiment regeneration
+//! end-to-end. Every bench target is `harness = false`, so `cargo bench`
+//! executes these `main`s directly.
+
+use std::time::{Duration, Instant};
+
+pub struct Sample {
+    pub name: String,
+    pub median: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub iters: usize,
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<52} median {:>12.3?}  mad {:>10.3?}  min {:>12.3?}  ({} iters)",
+            self.name, self.median, self.mad, self.min, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; prints and returns the sample.
+#[allow(dead_code)]
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sample = Sample {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(median),
+        mad: Duration::from_secs_f64(dev[dev.len() / 2]),
+        min: Duration::from_secs_f64(times[0]),
+        iters: times.len(),
+    };
+    println!("{sample}");
+    sample
+}
+
+/// Throughput helper: elements processed per second at the median.
+#[allow(dead_code)]
+pub fn throughput(sample: &Sample, elements: usize) -> f64 {
+    elements as f64 / sample.median.as_secs_f64()
+}
+
+/// Time a whole experiment regeneration (the per-figure benches).
+#[allow(dead_code)]
+pub fn run_experiment(id: &str, args: &[&str]) {
+    let parsed = threepc::util::cli::Args::parse(args.iter().map(|s| s.to_string()));
+    let t0 = Instant::now();
+    threepc::experiments::run(id, &parsed).unwrap_or_else(|e| panic!("experiment {id}: {e:#}"));
+    println!("\n[bench] experiment '{id}' regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,60 @@
+//! Domain example 2 — the federated-learning heterogeneity sweep the
+//! paper's §6.2 studies: how do compression mechanisms degrade as client
+//! data goes from identical → random shards → split-by-label?
+//!
+//! Trains the linear autoencoder at all three homogeneity levels with
+//! EF21 and 3PCv2 and reports final gradient norms and bits — showing
+//! 3PCv2's advantage growing with heterogeneity (the paper's Fig. 1
+//! takeaway).
+//!
+//! ```bash
+//! cargo run --release --example federated_heterogeneity -- --workers 20
+//! ```
+
+use threepc::coordinator::TrainConfig;
+use threepc::data;
+use threepc::experiments::autoencoder::ae_problem;
+use threepc::experiments::common::{self, Criterion};
+use threepc::mechanisms::parse_mechanism;
+use threepc::util::cli::Args;
+use threepc::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    threepc::util::logging::init_from_env();
+    let args = Args::from_env();
+    let n = args.num_or("workers", 20usize);
+    let d_e = 16usize;
+    let dim = 2 * 784 * d_e;
+    let k = (dim / n).max(2);
+    let k2 = k / 2;
+    let ds = data::synthetic_mnist(args.num_or("samples", 10 * n), 3);
+    let rounds = args.num_or("rounds", 120usize);
+    let multipliers = [2.0f64.powi(-6), 2.0f64.powi(-4), 0.25, 1.0];
+
+    let mut t = Table::new(
+        "autoencoder: final ‖∇f‖² after fixed rounds, by client heterogeneity",
+        &["homogeneity", "method", "final |grad|^2", "bits/client", "gamma"],
+    );
+    for homog in ["1", "0", "labels"] {
+        let problem = ae_problem(&ds, n, homog, d_e, 5)?;
+        let cfg = TrainConfig { max_rounds: rounds, record_every: 1, seed: 77, ..TrainConfig::default() };
+        for (label, spec) in [
+            (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+            (format!("3PCv2 Rand{k2}-Top{k2}"), format!("v2:rand{k2}:top{k2}")),
+        ] {
+            let map = parse_mechanism(&spec)?;
+            let tuned = common::tune_stepsize(&problem, map, 1.0, &multipliers, &cfg, Criterion::MinFinalGradNorm);
+            let bits = tuned.result.records.last().map(|r| r.bits_up_cum).unwrap_or(f64::NAN);
+            t.row(&[
+                homog.to_string(),
+                label,
+                fnum(tuned.result.final_grad_norm_sq),
+                fnum(bits),
+                fnum(tuned.gamma),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("Expected shape (Fig. 1): 3PCv2 competitive everywhere, strongest under label split.");
+    Ok(())
+}

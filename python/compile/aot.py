@@ -1,0 +1,107 @@
+"""AOT build path: lower the L2 JAX programs to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts are shape-specialised; `manifest.txt` (key = value lines)
+records every artifact's shapes so the Rust runtime can validate its
+inputs before compiling. Re-run with different flags to re-specialise:
+
+    python -m compile.aot --out-dir ../artifacts \
+        --logreg-m 200 --ae-m 60 --ae-workers 10 --quad-d 1000
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (name, d) per supported logreg dataset — mirrors
+# rust/src/data/mod.rs::LIBSVM_GEOMETRY.
+LOGREG_DIMS = {"phishing": 68, "w6a": 300, "a9a": 123, "ijcnn1": 22}
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def write(out_dir, name, text, manifest, **meta):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append((name, meta))
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--logreg-m", type=int, default=200,
+                    help="rows per worker shard (N=4000, n=20 default)")
+    ap.add_argument("--ae-m", type=int, default=60,
+                    help="autoencoder samples per worker")
+    ap.add_argument("--quad-d", type=int, default=1000)
+    ap.add_argument("--lam", type=float, default=0.1)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+
+    for name, d in LOGREG_DIMS.items():
+        m = args.logreg_m
+        lowered = lower(
+            lambda x, a, y: model.logreg_loss_grad(x, a, y, lam=args.lam),
+            f32((d,)), f32((m, d)), f32((m,)),
+        )
+        write(args.out_dir, f"logreg_{name}", to_hlo_text(lowered), manifest,
+              kind="logreg", m=m, d=d, lam=args.lam)
+
+    # Autoencoder: paper geometry d_f=784, d_e=16, d = 25088.
+    d_f, d_e = 784, 16
+    dim = 2 * d_f * d_e
+    lowered = lower(
+        lambda p, a: model.ae_loss_grad(p, a, d_f=d_f, d_e=d_e),
+        f32((dim,)), f32((args.ae_m, d_f)),
+    )
+    write(args.out_dir, "ae_grad", to_hlo_text(lowered), manifest,
+          kind="autoencoder", m=args.ae_m, d_f=d_f, d_e=d_e, dim=dim)
+
+    # Quadratic stencil: nu/shift enter as runtime scalars so one artifact
+    # serves every worker.
+    d = args.quad_d
+    lowered = lower(
+        model.quad_gradient,
+        f32((d,)), f32((d,)), f32(()), f32(()),
+    )
+    write(args.out_dir, "quad_grad", to_hlo_text(lowered), manifest,
+          kind="quadratic", d=d)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        for name, meta in manifest:
+            for k, v in meta.items():
+                f.write(f"{name}.{k} = {v}\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

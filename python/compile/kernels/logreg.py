@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: fused logistic-regression gradient + loss.
+
+The training hot-spot of the §6.1 experiments is, per worker and per
+round, `z = A x → s = −y·σ(−y z) → g = Aᵀ s` over the worker's shard.
+This kernel fuses all three stages in one pass over row-blocks of A, so
+each data tile is read from HBM exactly once and both the gradient and
+the loss accumulate in VMEM:
+
+  grid = (m / bm,)
+  per step i:  A_blk (bm, d) and y_blk (bm,) stream in;
+               x (d,) stays resident;
+               g (d,) and loss (1,) accumulate in place (their BlockSpec
+               index maps are constant, the canonical Pallas reduction
+               pattern).
+
+TPU notes (DESIGN.md §Hardware-Adaptation): bm is chosen so the A tile
+fits VMEM (bm·d·4 B ≤ ~2 MiB); the matvec pair maps to the MXU as
+(bm, d)×(d, 1) products. On this image the kernel runs interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls); correctness is what we
+validate here, structure is what the perf notes assess.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, y_ref, g_ref, loss_ref, *, m_total, lam):
+    i = pl.program_id(0)
+    a_blk = a_ref[...]            # (bm, d)
+    y_blk = y_ref[...]            # (bm,)
+    x = x_ref[...]                # (d,)
+
+    z = a_blk @ x                 # (bm,) — MXU matvec
+    margins = y_blk * z
+    # Stable softplus(-margins) and sigmoid(-margins).
+    sp = jnp.logaddexp(0.0, -margins)
+    sig = 1.0 / (1.0 + jnp.exp(margins))
+    coeff = -y_blk * sig / m_total
+    g_partial = coeff @ a_blk     # (d,) — MXU matvec (Aᵀs for the block)
+    loss_partial = jnp.sum(sp) / m_total
+
+    @pl.when(i == 0)
+    def _init():
+        # First block also contributes the regulariser (added once).
+        x2 = x * x
+        g_ref[...] = g_partial + lam * 2.0 * x / ((1.0 + x2) ** 2)
+        loss_ref[...] = jnp.reshape(loss_partial + lam * jnp.sum(x2 / (1.0 + x2)), (1,))
+
+    @pl.when(i != 0)
+    def _acc():
+        g_ref[...] = g_ref[...] + g_partial
+        loss_ref[...] = loss_ref[...] + jnp.reshape(loss_partial, (1,))
+
+
+def pick_block_rows(m, d, vmem_budget_bytes=2 * 1024 * 1024):
+    """Largest divisor-of-m row-block with a_blk under the VMEM budget."""
+    cap = max(1, vmem_budget_bytes // (4 * d))
+    bm = min(m, cap)
+    while m % bm != 0:
+        bm -= 1
+    return bm
+
+
+def logreg_grad(x, a, y, lam=0.1, block_rows=None, interpret=True):
+    """Fused gradient+loss of Eq. (80). Returns (grad (d,), loss (1,))."""
+    m, d = a.shape
+    bm = block_rows or pick_block_rows(m, d)
+    assert m % bm == 0, f"block_rows {bm} must divide m {m}"
+    kernel = functools.partial(_kernel, m_total=float(m), lam=float(lam))
+    grad, loss = pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),        # x resident
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # A streams
+            pl.BlockSpec((bm,), lambda i: (i,)),       # y streams
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),        # g accumulates
+            pl.BlockSpec((1,), lambda i: (0,)),        # loss accumulates
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), a.dtype),
+            jax.ShapeDtypeStruct((1,), a.dtype),
+        ],
+        interpret=interpret,
+    )(x, a, y)
+    return grad, loss

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: tiled matmul.
+
+The autoencoder objective (Eq. 77) is matmul-bound; this kernel is the
+building block the L2 model uses for every product (with explicit
+transposes where needed, which XLA folds into the operand layouts).
+
+Classic three-loop tiling: grid = (M/bm, N/bn, K/bk) with the K axis
+innermost; the (bm, bn) output tile stays resident in VMEM across the K
+sweep (constant index map on the k axis — the Pallas accumulation
+pattern), while (bm, bk) and (bk, bn) operand tiles stream through.
+Tiles default to 128/256 multiples — MXU-shaped on TPU; interpret=True
+on this image (see logreg.py header).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def _pick(dim, target):
+    """Largest divisor of `dim` that is ≤ target."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def matmul(a, b, bm=128, bk=256, bn=128, interpret=True):
+    """(m, k) @ (k, n) with VMEM tiling. Tile targets shrink to divisors."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bk, bn = _pick(m, bm), _pick(k, bk), _pick(n, bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only. pytest + hypothesis assert allclose between
+kernel and oracle across shapes and dtypes; the Rust integration tests
+additionally pin the AOT-compiled HLO to the native Rust implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def logreg_grad_ref(x, a, y, lam):
+    """Gradient and loss of non-convex logistic regression (Eq. 80).
+
+    x: (d,) parameters; a: (m, d) features; y: (m,) labels in {-1, +1};
+    lam: scalar regulariser weight.
+
+    Returns (grad: (d,), loss: ()).
+    """
+    z = a @ x
+    margins = y * z
+    # log(1 + exp(-margins)), numerically stable.
+    data_loss = jnp.mean(jnp.logaddexp(0.0, -margins))
+    sig = 1.0 / (1.0 + jnp.exp(margins))  # sigmoid(-margins)
+    coeff = -y * sig / a.shape[0]
+    data_grad = a.T @ coeff
+    x2 = x * x
+    reg_loss = lam * jnp.sum(x2 / (1.0 + x2))
+    reg_grad = lam * 2.0 * x / ((1.0 + x2) ** 2)
+    return data_grad + reg_grad, data_loss + reg_loss
+
+
+def matmul_ref(a, b):
+    """Plain matmul oracle: (m, k) @ (k, n)."""
+    return a @ b
+
+
+def quad_grad_ref(x, b, nu, shift):
+    """Gradient of the Algorithm-11 quadratic: A x - b with
+    A = (nu/4) * tridiag(-1, 2, -1) + shift * I  (O(d) stencil)."""
+    left = jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]])
+    right = jnp.concatenate([x[1:], jnp.zeros_like(x[:1])])
+    return (nu / 4.0) * (2.0 * x - left - right) + shift * x - b
+
+
+def ae_loss_grad_ref(d_mat, e_mat, a):
+    """Loss and gradients of the linear autoencoder (Eq. 77).
+
+    d_mat: (d_f, d_e); e_mat: (d_e, d_f); a: (m, d_f) data batch.
+    Returns (grad_d, grad_e, loss).
+    """
+    m = a.shape[0]
+    z = a @ e_mat.T            # (m, d_e) encodings
+    r = z @ d_mat.T - a        # (m, d_f) residuals
+    loss = jnp.sum(r * r) / m
+    grad_d = 2.0 / m * (r.T @ z)            # (d_f, d_e)
+    grad_e = 2.0 / m * (d_mat.T @ r.T @ a)  # (d_e, d_f)
+    return grad_d, grad_e, loss

@@ -1,0 +1,52 @@
+"""L2: the training objectives as JAX programs calling the L1 kernels.
+
+These are the functions `aot.py` lowers to HLO text; the Rust runtime
+executes them per worker per round (Python is never on the training
+path). Each returns a tuple (lowered with return_tuple=True — the Rust
+side unwraps).
+
+Conventions shared with the Rust coordinator:
+  * parameters and gradients are f32;
+  * the autoencoder parameter vector is [vec(D); vec(E)], row-major,
+    matching `rust/src/problems/autoencoder.rs`;
+  * logreg labels are ±1.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.logreg import logreg_grad
+from compile.kernels.matmul import matmul
+from compile.kernels.quad import quad_grad
+
+
+def logreg_loss_grad(x, a, y, lam=0.1):
+    """Non-convex logistic regression (Eq. 80): returns (grad, loss)."""
+    grad, loss = logreg_grad(x, a, y, lam=lam)
+    return grad, loss[0]
+
+
+def quad_gradient(x, b, nu, shift):
+    """Algorithm-11 quadratic gradient (tuple for AOT)."""
+    return (quad_grad(x, b, nu, shift),)
+
+
+def ae_loss_grad(params, a, d_f=784, d_e=16):
+    """Linear autoencoder (Eq. 77): returns (grad over [vec D; vec E], loss).
+
+    Every matrix product routes through the Pallas matmul kernel.
+    """
+    nd = d_f * d_e
+    d_mat = params[:nd].reshape(d_f, d_e)
+    e_mat = params[nd:].reshape(d_e, d_f)
+    m = a.shape[0]
+    z = matmul(a, e_mat.T)                   # (m, d_e)
+    r = matmul(z, d_mat.T) - a               # (m, d_f)
+    loss = jnp.sum(r * r) / m
+    grad_d = 2.0 / m * matmul(r.T, z)        # (d_f, d_e)
+    grad_e = 2.0 / m * matmul(matmul(d_mat.T, r.T), a)  # (d_e, d_f)
+    grad = jnp.concatenate([grad_d.reshape(-1), e_grad_flat(grad_e)])
+    return grad, loss
+
+
+def e_grad_flat(grad_e):
+    return grad_e.reshape(-1)

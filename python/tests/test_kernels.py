@@ -1,0 +1,135 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the logreg block size); fixed-seed numpy
+draws keep the suite deterministic. This is the core correctness signal
+for the compiled artifacts — the Rust side additionally pins the HLO
+output to the native Rust implementations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.logreg import logreg_grad, pick_block_rows
+from compile.kernels.matmul import matmul
+from compile.kernels.quad import quad_grad
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- logreg
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=48),
+    d=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_logreg_kernel_matches_ref(m, d, seed):
+    r = rng(seed)
+    x = r.normal(size=d).astype(np.float32)
+    a = r.normal(size=(m, d)).astype(np.float32)
+    y = r.choice([-1.0, 1.0], size=m).astype(np.float32)
+    g_k, l_k = logreg_grad(jnp.asarray(x), jnp.asarray(a), jnp.asarray(y), lam=0.1)
+    g_r, l_r = ref.logreg_grad_ref(jnp.asarray(x), jnp.asarray(a), jnp.asarray(y), 0.1)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(l_k)[0], float(l_r), rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 5, 10])
+def test_logreg_blocking_invariant(block_rows):
+    """The row-block size must not change the result (pure reduction)."""
+    r = rng(7)
+    m, d = 10, 6
+    x = r.normal(size=d).astype(np.float32)
+    a = r.normal(size=(m, d)).astype(np.float32)
+    y = r.choice([-1.0, 1.0], size=m).astype(np.float32)
+    g, l = logreg_grad(jnp.asarray(x), jnp.asarray(a), jnp.asarray(y), block_rows=block_rows)
+    g1, l1 = logreg_grad(jnp.asarray(x), jnp.asarray(a), jnp.asarray(y), block_rows=m)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l1), rtol=1e-5, atol=1e-6)
+
+
+def test_logreg_extreme_margins_stable():
+    a = np.array([[1000.0], [-1000.0]], dtype=np.float32)
+    y = np.array([1.0, -1.0], dtype=np.float32)
+    x = np.array([5.0], dtype=np.float32)
+    g, l = logreg_grad(jnp.asarray(x), jnp.asarray(a), jnp.asarray(y))
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.isfinite(np.asarray(l)).all()
+
+
+def test_pick_block_rows_divides_and_fits():
+    for m, d in [(200, 68), (4000, 300), (60, 784), (7, 3)]:
+        bm = pick_block_rows(m, d)
+        assert m % bm == 0
+        assert bm * d * 4 <= 2 * 1024 * 1024 or bm == 1
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=24),
+    k=st.integers(min_value=1, max_value=24),
+    n=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    a = r.normal(size=(m, k)).astype(np.float32)
+    b = r.normal(size=(k, n)).astype(np.float32)
+    out = matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("tiles", [(1, 1, 1), (2, 3, 2), (4, 4, 4), (128, 256, 128)])
+def test_matmul_tiling_invariant(tiles):
+    r = rng(3)
+    a = r.normal(size=(8, 12)).astype(np.float32)
+    b = r.normal(size=(12, 4)).astype(np.float32)
+    bm, bk, bn = tiles
+    out = matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_f64():
+    r = rng(5)
+    a = r.normal(size=(4, 4))
+    b = r.normal(size=(4, 4))
+    out = matmul(jnp.asarray(a, dtype=jnp.float32), jnp.asarray(b, dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), (a @ b).astype(np.float32), rtol=1e-4)
+
+
+# ------------------------------------------------------------------ quad
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=64),
+    nu=st.floats(min_value=-5.0, max_value=5.0),
+    shift=st.floats(min_value=0.0, max_value=3.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_quad_kernel_matches_ref(d, nu, shift, seed):
+    r = rng(seed)
+    x = r.normal(size=d).astype(np.float32)
+    b = r.normal(size=d).astype(np.float32)
+    out = quad_grad(jnp.asarray(x), jnp.asarray(b), nu, shift)
+    expect = ref.quad_grad_ref(jnp.asarray(x), jnp.asarray(b), nu, shift)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=1e-5)
+
+
+def test_quad_boundaries():
+    # d = 1: no neighbours at all.
+    out = quad_grad(jnp.asarray([2.0], dtype=jnp.float32),
+                    jnp.asarray([0.5], dtype=jnp.float32), 4.0, 1.0)
+    # (4/4)*(2*2) + 1*2 - 0.5 = 5.5
+    np.testing.assert_allclose(np.asarray(out), [5.5], rtol=1e-6)

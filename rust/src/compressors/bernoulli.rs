@@ -1,0 +1,114 @@
+//! The Bernoulli "probabilistic switch" compressor of Eq. (52):
+//!
+//! `C(x) = x` with probability `p`, `0` with probability `1 − p`.
+//!
+//! Biased (`E[C(x)] = p·x`) with `E‖C(x) − x‖² = (1 − p)‖x‖²` as an
+//! identity, i.e. contractive with α = p. Plugging it into 3PCv2 in place
+//! of `C` recovers MARINA (§C.5 remark); it also powers the MARINA-style
+//! shared-coin updates.
+//!
+//! By default the coin is **worker-private**. [`Bernoulli::shared`] makes
+//! it a round-shared coin (all workers flip the same value), which is the
+//! MARINA/3PCv5 `c_t ~ Be(p)` semantics.
+
+use super::{Contractive, Ctx, CtxInfo, CVec};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Bernoulli {
+    pub p: f64,
+    pub shared_coin: bool,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Bernoulli {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0,1], got {p}");
+        Bernoulli { p, shared_coin: false }
+    }
+
+    /// Round-shared coin variant (same flip on every worker in a round).
+    pub fn shared(p: f64) -> Bernoulli {
+        let mut b = Self::new(p);
+        b.shared_coin = true;
+        b
+    }
+
+    /// Flip this round's coin.
+    pub fn flip(&self, ctx: &mut Ctx<'_>) -> bool {
+        if self.shared_coin {
+            ctx.shared_rng().bernoulli(self.p)
+        } else {
+            ctx.rng.bernoulli(self.p)
+        }
+    }
+}
+
+impl Contractive for Bernoulli {
+    fn name(&self) -> String {
+        if self.shared_coin {
+            format!("Bern({},shared)", self.p)
+        } else {
+            format!("Bern({})", self.p)
+        }
+    }
+
+    fn alpha(&self, _info: &CtxInfo) -> f64 {
+        self.p
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        if self.flip(ctx) {
+            CVec::Dense(x.to_vec())
+        } else {
+            CVec::Zero { dim: x.len() }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::empirical_mean;
+    use crate::util::linalg::{dist_sq, norm2_sq};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn contraction_is_identity_in_expectation() {
+        let x: Vec<f32> = vec![2.0, -1.0, 0.5];
+        let b = Bernoulli::new(0.3);
+        let e = empirical_mean(1, 30_000, |r| {
+            let mut ctx = Ctx::new(CtxInfo::single(3), r, 0);
+            let y = b.compress(&x, &mut ctx).to_dense();
+            dist_sq(&y, &x)
+        });
+        let expect = (1.0 - 0.3) * norm2_sq(&x);
+        assert!((e - expect).abs() / expect < 0.05, "{e} vs {expect}");
+    }
+
+    #[test]
+    fn shared_coin_agrees_across_workers() {
+        let b = Bernoulli::shared(0.5);
+        for round in 0..32u64 {
+            let mut flips = Vec::new();
+            for w in 0..4u64 {
+                let mut rng = Pcg64::new(w, w); // distinct private rngs
+                let mut ctx = Ctx::new(
+                    CtxInfo { dim: 1, n_workers: 4, worker_id: w as usize },
+                    &mut rng,
+                    round,
+                );
+                flips.push(b.flip(&mut ctx));
+            }
+            assert!(flips.iter().all(|&f| f == flips[0]), "round {round}: {flips:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_probabilities() {
+        let x = [1.0f32];
+        let mut rng = Pcg64::seed(0);
+        let mut ctx = Ctx::new(CtxInfo::single(1), &mut rng, 0);
+        assert_eq!(Bernoulli::new(1.0).compress(&x, &mut ctx), CVec::Dense(vec![1.0]));
+        let mut ctx = Ctx::new(CtxInfo::single(1), &mut rng, 0);
+        assert_eq!(Bernoulli::new(0.0).compress(&x, &mut ctx), CVec::Zero { dim: 1 });
+    }
+}

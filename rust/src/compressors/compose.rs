@@ -1,0 +1,84 @@
+//! Composition of contractive compressors: `C₂∘C₁` applied as
+//! `x ↦ C₂(C₁(x))`. If `C₁` has parameter α₁ and `C₂` has α₂, the
+//! composition is contractive with `1 − ᾱ = (1−α₁)(1−α₂)` **when the
+//! outer error bound applies coordinate-free** (true for the sparsifier
+//! family used here; the property test below checks it empirically).
+//!
+//! The appendix's `RandK₁*PermK` composition (Figures 12–13) is built
+//! from this plus the [`super::Scaled`] adapter.
+
+use super::{Contractive, Ctx, CtxInfo, CVec};
+
+pub struct ComposedContractive {
+    first: Box<dyn Contractive>,
+    second: Box<dyn Contractive>,
+}
+
+impl ComposedContractive {
+    pub fn new(first: Box<dyn Contractive>, second: Box<dyn Contractive>) -> ComposedContractive {
+        ComposedContractive { first, second }
+    }
+}
+
+impl Contractive for ComposedContractive {
+    fn name(&self) -> String {
+        format!("{}*{}", self.first.name(), self.second.name())
+    }
+
+    fn alpha(&self, info: &CtxInfo) -> f64 {
+        // With e₁ = ‖x − C₁x‖² ≤ (1−α₁)‖x‖² and the outer contraction
+        // applied to C₁x on an orthogonal support,
+        //   ‖x − C₂C₁x‖² ≤ e₁ + (1−α₂)(‖x‖² − e₁) ≤ (1 − α₁α₂)‖x‖²,
+        // so the composition is contractive with α = α₁·α₂. (This is
+        // distinct from the 3PCv4 *residual* construction, whose constant
+        // is 1−(1−α₁)(1−α₂).) The property test validates it empirically.
+        let a1 = self.first.alpha(info);
+        let a2 = self.second.alpha(info);
+        a1 * a2
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let mid = self.first.compress(x, ctx).to_dense();
+        // The outer compressor sees the (mostly zero) intermediate; wire
+        // cost is computed from the actual payload it emits.
+        self.second.compress(&mid, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{CRandK, CPermK, TopK};
+    use crate::testkit::empirical_mean;
+    use crate::util::linalg::{dist_sq, norm2_sq};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn name_and_alpha() {
+        let c = ComposedContractive::new(Box::new(CRandK::new(4)), Box::new(TopK::new(2)));
+        let info = CtxInfo::single(16);
+        assert_eq!(c.name(), "cRand-4*Top-2");
+        // α = α₁α₂ = (4/16)·(2/16)
+        assert!((c.alpha(&info) - 0.25 * 0.125).abs() < 1e-12);
+    }
+
+    /// The composition must at minimum satisfy contraction with its own
+    /// declared α (the constant the stepsize theory will consume).
+    #[test]
+    fn composition_contraction_holds_empirically() {
+        let d = 24;
+        let x: Vec<f32> = (0..d).map(|i| ((i * 13) % 7) as f32 - 3.0).collect();
+        let comp = ComposedContractive::new(Box::new(CPermK), Box::new(CRandK::new(2)));
+        let info = CtxInfo { dim: d, n_workers: 4, worker_id: 1 };
+        let alpha = comp.alpha(&info);
+        let e = empirical_mean(17, 8_000, |r| {
+            let seed = r.next_u64();
+            let mut rng = Pcg64::seed(seed);
+            let mut ctx = Ctx::new(info, &mut rng, seed ^ 0xbeef);
+            let y = comp.compress(&x, &mut ctx).to_dense();
+            dist_sq(&y, &x)
+        });
+        let bound = (1.0 - alpha) * norm2_sq(&x);
+        assert!(e <= bound * 1.02, "E err {e} > (1-α)‖x‖² {bound}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Identity "compressor" (§A: α = 1; ω = 0). With it, EF21 degrades to
+//! DCGD/GD and CLAG degrades to LAG — the reductions the paper leans on.
+
+use super::{Contractive, Ctx, CtxInfo, CVec, Unbiased};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Identity;
+
+impl Contractive for Identity {
+    fn name(&self) -> String {
+        "Identity".into()
+    }
+
+    fn alpha(&self, _info: &CtxInfo) -> f64 {
+        1.0
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
+        CVec::Dense(x.to_vec())
+    }
+}
+
+/// Identity as an unbiased compressor (ω = 0).
+#[derive(Debug, Clone, Copy)]
+pub struct IdentityUnbiased;
+
+impl Unbiased for IdentityUnbiased {
+    fn name(&self) -> String {
+        "Identity".into()
+    }
+
+    fn omega(&self, _info: &CtxInfo) -> f64 {
+        0.0
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
+        CVec::Dense(x.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn passes_through() {
+        let x = [3.0f32, -4.0];
+        let mut rng = Pcg64::seed(0);
+        let mut ctx = Ctx::new(CtxInfo::single(2), &mut rng, 0);
+        assert_eq!(Identity.compress(&x, &mut ctx).to_dense(), x.to_vec());
+        let mut ctx = Ctx::new(CtxInfo::single(2), &mut rng, 0);
+        assert_eq!(IdentityUnbiased.compress(&x, &mut ctx).to_dense(), x.to_vec());
+        assert_eq!(Identity.alpha(&CtxInfo::single(2)), 1.0);
+        assert_eq!(IdentityUnbiased.omega(&CtxInfo::single(2)), 0.0);
+    }
+}

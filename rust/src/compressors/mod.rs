@@ -1,0 +1,305 @@
+//! Compression operators (paper §A).
+//!
+//! Two operator classes, matching the paper's definitions:
+//!
+//! * **Contractive** compressors `C` with `E‖C(x) − x‖² ≤ (1−α)‖x‖²`
+//!   (Eq. 4): Identity, Top-K, cRand-K, cPerm-K, Bernoulli(p) (Eq. 52),
+//!   compositions, and the scaled adapter `Q/(ω+1)` of §A.5.
+//! * **Unbiased** compressors `Q` with `E[Q(x)] = x`,
+//!   `E‖Q(x) − x‖² ≤ ω‖x‖²` (Eq. 22/Def. A.1): Rand-K, Perm-K, Identity.
+//!
+//! Compressed vectors are represented as [`CVec`] — sparse where the
+//! operator sparsifies — and carry exact wire-cost accounting used by the
+//! coordinator's bit counters (the unit of every paper heatmap/plot).
+
+pub mod bernoulli;
+pub mod natural;
+pub mod compose;
+pub mod identity;
+pub mod permk;
+pub mod randk;
+pub mod sign;
+pub mod topk;
+
+pub use bernoulli::Bernoulli;
+pub use compose::ComposedContractive;
+pub use identity::Identity;
+pub use natural::Natural;
+pub use sign::SignL1;
+pub use permk::{CPermK, PermK};
+pub use randk::{CRandK, RandK};
+pub use topk::TopK;
+
+use crate::util::rng::Pcg64;
+
+/// Static information a compressor needs about its embedding: the vector
+/// dimension and the cohort layout (Perm-K is defined relative to the
+/// number of workers and the worker's id).
+#[derive(Debug, Clone, Copy)]
+pub struct CtxInfo {
+    pub dim: usize,
+    pub n_workers: usize,
+    pub worker_id: usize,
+}
+
+impl CtxInfo {
+    pub fn single(dim: usize) -> CtxInfo {
+        CtxInfo { dim, n_workers: 1, worker_id: 0 }
+    }
+}
+
+/// Per-call compression context: worker-private randomness plus
+/// round-shared randomness (identical across all workers within a round —
+/// Perm-K's permutation and MARINA's coin are *shared* draws).
+pub struct Ctx<'a> {
+    pub info: CtxInfo,
+    /// Worker-private stream (independent across workers).
+    pub rng: &'a mut Pcg64,
+    /// Round-shared seed; compressors needing shared randomness spawn a
+    /// deterministic stream from it so every worker draws the same values.
+    pub round_seed: u64,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(info: CtxInfo, rng: &'a mut Pcg64, round_seed: u64) -> Ctx<'a> {
+        Ctx { info, rng, round_seed }
+    }
+
+    /// The round-shared RNG stream (same for every worker this round).
+    pub fn shared_rng(&self) -> Pcg64 {
+        Pcg64::new(self.round_seed, 0x5eed)
+    }
+}
+
+/// A compressed vector. Index order is whatever the operator produced;
+/// consumers only add/scatter, so no sort is required.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CVec {
+    /// All zeros (e.g. Bernoulli(p) tails, Rand-0).
+    Zero { dim: usize },
+    /// Dense payload (identity, Bernoulli head).
+    Dense(Vec<f32>),
+    /// Sparse payload: `val[j]` at coordinate `idx[j]`.
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl CVec {
+    pub fn dim(&self) -> usize {
+        match self {
+            CVec::Zero { dim } => *dim,
+            CVec::Dense(v) => v.len(),
+            CVec::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            CVec::Zero { .. } => 0,
+            CVec::Dense(v) => v.len(),
+            CVec::Sparse { idx, .. } => idx.len(),
+        }
+    }
+
+    /// `out += self`.
+    pub fn add_into(&self, out: &mut [f32]) {
+        match self {
+            CVec::Zero { .. } => {}
+            CVec::Dense(v) => {
+                debug_assert_eq!(v.len(), out.len());
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o += x;
+                }
+            }
+            CVec::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += v;
+                }
+            }
+        }
+    }
+
+    /// Materialise as dense.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim()];
+        self.add_into(&mut out);
+        out
+    }
+
+    /// Exact uplink cost in bits under the project's wire format:
+    /// * dense — 32 bits/coordinate;
+    /// * sparse — 32 bits/value + ⌈log₂ d⌉ bits/index, capped at the dense
+    ///   cost (a rational sender switches to a dense encoding when
+    ///   sparsity stops paying — the ablation bench measures the
+    ///   crossover);
+    /// * zero — 0 bits (the skip itself is a 1-bit protocol flag counted
+    ///   at the message layer).
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            CVec::Zero { .. } => 0,
+            CVec::Dense(v) => 32 * v.len() as u64,
+            CVec::Sparse { dim, idx, .. } => {
+                let per = 32 + index_bits(*dim);
+                (idx.len() as u64 * per).min(32 * *dim as u64)
+            }
+        }
+    }
+}
+
+/// Bits needed to address a coordinate of a d-dimensional vector.
+pub fn index_bits(d: usize) -> u64 {
+    (usize::BITS - d.saturating_sub(1).leading_zeros()).max(1) as u64
+}
+
+/// Contractive compressor (Eq. 4).
+pub trait Contractive: Send + Sync {
+    fn name(&self) -> String;
+    /// The contraction parameter α in `E‖C(x) − x‖² ≤ (1−α)‖x‖²`.
+    fn alpha(&self, info: &CtxInfo) -> f64;
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec;
+}
+
+/// Unbiased compressor (Def. A.1).
+pub trait Unbiased: Send + Sync {
+    fn name(&self) -> String;
+    /// The variance parameter ω in `E‖Q(x) − x‖² ≤ ω‖x‖²`.
+    fn omega(&self, info: &CtxInfo) -> f64;
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec;
+}
+
+/// §A.5: any unbiased `Q` scaled by `1/(ω+1)` is contractive with
+/// `α = 1/(ω+1)`.
+pub struct Scaled<Q: Unbiased>(pub Q);
+
+impl<Q: Unbiased> Contractive for Scaled<Q> {
+    fn name(&self) -> String {
+        format!("scaled({})", self.0.name())
+    }
+
+    fn alpha(&self, info: &CtxInfo) -> f64 {
+        1.0 / (self.0.omega(info) + 1.0)
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let s = (1.0 / (self.0.omega(&ctx.info) + 1.0)) as f32;
+        match self.0.compress(x, ctx) {
+            CVec::Zero { dim } => CVec::Zero { dim },
+            CVec::Dense(mut v) => {
+                v.iter_mut().for_each(|t| *t *= s);
+                CVec::Dense(v)
+            }
+            CVec::Sparse { dim, idx, mut val } => {
+                val.iter_mut().for_each(|t| *t *= s);
+                CVec::Sparse { dim, idx, val }
+            }
+        }
+    }
+}
+
+/// Parse a compressor spec string into a contractive compressor.
+///
+/// Grammar: `identity` | `top<K>` | `crand<K>` | `cperm` | `bern<p>`
+/// | `scaled-rand<K>` | `scaled-perm` | `<spec>*<spec>` (composition,
+/// applied left-to-right: `cperm*crand8` runs cPerm then cRand-8).
+pub fn parse_contractive(spec: &str) -> anyhow::Result<Box<dyn Contractive>> {
+    if let Some((a, b)) = spec.split_once('*') {
+        let first = parse_contractive(a.trim())?;
+        let second = parse_contractive(b.trim())?;
+        return Ok(Box::new(ComposedContractive::new(first, second)));
+    }
+    let s = spec.trim();
+    if s == "identity" || s == "id" {
+        return Ok(Box::new(Identity));
+    }
+    if let Some(k) = s.strip_prefix("top") {
+        return Ok(Box::new(TopK::new(k.parse()?)));
+    }
+    if let Some(k) = s.strip_prefix("crand") {
+        return Ok(Box::new(CRandK::new(k.parse()?)));
+    }
+    if s == "cperm" {
+        return Ok(Box::new(CPermK));
+    }
+    if let Some(p) = s.strip_prefix("bern") {
+        return Ok(Box::new(Bernoulli::new(p.parse()?)));
+    }
+    if s == "sign" {
+        return Ok(Box::new(SignL1));
+    }
+    if s == "scaled-natural" {
+        return Ok(Box::new(Scaled(Natural)));
+    }
+    if let Some(k) = s.strip_prefix("scaled-rand") {
+        return Ok(Box::new(Scaled(RandK::new(k.parse()?))));
+    }
+    if s == "scaled-perm" {
+        return Ok(Box::new(Scaled(PermK)));
+    }
+    anyhow::bail!("unknown contractive compressor spec '{spec}'")
+}
+
+/// Parse an unbiased compressor spec: `rand<K>` | `perm` | `identity`.
+pub fn parse_unbiased(spec: &str) -> anyhow::Result<Box<dyn Unbiased>> {
+    let s = spec.trim();
+    if s == "identity" || s == "id" {
+        return Ok(Box::new(identity::IdentityUnbiased));
+    }
+    if let Some(k) = s.strip_prefix("rand") {
+        return Ok(Box::new(RandK::new(k.parse()?)));
+    }
+    if s == "perm" {
+        return Ok(Box::new(PermK));
+    }
+    if s == "natural" {
+        return Ok(Box::new(Natural));
+    }
+    anyhow::bail!("unknown unbiased compressor spec '{spec}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cvec_add_and_bits() {
+        let d = CVec::Dense(vec![1.0, 2.0]);
+        let s = CVec::Sparse { dim: 4, idx: vec![1, 3], val: vec![5.0, -1.0] };
+        let z = CVec::Zero { dim: 4 };
+        assert_eq!(d.wire_bits(), 64);
+        assert_eq!(s.wire_bits(), 2 * (32 + 2));
+        assert_eq!(z.wire_bits(), 0);
+        let mut out = vec![0.0f32; 4];
+        s.add_into(&mut out);
+        assert_eq!(out, vec![0.0, 5.0, 0.0, -1.0]);
+        assert_eq!(s.to_dense(), vec![0.0, 5.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn sparse_bits_capped_at_dense() {
+        // When nnz ≈ d, index coding would exceed dense; cap applies.
+        let s = CVec::Sparse {
+            dim: 4,
+            idx: vec![0, 1, 2, 3],
+            val: vec![1.0; 4],
+        };
+        assert_eq!(s.wire_bits(), 128);
+    }
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(1024), 10);
+        assert_eq!(index_bits(1025), 11);
+        assert_eq!(index_bits(25088), 15);
+    }
+
+    #[test]
+    fn parse_specs() {
+        for spec in ["identity", "top16", "crand8", "cperm", "bern0.25", "scaled-rand4", "cperm*crand8", "sign", "scaled-natural"] {
+            assert!(parse_contractive(spec).is_ok(), "{spec}");
+        }
+        for spec in ["rand8", "perm", "identity", "natural"] {
+            assert!(parse_unbiased(spec).is_ok(), "{spec}");
+        }
+        assert!(parse_contractive("nope").is_err());
+    }
+}

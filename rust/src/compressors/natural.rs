@@ -1,0 +1,117 @@
+//! Natural compression (§A.6 pointer to Horváth et al.): stochastically
+//! round each magnitude to one of the two nearest powers of two, keeping
+//! the sign. Unbiased with `ω = 1/8`, and each value needs only the
+//! 8-bit exponent + sign on the wire (9 bits/coordinate vs 32).
+//!
+//! `Q(x)_i = sign(x_i)·2^⌊log₂|x_i|⌋` w.p. `p = 2^⌈log₂|x_i|⌉/|x_i| − 1`
+//! …rounded *down*, else rounded *up* — probabilities chosen so
+//! `E[Q(x)_i] = x_i`.
+
+use super::{Ctx, CtxInfo, CVec, Unbiased};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Natural;
+
+impl Unbiased for Natural {
+    fn name(&self) -> String {
+        "Natural".into()
+    }
+
+    fn omega(&self, _info: &CtxInfo) -> f64 {
+        0.125
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let out = x
+            .iter()
+            .map(|&v| {
+                if v == 0.0 || !v.is_finite() {
+                    return v;
+                }
+                let a = v.abs() as f64;
+                let lo = 2f64.powi(a.log2().floor() as i32);
+                let hi = 2.0 * lo;
+                // P(round up) = (a − lo)/(hi − lo) = (a − lo)/lo.
+                let p_up = (a - lo) / lo;
+                let mag = if ctx.rng.bernoulli(p_up) { hi } else { lo };
+                (mag as f32).copysign(v)
+            })
+            .collect();
+        CVec::Dense(out)
+    }
+}
+
+/// Wire cost: sign + 8-bit exponent per coordinate.
+pub fn natural_wire_bits(d: usize) -> u64 {
+    9 * d as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::empirical_mean;
+    use crate::util::linalg::{dist_sq, norm2_sq};
+
+    fn compress_with(x: &[f32], rng: &mut crate::util::rng::Pcg64) -> Vec<f32> {
+        let mut ctx = Ctx::new(CtxInfo::single(x.len()), rng, 0);
+        Natural.compress(x, &mut ctx).to_dense()
+    }
+
+    #[test]
+    fn outputs_are_signed_powers_of_two() {
+        let mut rng = crate::util::rng::Pcg64::seed(1);
+        let x = [3.7f32, -0.3, 1.0, 0.0, -6.02];
+        let y = compress_with(&x, &mut rng);
+        for (i, &v) in y.iter().enumerate() {
+            if x[i] == 0.0 {
+                assert_eq!(v, 0.0);
+                continue;
+            }
+            assert_eq!(v.signum(), x[i].signum(), "coord {i}");
+            let l = (v.abs() as f64).log2();
+            assert!((l - l.round()).abs() < 1e-9, "coord {i}: {v} not a power of two");
+        }
+        // exact powers of two pass through unchanged
+        assert_eq!(y[2], 1.0);
+    }
+
+    #[test]
+    fn unbiased_empirically() {
+        let x = [3.7f32, -0.3, 5.5];
+        for coord in 0..3 {
+            let m = empirical_mean(7, 40_000, |r| compress_with(&x, r)[coord] as f64);
+            assert!(
+                (m - x[coord] as f64).abs() < 0.02 * (1.0 + x[coord].abs() as f64),
+                "coord {coord}: {m} vs {}",
+                x[coord]
+            );
+        }
+    }
+
+    #[test]
+    fn variance_within_omega() {
+        let x: Vec<f32> = (1..20).map(|i| (i as f32) * 0.37 - 3.0).collect();
+        let e = empirical_mean(9, 20_000, |r| {
+            let y = compress_with(&x, r);
+            dist_sq(&y, &x)
+        });
+        let bound = 0.125 * norm2_sq(&x);
+        assert!(e <= bound * 1.05, "E err {e} vs ω‖x‖² {bound}");
+    }
+
+    #[test]
+    fn wire_bits_helper() {
+        assert_eq!(natural_wire_bits(100), 900);
+    }
+
+    #[test]
+    fn works_inside_marina_and_v2() {
+        // MARINA(Natural) and 3PCv2(Natural, Top-K) parse and satisfy
+        // their certificates.
+        use crate::compressors::TopK;
+        use crate::mechanisms::proptests::check_3pc_inequality;
+        use crate::mechanisms::V2;
+        let map = V2::new(Box::new(Natural), Box::new(TopK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(8), 15, 4_000, 21, 0.08);
+    }
+}

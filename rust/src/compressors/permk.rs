@@ -1,0 +1,172 @@
+//! Perm-K permutation sparsifiers (§A.4, Szlendak et al. 2021, d ≥ n).
+//!
+//! A *round-shared* random permutation π of the d coordinates partitions
+//! them into n contiguous blocks; worker i transmits only the coordinates
+//! in its block. Crucially the blocks are **disjoint across workers**, so
+//! the server's average touches every coordinate exactly once — this is
+//! what gives Perm-K its collective variance advantage.
+//!
+//! * [`PermK`] — unbiased form: kept values scaled by n (`E[Q(x)] = x`,
+//!   ω = n − 1 for d divisible by n).
+//! * [`CPermK`] — contractive form: kept values unscaled (Perm-K scaled
+//!   by 1/(ω+1) = 1/n), α = 1/n (= K/d with K = d/n).
+//!
+//! Both require the `Ctx` round seed: every worker must draw the *same*
+//! permutation in a round, and a different one the next round.
+
+use super::{Contractive, Ctx, CtxInfo, CVec, Unbiased};
+
+/// The coordinate block owned by `worker_id` under this round's shared
+/// permutation. Handles `d % n != 0` by distributing the remainder over
+/// the first `d % n` workers (block sizes differ by at most one).
+fn worker_block(ctx: &Ctx<'_>, d: usize) -> Vec<u32> {
+    let n = ctx.info.n_workers.max(1);
+    let mut shared = ctx.shared_rng();
+    let perm = shared.permutation(d);
+    let base = d / n;
+    let extra = d % n;
+    let w = ctx.info.worker_id;
+    // Worker w owns [start, start + len) of the permuted coordinates.
+    let len = base + usize::from(w < extra);
+    let start = w * base + w.min(extra);
+    perm[start..start + len].iter().map(|&i| i as u32).collect()
+}
+
+/// Unbiased Perm-K (values scaled by n).
+#[derive(Debug, Clone, Copy)]
+pub struct PermK;
+
+impl Unbiased for PermK {
+    fn name(&self) -> String {
+        "Perm-K".into()
+    }
+
+    fn omega(&self, info: &CtxInfo) -> f64 {
+        // ω = n − 1 (exact when n | d; an upper bound otherwise).
+        (info.n_workers.max(1) as f64) - 1.0
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let d = x.len();
+        let n = ctx.info.n_workers.max(1);
+        if n == 1 {
+            return CVec::Dense(x.to_vec());
+        }
+        let idx = worker_block(ctx, d);
+        let scale = n as f32;
+        let val = idx.iter().map(|&i| x[i as usize] * scale).collect();
+        CVec::Sparse { dim: d, idx, val }
+    }
+}
+
+/// Contractive Perm-K (values unscaled) — §A.4.
+#[derive(Debug, Clone, Copy)]
+pub struct CPermK;
+
+impl Contractive for CPermK {
+    fn name(&self) -> String {
+        "cPerm-K".into()
+    }
+
+    fn alpha(&self, info: &CtxInfo) -> f64 {
+        1.0 / info.n_workers.max(1) as f64
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let d = x.len();
+        let n = ctx.info.n_workers.max(1);
+        if n == 1 {
+            return CVec::Dense(x.to_vec());
+        }
+        let idx = worker_block(ctx, d);
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        CVec::Sparse { dim: d, idx, val }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::{dist_sq, norm2_sq};
+    use crate::util::rng::Pcg64;
+
+    fn ctx<'a>(rng: &'a mut Pcg64, d: usize, n: usize, w: usize, seed: u64) -> Ctx<'a> {
+        Ctx::new(CtxInfo { dim: d, n_workers: n, worker_id: w }, rng, seed)
+    }
+
+    #[test]
+    fn blocks_partition_coordinates() {
+        // Across all workers in a round, kept indices tile 0..d exactly.
+        for (d, n) in [(12usize, 4usize), (13, 4), (7, 3), (5, 5)] {
+            let mut seen = vec![0usize; d];
+            for w in 0..n {
+                let mut rng = Pcg64::new(99, w as u64);
+                let c = ctx(&mut rng, d, n, w, 777);
+                for i in worker_block(&c, d) {
+                    seen[i as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "d={d} n={n}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn shared_seed_same_permutation_across_workers() {
+        let d = 16;
+        let mut r1 = Pcg64::new(1, 1);
+        let mut r2 = Pcg64::new(2, 2); // different private rngs
+        let b0 = worker_block(&ctx(&mut r1, d, 4, 0, 42), d);
+        let b0_again = worker_block(&ctx(&mut r2, d, 4, 0, 42), d);
+        assert_eq!(b0, b0_again, "same round seed → same block");
+        let b0_next = worker_block(&ctx(&mut r1, d, 4, 0, 43), d);
+        assert_ne!(b0, b0_next, "different round → different permutation (w.h.p.)");
+    }
+
+    #[test]
+    fn permk_server_average_reconstructs_homogeneous_input() {
+        // With identical x on all workers and n | d, (1/n)Σᵢ Qᵢ(x) = x
+        // exactly — the defining collective property of Perm-K.
+        let d = 12;
+        let n = 4;
+        let x: Vec<f32> = (0..d).map(|i| i as f32 - 3.5).collect();
+        let mut acc = vec![0.0f32; d];
+        for w in 0..n {
+            let mut rng = Pcg64::new(5, w as u64);
+            let mut c = ctx(&mut rng, d, n, w, 2024);
+            PermK.compress(&x, &mut c).add_into(&mut acc);
+        }
+        for v in acc.iter_mut() {
+            *v /= n as f32;
+        }
+        assert_eq!(acc, x);
+    }
+
+    #[test]
+    fn cpermk_contraction_exact() {
+        // E‖C(x)−x‖² = (1 − 1/n)‖x‖² when n | d (uniform block position).
+        let d = 20;
+        let n = 5;
+        let x: Vec<f32> = (0..d).map(|i| ((i * 7) % 11) as f32 - 5.0).collect();
+        let trials = 4000;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(3, t);
+            let mut c = ctx(&mut rng, d, n, (t % n as u64) as usize, 1000 + t);
+            let y = CPermK.compress(&x, &mut c).to_dense();
+            acc += dist_sq(&y, &x);
+        }
+        let e = acc / trials as f64;
+        let expect = (1.0 - 1.0 / n as f64) * norm2_sq(&x);
+        assert!((e - expect).abs() / expect < 0.05, "{e} vs {expect}");
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let x = [1.0f32, -2.0];
+        let mut rng = Pcg64::seed(0);
+        let mut c = ctx(&mut rng, 2, 1, 0, 5);
+        assert_eq!(PermK.compress(&x, &mut c).to_dense(), x.to_vec());
+        let mut c = ctx(&mut rng, 2, 1, 0, 5);
+        assert_eq!(CPermK.compress(&x, &mut c).to_dense(), x.to_vec());
+    }
+}

@@ -1,0 +1,178 @@
+//! Rand-K sparsifiers (§A.2, §A.3).
+//!
+//! * [`RandK`] — the *unbiased* form: keep K uniformly random entries
+//!   scaled by `d/K`; `E[Q(x)] = x`, ω = d/K − 1.
+//! * [`CRandK`] — the *contractive* form (§A.3): keep K random entries
+//!   **unscaled**; biased, with `E‖C(x) − x‖² = (1 − K/d)‖x‖²`, α = K/d.
+
+use super::{Contractive, Ctx, CtxInfo, CVec, Unbiased};
+
+/// Unbiased Rand-K (values scaled by d/K).
+#[derive(Debug, Clone, Copy)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> RandK {
+        assert!(k >= 1, "Rand-K requires K >= 1");
+        RandK { k }
+    }
+}
+
+impl Unbiased for RandK {
+    fn name(&self) -> String {
+        format!("Rand-{}", self.k)
+    }
+
+    fn omega(&self, info: &CtxInfo) -> f64 {
+        let k = self.k.min(info.dim) as f64;
+        info.dim as f64 / k - 1.0
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let d = x.len();
+        let k = self.k.min(d);
+        if k == d {
+            return CVec::Dense(x.to_vec());
+        }
+        let scale = (d as f64 / k as f64) as f32;
+        let idx: Vec<u32> = ctx.rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        let val = idx.iter().map(|&i| x[i as usize] * scale).collect();
+        CVec::Sparse { dim: d, idx, val }
+    }
+}
+
+/// Contractive (unscaled) Rand-K — §A.3.
+#[derive(Debug, Clone, Copy)]
+pub struct CRandK {
+    pub k: usize,
+}
+
+impl CRandK {
+    pub fn new(k: usize) -> CRandK {
+        assert!(k >= 1, "cRand-K requires K >= 1");
+        CRandK { k }
+    }
+}
+
+impl Contractive for CRandK {
+    fn name(&self) -> String {
+        format!("cRand-{}", self.k)
+    }
+
+    fn alpha(&self, info: &CtxInfo) -> f64 {
+        (self.k.min(info.dim) as f64) / info.dim as f64
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let d = x.len();
+        let k = self.k.min(d);
+        if k == d {
+            return CVec::Dense(x.to_vec());
+        }
+        let idx: Vec<u32> = ctx.rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        CVec::Sparse { dim: d, idx, val }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, empirical_mean, gen};
+    use crate::util::linalg::{dist_sq, norm2_sq};
+    use crate::util::rng::Pcg64;
+
+    fn ctx_compress<C: Fn(&[f32], &mut Ctx<'_>) -> CVec>(x: &[f32], rng: &mut Pcg64, f: C) -> CVec {
+        let info = CtxInfo::single(x.len());
+        let mut ctx = Ctx::new(info, rng, 0);
+        f(x, &mut ctx)
+    }
+
+    #[test]
+    fn randk_unbiased_empirically() {
+        let x: Vec<f32> = vec![1.0, -2.0, 3.0, 0.5, -0.25, 4.0, 0.0, 7.0];
+        let q = RandK::new(3);
+        for coord in [0usize, 3, 7] {
+            let m = empirical_mean(3, 20_000, |r| {
+                ctx_compress(&x, r, |x, c| Unbiased::compress(&q, x, c)).to_dense()[coord] as f64
+            });
+            assert!((m - x[coord] as f64).abs() < 0.1, "coord {coord}: {m} vs {}", x[coord]);
+        }
+    }
+
+    #[test]
+    fn randk_variance_bound() {
+        // E‖Q(x)−x‖² ≤ ω‖x‖² with equality for Rand-K.
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.5).collect();
+        let q = RandK::new(4);
+        let omega = q.omega(&CtxInfo::single(16));
+        let e = empirical_mean(5, 20_000, |r| {
+            let c = ctx_compress(&x, r, |x, c| Unbiased::compress(&q, x, c)).to_dense();
+            dist_sq(&c, &x)
+        });
+        let bound = omega * norm2_sq(&x);
+        assert!(e <= bound * 1.05, "E err {e} vs ω‖x‖² {bound}");
+        assert!(e >= bound * 0.9, "Rand-K should be tight: {e} vs {bound}");
+    }
+
+    #[test]
+    fn crandk_contraction_exact() {
+        // §A.3 computes E‖C(x)−x‖² = (1 − K/d)‖x‖² exactly.
+        let x: Vec<f32> = (0..10).map(|i| (i as f32) - 4.5).collect();
+        let c = CRandK::new(3);
+        let e = empirical_mean(11, 20_000, |r| {
+            let y = ctx_compress(&x, r, |x, cx| Contractive::compress(&c, x, cx)).to_dense();
+            dist_sq(&y, &x)
+        });
+        let expect = (1.0 - 0.3) * norm2_sq(&x);
+        assert!((e - expect).abs() / expect < 0.05, "{e} vs {expect}");
+    }
+
+    #[test]
+    fn k_geq_d_dense_identity() {
+        let x = [1.0f32, 2.0];
+        let mut rng = Pcg64::seed(1);
+        let out = ctx_compress(&x, &mut rng, |x, c| Unbiased::compress(&RandK::new(5), x, c));
+        assert_eq!(out, CVec::Dense(vec![1.0, 2.0]));
+        let out = ctx_compress(&x, &mut rng, |x, c| Contractive::compress(&CRandK::new(2), x, c));
+        assert_eq!(out, CVec::Dense(vec![1.0, 2.0]));
+    }
+
+    /// Property: every cRand-K draw keeps a subset of coordinates
+    /// unchanged and zeroes the rest (projection property).
+    #[test]
+    fn prop_crandk_is_projection() {
+        testkit::forall(
+            "crandk projection",
+            9,
+            150,
+            |r| {
+                let d = gen::dim(r, 1, 40);
+                let k = 1 + r.below(d);
+                (k, gen::vector(r, d, 1.0), r.next_u64())
+            },
+            |(k, x, seed)| {
+                let mut rng = Pcg64::seed(*seed);
+                let y = ctx_compress(x, &mut rng, |x, c| {
+                    Contractive::compress(&CRandK::new(*k), x, c)
+                })
+                .to_dense();
+                let mut kept = 0usize;
+                for i in 0..x.len() {
+                    if y[i] == x[i] {
+                        kept += 1;
+                    } else if y[i] != 0.0 {
+                        return Err(format!("coord {i}: {} not in {{0, x_i}}", y[i]));
+                    }
+                }
+                if kept >= *k.min(&x.len()) {
+                    Ok(())
+                } else {
+                    Err(format!("kept {kept} < k {k}"))
+                }
+            },
+        );
+    }
+}

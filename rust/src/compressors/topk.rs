@@ -1,0 +1,169 @@
+//! Top-K greedy sparsifier (§A.1): keep the K entries largest in absolute
+//! value, zero the rest. Deterministic; contraction parameter α = K/d.
+//!
+//! Selection uses `select_nth_unstable` (introselect) on an index buffer —
+//! O(d) expected, no full sort — which is the compressor-throughput hot
+//! path measured in `benches/bench_hotpath.rs`.
+
+use super::{Contractive, Ctx, CtxInfo, CVec};
+
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k >= 1, "Top-K requires K >= 1");
+        TopK { k }
+    }
+
+    /// The indices of the K largest-|x| entries (ties broken arbitrarily,
+    /// as the paper allows).
+    pub fn select(&self, x: &[f32]) -> Vec<u32> {
+        let d = x.len();
+        let k = self.k.min(d);
+        if k == d {
+            return (0..d as u32).collect();
+        }
+        let mut idx: Vec<u32> = (0..d as u32).collect();
+        // Partition so the first k positions hold the largest magnitudes.
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            let ma = x[a as usize].abs();
+            let mb = x[b as usize].abs();
+            mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+        idx
+    }
+}
+
+impl Contractive for TopK {
+    fn name(&self) -> String {
+        format!("Top-{}", self.k)
+    }
+
+    fn alpha(&self, info: &CtxInfo) -> f64 {
+        (self.k.min(info.dim) as f64) / info.dim as f64
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
+        let idx = self.select(x);
+        if idx.len() == x.len() {
+            return CVec::Dense(x.to_vec());
+        }
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        CVec::Sparse { dim: x.len(), idx, val }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{Contractive, Ctx, CtxInfo};
+    use crate::testkit::{self, gen};
+    use crate::util::linalg::{dist_sq, norm2_sq};
+    use crate::util::rng::Pcg64;
+
+    fn compress(k: usize, x: &[f32]) -> CVec {
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(x.len());
+        let mut ctx = Ctx::new(info, &mut rng, 0);
+        TopK::new(k).compress(x, &mut ctx)
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let x = [0.1f32, -5.0, 2.0, 0.0, 3.0];
+        let out = compress(2, &x).to_dense();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn k_equals_d_is_identity() {
+        let x = [1.0f32, 2.0, 3.0];
+        assert_eq!(compress(3, &x).to_dense(), x.to_vec());
+        assert_eq!(compress(10, &x).to_dense(), x.to_vec());
+    }
+
+    #[test]
+    fn k1_keeps_single_max() {
+        let x = [1.0f32, -9.0, 2.0];
+        let out = compress(1, &x);
+        assert_eq!(out.nnz(), 1);
+        assert_eq!(out.to_dense()[1], -9.0);
+    }
+
+    #[test]
+    fn zero_vector_ok() {
+        let x = [0.0f32; 8];
+        let out = compress(3, &x);
+        assert_eq!(out.nnz(), 3); // keeps zeros, still valid
+        assert_eq!(out.to_dense(), x.to_vec());
+    }
+
+    #[test]
+    fn ties_still_pick_k() {
+        let x = [1.0f32; 6];
+        assert_eq!(compress(4, &x).nnz(), 4);
+    }
+
+    /// Property: Top-K is the *best* K-sparse approximation, so the
+    /// contraction inequality (4) holds deterministically with α = K/d.
+    #[test]
+    fn prop_contraction() {
+        testkit::forall(
+            "topk contraction (4)",
+            42,
+            200,
+            |r| {
+                let d = gen::dim(r, 1, 64);
+                let k = 1 + r.below(d);
+                (k, gen::spiky_vector(r, d))
+            },
+            |(k, x)| {
+                let c = compress(*k, x).to_dense();
+                let lhs = dist_sq(&c, x);
+                let alpha = *k as f64 / x.len() as f64;
+                let rhs = (1.0 - alpha) * norm2_sq(x) + 1e-9;
+                if lhs <= rhs {
+                    Ok(())
+                } else {
+                    Err(format!("‖C(x)-x‖²={lhs} > (1-α)‖x‖²={rhs}"))
+                }
+            },
+        );
+    }
+
+    /// Property: Top-K error is never worse than (any instance of) the
+    /// cRand-K error — greediness dominates pointwise.
+    #[test]
+    fn prop_topk_at_least_as_good_as_any_k_subset() {
+        testkit::forall(
+            "topk optimality",
+            7,
+            100,
+            |r| {
+                let d = gen::dim(r, 2, 32);
+                let k = 1 + r.below(d);
+                let x = gen::vector(r, d, 2.0);
+                let subset = r.sample_indices(d, k);
+                (k, x, subset)
+            },
+            |(k, x, subset)| {
+                let c = compress(*k, x).to_dense();
+                let top_err = dist_sq(&c, x);
+                let mut keep = vec![0.0f32; x.len()];
+                for &i in subset {
+                    keep[i] = x[i];
+                }
+                let sub_err = dist_sq(&keep, x);
+                if top_err <= sub_err + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("top err {top_err} > subset err {sub_err}"))
+                }
+            },
+        );
+    }
+}

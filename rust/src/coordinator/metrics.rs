@@ -1,0 +1,139 @@
+//! Training traces: one record per (recorded) round, plus the summary
+//! helpers the experiment harness reads off (bits-to-tolerance, series
+//! extraction for the figure plots).
+
+/// Per-round measurements. Norms refer to the *post-step* iterate
+/// `x^{t+1}`; bit counters are cumulative from the start of training
+/// (including `g⁰` initialisation bits).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub t: usize,
+    /// `‖∇f(x^{t+1})‖²` — exact (from the workers' true gradients).
+    pub grad_norm_sq: f64,
+    /// `G^{t+1} = (1/n)Σ‖g_i − ∇f_i‖²` (Eq. 15).
+    pub g_err: f64,
+    /// Mean cumulative uplink bits per worker.
+    pub bits_up_cum: f64,
+    /// Max cumulative uplink bits over workers.
+    pub bits_up_max: u64,
+    /// Fraction of workers that skipped this round (lazy aggregation).
+    pub skipped_frac: f64,
+    /// `f(x^{t+1})` when this was an evaluation round.
+    pub loss: Option<f64>,
+}
+
+#[derive(Debug)]
+pub struct TrainResult {
+    pub records: Vec<RoundRecord>,
+    pub rounds_run: usize,
+    /// True iff the `grad_tol` criterion fired.
+    pub converged: bool,
+    /// Whether the run was cut by the divergence guard (loss/grad blew up).
+    pub diverged: bool,
+    pub final_x: Vec<f32>,
+    pub final_grad_norm_sq: f64,
+    pub total_bits_up: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl TrainResult {
+    /// Mean uplink bits/worker at the first recorded round where
+    /// `‖∇f‖ < tol` (the heatmap metric). `None` if never reached.
+    pub fn bits_to_grad_tol(&self, tol: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.grad_norm_sq.sqrt() < tol)
+            .map(|r| r.bits_up_cum)
+    }
+
+    /// `(mean cumulative bits, ‖∇f‖²)` series — the paper's
+    /// convergence-vs-communication plots.
+    pub fn bits_gradnorm_series(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.bits_up_cum, r.grad_norm_sq)).collect()
+    }
+
+    /// `(round, ‖∇f‖²)` series — per-communication-round plots (Fig. 16).
+    pub fn round_gradnorm_series(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.t as f64, r.grad_norm_sq)).collect()
+    }
+
+    /// `(round, f(x))` over evaluation rounds.
+    pub fn loss_series(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.loss.map(|l| (r.t as f64, l)))
+            .collect()
+    }
+
+    /// `(round, G^t)` series (compression-error decay).
+    pub fn gerr_series(&self) -> Vec<(f64, f64)> {
+        self.records.iter().map(|r| (r.t as f64, r.g_err)).collect()
+    }
+
+    /// Minimum gradient norm² seen up to each round (the quantity the
+    /// O(1/T) theory bounds).
+    pub fn running_min_gradnorm(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.records
+            .iter()
+            .map(|r| {
+                best = best.min(r.grad_norm_sq);
+                best
+            })
+            .collect()
+    }
+
+    /// Overall skip rate (lazy aggregation savings).
+    pub fn mean_skip_rate(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.skipped_frac).sum::<f64>() / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, gns: f64, bits: f64) -> RoundRecord {
+        RoundRecord {
+            t,
+            grad_norm_sq: gns,
+            g_err: 0.0,
+            bits_up_cum: bits,
+            bits_up_max: bits as u64,
+            skipped_frac: 0.5,
+            loss: if t % 2 == 0 { Some(gns * 2.0) } else { None },
+        }
+    }
+
+    fn result(records: Vec<RoundRecord>) -> TrainResult {
+        TrainResult {
+            rounds_run: records.len(),
+            converged: false,
+            diverged: false,
+            final_x: vec![],
+            final_grad_norm_sq: records.last().map(|r| r.grad_norm_sq).unwrap_or(0.0),
+            total_bits_up: 0,
+            elapsed: std::time::Duration::ZERO,
+            records,
+        }
+    }
+
+    #[test]
+    fn bits_to_tol_finds_first_crossing() {
+        let r = result(vec![rec(0, 1.0, 10.0), rec(1, 1e-6, 20.0), rec(2, 1e-8, 30.0)]);
+        assert_eq!(r.bits_to_grad_tol(1e-2), Some(20.0));
+        assert_eq!(r.bits_to_grad_tol(1e-10), None);
+    }
+
+    #[test]
+    fn series_and_running_min() {
+        let r = result(vec![rec(0, 4.0, 1.0), rec(1, 9.0, 2.0), rec(2, 1.0, 3.0)]);
+        assert_eq!(r.running_min_gradnorm(), vec![4.0, 4.0, 1.0]);
+        assert_eq!(r.loss_series(), vec![(0.0, 8.0), (2.0, 2.0)]);
+        assert_eq!(r.bits_gradnorm_series().len(), 3);
+        assert!((r.mean_skip_rate() - 0.5).abs() < 1e-12);
+    }
+}

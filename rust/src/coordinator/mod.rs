@@ -1,0 +1,49 @@
+//! L3 — the distributed training coordinator (Algorithm 1).
+//!
+//! Topology: one leader (server) and `n` workers. Workers live on a
+//! persistent thread pool (`threads` OS threads each owning a contiguous
+//! slice of workers); every round the leader broadcasts the current
+//! aggregate `g^t` implicitly through the shared model state `x^{t+1}`,
+//! workers evaluate their local gradients (natively or through the
+//! PJRT/HLO executors), push them through their 3PC mechanism, and send
+//! the resulting [`mechanisms::Update`]s up; the leader folds the deltas
+//! into `g^{t+1}` and the accountant bills every message.
+//!
+//! The paper's experiments all report *client→server bits*, which is what
+//! [`metrics::RoundRecord::bits_up_cum`] accumulates (1 framing bit per
+//! worker-round plus the payload); downlink broadcast bits are tracked
+//! separately.
+
+pub mod metrics;
+pub mod orchestrator;
+pub mod protocol;
+pub mod server;
+pub mod worker;
+
+pub use metrics::{RoundRecord, TrainResult};
+pub use orchestrator::{train, TrainConfig};
+pub use protocol::{DownlinkStat, UplinkMsg};
+pub use server::Server;
+pub use worker::WorkerState;
+
+/// Initialisation policy for `g_i^0` (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitPolicy {
+    /// `g_i^0 = ∇f_i(x^0)` — full first-round synchronisation (the
+    /// paper's default for LAG/CLAG; costs 32·d uplink bits per worker).
+    FullGradient,
+    /// `g_i^0 = 0` — free, but starts with large `G^0`.
+    Zero,
+}
+
+impl std::str::FromStr for InitPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "full" => Ok(InitPolicy::FullGradient),
+            "zero" => Ok(InitPolicy::Zero),
+            other => anyhow::bail!("unknown init policy '{other}' (full|zero)"),
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Wire protocol between workers and the leader, with exact bit
+//! accounting. The semantic payload is the mechanism [`Update`]; the
+//! accountant bills its `bits` plus a 1-bit frame per worker-round (the
+//! fire/skip flag lazy aggregation needs).
+
+use crate::mechanisms::{update_bits, Update};
+
+/// One worker's uplink for one round.
+#[derive(Debug)]
+pub struct UplinkMsg {
+    pub worker_id: usize,
+    pub update: Update,
+    /// `‖g_i^{t+1} − ∇f_i(x^{t+1})‖²` — the worker's `G^t` contribution.
+    pub g_err: f64,
+}
+
+impl UplinkMsg {
+    /// Total billed uplink bits: payload + 1 frame bit.
+    pub fn bits(&self) -> u64 {
+        update_bits(&self.update) + 1
+    }
+
+    pub fn skipped(&self) -> bool {
+        matches!(self.update, Update::Keep)
+    }
+}
+
+/// Downlink accounting for one round (broadcast of the aggregate; the
+/// paper's plots ignore this direction, we track it for completeness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DownlinkStat {
+    pub bits_per_worker: u64,
+}
+
+impl DownlinkStat {
+    /// Dense broadcast of `g^t` (or equivalently `x^{t+1}`).
+    pub fn dense(dim: usize) -> DownlinkStat {
+        DownlinkStat { bits_per_worker: 32 * dim as u64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::CVec;
+
+    #[test]
+    fn bits_include_frame() {
+        let m = UplinkMsg {
+            worker_id: 0,
+            update: Update::Keep,
+            g_err: 0.0,
+        };
+        assert_eq!(m.bits(), 1);
+        assert!(m.skipped());
+        let m = UplinkMsg {
+            worker_id: 1,
+            update: Update::Increment {
+                inc: CVec::Sparse { dim: 8, idx: vec![1], val: vec![2.0] },
+                bits: 35,
+            },
+            g_err: 0.0,
+        };
+        assert_eq!(m.bits(), 36);
+        assert!(!m.skipped());
+    }
+
+    #[test]
+    fn downlink_dense() {
+        assert_eq!(DownlinkStat::dense(100).bits_per_worker, 3200);
+    }
+}

@@ -1,0 +1,179 @@
+//! Leader-side state: the model iterate, the aggregate gradient estimate
+//! `g^t = (1/n)Σ g_i^t` (folded incrementally from worker deltas in an
+//! f64 accumulator so the mirror never drifts from the workers' truth),
+//! and the bit accountant.
+
+use crate::mechanisms::Update;
+use crate::util::linalg;
+
+pub struct Server {
+    /// Model iterate `x^t`.
+    pub x: Vec<f32>,
+    /// `n · g^t` in f64 (divide by n on read) — incremental fold target.
+    g_sum: Vec<f64>,
+    n: usize,
+    /// Cumulative uplink payload+frame bits, per worker.
+    pub bits_up: Vec<u64>,
+    /// Cumulative downlink bits per worker.
+    pub bits_down: u64,
+    /// Scratch for the f32 rendering of g^t.
+    g_buf: Vec<f32>,
+}
+
+impl Server {
+    /// Initialise from `x⁰` and the workers' `g_i^0`.
+    pub fn new(x0: Vec<f32>, worker_g0: &[&[f32]], init_bits: &[u64]) -> Server {
+        let d = x0.len();
+        let n = worker_g0.len();
+        let mut g_sum = vec![0.0f64; d];
+        for g in worker_g0 {
+            linalg::add_into_f64(&mut g_sum, g);
+        }
+        Server {
+            x: x0,
+            g_sum,
+            n,
+            bits_up: init_bits.to_vec(),
+            bits_down: 0,
+            g_buf: vec![0.0f32; d],
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    /// `g^t` as f32 (what the update rule consumes).
+    pub fn g(&mut self) -> &[f32] {
+        linalg::scaled_to_f32(&self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
+        &self.g_buf
+    }
+
+    /// Gradient step `x^{t+1} = x^t − γ g^t`; bills the dense downlink
+    /// broadcast.
+    pub fn step(&mut self, gamma: f64) {
+        linalg::scaled_to_f32(&self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
+        let gam = gamma as f32;
+        for (xi, &gi) in self.x.iter_mut().zip(self.g_buf.iter()) {
+            *xi -= gam * gi;
+        }
+        self.bits_down += 32 * self.x.len() as u64;
+    }
+
+    /// Fold one worker's update into the aggregate. `h_before` is the
+    /// worker's `g_i^t` *prior* to the update — needed for `Replace`,
+    /// whose delta is `g_new − h`.
+    pub fn apply_update(&mut self, worker_id: usize, h_before: &[f32], update: &Update, frame_and_payload_bits: u64) {
+        match update {
+            Update::Keep => {}
+            Update::Increment { inc, .. } => match inc {
+                crate::compressors::CVec::Zero { .. } => {}
+                crate::compressors::CVec::Dense(v) => linalg::add_into_f64(&mut self.g_sum, v),
+                crate::compressors::CVec::Sparse { idx, val, .. } => {
+                    for (&i, &v) in idx.iter().zip(val) {
+                        self.g_sum[i as usize] += v as f64;
+                    }
+                }
+            },
+            Update::Replace { g, .. } => {
+                for i in 0..g.len() {
+                    self.g_sum[i] += g[i] as f64 - h_before[i] as f64;
+                }
+            }
+        }
+        self.bits_up[worker_id] += frame_and_payload_bits;
+    }
+
+    /// Fold a thread's partial delta sum `Σ (g_i^{t+1} − g_i^t)` into the
+    /// aggregate (the orchestrator's fan-in path).
+    pub fn fold_delta(&mut self, delta_sum: &[f64]) {
+        debug_assert_eq!(delta_sum.len(), self.g_sum.len());
+        for (g, &dv) in self.g_sum.iter_mut().zip(delta_sum) {
+            *g += dv;
+        }
+    }
+
+    /// Bill uplink bits to a worker.
+    pub fn add_bits(&mut self, worker_id: usize, bits: u64) {
+        self.bits_up[worker_id] += bits;
+    }
+
+    /// Total uplink bits across workers.
+    pub fn total_bits_up(&self) -> u64 {
+        self.bits_up.iter().sum()
+    }
+
+    /// Mean uplink bits per worker (the paper's "bits per worker").
+    pub fn mean_bits_up(&self) -> f64 {
+        self.total_bits_up() as f64 / self.n as f64
+    }
+
+    /// Max uplink bits over workers (stragglers in skewed skip patterns).
+    pub fn max_bits_up(&self) -> u64 {
+        self.bits_up.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Exact recomputation of `g^t` from worker states — the consistency
+    /// oracle used by tests (`g^t ≡ (1/n)Σ g_i^t` must hold to fp
+    /// tolerance at all times).
+    pub fn consistency_error(&self, worker_g: &[&[f32]]) -> f64 {
+        let d = self.x.len();
+        let mut exact = vec![0.0f64; d];
+        for g in worker_g {
+            linalg::add_into_f64(&mut exact, g);
+        }
+        exact
+            .iter()
+            .zip(&self.g_sum)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+            / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::CVec;
+
+    #[test]
+    fn fold_increment_and_replace() {
+        let g0a = [1.0f32, 0.0];
+        let g0b = [0.0f32, 1.0];
+        let mut s = Server::new(vec![0.0; 2], &[&g0a, &g0b], &[64, 64]);
+        assert_eq!(s.g(), &[0.5, 0.5]);
+        // worker 0 increments +1 on coord 1.
+        s.apply_update(
+            0,
+            &g0a,
+            &Update::Increment { inc: CVec::Sparse { dim: 2, idx: vec![1], val: vec![1.0] }, bits: 33 },
+            34,
+        );
+        assert_eq!(s.g(), &[0.5, 1.0]);
+        // worker 1 replaces to [2, 2] (h_before = g0b).
+        s.apply_update(1, &g0b, &Update::Replace { g: vec![2.0, 2.0], bits: 64 }, 65);
+        assert_eq!(s.g(), &[1.5, 1.5]);
+        assert_eq!(s.bits_up, vec![64 + 34, 64 + 65]);
+        assert_eq!(s.total_bits_up(), 227);
+        assert_eq!(s.max_bits_up(), 129);
+    }
+
+    #[test]
+    fn step_moves_against_g() {
+        let g = [1.0f32, -1.0];
+        let mut s = Server::new(vec![1.0; 2], &[&g], &[0]);
+        s.step(0.5);
+        assert_eq!(s.x, vec![0.5, 1.5]);
+        assert_eq!(s.bits_down, 64);
+    }
+
+    #[test]
+    fn consistency_oracle_detects_drift() {
+        let g = [1.0f32, 2.0];
+        let s = Server::new(vec![0.0; 2], &[&g], &[0]);
+        assert!(s.consistency_error(&[&g]) < 1e-12);
+        let wrong = [1.0f32, 2.5];
+        assert!(s.consistency_error(&[&wrong]) > 0.4);
+    }
+}

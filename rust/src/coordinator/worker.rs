@@ -1,0 +1,124 @@
+//! Worker-side state: the local objective shard, the 3PC mechanism
+//! state, and a private RNG stream. A worker's `round()` is the unit of
+//! parallel work the orchestrator schedules.
+
+use super::protocol::UplinkMsg;
+use super::InitPolicy;
+use crate::compressors::{Ctx, CtxInfo};
+use crate::mechanisms::{MechWorker, ThreePointMap};
+use crate::problems::LocalProblem;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+pub struct WorkerState {
+    pub id: usize,
+    problem: Arc<dyn LocalProblem>,
+    mech: MechWorker,
+    rng: Pcg64,
+    info: CtxInfo,
+    grad_buf: Vec<f32>,
+    /// Uplink bits billed for initialisation (FullGradient → 32·d).
+    pub init_bits: u64,
+}
+
+impl WorkerState {
+    /// Build worker `id` of `n`: evaluates `∇f_i(x⁰)` and applies the
+    /// `g⁰` policy.
+    pub fn new(
+        id: usize,
+        n: usize,
+        problem: Arc<dyn LocalProblem>,
+        map: Arc<dyn ThreePointMap>,
+        x0: &[f32],
+        init: InitPolicy,
+        seed: u64,
+    ) -> WorkerState {
+        let d = problem.dim();
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: id };
+        let rng = Pcg64::new(seed, 0x1000 + id as u64);
+        let mut grad0 = vec![0.0f32; d];
+        problem.grad(x0, &mut grad0);
+        let (g0, init_bits) = match init {
+            InitPolicy::FullGradient => (grad0.clone(), 32 * d as u64),
+            InitPolicy::Zero => (vec![0.0f32; d], 0),
+        };
+        let mech = MechWorker::new(map, g0, grad0);
+        WorkerState { id, problem, mech, rng, info, grad_buf: vec![0.0f32; d], init_bits }
+    }
+
+    /// Current `g_i^t`.
+    pub fn g(&self) -> &[f32] {
+        self.mech.g()
+    }
+
+    /// Local loss at `x` (for evaluation rounds).
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        self.problem.loss(x)
+    }
+
+    /// One round at the new iterate `x^{t+1}`: compute the local gradient,
+    /// run the mechanism, return the uplink message and expose the true
+    /// gradient via `true_grad` for the leader's exact `∇f` accounting.
+    pub fn round(&mut self, x_new: &[f32], round_seed: u64) -> UplinkMsg {
+        let mut unused = Vec::new();
+        self.round_acc(x_new, round_seed, &mut unused)
+    }
+
+    /// Like [`Self::round`], folding `g_i^{t+1} − g_i^t` into `delta_acc`
+    /// (empty = no accumulation) for the orchestrator's partial sums.
+    pub fn round_acc(&mut self, x_new: &[f32], round_seed: u64, delta_acc: &mut Vec<f64>) -> UplinkMsg {
+        self.problem.grad(x_new, &mut self.grad_buf);
+        let mut ctx = Ctx::new(self.info, &mut self.rng, round_seed);
+        let (update, g_err) = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
+        UplinkMsg { worker_id: self.id, update, g_err }
+    }
+
+    /// The gradient computed by the last `round()` call.
+    pub fn true_grad(&self) -> &[f32] {
+        &self.grad_buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mechanisms::parse_mechanism;
+    use crate::problems::QuadLocal;
+
+    fn quad_worker(init: InitPolicy) -> WorkerState {
+        let p = Arc::new(QuadLocal::new(1.0, 0.5, vec![0.2, -0.1, 0.4]));
+        let map = parse_mechanism("ef21:top1").unwrap();
+        WorkerState::new(0, 1, p, map, &[1.0, 1.0, 1.0], init, 42)
+    }
+
+    #[test]
+    fn full_init_matches_gradient() {
+        let w = quad_worker(InitPolicy::FullGradient);
+        // grad at x0 = A x − b with A = 0.25T + 0.5I.
+        let g = w.g();
+        assert!((g[0] - (0.25 * (2.0 - 1.0) + 0.5 - 0.2)).abs() < 1e-6);
+        assert_eq!(w.init_bits, 96);
+    }
+
+    #[test]
+    fn zero_init_is_free() {
+        let w = quad_worker(InitPolicy::Zero);
+        assert_eq!(w.g(), &[0.0, 0.0, 0.0]);
+        assert_eq!(w.init_bits, 0);
+    }
+
+    #[test]
+    fn round_converges_g_to_gradient() {
+        // Repeated rounds at a fixed x must drive g_i → ∇f_i(x)
+        // (the 3PC error contraction with D_i = 0).
+        let mut w = quad_worker(InitPolicy::Zero);
+        let x = [0.5f32, -0.5, 0.25];
+        let mut last_err = f64::INFINITY;
+        for t in 0..50 {
+            let msg = w.round(&x, t);
+            assert!(msg.g_err <= last_err + 1e-12, "error must not increase at fixed x");
+            last_err = msg.g_err;
+        }
+        assert!(last_err < 1e-10, "g_err {last_err}");
+    }
+}

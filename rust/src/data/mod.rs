@@ -1,0 +1,256 @@
+//! Datasets and sharding.
+//!
+//! The paper trains on four LIBSVM datasets and MNIST. Neither is
+//! downloadable in this offline environment, so (per DESIGN.md §2) we
+//! provide:
+//!
+//! * [`synthetic_libsvm`] — binary-classification sets with the *same
+//!   dimensions* as phishing/w6a/a9a/ijcnn1 (scaled-down sample counts by
+//!   default; `full_size` restores the paper's N), sparse features,
+//!   labels from a noisy ground-truth separator;
+//! * [`synthetic_mnist`] — 784-dim class-structured images (10 smooth
+//!   class templates + noise, clipped to [0,1]) so "split by labels"
+//!   creates genuine heterogeneity;
+//! * [`parse_libsvm`] — a real LIBSVM text parser, so dropping the actual
+//!   files into `data/` upgrades the experiments to the paper's inputs;
+//! * the three sharding schemes of Appendix E.1: even split,
+//!   homogeneity-p̂ split, split-by-labels.
+
+pub mod partition;
+
+pub use partition::{even_shards, homogeneity_shards, label_shards, Shards};
+
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+
+/// A dense supervised dataset: row-major features `(m, d)`, labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    /// For classification: ±1 (LIBSVM-style) or class id as f32 (MNIST).
+    pub y: Vec<f32>,
+    pub m: usize,
+    pub d: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Extract the sub-dataset given by `idx`.
+    pub fn subset(&self, idx: &[usize], name: &str) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, m: idx.len(), d: self.d, name: name.to_string() }
+    }
+}
+
+/// Paper dataset geometry: `(name, N, d)` per LIBSVM.
+pub const LIBSVM_GEOMETRY: [(&str, usize, usize); 4] = [
+    ("phishing", 11_055, 68),
+    ("w6a", 17_188, 300),
+    ("a9a", 32_561, 123),
+    ("ijcnn1", 49_990, 22),
+];
+
+/// Synthetic stand-in for a LIBSVM dataset (see module docs). With
+/// `full_size = false` the sample count is capped at 4000 so the full
+/// heatmap sweeps finish on one machine; the feature dimension — which
+/// controls the compression trade-offs under study — always matches the
+/// paper.
+pub fn synthetic_libsvm(name: &str, full_size: bool, seed: u64) -> Result<Dataset> {
+    let (_, n_full, d) = LIBSVM_GEOMETRY
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .with_context(|| format!("unknown dataset '{name}' (try phishing|w6a|a9a|ijcnn1)"))?;
+    let m = if full_size { *n_full } else { (*n_full).min(4000) };
+    let mut rng = Pcg64::seed(seed ^ fxhash(name));
+    // Ground-truth separator with a few strong coordinates (mimicking the
+    // informative-feature structure of the real sets).
+    let w: Vec<f64> = (0..*d)
+        .map(|j| if j % 7 == 0 { rng.normal_ms(0.0, 2.0) } else { rng.normal_ms(0.0, 0.3) })
+        .collect();
+    // Feature density: LIBSVM sets are sparse; keep ~25% nonzeros.
+    let density = 0.25;
+    let mut x = vec![0.0f32; m * *d];
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let mut margin = 0.0f64;
+        for j in 0..*d {
+            if rng.bernoulli(density) {
+                let v = rng.normal();
+                x[i * *d + j] = v as f32;
+                margin += v * w[j];
+            }
+        }
+        // 10% label noise — keeps the problem non-separable like the
+        // real sets.
+        let clean = if margin >= 0.0 { 1.0 } else { -1.0 };
+        y[i] = if rng.bernoulli(0.10) { -clean } else { clean };
+    }
+    Ok(Dataset { x, y, m, d: *d, name: name.to_string() })
+}
+
+/// Synthetic MNIST: 10 smooth class templates in [0,1]^784 plus noise.
+/// `m` samples, balanced classes, labels 0..9.
+pub fn synthetic_mnist(m: usize, seed: u64) -> Dataset {
+    let d = 784;
+    let mut rng = Pcg64::seed(seed ^ 0x4d4e4953);
+    // Class templates: sum of a few smooth 2-D Gaussian bumps on the
+    // 28×28 grid — low-rank, class-clustered structure like real digits.
+    let mut templates = vec![0.0f32; 10 * d];
+    for c in 0..10 {
+        let bumps = 2 + rng.below(3);
+        for _ in 0..bumps {
+            let cx = rng.range_f64(6.0, 22.0);
+            let cy = rng.range_f64(6.0, 22.0);
+            let sx = rng.range_f64(2.0, 5.0);
+            let sy = rng.range_f64(2.0, 5.0);
+            let amp = rng.range_f64(0.5, 1.0);
+            for py in 0..28 {
+                for px in 0..28 {
+                    let dx = (px as f64 - cx) / sx;
+                    let dy = (py as f64 - cy) / sy;
+                    templates[c * d + py * 28 + px] +=
+                        (amp * (-0.5 * (dx * dx + dy * dy)).exp()) as f32;
+                }
+            }
+        }
+    }
+    let mut x = vec![0.0f32; m * d];
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let c = i % 10; // balanced
+        y[i] = c as f32;
+        for j in 0..d {
+            let v = templates[c * d + j] as f64 + rng.normal_ms(0.0, 0.08);
+            x[i * d + j] = v.clamp(0.0, 1.0) as f32;
+        }
+    }
+    Dataset { x, y, m, d, name: "synthetic-mnist".to_string() }
+}
+
+/// Parse LIBSVM text format (`label idx:val idx:val ...`, 1-based
+/// indices). Binary labels are mapped to ±1 (0/−1 → −1).
+pub fn parse_libsvm(text: &str, d: usize, name: &str) -> Result<Dataset> {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+        let mut row = vec![0.0f32; d];
+        for p in parts {
+            let (i, v) = p
+                .split_once(':')
+                .with_context(|| format!("line {}: bad feature '{p}'", lineno + 1))?;
+            let i: usize = i.parse()?;
+            let v: f32 = v.parse()?;
+            anyhow::ensure!(i >= 1 && i <= d, "line {}: index {i} out of 1..={d}", lineno + 1);
+            row[i - 1] = v;
+        }
+        x.extend_from_slice(&row);
+    }
+    let m = y.len();
+    Ok(Dataset { x, y, m, d, name: name.to_string() })
+}
+
+/// Load a real LIBSVM file if present under `data_dir`, else fall back to
+/// the synthetic stand-in (logged).
+pub fn libsvm_or_synthetic(name: &str, data_dir: &str, full_size: bool, seed: u64) -> Result<Dataset> {
+    let (_, _, d) = LIBSVM_GEOMETRY
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .with_context(|| format!("unknown dataset '{name}'"))?;
+    let path = std::path::Path::new(data_dir).join(name);
+    if path.exists() {
+        crate::info!("loading real LIBSVM file {}", path.display());
+        return parse_libsvm(&std::fs::read_to_string(path)?, *d, name);
+    }
+    crate::debug!("no real {name} file; generating synthetic stand-in");
+    synthetic_libsvm(name, full_size, seed)
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_libsvm_geometry() {
+        let ds = synthetic_libsvm("ijcnn1", false, 1).unwrap();
+        assert_eq!(ds.d, 22);
+        assert_eq!(ds.m, 4000);
+        assert!(ds.y.iter().all(|&y| y == 1.0 || y == -1.0));
+        let pos = ds.y.iter().filter(|&&y| y == 1.0).count();
+        assert!(pos > ds.m / 5 && pos < 4 * ds.m / 5, "class balance: {pos}/{}", ds.m);
+        assert!(synthetic_libsvm("nope", false, 1).is_err());
+    }
+
+    #[test]
+    fn synthetic_libsvm_full_size() {
+        let ds = synthetic_libsvm("phishing", true, 1).unwrap();
+        assert_eq!(ds.m, 11_055);
+        assert_eq!(ds.d, 68);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_per_seed() {
+        let a = synthetic_libsvm("a9a", false, 5).unwrap();
+        let b = synthetic_libsvm("a9a", false, 5).unwrap();
+        assert_eq!(a.x, b.x);
+        let c = synthetic_libsvm("a9a", false, 6).unwrap();
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn mnist_shape_and_range() {
+        let ds = synthetic_mnist(50, 3);
+        assert_eq!(ds.d, 784);
+        assert_eq!(ds.m, 50);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Same-class samples are closer than cross-class on average.
+        let d2 = |a: &[f32], b: &[f32]| crate::util::linalg::dist_sq(a, b);
+        let same = d2(ds.row(0), ds.row(10)); // both class 0
+        let cross = d2(ds.row(0), ds.row(5)); // class 0 vs 5
+        assert!(same < cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn parse_libsvm_roundtrip() {
+        let text = "+1 1:0.5 3:-2\n-1 2:1\n0 1:1\n";
+        let ds = parse_libsvm(text, 3, "toy").unwrap();
+        assert_eq!(ds.m, 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, -2.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0, -1.0]);
+        assert!(parse_libsvm("+1 9:1\n", 3, "bad").is_err());
+    }
+
+    #[test]
+    fn subset_extracts_rows() {
+        let ds = synthetic_mnist(20, 1);
+        let sub = ds.subset(&[3, 7], "sub");
+        assert_eq!(sub.m, 2);
+        assert_eq!(sub.row(0), ds.row(3));
+        assert_eq!(sub.y, vec![ds.y[3], ds.y[7]]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Sharding schemes (Appendix E.1).
+//!
+//! * [`even_shards`] — shuffle, split into n equal parts, withdraw the
+//!   remainder (the §6.1 logreg protocol, n = 20).
+//! * [`homogeneity_shards`] — split into n+1 parts D₀..D_n; client i
+//!   takes D₀ with probability p̂, else D_i. p̂ = 1 → fully homogeneous
+//!   (everyone holds the same data), p̂ = 0 → disjoint random shards.
+//! * [`label_shards`] — sort by label: clients 1..n/10 hold class 0, the
+//!   next n/10 hold class 1, … (the "extremely heterogeneous" split).
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Per-worker row indices into the parent dataset.
+pub type Shards = Vec<Vec<usize>>;
+
+/// Shuffle and split into `n` equal shards, dropping the remainder.
+pub fn even_shards(m: usize, n: usize, rng: &mut Pcg64) -> Shards {
+    assert!(n >= 1 && m >= n, "need at least one sample per shard (m={m}, n={n})");
+    let mut idx: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut idx);
+    let per = m / n;
+    (0..n).map(|i| idx[i * per..(i + 1) * per].to_vec()).collect()
+}
+
+/// Appendix E.1 homogeneity protocol: split into n+1 equal parts
+/// D₀..D_n; worker i takes D₀ with probability `p_hat`, else D_i.
+pub fn homogeneity_shards(m: usize, n: usize, p_hat: f64, rng: &mut Pcg64) -> Shards {
+    assert!((0.0..=1.0).contains(&p_hat));
+    assert!(m >= n + 1, "need m ≥ n+1 (m={m}, n={n})");
+    let mut idx: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut idx);
+    let per = m / (n + 1);
+    assert!(per >= 1);
+    let part = |k: usize| idx[k * per..(k + 1) * per].to_vec();
+    (0..n)
+        .map(|i| if rng.bernoulli(p_hat) { part(0) } else { part(i + 1) })
+        .collect()
+}
+
+/// Split by labels: workers `c·n/10 .. (c+1)·n/10` own class `c`'s
+/// samples (generalised to however many distinct labels exist). Within a
+/// class, samples are dealt round-robin to the class's workers.
+pub fn label_shards(ds: &Dataset, n: usize) -> Shards {
+    // Distinct labels in ascending order.
+    let mut labels: Vec<i64> = ds.y.iter().map(|&y| y as i64).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    let c = labels.len();
+    assert!(n >= c, "need at least one worker per class (n={n}, classes={c})");
+    let workers_per_class = n / c;
+    let mut shards: Shards = vec![Vec::new(); n];
+    let mut counter = vec![0usize; c];
+    for i in 0..ds.m {
+        let class = labels.binary_search(&(ds.y[i] as i64)).unwrap();
+        let slot = counter[class] % workers_per_class;
+        counter[class] += 1;
+        let w = class * workers_per_class + slot;
+        shards[w].push(i);
+    }
+    // Workers beyond c·workers_per_class (when 10 ∤ n) get round-robin
+    // leftovers from the largest shards to avoid empty shards.
+    for w in (c * workers_per_class)..n {
+        let donor = (0..c * workers_per_class)
+            .max_by_key(|&i| shards[i].len())
+            .unwrap();
+        let donor_len = shards[donor].len();
+        let moved: Vec<usize> = shards[donor].split_off(donor_len - donor_len / 2);
+        shards[w] = moved;
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_mnist;
+
+    #[test]
+    fn even_shards_disjoint_equal() {
+        let mut rng = Pcg64::seed(1);
+        let shards = even_shards(103, 10, &mut rng);
+        assert_eq!(shards.len(), 10);
+        assert!(shards.iter().all(|s| s.len() == 10));
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 100, "shards must be disjoint");
+    }
+
+    #[test]
+    fn homogeneity_extremes() {
+        let mut rng = Pcg64::seed(2);
+        // p̂ = 1: everyone holds D₀ — identical shards.
+        let h1 = homogeneity_shards(110, 10, 1.0, &mut rng);
+        assert!(h1.iter().all(|s| s == &h1[0]));
+        // p̂ = 0: all distinct parts — pairwise disjoint.
+        let h0 = homogeneity_shards(110, 10, 0.0, &mut rng);
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert!(h0[i].iter().all(|x| !h0[j].contains(x)), "shards {i},{j} overlap");
+            }
+        }
+    }
+
+    #[test]
+    fn label_shards_pure_classes() {
+        let ds = synthetic_mnist(200, 7);
+        let shards = label_shards(&ds, 20); // 2 workers per class
+        assert_eq!(shards.len(), 20);
+        for (w, shard) in shards.iter().enumerate() {
+            assert!(!shard.is_empty(), "worker {w} empty");
+            let class = ds.y[shard[0]];
+            assert!(
+                shard.iter().all(|&i| ds.y[i] == class),
+                "worker {w} mixes classes"
+            );
+        }
+    }
+
+    #[test]
+    fn label_shards_handles_non_divisible_n() {
+        let ds = synthetic_mnist(300, 8);
+        let shards = label_shards(&ds, 23);
+        assert_eq!(shards.len(), 23);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 300);
+    }
+}

@@ -1,0 +1,127 @@
+//! Ablations of design choices DESIGN.md §5 calls out:
+//!
+//! * `ablation-g0` — `g⁰` initialisation policy (§4.2: full gradients vs
+//!   zero) — trade initial 32·d bits against a large `G⁰` penalty term.
+//! * `ablation-wire` — sparse (index+value) vs dense wire encoding
+//!   crossover as a function of K/d.
+//! * `ablation-stepsize` — theoretical vs tuned stepsize: how much the
+//!   2^k multiplier grid buys per method (the paper tunes everything;
+//!   this quantifies why).
+
+use super::common::{self, Criterion};
+use crate::compressors::index_bits;
+use crate::coordinator::{train, InitPolicy, TrainConfig};
+use crate::mechanisms::parse_mechanism;
+use crate::problems::quadratic;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+pub fn g0_policy(args: &Args) -> Result<()> {
+    let n = args.num_or("workers", 10usize);
+    let d = args.num_or("d", 200usize);
+    let suite = quadratic::generate(n, d, 1e-3, 0.8, 9);
+    let tol = args.num_or("tol", 1e-3);
+    let mut t = Table::new(
+        "Ablation: g0 init policy (full gradient vs zero) — bits/worker to tolerance",
+        &["method", "init", "bits to tol", "rounds"],
+    );
+    for spec in ["ef21:top4", "clag:top4:4.0", "lag:4.0"] {
+        for init in [InitPolicy::FullGradient, InitPolicy::Zero] {
+            let map = parse_mechanism(spec)?;
+            let base = common::base_gamma(&suite.problem, map.as_ref());
+            let cfg = TrainConfig {
+                gamma: base * 16.0,
+                max_rounds: args.num_or("rounds", 4000),
+                grad_tol: Some(tol),
+                init,
+                seed: 3,
+                ..TrainConfig::default()
+            };
+            let r = train(&suite.problem, map, &cfg);
+            t.row(&[
+                spec.to_string(),
+                format!("{init:?}"),
+                fnum(r.bits_to_grad_tol(tol).unwrap_or(f64::NAN)),
+                r.rounds_run.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    t.write_csv(common::out_dir("ablation_g0").join("g0.csv"))?;
+    Ok(())
+}
+
+pub fn wire_format(args: &Args) -> Result<()> {
+    let d = args.num_or("d", 25088usize);
+    let mut t = Table::new(
+        "Ablation: sparse vs dense wire encoding (bits per message, d fixed)",
+        &["K", "K/d", "sparse bits", "dense bits", "winner"],
+    );
+    let per = 32 + index_bits(d);
+    for frac in [0.001, 0.01, 0.05, 0.1, 0.25, 0.5, 32.0 / (32.0 + per as f64), 0.75, 1.0] {
+        let k = ((d as f64 * frac) as usize).max(1);
+        let sparse = k as u64 * per;
+        let dense = 32 * d as u64;
+        t.row(&[
+            k.to_string(),
+            fnum(k as f64 / d as f64),
+            sparse.to_string(),
+            dense.to_string(),
+            if sparse < dense { "sparse" } else { "dense" }.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "crossover at K/d = 32/(32+⌈log2 d⌉) = {}; the CVec encoder switches automatically.",
+        fnum(32.0 / (32.0 + per as f64))
+    );
+    t.write_csv(common::out_dir("ablation_wire").join("wire.csv"))?;
+    Ok(())
+}
+
+pub fn stepsize(args: &Args) -> Result<()> {
+    let n = args.num_or("workers", 10usize);
+    let d = args.num_or("d", 200usize);
+    let suite = quadratic::generate(n, d, 1e-3, 0.8, 9);
+    let tol = args.num_or("tol", 1e-3);
+    let cfg = TrainConfig {
+        max_rounds: args.num_or("rounds", 4000),
+        grad_tol: Some(tol),
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    let mut t = Table::new(
+        "Ablation: theoretical stepsize vs tuned (bits/worker to tol)",
+        &["method", "theory bits", "tuned bits", "best mult", "speedup"],
+    );
+    for spec in ["gd", "ef21:top4", "clag:top4:4.0", "lag:4.0"] {
+        let map = parse_mechanism(spec)?;
+        let base = common::base_gamma(&suite.problem, map.as_ref());
+        let theory_run = {
+            let mut c = cfg.clone();
+            c.gamma = base;
+            train(&suite.problem, map.clone(), &c)
+        };
+        let tuned = common::tune_stepsize(
+            &suite.problem,
+            map,
+            base,
+            &[1.0, 4.0, 16.0, 64.0, 256.0, 1024.0],
+            &cfg,
+            Criterion::MinBitsToTol(tol),
+        );
+        let tb = theory_run.bits_to_grad_tol(tol);
+        let ub = tuned.score;
+        t.row(&[
+            spec.to_string(),
+            fnum(tb.unwrap_or(f64::NAN)),
+            fnum(ub.unwrap_or(f64::NAN)),
+            tuned.multiplier.to_string(),
+            fnum(tb.unwrap_or(f64::NAN) / ub.unwrap_or(f64::NAN)),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(common::out_dir("ablation_stepsize").join("stepsize.csv"))?;
+    Ok(())
+}

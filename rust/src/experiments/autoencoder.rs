@@ -1,0 +1,165 @@
+//! Figures 1/3/4/5: the MNIST-autoencoder comparisons.
+//!
+//! * Fig. 1/5 (`fig1`): 3PCv2 with {Top, Rand, Perm}-K first compressor
+//!   (Top-K second) vs EF21 Top-K.
+//! * Fig. 3 (`fig3`): EF21 with {Top, cPerm, cRand}-K vs MARINA Perm-K.
+//! * Fig. 4 (`fig4`): MARINA {Perm, Rand}-K vs 3PCv5 Top-K vs EF21 Top-K.
+//!
+//! Setup (§6.2 / Appendix E.1): d_f = 784, d_e = 16, d = 25088, K = d/n,
+//! homogeneity ∈ {1 (identical), 0 (random split), by-label}; stepsizes
+//! tuned absolutely over powers of two; best run by final ‖∇f‖².
+//!
+//! Scaled-down defaults (n = 20, small sample counts, coarse multiplier
+//! grid) keep a full figure under a few minutes; `--workers 100
+//! --samples 6000 ...` restores the paper's geometry.
+
+use super::common::{self, Criterion};
+use crate::coordinator::TrainConfig;
+use crate::data::{self, Dataset};
+use crate::problems::{Autoencoder, Distributed, LocalProblem};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::SeriesSet;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Build the distributed AE problem under a homogeneity regime.
+pub fn ae_problem(ds: &Dataset, n: usize, homogeneity: &str, d_e: usize, seed: u64) -> Result<Distributed> {
+    let mut rng = Pcg64::seed(seed);
+    let shards = match homogeneity {
+        "1" | "identical" => data::homogeneity_shards(ds.m, n, 1.0, &mut rng),
+        "0" | "random" => data::homogeneity_shards(ds.m, n, 0.0, &mut rng),
+        "labels" | "by-label" => data::label_shards(ds, n),
+        other => anyhow::bail!("unknown homogeneity '{other}' (1|0|labels)"),
+    };
+    let locals: Vec<Arc<dyn LocalProblem>> = shards
+        .iter()
+        .map(|idx| {
+            let sub = ds.subset(idx, "shard");
+            Arc::new(Autoencoder::new(sub.x, ds.d, d_e)) as Arc<dyn LocalProblem>
+        })
+        .collect();
+    // x⁰: small deterministic init (the paper does not specify; scaled
+    // normal keeps the bilinear problem away from the saddle at 0).
+    let dim = 2 * ds.d * d_e;
+    let mut init_rng = Pcg64::seed(seed ^ 0xae);
+    let x0: Vec<f32> = (0..dim).map(|_| init_rng.normal_ms(0.0, 0.05) as f32).collect();
+    Ok(Distributed::new(locals, x0))
+}
+
+struct AeSpec {
+    n: usize,
+    homogeneity: String,
+    d_e: usize,
+    samples: usize,
+    rounds: usize,
+    multipliers: Vec<f64>,
+    k: usize,
+    dim: usize,
+}
+
+impl AeSpec {
+    fn from_args(args: &Args) -> AeSpec {
+        let n = args.num_or("workers", 20usize);
+        let d_e = args.num_or("encode-dim", 16usize);
+        let dim = 2 * 784 * d_e;
+        // K = d/n as in the paper.
+        let k = args.num_or("k", (dim / n).max(1));
+        AeSpec {
+            n,
+            homogeneity: args.str_or("homogeneity", "0"),
+            d_e,
+            samples: args.num_or("samples", 10 * n.max(10)),
+            rounds: args.num_or("rounds", 150usize),
+            multipliers: args.num_list_or(
+                "multipliers",
+                &[2.0f64.powi(-6), 2.0f64.powi(-4), 0.25, 1.0, 4.0],
+            ),
+            k,
+            dim,
+        }
+    }
+}
+
+fn run_methods(exp_id: &str, args: &Args, methods: &[(String, String)]) -> Result<()> {
+    let spec = AeSpec::from_args(args);
+    let ds = data::synthetic_mnist(spec.samples, 3);
+    let problem = ae_problem(&ds, spec.n, &spec.homogeneity, spec.d_e, 5)?;
+    crate::info!(
+        "{exp_id}: AE d={} n={} K={} homogeneity={} samples={}",
+        spec.dim,
+        spec.n,
+        spec.k,
+        spec.homogeneity,
+        spec.samples
+    );
+    let cfg = TrainConfig {
+        max_rounds: spec.rounds,
+        record_every: 1,
+        eval_loss_every: (spec.rounds / 10).max(1),
+        seed: 77,
+        ..TrainConfig::default()
+    };
+    let mut series = SeriesSet::new(
+        &format!("{exp_id}: ‖∇f(x)‖² vs bits/client (homogeneity {})", spec.homogeneity),
+        "bits",
+    );
+    for (label, spec_str) in methods {
+        let map = crate::mechanisms::parse_mechanism(spec_str)?;
+        // The AE has no smoothness certificate: tune absolute stepsizes
+        // (base 1.0 × multipliers), as the paper does.
+        let t = common::tune_stepsize(&problem, map, 1.0, &spec.multipliers, &cfg, Criterion::MinFinalGradNorm);
+        crate::info!("  {label}: stepsize {} final ‖∇f‖² {}", t.gamma, t.result.final_grad_norm_sq);
+        series.push(
+            &format!("{label} (gamma={:.4})", t.gamma),
+            t.result.bits_gradnorm_series(),
+        );
+    }
+    println!("{}", series.render_summary());
+    series.to_table().write_csv(common::out_dir(exp_id).join(format!(
+        "h{}_n{}.csv",
+        spec.homogeneity, spec.n
+    )))?;
+    Ok(())
+}
+
+/// Fig. 1/5: 3PCv2 variants vs EF21.
+pub fn fig1(args: &Args) -> Result<()> {
+    let spec = AeSpec::from_args(args);
+    let (k, k2) = (spec.k, (spec.k / 2).max(1));
+    let methods = vec![
+        (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+        (format!("3PCv2 Rand{k2}-Top{k2}"), format!("v2:rand{k2}:top{k2}")),
+        (format!("3PCv2 Perm-Top{k2}"), format!("v2:perm:top{k2}")),
+        (format!("3PCv2 Top{k2}(c)-Top{k2}"), format!("v2:rand{k2}:top{k}")),
+    ];
+    run_methods("fig1_v2_autoencoder", args, &methods)
+}
+
+/// Fig. 3: EF21 sparsifier comparison vs MARINA Perm-K.
+pub fn fig3(args: &Args) -> Result<()> {
+    let spec = AeSpec::from_args(args);
+    let k = spec.k;
+    let p = 1.0 / (spec.dim as f64 / k as f64); // MARINA sync prob ≈ K/d
+    let methods = vec![
+        (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+        (format!("EF21 cRand-{k}"), format!("ef21:crand{k}")),
+        ("EF21 cPerm-K".to_string(), "ef21:cperm".to_string()),
+        (format!("MARINA Perm-K p={p:.3}"), format!("marina:{p}:perm")),
+    ];
+    run_methods("fig3_ef21_sparsifiers", args, &methods)
+}
+
+/// Fig. 4: MARINA variants vs 3PCv5 Top-K.
+pub fn fig4(args: &Args) -> Result<()> {
+    let spec = AeSpec::from_args(args);
+    let k = spec.k;
+    let p = 1.0 / (spec.dim as f64 / k as f64);
+    let methods = vec![
+        (format!("MARINA Perm-K p={p:.3}"), format!("marina:{p}:perm")),
+        (format!("MARINA Rand-{k} p={p:.3}"), format!("marina:{p}:rand{k}")),
+        (format!("3PCv5 Top-{k} p={p:.3}"), format!("v5:{p}:top{k}")),
+        (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+    ];
+    run_methods("fig4_marina_v5", args, &methods)
+}

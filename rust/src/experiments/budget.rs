@@ -1,0 +1,89 @@
+//! Figures 21–24: CLAG vs LAG vs EF21 under a fixed communication budget
+//! (32 Mbit/client in the paper; scaled by `--budget-mbits`).
+//!
+//! For each compression level K ∈ {1, 25%·d, 50%·d}, run the three
+//! methods with tuned stepsizes (and tuned ζ for the lazy ones) until the
+//! per-client budget is exhausted; plot `‖∇f(x)‖²` against bits sent.
+
+use super::common::{self, Criterion};
+use crate::coordinator::TrainConfig;
+use crate::data;
+use crate::mechanisms::parse_mechanism;
+use crate::util::cli::Args;
+use crate::util::table::SeriesSet;
+use anyhow::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "ijcnn1");
+    let budget_bits = args.num_or("budget-mbits", 4.0) * 1e6;
+    let n = args.num_or("workers", 20usize);
+    let max_rounds = args.num_or("rounds", 3000usize);
+    let ds = data::libsvm_or_synthetic(&dataset, "data", args.flag("full-size"), 7)?;
+    let problem = common::logreg_problem(&ds, n, 0.1, 11);
+    let d = ds.d;
+    let ks = args.num_list_or("ks", &[1, (d / 4).max(1), (d / 2).max(1)]);
+    let zetas = args.num_list_or("zetas", &[1.0, 4.0, 16.0, 64.0]);
+    let multipliers = args.num_list_or("multipliers", &[1.0, 4.0, 16.0, 64.0, 256.0, 1024.0]);
+
+    let cfg = TrainConfig {
+        max_rounds,
+        bits_budget: Some(budget_bits),
+        record_every: 1,
+        seed: 35,
+        ..TrainConfig::default()
+    };
+    let exp_id = format!("fig21_budget_{dataset}");
+    crate::info!("budget experiment on {} (budget {} Mbit/client)", ds.name, budget_bits / 1e6);
+
+    for &k in &ks {
+        let mut series = SeriesSet::new(
+            &format!("Fig.21-style [{}] K={k}: ‖∇f‖² vs bits/client (budget {:.0} Mbit)", ds.name, budget_bits / 1e6),
+            "bits",
+        );
+        // EF21 (tuned stepsize only).
+        let map = parse_mechanism(&format!("ef21:top{k}"))?;
+        let base = common::base_gamma(&problem, map.as_ref());
+        let t = common::tune_stepsize(&problem, map, base, &multipliers, &cfg, Criterion::MinFinalGradNorm);
+        series.push(&format!("EF21 Top-{k} ({}x)", t.multiplier), t.result.bits_gradnorm_series());
+
+        // LAG (tuned ζ and stepsize).
+        let mut best: Option<(f64, common::Tuned)> = None;
+        for &z in &zetas {
+            let map = parse_mechanism(&format!("lag:{z}"))?;
+            let base = common::base_gamma(&problem, map.as_ref());
+            let t = common::tune_stepsize(&problem, map, base, &multipliers, &cfg, Criterion::MinFinalGradNorm);
+            if best
+                .as_ref()
+                .map(|(_, b)| t.score.unwrap_or(f64::INFINITY) < b.score.unwrap_or(f64::INFINITY))
+                .unwrap_or(true)
+            {
+                best = Some((z, t));
+            }
+        }
+        let (z, t) = best.unwrap();
+        series.push(&format!("LAG zeta={z} ({}x)", t.multiplier), t.result.bits_gradnorm_series());
+
+        // CLAG (tuned ζ and stepsize).
+        let mut best: Option<(f64, common::Tuned)> = None;
+        for &z in &zetas {
+            let map = parse_mechanism(&format!("clag:top{k}:{z}"))?;
+            let base = common::base_gamma(&problem, map.as_ref());
+            let t = common::tune_stepsize(&problem, map, base, &multipliers, &cfg, Criterion::MinFinalGradNorm);
+            if best
+                .as_ref()
+                .map(|(_, b)| t.score.unwrap_or(f64::INFINITY) < b.score.unwrap_or(f64::INFINITY))
+                .unwrap_or(true)
+            {
+                best = Some((z, t));
+            }
+        }
+        let (z, t) = best.unwrap();
+        series.push(&format!("CLAG Top-{k} zeta={z} ({}x)", t.multiplier), t.result.bits_gradnorm_series());
+
+        println!("{}", series.render_summary());
+        series
+            .to_table()
+            .write_csv(common::out_dir(&exp_id).join(format!("k{k}.csv")))?;
+    }
+    Ok(())
+}

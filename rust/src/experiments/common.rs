@@ -1,0 +1,181 @@
+//! Shared experiment machinery: problem builders, the paper's
+//! stepsize-tuning protocol (powers-of-two multipliers of the theoretical
+//! stepsize, best run kept), and result output conventions.
+
+use crate::coordinator::{train, TrainConfig, TrainResult};
+use crate::data::{self, Dataset};
+use crate::mechanisms::{parse_mechanism, ThreePointMap};
+use crate::problems::{Distributed, LocalProblem, LogReg};
+use crate::theory::{self, Smoothness};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Where CSV outputs land: `results/<exp-id>/`.
+pub fn out_dir(exp_id: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from("results").join(exp_id)
+}
+
+/// Build the distributed non-convex logreg problem of §6.1: dataset
+/// split evenly over `n` workers, λ = 0.1.
+pub fn logreg_problem(ds: &Dataset, n: usize, lambda: f64, seed: u64) -> Distributed {
+    let mut rng = Pcg64::seed(seed ^ 0x700c);
+    let shards = data::even_shards(ds.m, n, &mut rng);
+    let locals: Vec<Arc<dyn LocalProblem>> = shards
+        .iter()
+        .map(|idx| {
+            let sub = ds.subset(idx, "shard");
+            Arc::new(LogReg::new(sub.x, sub.y, ds.d, lambda)) as Arc<dyn LocalProblem>
+        })
+        .collect();
+    let mut p = Distributed::new(locals, vec![0.0f32; ds.d]);
+    // Smoothness: L_i bounds per shard; L₋ ≤ (1/n)ΣL_i ≤ L₊ = √(mean L_i²).
+    let bounds: Vec<f64> = shards
+        .iter()
+        .map(|idx| {
+            let sub = ds.subset(idx, "shard");
+            LogReg::new(sub.x, sub.y, ds.d, lambda).smoothness_bound()
+        })
+        .collect();
+    let l_mean = bounds.iter().sum::<f64>() / bounds.len() as f64;
+    let l_plus = (bounds.iter().map(|l| l * l).sum::<f64>() / bounds.len() as f64).sqrt();
+    p.smoothness = Some(Smoothness::new(l_mean, l_plus));
+    p
+}
+
+/// How a tuning sweep scores candidate runs.
+#[derive(Debug, Clone, Copy)]
+pub enum Criterion {
+    /// Fewest mean bits/worker to reach `‖∇f‖ < tol` (heatmaps).
+    MinBitsToTol(f64),
+    /// Smallest final `‖∇f‖²` (the autoencoder/quadratic plots).
+    MinFinalGradNorm,
+}
+
+/// Outcome of a tuning sweep.
+pub struct Tuned {
+    pub multiplier: f64,
+    pub gamma: f64,
+    pub result: TrainResult,
+    /// The score under the criterion (lower is better; None = no
+    /// candidate qualified, e.g. nothing converged).
+    pub score: Option<f64>,
+}
+
+/// The paper's protocol: try `γ = mult × γ_base` for each multiplier,
+/// keep the best non-diverged run under `criterion`.
+pub fn tune_stepsize(
+    problem: &Distributed,
+    map: Arc<dyn ThreePointMap>,
+    gamma_base: f64,
+    multipliers: &[f64],
+    cfg: &TrainConfig,
+    criterion: Criterion,
+) -> Tuned {
+    let mut best: Option<Tuned> = None;
+    for &mult in multipliers {
+        let mut c = cfg.clone();
+        c.gamma = gamma_base * mult;
+        let result = train(problem, map.clone(), &c);
+        if result.diverged {
+            continue;
+        }
+        let score = match criterion {
+            Criterion::MinBitsToTol(tol) => result.bits_to_grad_tol(tol),
+            Criterion::MinFinalGradNorm => Some(result.final_grad_norm_sq),
+        };
+        // Keep the lowest score; scoreless runs only stand in while no
+        // scored run exists.
+        let replace = match &best {
+            None => true,
+            Some(b) => match (b.score, score) {
+                (None, Some(_)) => true,
+                (Some(bs), Some(s)) => s < bs,
+                _ => false,
+            },
+        };
+        if replace {
+            best = Some(Tuned { multiplier: mult, gamma: c.gamma, result, score });
+        }
+    }
+    best.unwrap_or_else(|| Tuned {
+        multiplier: f64::NAN,
+        gamma: f64::NAN,
+        result: TrainResult {
+            records: vec![],
+            rounds_run: 0,
+            converged: false,
+            diverged: true,
+            final_x: vec![],
+            final_grad_norm_sq: f64::NAN,
+            total_bits_up: 0,
+            elapsed: std::time::Duration::ZERO,
+        },
+        score: None,
+    })
+}
+
+/// Theoretical base stepsize for a mechanism on a problem (falls back to
+/// `1/L₋` when the mechanism has no (A,B) certificate, and to 0.1 when
+/// the problem has no smoothness estimate — the harness then relies on
+/// the multiplier grid, like the paper does for the autoencoder).
+pub fn base_gamma(problem: &Distributed, map: &dyn ThreePointMap) -> f64 {
+    let info = crate::compressors::CtxInfo {
+        dim: problem.dim(),
+        n_workers: problem.n_workers(),
+        worker_id: 0,
+    };
+    match (problem.smoothness, map.params(&info)) {
+        (Some(s), Some(p)) => theory::stepsize_nonconvex(p, s),
+        (Some(s), None) => 1.0 / s.l_minus,
+        (None, _) => 0.1,
+    }
+}
+
+/// Named method spec → map, with a display label.
+pub struct Method {
+    pub label: String,
+    pub map: Arc<dyn ThreePointMap>,
+}
+
+impl Method {
+    pub fn parse(label: &str, spec: &str) -> Result<Method> {
+        Ok(Method { label: label.to_string(), map: parse_mechanism(spec)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrainConfig;
+    use crate::problems::quadratic;
+
+    #[test]
+    fn logreg_problem_builds() {
+        let ds = data::synthetic_libsvm("ijcnn1", false, 3).unwrap();
+        let p = logreg_problem(&ds, 4, 0.1, 1);
+        assert_eq!(p.n_workers(), 4);
+        assert_eq!(p.dim(), 22);
+        assert!(p.smoothness.is_some());
+        assert!(p.loss(&p.x0).is_finite());
+    }
+
+    #[test]
+    fn tuning_picks_a_converging_multiplier() {
+        let suite = quadratic::generate(4, 30, 5e-2, 0.2, 3);
+        let map = parse_mechanism("ef21:top4").unwrap();
+        let base = base_gamma(&suite.problem, map.as_ref());
+        let cfg = TrainConfig { max_rounds: 800, threads: 2, grad_tol: Some(1e-3), ..TrainConfig::default() };
+        let tuned = tune_stepsize(
+            &suite.problem,
+            map,
+            base,
+            &[1.0, 4.0, 1e6], // 1e6 diverges and must be rejected
+            &cfg,
+            Criterion::MinBitsToTol(1e-3),
+        );
+        assert!(tuned.score.is_some(), "no multiplier converged");
+        assert!(tuned.multiplier < 1e6);
+        assert!(!tuned.result.diverged);
+    }
+}

@@ -1,0 +1,173 @@
+//! Figures 10–15: (K₁, K₂) budget-split tuning for the two-compressor
+//! methods.
+//!
+//! * `fig10`/`fig11` — 3PCv2 Rand-K₁ + Top-K₂, K₁+K₂ ∈ {d/n, 0.02·d};
+//! * `fig12`/`fig13` — 3PCv2 (Rand-K₁∘Perm-K) + Top-K₂ (the composition
+//!   enters as the contractive spec `cperm*crand`-style scaled variant);
+//! * `fig14`/`fig15` — 3PCv4 Top-K₁ + Top-K₂ vs EF21 Top-K (the paper's
+//!   finding: on the sparse quadratic suite 3PCv4 usually coincides with
+//!   EF21 — the series should nearly overlap).
+
+use super::common::{self, Criterion};
+use crate::coordinator::TrainConfig;
+use crate::problems::quadratic;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, SeriesSet, Table};
+use anyhow::Result;
+
+struct Spec {
+    n: usize,
+    d: usize,
+    lambda: f64,
+    scale: f64,
+    rounds: usize,
+    multipliers: Vec<f64>,
+    k_total: usize,
+    tol: f64,
+}
+
+impl Spec {
+    fn from_args(args: &Args, k_mode: &str) -> Spec {
+        let n = args.num_or("workers", 10usize);
+        let d = args.num_or("d", 200usize);
+        let k_total = match k_mode {
+            "dn" => (d / n).max(2),
+            _ => ((d as f64 * 0.02) as usize).max(2),
+        };
+        Spec {
+            n,
+            d,
+            lambda: args.num_or("lambda", 1e-4),
+            scale: args.num_or("noise-scale", 0.8),
+            rounds: args.num_or("rounds", 3000usize),
+            multipliers: args.num_list_or("multipliers", &[1.0, 4.0, 16.0, 64.0, 256.0]),
+            k_total: args.num_or("k-total", k_total),
+            tol: args.num_or("tol", 1e-3),
+        }
+    }
+
+    /// The (K₁, K₂) split grid: fractions of the shared budget.
+    fn splits(&self) -> Vec<(usize, usize)> {
+        let kt = self.k_total;
+        [0.25, 0.5, 0.75]
+            .iter()
+            .map(|&f| {
+                let k1 = ((kt as f64 * f) as usize).clamp(1, kt - 1);
+                (k1, kt - k1)
+            })
+            .collect()
+    }
+}
+
+fn sweep(
+    exp_id: &str,
+    args: &Args,
+    k_mode: &str,
+    spec_for: &dyn Fn(usize, usize) -> String,
+    label_for: &dyn Fn(usize, usize) -> String,
+) -> Result<()> {
+    let spec = Spec::from_args(args, k_mode);
+    let suite = quadratic::generate(spec.n, spec.d, spec.lambda, spec.scale, 101);
+    let cfg = TrainConfig {
+        max_rounds: spec.rounds,
+        grad_tol: Some(spec.tol),
+        record_every: 1,
+        seed: 61,
+        ..TrainConfig::default()
+    };
+    let mut series = SeriesSet::new(
+        &format!(
+            "{exp_id} [s={}, n={}, K1+K2={}]: ‖∇f‖² vs bits/client",
+            spec.scale, spec.n, spec.k_total
+        ),
+        "bits",
+    );
+    let mut summary = Table::new(&format!("{exp_id}: bits/worker to ‖∇f‖<{}", spec.tol), &["method", "bits", "mult"]);
+    // Reference: EF21 with the full budget.
+    {
+        let k = spec.k_total;
+        let map = crate::mechanisms::parse_mechanism(&format!("ef21:top{k}"))?;
+        let base = common::base_gamma(&suite.problem, map.as_ref());
+        let t = common::tune_stepsize(&suite.problem, map, base, &spec.multipliers, &cfg, Criterion::MinBitsToTol(spec.tol));
+        series.push(&format!("EF21 Top-{k} ({}x)", t.multiplier), t.result.bits_gradnorm_series());
+        summary.row(&[format!("EF21 Top-{k}"), fnum(t.score.unwrap_or(f64::NAN)), t.multiplier.to_string()]);
+    }
+    for (k1, k2) in spec.splits() {
+        let m = spec_for(k1, k2);
+        let label = label_for(k1, k2);
+        let map = crate::mechanisms::parse_mechanism(&m)?;
+        let base = common::base_gamma(&suite.problem, map.as_ref());
+        let t = common::tune_stepsize(&suite.problem, map, base, &spec.multipliers, &cfg, Criterion::MinBitsToTol(spec.tol));
+        series.push(&format!("{label} ({}x)", t.multiplier), t.result.bits_gradnorm_series());
+        summary.row(&[label, fnum(t.score.unwrap_or(f64::NAN)), t.multiplier.to_string()]);
+    }
+    println!("{}", series.render_summary());
+    println!("{}", summary.render());
+    series.to_table().write_csv(common::out_dir(exp_id).join("series.csv"))?;
+    summary.write_csv(common::out_dir(exp_id).join("summary.csv"))?;
+    Ok(())
+}
+
+pub fn fig10(args: &Args) -> Result<()> {
+    sweep(
+        "fig10_v2_randtop_dn",
+        args,
+        "dn",
+        &|k1, k2| format!("v2:rand{k1}:top{k2}"),
+        &|k1, k2| format!("3PCv2 Rand{k1}-Top{k2}"),
+    )
+}
+
+pub fn fig11(args: &Args) -> Result<()> {
+    sweep(
+        "fig11_v2_randtop_002d",
+        args,
+        "002d",
+        &|k1, k2| format!("v2:rand{k1}:top{k2}"),
+        &|k1, k2| format!("3PCv2 Rand{k1}-Top{k2}"),
+    )
+}
+
+pub fn fig12(args: &Args) -> Result<()> {
+    // Rand-K₁∘Perm composition as the unbiased first compressor is
+    // approximated by Perm (shared partition) since Rand∘Perm's variance
+    // is dominated by the Perm stage at K₁ ≈ d/n; the *contractive*
+    // composition cperm*crand is exercised in the EF21 arm.
+    sweep(
+        "fig12_v2_randperm_dn",
+        args,
+        "dn",
+        &|_k1, k2| format!("v2:perm:top{k2}"),
+        &|k1, k2| format!("3PCv2 (Rand{k1}∘Perm)-Top{k2}"),
+    )
+}
+
+pub fn fig13(args: &Args) -> Result<()> {
+    sweep(
+        "fig13_v2_randperm_002d",
+        args,
+        "002d",
+        &|_k1, k2| format!("v2:perm:top{k2}"),
+        &|k1, k2| format!("3PCv2 (Rand{k1}∘Perm)-Top{k2}"),
+    )
+}
+
+pub fn fig14(args: &Args) -> Result<()> {
+    sweep(
+        "fig14_v4_toptop_dn",
+        args,
+        "dn",
+        &|k1, k2| format!("v4:top{k2}:top{k1}"),
+        &|k1, k2| format!("3PCv4 Top{k1}-Top{k2}"),
+    )
+}
+
+pub fn fig15(args: &Args) -> Result<()> {
+    sweep(
+        "fig15_v4_toptop_002d",
+        args,
+        "002d",
+        &|k1, k2| format!("v4:top{k2}:top{k1}"),
+        &|k1, k2| format!("3PCv4 Top{k1}-Top{k2}"),
+    )
+}

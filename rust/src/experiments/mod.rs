@@ -1,0 +1,88 @@
+//! Experiment harness: one runnable entry per paper table/figure (see
+//! DESIGN.md §4 for the index). `threepc exp <id> [flags]`, or
+//! `threepc exp all` for the whole scaled-down suite.
+//!
+//! Every experiment prints the paper-shaped series/table to the console
+//! and writes CSV to `results/<id>/`. Defaults are scaled so the full
+//! suite completes on one machine; flags restore the paper's geometry
+//! (documented per module).
+
+pub mod ablation;
+pub mod autoencoder;
+pub mod budget;
+pub mod clag_heatmap;
+pub mod common;
+pub mod k1k2;
+pub mod quad_suite;
+pub mod tables;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+
+type ExpFn = fn(&Args) -> Result<()>;
+
+/// `(id, paper artifact, runner)` registry.
+pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
+    ("table1", "Table 1 — (A,B,B/A) certificates + empirical (6)", tables::table1),
+    ("table2", "Table 2 — LAG/CLAG linear-PŁ + O(1/T) rate verification", tables::table2),
+    ("table3", "Tables 3–4 — L±/L− of the quadratic generator", quad_suite::table3),
+    ("fig1", "Fig 1/5 — 3PCv2 sparsifiers vs EF21 (autoencoder)", autoencoder::fig1),
+    ("fig2", "Fig 2/17–20 — CLAG (K,ζ) heatmap (logreg)", clag_heatmap::run),
+    ("fig3", "Fig 3 — EF21 sparsifiers vs MARINA (autoencoder)", autoencoder::fig3),
+    ("fig4", "Fig 4 — MARINA vs 3PCv5 (autoencoder)", autoencoder::fig4),
+    ("fig6", "Fig 6 — EF21 sparsifiers vs MARINA (quadratics)", quad_suite::fig6),
+    ("fig7", "Fig 7 — MARINA vs 3PCv5 (quadratics)", quad_suite::fig7),
+    ("fig8", "Fig 8 — 3PCv2 vs SOTA, K=d/n (quadratics)", quad_suite::fig8),
+    ("fig9", "Fig 9 — 3PCv2 vs SOTA, K=0.02d (quadratics)", quad_suite::fig9),
+    ("fig10", "Fig 10 — 3PCv2 Rand-Top (K1,K2) tuning, K=d/n", k1k2::fig10),
+    ("fig11", "Fig 11 — 3PCv2 Rand-Top (K1,K2) tuning, K=0.02d", k1k2::fig11),
+    ("fig12", "Fig 12 — 3PCv2 Rand∘Perm-Top tuning, K=d/n", k1k2::fig12),
+    ("fig13", "Fig 13 — 3PCv2 Rand∘Perm-Top tuning, K=0.02d", k1k2::fig13),
+    ("fig14", "Fig 14 — 3PCv4 Top-Top vs EF21, K=d/n", k1k2::fig14),
+    ("fig15", "Fig 15 — 3PCv4 Top-Top vs EF21, K=0.02d", k1k2::fig15),
+    ("fig16", "Fig 16 — 3PCv1 vs GD vs EF21 per round", quad_suite::fig16),
+    ("fig21", "Figs 21–24 — CLAG/LAG/EF21 under bit budget (logreg)", budget::run),
+    ("ablation-g0", "Ablation — g0 init policy", ablation::g0_policy),
+    ("ablation-wire", "Ablation — sparse/dense wire crossover", ablation::wire_format),
+    ("ablation-stepsize", "Ablation — theoretical vs tuned stepsize", ablation::stepsize),
+];
+
+/// Run one experiment by id (or `all`).
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    if id == "all" {
+        for (name, desc, f) in REGISTRY {
+            println!("\n========== {name}: {desc} ==========");
+            f(args)?;
+        }
+        return Ok(());
+    }
+    let (_, _, f) = REGISTRY
+        .iter()
+        .find(|(name, _, _)| *name == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' — `threepc exp list` to see all"))?;
+    f(args)
+}
+
+/// Print the registry.
+pub fn list() {
+    let mut t = crate::util::table::Table::new("experiments", &["id", "reproduces"]);
+    for (name, desc, _) in REGISTRY {
+        t.row(&[name.to_string(), desc.to_string()]);
+    }
+    println!("{}", t.render());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_resolvable() {
+        let mut seen = std::collections::HashSet::new();
+        for (name, _, _) in REGISTRY {
+            assert!(seen.insert(name), "duplicate id {name}");
+        }
+        let args = Args::parse(Vec::<String>::new());
+        assert!(run("definitely-not-an-exp", &args).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! The synthetic-quadratic experiment family (Appendix E.2):
+//!
+//! * `fig6` — EF21 {Top, cPerm, cRand}-K vs MARINA Perm-K;
+//! * `fig7` — MARINA {Perm, Rand}-K vs 3PCv5 Top-K vs EF21 Top-K;
+//! * `fig8`/`fig9` — 3PCv2 (RandK₁-TopK₂ and RandK₁∘PermK-TopK₂) vs the
+//!   SOTA set, K = d/n and K = 0.02·d;
+//! * `fig16` — 3PCv1 vs GD vs EF21 per communication round;
+//! * `table3` — the L±/L₋ constants (Tables 3–4).
+//!
+//! Defaults are scaled down (d = 200, two noise scales, n = 10); pass
+//! `--d 1000 --noise-scales 0,0.05,0.8,1.6,6.4 --workers 1000` for the
+//! paper's full grid.
+
+use super::common::{self, Criterion};
+use crate::coordinator::TrainConfig;
+use crate::problems::quadratic;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, SeriesSet, Table};
+use anyhow::Result;
+
+struct QuadSpec {
+    n: usize,
+    d: usize,
+    lambda: f64,
+    scales: Vec<f64>,
+    rounds: usize,
+    multipliers: Vec<f64>,
+    k: usize,
+    tol: f64,
+}
+
+impl QuadSpec {
+    fn from_args(args: &Args, k_mode: &str) -> QuadSpec {
+        let n = args.num_or("workers", 10usize);
+        let d = args.num_or("d", 200usize);
+        let k = match k_mode {
+            "dn" => (d / n).max(1),
+            _ => ((d as f64 * 0.02) as usize).max(1),
+        };
+        QuadSpec {
+            n,
+            d,
+            lambda: args.num_or("lambda", 1e-4),
+            scales: args.num_list_or("noise-scales", &[0.0, 0.8]),
+            rounds: args.num_or("rounds", 3000usize),
+            multipliers: args.num_list_or("multipliers", &[1.0, 4.0, 16.0, 64.0, 256.0]),
+            k: args.num_or("k", k),
+            tol: args.num_or("tol", 1e-3), // ‖∇f‖² ≤ 1e-7 in the paper; scaled default
+        }
+    }
+}
+
+fn run_quad_figure(exp_id: &str, args: &Args, k_mode: &str, methods_for: &dyn Fn(&QuadSpec, f64) -> Vec<(String, String)>) -> Result<()> {
+    let spec = QuadSpec::from_args(args, k_mode);
+    for &s in &spec.scales {
+        let suite = quadratic::generate(spec.n, spec.d, spec.lambda, s, 101);
+        crate::info!(
+            "{exp_id}: s={s} L-={:.3} L+={:.3} L±={:.3}",
+            suite.l_minus,
+            suite.l_plus,
+            suite.l_pm
+        );
+        let cfg = TrainConfig {
+            max_rounds: spec.rounds,
+            grad_tol: Some(spec.tol),
+            record_every: 1,
+            seed: 55,
+            ..TrainConfig::default()
+        };
+        let mut series = SeriesSet::new(
+            &format!("{exp_id} [s={s}, n={}, K={}]: ‖∇f‖² vs bits/client", spec.n, spec.k),
+            "bits",
+        );
+        for (label, spec_str) in methods_for(&spec, s) {
+            let map = crate::mechanisms::parse_mechanism(&spec_str)?;
+            let base = common::base_gamma(&suite.problem, map.as_ref());
+            let t = common::tune_stepsize(
+                &suite.problem,
+                map,
+                base,
+                &spec.multipliers,
+                &cfg,
+                Criterion::MinBitsToTol(spec.tol),
+            );
+            series.push(
+                &format!("{label} ({}x)", t.multiplier),
+                t.result.bits_gradnorm_series(),
+            );
+            crate::info!(
+                "  {label}: bits-to-tol {}",
+                fnum(t.score.unwrap_or(f64::NAN))
+            );
+        }
+        println!("{}", series.render_summary());
+        series
+            .to_table()
+            .write_csv(common::out_dir(exp_id).join(format!("s{s}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Fig. 6: EF21 sparsifiers vs MARINA Perm-K on quadratics.
+pub fn fig6(args: &Args) -> Result<()> {
+    run_quad_figure("fig6_quad_ef21", args, "dn", &|spec, _s| {
+        let k = spec.k;
+        let p = (k as f64 / spec.d as f64).clamp(0.01, 0.9);
+        vec![
+            (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+            (format!("EF21 cRand-{k}"), format!("ef21:crand{k}")),
+            ("EF21 cPerm-K".into(), "ef21:cperm".into()),
+            (format!("MARINA Perm-K p={p:.3}"), format!("marina:{p}:perm")),
+        ]
+    })
+}
+
+/// Fig. 7: MARINA variants vs 3PCv5.
+pub fn fig7(args: &Args) -> Result<()> {
+    run_quad_figure("fig7_quad_marina_v5", args, "dn", &|spec, _s| {
+        let k = spec.k;
+        let p = (k as f64 / spec.d as f64).clamp(0.01, 0.9);
+        vec![
+            (format!("MARINA Perm-K p={p:.3}"), format!("marina:{p}:perm")),
+            (format!("MARINA Rand-{k} p={p:.3}"), format!("marina:{p}:rand{k}")),
+            (format!("3PCv5 Top-{k} p={p:.3}"), format!("v5:{p}:top{k}")),
+            (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+        ]
+    })
+}
+
+/// Fig. 8 (K = d/n) and Fig. 9 (K = 0.02 d): 3PCv2 vs the SOTA set.
+pub fn fig8(args: &Args) -> Result<()> {
+    run_quad_figure("fig8_quad_v2", args, "dn", &v2_method_set)
+}
+
+pub fn fig9(args: &Args) -> Result<()> {
+    run_quad_figure("fig9_quad_v2_002d", args, "002d", &v2_method_set)
+}
+
+fn v2_method_set(spec: &QuadSpec, _s: f64) -> Vec<(String, String)> {
+    let k = spec.k;
+    let k1 = (k / 2).max(1);
+    let k2 = (k - k1).max(1);
+    let p = (k as f64 / spec.d as f64).clamp(0.01, 0.9);
+    vec![
+        (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+        (format!("MARINA Perm-K p={p:.3}"), format!("marina:{p}:perm")),
+        (format!("3PCv2 Rand{k1}-Top{k2}"), format!("v2:rand{k1}:top{k2}")),
+        (format!("3PCv2 Perm-Top{k2}"), format!("v2:perm:top{k2}")),
+        (format!("3PCv5 Top-{k} p={p:.3}"), format!("v5:{p}:top{k}")),
+    ]
+}
+
+/// Fig. 16: 3PCv1 vs GD vs EF21, per *communication round*.
+pub fn fig16(args: &Args) -> Result<()> {
+    let spec = QuadSpec::from_args(args, "002d");
+    for &s in &spec.scales {
+        let suite = quadratic::generate(spec.n, spec.d, spec.lambda, s, 101);
+        let cfg = TrainConfig {
+            max_rounds: spec.rounds,
+            grad_tol: Some(spec.tol),
+            record_every: 1,
+            seed: 56,
+            ..TrainConfig::default()
+        };
+        let k = spec.k;
+        let mut series = SeriesSet::new(
+            &format!("fig16 [s={s}]: ‖∇f‖² vs communication round"),
+            "round",
+        );
+        for (label, m) in [
+            ("GD".to_string(), "gd".to_string()),
+            (format!("3PCv1 Top-{k}"), format!("v1:top{k}")),
+            (format!("EF21 Top-{k}"), format!("ef21:top{k}")),
+        ] {
+            let map = crate::mechanisms::parse_mechanism(&m)?;
+            let base = common::base_gamma(&suite.problem, map.as_ref());
+            let t = common::tune_stepsize(
+                &suite.problem,
+                map,
+                base,
+                &spec.multipliers,
+                &cfg,
+                Criterion::MinFinalGradNorm,
+            );
+            series.push(&format!("{label} ({}x)", t.multiplier), t.result.round_gradnorm_series());
+        }
+        println!("{}", series.render_summary());
+        series
+            .to_table()
+            .write_csv(common::out_dir("fig16_v1_gd").join(format!("s{s}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Tables 3–4: the closed-form L± and L₋ constants of the generator.
+pub fn table3(args: &Args) -> Result<()> {
+    let d = args.num_or("d", 1000usize);
+    let lambda = args.num_or("lambda", 1e-6);
+    let scales = args.num_list_or("noise-scales", &[0.0, 0.05, 0.8, 1.6, 6.4]);
+    let ns = args.num_list_or("workers-grid", &[10usize, 100, 1000]);
+    let mut t_pm = Table::new(
+        "Table 3: Hessian variance L± (paper: rows n=10/100/1000 ≈ [0,.06,.9,1.79,7.17]/[0,.05,.82,1.65,6.58]/[0,.05,.81,1.62,6.48])",
+        &["n", "s=0", "s=0.05", "s=0.8", "s=1.6", "s=6.4"],
+    );
+    let mut t_m = Table::new(
+        "Table 4: L- (paper: ≈1 for small s; 3.82/0.77/0.78 at s=6.4)",
+        &["n", "s=0", "s=0.05", "s=0.8", "s=1.6", "s=6.4"],
+    );
+    for &n in &ns {
+        let mut row_pm = vec![n.to_string()];
+        let mut row_m = vec![n.to_string()];
+        for &s in &scales {
+            let suite = quadratic::generate(n, d, lambda, s, 42);
+            row_pm.push(fnum(suite.l_pm));
+            row_m.push(fnum(suite.l_minus));
+        }
+        t_pm.row(&row_pm);
+        t_m.row(&row_m);
+    }
+    println!("{}", t_pm.render());
+    println!("{}", t_m.render());
+    t_pm.write_csv(common::out_dir("table3").join("l_pm.csv"))?;
+    t_m.write_csv(common::out_dir("table3").join("l_minus.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Table 1 (the (A, B, B/A) certificates) and Table 2 (rate
+//! verification).
+//!
+//! * `table1` — prints each method's analytic (A, B, B/A) and *verifies*
+//!   inequality (6) empirically over randomized (h, y, x) triples —
+//!   the same check the per-method property tests run, surfaced as a
+//!   report.
+//! * `table2` — measures convergence *rates*: on a PŁ quadratic, LAG,
+//!   CLAG, EF21 and GD must contract linearly (fitted per-round factor
+//!   < 1); on non-convex logreg, the running-min ‖∇f‖² must decay like
+//!   O(1/T) (power-law exponent ≈ −1 or faster). These are the paper's
+//!   headline theory claims (Theorems 5.5/5.8) made measurable.
+
+use super::common;
+use crate::compressors::{Ctx, CtxInfo};
+use crate::coordinator::{train, TrainConfig};
+use crate::mechanisms::{apply_update, parse_mechanism};
+use crate::problems::quadratic;
+use crate::theory;
+use crate::util::cli::Args;
+use crate::util::linalg::dist_sq;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+/// Empirical worst observed ratio of lhs/rhs of inequality (6).
+fn empirical_3pc_slack(spec: &str, info: CtxInfo, cases: usize, draws: usize) -> Result<f64> {
+    let map = parse_mechanism(spec)?;
+    let params = map
+        .params(&info)
+        .ok_or_else(|| anyhow::anyhow!("{spec} has no (A,B) certificate"))?;
+    let mut meta = Pcg64::seed(0xb0b);
+    let mut worst: f64 = 0.0;
+    for case in 0..cases {
+        let d = info.dim;
+        let y: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let spread = if case % 2 == 0 { 0.2 } else { 2.0 };
+        let h: Vec<f32> = y.iter().map(|&v| v + meta.normal_ms(0.0, spread) as f32).collect();
+        let x: Vec<f32> = y.iter().map(|&v| v + meta.normal_ms(0.0, 0.8) as f32).collect();
+        let mut acc = 0.0;
+        for t in 0..draws {
+            let mut rng = Pcg64::new(17, (case * draws + t) as u64);
+            let mut ctx = Ctx::new(info, &mut rng, (case * draws + t) as u64);
+            let u = map.apply(&h, &y, &x, &mut ctx);
+            acc += dist_sq(&apply_update(&h, &u), &x);
+        }
+        let lhs = acc / draws as f64;
+        let rhs = (1.0 - params.a) * dist_sq(&h, &y) + params.b * dist_sq(&x, &y) + 1e-12;
+        worst = worst.max(lhs / rhs);
+    }
+    Ok(worst)
+}
+
+pub fn table1(args: &Args) -> Result<()> {
+    let d = args.num_or("d", 16usize);
+    let n = args.num_or("workers", 4usize);
+    let info = CtxInfo { dim: d, n_workers: n, worker_id: 0 };
+    let draws = args.num_or("draws", 2000usize);
+    let mut t = Table::new(
+        "Table 1: 3PC certificates (A, B, B/A) + empirical check of inequality (6) — max lhs/rhs over random (h,y,x) must be ≤ ~1",
+        &["method", "A", "B", "B/A", "max lhs/rhs"],
+    );
+    let specs: Vec<(&str, String)> = vec![
+        ("EF21 Top-K", format!("ef21:top{}", d / 4)),
+        ("LAG ζ=2", "lag:2.0".to_string()),
+        ("CLAG Top-K ζ=2", format!("clag:top{}:2.0", d / 4)),
+        ("3PCv1", format!("v1:top{}", d / 4)),
+        ("3PCv2 Rand-Top", format!("v2:rand{}:top{}", d / 2, d / 4)),
+        ("3PCv3 (EF21;Top)", format!("v3:ef21:top{};top{}", d / 4, d / 4)),
+        ("3PCv4 Top-Top", format!("v4:top{}:top{}", d / 4, d / 4)),
+        ("3PCv5 p=.5 Top-K", format!("v5:0.5:top{}", d / 4)),
+        ("MARINA p=.5 Rand-K (n=1 cert.)", format!("marina:0.5:rand{}", d / 4)),
+        ("GD", "gd".to_string()),
+    ];
+    for (label, spec) in specs {
+        let map = parse_mechanism(&spec)?;
+        // MARINA's certificate is aggregate-level; verify at n = 1.
+        let check_info = if spec.starts_with("marina") { CtxInfo { n_workers: 1, ..info } } else { info };
+        let p = map.params(&check_info).unwrap();
+        let slack = empirical_3pc_slack(&spec, check_info, 30, draws)?;
+        t.row(&[
+            label.to_string(),
+            fnum(p.a),
+            fnum(p.b),
+            fnum(p.ratio()),
+            fnum(slack),
+        ]);
+        anyhow::ensure!(
+            slack <= 1.1,
+            "{label}: inequality (6) violated empirically (ratio {slack})"
+        );
+    }
+    println!("{}", t.render());
+    t.write_csv(common::out_dir("table1").join("table1.csv"))?;
+    println!("All certificates verified: every method satisfies its Table-1 (A,B).");
+    Ok(())
+}
+
+pub fn table2(args: &Args) -> Result<()> {
+    let n = args.num_or("workers", 10usize);
+    let d = args.num_or("d", 100usize);
+    let mu = args.num_or("mu", 0.05f64);
+    let rounds = args.num_or("rounds", 1500usize);
+    let suite = quadratic::generate(n, d, mu, 0.5, 7);
+    let s = suite.problem.smoothness.unwrap();
+    let mut t = Table::new(
+        "Table 2 (verification): fitted linear rate factor on a PŁ quadratic (must be < 1 — linear convergence, the paper's new LAG/CLAG result) and O(1/T) exponent on nonconvex logreg (must be ≤ ~-0.8)",
+        &["method", "PL rate factor", "theory (1-γμ)", "logreg 1/T exponent"],
+    );
+    let ds = crate::data::synthetic_libsvm("ijcnn1", false, 3)?;
+    let logreg = common::logreg_problem(&ds, 10, 0.1, 1);
+    for (label, spec) in [
+        ("GD", "gd".to_string()),
+        ("EF21 Top-K", format!("ef21:top{}", d / 10)),
+        ("LAG ζ=4 (NEW rate)", "lag:4.0".to_string()),
+        ("CLAG Top-K ζ=4 (NEW rate)", format!("clag:top{}:4.0", d / 10)),
+    ] {
+        let map = parse_mechanism(&spec)?;
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: 0 };
+        let params = map.params(&info).unwrap();
+        let gamma = theory::stepsize_pl(params, s, mu);
+        let cfg = TrainConfig {
+            gamma,
+            max_rounds: rounds,
+            record_every: 1,
+            seed: 3,
+            ..TrainConfig::default()
+        };
+        let r = train(&suite.problem, map.clone(), &cfg);
+        // PŁ: fit contraction of ‖∇f‖² ≥ 2μ(f−f*) — gradient norm² is a
+        // proxy with the same geometric rate.
+        let gns: Vec<f64> = r.records.iter().map(|rec| rec.grad_norm_sq).collect();
+        let factor = stats::linear_rate_factor(&gns, 1e-24).unwrap_or(f64::NAN);
+        // Nonconvex logreg: O(1/T) on the running-min grad norm².
+        let base = common::base_gamma(&logreg, map.as_ref());
+        let cfg2 = TrainConfig {
+            gamma: base,
+            max_rounds: rounds.min(800),
+            record_every: 1,
+            seed: 3,
+            ..TrainConfig::default()
+        };
+        let r2 = train(&logreg, map, &cfg2);
+        let exponent = stats::power_law_exponent(&r2.running_min_gradnorm()).unwrap_or(f64::NAN);
+        t.row(&[
+            label.to_string(),
+            fnum(factor),
+            fnum(1.0 - gamma * mu),
+            fnum(exponent),
+        ]);
+        anyhow::ensure!(
+            factor < 1.0,
+            "{label}: expected linear PŁ convergence, fitted factor {factor}"
+        );
+    }
+    println!("{}", t.render());
+    t.write_csv(common::out_dir("table2").join("rates.csv"))?;
+    println!("Linear PŁ rates confirmed for LAG/CLAG (Table 2's NEW rows) — no G-boundedness assumptions used.");
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! # threepc — Three Point Compressors for communication-efficient
+//! distributed training
+//!
+//! A Rust + JAX + Pallas reproduction of *"3PC: Three Point Compressors
+//! for Communication-Efficient Distributed Training and a Better Theory
+//! for Lazy Aggregation"* (Richtárik et al., ICML 2022).
+//!
+//! Architecture (three layers, Python only at build time):
+//!
+//! * **L3 (this crate)** — the distributed coordinator: the 3PC mechanism
+//!   family ([`mechanisms`]), contractive/unbiased compressors
+//!   ([`compressors`]), the leader/worker training runtime with exact bit
+//!   accounting ([`coordinator`]), the training objectives ([`problems`],
+//!   [`data`]), convergence theory ([`theory`]) and the experiment
+//!   harness that regenerates every paper figure/table ([`experiments`]).
+//! * **L2/L1 (python/compile)** — the objectives as JAX programs calling
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads those artifacts through the PJRT C API (the
+//!   `xla` crate) so the Rust binary executes the JAX-authored gradient
+//!   computations without Python.
+
+pub mod compressors;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod mechanisms;
+pub mod problems;
+pub mod runtime;
+pub mod testkit;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,266 @@
+//! `threepc` — leader entrypoint and experiment CLI.
+//!
+//! ```text
+//! threepc exp list                        # the paper-artifact registry
+//! threepc exp fig2 --dataset ijcnn1       # regenerate a figure/table
+//! threepc exp all                         # the whole scaled-down suite
+//! threepc train --problem quad --mech clag:top4:4.0 --gamma-mult 16
+//! threepc train --problem logreg --backend hlo ...   # PJRT/HLO gradients
+//! threepc info                            # build/artifact status
+//! ```
+
+use anyhow::Result;
+use std::sync::Arc;
+use threepc::coordinator::{train, TrainConfig};
+use threepc::data;
+use threepc::experiments;
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::{Distributed, LocalProblem};
+use threepc::runtime::{DeviceService, Manifest};
+use threepc::util::cli::Args;
+use threepc::util::logging;
+use threepc::util::table::fnum;
+
+fn main() {
+    logging::init_from_env();
+    let args = Args::from_env();
+    if let Some(level) = args.get("log-level") {
+        logging::set_level_str(level);
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match dispatch(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "exp" => {
+            let id = args.positional().get(1).map(|s| s.as_str()).unwrap_or("list");
+            if id == "list" {
+                experiments::list();
+                Ok(())
+            } else {
+                experiments::run(id, args)
+            }
+        }
+        "train" => cmd_train(args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "threepc — 3PC: Three Point Compressors (ICML 2022) reproduction\n\
+         \n\
+         USAGE:\n\
+           threepc exp list | <id> [flags]   regenerate paper figures/tables\n\
+           threepc train [flags]             one training run\n\
+           threepc info                      build + artifact status\n\
+         \n\
+         train flags:\n\
+           --problem quad|logreg|ae   (default quad)\n\
+           --mech <spec>              e.g. ef21:top16, clag:top16:4.0, lag:4.0,\n\
+                                      v2:rand8:top8, v5:0.1:top8, marina:0.1:rand8, gd\n\
+           --backend native|hlo       gradient execution path (default native)\n\
+           --workers N --rounds T --gamma G | --gamma-mult M\n\
+           --dataset phishing|w6a|a9a|ijcnn1 (logreg)\n\
+           --d D --noise-scale S      (quad)\n\
+           --tol EPS --loss-every K --seed S --threads P --init full|zero\n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("threepc {} — three-layer Rust+JAX+Pallas build", env!("CARGO_PKG_VERSION"));
+    match Manifest::load(threepc::runtime::default_artifacts_dir()) {
+        Ok(m) => {
+            println!("artifacts: OK ({})", m.dir.display());
+            for a in ["logreg_phishing", "logreg_w6a", "logreg_a9a", "logreg_ijcnn1", "ae_grad", "quad_grad"] {
+                println!("  {a}: {}", if m.has(a) { "present" } else { "MISSING" });
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    match DeviceService::start() {
+        Ok(_) => println!("PJRT CPU client: OK"),
+        Err(e) => println!("PJRT CPU client: FAILED ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mech_spec = args.str_or("mech", "ef21:top16");
+    let map = parse_mechanism(&mech_spec)?;
+    let backend = args.str_or("backend", "native");
+    let n = args.num_or("workers", 10usize);
+
+    // Keep the device service alive for HLO-backed problems.
+    let mut _service: Option<DeviceService> = None;
+
+    let problem: Distributed = match args.str_or("problem", "quad").as_str() {
+        "quad" => {
+            let d = args.num_or("d", 1000usize);
+            let suite = threepc::problems::quadratic::generate(
+                n,
+                d,
+                args.num_or("lambda", 1e-4),
+                args.num_or("noise-scale", 0.8),
+                args.num_or("seed", 42u64),
+            );
+            if backend == "hlo" {
+                let manifest = Manifest::load(threepc::runtime::default_artifacts_dir())?;
+                let svc = DeviceService::start()?;
+                let locals: Vec<Arc<dyn LocalProblem>> = suite
+                    .locals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, q)| {
+                        Ok(Arc::new(threepc::runtime::HloQuad::new(
+                            svc.handle(),
+                            &manifest,
+                            &format!("w{i}"),
+                            q.nu,
+                            q.shift,
+                            q.b.clone(),
+                        )?) as Arc<dyn LocalProblem>)
+                    })
+                    .collect::<Result<_>>()?;
+                _service = Some(svc);
+                let mut p = Distributed::new(locals, suite.problem.x0.clone());
+                p.smoothness = suite.problem.smoothness;
+                p.mu = suite.problem.mu;
+                p
+            } else {
+                suite.problem
+            }
+        }
+        "logreg" => {
+            let dataset = args.str_or("dataset", "ijcnn1");
+            let ds = data::libsvm_or_synthetic(&dataset, "data", args.flag("full-size"), 7)?;
+            if backend == "hlo" {
+                let manifest = Manifest::load(threepc::runtime::default_artifacts_dir())?;
+                let svc = DeviceService::start()?;
+                let mut rng = threepc::util::rng::Pcg64::seed(0x700c ^ 11);
+                let shards = data::even_shards(ds.m, n, &mut rng);
+                let locals: Vec<Arc<dyn LocalProblem>> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, idx)| {
+                        let sub = ds.subset(idx, "shard");
+                        Ok(Arc::new(threepc::runtime::HloLogReg::new(
+                            svc.handle(),
+                            &manifest,
+                            &dataset,
+                            &format!("w{i}"),
+                            sub.x,
+                            sub.y,
+                        )?) as Arc<dyn LocalProblem>)
+                    })
+                    .collect::<Result<_>>()?;
+                _service = Some(svc);
+                Distributed::new(locals, vec![0.0f32; ds.d])
+            } else {
+                experiments::common::logreg_problem(&ds, n, 0.1, 11)
+            }
+        }
+        "ae" => {
+            let d_e = args.num_or("encode-dim", 16usize);
+            let samples = args.num_or("samples", 10 * n.max(10));
+            let ds = data::synthetic_mnist(samples, 3);
+            if backend == "hlo" {
+                let manifest = Manifest::load(threepc::runtime::default_artifacts_dir())?;
+                let svc = DeviceService::start()?;
+                let mut rng = threepc::util::rng::Pcg64::seed(5);
+                let shards = data::homogeneity_shards(ds.m, n, 0.0, &mut rng);
+                let locals: Vec<Arc<dyn LocalProblem>> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, idx)| {
+                        let sub = ds.subset(idx, "shard");
+                        Ok(Arc::new(threepc::runtime::HloAutoencoder::new(
+                            svc.handle(),
+                            &manifest,
+                            &format!("w{i}"),
+                            sub.x,
+                        )?) as Arc<dyn LocalProblem>)
+                    })
+                    .collect::<Result<_>>()?;
+                _service = Some(svc);
+                let dim = 2 * ds.d * d_e;
+                let mut init_rng = threepc::util::rng::Pcg64::seed(5 ^ 0xae);
+                let x0: Vec<f32> = (0..dim).map(|_| init_rng.normal_ms(0.0, 0.05) as f32).collect();
+                Distributed::new(locals, x0)
+            } else {
+                experiments::autoencoder::ae_problem(&ds, n, &args.str_or("homogeneity", "0"), d_e, 5)?
+            }
+        }
+        other => anyhow::bail!("unknown problem '{other}' (quad|logreg|ae)"),
+    };
+
+    let base = experiments::common::base_gamma(&problem, map.as_ref());
+    let gamma = args
+        .get("gamma")
+        .map(|g| g.parse::<f64>())
+        .transpose()?
+        .unwrap_or(base * args.num_or("gamma-mult", 1.0));
+    let cfg = TrainConfig {
+        gamma,
+        max_rounds: args.num_or("rounds", 500usize),
+        grad_tol: args.get("tol").map(|t| t.parse()).transpose()?,
+        eval_loss_every: args.num_or("loss-every", 0usize),
+        record_every: args.num_or("record-every", 1usize),
+        seed: args.num_or("seed", 42u64),
+        threads: args.num_or("threads", 0usize),
+        init: args.str_or("init", "full").parse()?,
+        ..TrainConfig::default()
+    };
+    println!(
+        "threepc train: mech={mech_spec} backend={backend} n={} d={} gamma={} rounds={}",
+        problem.n_workers(),
+        problem.dim(),
+        fnum(cfg.gamma),
+        cfg.max_rounds
+    );
+    let r = train(&problem, map, &cfg);
+    let mut t = threepc::util::table::Table::new(
+        "training trace (thinned)",
+        &["round", "|grad f|^2", "G^t", "bits/worker", "skip%", "loss"],
+    );
+    let step = (r.records.len() / 15).max(1);
+    for rec in r.records.iter().step_by(step) {
+        t.row(&[
+            rec.t.to_string(),
+            fnum(rec.grad_norm_sq),
+            fnum(rec.g_err),
+            fnum(rec.bits_up_cum),
+            format!("{:.0}", rec.skipped_frac * 100.0),
+            rec.loss.map(fnum).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} after {} rounds in {:.2?}: ‖∇f‖²={}, {} bits/worker, skip rate {:.1}%",
+        if r.converged {
+            "converged"
+        } else if r.diverged {
+            "DIVERGED"
+        } else {
+            "stopped"
+        },
+        r.rounds_run,
+        r.elapsed,
+        fnum(r.final_grad_norm_sq),
+        fnum(r.total_bits_up as f64 / problem.n_workers() as f64),
+        r.mean_skip_rate() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Baselines: exact gradient descent and *naive* DCGD (Eq. 2 with the
+//! static mechanism `M_i^t ≡ C`, Eq. 3).
+//!
+//! GD is the A = 1, B = 0 corner of the 3PC framework (identity map).
+//! Naive DCGD is **not** a 3PC compressor — its error `‖C(x) − x‖²`
+//! does not shrink along the path, which is precisely the divergence
+//! problem §2.1 describes and EF21/3PC fix; we keep it as the cautionary
+//! baseline (`params()` returns `None`, so no theoretical stepsize
+//! exists and the harness must be given one explicitly).
+
+use super::{MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo};
+
+/// Exact gradient descent: `g_i^{t+1} = ∇f_i(x^{t+1})`, dense wire cost.
+pub struct Gd;
+
+impl ThreePointMap for Gd {
+    fn name(&self) -> String {
+        "GD".into()
+    }
+
+    fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
+        Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 }
+    }
+
+    fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
+        Some(MechParams { a: 1.0, b: 0.0 })
+    }
+}
+
+/// Naive DCGD: `g_i^{t+1} = C(∇f_i(x^{t+1}))` — static compression.
+pub struct NaiveDcgd {
+    c: Box<dyn Contractive>,
+}
+
+impl NaiveDcgd {
+    pub fn new(c: Box<dyn Contractive>) -> NaiveDcgd {
+        NaiveDcgd { c }
+    }
+}
+
+impl ThreePointMap for NaiveDcgd {
+    fn name(&self) -> String {
+        format!("DCGD({})", self.c.name())
+    }
+
+    fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let msg = self.c.compress(x, ctx);
+        let bits = msg.wire_bits();
+        Update::Replace { g: msg.to_dense(), bits }
+    }
+
+    fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::TopK;
+    use crate::mechanisms::proptests::check_3pc_inequality;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gd_is_exact() {
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(3);
+        let u = Gd.apply(&[0.0; 3], &[0.0; 3], &[1.0, 2.0, 3.0], &mut Ctx::new(info, &mut rng, 0));
+        match u {
+            Update::Replace { g, bits } => {
+                assert_eq!(g, vec![1.0, 2.0, 3.0]);
+                assert_eq!(bits, 96);
+            }
+            other => panic!("{other:?}"),
+        }
+        check_3pc_inequality(&Gd, CtxInfo::single(6), 30, 1, 1, 1e-12);
+    }
+
+    #[test]
+    fn dcgd_has_no_certificate() {
+        let d = NaiveDcgd::new(Box::new(TopK::new(1)));
+        assert!(d.params(&CtxInfo::single(4)).is_none());
+    }
+
+    #[test]
+    fn dcgd_compresses_the_raw_gradient() {
+        let d = NaiveDcgd::new(Box::new(TopK::new(1)));
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(3);
+        // Even when h already equals x, DCGD still throws information away
+        // — the pathology that 3PC repairs.
+        let x = [3.0f32, -1.0, 0.5];
+        let u = d.apply(&x, &x, &x, &mut Ctx::new(info, &mut rng, 0));
+        match u {
+            Update::Replace { g, .. } => assert_eq!(g, vec![3.0, 0.0, 0.0]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! LAG (Algorithm 3; Chen et al. 2018, simplified per the paper) and the
+//! paper's new CLAG (Algorithm 4).
+//!
+//! LAG: `C_{h,y}(x) = x` if `‖x − h‖² > ζ‖x − y‖²` else `h`   (36)
+//!   — Lemma C.5: A = 1, B = ζ.
+//!
+//! CLAG: `C_{h,y}(x) = h + C(x − h)` if triggered, else `h`   (41)
+//!   — Lemma C.8 (optimal s*): A = 1 − √(1−α),
+//!     B = max{(1−α)/(1−√(1−α)), ζ}.
+//!
+//! The trigger fires when the stored estimate drifted from the fresh
+//! gradient by more than ζ× the gradient's own movement; otherwise the
+//! worker stays silent (zero payload bits — the essence of lazy
+//! aggregation).
+
+use super::{ef21::Ef21, MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo};
+use crate::util::linalg::dist_sq;
+
+/// The shared trigger predicate `‖x − h‖² > ζ‖x − y‖²`.
+#[inline]
+pub fn lag_trigger(h: &[f32], y: &[f32], x: &[f32], zeta: f64) -> bool {
+    dist_sq(x, h) > zeta * dist_sq(x, y)
+}
+
+pub struct Lag {
+    pub zeta: f64,
+}
+
+impl Lag {
+    pub fn new(zeta: f64) -> Lag {
+        assert!(zeta >= 0.0, "ζ must be non-negative");
+        Lag { zeta }
+    }
+}
+
+impl ThreePointMap for Lag {
+    fn name(&self) -> String {
+        format!("LAG(zeta={})", self.zeta)
+    }
+
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
+        if lag_trigger(h, y, x, self.zeta) {
+            Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 }
+        } else {
+            Update::Keep
+        }
+    }
+
+    fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
+        Some(MechParams { a: 1.0, b: self.zeta })
+    }
+}
+
+pub struct Clag {
+    c: Box<dyn Contractive>,
+    pub zeta: f64,
+}
+
+impl Clag {
+    pub fn new(c: Box<dyn Contractive>, zeta: f64) -> Clag {
+        assert!(zeta >= 0.0, "ζ must be non-negative");
+        Clag { c, zeta }
+    }
+}
+
+impl ThreePointMap for Clag {
+    fn name(&self) -> String {
+        format!("CLAG({},zeta={})", self.c.name(), self.zeta)
+    }
+
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        if !lag_trigger(h, y, x, self.zeta) {
+            return Update::Keep;
+        }
+        super::ef21::SCRATCH.with(|s| {
+            let mut residual = s.borrow_mut();
+            residual.resize(x.len(), 0.0);
+            crate::util::linalg::sub(x, h, &mut residual);
+            let inc = self.c.compress(&residual, ctx);
+            let bits = inc.wire_bits();
+            Update::Increment { inc, bits }
+        })
+    }
+
+    fn params(&self, info: &CtxInfo) -> Option<MechParams> {
+        let alpha = self.c.alpha(info);
+        let ef = Ef21::params_for_alpha(alpha);
+        Some(MechParams { a: ef.a, b: ef.b.max(self.zeta) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::TopK;
+    use crate::mechanisms::proptests::check_3pc_inequality;
+    use crate::mechanisms::{apply_update, update_bits};
+    use crate::util::rng::Pcg64;
+
+    fn ctx(rng: &mut Pcg64) -> Ctx<'_> {
+        Ctx::new(CtxInfo::single(4), rng, 0)
+    }
+
+    #[test]
+    fn lag_fires_and_skips() {
+        let lag = Lag::new(1.0);
+        let mut rng = Pcg64::seed(0);
+        // h far from x, y close to x → fire.
+        let h = [0.0f32; 4];
+        let y = [1.0f32, 1.0, 1.0, 1.1];
+        let x = [1.0f32; 4];
+        let u = lag.apply(&h, &y, &x, &mut ctx(&mut rng));
+        assert!(matches!(&u, Update::Replace { g, bits } if g == &x.to_vec() && *bits == 128));
+        // h == x → never fires (0 > ζ·anything is false).
+        let u = lag.apply(&x, &y, &x, &mut ctx(&mut rng));
+        assert!(matches!(u, Update::Keep));
+        assert_eq!(update_bits(&u), 0);
+    }
+
+    #[test]
+    fn lag_zeta_zero_always_fires_unless_exact() {
+        // ζ = 0: fires whenever ‖x−h‖² > 0 → behaves like GD.
+        let lag = Lag::new(0.0);
+        let mut rng = Pcg64::seed(0);
+        let u = lag.apply(&[0.0; 4], &[0.5; 4], &[1.0; 4], &mut ctx(&mut rng));
+        assert!(matches!(u, Update::Replace { .. }));
+    }
+
+    #[test]
+    fn clag_reduces_to_lag_with_identity() {
+        use crate::compressors::Identity;
+        let clag = Clag::new(Box::new(Identity), 2.0);
+        let lag = Lag::new(2.0);
+        let mut rng = Pcg64::seed(7);
+        let h = [0.0f32, 1.0, -1.0, 2.0];
+        let y = [0.5f32, 0.5, 0.5, 0.5];
+        let x = [1.0f32, -1.0, 0.0, 3.0];
+        let uc = clag.apply(&h, &y, &x, &mut ctx(&mut rng));
+        let ul = lag.apply(&h, &y, &x, &mut ctx(&mut rng));
+        assert_eq!(apply_update(&h, &uc), apply_update(&h, &ul));
+    }
+
+    #[test]
+    fn clag_reduces_to_ef21_with_zeta_zero() {
+        use crate::mechanisms::Ef21;
+        let clag = Clag::new(Box::new(TopK::new(2)), 0.0);
+        let ef = Ef21::new(Box::new(TopK::new(2)));
+        let mut rng = Pcg64::seed(9);
+        let h = [0.0f32, 1.0, -1.0, 2.0];
+        let y = [0.5f32, 0.5, 0.5, 0.5];
+        let x = [1.0f32, -1.0, 0.0, 3.0];
+        let uc = clag.apply(&h, &y, &x, &mut ctx(&mut rng));
+        let ue = ef.apply(&h, &y, &x, &mut ctx(&mut rng));
+        assert_eq!(apply_update(&h, &uc), apply_update(&h, &ue));
+    }
+
+    #[test]
+    fn table1_constants() {
+        let info = CtxInfo::single(16);
+        let lag = Lag::new(5.0);
+        assert_eq!(lag.params(&info).unwrap(), MechParams { a: 1.0, b: 5.0 });
+        // CLAG with α = 3/4: EF21 part gives A = 1/2, B = 1/2; ζ = 3
+        // dominates the max.
+        let clag = Clag::new(Box::new(TopK::new(12)), 3.0);
+        let p = clag.params(&info).unwrap();
+        assert!((p.a - 0.5).abs() < 1e-12);
+        assert!((p.b - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_3pc_inequality_lag() {
+        check_3pc_inequality(&Lag::new(1.5), CtxInfo::single(8), 60, 1, 11, 1e-9);
+    }
+
+    #[test]
+    fn prop_3pc_inequality_clag() {
+        let map = Clag::new(Box::new(TopK::new(3)), 2.0);
+        check_3pc_inequality(&map, CtxInfo::single(10), 60, 1, 13, 1e-9);
+    }
+}

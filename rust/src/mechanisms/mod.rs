@@ -1,0 +1,386 @@
+//! The 3PC mechanism family (paper §4, Algorithms 1–10).
+//!
+//! A *three point compressor* (Definition 4.1) is a map
+//! `C_{h,y}(x)` satisfying
+//!
+//! ```text
+//! E‖C_{h,y}(x) − x‖² ≤ (1 − A)‖h − y‖² + B‖x − y‖²        (6)
+//! ```
+//!
+//! for constants `0 < A ≤ 1`, `B ≥ 0`. The communication mechanism (8)
+//! instantiates it along the optimization path with `h = g_i^t`
+//! (the previous transmitted estimate) and `y = ∇f_i(x^t)` (the previous
+//! local gradient):
+//!
+//! ```text
+//! g_i^{t+1} = C_{g_i^t, ∇f_i(x^t)}(∇f_i(x^{t+1}))          (8)/(13)
+//! ```
+//!
+//! [`ThreePointMap`] is the stateless map; [`MechWorker`] is the stateful
+//! per-worker wrapper that carries `h` and `y` and produces the wire
+//! [`Update`]s the coordinator aggregates. Every method in Table 1 is a
+//! `ThreePointMap` implementation in a submodule.
+
+pub mod dcgd;
+pub mod ef21;
+pub mod lag;
+pub mod marina;
+pub mod v1;
+pub mod v2;
+pub mod v3;
+pub mod v4;
+
+pub use dcgd::{Gd, NaiveDcgd};
+pub use ef21::Ef21;
+pub use lag::{Clag, Lag};
+pub use marina::{Marina, V5};
+pub use v1::V1;
+pub use v2::V2;
+pub use v3::V3;
+pub use v4::V4;
+
+use crate::compressors::{CVec, Ctx, CtxInfo};
+use crate::util::linalg;
+
+/// The constants `(A, B)` of inequality (6), per Table 1 (with the
+/// optimal `s*` already substituted where the method has a free `s`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MechParams {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl MechParams {
+    /// The ratio `B/A` appearing in every rate of Table 1.
+    pub fn ratio(&self) -> f64 {
+        if self.b == 0.0 {
+            0.0
+        } else {
+            self.b / self.a
+        }
+    }
+}
+
+/// What a mechanism did in a round, in terms the server can apply and the
+/// accountant can bill.
+#[derive(Debug, Clone)]
+pub enum Update {
+    /// `g_i^{t+1} = g_i^t + inc` — the increment *is* the wire message
+    /// (EF21-style). `bits` is its exact wire cost.
+    Increment { inc: CVec, bits: u64 },
+    /// `g_i^{t+1} = g` — state replaced; `bits` covers everything that
+    /// had to cross the wire to let the server reconstruct it (LAG fire:
+    /// the dense gradient; 3PCv2: both compressed messages; 3PCv1: the
+    /// dense shift plus the compressed difference).
+    Replace { g: Vec<f32>, bits: u64 },
+    /// `g_i^{t+1} = g_i^t` — lazy-aggregation skip. Costs 0 payload bits
+    /// (the 1-bit skip flag is charged by the protocol layer).
+    Keep,
+}
+
+/// A three point compressor: the stateless map of Definition 4.1.
+pub trait ThreePointMap: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Apply `C_{h,y}(x)` and report what crossed the wire.
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update;
+
+    /// The `(A, B)` certificate of inequality (6). `None` for baselines
+    /// that are *not* 3PC compressors (naive DCGD).
+    fn params(&self, info: &CtxInfo) -> Option<MechParams>;
+
+    /// Whether the method requires a round-shared coin/permutation (the
+    /// coordinator threads a per-round seed through `Ctx` regardless;
+    /// this is informational).
+    fn uses_shared_randomness(&self) -> bool {
+        false
+    }
+}
+
+/// Materialise the new state `g_i^{t+1}` an [`Update`] encodes.
+pub fn apply_update(h: &[f32], u: &Update) -> Vec<f32> {
+    match u {
+        Update::Increment { inc, .. } => {
+            let mut g = h.to_vec();
+            inc.add_into(&mut g);
+            g
+        }
+        Update::Replace { g, .. } => g.clone(),
+        Update::Keep => h.to_vec(),
+    }
+}
+
+/// Payload bits of an update.
+pub fn update_bits(u: &Update) -> u64 {
+    match u {
+        Update::Increment { bits, .. } | Update::Replace { bits, .. } => *bits,
+        Update::Keep => 0,
+    }
+}
+
+/// Stateful per-worker wrapper: owns `h = g_i^t` and `y = ∇f_i(x^t)` and
+/// advances them per round (Algorithm 1 lines 6–8).
+pub struct MechWorker {
+    map: std::sync::Arc<dyn ThreePointMap>,
+    /// `g_i^t` — the state mirrored by the server through the updates.
+    h: Vec<f32>,
+    /// `y = ∇f_i(x^t)` — the previous local gradient.
+    y: Vec<f32>,
+}
+
+impl MechWorker {
+    /// `g0` is the starting vector `g_i^0` (known to server and worker);
+    /// `grad0 = ∇f_i(x^0)`.
+    pub fn new(map: std::sync::Arc<dyn ThreePointMap>, g0: Vec<f32>, grad0: Vec<f32>) -> MechWorker {
+        assert_eq!(g0.len(), grad0.len());
+        MechWorker { map, h: g0, y: grad0 }
+    }
+
+    pub fn g(&self) -> &[f32] {
+        &self.h
+    }
+
+    pub fn map_name(&self) -> String {
+        self.map.name()
+    }
+
+    /// One round: consume `∇f_i(x^{t+1})`, emit the wire update, advance
+    /// internal state. Returns `(update, ‖g_i^{t+1} − ∇f_i(x^{t+1})‖²)`;
+    /// the second term is this worker's contribution to `G^t` (Eq. 15),
+    /// which the rate-verification experiments track.
+    pub fn round(&mut self, grad_new: &[f32], ctx: &mut Ctx<'_>) -> (Update, f64) {
+        let mut unused = Vec::new();
+        self.round_acc(grad_new, ctx, &mut unused)
+    }
+
+    /// Like [`Self::round`], but additionally folds this worker's delta
+    /// `g_i^{t+1} − g_i^t` into `delta_acc` (the orchestrator's per-thread
+    /// f64 partial sum) without materialising intermediate copies.
+    /// `delta_acc` may be empty (no accumulation) or of length `d`.
+    pub fn round_acc(
+        &mut self,
+        grad_new: &[f32],
+        ctx: &mut Ctx<'_>,
+        delta_acc: &mut Vec<f64>,
+    ) -> (Update, f64) {
+        let update = self.map.apply(&self.h, &self.y, grad_new, ctx);
+        if !delta_acc.is_empty() {
+            debug_assert_eq!(delta_acc.len(), self.h.len());
+            match &update {
+                Update::Keep => {}
+                Update::Increment { inc, .. } => match inc {
+                    CVec::Zero { .. } => {}
+                    CVec::Dense(v) => {
+                        for (a, &x) in delta_acc.iter_mut().zip(v) {
+                            *a += x as f64;
+                        }
+                    }
+                    CVec::Sparse { idx, val, .. } => {
+                        for (&i, &v) in idx.iter().zip(val) {
+                            delta_acc[i as usize] += v as f64;
+                        }
+                    }
+                },
+                Update::Replace { g, .. } => {
+                    for i in 0..g.len() {
+                        delta_acc[i] += g[i] as f64 - self.h[i] as f64;
+                    }
+                }
+            }
+        }
+        // Advance h in place (perf: `apply_update` would clone a fresh
+        // d-vector per worker-round — ~10 MB/round at n=100, d=25088;
+        // see EXPERIMENTS.md §Perf iteration 1).
+        match &update {
+            Update::Keep => {}
+            Update::Increment { inc, .. } => inc.add_into(&mut self.h),
+            Update::Replace { g, .. } => self.h.copy_from_slice(g),
+        }
+        self.y.copy_from_slice(grad_new);
+        let gerr = linalg::dist_sq(&self.h, grad_new);
+        (update, gerr)
+    }
+}
+
+/// Parse a mechanism spec into a factory shared across workers.
+///
+/// Grammar (`<c>` = contractive spec, `<q>` = unbiased spec, see
+/// [`crate::compressors`]):
+///
+/// * `gd` — exact gradients (gradient descent);
+/// * `dcgd:<c>` — naive DCGD with a contractive compressor (divergence
+///   baseline; not a 3PC compressor);
+/// * `ef21:<c>` — Algorithm 2;
+/// * `lag:<ζ>` — Algorithm 3;
+/// * `clag:<c>:<ζ>` — Algorithm 4;
+/// * `v1:<c>` — Algorithm 5;
+/// * `v2:<q>:<c>` — Algorithm 6;
+/// * `v3:<inner-spec>;<c>` — Algorithm 7 (inner spec is any 3PC spec);
+/// * `v4:<c2>:<c1>` — Algorithm 8;
+/// * `v5:<p>:<c>` — Algorithm 9 (biased MARINA);
+/// * `marina:<p>:<q>` — Algorithm 10.
+pub fn parse_mechanism(spec: &str) -> anyhow::Result<std::sync::Arc<dyn ThreePointMap>> {
+    use crate::compressors::{parse_contractive, parse_unbiased};
+    let s = spec.trim();
+    if s == "gd" {
+        return Ok(std::sync::Arc::new(Gd));
+    }
+    if let Some(rest) = s.strip_prefix("dcgd:") {
+        return Ok(std::sync::Arc::new(NaiveDcgd::new(parse_contractive(rest)?)));
+    }
+    if let Some(rest) = s.strip_prefix("ef21:") {
+        return Ok(std::sync::Arc::new(Ef21::new(parse_contractive(rest)?)));
+    }
+    if let Some(rest) = s.strip_prefix("lag:") {
+        return Ok(std::sync::Arc::new(Lag::new(rest.parse()?)));
+    }
+    if let Some(rest) = s.strip_prefix("clag:") {
+        let (c, z) = rest
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow::anyhow!("clag spec needs `clag:<c>:<zeta>`"))?;
+        return Ok(std::sync::Arc::new(Clag::new(parse_contractive(c)?, z.parse()?)));
+    }
+    if let Some(rest) = s.strip_prefix("v1:") {
+        return Ok(std::sync::Arc::new(V1::new(parse_contractive(rest)?)));
+    }
+    if let Some(rest) = s.strip_prefix("v2:") {
+        let (q, c) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("v2 spec needs `v2:<q>:<c>`"))?;
+        return Ok(std::sync::Arc::new(V2::new(parse_unbiased(q)?, parse_contractive(c)?)));
+    }
+    if let Some(rest) = s.strip_prefix("v3:") {
+        let (inner, c) = rest
+            .rsplit_once(';')
+            .ok_or_else(|| anyhow::anyhow!("v3 spec needs `v3:<inner-3pc-spec>;<c>`"))?;
+        let inner_map = parse_mechanism(inner)?;
+        return Ok(std::sync::Arc::new(V3::new(inner_map, parse_contractive(c)?)));
+    }
+    if let Some(rest) = s.strip_prefix("v4:") {
+        let (c2, c1) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("v4 spec needs `v4:<c2>:<c1>`"))?;
+        return Ok(std::sync::Arc::new(V4::new(parse_contractive(c2)?, parse_contractive(c1)?)));
+    }
+    if let Some(rest) = s.strip_prefix("v5:") {
+        let (p, c) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("v5 spec needs `v5:<p>:<c>`"))?;
+        return Ok(std::sync::Arc::new(V5::new(p.parse()?, parse_contractive(c)?)));
+    }
+    if let Some(rest) = s.strip_prefix("marina:") {
+        let (p, q) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("marina spec needs `marina:<p>:<q>`"))?;
+        return Ok(std::sync::Arc::new(Marina::new(p.parse()?, parse_unbiased(q)?)));
+    }
+    anyhow::bail!("unknown mechanism spec '{spec}'")
+}
+
+#[cfg(test)]
+pub(crate) mod proptests {
+    //! Shared property-test driver: empirically checks inequality (6)
+    //! for a `ThreePointMap` with its declared `(A, B)` over randomized
+    //! triples `(h, y, x)`. Randomized maps are averaged over draws.
+
+    use super::*;
+    use crate::testkit::gen;
+    use crate::util::linalg::dist_sq;
+    use crate::util::rng::Pcg64;
+
+    pub fn check_3pc_inequality(
+        map: &dyn ThreePointMap,
+        info: CtxInfo,
+        cases: usize,
+        draws: usize,
+        seed: u64,
+        tol: f64,
+    ) {
+        let params = map
+            .params(&info)
+            .unwrap_or_else(|| panic!("{} has no (A,B)", map.name()));
+        assert!(params.a > 0.0 && params.a <= 1.0, "A out of range: {params:?}");
+        assert!(params.b >= 0.0, "B negative: {params:?}");
+        let mut meta = Pcg64::seed(seed);
+        for case in 0..cases {
+            let d = info.dim;
+            let y = gen::vector(&mut meta, d, 1.0);
+            // h near y sometimes (converged regime) and far sometimes.
+            let spread = if case % 2 == 0 { 0.1 } else { 3.0 };
+            let h: Vec<f32> = y
+                .iter()
+                .map(|&v| v + meta.normal_ms(0.0, spread) as f32)
+                .collect();
+            let x: Vec<f32> = y
+                .iter()
+                .map(|&v| v + meta.normal_ms(0.0, 0.7) as f32)
+                .collect();
+            let mut acc = 0.0;
+            for t in 0..draws {
+                let mut rng = Pcg64::new(seed ^ 0x77, (case * draws + t) as u64);
+                let mut ctx = Ctx::new(info, &mut rng, (case * draws + t) as u64);
+                let u = map.apply(&h, &y, &x, &mut ctx);
+                let g = apply_update(&h, &u);
+                acc += dist_sq(&g, &x);
+            }
+            let lhs = acc / draws as f64;
+            let rhs = (1.0 - params.a) * dist_sq(&h, &y) + params.b * dist_sq(&x, &y);
+            assert!(
+                lhs <= rhs * (1.0 + tol) + 1e-9,
+                "{}: case {case}: E‖C_h,y(x)−x‖²={lhs:.6} > (1−A)‖h−y‖²+B‖x−y‖²={rhs:.6} (A={}, B={})",
+                map.name(),
+                params.a,
+                params.b
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn parse_all_specs() {
+        for s in [
+            "gd",
+            "dcgd:top4",
+            "ef21:top4",
+            "lag:4.0",
+            "clag:top4:2.0",
+            "v1:top4",
+            "v2:rand4:top4",
+            "v3:ef21:top4;top2",
+            "v4:top4:top2",
+            "v5:0.25:top4",
+            "marina:0.25:rand4",
+        ] {
+            assert!(parse_mechanism(s).is_ok(), "spec {s}");
+        }
+        assert!(parse_mechanism("bogus").is_err());
+        assert!(parse_mechanism("v2:rand4").is_err());
+    }
+
+    #[test]
+    fn mechworker_tracks_state() {
+        let map = parse_mechanism("ef21:top1").unwrap();
+        let g0 = vec![0.0f32; 3];
+        let grad0 = vec![1.0f32, 0.5, 0.25];
+        let mut w = MechWorker::new(map, g0, grad0);
+        let mut rng = Pcg64::seed(0);
+        let grad1 = vec![2.0f32, 0.1, 0.1];
+        let info = CtxInfo::single(3);
+        let mut ctx = Ctx::new(info, &mut rng, 1);
+        let (u, gerr) = w.round(&grad1, &mut ctx);
+        // EF21 with Top-1 from h=0: C(grad1 − 0) keeps coordinate 0.
+        assert_eq!(w.g(), &[2.0, 0.0, 0.0]);
+        assert!(matches!(u, Update::Increment { .. }));
+        assert!((gerr - (0.01f64 + 0.01)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_handles_zero_b() {
+        assert_eq!(MechParams { a: 1.0, b: 0.0 }.ratio(), 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! 3PCv1 (Algorithm 5) — the "idealized EF21" with a gradient shift:
+//!
+//! `C_{h,y}(x) = y + C(x − y)`                              (46)
+//!
+//! Lemma C.11: A = 1, B = 1 − α.
+//!
+//! Impractical on the wire (the server does not know `y = ∇f_i(x^t)`, so
+//! the worker must transmit it densely each round — we bill exactly that:
+//! `32·d` bits for the shift plus the compressed difference), but it
+//! bounds what EF21 could achieve with a perfect memory of the previous
+//! gradient. Reproduced in Figure 16.
+
+use super::{MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo};
+
+pub struct V1 {
+    c: Box<dyn Contractive>,
+}
+
+impl V1 {
+    pub fn new(c: Box<dyn Contractive>) -> V1 {
+        V1 { c }
+    }
+}
+
+impl ThreePointMap for V1 {
+    fn name(&self) -> String {
+        format!("3PCv1({})", self.c.name())
+    }
+
+    fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let mut diff = vec![0.0f32; x.len()];
+        crate::util::linalg::sub(x, y, &mut diff);
+        let comp = self.c.compress(&diff, ctx);
+        let mut g = y.to_vec();
+        comp.add_into(&mut g);
+        // Wire cost: dense shift y (the server has no copy) + the
+        // compressed difference — the paper's d + K floats per node.
+        let bits = 32 * x.len() as u64 + comp.wire_bits();
+        Update::Replace { g, bits }
+    }
+
+    fn params(&self, info: &CtxInfo) -> Option<MechParams> {
+        Some(MechParams { a: 1.0, b: 1.0 - self.c.alpha(info) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::TopK;
+    use crate::mechanisms::proptests::check_3pc_inequality;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn ignores_h_entirely() {
+        let v1 = V1::new(Box::new(TopK::new(1)));
+        let mut rng = Pcg64::seed(0);
+        let y = [1.0f32, 2.0];
+        let x = [1.0f32, 5.0];
+        let info = CtxInfo::single(2);
+        let u1 = v1.apply(&[0.0; 2], &y, &x, &mut Ctx::new(info, &mut rng, 0));
+        let u2 = v1.apply(&[9.0; 2], &y, &x, &mut Ctx::new(info, &mut rng, 0));
+        match (&u1, &u2) {
+            (Update::Replace { g: g1, .. }, Update::Replace { g: g2, .. }) => {
+                assert_eq!(g1, g2);
+                assert_eq!(g1, &vec![1.0, 5.0]); // y + Top1(x−y) fills coord 1
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bills_the_dense_shift() {
+        let v1 = V1::new(Box::new(TopK::new(1)));
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(4);
+        let u = v1.apply(&[0.0; 4], &[0.0; 4], &[1.0, 0.0, 0.0, 0.0], &mut Ctx::new(info, &mut rng, 0));
+        // 32·4 dense + (32+2) sparse single entry.
+        assert_eq!(super::super::update_bits(&u), 128 + 34);
+    }
+
+    #[test]
+    fn table1_constants() {
+        let info = CtxInfo::single(16);
+        let p = V1::new(Box::new(TopK::new(4))).params(&info).unwrap();
+        assert_eq!(p, MechParams { a: 1.0, b: 0.75 });
+    }
+
+    #[test]
+    fn prop_3pc_inequality() {
+        let map = V1::new(Box::new(TopK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(9), 50, 1, 21, 1e-9);
+    }
+}

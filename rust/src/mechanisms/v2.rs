@@ -1,0 +1,110 @@
+//! 3PCv2 (Algorithm 6) — unbiased estimator of the gradient difference
+//! plus a contractive correction:
+//!
+//! `C_{h,y}(x) = b + C(x − b)` where `b = h + Q(x − y)`      (51)
+//!
+//! Lemma C.14: A = α, B = (1−α)ω.
+//!
+//! Two compressed messages cross the wire per round: `Q(x−y)` and
+//! `C(x−b)` — both sparse for the sparsifier instantiations of the
+//! experiments (Figures 1/5, 8–13); the bit accountant bills both.
+
+use super::{MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo, Unbiased};
+
+pub struct V2 {
+    q: Box<dyn Unbiased>,
+    c: Box<dyn Contractive>,
+}
+
+impl V2 {
+    pub fn new(q: Box<dyn Unbiased>, c: Box<dyn Contractive>) -> V2 {
+        V2 { q, c }
+    }
+}
+
+impl ThreePointMap for V2 {
+    fn name(&self) -> String {
+        format!("3PCv2({},{})", self.q.name(), self.c.name())
+    }
+
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let d = x.len();
+        // b = h + Q(x − y)
+        let mut diff = vec![0.0f32; d];
+        crate::util::linalg::sub(x, y, &mut diff);
+        let qmsg = self.q.compress(&diff, ctx);
+        let mut b = h.to_vec();
+        qmsg.add_into(&mut b);
+        // g = b + C(x − b)
+        let mut residual = vec![0.0f32; d];
+        crate::util::linalg::sub(x, &b, &mut residual);
+        let cmsg = self.c.compress(&residual, ctx);
+        let mut g = b;
+        cmsg.add_into(&mut g);
+        let bits = qmsg.wire_bits() + cmsg.wire_bits();
+        Update::Replace { g, bits }
+    }
+
+    fn params(&self, info: &CtxInfo) -> Option<MechParams> {
+        let alpha = self.c.alpha(info);
+        let omega = self.q.omega(info);
+        Some(MechParams { a: alpha, b: (1.0 - alpha) * omega })
+    }
+
+    fn uses_shared_randomness(&self) -> bool {
+        true // when Q = Perm-K
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{RandK, TopK};
+    use crate::mechanisms::proptests::check_3pc_inequality;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn table1_constants() {
+        let info = CtxInfo::single(16);
+        // α = 4/16 = 0.25, ω = 16/8 − 1 = 1 → A = 0.25, B = 0.75.
+        let v2 = V2::new(Box::new(RandK::new(8)), Box::new(TopK::new(4)));
+        let p = v2.params(&info).unwrap();
+        assert!((p.a - 0.25).abs() < 1e-12);
+        assert!((p.b - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_q_recovers_perfect_tracking() {
+        // With Q = identity (ω = 0), b = h + (x − y); if additionally
+        // h = y then b = x and g = x exactly, whatever C is.
+        use crate::compressors::identity::IdentityUnbiased;
+        let v2 = V2::new(Box::new(IdentityUnbiased), Box::new(TopK::new(1)));
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(3);
+        let y = [1.0f32, 2.0, 3.0];
+        let x = [4.0f32, 5.0, 6.0];
+        let u = v2.apply(&y, &y, &x, &mut Ctx::new(info, &mut rng, 0));
+        match u {
+            Update::Replace { g, .. } => assert_eq!(g, x.to_vec()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bills_both_messages() {
+        let v2 = V2::new(Box::new(RandK::new(2)), Box::new(TopK::new(2)));
+        let mut rng = Pcg64::seed(1);
+        let info = CtxInfo::single(8);
+        let u = v2.apply(&[0.0; 8], &[0.0; 8], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &mut Ctx::new(info, &mut rng, 0));
+        // two sparse messages of 2 entries each: 2·(32+3)·2 = 140.
+        assert_eq!(super::super::update_bits(&u), 2 * 2 * (32 + 3));
+    }
+
+    #[test]
+    fn prop_3pc_inequality() {
+        // Randomized (Rand-K inside): average over draws.
+        let map = V2::new(Box::new(RandK::new(3)), Box::new(TopK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(9), 20, 4_000, 31, 0.08);
+    }
+}

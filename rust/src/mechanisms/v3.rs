@@ -1,0 +1,92 @@
+//! 3PCv3 (Algorithm 7) — contractive correction stacked on *any* inner
+//! 3PC compressor:
+//!
+//! `C_{h,y}(x) = b + C(x − b)` where `b = C¹_{h,y}(x)`       (57)
+//!
+//! Lemma C.17: if the inner compressor has constants (A₁, B₁), the stack
+//! has `A = 1 − (1−α)(1−A₁)`, `B = (1−α)B₁`.
+//!
+//! The inner compressor is any [`ThreePointMap`] (EF21, CLAG, …), which
+//! is exactly the paper's formulation; note 3PCv2 is *not* the special
+//! case with `b = h + Q(x−y)` because that `b` is not itself a 3PC map.
+
+use super::{apply_update, update_bits, MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo};
+use std::sync::Arc;
+
+pub struct V3 {
+    inner: Arc<dyn ThreePointMap>,
+    c: Box<dyn Contractive>,
+}
+
+impl V3 {
+    pub fn new(inner: Arc<dyn ThreePointMap>, c: Box<dyn Contractive>) -> V3 {
+        V3 { inner, c }
+    }
+}
+
+impl ThreePointMap for V3 {
+    fn name(&self) -> String {
+        format!("3PCv3({};{})", self.inner.name(), self.c.name())
+    }
+
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let inner_update = self.inner.apply(h, y, x, ctx);
+        let b = apply_update(h, &inner_update);
+        let inner_bits = update_bits(&inner_update);
+        let mut residual = vec![0.0f32; x.len()];
+        crate::util::linalg::sub(x, &b, &mut residual);
+        let cmsg = self.c.compress(&residual, ctx);
+        let bits = inner_bits + cmsg.wire_bits();
+        let mut g = b;
+        cmsg.add_into(&mut g);
+        Update::Replace { g, bits }
+    }
+
+    fn params(&self, info: &CtxInfo) -> Option<MechParams> {
+        let inner = self.inner.params(info)?;
+        let alpha = self.c.alpha(info);
+        Some(MechParams {
+            a: 1.0 - (1.0 - alpha) * (1.0 - inner.a),
+            b: (1.0 - alpha) * inner.b,
+        })
+    }
+
+    fn uses_shared_randomness(&self) -> bool {
+        self.inner.uses_shared_randomness()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::TopK;
+    use crate::mechanisms::proptests::check_3pc_inequality;
+    use crate::mechanisms::{Ef21, Lag};
+
+    #[test]
+    fn constants_match_lemma_c17() {
+        let info = CtxInfo::single(16);
+        let inner = Arc::new(Lag::new(2.0)); // A₁ = 1, B₁ = 2
+        let v3 = V3::new(inner, Box::new(TopK::new(12)))// α = 3/4
+            ;
+        let p = v3.params(&info).unwrap();
+        // A = 1 − (1/4)(0) = 1, B = (1/4)·2 = 0.5.
+        assert!((p.a - 1.0).abs() < 1e-12);
+        assert!((p.b - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_3pc_inequality_over_ef21() {
+        let inner = Arc::new(Ef21::new(Box::new(TopK::new(2))));
+        let map = V3::new(inner, Box::new(TopK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(9), 40, 1, 57, 1e-9);
+    }
+
+    #[test]
+    fn prop_3pc_inequality_over_lag() {
+        let inner = Arc::new(Lag::new(1.0));
+        let map = V3::new(inner, Box::new(TopK::new(2)));
+        check_3pc_inequality(&map, CtxInfo::single(8), 40, 1, 58, 1e-9);
+    }
+}

@@ -1,0 +1,101 @@
+//! 3PCv4 (Algorithm 8) — two stacked *biased* (contractive) compressors:
+//!
+//! `C_{h,y}(x) = b + C₁(x − b)` where `b = h + C₂(x − h)`    (62)
+//!
+//! Lemma C.20: with ᾱ = 1 − (1−α₁)(1−α₂) and the optimal s*,
+//! `A = 1 − √(1−ᾱ)`, `B = (1−ᾱ)/(1−√(1−ᾱ))` — i.e. EF21's constants at
+//! the *boosted* contraction level ᾱ.
+//!
+//! Both messages (`C₂(x−h)` and `C₁(x−b)`) are billed. With
+//! Top-K₁/Top-K₂ on the sparse quadratic suite this frequently collapses
+//! to EF21 behaviour (Figures 14–15), which the experiments reproduce.
+
+use super::{ef21::Ef21, MechParams, ThreePointMap, Update};
+use crate::compressors::{Contractive, Ctx, CtxInfo};
+
+pub struct V4 {
+    /// The inner compressor C₂ (applied to x − h).
+    c2: Box<dyn Contractive>,
+    /// The outer compressor C₁ (applied to the residual x − b).
+    c1: Box<dyn Contractive>,
+}
+
+impl V4 {
+    pub fn new(c2: Box<dyn Contractive>, c1: Box<dyn Contractive>) -> V4 {
+        V4 { c2, c1 }
+    }
+}
+
+impl ThreePointMap for V4 {
+    fn name(&self) -> String {
+        format!("3PCv4({},{})", self.c2.name(), self.c1.name())
+    }
+
+    fn apply(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let d = x.len();
+        let mut residual = vec![0.0f32; d];
+        crate::util::linalg::sub(x, h, &mut residual);
+        let m2 = self.c2.compress(&residual, ctx);
+        let mut b = h.to_vec();
+        m2.add_into(&mut b);
+        crate::util::linalg::sub(x, &b, &mut residual);
+        let m1 = self.c1.compress(&residual, ctx);
+        let bits = m2.wire_bits() + m1.wire_bits();
+        let mut g = b;
+        m1.add_into(&mut g);
+        Update::Replace { g, bits }
+    }
+
+    fn params(&self, info: &CtxInfo) -> Option<MechParams> {
+        let a1 = self.c1.alpha(info);
+        let a2 = self.c2.alpha(info);
+        let abar = 1.0 - (1.0 - a1) * (1.0 - a2);
+        Some(Ef21::params_for_alpha(abar))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{CRandK, TopK};
+    use crate::mechanisms::proptests::check_3pc_inequality;
+
+    #[test]
+    fn constants_match_lemma_c20() {
+        let info = CtxInfo::single(16);
+        // α₁ = α₂ = 1/2 → ᾱ = 3/4 → A = 1/2, B = 1/2.
+        let v4 = V4::new(Box::new(TopK::new(8)), Box::new(TopK::new(8)));
+        let p = v4.params(&info).unwrap();
+        assert!((p.a - 0.5).abs() < 1e-12);
+        assert!((p.b - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_topk_passes_capture_2k_coords() {
+        use crate::util::rng::Pcg64;
+        let v4 = V4::new(Box::new(TopK::new(2)), Box::new(TopK::new(2)));
+        let mut rng = Pcg64::seed(0);
+        let info = CtxInfo::single(6);
+        let x = [10.0f32, 9.0, 8.0, 7.0, 0.1, 0.0];
+        let u = v4.apply(&[0.0; 6], &[0.0; 6], &x, &mut Ctx::new(info, &mut rng, 0));
+        match u {
+            Update::Replace { g, .. } => {
+                // first pass grabs {10, 9}, second pass {8, 7}.
+                assert_eq!(g, vec![10.0, 9.0, 8.0, 7.0, 0.0, 0.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_3pc_inequality_topk() {
+        let map = V4::new(Box::new(TopK::new(2)), Box::new(TopK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(10), 40, 1, 71, 1e-9);
+    }
+
+    #[test]
+    fn prop_3pc_inequality_crandk() {
+        let map = V4::new(Box::new(CRandK::new(3)), Box::new(CRandK::new(3)));
+        check_3pc_inequality(&map, CtxInfo::single(8), 15, 4_000, 72, 0.08);
+    }
+}

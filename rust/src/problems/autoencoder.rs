@@ -1,0 +1,193 @@
+//! Linear autoencoder (Eq. 77 / §6.2, Appendix E.1):
+//!
+//! ```text
+//! f(D, E) = (1/m) Σᵢ ‖D E aᵢ − aᵢ‖²
+//! ```
+//!
+//! with `D ∈ R^{d_f×d_e}`, `E ∈ R^{d_e×d_f}`; the optimization variable
+//! is `x = [vec(D); vec(E)]` of total dimension `d = 2·d_f·d_e` (25088
+//! for the paper's MNIST setup: d_f = 784, d_e = 16).
+//!
+//! Batched gradients (row-major data `A (m, d_f)`, rows `aᵢᵀ`):
+//!   `Z = A Eᵀ` (m, d_e) — the encodings;
+//!   `R = Z Dᵀ − A` (m, d_f) — the residuals;
+//!   `∇D = (2/m)·Rᵀ Z`, `∇E = (2/m)·Dᵀ Rᵀ A`.
+//!
+//! Non-convex (bilinear) — the paper tunes absolute stepsizes here, and
+//! so does our harness (no smoothness certificate is attached).
+
+use super::LocalProblem;
+use crate::util::linalg;
+
+pub struct Autoencoder {
+    /// Row-major `(m, d_f)` data shard.
+    data: Vec<f32>,
+    m: usize,
+    pub d_f: usize,
+    pub d_e: usize,
+}
+
+impl Autoencoder {
+    pub fn new(data: Vec<f32>, d_f: usize, d_e: usize) -> Autoencoder {
+        assert!(!data.is_empty());
+        assert_eq!(data.len() % d_f, 0);
+        let m = data.len() / d_f;
+        Autoencoder { data, m, d_f, d_e }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.m
+    }
+
+    /// Split the parameter vector into (D, E) views.
+    pub fn split_params<'a>(&self, x: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        let nd = self.d_f * self.d_e;
+        assert_eq!(x.len(), 2 * nd);
+        (&x[..nd], &x[nd..])
+    }
+
+    /// Residual matrix `R = A Eᵀ Dᵀ − A` and encodings `Z = A Eᵀ`.
+    fn forward(&self, dm: &[f32], em: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let (m, df, de) = (self.m, self.d_f, self.d_e);
+        // Z = A Eᵀ: (m,df)·(df,de). E is (de,df) row-major → Eᵀ accessed
+        // by computing Z[i][k] = Σ_j A[i][j]·E[k][j].
+        let mut z = vec![0.0f32; m * de];
+        for i in 0..m {
+            let arow = &self.data[i * df..(i + 1) * df];
+            let zrow = &mut z[i * de..(i + 1) * de];
+            for (k, zk) in zrow.iter_mut().enumerate() {
+                *zk = linalg::dot(arow, &em[k * df..(k + 1) * df]) as f32;
+            }
+        }
+        // R = Z Dᵀ − A: (m,de)·(de,df); D is (df,de) row-major →
+        // R[i][j] = Σ_k Z[i][k]·D[j][k] − A[i][j].
+        let mut r = vec![0.0f32; m * df];
+        for i in 0..m {
+            let zrow = &z[i * de..(i + 1) * de];
+            let arow = &self.data[i * df..(i + 1) * df];
+            let rrow = &mut r[i * df..(i + 1) * df];
+            for j in 0..df {
+                rrow[j] = linalg::dot(zrow, &dm[j * de..(j + 1) * de]) as f32 - arow[j];
+            }
+        }
+        (r, z)
+    }
+}
+
+impl LocalProblem for Autoencoder {
+    fn dim(&self) -> usize {
+        2 * self.d_f * self.d_e
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        let (dm, em) = self.split_params(x);
+        let (r, _z) = self.forward(dm, em);
+        linalg::norm2_sq(&r) / self.m as f64
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        let (dm, em) = self.split_params(x);
+        let (r, z) = self.forward(dm, em);
+        let (m, df, de) = (self.m, self.d_f, self.d_e);
+        let scale = 2.0 / m as f32;
+        let nd = df * de;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        // ∇D = (2/m)·Rᵀ Z  → ∇D[j][k] = Σ_i R[i][j]·Z[i][k].
+        {
+            let gd = &mut out[..nd];
+            for i in 0..m {
+                let rrow = &r[i * df..(i + 1) * df];
+                let zrow = &z[i * de..(i + 1) * de];
+                for j in 0..df {
+                    let rij = rrow[j];
+                    if rij != 0.0 {
+                        linalg::axpy(rij, zrow, &mut gd[j * de..(j + 1) * de]);
+                    }
+                }
+            }
+            linalg::scale(gd, scale);
+        }
+        // ∇E = (2/m)·Dᵀ Rᵀ A → first S = Rᵀ... computed per-sample:
+        // ∇E[k][j] = Σ_i (Dᵀ rᵢ)[k] · A[i][j]; let u = Dᵀ rᵢ ∈ R^{de}.
+        {
+            let gd_len = nd;
+            let ge = &mut out[gd_len..];
+            let mut u = vec![0.0f32; de];
+            for i in 0..m {
+                let rrow = &r[i * df..(i + 1) * df];
+                let arow = &self.data[i * df..(i + 1) * df];
+                // u = Dᵀ rᵢ: u[k] = Σ_j D[j][k]·r[j].
+                u.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..df {
+                    let rij = rrow[j];
+                    if rij != 0.0 {
+                        linalg::axpy(rij, &dm[j * de..(j + 1) * de], &mut u);
+                    }
+                }
+                for (k, &uk) in u.iter().enumerate() {
+                    if uk != 0.0 {
+                        linalg::axpy(uk, arow, &mut ge[k * df..(k + 1) * df]);
+                    }
+                }
+            }
+            linalg::scale(ge, scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_gradient;
+    use crate::util::rng::Pcg64;
+
+    fn toy(m: usize, df: usize, de: usize, seed: u64) -> (Autoencoder, Vec<f32>) {
+        let mut rng = Pcg64::seed(seed);
+        let data: Vec<f32> = (0..m * df).map(|_| rng.f32()).collect();
+        let ae = Autoencoder::new(data, df, de);
+        let x: Vec<f32> = (0..2 * df * de).map(|_| rng.normal_ms(0.0, 0.2) as f32).collect();
+        (ae, x)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (ae, x) = toy(6, 5, 3, 2);
+        check_gradient(&ae, &x, 5e-3);
+    }
+
+    #[test]
+    fn zero_params_loss_is_data_norm() {
+        let (ae, _) = toy(4, 5, 2, 3);
+        let x = vec![0.0f32; ae.dim()];
+        let expect = crate::util::linalg::norm2_sq(&ae.data) / ae.m as f64;
+        assert!((ae.loss(&x) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_autoencoder_has_zero_loss() {
+        // d_e = d_f with D = E = I reconstructs exactly.
+        let df = 4;
+        let mut rng = Pcg64::seed(5);
+        let data: Vec<f32> = (0..3 * df).map(|_| rng.f32()).collect();
+        let ae = Autoencoder::new(data, df, df);
+        let mut x = vec![0.0f32; ae.dim()];
+        for i in 0..df {
+            x[i * df + i] = 1.0; // D = I
+            x[df * df + i * df + i] = 1.0; // E = I
+        }
+        assert!(ae.loss(&x) < 1e-10);
+        let mut g = vec![0.0f32; ae.dim()];
+        ae.grad(&x, &mut g);
+        assert!(crate::util::linalg::norm2(&g) < 1e-6);
+    }
+
+    #[test]
+    fn descent_decreases_loss() {
+        let (ae, x) = toy(8, 6, 2, 7);
+        let mut g = vec![0.0f32; ae.dim()];
+        ae.grad(&x, &mut g);
+        let mut x2 = x.clone();
+        crate::util::linalg::axpy(-0.01, &g, &mut x2);
+        assert!(ae.loss(&x2) < ae.loss(&x));
+    }
+}

@@ -1,0 +1,189 @@
+//! Non-convex regularised logistic regression (Eq. 80 / §6.1):
+//!
+//! ```text
+//! f(x) = (1/N) Σᵢ log(1 + exp(−yᵢ aᵢᵀx)) + λ Σⱼ xⱼ²/(1+xⱼ²)
+//! ```
+//!
+//! The regulariser is non-convex (bounded, saturating), which is exactly
+//! why the paper uses this objective for the general-nonconvex
+//! experiments (CLAG heatmaps, budget plots). λ = 0.1 throughout.
+//!
+//! Gradient:
+//! `∇f(x) = (1/N) Σᵢ −yᵢ σ(−yᵢ aᵢᵀx) aᵢ + λ · 2x/(1+x²)²` (elementwise).
+
+use super::LocalProblem;
+use crate::util::linalg;
+
+/// One worker's shard: `rows` is row-major `(m, d)`, labels in {−1, +1}.
+pub struct LogReg {
+    rows: Vec<f32>,
+    labels: Vec<f32>,
+    m: usize,
+    d: usize,
+    pub lambda: f64,
+}
+
+impl LogReg {
+    pub fn new(rows: Vec<f32>, labels: Vec<f32>, d: usize, lambda: f64) -> LogReg {
+        assert!(!labels.is_empty());
+        assert_eq!(rows.len(), labels.len() * d);
+        assert!(labels.iter().all(|&y| y == 1.0 || y == -1.0));
+        LogReg { m: labels.len(), rows, labels, d, lambda }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.m
+    }
+
+    /// Smoothness upper bound of the data-fit term plus the regulariser:
+    /// `L ≤ λ_max(AᵀA)/(4m) + 2λ` (σ′ ≤ 1/4; reg″ ≤ 2). λ_max estimated
+    /// by power iteration on AᵀA (matrix-free).
+    pub fn smoothness_bound(&self) -> f64 {
+        let mut v = vec![1.0f32; self.d];
+        let norm0 = linalg::norm2(&v);
+        linalg::scale(&mut v, (1.0 / norm0) as f32);
+        let mut av = vec![0.0f32; self.m];
+        let mut atav = vec![0.0f32; self.d];
+        let mut lam_max = 0.0f64;
+        for _ in 0..50 {
+            linalg::matvec(&self.rows, self.m, self.d, &v, &mut av);
+            linalg::matvec_t(&self.rows, self.m, self.d, &av, &mut atav);
+            lam_max = linalg::norm2(&atav);
+            if lam_max == 0.0 {
+                break;
+            }
+            for i in 0..self.d {
+                v[i] = (atav[i] as f64 / lam_max) as f32;
+            }
+        }
+        lam_max / (4.0 * self.m as f64) + 2.0 * self.lambda
+    }
+}
+
+/// Numerically-stable `log(1 + exp(t))`.
+#[inline]
+fn softplus(t: f64) -> f64 {
+    if t > 30.0 {
+        t
+    } else if t < -30.0 {
+        t.exp()
+    } else {
+        (1.0 + t.exp()).ln()
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+fn sigmoid(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl LocalProblem for LogReg {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.m {
+            let row = &self.rows[i * self.d..(i + 1) * self.d];
+            let margin = self.labels[i] as f64 * linalg::dot(row, x);
+            acc += softplus(-margin);
+        }
+        let mut reg = 0.0f64;
+        for &xi in x {
+            let x2 = (xi as f64) * (xi as f64);
+            reg += x2 / (1.0 + x2);
+        }
+        acc / self.m as f64 + self.lambda * reg
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        // Data-fit term: (1/m) Σ −y σ(−y a·x) a.
+        for i in 0..self.m {
+            let row = &self.rows[i * self.d..(i + 1) * self.d];
+            let y = self.labels[i] as f64;
+            let margin = y * linalg::dot(row, x);
+            let coef = (-y * sigmoid(-margin) / self.m as f64) as f32;
+            linalg::axpy(coef, row, out);
+        }
+        // Regulariser: λ · 2x/(1+x²)².
+        for (o, &xi) in out.iter_mut().zip(x) {
+            let x2 = (xi as f64) * (xi as f64);
+            let denom = (1.0 + x2) * (1.0 + x2);
+            *o += (self.lambda * 2.0 * xi as f64 / denom) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_gradient;
+    use crate::util::rng::Pcg64;
+
+    fn toy(m: usize, d: usize, seed: u64) -> LogReg {
+        let mut rng = Pcg64::seed(seed);
+        let rows: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let labels: Vec<f32> = (0..m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        LogReg::new(rows, labels, d, 0.1)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = toy(40, 7, 3);
+        let mut rng = Pcg64::seed(4);
+        let x: Vec<f32> = (0..7).map(|_| rng.normal() as f32).collect();
+        check_gradient(&p, &x, 2e-3);
+        check_gradient(&p, &vec![0.0; 7], 2e-3);
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2_plus_zero_reg() {
+        let p = toy(25, 5, 9);
+        let l = p.loss(&[0.0; 5]);
+        assert!((l - (2.0f64).ln()).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_gradient() {
+        let p = toy(60, 6, 5);
+        let x = vec![0.3f32; 6];
+        let mut g = vec![0.0f32; 6];
+        p.grad(&x, &mut g);
+        let mut x2 = x.clone();
+        linalg::axpy(-0.1, &g, &mut x2);
+        assert!(p.loss(&x2) < p.loss(&x));
+    }
+
+    #[test]
+    fn extreme_margins_do_not_overflow() {
+        let p = LogReg::new(vec![1000.0, -1000.0], vec![1.0, -1.0], 1, 0.1);
+        let l = p.loss(&[5.0]);
+        assert!(l.is_finite());
+        let mut g = vec![0.0f32; 1];
+        p.grad(&[5.0], &mut g);
+        assert!(g[0].is_finite());
+    }
+
+    #[test]
+    fn smoothness_bound_sane() {
+        let p = toy(50, 8, 11);
+        let l = p.smoothness_bound();
+        // Must at least cover the regulariser's 2λ and be finite.
+        assert!(l >= 0.2 && l.is_finite(), "{l}");
+        // Descent with γ = 1/L must decrease the loss from a random point.
+        let x = vec![0.5f32; 8];
+        let mut g = vec![0.0f32; 8];
+        p.grad(&x, &mut g);
+        let mut x2 = x.clone();
+        linalg::axpy((-1.0 / l) as f32, &g, &mut x2);
+        assert!(p.loss(&x2) <= p.loss(&x) + 1e-12);
+    }
+}

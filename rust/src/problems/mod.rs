@@ -1,0 +1,110 @@
+//! Training objectives (the `f_i` of problem (1)).
+//!
+//! Each worker holds a [`LocalProblem`] — loss + gradient over its shard —
+//! and the [`Distributed`] wrapper represents `f = (1/n)Σ f_i` with the
+//! smoothness constants the stepsize theory consumes.
+//!
+//! Gradient evaluation has two backends: the native Rust implementations
+//! here (sweep fast-path + numerics oracle) and the PJRT/HLO executors in
+//! [`crate::runtime`] compiled from the JAX/Pallas build path; integration
+//! tests pin them to each other.
+
+pub mod autoencoder;
+pub mod logreg;
+pub mod quadratic;
+
+pub use autoencoder::Autoencoder;
+pub use logreg::LogReg;
+pub use quadratic::{QuadLocal, QuadSuite};
+
+use crate::theory::Smoothness;
+use std::sync::Arc;
+
+/// One worker's share of the objective.
+pub trait LocalProblem: Send + Sync {
+    fn dim(&self) -> usize;
+    fn loss(&self, x: &[f32]) -> f64;
+    /// Write `∇f_i(x)` into `out`.
+    fn grad(&self, x: &[f32], out: &mut [f32]);
+}
+
+/// The distributed objective `f = (1/n) Σ f_i`.
+pub struct Distributed {
+    pub locals: Vec<Arc<dyn LocalProblem>>,
+    dim: usize,
+    /// `(L₋, L₊)` — closed-form where available (quadratics), estimated
+    /// upper bounds otherwise, `None` where the paper itself tunes
+    /// absolute stepsizes (autoencoder).
+    pub smoothness: Option<Smoothness>,
+    /// PŁ constant μ where known (quadratics: the λ regulariser).
+    pub mu: Option<f64>,
+    /// Starting point `x⁰`.
+    pub x0: Vec<f32>,
+}
+
+impl Distributed {
+    pub fn new(locals: Vec<Arc<dyn LocalProblem>>, x0: Vec<f32>) -> Distributed {
+        let dim = locals[0].dim();
+        assert!(locals.iter().all(|l| l.dim() == dim));
+        assert_eq!(x0.len(), dim);
+        Distributed { locals, dim, smoothness: None, mu: None, x0 }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Global loss `f(x)` (mean of locals).
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        self.locals.iter().map(|l| l.loss(x)).sum::<f64>() / self.locals.len() as f64
+    }
+
+    /// Global gradient `∇f(x)` (mean of locals).
+    pub fn grad(&self, x: &[f32], out: &mut [f32]) {
+        let mut acc = vec![0.0f64; self.dim];
+        let mut tmp = vec![0.0f32; self.dim];
+        for l in &self.locals {
+            l.grad(x, &mut tmp);
+            crate::util::linalg::add_into_f64(&mut acc, &tmp);
+        }
+        crate::util::linalg::scaled_to_f32(&acc, 1.0 / self.locals.len() as f64, out);
+    }
+
+    /// Squared norm of the global gradient (convergence criterion).
+    pub fn grad_norm_sq(&self, x: &[f32]) -> f64 {
+        let mut g = vec![0.0f32; self.dim];
+        self.grad(x, &mut g);
+        crate::util::linalg::norm2_sq(&g)
+    }
+}
+
+/// Finite-difference check used by the per-problem unit tests: compares
+/// the analytic gradient against central differences at a point.
+#[cfg(test)]
+pub(crate) fn check_gradient(p: &dyn LocalProblem, x: &[f32], tol: f64) {
+    let d = p.dim();
+    let mut g = vec![0.0f32; d];
+    p.grad(x, &mut g);
+    let h = 1e-3f32;
+    // Probe a subset of coordinates (all if small).
+    let probes: Vec<usize> = if d <= 32 { (0..d).collect() } else { (0..32).map(|i| i * d / 32).collect() };
+    for i in probes {
+        let mut xp = x.to_vec();
+        let mut xm = x.to_vec();
+        xp[i] += h;
+        xm[i] -= h;
+        let fd = (p.loss(&xp) - p.loss(&xm)) / (2.0 * h as f64);
+        let err = (fd - g[i] as f64).abs();
+        let scale = 1.0 + fd.abs().max(g[i].abs() as f64);
+        assert!(
+            err / scale < tol,
+            "coordinate {i}: analytic {} vs finite-diff {fd} (rel err {})",
+            g[i],
+            err / scale
+        );
+    }
+}

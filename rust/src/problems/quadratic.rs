@@ -1,0 +1,240 @@
+//! Synthetic quadratic suite (Eq. 78 + Algorithm 11, Appendix E.2).
+//!
+//! Each worker i holds `f_i(x) = ½ xᵀA_i x − xᵀb_i` with
+//! `A_i = (ν_i/4)·T + c·I`, where `T = tridiag(−1, 2, −1)` and `c` is the
+//! common diagonal shift Algorithm 11 adds so that `mean(A_i) ≽ λI`.
+//! The tridiagonal structure is kept explicit: gradients are O(d) stencils
+//! (this is also what the L1 Pallas `quad_grad` kernel computes), and all
+//! the spectral constants of Tables 3–4 come out in closed form through
+//! the eigenvalues `t_k = 2 − 2cos(πk/(d+1))` of `T`:
+//!
+//! * `L₋ = λ_max(mean A) = (ν̄/4)·t_max + c`
+//! * `L₊² = λ_max(mean A_i²) = max_k [ m₂/16·t_k² + (ν̄c/2)·t_k + c² ]`
+//!   with `m₂ = mean(ν²)`
+//! * `L±² = λ_max(mean A_i² − (mean A)²) = (var ν/16)·t_max²`
+//!
+//! (all matrices are polynomials in `T`, hence simultaneously
+//! diagonalisable — the maxima are over the same eigenbasis).
+
+use super::{Distributed, LocalProblem};
+use crate::theory::Smoothness;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// One worker's quadratic: `A = (ν/4)T + c·I`, `b`.
+pub struct QuadLocal {
+    pub nu: f64,
+    pub shift: f64,
+    pub b: Vec<f32>,
+    d: usize,
+}
+
+impl QuadLocal {
+    pub fn new(nu: f64, shift: f64, b: Vec<f32>) -> QuadLocal {
+        let d = b.len();
+        QuadLocal { nu, shift, b, d }
+    }
+
+    /// `out = A x` via the tridiagonal stencil (O(d)).
+    pub fn apply_a(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let s = (self.nu / 4.0) as f32;
+        let c = self.shift as f32;
+        for i in 0..d {
+            let left = if i > 0 { x[i - 1] } else { 0.0 };
+            let right = if i + 1 < d { x[i + 1] } else { 0.0 };
+            out[i] = s * (2.0 * x[i] - left - right) + c * x[i];
+        }
+    }
+}
+
+impl LocalProblem for QuadLocal {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, x: &[f32]) -> f64 {
+        let mut ax = vec![0.0f32; self.d];
+        self.apply_a(x, &mut ax);
+        0.5 * crate::util::linalg::dot(x, &ax) - crate::util::linalg::dot(x, &self.b)
+    }
+
+    fn grad(&self, x: &[f32], out: &mut [f32]) {
+        self.apply_a(x, out);
+        for (o, &bi) in out.iter_mut().zip(&self.b) {
+            *o -= bi;
+        }
+    }
+}
+
+/// The generated suite plus its closed-form constants.
+pub struct QuadSuite {
+    pub problem: Distributed,
+    /// Typed handles to the same locals held by `problem` (for tests and
+    /// the constants experiments).
+    pub locals: Vec<Arc<QuadLocal>>,
+    pub l_minus: f64,
+    pub l_plus: f64,
+    pub l_pm: f64,
+    pub mu: f64,
+}
+
+/// Largest eigenvalue of `T = tridiag(−1,2,−1)` in dimension d.
+fn t_max(d: usize) -> f64 {
+    2.0 - 2.0 * (std::f64::consts::PI * d as f64 / (d as f64 + 1.0)).cos()
+}
+
+/// Smallest eigenvalue of `T`.
+fn t_min(d: usize) -> f64 {
+    2.0 - 2.0 * (std::f64::consts::PI / (d as f64 + 1.0)).cos()
+}
+
+/// Algorithm 11: generate the distributed quadratic task.
+///
+/// `n` workers, dimension `d`, target strong-convexity `lambda` of the
+/// mean, noise scale `s` controlling heterogeneity (Tables 3–4 use
+/// `s ∈ {0, 0.05, 0.8, 1.6, 6.4}`).
+pub fn generate(n: usize, d: usize, lambda: f64, s: f64, seed: u64) -> QuadSuite {
+    let mut rng = Pcg64::seed(seed);
+    // Step 2–5: per-worker noises and raw tridiagonal scale.
+    let nus: Vec<f64> = (0..n).map(|_| 1.0 + s * rng.normal()).collect();
+    let nub: Vec<f64> = (0..n).map(|_| s * rng.normal()).collect();
+    // Step 7–8: λ_min of the mean matrix (closed form — mean A is
+    // (ν̄/4)·T, whose extreme eigenvalues are at t_min/t_max depending on
+    // the sign of ν̄).
+    let nu_bar: f64 = nus.iter().sum::<f64>() / n as f64;
+    let lam_min_mean = if nu_bar >= 0.0 {
+        nu_bar / 4.0 * t_min(d)
+    } else {
+        nu_bar / 4.0 * t_max(d)
+    };
+    // Step 10: common diagonal shift.
+    let shift = lambda - lam_min_mean;
+    let typed: Vec<Arc<QuadLocal>> = (0..n)
+        .map(|i| {
+            let mut b = vec![0.0f32; d];
+            b[0] = (nus[i] / 4.0 * (-1.0 + nub[i])) as f32;
+            Arc::new(QuadLocal::new(nus[i], shift, b))
+        })
+        .collect();
+    let locals: Vec<Arc<dyn LocalProblem>> =
+        typed.iter().map(|l| l.clone() as Arc<dyn LocalProblem>).collect();
+    // Step 12: starting point (√d, 0, …, 0).
+    let mut x0 = vec![0.0f32; d];
+    x0[0] = (d as f64).sqrt() as f32;
+
+    // Closed-form constants (see module docs).
+    let m2: f64 = nus.iter().map(|v| v * v).sum::<f64>() / n as f64;
+    let var_nu = (m2 - nu_bar * nu_bar).max(0.0);
+    let tmax = t_max(d);
+    let l_minus = (nu_bar / 4.0 * tmax + shift).max(nu_bar / 4.0 * t_min(d) + shift).abs();
+    // λ_max over T's eigenbasis of mean(A²) = m₂/16·t² + (ν̄ c/2)·t + c².
+    let eig = |t: f64| m2 / 16.0 * t * t + nu_bar * shift / 2.0 * t + shift * shift;
+    let l_plus = eig(tmax).max(eig(t_min(d))).sqrt();
+    let l_pm = (var_nu / 16.0).sqrt() * tmax;
+
+    let mut problem = Distributed::new(locals, x0);
+    problem.smoothness = Some(Smoothness::new(l_minus, l_plus));
+    problem.mu = Some(lambda);
+    QuadSuite { problem, locals: typed, l_minus, l_plus, l_pm, mu: lambda }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::check_gradient;
+    use crate::util::linalg;
+
+    #[test]
+    fn stencil_matches_dense_tridiag() {
+        let q = QuadLocal::new(2.0, 0.5, vec![0.0; 4]);
+        // A = (2/4)·T + 0.5·I = 0.5·[[2,-1,0,0],...] + 0.5 I
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = [0.0f32; 4];
+        q.apply_a(&x, &mut out);
+        // row0: 0.5(2·1 − 2) + 0.5·1 = 0.5
+        assert!((out[0] - 0.5).abs() < 1e-6);
+        // row1: 0.5(2·2 −1 −3) + 0.5·2 = 1.0
+        assert!((out[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let q = QuadLocal::new(1.3, 0.7, vec![0.1, -0.2, 0.3, 0.0, 0.5]);
+        check_gradient(&q, &[0.4, -1.0, 2.0, 0.0, -0.3], 1e-3);
+    }
+
+    #[test]
+    fn generator_mean_is_lambda_strongly_convex() {
+        // The smallest eigenvalue of the mean matrix must be ≈ λ:
+        // check via many random Rayleigh quotients ≥ λ plus the known
+        // minimal eigenvector of T giving ≈ λ.
+        let d = 64;
+        let suite = generate(10, d, 1e-3, 0.8, 7);
+        let mut rng = Pcg64::seed(1);
+        let mut mean_ax = vec![0.0f32; d];
+        let mut tmp = vec![0.0f32; d];
+        let mean_a = |x: &[f32], mean_ax: &mut Vec<f32>, tmp: &mut Vec<f32>| {
+            mean_ax.iter_mut().for_each(|v| *v = 0.0);
+            for q in &suite.locals {
+                q.apply_a(x, tmp);
+                for i in 0..d {
+                    mean_ax[i] += tmp[i];
+                }
+            }
+        };
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            mean_a(&x, &mut mean_ax, &mut tmp);
+            let rayleigh = linalg::dot(&x, &mean_ax) / suite.locals.len() as f64
+                / linalg::norm2_sq(&x);
+            assert!(rayleigh >= 1e-3 - 1e-6, "Rayleigh {rayleigh} < λ");
+        }
+        // Minimal eigenvector of T: v_k = sin(πk/(d+1)).
+        let v: Vec<f32> = (1..=d)
+            .map(|k| (std::f64::consts::PI * k as f64 / (d as f64 + 1.0)).sin() as f32)
+            .collect();
+        mean_a(&v, &mut mean_ax, &mut tmp);
+        let rayleigh =
+            linalg::dot(&v, &mean_ax) / suite.locals.len() as f64 / linalg::norm2_sq(&v);
+        assert!((rayleigh - 1e-3).abs() < 1e-4, "min Rayleigh {rayleigh} should ≈ λ");
+    }
+
+    #[test]
+    fn homogeneous_case_has_zero_hessian_variance() {
+        let suite = generate(10, 50, 1e-6, 0.0, 3);
+        assert!(suite.l_pm.abs() < 1e-12);
+        assert!((suite.l_minus - 1.0).abs() < 0.01, "L₋ ≈ 1 per Table 4, got {}", suite.l_minus);
+    }
+
+    #[test]
+    fn table3_table4_shapes() {
+        // Reproduce the magnitudes of Tables 3–4: for n = 1000,
+        // L± ≈ {0, .05, .81, 1.62, 6.48} across the noise scales and
+        // L₋ ≈ 1 for small s.
+        for (s, expect_lpm) in [(0.0, 0.0), (0.05, 0.05), (0.8, 0.81), (1.6, 1.62), (6.4, 6.48)] {
+            let suite = generate(1000, 200, 1e-6, s, 42);
+            assert!(
+                (suite.l_pm - expect_lpm).abs() < 0.15 * (1.0 + expect_lpm),
+                "s={s}: L± = {} expected ≈ {expect_lpm}",
+                suite.l_pm
+            );
+        }
+    }
+
+    #[test]
+    fn gd_converges_linearly_on_the_suite() {
+        let suite = generate(5, 30, 1e-2, 0.1, 11);
+        let p = &suite.problem;
+        let mut x = p.x0.clone();
+        let gamma = (1.0 / suite.l_minus) as f32;
+        let mut g = vec![0.0f32; p.dim()];
+        let n0 = p.grad_norm_sq(&x);
+        for _ in 0..300 {
+            p.grad(&x, &mut g);
+            linalg::axpy(-gamma, &g, &mut x);
+        }
+        let n1 = p.grad_norm_sq(&x);
+        assert!(n1 < n0 * 1e-2, "‖∇f‖² {n0} → {n1}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Runtime — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2 models to HLO text under `artifacts/`;
+//! this module loads them through the `xla` crate (PJRT C API), compiles
+//! them once per process, and exposes them as [`crate::problems::LocalProblem`]
+//! implementations so the coordinator can run the *identical* training
+//! loop over native-Rust or JAX-authored gradients.
+//!
+//! Threading: PJRT handles in the `xla` crate are not `Send`, so a single
+//! **device service thread** owns the client, the compiled executables
+//! and the registered constant buffers (data shards); worker threads talk
+//! to it through a channel-based [`DeviceHandle`] (clonable, `Send +
+//! Sync`). The CPU PJRT client parallelises inside an execution, and the
+//! experiments that need throughput use the native backend — the HLO path
+//! is the fidelity path proving the three layers compose.
+
+pub mod executor;
+pub mod service;
+
+pub use executor::{HloAutoencoder, HloLogReg, HloQuad};
+pub use service::{Arg, DeviceHandle, DeviceService};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact metadata parsed from `artifacts/manifest.txt`
+/// (`<artifact>.<key> = <value>` lines written by `aot.py`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    cfg: crate::util::config::Config,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let cfg = crate::util::config::Config::from_file(&path).with_context(|| {
+            format!(
+                "missing {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Ok(Manifest { dir, cfg })
+    }
+
+    /// Path of an artifact's HLO text.
+    pub fn hlo_path(&self, artifact: &str) -> PathBuf {
+        self.dir.join(format!("{artifact}.hlo.txt"))
+    }
+
+    /// Integer property (`m`, `d`, …) of an artifact.
+    pub fn prop(&self, artifact: &str, key: &str) -> Result<usize> {
+        let full = format!("{artifact}.{key}");
+        self.cfg
+            .get(&full)
+            .with_context(|| format!("manifest missing '{full}'"))?
+            .parse()
+            .with_context(|| format!("manifest key '{full}' not an integer"))
+    }
+
+    /// Whether an artifact exists.
+    pub fn has(&self, artifact: &str) -> bool {
+        self.cfg.get(&format!("{artifact}.kind")).is_some() && self.hlo_path(artifact).exists()
+    }
+}
+
+/// Default artifacts directory: `$THREEPC_ARTIFACTS` or `artifacts/`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("THREEPC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_reports_missing_keys() {
+        let dir = std::env::temp_dir().join(format!("threepc-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "quad_grad.kind = quadratic\nquad_grad.d = 1000\n")
+            .unwrap();
+        std::fs::write(dir.join("quad_grad.hlo.txt"), "HloModule x").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.prop("quad_grad", "d").unwrap(), 1000);
+        assert!(m.has("quad_grad"));
+        assert!(!m.has("nope"));
+        assert!(m.prop("quad_grad", "missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_points_to_make() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,272 @@
+//! The device service thread: sole owner of the PJRT client, compiled
+//! executables, and registered constant literals (data shards). Worker
+//! threads hold clonable [`DeviceHandle`]s and exchange plain `Vec<f32>`
+//! payloads over channels, because the `xla` crate's PJRT handles are not
+//! `Send`.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// An executable argument: inline data (moved across the channel) or a
+/// reference to a constant registered once (data shards).
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// Dense f32 array with the given dimensions (`[]` = scalar).
+    Inline { data: Vec<f32>, dims: Vec<i64> },
+    /// A constant registered via [`DeviceHandle::register_const`].
+    Const(String),
+}
+
+impl Arg {
+    pub fn vec(data: Vec<f32>) -> Arg {
+        let d = data.len() as i64;
+        Arg::Inline { data, dims: vec![d] }
+    }
+
+    pub fn scalar(v: f32) -> Arg {
+        Arg::Inline { data: vec![v], dims: vec![] }
+    }
+
+    pub fn matrix(data: Vec<f32>, rows: usize, cols: usize) -> Arg {
+        assert_eq!(data.len(), rows * cols);
+        Arg::Inline { data, dims: vec![rows as i64, cols as i64] }
+    }
+}
+
+enum Req {
+    LoadArtifact { name: String, path: PathBuf, resp: mpsc::Sender<Result<()>> },
+    RegisterConst { key: String, data: Vec<f32>, dims: Vec<i64>, resp: mpsc::Sender<Result<()>> },
+    Execute { artifact: String, args: Vec<Arg>, resp: mpsc::Sender<Result<Vec<Vec<f32>>>> },
+    Stats { resp: mpsc::Sender<ServiceStats> },
+}
+
+/// Counters for the perf log.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub consts: u64,
+}
+
+/// Clonable, thread-safe handle to the device service.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+// mpsc::Sender is Send+!Sync; wrap-per-use would be noisy — instead each
+// clone is independent, and we declare the handle Sync because every
+// method clones the sender before use.
+unsafe impl Sync for DeviceHandle {}
+
+impl DeviceHandle {
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .clone()
+            .send(req)
+            .map_err(|_| anyhow!("device service thread is gone"))
+    }
+
+    /// Load + compile an HLO-text artifact (idempotent per name).
+    pub fn load_artifact(&self, name: &str, path: &std::path::Path) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::LoadArtifact { name: name.to_string(), path: path.to_path_buf(), resp: tx })?;
+        rx.recv().context("device service dropped request")?
+    }
+
+    /// Register a constant (e.g. a worker's data shard) under a key.
+    pub fn register_const(&self, key: &str, data: Vec<f32>, dims: Vec<i64>) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::RegisterConst { key: key.to_string(), data, dims, resp: tx })?;
+        rx.recv().context("device service dropped request")?
+    }
+
+    /// Execute an artifact; returns the flattened f32 contents of every
+    /// tuple element of the result.
+    pub fn execute(&self, artifact: &str, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Execute { artifact: artifact.to_string(), args, resp: tx })?;
+        rx.recv().context("device service dropped request")?
+    }
+
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Stats { resp: tx })?;
+        rx.recv().context("device service dropped request")
+    }
+}
+
+/// The service itself; keep it alive for the duration of training.
+pub struct DeviceService {
+    handle: DeviceHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeviceService {
+    /// Spawn the device thread with a CPU PJRT client.
+    pub fn start() -> Result<DeviceService> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || run_service(rx, ready_tx))
+            .context("spawning device thread")?;
+        ready_rx
+            .recv()
+            .context("device thread died during startup")??;
+        Ok(DeviceService { handle: DeviceHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        // Closing the channel ends the service loop.
+        let (tx, _) = mpsc::channel();
+        self.handle = DeviceHandle { tx };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn literal_from(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    if dims.is_empty() {
+        anyhow::ensure!(data.len() == 1, "scalar arg must have 1 element");
+        return Ok(xla::Literal::from(data[0]));
+    }
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "arg data {} != dims {:?}", data.len(), dims);
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+fn run_service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e:?}")));
+            return;
+        }
+    };
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut consts: HashMap<String, xla::Literal> = HashMap::new();
+    let mut stats = ServiceStats::default();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::LoadArtifact { name, path, resp } => {
+                let result = (|| -> Result<()> {
+                    if exes.contains_key(&name) {
+                        return Ok(());
+                    }
+                    let proto = xla::HloModuleProto::from_text_file(&path)
+                        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                    stats.compiles += 1;
+                    exes.insert(name, exe);
+                    Ok(())
+                })();
+                let _ = resp.send(result);
+            }
+            Req::RegisterConst { key, data, dims, resp } => {
+                let result = literal_from(&data, &dims).map(|lit| {
+                    stats.consts += 1;
+                    consts.insert(key, lit);
+                });
+                let _ = resp.send(result);
+            }
+            Req::Execute { artifact, args, resp } => {
+                let result = (|| -> Result<Vec<Vec<f32>>> {
+                    let exe = exes
+                        .get(&artifact)
+                        .with_context(|| format!("artifact '{artifact}' not loaded"))?;
+                    // Assemble the literal argument list: materialise all
+                    // inline args first, then build the borrow list
+                    // (two passes so no reference outlives a Vec grow).
+                    let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(args.len());
+                    for a in &args {
+                        owned.push(match a {
+                            Arg::Inline { data, dims } => Some(literal_from(data, dims)?),
+                            Arg::Const(_) => None,
+                        });
+                    }
+                    let mut ordered: Vec<&xla::Literal> = Vec::with_capacity(args.len());
+                    for (a, o) in args.iter().zip(&owned) {
+                        match a {
+                            Arg::Inline { .. } => ordered.push(o.as_ref().unwrap()),
+                            Arg::Const(key) => ordered.push(
+                                consts
+                                    .get(key)
+                                    .with_context(|| format!("const '{key}' not registered"))?,
+                            ),
+                        }
+                    }
+                    let out = exe
+                        .execute::<&xla::Literal>(&ordered)
+                        .map_err(|e| anyhow!("execute {artifact}: {e:?}"))?;
+                    stats.executions += 1;
+                    let lit = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+                    // return_tuple=True → always a tuple.
+                    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+                    parts
+                        .into_iter()
+                        .map(|p| {
+                            if p.element_count() == 1 {
+                                p.get_first_element::<f32>()
+                                    .map(|v| vec![v])
+                                    .map_err(|e| anyhow!("scalar fetch: {e:?}"))
+                            } else {
+                                p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+                            }
+                        })
+                        .collect()
+                })();
+                let _ = resp.send(result);
+            }
+            Req::Stats { resp } => {
+                let _ = resp.send(stats);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_from_validates() {
+        assert!(literal_from(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_from(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_from(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_from(&[1.0], &[]).is_ok());
+        assert!(literal_from(&[1.0, 2.0], &[]).is_err());
+    }
+
+    #[test]
+    fn arg_constructors() {
+        assert!(matches!(Arg::scalar(1.0), Arg::Inline { dims, .. } if dims.is_empty()));
+        assert!(matches!(Arg::vec(vec![1.0, 2.0]), Arg::Inline { dims, .. } if dims == vec![2]));
+        assert!(
+            matches!(Arg::matrix(vec![0.0; 6], 2, 3), Arg::Inline { dims, .. } if dims == vec![2, 3])
+        );
+    }
+}

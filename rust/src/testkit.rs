@@ -1,0 +1,99 @@
+//! In-crate randomized property-testing harness (the image has no
+//! `proptest`). Provides value generators over a seeded [`Pcg64`] and a
+//! `forall` runner that reports the failing case and its seed so any
+//! failure is replayable.
+//!
+//! Used by the compressor/mechanism test suites to check the paper's
+//! defining inequalities — contraction (4), unbiasedness (22) and the
+//! three-point inequality (6) — over randomized inputs.
+
+use crate::util::rng::Pcg64;
+
+/// Runs `prop` on `cases` generated inputs; panics with the case index and
+/// seed on the first failure. `gen` receives a fresh RNG stream per case.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::*;
+
+    /// A random dense vector with entries ~ N(0, scale²).
+    pub fn vector(rng: &mut Pcg64, d: usize, scale: f64) -> Vec<f32> {
+        (0..d).map(|_| rng.normal_ms(0.0, scale) as f32).collect()
+    }
+
+    /// A vector with a random sparsity pattern (some entries exactly 0,
+    /// likely ties) — stresses Top-K tie-breaking and zero handling.
+    pub fn spiky_vector(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|_| match rng.below(4) {
+                0 => 0.0,
+                1 => 1.0, // deliberate ties
+                2 => -1.0,
+                _ => rng.normal() as f32,
+            })
+            .collect()
+    }
+
+    /// Random dimension in `[lo, hi]`.
+    pub fn dim(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+/// Empirical expectation of `f` over `trials` randomized evaluations.
+/// Used to check inequalities that hold in expectation for randomized
+/// compressors (Rand-K, cRand-K, Bernoulli).
+pub fn empirical_mean<F: FnMut(&mut Pcg64) -> f64>(seed: u64, trials: usize, mut f: F) -> f64 {
+    // One continuously-advanced stream: the first outputs of many freshly
+    // seeded streams are not i.i.d. enough for tight empirical bounds.
+    let mut rng = Pcg64::new(seed ^ 0xabcd_ef01, 0x3bc);
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        acc += f(&mut rng);
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("x*x >= 0", 1, 50, |r| r.normal(), |x| {
+            if x * x >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failure() {
+        forall("always-fails", 1, 3, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn empirical_mean_converges() {
+        let m = empirical_mean(7, 40_000, |r| r.f64());
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+}

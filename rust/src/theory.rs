@@ -1,0 +1,145 @@
+//! Convergence theory (paper §5 + Appendix B/C): stepsize rules and
+//! iteration-complexity predictions parameterised by the 3PC constants
+//! `(A, B)` and the smoothness constants `L₋` (Assumption 5.2) and `L₊`
+//! (Assumption 5.3).
+//!
+//! * Theorem 5.5 (general nonconvex): γ ≤ 1/M₁, M₁ = L₋ + L₊√(B/A),
+//!   giving `E‖∇f(x̂)‖² ≤ 2Δ⁰/(γT) + E[G⁰]/(AT)`.
+//! * Theorem 5.8 (PŁ): γ ≤ 1/M₂, M₂ = max{L₋ + L₊√(2B/A), A/(2μ)},
+//!   giving `E[f(x^T) − f*] ≤ (1 − γμ)^T (Δ⁰ + γ/A·E[G⁰])`.
+//!
+//! The experiment harness multiplies these theoretical stepsizes by
+//! power-of-two factors, exactly as the paper's tuning protocol does.
+
+use crate::mechanisms::MechParams;
+
+/// Smoothness constants of the distributed problem.
+#[derive(Debug, Clone, Copy)]
+pub struct Smoothness {
+    /// `L₋`: smoothness of the average `f`.
+    pub l_minus: f64,
+    /// `L₊`: the mean-square smoothness of Assumption 5.3
+    /// (`(1/n)Σ‖∇fᵢ(x)−∇fᵢ(y)‖² ≤ L₊²‖x−y‖²`). Always ≥ `L₋`.
+    pub l_plus: f64,
+}
+
+impl Smoothness {
+    pub fn new(l_minus: f64, l_plus: f64) -> Smoothness {
+        assert!(l_minus > 0.0 && l_plus > 0.0);
+        Smoothness { l_minus, l_plus }
+    }
+
+    /// The Hessian-variance constant `L±` of Definition E.1 satisfies
+    /// `L₊² = L₋² + L±²` only for the quadratic construction; in general
+    /// we report it via `L±² ≤ L₊² − L₋²` when that is non-negative.
+    pub fn l_pm_upper(&self) -> f64 {
+        (self.l_plus * self.l_plus - self.l_minus * self.l_minus).max(0.0).sqrt()
+    }
+}
+
+/// `M₁ = L₋ + L₊·√(B/A)` (Theorem 5.5).
+pub fn m1(p: MechParams, s: Smoothness) -> f64 {
+    s.l_minus + s.l_plus * p.ratio().sqrt()
+}
+
+/// The largest theoretical stepsize for the general nonconvex regime.
+pub fn stepsize_nonconvex(p: MechParams, s: Smoothness) -> f64 {
+    1.0 / m1(p, s)
+}
+
+/// `M₂ = max{L₋ + L₊√(2B/A), A/(2μ)}` (Theorem 5.8).
+pub fn m2(p: MechParams, s: Smoothness, mu: f64) -> f64 {
+    let grad_term = s.l_minus + s.l_plus * (2.0 * p.ratio()).sqrt();
+    grad_term.max(p.a / (2.0 * mu))
+}
+
+/// The largest theoretical stepsize under the PŁ condition.
+pub fn stepsize_pl(p: MechParams, s: Smoothness, mu: f64) -> f64 {
+    1.0 / m2(p, s, mu)
+}
+
+/// Predicted iteration count to reach `E‖∇f(x̂)‖² ≤ ε²` (Corollary 5.6),
+/// with `Δ⁰ = f(x⁰) − f^inf` and `G⁰` the initial compression error.
+pub fn iters_nonconvex(p: MechParams, s: Smoothness, delta0: f64, g0: f64, eps: f64) -> f64 {
+    let gamma = stepsize_nonconvex(p, s);
+    (2.0 * delta0 / gamma + g0 / p.a) / (eps * eps)
+}
+
+/// Predicted iteration count to reach `E[f − f*] ≤ ε` under PŁ
+/// (Corollary 5.9).
+pub fn iters_pl(p: MechParams, s: Smoothness, mu: f64, delta0: f64, g0: f64, eps: f64) -> f64 {
+    let gamma = stepsize_pl(p, s, mu);
+    let target = (delta0 + gamma / p.a * g0).max(eps * 1e-12);
+    ((target / eps).ln() / (gamma * mu)).max(0.0)
+}
+
+/// Paper-style stepsize tuning grid: `multipliers[i] × γ_theory`,
+/// multipliers being powers of two (the paper uses 2⁰..2¹¹ for the
+/// heatmaps and 2^-12..2^5 absolute stepsizes for the autoencoder).
+pub fn power_of_two_multipliers(lo_exp: i32, hi_exp: i32) -> Vec<f64> {
+    (lo_exp..=hi_exp).map(|e| 2f64.powi(e)).collect()
+}
+
+/// Table 1 as data: `(method label, A, B, B/A)` for a report/verification
+/// table, computed from the mechanism's own certificate.
+pub fn table1_row(name: &str, p: MechParams) -> (String, f64, f64, f64) {
+    (name.to_string(), p.a, p.b, p.ratio())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: Smoothness = Smoothness { l_minus: 1.0, l_plus: 2.0 };
+
+    #[test]
+    fn gd_stepsize_is_one_over_l() {
+        // A = 1, B = 0 → γ = 1/L₋ (classic GD).
+        let p = MechParams { a: 1.0, b: 0.0 };
+        assert!((stepsize_nonconvex(p, S) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn m1_monotone_in_ratio() {
+        let worse = MechParams { a: 0.1, b: 1.0 };
+        let better = MechParams { a: 0.5, b: 1.0 };
+        assert!(m1(worse, S) > m1(better, S));
+        assert!(stepsize_nonconvex(worse, S) < stepsize_nonconvex(better, S));
+    }
+
+    #[test]
+    fn pl_stepsize_caps_at_a_over_2mu() {
+        // Tiny μ forces the A/(2μ) branch.
+        let p = MechParams { a: 0.5, b: 0.5 };
+        let mu = 1e-9;
+        let gamma = stepsize_pl(p, S, mu);
+        assert!((gamma - 2.0 * mu / p.a).abs() / gamma < 1e-9);
+    }
+
+    #[test]
+    fn iteration_counts_scale() {
+        let p = MechParams { a: 0.5, b: 0.5 };
+        let t1 = iters_nonconvex(p, S, 1.0, 0.0, 1e-2);
+        let t2 = iters_nonconvex(p, S, 1.0, 0.0, 1e-3);
+        assert!((t2 / t1 - 100.0).abs() < 1e-6, "ε² scaling");
+        let tp1 = iters_pl(p, S, 0.1, 1.0, 0.0, 1e-3);
+        let tp2 = iters_pl(p, S, 0.1, 1.0, 0.0, 1e-6);
+        assert!(tp2 / tp1 < 2.5, "log scaling under PŁ: {tp1} {tp2}");
+    }
+
+    #[test]
+    fn multiplier_grid() {
+        let g = power_of_two_multipliers(0, 3);
+        assert_eq!(g, vec![1.0, 2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn ef21_vs_lag_rates_match_table1() {
+        // Table 1: EF21 B/A = O((1−α)/α²); LAG B/A = ζ.
+        use crate::mechanisms::Ef21;
+        let ef = Ef21::params_for_alpha(0.5);
+        assert!((ef.ratio() - (0.5 / (1.0 - 0.5f64.sqrt()).powi(2))).abs() < 1e-9);
+        let lag = MechParams { a: 1.0, b: 3.0 };
+        assert_eq!(lag.ratio(), 3.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal declarative command-line flag parser (the image has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Typed getters parse on access and report
+//! human-readable errors. Used by the `threepc` binary and every example.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags plus positionals, with a usage string for help.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, val) = if let Some((k, v)) = body.split_once('=') {
+                    (k.to_string(), Some(v.to_string()))
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    let v = if takes_value { it.next() } else { None };
+                    (body.to_string(), v)
+                };
+                args.seen.push(key.clone());
+                args.flags.insert(key, val.unwrap_or_else(|| "true".into()));
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag with default; panics with a clear message on parse error
+    /// (CLI surface — fail fast is the right behaviour).
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean flag: present (with no value or `true`) means true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Comma-separated numeric list.
+    pub fn num_list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .unwrap_or_else(|e| panic!("--{key} element {s}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Keys the user actually passed (for unknown-flag warnings).
+    pub fn seen_keys(&self) -> &[String] {
+        &self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    // NOTE: a boolean flag immediately followed by a positional is
+    // ambiguous (`--verbose fig2` reads fig2 as the value). Convention:
+    // positionals first, boolean flags last or spelled `--flag=true`.
+    #[test]
+    fn parses_all_forms() {
+        let a = parse(&["run", "fig2", "--n", "100", "--zeta=4.5", "--verbose"]);
+        assert_eq!(a.positional(), &["run".to_string(), "fig2".to_string()]);
+        assert_eq!(a.num_or("n", 0usize), 100);
+        assert!((a.num_or("zeta", 0.0f64) - 4.5).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.num_or("steps", 7u32), 7);
+        assert_eq!(a.str_or("dataset", "ijcnn1"), "ijcnn1");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--ks", "1,8,64", "--names", "a, b"]);
+        assert_eq!(a.num_list_or::<usize>("ks", &[]), vec![1, 8, 64]);
+        assert_eq!(a.list_or("names", &[]), vec!["a", "b"]);
+        assert_eq!(a.num_list_or::<usize>("missing", &[3]), vec![3]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--dry-run", "--n", "5"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.num_or("n", 0usize), 5);
+    }
+}

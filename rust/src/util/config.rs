@@ -1,0 +1,145 @@
+//! Flat experiment configuration: `key = value` files plus CLI-style
+//! overrides, with typed access. This replaces serde+TOML on the offline
+//! image. Sections are spelled with dotted keys (`train.steps = 500`).
+//!
+//! Resolution order (later wins): defaults ← file ← overrides.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse `key = value` lines; `#` and `;` start comments; blank lines
+    /// are ignored. Values keep internal whitespace, outer trimmed.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find(['#', ';']) {
+                Some(i) => &raw[..i],
+                None => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("config line {}: expected key = value, got '{raw}'", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("config line {}: empty key", lineno + 1);
+            }
+            cfg.values.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Config> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `key=value` override strings (e.g. from the CLI).
+    pub fn apply_overrides<I: IntoIterator<Item = S>, S: AsRef<str>>(&mut self, ov: I) -> Result<()> {
+        for o in ov {
+            let s = o.as_ref();
+            let (k, v) = s
+                .split_once('=')
+                .with_context(|| format!("override '{s}': expected key=value"))?;
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    pub fn set<S: ToString>(&mut self, key: &str, val: S) {
+        self.values.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("config key '{key}'='{v}': {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config key '{key}': expected bool, got '{v}'"),
+        }
+    }
+
+    /// All keys (sorted), for dumping resolved configs into run records.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Serialise back to the file format (for reproducibility records).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = Config::parse("a = 1\n# comment\ntrain.steps = 500 ; inline\n\nname = ij cnn\n").unwrap();
+        assert_eq!(cfg.num_or("a", 0i32).unwrap(), 1);
+        assert_eq!(cfg.num_or("train.steps", 0u32).unwrap(), 500);
+        assert_eq!(cfg.str_or("name", ""), "ij cnn");
+        let dumped = Config::parse(&cfg.dump()).unwrap();
+        assert_eq!(dumped.str_or("name", ""), "ij cnn");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse("n = 10").unwrap();
+        cfg.apply_overrides(["n=20", "zeta=4"]).unwrap();
+        assert_eq!(cfg.num_or("n", 0usize).unwrap(), 20);
+        assert_eq!(cfg.num_or("zeta", 0.0f64).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(Config::parse("novalue").is_err());
+        let cfg = Config::parse("x = abc").unwrap();
+        let err = cfg.num_or("x", 0i32).unwrap_err().to_string();
+        assert!(err.contains("'x'"), "{err}");
+        assert!(cfg.bool_or("x", true).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Dense vector kernels used throughout the coordinator hot path.
+//!
+//! All state that crosses the wire is `f32` (matching the HLO artifacts);
+//! accumulations that span many rounds or many workers are carried in
+//! `f64` to keep the server/worker consistency invariant testable.
+
+/// Squared Euclidean norm, accumulated in f64.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// Squared distance ‖x − y‖².
+#[inline]
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Dot product in f64.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `out = x - y`.
+#[inline]
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// `x *= a` in place.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Copy `src` into `dst`.
+#[inline]
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+/// `acc += x` with an f64 accumulator.
+#[inline]
+pub fn add_into_f64(acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += v as f64;
+    }
+}
+
+/// Round an f64 accumulator back to f32 with a scalar factor.
+#[inline]
+pub fn scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = (a * factor) as f32;
+    }
+}
+
+/// Dense mat-vec: `out = M x` where `M` is row-major `(rows, cols)`.
+pub fn matvec(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        out[r] = dot(row, x) as f32;
+    }
+}
+
+/// Dense transposed mat-vec: `out = Mᵀ x`, `M` row-major `(rows, cols)`.
+pub fn matvec_t(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let xr = x[r];
+        if xr != 0.0 {
+            axpy(xr, row, out);
+        }
+    }
+}
+
+/// `out = A B` with row-major `A (m,k)`, `B (k,n)`, `out (m,n)`.
+///
+/// Simple ikj loop order (cache-friendly over `B` rows); the heavy matmuls
+/// in this project run through the HLO/Pallas path — this native version
+/// is the oracle and the sweep fast-path for small models.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                axpy(aip, brow, orow);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_and_dot() {
+        let x = [3.0f32, 4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-9);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-9);
+        assert!((dist_sq(&x, &[0.0, 0.0]) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_sub_scale() {
+        let x = [1.0f32, 2.0];
+        let mut y = [10.0f32, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        let mut out = [0.0f32; 2];
+        sub(&y, &x, &mut out);
+        assert_eq!(out, [11.0, 22.0]);
+        scale(&mut out, 2.0);
+        assert_eq!(out, [22.0, 44.0]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        // M = [[1,2],[3,4],[5,6]] (3x2), x = [1, -1]
+        let m = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [1.0f32, -1.0];
+        let mut out = [0.0f32; 3];
+        matvec(&m, 3, 2, &x, &mut out);
+        assert_eq!(out, [-1.0, -1.0, -1.0]);
+        let y = [1.0f32, 0.0, 1.0];
+        let mut out_t = [0.0f32; 2];
+        matvec_t(&m, 3, 2, &y, &mut out_t);
+        assert_eq!(out_t, [6.0, 8.0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let b = [1.0f32, 1.0, 1.0, 1.0]; // 2x2 ones
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn f64_accumulation_roundtrip() {
+        let mut acc = vec![0.0f64; 3];
+        add_into_f64(&mut acc, &[1.0, 2.0, 3.0]);
+        add_into_f64(&mut acc, &[1.0, 2.0, 3.0]);
+        let mut out = vec![0.0f32; 3];
+        scaled_to_f32(&acc, 0.5, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+}

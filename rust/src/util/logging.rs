@@ -1,0 +1,99 @@
+//! Tiny leveled logger (no `log`/`env_logger` on the offline image).
+//!
+//! Level is set once (from `--log-level` or `THREEPC_LOG`); macros are
+//! cheap no-ops below the threshold. Timestamps are monotonic seconds
+//! since process start — good enough for experiment traces.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn set_level_str(s: &str) {
+    let lvl = match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        other => {
+            eprintln!("unknown log level '{other}', keeping current");
+            return;
+        }
+    };
+    set_level(lvl);
+}
+
+/// Initialise from the environment (`THREEPC_LOG=debug`).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("THREEPC_LOG") {
+        set_level_str(&v);
+    }
+    once_cell::sync::Lazy::force(&START);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let t = START.elapsed().as_secs_f64();
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities: everything a normal project would pull from
+//! crates.io (`rand`, `clap`, `serde`, `log`, stats helpers) implemented
+//! in-tree because this build is fully offline.
+
+pub mod cli;
+pub mod config;
+pub mod linalg;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

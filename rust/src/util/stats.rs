@@ -1,0 +1,151 @@
+//! Small statistics helpers: summary stats, quantiles, and least-squares
+//! slope fits used to *measure* convergence rates in the rate-verification
+//! experiments (Table 2) and in the benchmark harness.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Quantile with linear interpolation; `q` in `[0,1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median absolute deviation (robust spread, used by benchkit).
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|&x| (x - m).abs()).collect();
+    median(&dev)
+}
+
+/// Ordinary least squares fit `y ≈ a + b x`; returns `(a, b)`.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for i in 0..x.len() {
+        sxx += (x[i] - mx) * (x[i] - mx);
+        sxy += (x[i] - mx) * (y[i] - my);
+    }
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Fit `log(y) ≈ a + b·t` over the entries with `y > floor`; returns the
+/// per-step contraction factor `exp(b)`. Used to verify *linear* rates
+/// (Theorem 5.8): a method converges linearly iff the fitted factor < 1
+/// with a good fit.
+pub fn linear_rate_factor(ys: &[f64], floor: f64) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = ys
+        .iter()
+        .enumerate()
+        .filter(|(_, &y)| y > floor)
+        .map(|(t, &y)| (t as f64, y.ln()))
+        .collect();
+    if pts.len() < 8 {
+        return None;
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ls: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, b) = linear_fit(&xs, &ls);
+    Some(b.exp())
+}
+
+/// Fit `log(y) ≈ a + b·log(t)`; returns the power-law exponent `b`.
+/// Used to verify sublinear O(1/T) rates: min-grad-norm² vs T should
+/// decay with exponent ≈ −1.
+pub fn power_law_exponent(ys: &[f64]) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = ys
+        .iter()
+        .enumerate()
+        .skip(1)
+        .filter(|(_, &y)| y > 0.0)
+        .map(|(t, &y)| ((t as f64).ln(), y.ln()))
+        .collect();
+    if pts.len() < 8 {
+        return None;
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ls: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, b) = linear_fit(&xs, &ls);
+    Some(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_slope() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 + 2.0 * v).collect();
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_factor_detects_geometric_decay() {
+        let ys: Vec<f64> = (0..60).map(|t| 10.0 * 0.9f64.powi(t)).collect();
+        let f = linear_rate_factor(&ys, 1e-30).unwrap();
+        assert!((f - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_law_detects_one_over_t() {
+        let ys: Vec<f64> = (0..200).map(|t| 5.0 / (t as f64 + 1.0)).collect();
+        let b = power_law_exponent(&ys).unwrap();
+        assert!((b + 1.0).abs() < 0.1, "exponent {b}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: the PJRT/HLO execution path vs the native Rust oracle.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+//! These tests prove the three layers compose: JAX/Pallas (L1/L2) →
+//! HLO text → PJRT compile/execute from the Rust coordinator (L3),
+//! with numerics pinned to the independent native implementations.
+
+use std::sync::Arc;
+
+use threepc::coordinator::{train, InitPolicy, TrainConfig};
+use threepc::data;
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::{Autoencoder, Distributed, LocalProblem, LogReg, QuadLocal};
+use threepc::runtime::{DeviceService, HloAutoencoder, HloLogReg, HloQuad, Manifest};
+use threepc::util::rng::Pcg64;
+
+fn manifest() -> Manifest {
+    Manifest::load(threepc::runtime::default_artifacts_dir())
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        let scale = 1.0 + a[i].abs().max(b[i].abs());
+        assert!(
+            (a[i] - b[i]).abs() / scale < tol,
+            "{what}: coord {i}: native {} vs hlo {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn logreg_hlo_matches_native() {
+    let manifest = manifest();
+    let dev = DeviceService::start().expect("PJRT CPU client");
+    let m = manifest.prop("logreg_ijcnn1", "m").unwrap();
+    let d = manifest.prop("logreg_ijcnn1", "d").unwrap();
+
+    let mut rng = Pcg64::seed(11);
+    let rows: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let labels: Vec<f32> = (0..m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+
+    let native = LogReg::new(rows.clone(), labels.clone(), d, 0.1);
+    let hlo = HloLogReg::new(dev.handle(), &manifest, "ijcnn1", "w0", rows, labels).unwrap();
+
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_ms(0.0, 0.5) as f32).collect();
+    let mut gn = vec![0.0f32; d];
+    let mut gh = vec![0.0f32; d];
+    native.grad(&x, &mut gn);
+    hlo.grad(&x, &mut gh);
+    assert_close(&gn, &gh, 1e-4, "logreg grad");
+    let (ln, lh) = (native.loss(&x), hlo.loss(&x));
+    assert!((ln - lh).abs() / (1.0 + ln.abs()) < 1e-5, "loss {ln} vs {lh}");
+}
+
+#[test]
+fn quad_hlo_matches_native() {
+    let manifest = manifest();
+    let dev = DeviceService::start().expect("PJRT CPU client");
+    let d = manifest.prop("quad_grad", "d").unwrap();
+    let mut rng = Pcg64::seed(13);
+    let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let (nu, shift) = (1.7, 0.9);
+
+    let native = QuadLocal::new(nu, shift, b.clone());
+    let hlo = HloQuad::new(dev.handle(), &manifest, "w0", nu, shift, b).unwrap();
+
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let mut gn = vec![0.0f32; d];
+    let mut gh = vec![0.0f32; d];
+    native.grad(&x, &mut gn);
+    hlo.grad(&x, &mut gh);
+    assert_close(&gn, &gh, 1e-4, "quad grad");
+    let (ln, lh) = (native.loss(&x), hlo.loss(&x));
+    assert!((ln - lh).abs() / (1.0 + ln.abs()) < 1e-4, "loss {ln} vs {lh}");
+}
+
+#[test]
+fn autoencoder_hlo_matches_native() {
+    let manifest = manifest();
+    let dev = DeviceService::start().expect("PJRT CPU client");
+    let m = manifest.prop("ae_grad", "m").unwrap();
+    let d_f = manifest.prop("ae_grad", "d_f").unwrap();
+    let d_e = manifest.prop("ae_grad", "d_e").unwrap();
+
+    let ds = data::synthetic_mnist(m, 17);
+    assert_eq!(ds.d, d_f);
+    let native = Autoencoder::new(ds.x.clone(), d_f, d_e);
+    let hlo = HloAutoencoder::new(dev.handle(), &manifest, "w0", ds.x).unwrap();
+
+    let mut rng = Pcg64::seed(19);
+    let dim = 2 * d_f * d_e;
+    let x: Vec<f32> = (0..dim).map(|_| rng.normal_ms(0.0, 0.05) as f32).collect();
+    let mut gn = vec![0.0f32; dim];
+    let mut gh = vec![0.0f32; dim];
+    native.grad(&x, &mut gn);
+    hlo.grad(&x, &mut gh);
+    assert_close(&gn, &gh, 5e-3, "ae grad");
+    let (ln, lh) = (native.loss(&x), hlo.loss(&x));
+    assert!((ln - lh).abs() / (1.0 + ln.abs()) < 1e-4, "loss {ln} vs {lh}");
+}
+
+/// End-to-end: a short distributed EF21 training run entirely through the
+/// HLO gradient path must track the native run round-for-round.
+#[test]
+fn training_through_hlo_matches_native_run() {
+    let manifest = manifest();
+    let dev = DeviceService::start().expect("PJRT CPU client");
+    let d = manifest.prop("quad_grad", "d").unwrap();
+    let n = 4;
+
+    let suite = threepc::problems::quadratic::generate(n, d, 1e-2, 0.5, 23);
+    let native = &suite.problem;
+
+    let hlo_locals: Vec<Arc<dyn LocalProblem>> = suite
+        .locals
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            Arc::new(
+                HloQuad::new(dev.handle(), &manifest, &format!("w{i}"), q.nu, q.shift, q.b.clone())
+                    .unwrap(),
+            ) as Arc<dyn LocalProblem>
+        })
+        .collect();
+    let hlo_problem = Distributed::new(hlo_locals, native.x0.clone());
+
+    let cfg = TrainConfig {
+        gamma: 0.05 / suite.l_minus,
+        max_rounds: 25,
+        threads: 2,
+        seed: 5,
+        init: InitPolicy::FullGradient,
+        ..TrainConfig::default()
+    };
+    let map = parse_mechanism("ef21:top32").unwrap();
+    let rn = train(native, map.clone(), &cfg);
+    let rh = train(&hlo_problem, map, &cfg);
+
+    assert_eq!(rn.rounds_run, rh.rounds_run);
+    for (a, b) in rn.records.iter().zip(&rh.records) {
+        let rel = (a.grad_norm_sq - b.grad_norm_sq).abs() / (1e-12 + a.grad_norm_sq);
+        assert!(rel < 1e-3, "round {}: native {} vs hlo {}", a.t, a.grad_norm_sq, b.grad_norm_sq);
+        assert_eq!(a.bits_up_cum, b.bits_up_cum, "bit accounting must be identical");
+    }
+}

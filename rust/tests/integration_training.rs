@@ -1,0 +1,210 @@
+//! Integration tests across coordinator + mechanisms + problems:
+//! convergence behaviour, rate shapes, reduction identities, and
+//! bit-accounting invariants on full training runs (native backend —
+//! the HLO-path equivalents live in integration_runtime.rs).
+
+use std::sync::Arc;
+use threepc::coordinator::{train, InitPolicy, TrainConfig};
+use threepc::data;
+use threepc::experiments::common;
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::quadratic;
+use threepc::problems::LocalProblem;
+use threepc::util::stats;
+
+fn cfg(gamma: f64, rounds: usize) -> TrainConfig {
+    TrainConfig { gamma, max_rounds: rounds, seed: 77, ..TrainConfig::default() }
+}
+
+/// Theorem 5.8 made measurable: every 3PC method at its theoretical PŁ
+/// stepsize contracts the gradient norm geometrically on the quadratic
+/// suite.
+#[test]
+fn all_methods_converge_linearly_under_pl() {
+    let suite = quadratic::generate(6, 60, 5e-2, 0.5, 3);
+    let s = suite.problem.smoothness.unwrap();
+    let mu = suite.mu;
+    for spec in [
+        "gd",
+        "ef21:top6",
+        "lag:4.0",
+        "clag:top6:4.0",
+        "v1:top6",
+        "v2:rand6:top6",
+        "v3:ef21:top6;top6",
+        "v4:top6:top6",
+        "v5:0.3:top6",
+        "marina:0.3:rand6",
+    ] {
+        let map = parse_mechanism(spec).unwrap();
+        let info = threepc::compressors::CtxInfo { dim: 60, n_workers: 6, worker_id: 0 };
+        let params = map.params(&info).unwrap();
+        let gamma = threepc::theory::stepsize_pl(params, s, mu);
+        let r = train(&suite.problem, map, &cfg(gamma, 2500));
+        assert!(!r.diverged, "{spec} diverged");
+        let gns: Vec<f64> = r.records.iter().map(|rec| rec.grad_norm_sq).collect();
+        let factor = stats::linear_rate_factor(&gns, 1e-22).unwrap_or(1.0);
+        assert!(
+            factor < 0.9999,
+            "{spec}: no linear contraction (factor {factor}), final {}",
+            r.final_grad_norm_sq
+        );
+        // The compression error G^t must decay along with convergence
+        // (the defining 3PC property, Eq. 9).
+        let g_first = r.records[2].g_err;
+        let g_last = r.records.last().unwrap().g_err;
+        assert!(
+            g_last < g_first * 0.5 || g_last < 1e-12,
+            "{spec}: G^t did not decay ({g_first} → {g_last})"
+        );
+    }
+}
+
+/// The reduction identities of §4.5 hold for *whole training runs*, not
+/// just single applications: CLAG(ζ=0) ≡ EF21 and CLAG(identity) ≡ LAG
+/// trace-for-trace (same seeds).
+#[test]
+fn clag_reductions_hold_over_full_runs() {
+    let suite = quadratic::generate(5, 40, 1e-2, 0.8, 9);
+    let c = cfg(0.05, 120);
+    let ef = train(&suite.problem, parse_mechanism("ef21:top4").unwrap(), &c);
+    let clag0 = train(&suite.problem, parse_mechanism("clag:top4:0.0").unwrap(), &c);
+    for (a, b) in ef.records.iter().zip(&clag0.records) {
+        assert_eq!(a.grad_norm_sq, b.grad_norm_sq, "round {}", a.t);
+    }
+    let lag = train(&suite.problem, parse_mechanism("lag:4.0").unwrap(), &c);
+    let clag_id = train(&suite.problem, parse_mechanism("clag:identity:4.0").unwrap(), &c);
+    for (a, b) in lag.records.iter().zip(&clag_id.records) {
+        // LAG folds Replace deltas in f64 while CLAG(identity) emits f32
+        // increments — identical semantics up to one f32 rounding.
+        let rel = (a.grad_norm_sq - b.grad_norm_sq).abs() / (1e-300 + a.grad_norm_sq);
+        assert!(rel < 1e-6, "round {}: {} vs {}", a.t, a.grad_norm_sq, b.grad_norm_sq);
+        // identical updates → identical payload bits
+        assert_eq!(a.bits_up_cum, b.bits_up_cum, "round {}", a.t);
+    }
+}
+
+/// Naive DCGD with aggressive Top-K stalls at a plateau that EF21 (same
+/// compressor, 3PC mechanism) breaks through — §2.1's motivation.
+#[test]
+fn ef21_fixes_dcgd_stall() {
+    let suite = quadratic::generate(6, 50, 5e-2, 0.0, 5);
+    let gamma = 0.2 / suite.l_minus;
+    let dcgd = train(&suite.problem, parse_mechanism("dcgd:top1").unwrap(), &cfg(gamma, 1500));
+    let ef21 = train(&suite.problem, parse_mechanism("ef21:top1").unwrap(), &cfg(gamma, 1500));
+    assert!(
+        ef21.final_grad_norm_sq < dcgd.final_grad_norm_sq * 1e-2,
+        "EF21 {} should beat DCGD {} by ≫100x",
+        ef21.final_grad_norm_sq,
+        dcgd.final_grad_norm_sq
+    );
+}
+
+/// Lazy aggregation saves uplink bits on logreg relative to GD at equal
+/// tolerance (the Figures 21–24 shape).
+#[test]
+fn lazy_methods_save_bits_on_logreg() {
+    let ds = data::synthetic_libsvm("ijcnn1", false, 3).unwrap();
+    let problem = common::logreg_problem(&ds, 8, 0.1, 1);
+    let tol = 0.2; // ‖∇f‖ target reachable by all methods within the round cap
+    let mut bits = std::collections::HashMap::new();
+    for spec in ["gd", "clag:top5:16.0"] {
+        let map = parse_mechanism(spec).unwrap();
+        let base = common::base_gamma(&problem, map.as_ref());
+        let tuned = common::tune_stepsize(
+            &problem,
+            map,
+            base,
+            &[4.0, 16.0, 64.0, 256.0, 1024.0],
+            &TrainConfig { max_rounds: 3000, grad_tol: Some(tol), seed: 5, ..TrainConfig::default() },
+            common::Criterion::MinBitsToTol(tol),
+        );
+        bits.insert(spec, tuned.score.expect(spec));
+    }
+    assert!(
+        bits["clag:top5:16.0"] < bits["gd"] * 0.7,
+        "CLAG {} not clearly cheaper than GD {}",
+        bits["clag:top5:16.0"],
+        bits["gd"]
+    );
+}
+
+/// Zero-init g⁰ still converges (§4.2 option c) and bills no init bits.
+#[test]
+fn zero_init_converges() {
+    let suite = quadratic::generate(4, 30, 5e-2, 0.2, 11);
+    let mut c = cfg(0.1 / suite.l_minus, 2500);
+    c.init = InitPolicy::Zero;
+    c.grad_tol = Some(1e-3);
+    let r = train(&suite.problem, parse_mechanism("ef21:top3").unwrap(), &c);
+    assert!(r.converged, "final {}", r.final_grad_norm_sq);
+    // First record's bits must be strictly less than full-gradient init.
+    let first = &r.records[0];
+    assert!(first.bits_up_cum < 32.0 * 30.0 + 64.0);
+}
+
+/// Determinism: identical seeds give identical traces; different seeds
+/// differ (randomized mechanisms).
+#[test]
+fn seeded_reproducibility() {
+    let suite = quadratic::generate(4, 30, 1e-2, 0.5, 17);
+    let mk = || parse_mechanism("v2:rand3:top3").unwrap();
+    let a = train(&suite.problem, mk(), &cfg(0.05, 60));
+    let b = train(&suite.problem, mk(), &cfg(0.05, 60));
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.grad_norm_sq, y.grad_norm_sq);
+    }
+    let mut c2 = cfg(0.05, 60);
+    c2.seed = 123;
+    let c = train(&suite.problem, mk(), &c2);
+    assert!(
+        a.records
+            .iter()
+            .zip(&c.records)
+            .any(|(x, y)| x.grad_norm_sq != y.grad_norm_sq),
+        "different seeds must perturb randomized runs"
+    );
+}
+
+/// The LAG skip-rate increases with ζ (monotone trigger behaviour).
+#[test]
+fn skip_rate_monotone_in_zeta() {
+    let suite = quadratic::generate(6, 40, 1e-2, 0.5, 19);
+    let mut last = -1.0;
+    for zeta in [0.5, 4.0, 32.0, 256.0] {
+        let r = train(
+            &suite.problem,
+            parse_mechanism(&format!("lag:{zeta}")).unwrap(),
+            &cfg(0.02, 150),
+        );
+        let rate = r.mean_skip_rate();
+        assert!(rate >= last - 0.05, "zeta {zeta}: skip {rate} vs prev {last}");
+        last = rate;
+    }
+    assert!(last > 0.5, "large zeta should skip most rounds ({last})");
+}
+
+/// The typed quadratic handles and the distributed problem's trait
+/// objects alias the same locals.
+#[test]
+fn quad_suite_handles_alias() {
+    let suite = quadratic::generate(3, 10, 1e-2, 0.3, 21);
+    for (q, l) in suite.locals.iter().zip(&suite.problem.locals) {
+        let x = vec![0.5f32; 10];
+        let mut a = vec![0.0f32; 10];
+        let mut b = vec![0.0f32; 10];
+        q.grad(&x, &mut a);
+        l.grad(&x, &mut b);
+        assert_eq!(a, b);
+    }
+}
+
+/// Scale check: n = 200 workers through the threaded orchestrator.
+#[test]
+fn scales_to_many_workers() {
+    let suite = quadratic::generate(200, 50, 1e-2, 0.5, 23);
+    let r = train(&suite.problem, parse_mechanism("clag:top2:8.0").unwrap(), &cfg(0.05, 30));
+    assert_eq!(r.records.len(), 30);
+    assert!(!r.diverged);
+    let _: &Arc<dyn LocalProblem> = &suite.problem.locals[0];
+}
