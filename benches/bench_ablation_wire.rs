@@ -1,9 +1,104 @@
-//! Regenerates Wire-format ablation (ablation-wire) at bench scale and times it.
-//! Full-scale regeneration: `threepc exp ablation-wire` (see DESIGN.md section 4).
+//! Wire-format ablation, measured for real: codec encode/decode
+//! throughput across sparsity levels (including the sparse→dense cap
+//! crossover the accounting assumes) and the per-round overhead of the
+//! serializing `Framed` transport against the in-memory `InProcess`
+//! pool on the quadratic suite.
+//!
+//! The declared-bits side of the ablation (`threepc exp ablation-wire`)
+//! stays in the experiment harness; this bench times the bytes.
 
 #[path = "benchkit/mod.rs"]
 mod benchkit;
 
+use threepc::compressors::CVec;
+use threepc::coordinator::{
+    decode_uplink, encode_uplink, Framed, InProcess, TrainConfig, TrainSession, UplinkMsg,
+};
+use threepc::mechanisms::{parse_mechanism, Update};
+use threepc::problems::quadratic;
+use threepc::util::rng::Pcg64;
+
+fn sparse_msg(d: usize, k: usize, rng: &mut Pcg64) -> UplinkMsg {
+    let idx: Vec<u32> = rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+    let val: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+    let inc = CVec::Sparse { dim: d, idx, val };
+    let bits = inc.wire_bits();
+    UplinkMsg { worker_id: 0, update: Update::Increment { inc, bits }, g_err: 0.0 }
+}
+
 fn main() {
-    benchkit::run_experiment("ablation-wire", &[]);
+    println!("== wire codec throughput (d = 25088) ==");
+    let d = 25_088;
+    let mut rng = Pcg64::seed(7);
+    // K sweep spans the sparse regime up to past the cap crossover
+    // (K/d = 32/(32+15) ≈ 0.68 at d = 25088).
+    for k in [251usize, 2508, 12544, 20000] {
+        let msg = sparse_msg(d, k, &mut rng);
+        let bytes = encode_uplink(&msg);
+        let s = benchkit::measure(&format!("encode k={k} ({} B)", bytes.len()), 10, 200, || {
+            std::hint::black_box(encode_uplink(std::hint::black_box(&msg)));
+        });
+        println!("    → {:.1} MB/s", benchkit::throughput(&s, bytes.len()) / 1e6);
+        let s = benchkit::measure(&format!("decode k={k}"), 10, 200, || {
+            std::hint::black_box(decode_uplink(std::hint::black_box(&bytes)).unwrap());
+        });
+        println!("    → {:.1} MB/s", benchkit::throughput(&s, bytes.len()) / 1e6);
+    }
+
+    // Dense replace frames (GD/LAG fire path).
+    let dense = UplinkMsg {
+        worker_id: 0,
+        update: Update::Replace {
+            g: (0..d).map(|i| i as f32).collect(),
+            bits: 32 * d as u64,
+            wire: threepc::mechanisms::ReplaceWire::Dense,
+        },
+        g_err: 0.0,
+    };
+    let bytes = encode_uplink(&dense);
+    let s = benchkit::measure(&format!("encode dense ({} B)", bytes.len()), 10, 200, || {
+        std::hint::black_box(encode_uplink(std::hint::black_box(&dense)));
+    });
+    println!("    → {:.1} MB/s", benchkit::throughput(&s, bytes.len()) / 1e6);
+
+    // Framed vs InProcess per-round overhead: cheap gradients make the
+    // difference pure transport cost.
+    println!("\n== Framed vs InProcess per-round overhead (quadratic suite) ==");
+    for (n, dq) in [(20usize, 1000usize), (100, 1000)] {
+        let suite = quadratic::generate(n, dq, 1e-4, 0.5, 7);
+        let rounds = 30;
+        let cfg = TrainConfig {
+            gamma: 1e-3,
+            max_rounds: rounds,
+            threads: 1,
+            seed: 1,
+            ..TrainConfig::default()
+        };
+        let map = parse_mechanism("clag:top20:4.0").unwrap();
+        let s_in = benchkit::measure(&format!("inprocess n={n} d={dq} ({rounds} rounds)"), 1, 5, || {
+            std::hint::black_box(
+                TrainSession::builder(&suite.problem)
+                    .mechanism(map.clone())
+                    .config(cfg.clone())
+                    .transport(InProcess::new(1))
+                    .run(),
+            );
+        });
+        let s_fr = benchkit::measure(&format!("framed    n={n} d={dq} ({rounds} rounds)"), 1, 5, || {
+            std::hint::black_box(
+                TrainSession::builder(&suite.problem)
+                    .mechanism(map.clone())
+                    .config(cfg.clone())
+                    .transport(Framed)
+                    .run(),
+            );
+        });
+        let per_round_in = s_in.median.as_secs_f64() * 1e3 / rounds as f64;
+        let per_round_fr = s_fr.median.as_secs_f64() * 1e3 / rounds as f64;
+        println!(
+            "    → {per_round_in:.3} ms/round in-process, {per_round_fr:.3} ms/round framed \
+             ({:.2}x serialization overhead)",
+            per_round_fr / per_round_in
+        );
+    }
 }

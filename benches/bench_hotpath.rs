@@ -11,7 +11,7 @@ mod benchkit;
 
 use std::sync::Arc;
 use threepc::compressors::{Contractive, Ctx, CtxInfo, TopK};
-use threepc::coordinator::{train, TrainConfig};
+use threepc::coordinator::{TrainConfig, TrainSession};
 use threepc::mechanisms::parse_mechanism;
 use threepc::problems::quadratic;
 use threepc::util::rng::Pcg64;
@@ -69,7 +69,12 @@ fn main() {
             1,
             5,
             || {
-                std::hint::black_box(train(&suite.problem, map.clone(), &cfg));
+                std::hint::black_box(
+                    TrainSession::builder(&suite.problem)
+                        .mechanism(map.clone())
+                        .config(cfg.clone())
+                        .run(),
+                );
             },
         );
         println!(

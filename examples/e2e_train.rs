@@ -14,7 +14,7 @@
 //! ```
 
 use std::sync::Arc;
-use threepc::coordinator::{train, TrainConfig};
+use threepc::coordinator::{StreamObserver, TrainConfig, TrainSession};
 use threepc::data;
 use threepc::mechanisms::parse_mechanism;
 use threepc::problems::{Distributed, LocalProblem};
@@ -84,7 +84,23 @@ fn main() -> anyhow::Result<()> {
     };
     let map = parse_mechanism(&mech_spec)?;
     let started = std::time::Instant::now();
-    let r = train(&problem, map, &cfg);
+    // Stream loss evaluations as they happen — the observer sees every
+    // round live instead of waiting for the final TrainResult.
+    let r = TrainSession::builder(&problem)
+        .mechanism(map)
+        .config(cfg)
+        .observer(StreamObserver::new(|s: &threepc::coordinator::RoundSnapshot<'_>| {
+            if let Some(loss) = s.loss {
+                println!(
+                    "[live] round {:>4}: f(x) = {}  ‖∇f‖² = {}  {} bits/worker",
+                    s.t,
+                    fnum(loss),
+                    fnum(s.grad_norm_sq),
+                    fnum(s.bits_up_cum)
+                );
+            }
+        }))
+        .run();
     let elapsed = started.elapsed();
 
     // Report: loss curve + communication.

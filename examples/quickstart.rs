@@ -8,8 +8,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use std::sync::Arc;
-use threepc::coordinator::{train, TrainConfig};
+use threepc::coordinator::TrainConfig;
 use threepc::mechanisms::parse_mechanism;
 use threepc::problems::quadratic;
 use threepc::theory;

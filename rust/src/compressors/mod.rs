@@ -143,6 +143,156 @@ impl CVec {
             }
         }
     }
+
+    /// Serialize into `out` using the byte format the [`wire_bits`]
+    /// accounting describes:
+    ///
+    /// ```text
+    /// cvec := tag:u8  dim:u32
+    ///         tag 0 (zero)   ε
+    ///         tag 1 (dense)  v:[f32; dim]
+    ///         tag 2 (sparse) nnz:u32  val:[f32; nnz]  idx: nnz × ⌈log₂ d⌉ bits, byte-padded
+    /// ```
+    ///
+    /// A sparse vector past the cap crossover (`nnz·(32+⌈log₂ d⌉) ≥
+    /// 32·d` — exactly when `wire_bits` caps) is encoded *dense*, the
+    /// rational-sender switch the accounting assumes; it decodes as
+    /// [`CVec::Dense`] with the same coordinate values. Payload bytes
+    /// equal `wire_bits` up to the final index byte's padding.
+    ///
+    /// [`wire_bits`]: CVec::wire_bits
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            CVec::Zero { dim } => {
+                out.push(0);
+                out.extend_from_slice(&(*dim as u32).to_le_bytes());
+            }
+            CVec::Dense(v) => encode_dense(v, out),
+            CVec::Sparse { dim, idx, val } => {
+                let per = 32 + index_bits(*dim);
+                if idx.len() as u64 * per >= 32 * *dim as u64 {
+                    // Cap crossover: sparsity stopped paying.
+                    encode_dense(&self.to_dense(), out);
+                    return;
+                }
+                out.push(2);
+                out.extend_from_slice(&(*dim as u32).to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for v in val {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                let ib = index_bits(*dim) as u32;
+                let mut w = crate::util::bits::BitWriter::new(out);
+                for &i in idx {
+                    w.push(i as u64, ib);
+                }
+            }
+        }
+    }
+
+    /// Exact number of bytes [`CVec::encode`] appends.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            CVec::Zero { .. } => 5,
+            CVec::Dense(v) => 5 + 4 * v.len(),
+            CVec::Sparse { dim, idx, .. } => {
+                let per = 32 + index_bits(*dim);
+                if idx.len() as u64 * per >= 32 * *dim as u64 {
+                    5 + 4 * dim
+                } else {
+                    5 + 4 + 4 * idx.len()
+                        + crate::util::bits::bytes_for_bits(idx.len() as u64 * index_bits(*dim))
+                }
+            }
+        }
+    }
+
+    /// Decode one `cvec` frame starting at `buf[*pos..]`, advancing
+    /// `*pos` past it.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> anyhow::Result<CVec> {
+        let tag = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("cvec: truncated tag"))?;
+        *pos += 1;
+        let dim = read_u32(buf, pos)? as usize;
+        match tag {
+            0 => Ok(CVec::Zero { dim }),
+            1 => {
+                // Bound-check the whole body before allocating: dim is
+                // wire-controlled, and a corrupt frame must fail with
+                // Err, not an OOM abort.
+                anyhow::ensure!(
+                    buf.len() - *pos >= 4 * dim,
+                    "cvec: truncated dense body (dim {dim})"
+                );
+                let mut v = Vec::with_capacity(dim);
+                for _ in 0..dim {
+                    v.push(read_f32(buf, pos)?);
+                }
+                Ok(CVec::Dense(v))
+            }
+            2 => {
+                let nnz = read_u32(buf, pos)? as usize;
+                anyhow::ensure!(
+                    nnz as u64 * (32 + index_bits(dim)) < 32 * dim as u64,
+                    "cvec: sparse frame past the dense crossover (nnz {nnz}, dim {dim})"
+                );
+                // Same wire-controlled-allocation guard as the dense arm.
+                anyhow::ensure!(
+                    buf.len() - *pos
+                        >= 4 * nnz + crate::util::bits::bytes_for_bits(nnz as u64 * index_bits(dim)),
+                    "cvec: truncated sparse body (nnz {nnz})"
+                );
+                let mut val = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    val.push(read_f32(buf, pos)?);
+                }
+                let ib = index_bits(dim) as u32;
+                let packed = crate::util::bits::bytes_for_bits(nnz as u64 * ib as u64);
+                anyhow::ensure!(*pos + packed <= buf.len(), "cvec: truncated index block");
+                let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
+                let mut idx = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
+                    anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
+                    idx.push(i as u32);
+                }
+                *pos += packed;
+                Ok(CVec::Sparse { dim, idx, val })
+            }
+            other => anyhow::bail!("cvec: unknown tag {other}"),
+        }
+    }
+}
+
+fn encode_dense(v: &[f32], out: &mut Vec<u8>) {
+    out.push(1);
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn read_u32(buf: &[u8], pos: &mut usize) -> anyhow::Result<u32> {
+    let end = *pos + 4;
+    anyhow::ensure!(end <= buf.len(), "codec: truncated u32");
+    let v = u32::from_le_bytes(buf[*pos..end].try_into().expect("4-byte slice"));
+    *pos = end;
+    Ok(v)
+}
+
+pub(crate) fn read_f32(buf: &[u8], pos: &mut usize) -> anyhow::Result<f32> {
+    let end = *pos + 4;
+    anyhow::ensure!(end <= buf.len(), "codec: truncated f32");
+    let v = f32::from_le_bytes(buf[*pos..end].try_into().expect("4-byte slice"));
+    *pos = end;
+    Ok(v)
+}
+
+pub(crate) fn read_f64(buf: &[u8], pos: &mut usize) -> anyhow::Result<f64> {
+    let end = *pos + 8;
+    anyhow::ensure!(end <= buf.len(), "codec: truncated f64");
+    let v = f64::from_le_bytes(buf[*pos..end].try_into().expect("8-byte slice"));
+    *pos = end;
+    Ok(v)
 }
 
 /// Bits needed to address a coordinate of a d-dimensional vector.
@@ -290,6 +440,67 @@ mod tests {
         assert_eq!(index_bits(1024), 10);
         assert_eq!(index_bits(1025), 11);
         assert_eq!(index_bits(25088), 15);
+    }
+
+    #[test]
+    fn codec_roundtrips_all_variants() {
+        let cases = vec![
+            CVec::Zero { dim: 17 },
+            CVec::Dense(vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]),
+            CVec::Sparse { dim: 1000, idx: vec![0, 7, 999], val: vec![1.0, -0.5, 3.25] },
+        ];
+        for c in cases {
+            let mut buf = Vec::new();
+            c.encode(&mut buf);
+            assert_eq!(buf.len(), c.encoded_len(), "{c:?}");
+            let mut pos = 0;
+            let back = CVec::decode(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len(), "{c:?}: trailing bytes");
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn codec_switches_dense_at_cap_crossover() {
+        // dim 4, ib = 2: sparse costs 34/entry; 4 entries (136) ≥ dense
+        // (128) → must encode dense, decoding as the dense equivalent.
+        let s = CVec::Sparse { dim: 4, idx: vec![0, 1, 2, 3], val: vec![1.0, 2.0, 3.0, 4.0] };
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        assert_eq!(buf.len(), s.encoded_len());
+        assert_eq!(buf.len(), 5 + 16);
+        let mut pos = 0;
+        let back = CVec::decode(&buf, &mut pos).unwrap();
+        assert_eq!(back, CVec::Dense(vec![1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(back.to_dense(), s.to_dense());
+        // Payload (everything after the 5-byte header) matches wire_bits
+        // exactly at the cap.
+        assert_eq!((buf.len() - 5) as u64 * 8, s.wire_bits());
+    }
+
+    #[test]
+    fn codec_payload_tracks_wire_bits() {
+        // Below the crossover the only slack is the final index byte's
+        // zero padding: 0 ≤ payload_bits − wire_bits < 8.
+        for nnz in [1usize, 5, 31, 100] {
+            let idx: Vec<u32> = (0..nnz as u32).map(|i| i * 7 % 1000).collect();
+            let val: Vec<f32> = (0..nnz).map(|i| i as f32).collect();
+            let s = CVec::Sparse { dim: 1000, idx, val };
+            let payload_bits = ((s.encoded_len() - 9) * 8) as u64;
+            assert!(payload_bits >= s.wire_bits(), "nnz {nnz}");
+            assert!(payload_bits - s.wire_bits() < 8, "nnz {nnz}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(CVec::decode(&[], &mut 0).is_err());
+        assert!(CVec::decode(&[9, 0, 0, 0, 0], &mut 0).is_err());
+        // Truncated dense body.
+        let mut buf = Vec::new();
+        CVec::Dense(vec![1.0, 2.0]).encode(&mut buf);
+        buf.truncate(buf.len() - 1);
+        assert!(CVec::decode(&buf, &mut 0).is_err());
     }
 
     #[test]

@@ -16,6 +16,11 @@ pub struct RoundRecord {
     pub bits_up_cum: f64,
     /// Max cumulative uplink bits over workers.
     pub bits_up_max: u64,
+    /// Cumulative downlink broadcast bits per worker (the
+    /// [`DownlinkStat`](super::DownlinkStat) accounting; the paper's
+    /// plots ignore this direction, the trace carries it for
+    /// completeness).
+    pub bits_down_cum: f64,
     /// Fraction of workers that skipped this round (lazy aggregation).
     pub skipped_frac: f64,
     /// `f(x^{t+1})` when this was an evaluation round.
@@ -33,6 +38,12 @@ pub struct TrainResult {
     pub final_x: Vec<f32>,
     pub final_grad_norm_sq: f64,
     pub total_bits_up: u64,
+    /// Cumulative downlink broadcast bits per worker.
+    pub total_bits_down: u64,
+    /// Bytes actually serialized on the uplink when the transport
+    /// encodes messages ([`Framed`](super::Framed)); 0 for transports
+    /// that move structured updates in memory.
+    pub wire_bytes_up: u64,
     pub elapsed: std::time::Duration,
 }
 
@@ -103,6 +114,7 @@ mod tests {
             g_err: 0.0,
             bits_up_cum: bits,
             bits_up_max: bits as u64,
+            bits_down_cum: 64.0 * (t + 1) as f64,
             skipped_frac: 0.5,
             loss: if t % 2 == 0 { Some(gns * 2.0) } else { None },
         }
@@ -116,6 +128,8 @@ mod tests {
             final_x: vec![],
             final_grad_norm_sq: records.last().map(|r| r.grad_norm_sq).unwrap_or(0.0),
             total_bits_up: 0,
+            total_bits_down: 0,
+            wire_bytes_up: 0,
             elapsed: std::time::Duration::ZERO,
             records,
         }

@@ -1,29 +1,65 @@
-//! L3 — the distributed training coordinator (Algorithm 1).
+//! L3 — the distributed training coordinator (Algorithm 1), organised
+//! around the composable [`TrainSession`]:
 //!
-//! Topology: one leader (server) and `n` workers. Workers live on a
-//! persistent thread pool (`threads` OS threads each owning a contiguous
-//! slice of workers); every round the leader broadcasts the current
-//! aggregate `g^t` implicitly through the shared model state `x^{t+1}`,
-//! workers evaluate their local gradients (natively or through the
-//! PJRT/HLO executors), push them through their 3PC mechanism, and send
-//! the resulting [`mechanisms::Update`]s up; the leader folds the deltas
-//! into `g^{t+1}` and the accountant bills every message.
+//! ```text
+//! TrainSession::builder(&problem)   // the objective (problems/*)
+//!     .mechanism(map)               // WHAT is communicated (mechanisms/*)
+//!     .transport(t)                 // HOW it moves (transport::{InProcess, Framed})
+//!     .observer(o)                  // WHO watches, with early-stop control
+//!     .config(cfg)                  // stepsize, rounds, seeds, stop rules
+//!     .run()
+//! ```
 //!
-//! The paper's experiments all report *client→server bits*, which is what
-//! [`metrics::RoundRecord::bits_up_cum`] accumulates (1 framing bit per
-//! worker-round plus the payload); downlink broadcast bits are tracked
-//! separately.
+//! Topology: one leader ([`Server`]) and `n` workers ([`WorkerState`]).
+//! Every round the leader broadcasts the aggregate `g^t` implicitly
+//! through the shared model state `x^{t+1}`, workers evaluate their
+//! local gradients (natively or through the PJRT/HLO executors), push
+//! them through their 3PC mechanism, and send the resulting
+//! [`mechanisms::Update`](crate::mechanisms::Update)s up; the leader
+//! folds the deltas into `g^{t+1}` and the accountant bills every
+//! message.
+//!
+//! The **transport** axis decides how those updates travel. [`InProcess`]
+//! moves them as structured values across a persistent thread pool and
+//! bills the *declared* `wire_bits` (the paper's accounting);
+//! [`Framed`] serializes every message through the binary codec in
+//! [`protocol`] and bills *measured* encoded bytes, cross-checked
+//! against the declared accounting by the codec tests. The **observer**
+//! axis ([`RoundObserver`]) streams per-round metrics, persists
+//! `(x, g_i)` checkpoints, and subsumes the classic stop rules
+//! (`grad_tol`, `bits_budget`, `time_limit`, divergence guard), which
+//! are installed from [`TrainConfig`] as built-in observers.
+//!
+//! The paper's experiments all report *client→server bits*, which is
+//! what [`metrics::RoundRecord::bits_up_cum`] accumulates (1 framing
+//! bit per worker-round plus the payload); downlink broadcast bits are
+//! tracked in [`metrics::RoundRecord::bits_down_cum`] via
+//! [`DownlinkStat`].
+//!
+//! The legacy free function [`train`] survives as a deprecated shim
+//! over a default-configured session (one release), with identical
+//! traces.
 
 pub mod metrics;
+pub mod observer;
 pub mod orchestrator;
 pub mod protocol;
 pub mod server;
+pub mod session;
+pub mod transport;
 pub mod worker;
 
 pub use metrics::{RoundRecord, TrainResult};
-pub use orchestrator::{train, TrainConfig};
-pub use protocol::{DownlinkStat, UplinkMsg};
+pub use observer::{
+    BitsBudgetStop, Checkpoint, CheckpointObserver, DivergenceGuard, GradTolStop, RoundCtx,
+    RoundFlow, RoundObserver, RoundSnapshot, StopReason, StreamObserver, TimeLimitStop,
+};
+#[allow(deprecated)]
+pub use orchestrator::train;
+pub use protocol::{decode_uplink, encode_uplink, DownlinkStat, UplinkMsg, WireMsg, WireUpdate};
 pub use server::Server;
+pub use session::{SessionBuilder, TrainConfig, TrainSession};
+pub use transport::{Framed, InProcess, RoundAggregate, Transport, TransportLink};
 pub use worker::WorkerState;
 
 /// Initialisation policy for `g_i^0` (§4.2).

@@ -1,0 +1,334 @@
+//! Streaming round observers: per-round callbacks with early-stop
+//! control.
+//!
+//! A [`RoundObserver`] sees every round of a
+//! [`TrainSession`](super::TrainSession) as it happens — not just the
+//! final [`TrainResult`](super::TrainResult) — and can stop the run by
+//! returning [`RoundFlow::Stop`]. The session's classic stop conditions
+//! (`grad_tol`, `bits_budget`, `time_limit`, the divergence guard) are
+//! themselves implemented as the built-in observers in this module and
+//! installed from [`TrainConfig`](super::TrainConfig), so user
+//! observers compose with rather than fight them: built-ins run first,
+//! in divergence → tolerance → budget → time order (the legacy break
+//! priority), then user observers; the first `Stop` wins, but every
+//! observer still sees every round.
+//!
+//! [`StreamObserver`] adapts a closure for live metrics;
+//! [`CheckpointObserver`] periodically persists the full optimizer
+//! state `(x, g_i)` via the transport's worker snapshot collective.
+
+use super::transport::TransportLink;
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Everything the session knows about a round, borrowed for the
+/// duration of the observer callbacks.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundSnapshot<'a> {
+    pub t: usize,
+    /// `‖∇f(x^{t+1})‖²` (exact, from the workers' true gradients).
+    pub grad_norm_sq: f64,
+    /// `G^{t+1} = (1/n)Σ‖g_i − ∇f_i‖²`.
+    pub g_err: f64,
+    /// Mean cumulative uplink bits per worker.
+    pub bits_up_cum: f64,
+    /// Max cumulative uplink bits over workers.
+    pub bits_up_max: u64,
+    /// Cumulative downlink broadcast bits per worker.
+    pub bits_down_cum: f64,
+    pub skipped_frac: f64,
+    /// `f(x^{t+1})` on evaluation rounds.
+    pub loss: Option<f64>,
+    /// The post-step iterate `x^{t+1}`.
+    pub x: &'a [f32],
+    /// Wall-clock time since the session started.
+    pub elapsed: Duration,
+    pub max_rounds: usize,
+}
+
+/// Observer-facing view of a live round: the snapshot plus on-demand
+/// access to transport collectives.
+pub struct RoundCtx<'a> {
+    pub snap: RoundSnapshot<'a>,
+    pub(super) link: &'a mut dyn TransportLink,
+}
+
+impl RoundCtx<'_> {
+    /// Fetch the current `(worker_id, g_i)` states from the transport
+    /// (a full collective — use periodically).
+    pub fn worker_states(&mut self) -> Vec<(usize, Vec<f32>)> {
+        self.link.snapshot_g()
+    }
+}
+
+/// Observer verdict for a round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RoundFlow {
+    Continue,
+    Stop(StopReason),
+}
+
+/// Why a run stopped early.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StopReason {
+    /// The gradient-tolerance criterion fired (`TrainResult::converged`).
+    Converged,
+    /// The divergence guard tripped (`TrainResult::diverged`).
+    Diverged,
+    /// The uplink bit budget is exhausted.
+    BitsBudget,
+    /// The wall-clock limit elapsed.
+    TimeLimit,
+    /// A user observer stopped the run.
+    Custom(String),
+}
+
+/// Per-round callback with early-stop control.
+pub trait RoundObserver {
+    /// Called once per round, after aggregation and accounting, before
+    /// the stop decision is applied.
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow;
+
+    /// Called once with the finished result.
+    fn on_complete(&mut self, _result: &super::TrainResult) {}
+}
+
+/// Stop when `‖∇f‖ < tol` (the classic `grad_tol`).
+pub struct GradTolStop {
+    pub tol: f64,
+}
+
+impl RoundObserver for GradTolStop {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        if ctx.snap.grad_norm_sq.sqrt() < self.tol {
+            RoundFlow::Stop(StopReason::Converged)
+        } else {
+            RoundFlow::Continue
+        }
+    }
+}
+
+/// Stop once mean cumulative uplink bits/worker reach the budget (the
+/// Figures 21–24 protocol).
+pub struct BitsBudgetStop {
+    pub budget: f64,
+}
+
+impl RoundObserver for BitsBudgetStop {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        if ctx.snap.bits_up_cum >= self.budget {
+            RoundFlow::Stop(StopReason::BitsBudget)
+        } else {
+            RoundFlow::Continue
+        }
+    }
+}
+
+/// Stop when wall-clock time runs out.
+pub struct TimeLimitStop {
+    pub limit: Duration,
+}
+
+impl RoundObserver for TimeLimitStop {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        if ctx.snap.elapsed >= self.limit {
+            RoundFlow::Stop(StopReason::TimeLimit)
+        } else {
+            RoundFlow::Continue
+        }
+    }
+}
+
+/// Abort when `‖∇f‖²` blows up or goes non-finite (divergent stepsize
+/// in a sweep).
+pub struct DivergenceGuard {
+    pub bound: f64,
+}
+
+impl RoundObserver for DivergenceGuard {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        let gns = ctx.snap.grad_norm_sq;
+        if !gns.is_finite() || gns > self.bound {
+            RoundFlow::Stop(StopReason::Diverged)
+        } else {
+            RoundFlow::Continue
+        }
+    }
+}
+
+/// Adapts a closure into a passive streaming observer (live metrics,
+/// progress bars, CSV tailers).
+pub struct StreamObserver<F> {
+    f: F,
+}
+
+impl<F: FnMut(&RoundSnapshot<'_>)> StreamObserver<F> {
+    pub fn new(f: F) -> StreamObserver<F> {
+        StreamObserver { f }
+    }
+}
+
+impl<F: FnMut(&RoundSnapshot<'_>)> RoundObserver for StreamObserver<F> {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        (self.f)(&ctx.snap);
+        RoundFlow::Continue
+    }
+}
+
+/// A persisted `(x, g_i)` optimizer state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub t: usize,
+    pub grad_norm_sq: f64,
+    pub x: Vec<f32>,
+    pub worker_g: Vec<(usize, Vec<f32>)>,
+}
+
+const CHECKPOINT_MAGIC: &[u8; 4] = b"3PCK";
+
+impl Checkpoint {
+    /// Serialize to the flat binary checkpoint format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let d = self.x.len();
+        let mut out =
+            Vec::with_capacity(4 + 4 + 8 + 4 + 4 + 8 + 4 * d + self.worker_g.len() * (4 + 4 * d));
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.t as u64).to_le_bytes());
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+        out.extend_from_slice(&(self.worker_g.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.grad_norm_sq.to_le_bytes());
+        for v in &self.x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for (id, g) in &self.worker_g {
+            out.extend_from_slice(&(*id as u32).to_le_bytes());
+            debug_assert_eq!(g.len(), d);
+            for v in g {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        use crate::compressors::{read_f32, read_f64, read_u32};
+        ensure!(buf.len() >= 4 && buf[..4] == CHECKPOINT_MAGIC[..], "not a 3PC checkpoint");
+        let mut pos = 4usize;
+        let version = read_u32(buf, &mut pos)?;
+        ensure!(version == 1, "unsupported checkpoint version {version}");
+        ensure!(buf.len() >= pos + 8, "truncated checkpoint header");
+        let t = u64::from_le_bytes(buf[pos..pos + 8].try_into().expect("8-byte slice")) as usize;
+        pos += 8;
+        let d = read_u32(buf, &mut pos)? as usize;
+        let n = read_u32(buf, &mut pos)? as usize;
+        let grad_norm_sq = read_f64(buf, &mut pos)?;
+        // d and n are file-controlled: bound-check the whole body before
+        // allocating so a corrupt file fails with Err, not an OOM abort
+        // (u128 arithmetic — 4·d·n can overflow usize on hostile input).
+        ensure!(
+            (buf.len() - pos) as u128 >= 4 * d as u128 + n as u128 * (4 + 4 * d as u128),
+            "truncated checkpoint body (d {d}, n {n})"
+        );
+        let mut x = Vec::with_capacity(d);
+        for _ in 0..d {
+            x.push(read_f32(buf, &mut pos)?);
+        }
+        let mut worker_g = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = read_u32(buf, &mut pos)? as usize;
+            let mut g = Vec::with_capacity(d);
+            for _ in 0..d {
+                g.push(read_f32(buf, &mut pos)?);
+            }
+            worker_g.push((id, g));
+        }
+        ensure!(pos == buf.len(), "checkpoint has {} trailing bytes", buf.len() - pos);
+        Ok(Checkpoint { t, grad_norm_sq, x, worker_g })
+    }
+
+    /// Read a checkpoint file written by [`CheckpointObserver`].
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Checkpoint> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
+        Checkpoint::from_bytes(&buf)
+    }
+}
+
+/// Every `every` rounds, persists the full optimizer state — the
+/// iterate `x^{t+1}` and each worker's `g_i` (via the transport's
+/// snapshot collective) — atomically to `path` (write-to-temp +
+/// rename). Restartability is the point: `(x, g_i)` is the entire
+/// Algorithm-1 state.
+pub struct CheckpointObserver {
+    every: usize,
+    path: PathBuf,
+    /// Last write error, surfaced on completion instead of aborting
+    /// training mid-run.
+    pub last_error: Option<String>,
+}
+
+impl CheckpointObserver {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> CheckpointObserver {
+        CheckpointObserver { every: every.max(1), path: path.into(), last_error: None }
+    }
+
+    fn write(&mut self, cp: &Checkpoint) {
+        let result = (|| -> Result<()> {
+            if let Some(dir) = self.path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let tmp = self.path.with_extension("tmp");
+            std::fs::write(&tmp, cp.to_bytes())?;
+            std::fs::rename(&tmp, &self.path)?;
+            Ok(())
+        })();
+        if let Err(e) = result {
+            self.last_error = Some(format!("checkpoint {}: {e:#}", self.path.display()));
+        }
+    }
+}
+
+impl RoundObserver for CheckpointObserver {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        if ctx.snap.t % self.every == 0 {
+            let cp = Checkpoint {
+                t: ctx.snap.t,
+                grad_norm_sq: ctx.snap.grad_norm_sq,
+                x: ctx.snap.x.to_vec(),
+                worker_g: ctx.worker_states(),
+            };
+            self.write(&cp);
+        }
+        RoundFlow::Continue
+    }
+
+    fn on_complete(&mut self, _result: &super::TrainResult) {
+        if let Some(e) = &self.last_error {
+            eprintln!("warning: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrips() {
+        let cp = Checkpoint {
+            t: 42,
+            grad_norm_sq: 0.125,
+            x: vec![1.0, -2.0, 3.5],
+            worker_g: vec![(0, vec![0.0, 0.5, 1.0]), (1, vec![-1.0, 0.0, 2.0])],
+        };
+        let bytes = cp.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, cp);
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        assert!(Checkpoint::from_bytes(b"nope").is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! f64 accumulator so the mirror never drifts from the workers' truth),
 //! and the bit accountant.
 
+use super::protocol::DownlinkStat;
 use crate::mechanisms::Update;
 use crate::util::linalg;
 
@@ -57,7 +58,7 @@ impl Server {
         for (xi, &gi) in self.x.iter_mut().zip(self.g_buf.iter()) {
             *xi -= gam * gi;
         }
-        self.bits_down += 32 * self.x.len() as u64;
+        self.bits_down += DownlinkStat::dense(self.x.len()).bits_per_worker;
     }
 
     /// Fold one worker's update into the aggregate. `h_before` is the
@@ -152,7 +153,16 @@ mod tests {
         );
         assert_eq!(s.g(), &[0.5, 1.0]);
         // worker 1 replaces to [2, 2] (h_before = g0b).
-        s.apply_update(1, &g0b, &Update::Replace { g: vec![2.0, 2.0], bits: 64 }, 65);
+        s.apply_update(
+            1,
+            &g0b,
+            &Update::Replace {
+                g: vec![2.0, 2.0],
+                bits: 64,
+                wire: crate::mechanisms::ReplaceWire::Dense,
+            },
+            65,
+        );
         assert_eq!(s.g(), &[1.5, 1.5]);
         assert_eq!(s.bits_up, vec![64 + 34, 64 + 65]);
         assert_eq!(s.total_bits_up(), 227);

@@ -1,0 +1,513 @@
+//! The composable training session (Algorithm 1): mechanism, transport
+//! and observation as independent, swappable axes.
+//!
+//! ```no_run
+//! use threepc::coordinator::{TrainSession, TrainConfig, Framed};
+//! use threepc::mechanisms::parse_mechanism;
+//! # let suite = threepc::problems::quadratic::generate(4, 30, 1e-2, 0.5, 1);
+//! let _result = TrainSession::builder(&suite.problem)
+//!     .mechanism(parse_mechanism("clag:top4:2.0").unwrap())
+//!     .transport(Framed)
+//!     .config(TrainConfig { gamma: 0.05, max_rounds: 100, ..TrainConfig::default() })
+//!     .run();
+//! ```
+//!
+//! The session owns the Algorithm-1 loop: build workers, initialise the
+//! leader ([`Server`]), then per round step the iterate, drive the
+//! [`Transport`] fan-out, fold the aggregate, account bits both ways,
+//! and consult the [`RoundObserver`]s (built-in stop rules first, then
+//! user observers). Determinism: every worker draws from its own
+//! `(seed, worker_id)` RNG stream and every round has a shared seed
+//! derived from `(seed, t)`, and the in-process transport folds thread
+//! partials in worker order, so runs are reproducible for any thread
+//! count.
+
+use super::metrics::{RoundRecord, TrainResult};
+use super::observer::{
+    BitsBudgetStop, DivergenceGuard, GradTolStop, RoundCtx, RoundFlow, RoundObserver,
+    RoundSnapshot, StopReason, TimeLimitStop,
+};
+use super::server::Server;
+use super::transport::{InProcess, Transport};
+use super::worker::WorkerState;
+use super::InitPolicy;
+use crate::mechanisms::ThreePointMap;
+use crate::problems::Distributed;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Stepsize γ.
+    pub gamma: f64,
+    /// Hard round cap T.
+    pub max_rounds: usize,
+    /// Stop when `‖∇f(x)‖ < grad_tol` (installed as [`GradTolStop`]).
+    pub grad_tol: Option<f64>,
+    /// Stop once mean cumulative uplink bits/worker exceeds this budget
+    /// (the Figures 21–24 protocol; installed as [`BitsBudgetStop`]).
+    pub bits_budget: Option<f64>,
+    /// Wall-clock cut-off (the paper uses 5 min per heatmap launch;
+    /// installed as [`TimeLimitStop`]).
+    pub time_limit: Option<Duration>,
+    /// Evaluate `f(x)` every k rounds (0 = never — gradient norms are
+    /// free, loss costs an extra data pass).
+    pub eval_loss_every: usize,
+    /// Keep every k-th round in the trace (1 = all).
+    pub record_every: usize,
+    pub seed: u64,
+    /// Worker threads for the in-process transport (0 = available
+    /// parallelism).
+    pub threads: usize,
+    pub init: InitPolicy,
+    /// Abort when `‖∇f‖²` exceeds this (divergent stepsize in a sweep;
+    /// installed as [`DivergenceGuard`]).
+    pub divergence_guard: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            gamma: 0.1,
+            max_rounds: 1000,
+            grad_tol: None,
+            bits_budget: None,
+            time_limit: None,
+            eval_loss_every: 0,
+            record_every: 1,
+            seed: 1,
+            threads: 0,
+            init: InitPolicy::FullGradient,
+            divergence_guard: 1e15,
+        }
+    }
+}
+
+pub(crate) fn mix_seed(seed: u64, t: u64) -> u64 {
+    let mut z = seed ^ t.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z ^ (z >> 31)
+}
+
+/// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`].
+pub struct SessionBuilder<'a> {
+    problem: &'a Distributed,
+    map: Option<Arc<dyn ThreePointMap>>,
+    cfg: TrainConfig,
+    transport: Box<dyn Transport>,
+    observers: Vec<Box<dyn RoundObserver + 'a>>,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// The 3PC mechanism driving every worker (required).
+    pub fn mechanism(mut self, map: Arc<dyn ThreePointMap>) -> Self {
+        self.map = Some(map);
+        self
+    }
+
+    /// Parse-and-set convenience for [`Self::mechanism`].
+    pub fn mechanism_spec(self, spec: &str) -> anyhow::Result<Self> {
+        let map = crate::mechanisms::parse_mechanism(spec)?;
+        Ok(self.mechanism(map))
+    }
+
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Swap the transport (default: [`InProcess`] with `cfg.threads`).
+    pub fn transport<T: Transport + 'static>(mut self, t: T) -> Self {
+        self.transport = Box::new(t);
+        self
+    }
+
+    /// Attach a round observer; may be called repeatedly. Observers run
+    /// after the built-in stop rules, in attachment order.
+    pub fn observer<O: RoundObserver + 'a>(mut self, o: O) -> Self {
+        self.observers.push(Box::new(o));
+        self
+    }
+
+    /// Finalize the session and run it to completion.
+    ///
+    /// # Panics
+    /// If no mechanism was set.
+    pub fn run(self) -> TrainResult {
+        self.build().run()
+    }
+
+    /// Finalize without running (useful when the session is handed off).
+    pub fn build(self) -> TrainSession<'a> {
+        TrainSession {
+            problem: self.problem,
+            map: self.map.expect("TrainSession requires a mechanism (builder.mechanism(..))"),
+            cfg: self.cfg,
+            transport: self.transport,
+            observers: self.observers,
+        }
+    }
+}
+
+/// A fully-configured training session; [`TrainSession::run`] executes
+/// Algorithm 1 to completion.
+pub struct TrainSession<'a> {
+    problem: &'a Distributed,
+    map: Arc<dyn ThreePointMap>,
+    cfg: TrainConfig,
+    transport: Box<dyn Transport>,
+    observers: Vec<Box<dyn RoundObserver + 'a>>,
+}
+
+impl<'a> TrainSession<'a> {
+    pub fn builder(problem: &'a Distributed) -> SessionBuilder<'a> {
+        SessionBuilder {
+            problem,
+            map: None,
+            cfg: TrainConfig::default(),
+            transport: Box::new(InProcess::default()),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Run Algorithm 1 on the configured problem/mechanism/transport.
+    pub fn run(mut self) -> TrainResult {
+        let start = Instant::now();
+        let cfg = &self.cfg;
+        let n = self.problem.n_workers();
+        let d = self.problem.dim();
+
+        // Build workers (evaluates ∇f_i(x⁰) and applies the g⁰ policy).
+        let workers: Vec<WorkerState> = (0..n)
+            .map(|i| {
+                WorkerState::new(
+                    i,
+                    n,
+                    self.problem.locals[i].clone(),
+                    self.map.clone(),
+                    &self.problem.x0,
+                    cfg.init,
+                    cfg.seed,
+                )
+            })
+            .collect();
+        let g0s: Vec<&[f32]> = workers.iter().map(|w| w.g()).collect();
+        let init_bits: Vec<u64> = workers.iter().map(|w| w.init_bits).collect();
+        let mut server = Server::new(self.problem.x0.clone(), &g0s, &init_bits);
+        drop(g0s);
+
+        let mut link = self.transport.connect(workers, d, cfg);
+
+        // The classic stop conditions, as observers, in the legacy
+        // break-priority order.
+        let mut stops: Vec<Box<dyn RoundObserver>> =
+            vec![Box::new(DivergenceGuard { bound: cfg.divergence_guard })];
+        if let Some(tol) = cfg.grad_tol {
+            stops.push(Box::new(GradTolStop { tol }));
+        }
+        if let Some(budget) = cfg.bits_budget {
+            stops.push(Box::new(BitsBudgetStop { budget }));
+        }
+        if let Some(limit) = cfg.time_limit {
+            stops.push(Box::new(TimeLimitStop { limit }));
+        }
+
+        let mut records: Vec<RoundRecord> = Vec::new();
+        let mut converged = false;
+        let mut diverged = false;
+        let mut final_grad_norm_sq = f64::NAN;
+        let mut rounds_run = 0usize;
+
+        for t in 0..cfg.max_rounds {
+            rounds_run = t + 1;
+            // x^{t+1} = x^t − γ g^t; broadcast (bills downlink).
+            server.step(cfg.gamma);
+            let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
+            let agg = link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss);
+
+            server.fold_delta(&agg.delta_sum);
+            for &(wid, b) in &agg.bits {
+                server.add_bits(wid, b);
+            }
+            let inv_n = 1.0 / n as f64;
+            let grad_norm_sq: f64 = agg.grad_sum.iter().map(|&v| v * inv_n * v * inv_n).sum();
+            final_grad_norm_sq = grad_norm_sq;
+
+            let snap = RoundSnapshot {
+                t,
+                grad_norm_sq,
+                g_err: agg.g_err_sum * inv_n,
+                bits_up_cum: server.mean_bits_up(),
+                bits_up_max: server.max_bits_up(),
+                bits_down_cum: server.bits_down as f64,
+                skipped_frac: agg.skipped as f64 * inv_n,
+                loss: if eval_loss { Some(agg.loss_sum * inv_n) } else { None },
+                x: &server.x,
+                elapsed: start.elapsed(),
+                max_rounds: cfg.max_rounds,
+            };
+
+            // Every observer sees every round; the first Stop wins
+            // (built-ins run first — the legacy break priority).
+            let mut stop: Option<StopReason> = None;
+            {
+                let mut ctx = RoundCtx { snap, link: link.as_mut() };
+                for obs in stops.iter_mut() {
+                    if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
+                        stop.get_or_insert(reason);
+                    }
+                }
+                for obs in self.observers.iter_mut() {
+                    if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
+                        stop.get_or_insert(reason);
+                    }
+                }
+            }
+
+            let last = t + 1 == cfg.max_rounds;
+            if t % cfg.record_every.max(1) == 0 || stop.is_some() || last {
+                records.push(RoundRecord {
+                    t,
+                    grad_norm_sq,
+                    g_err: snap.g_err,
+                    bits_up_cum: snap.bits_up_cum,
+                    bits_up_max: snap.bits_up_max,
+                    bits_down_cum: snap.bits_down_cum,
+                    skipped_frac: snap.skipped_frac,
+                    loss: snap.loss,
+                });
+            }
+            match stop {
+                Some(StopReason::Diverged) => {
+                    diverged = true;
+                    break;
+                }
+                Some(StopReason::Converged) => {
+                    converged = true;
+                    break;
+                }
+                Some(_) => break,
+                None => {}
+            }
+        }
+
+        let result = TrainResult {
+            records,
+            rounds_run,
+            converged,
+            diverged,
+            final_x: server.x.clone(),
+            final_grad_norm_sq,
+            total_bits_up: server.total_bits_up(),
+            total_bits_down: server.bits_down,
+            wire_bytes_up: link.measured_bytes_up(),
+            elapsed: start.elapsed(),
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_complete(&result);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::Framed;
+    use crate::mechanisms::parse_mechanism;
+    use crate::problems::quadratic;
+
+    fn small_suite() -> quadratic::QuadSuite {
+        quadratic::generate(8, 40, 5e-2, 0.5, 5)
+    }
+
+    fn cfg(gamma: f64, rounds: usize) -> TrainConfig {
+        TrainConfig { gamma, max_rounds: rounds, threads: 3, seed: 9, ..TrainConfig::default() }
+    }
+
+    fn run(suite: &quadratic::QuadSuite, spec: &str, c: &TrainConfig) -> TrainResult {
+        TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism(spec).unwrap())
+            .config(c.clone())
+            .run()
+    }
+
+    #[test]
+    fn gd_converges_on_quadratic() {
+        let suite = small_suite();
+        let gamma = 1.0 / suite.l_minus;
+        let mut c = cfg(gamma, 2000);
+        c.grad_tol = Some(1e-5);
+        let r = run(&suite, "gd", &c);
+        assert!(r.converged, "final ‖∇f‖² = {}", r.final_grad_norm_sq);
+        assert!(!r.diverged);
+    }
+
+    #[test]
+    fn ef21_topk_converges_and_is_cheaper_than_gd() {
+        let suite = small_suite();
+        let gamma = 0.25 / suite.l_minus;
+        let mut c = cfg(gamma, 8000);
+        c.grad_tol = Some(1e-4);
+        let gd = run(&suite, "gd", &c);
+        let ef = run(&suite, "ef21:top4", &c);
+        assert!(gd.converged && ef.converged);
+        let gd_bits = gd.bits_to_grad_tol(1e-4).unwrap();
+        let ef_bits = ef.bits_to_grad_tol(1e-4).unwrap();
+        assert!(ef_bits < gd_bits, "EF21 bits {ef_bits} should beat GD bits {gd_bits}");
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let suite = small_suite();
+        let mut c1 = cfg(0.05, 50);
+        c1.threads = 1;
+        let mut c4 = c1.clone();
+        c4.threads = 4;
+        let r1 = run(&suite, "clag:top4:2.0", &c1);
+        let r4 = run(&suite, "clag:top4:2.0", &c4);
+        assert_eq!(r1.rounds_run, r4.rounds_run);
+        for (a, b) in r1.records.iter().zip(&r4.records) {
+            assert!((a.grad_norm_sq - b.grad_norm_sq).abs() <= 1e-12 * (1.0 + a.grad_norm_sq));
+            assert_eq!(a.bits_up_cum, b.bits_up_cum);
+        }
+    }
+
+    #[test]
+    fn lag_skips_and_saves_bits() {
+        let suite = small_suite();
+        let mut c = cfg(0.1 / suite.l_minus, 200);
+        c.grad_tol = Some(1e-4);
+        let lag = run(&suite, "lag:10.0", &c);
+        assert!(lag.mean_skip_rate() > 0.1, "skip rate {}", lag.mean_skip_rate());
+    }
+
+    #[test]
+    fn divergence_guard_trips() {
+        let suite = small_suite();
+        let mut c = cfg(1e4, 500); // absurd stepsize
+        c.divergence_guard = 1e10;
+        let r = run(&suite, "gd", &c);
+        assert!(r.diverged);
+        assert!(r.rounds_run < 500);
+    }
+
+    #[test]
+    fn bits_budget_stops_run() {
+        let suite = small_suite();
+        let mut c = cfg(1e-3, 10_000);
+        c.bits_budget = Some(50_000.0);
+        let r = run(&suite, "gd", &c);
+        assert!(!r.converged);
+        let last = r.records.last().unwrap();
+        assert!(last.bits_up_cum >= 50_000.0);
+        assert!(r.rounds_run < 10_000);
+    }
+
+    #[test]
+    fn loss_eval_rounds_populate_loss() {
+        let suite = small_suite();
+        let mut c = cfg(1e-2, 20);
+        c.eval_loss_every = 5;
+        let r = run(&suite, "ef21:top2", &c);
+        let losses = r.loss_series();
+        assert!(losses.len() >= 4, "{losses:?}");
+        // Loss should trend down.
+        assert!(losses.last().unwrap().1 < losses[0].1);
+    }
+
+    #[test]
+    fn downlink_accounting_accumulates_per_round() {
+        let suite = small_suite();
+        let r = run(&suite, "gd", &cfg(0.01, 7));
+        // Dense broadcast of d = 40 floats, every round.
+        let last = r.records.last().unwrap();
+        assert_eq!(last.bits_down_cum, (7 * 32 * 40) as f64);
+        assert_eq!(r.total_bits_down, 7 * 32 * 40);
+        // InProcess does not serialize.
+        assert_eq!(r.wire_bytes_up, 0);
+    }
+
+    #[test]
+    fn stream_observer_sees_every_round_and_can_stop() {
+        use crate::coordinator::observer::{RoundFlow, StopReason, StreamObserver};
+        let suite = small_suite();
+        let mut seen = Vec::new();
+        let r = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism("ef21:top4").unwrap())
+            .config(cfg(0.01, 30))
+            .observer(StreamObserver::new(|s: &crate::coordinator::RoundSnapshot<'_>| {
+                seen.push((s.t, s.grad_norm_sq));
+            }))
+            .run();
+        assert_eq!(r.rounds_run, 30);
+        assert_eq!(seen.len(), 30);
+        assert!(seen.iter().enumerate().all(|(i, &(t, _))| i == t));
+
+        // A custom stopper halts the run and records the final round.
+        struct StopAt(usize);
+        impl crate::coordinator::RoundObserver for StopAt {
+            fn on_round(&mut self, ctx: &mut crate::coordinator::RoundCtx<'_>) -> RoundFlow {
+                if ctx.snap.t >= self.0 {
+                    RoundFlow::Stop(StopReason::Custom("test stop".into()))
+                } else {
+                    RoundFlow::Continue
+                }
+            }
+        }
+        let r = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism("ef21:top4").unwrap())
+            .config(cfg(0.01, 500))
+            .observer(StopAt(9))
+            .run();
+        assert_eq!(r.rounds_run, 10);
+        assert!(!r.converged && !r.diverged);
+    }
+
+    #[test]
+    fn checkpoint_observer_persists_x_and_worker_state() {
+        use crate::coordinator::observer::{Checkpoint, CheckpointObserver};
+        let suite = small_suite();
+        let path = std::env::temp_dir().join(format!("threepc-ckpt-{}.bin", std::process::id()));
+        let r = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism("ef21:top4").unwrap())
+            .config(cfg(0.01, 12))
+            .observer(CheckpointObserver::new(5, path.clone()))
+            .run();
+        let cp = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cp.t, 10); // rounds 0, 5, 10 written; last wins
+        assert_eq!(cp.x.len(), 40);
+        assert_eq!(cp.worker_g.len(), 8);
+        assert!(cp.worker_g.iter().all(|(_, g)| g.len() == 40));
+        assert_eq!(r.rounds_run, 12);
+    }
+
+    #[test]
+    fn framed_transport_matches_inprocess_trace() {
+        let suite = small_suite();
+        // threads = 1 pins the f64 fold order so the two transports sum
+        // the exact same sequence of worker contributions.
+        let mut c = cfg(0.05, 40);
+        c.threads = 1;
+        let a = run(&suite, "clag:top4:2.0", &c);
+        let b = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism("clag:top4:2.0").unwrap())
+            .config(c)
+            .transport(Framed)
+            .run();
+        assert_eq!(a.rounds_run, b.rounds_run);
+        assert!(b.wire_bytes_up > 0);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            let rel = (ra.grad_norm_sq - rb.grad_norm_sq).abs() / (1e-300 + ra.grad_norm_sq);
+            assert!(rel < 1e-9, "round {}: {} vs {}", ra.t, ra.grad_norm_sq, rb.grad_norm_sq);
+            assert_eq!(ra.skipped_frac, rb.skipped_frac, "round {}", ra.t);
+            // Measured billing ≥ declared (framing overhead).
+            assert!(rb.bits_up_cum >= ra.bits_up_cum, "round {}", ra.t);
+        }
+        // Every billed uplink bit beyond g⁰ initialisation is a
+        // measured wire byte: total = init (32·d per worker) + 8·bytes.
+        let init_bits = suite.problem.n_workers() as u64 * 32 * 40;
+        assert_eq!(8 * b.wire_bytes_up, b.total_bits_up - init_bits);
+    }
+}

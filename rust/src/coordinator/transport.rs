@@ -1,0 +1,458 @@
+//! Pluggable transports: how per-round messages move between the
+//! workers and the leader.
+//!
+//! A [`Transport`] is the configuration axis of a
+//! [`TrainSession`](super::TrainSession); calling [`Transport::connect`]
+//! hands it ownership of the per-worker states and yields a running
+//! [`TransportLink`] the session drives one round at a time. Two
+//! implementations ship:
+//!
+//! * [`InProcess`] — the scoped-thread fan-out the original
+//!   orchestrator used, preserved exactly: a persistent pool of OS
+//!   threads, each owning a contiguous slice of workers, exchanging
+//!   structured [`Update`](crate::mechanisms::Update)s in memory and
+//!   billing the *declared* `wire_bits`. Thread partials are folded in
+//!   slice order, so traces are reproducible for any thread count.
+//! * [`Framed`] — the fidelity path: every uplink message is serialized
+//!   through the binary codec
+//!   ([`encode_uplink`](super::protocol::encode_uplink)), decoded on
+//!   the leader side as a real receiver would (reconstructing worker
+//!   state from the wire content alone), and billed by *measured*
+//!   encoded bytes. The codec tests pin measured bytes to the declared
+//!   accounting.
+
+use super::protocol::{decode_uplink, encode_uplink};
+use super::session::TrainConfig;
+use super::worker::WorkerState;
+use crate::util::linalg;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// What one round produced, aggregated over all workers: the f64 fold
+/// inputs for the server plus the accounting and diagnostics.
+pub struct RoundAggregate {
+    /// Σ over workers of `g_i^{t+1} − g_i^t` (f64).
+    pub delta_sum: Vec<f64>,
+    /// Σ over workers of `∇f_i(x^{t+1})` (f64).
+    pub grad_sum: Vec<f64>,
+    /// `(worker_id, billed uplink bits)` per worker for this round.
+    pub bits: Vec<(usize, u64)>,
+    /// Workers that skipped (lazy aggregation).
+    pub skipped: usize,
+    /// Σ of per-worker `‖g_i − ∇f_i‖²` contributions.
+    pub g_err_sum: f64,
+    /// Σ of per-worker losses (only meaningful on eval rounds).
+    pub loss_sum: f64,
+}
+
+impl RoundAggregate {
+    fn zeros(d: usize, n: usize) -> RoundAggregate {
+        RoundAggregate {
+            delta_sum: vec![0.0; d],
+            grad_sum: vec![0.0; d],
+            bits: Vec::with_capacity(n),
+            skipped: 0,
+            g_err_sum: 0.0,
+            loss_sum: 0.0,
+        }
+    }
+}
+
+/// A transport configuration: knows how to take ownership of the
+/// workers and stand up a running link.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+
+    /// Take the per-worker states and start the transport.
+    fn connect(
+        &self,
+        workers: Vec<WorkerState>,
+        dim: usize,
+        cfg: &TrainConfig,
+    ) -> Box<dyn TransportLink>;
+}
+
+/// A running transport: executes rounds until dropped.
+pub trait TransportLink {
+    /// One round at the broadcast iterate `x^{t+1}`: every worker
+    /// evaluates its gradient, runs its mechanism, and the results are
+    /// aggregated for the leader.
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate;
+
+    /// Current `(worker_id, g_i)` states — the checkpoint observer's
+    /// source. Involves a full collective, so callers should be
+    /// periodic, not per-round.
+    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)>;
+
+    /// Cumulative uplink bytes actually serialized (0 when the
+    /// transport moves structured updates in memory).
+    fn measured_bytes_up(&self) -> u64 {
+        0
+    }
+}
+
+/// Per-round task broadcast to pool threads.
+struct RoundTask {
+    x: Arc<Vec<f32>>,
+    round_seed: u64,
+    eval_loss: bool,
+}
+
+enum Cmd {
+    Round(Arc<RoundTask>),
+    Snapshot,
+}
+
+/// Per-thread fan-in report.
+struct ThreadReport {
+    delta_sum: Vec<f64>,
+    grad_sum: Vec<f64>,
+    bits: Vec<(usize, u64)>,
+    skipped: usize,
+    g_err_sum: f64,
+    loss_sum: f64,
+}
+
+enum Reply {
+    Round { slot: usize, report: ThreadReport },
+    Snapshot { slot: usize, gs: Vec<(usize, Vec<f32>)> },
+}
+
+/// The in-memory thread-pool transport (the default). `threads = 0`
+/// inherits `TrainConfig::threads` (which itself falls back to the
+/// machine's available parallelism).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InProcess {
+    pub threads: usize,
+}
+
+impl InProcess {
+    pub fn new(threads: usize) -> InProcess {
+        InProcess { threads }
+    }
+}
+
+impl Transport for InProcess {
+    fn name(&self) -> &'static str {
+        "inprocess"
+    }
+
+    fn connect(
+        &self,
+        workers: Vec<WorkerState>,
+        dim: usize,
+        cfg: &TrainConfig,
+    ) -> Box<dyn TransportLink> {
+        let n = workers.len();
+        let requested = if self.threads > 0 { self.threads } else { cfg.threads };
+        let threads = if requested == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        } else {
+            requested
+        }
+        .min(n)
+        .max(1);
+
+        // Partition workers over threads (contiguous slices, preserving
+        // worker order — the fold order every trace depends on).
+        let mut slices: Vec<Vec<WorkerState>> = Vec::with_capacity(threads);
+        let per = n / threads;
+        let extra = n % threads;
+        let mut it = workers.into_iter();
+        for p in 0..threads {
+            let len = per + usize::from(p < extra);
+            slices.push(it.by_ref().take(len).collect());
+        }
+        debug_assert!(it.next().is_none());
+        drop(it);
+
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+        let mut cmd_txs = Vec::with_capacity(threads);
+        let mut joins = Vec::with_capacity(threads);
+        for (slot, slice) in slices.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(tx);
+            let reply = reply_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("threepc-worker-{slot}"))
+                .spawn(move || pool_thread(slot, slice, dim, rx, reply))
+                .expect("spawning transport worker thread");
+            joins.push(join);
+        }
+        drop(reply_tx);
+        Box::new(InProcessLink { cmd_txs, reply_rx, joins, dim, n })
+    }
+}
+
+fn pool_thread(
+    slot: usize,
+    mut mine: Vec<WorkerState>,
+    dim: usize,
+    rx: mpsc::Receiver<Cmd>,
+    reply: mpsc::Sender<Reply>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        let out = match cmd {
+            Cmd::Round(task) => {
+                let mut delta_sum = vec![0.0f64; dim];
+                let mut grad_sum = vec![0.0f64; dim];
+                let mut bits = Vec::with_capacity(mine.len());
+                let mut skipped = 0usize;
+                let mut g_err_sum = 0.0f64;
+                let mut loss_sum = 0.0f64;
+                for w in mine.iter_mut() {
+                    let msg = w.round_acc(&task.x, task.round_seed, &mut delta_sum);
+                    linalg::add_into_f64(&mut grad_sum, w.true_grad());
+                    bits.push((msg.worker_id, msg.bits()));
+                    if msg.skipped() {
+                        skipped += 1;
+                    }
+                    g_err_sum += msg.g_err;
+                    if task.eval_loss {
+                        loss_sum += w.loss(&task.x);
+                    }
+                }
+                Reply::Round {
+                    slot,
+                    report: ThreadReport { delta_sum, grad_sum, bits, skipped, g_err_sum, loss_sum },
+                }
+            }
+            Cmd::Snapshot => Reply::Snapshot {
+                slot,
+                gs: mine.iter().map(|w| (w.id, w.g().to_vec())).collect(),
+            },
+        };
+        if reply.send(out).is_err() {
+            break;
+        }
+    }
+}
+
+struct InProcessLink {
+    cmd_txs: Vec<mpsc::Sender<Cmd>>,
+    reply_rx: mpsc::Receiver<Reply>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    dim: usize,
+    n: usize,
+}
+
+impl InProcessLink {
+    fn broadcast(&self, cmd: impl Fn() -> Cmd) {
+        for tx in &self.cmd_txs {
+            tx.send(cmd()).expect("transport worker thread died");
+        }
+    }
+}
+
+impl TransportLink for InProcessLink {
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate {
+        let task = Arc::new(RoundTask { x: Arc::new(x.to_vec()), round_seed, eval_loss });
+        self.broadcast(|| Cmd::Round(task.clone()));
+        // Collect one report per thread, then fold in slot order so the
+        // f64 accumulation is reproducible regardless of arrival order.
+        let mut reports: Vec<Option<ThreadReport>> = (0..self.cmd_txs.len()).map(|_| None).collect();
+        for _ in 0..self.cmd_txs.len() {
+            match self.reply_rx.recv().expect("transport worker thread died") {
+                Reply::Round { slot, report } => reports[slot] = Some(report),
+                Reply::Snapshot { .. } => unreachable!("unsolicited snapshot reply"),
+            }
+        }
+        let mut agg = RoundAggregate::zeros(self.dim, self.n);
+        for rep in reports.into_iter().map(|r| r.expect("missing thread report")) {
+            for (a, v) in agg.delta_sum.iter_mut().zip(&rep.delta_sum) {
+                *a += v;
+            }
+            for (a, v) in agg.grad_sum.iter_mut().zip(&rep.grad_sum) {
+                *a += v;
+            }
+            agg.bits.extend(rep.bits);
+            agg.skipped += rep.skipped;
+            agg.g_err_sum += rep.g_err_sum;
+            agg.loss_sum += rep.loss_sum;
+        }
+        agg
+    }
+
+    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
+        self.broadcast(|| Cmd::Snapshot);
+        let mut per_slot: Vec<Option<Vec<(usize, Vec<f32>)>>> =
+            (0..self.cmd_txs.len()).map(|_| None).collect();
+        for _ in 0..self.cmd_txs.len() {
+            match self.reply_rx.recv().expect("transport worker thread died") {
+                Reply::Snapshot { slot, gs } => per_slot[slot] = Some(gs),
+                Reply::Round { .. } => unreachable!("unsolicited round reply"),
+            }
+        }
+        per_slot
+            .into_iter()
+            .flat_map(|gs| gs.expect("missing thread snapshot"))
+            .collect()
+    }
+}
+
+impl Drop for InProcessLink {
+    fn drop(&mut self) {
+        self.cmd_txs.clear(); // closes command channels; threads exit
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The serializing transport: runs workers sequentially on the calling
+/// thread, pushes every uplink through the byte codec, decodes it as a
+/// real receiver would, and bills measured bytes (`8 × encoded_len`,
+/// framing included) instead of the declared `wire_bits`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Framed;
+
+impl Transport for Framed {
+    fn name(&self) -> &'static str {
+        "framed"
+    }
+
+    fn connect(
+        &self,
+        workers: Vec<WorkerState>,
+        dim: usize,
+        _cfg: &TrainConfig,
+    ) -> Box<dyn TransportLink> {
+        Box::new(FramedLink { workers, dim, bytes_up: 0 })
+    }
+}
+
+struct FramedLink {
+    workers: Vec<WorkerState>,
+    dim: usize,
+    bytes_up: u64,
+}
+
+impl TransportLink for FramedLink {
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate {
+        let mut agg = RoundAggregate::zeros(self.dim, self.workers.len());
+        for w in self.workers.iter_mut() {
+            // The leader's mirror of g_i^t, needed to resolve
+            // Replace-style wire content.
+            let h_before = w.g().to_vec();
+            let msg = w.round(x, round_seed);
+            linalg::add_into_f64(&mut agg.grad_sum, w.true_grad());
+            if eval_loss {
+                agg.loss_sum += w.loss(x);
+            }
+            let bytes = encode_uplink(&msg);
+            self.bytes_up += bytes.len() as u64;
+            let decoded =
+                decode_uplink(&bytes).expect("framed transport produced an undecodable frame");
+            debug_assert_eq!(decoded.worker_id, w.id);
+            // The receiver-side state must match the worker's own
+            // advance bit-for-bit (up to non-finite blowups).
+            #[cfg(debug_assertions)]
+            {
+                let rebuilt = decoded.update.new_state(&h_before);
+                let consistent = rebuilt
+                    .iter()
+                    .zip(w.g())
+                    .all(|(a, b)| a == b || (!a.is_finite() && !b.is_finite()));
+                debug_assert!(consistent, "codec reconstruction drifted for worker {}", w.id);
+            }
+            decoded.update.fold_delta(&h_before, &mut agg.delta_sum);
+            if decoded.update.skipped() {
+                agg.skipped += 1;
+            }
+            agg.g_err_sum += decoded.g_err;
+            // Measured billing: the bytes that actually crossed.
+            agg.bits.push((decoded.worker_id, 8 * bytes.len() as u64));
+        }
+        agg
+    }
+
+    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
+        self.workers.iter().map(|w| (w.id, w.g().to_vec())).collect()
+    }
+
+    fn measured_bytes_up(&self) -> u64 {
+        self.bytes_up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InitPolicy;
+    use crate::mechanisms::parse_mechanism;
+    use crate::problems::quadratic;
+    use std::sync::Arc as StdArc;
+
+    fn build_workers(n: usize, d: usize) -> (Vec<WorkerState>, usize) {
+        let suite = quadratic::generate(n, d, 1e-2, 0.5, 3);
+        let map = parse_mechanism("ef21:top2").unwrap();
+        let workers: Vec<WorkerState> = (0..n)
+            .map(|i| {
+                WorkerState::new(
+                    i,
+                    n,
+                    suite.problem.locals[i].clone(),
+                    StdArc::clone(&map),
+                    &suite.problem.x0,
+                    InitPolicy::FullGradient,
+                    7,
+                )
+            })
+            .collect();
+        (workers, d)
+    }
+
+    #[test]
+    fn inprocess_round_covers_all_workers() {
+        let (workers, d) = build_workers(5, 12);
+        let cfg = TrainConfig::default();
+        let mut link = InProcess::new(2).connect(workers, d, &cfg);
+        let x = vec![0.1f32; d];
+        let agg = link.round(&x, 1, false);
+        assert_eq!(agg.bits.len(), 5);
+        assert_eq!(agg.delta_sum.len(), d);
+        let mut ids: Vec<usize> = agg.bits.iter().map(|&(w, _)| w).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        let snap = link.snapshot_g();
+        assert_eq!(snap.len(), 5);
+        assert!(snap.iter().all(|(_, g)| g.len() == d));
+        assert_eq!(link.measured_bytes_up(), 0);
+    }
+
+    #[test]
+    fn framed_round_measures_bytes() {
+        let (workers, d) = build_workers(4, 10);
+        let cfg = TrainConfig::default();
+        let mut link = Framed.connect(workers, d, &cfg);
+        let x = vec![0.1f32; d];
+        let agg = link.round(&x, 1, false);
+        assert_eq!(agg.bits.len(), 4);
+        assert!(link.measured_bytes_up() > 0);
+        // Measured billing is bytes, so every entry is byte-aligned and
+        // at least the frame header.
+        for &(_, bits) in &agg.bits {
+            assert_eq!(bits % 8, 0);
+            assert!(bits >= 8 * super::super::protocol::MSG_HEADER_BYTES as u64);
+        }
+    }
+
+    #[test]
+    fn framed_and_inprocess_fold_the_same_delta() {
+        let d = 10;
+        let (w1, _) = build_workers(4, d);
+        let (w2, _) = build_workers(4, d);
+        let cfg = TrainConfig::default();
+        let mut a = InProcess::new(1).connect(w1, d, &cfg);
+        let mut b = Framed.connect(w2, d, &cfg);
+        let x = vec![0.05f32; d];
+        for t in 0..5u64 {
+            let ra = a.round(&x, t, false);
+            let rb = b.round(&x, t, false);
+            for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
+                assert!((da - db).abs() < 1e-9, "{da} vs {db}");
+            }
+            assert_eq!(ra.skipped, rb.skipped);
+        }
+    }
+}

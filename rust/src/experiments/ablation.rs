@@ -10,7 +10,7 @@
 
 use super::common::{self, Criterion};
 use crate::compressors::index_bits;
-use crate::coordinator::{train, InitPolicy, TrainConfig};
+use crate::coordinator::{InitPolicy, TrainConfig, TrainSession};
 use crate::mechanisms::parse_mechanism;
 use crate::problems::quadratic;
 use crate::util::cli::Args;
@@ -38,7 +38,7 @@ pub fn g0_policy(args: &Args) -> Result<()> {
                 seed: 3,
                 ..TrainConfig::default()
             };
-            let r = train(&suite.problem, map, &cfg);
+            let r = TrainSession::builder(&suite.problem).mechanism(map).config(cfg).run();
             t.row(&[
                 spec.to_string(),
                 format!("{init:?}"),
@@ -101,7 +101,7 @@ pub fn stepsize(args: &Args) -> Result<()> {
         let theory_run = {
             let mut c = cfg.clone();
             c.gamma = base;
-            train(&suite.problem, map.clone(), &c)
+            TrainSession::builder(&suite.problem).mechanism(map.clone()).config(c).run()
         };
         let tuned = common::tune_stepsize(
             &suite.problem,

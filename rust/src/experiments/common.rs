@@ -2,7 +2,7 @@
 //! stepsize-tuning protocol (powers-of-two multipliers of the theoretical
 //! stepsize, best run kept), and result output conventions.
 
-use crate::coordinator::{train, TrainConfig, TrainResult};
+use crate::coordinator::{TrainConfig, TrainResult, TrainSession};
 use crate::data::{self, Dataset};
 use crate::mechanisms::{parse_mechanism, ThreePointMap};
 use crate::problems::{Distributed, LocalProblem, LogReg};
@@ -76,7 +76,7 @@ pub fn tune_stepsize(
     for &mult in multipliers {
         let mut c = cfg.clone();
         c.gamma = gamma_base * mult;
-        let result = train(problem, map.clone(), &c);
+        let result = TrainSession::builder(problem).mechanism(map.clone()).config(c.clone()).run();
         if result.diverged {
             continue;
         }
@@ -109,6 +109,8 @@ pub fn tune_stepsize(
             final_x: vec![],
             final_grad_norm_sq: f64::NAN,
             total_bits_up: 0,
+            total_bits_down: 0,
+            wire_bytes_up: 0,
             elapsed: std::time::Duration::ZERO,
         },
         score: None,

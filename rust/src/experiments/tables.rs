@@ -13,7 +13,7 @@
 
 use super::common;
 use crate::compressors::{Ctx, CtxInfo};
-use crate::coordinator::{train, TrainConfig};
+use crate::coordinator::{TrainConfig, TrainSession};
 use crate::mechanisms::{apply_update, parse_mechanism};
 use crate::problems::quadratic;
 use crate::theory;
@@ -127,7 +127,7 @@ pub fn table2(args: &Args) -> Result<()> {
             seed: 3,
             ..TrainConfig::default()
         };
-        let r = train(&suite.problem, map.clone(), &cfg);
+        let r = TrainSession::builder(&suite.problem).mechanism(map.clone()).config(cfg).run();
         // PŁ: fit contraction of ‖∇f‖² ≥ 2μ(f−f*) — gradient norm² is a
         // proxy with the same geometric rate.
         let gns: Vec<f64> = r.records.iter().map(|rec| rec.grad_norm_sq).collect();
@@ -141,7 +141,7 @@ pub fn table2(args: &Args) -> Result<()> {
             seed: 3,
             ..TrainConfig::default()
         };
-        let r2 = train(&logreg, map, &cfg2);
+        let r2 = TrainSession::builder(&logreg).mechanism(map).config(cfg2).run();
         let exponent = stats::power_law_exponent(&r2.running_min_gradnorm()).unwrap_or(f64::NAN);
         t.row(&[
             label.to_string(),

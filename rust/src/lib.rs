@@ -9,15 +9,26 @@
 //!
 //! * **L3 (this crate)** — the distributed coordinator: the 3PC mechanism
 //!   family ([`mechanisms`]), contractive/unbiased compressors
-//!   ([`compressors`]), the leader/worker training runtime with exact bit
-//!   accounting ([`coordinator`]), the training objectives ([`problems`],
-//!   [`data`]), convergence theory ([`theory`]) and the experiment
-//!   harness that regenerates every paper figure/table ([`experiments`]).
+//!   ([`compressors`]), the leader/worker training runtime
+//!   ([`coordinator`]) built around the composable
+//!   [`TrainSession`](coordinator::TrainSession) —
+//!   `builder(problem).mechanism(map).transport(t).observer(o).config(cfg).run()`
+//!   — with pluggable transports (in-memory thread pool, or the framed
+//!   byte codec that bills *measured* wire bytes against the paper's
+//!   declared bit accounting), streaming round observers with early-stop
+//!   control and `(x, g_i)` checkpointing, the training objectives
+//!   ([`problems`], [`data`]), convergence theory ([`theory`]) and the
+//!   experiment harness that regenerates every paper figure/table
+//!   ([`experiments`]).
 //! * **L2/L1 (python/compile)** — the objectives as JAX programs calling
 //!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **runtime** — loads those artifacts through the PJRT C API (the
-//!   `xla` crate) so the Rust binary executes the JAX-authored gradient
-//!   computations without Python.
+//!   `xla` crate, behind the `pjrt` cargo feature) so the Rust binary
+//!   executes the JAX-authored gradient computations without Python.
+
+// The hand-rolled numeric kernels index several slices per iteration;
+// CI runs clippy with -D warnings, so the style exception is explicit.
+#![allow(clippy::needless_range_loop)]
 
 pub mod compressors;
 pub mod coordinator;

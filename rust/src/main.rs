@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use std::sync::Arc;
-use threepc::coordinator::{train, TrainConfig};
+use threepc::coordinator::{Framed, InProcess, TrainConfig, TrainSession};
 use threepc::data;
 use threepc::experiments;
 use threepc::mechanisms::parse_mechanism;
@@ -75,7 +75,8 @@ fn print_help() {
            --workers N --rounds T --gamma G | --gamma-mult M\n\
            --dataset phishing|w6a|a9a|ijcnn1 (logreg)\n\
            --d D --noise-scale S      (quad)\n\
-           --tol EPS --loss-every K --seed S --threads P --init full|zero\n"
+           --tol EPS --loss-every K --seed S --threads P --init full|zero\n\
+           --transport inproc|framed  in-memory pool vs serializing codec path\n"
     );
 }
 
@@ -223,14 +224,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         init: args.str_or("init", "full").parse()?,
         ..TrainConfig::default()
     };
+    let transport = args.str_or("transport", "inproc");
     println!(
-        "threepc train: mech={mech_spec} backend={backend} n={} d={} gamma={} rounds={}",
+        "threepc train: mech={mech_spec} backend={backend} transport={transport} n={} d={} gamma={} rounds={}",
         problem.n_workers(),
         problem.dim(),
         fnum(cfg.gamma),
         cfg.max_rounds
     );
-    let r = train(&problem, map, &cfg);
+    let builder = TrainSession::builder(&problem).mechanism(map).config(cfg.clone());
+    let r = match transport.as_str() {
+        "inproc" | "inprocess" => builder.transport(InProcess::default()).run(),
+        "framed" => {
+            if cfg.threads > 1 {
+                eprintln!(
+                    "note: --transport framed runs workers sequentially; --threads {} is ignored",
+                    cfg.threads
+                );
+            }
+            builder.transport(Framed).run()
+        }
+        other => anyhow::bail!("unknown transport '{other}' (inproc|framed)"),
+    };
     let mut t = threepc::util::table::Table::new(
         "training trace (thinned)",
         &["round", "|grad f|^2", "G^t", "bits/worker", "skip%", "loss"],
@@ -261,6 +276,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         fnum(r.final_grad_norm_sq),
         fnum(r.total_bits_up as f64 / problem.n_workers() as f64),
         r.mean_skip_rate() * 100.0
+    );
+    println!(
+        "downlink {} bits/worker{}",
+        fnum(r.total_bits_down as f64),
+        if r.wire_bytes_up > 0 {
+            format!("; measured uplink {} bytes on the wire", fnum(r.wire_bytes_up as f64))
+        } else {
+            String::new()
+        }
     );
     Ok(())
 }

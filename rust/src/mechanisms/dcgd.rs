@@ -8,7 +8,7 @@
 //! baseline (`params()` returns `None`, so no theoretical stepsize
 //! exists and the harness must be given one explicitly).
 
-use super::{MechParams, ThreePointMap, Update};
+use super::{MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{Contractive, Ctx, CtxInfo};
 
 /// Exact gradient descent: `g_i^{t+1} = ∇f_i(x^{t+1})`, dense wire cost.
@@ -20,7 +20,7 @@ impl ThreePointMap for Gd {
     }
 
     fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
-        Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 }
+        Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64, wire: ReplaceWire::Dense }
     }
 
     fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
@@ -47,7 +47,7 @@ impl ThreePointMap for NaiveDcgd {
     fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
         let msg = self.c.compress(x, ctx);
         let bits = msg.wire_bits();
-        Update::Replace { g: msg.to_dense(), bits }
+        Update::Replace { g: msg.to_dense(), bits, wire: ReplaceWire::Fresh(vec![msg]) }
     }
 
     fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
@@ -68,7 +68,7 @@ mod tests {
         let info = CtxInfo::single(3);
         let u = Gd.apply(&[0.0; 3], &[0.0; 3], &[1.0, 2.0, 3.0], &mut Ctx::new(info, &mut rng, 0));
         match u {
-            Update::Replace { g, bits } => {
+            Update::Replace { g, bits, .. } => {
                 assert_eq!(g, vec![1.0, 2.0, 3.0]);
                 assert_eq!(bits, 96);
             }

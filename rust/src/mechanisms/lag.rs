@@ -13,7 +13,7 @@
 //! worker stays silent (zero payload bits — the essence of lazy
 //! aggregation).
 
-use super::{ef21::Ef21, MechParams, ThreePointMap, Update};
+use super::{ef21::Ef21, MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{Contractive, Ctx, CtxInfo};
 use crate::util::linalg::dist_sq;
 
@@ -41,7 +41,7 @@ impl ThreePointMap for Lag {
 
     fn apply(&self, h: &[f32], y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
         if lag_trigger(h, y, x, self.zeta) {
-            Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 }
+            Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64, wire: ReplaceWire::Dense }
         } else {
             Update::Keep
         }
@@ -111,7 +111,7 @@ mod tests {
         let y = [1.0f32, 1.0, 1.0, 1.1];
         let x = [1.0f32; 4];
         let u = lag.apply(&h, &y, &x, &mut ctx(&mut rng));
-        assert!(matches!(&u, Update::Replace { g, bits } if g == &x.to_vec() && *bits == 128));
+        assert!(matches!(&u, Update::Replace { g, bits, .. } if g == &x.to_vec() && *bits == 128));
         // h == x → never fires (0 > ζ·anything is false).
         let u = lag.apply(&x, &y, &x, &mut ctx(&mut rng));
         assert!(matches!(u, Update::Keep));

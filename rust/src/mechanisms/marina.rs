@@ -11,7 +11,7 @@
 //!   ‖g^t − ∇f(x^t)‖²`, which inequality (16) covers; per Table 1 it does
 //!   not satisfy the per-worker definition (6)).
 
-use super::{MechParams, ThreePointMap, Update};
+use super::{MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{Bernoulli, Contractive, Ctx, CtxInfo, Unbiased};
 
 /// 3PCv5: biased MARINA (Algorithm 9).
@@ -38,7 +38,11 @@ impl ThreePointMap for V5 {
     fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
         if self.coin.flip(ctx) {
             // Full synchronisation round: dense gradient on the wire.
-            return Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 };
+            return Update::Replace {
+                g: x.to_vec(),
+                bits: 32 * x.len() as u64,
+                wire: ReplaceWire::Dense,
+            };
         }
         // g = h + C(x − y): compress the *gradient difference*
         // (the increment is relative to h, applied by the wrapper).
@@ -90,7 +94,11 @@ impl ThreePointMap for Marina {
 
     fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
         if self.coin.flip(ctx) {
-            return Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64 };
+            return Update::Replace {
+                g: x.to_vec(),
+                bits: 32 * x.len() as u64,
+                wire: ReplaceWire::Dense,
+            };
         }
         let mut diff = vec![0.0f32; x.len()];
         crate::util::linalg::sub(x, y, &mut diff);

@@ -71,12 +71,52 @@ pub enum Update {
     /// `g_i^{t+1} = g` — state replaced; `bits` covers everything that
     /// had to cross the wire to let the server reconstruct it (LAG fire:
     /// the dense gradient; 3PCv2: both compressed messages; 3PCv1: the
-    /// dense shift plus the compressed difference).
-    Replace { g: Vec<f32>, bits: u64 },
+    /// dense shift plus the compressed difference). `wire` is that same
+    /// content as concrete messages, so a byte-level transport can
+    /// serialize exactly what the accountant bills; the invariant
+    /// `bits == wire.wire_bits()` (checked by the codec tests) ties the
+    /// two together.
+    Replace { g: Vec<f32>, bits: u64, wire: ReplaceWire },
     /// `g_i^{t+1} = g_i^t` — lazy-aggregation skip. Costs 0 payload bits
     /// (the 1-bit skip flag is charged by the protocol layer).
     Keep,
 }
+
+/// The messages a [`Update::Replace`] actually puts on the wire — enough
+/// for the receiver to reconstruct the new state `g` from what it
+/// already knows.
+#[derive(Debug, Clone)]
+pub enum ReplaceWire {
+    /// The wire carries the dense new state itself (`g`): GD, a LAG
+    /// fire, a MARINA/3PCv5 synchronisation round.
+    Dense,
+    /// `g = Σ parts`, materialised from zero: 3PCv1 (dense shift `y` +
+    /// compressed difference), naive DCGD (the compressed gradient).
+    Fresh(Vec<CVec>),
+    /// `g = g_i^t + Σ parts`, relative to the previous state the server
+    /// mirrors: 3PCv2 (`Q(x−y)` then `C(x−b)`), 3PCv3 over an
+    /// increment-style inner mechanism.
+    FromPrev(Vec<CVec>),
+}
+
+impl ReplaceWire {
+    /// Declared wire cost of the decomposition (must equal the update's
+    /// billed `bits`; `Dense` is billed per the carried state's length,
+    /// so it takes the dimension from the caller).
+    pub fn wire_bits(&self, dim: usize) -> u64 {
+        match self {
+            ReplaceWire::Dense => 32 * dim as u64,
+            ReplaceWire::Fresh(parts) | ReplaceWire::FromPrev(parts) => {
+                parts.iter().map(|p| p.wire_bits()).sum()
+            }
+        }
+    }
+
+}
+
+// Receiver-side reconstruction lives in one place only:
+// `WireUpdate::new_state` (coordinator::protocol), which the Framed
+// transport drives after decoding.
 
 /// A three point compressor: the stateless map of Definition 4.1.
 pub trait ThreePointMap: Send + Sync {

@@ -10,8 +10,8 @@
 //! bounds what EF21 could achieve with a perfect memory of the previous
 //! gradient. Reproduced in Figure 16.
 
-use super::{MechParams, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
+use super::{MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 
 pub struct V1 {
     c: Box<dyn Contractive>,
@@ -37,7 +37,8 @@ impl ThreePointMap for V1 {
         // Wire cost: dense shift y (the server has no copy) + the
         // compressed difference — the paper's d + K floats per node.
         let bits = 32 * x.len() as u64 + comp.wire_bits();
-        Update::Replace { g, bits }
+        let wire = ReplaceWire::Fresh(vec![CVec::Dense(y.to_vec()), comp]);
+        Update::Replace { g, bits, wire }
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

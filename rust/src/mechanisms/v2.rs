@@ -9,7 +9,7 @@
 //! `C(x−b)` — both sparse for the sparsifier instantiations of the
 //! experiments (Figures 1/5, 8–13); the bit accountant bills both.
 
-use super::{MechParams, ThreePointMap, Update};
+use super::{MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{Contractive, Ctx, CtxInfo, Unbiased};
 
 pub struct V2 {
@@ -43,7 +43,9 @@ impl ThreePointMap for V2 {
         let mut g = b;
         cmsg.add_into(&mut g);
         let bits = qmsg.wire_bits() + cmsg.wire_bits();
-        Update::Replace { g, bits }
+        // Both compressed messages ARE the wire content: the server
+        // rebuilds g = h + Q(x−y) + C(x−b) from its mirror of h.
+        Update::Replace { g, bits, wire: ReplaceWire::FromPrev(vec![qmsg, cmsg]) }
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

@@ -10,8 +10,8 @@
 //! is exactly the paper's formulation; note 3PCv2 is *not* the special
 //! case with `b = h + Q(x−y)` because that `b` is not itself a 3PC map.
 
-use super::{apply_update, update_bits, MechParams, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
+use super::{apply_update, update_bits, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 use std::sync::Arc;
 
 pub struct V3 {
@@ -40,7 +40,25 @@ impl ThreePointMap for V3 {
         let bits = inner_bits + cmsg.wire_bits();
         let mut g = b;
         cmsg.add_into(&mut g);
-        Update::Replace { g, bits }
+        // The stack's wire content is the inner mechanism's messages
+        // followed by the correction C(x−b), all relative to whatever
+        // base the inner content used.
+        let wire = match inner_update {
+            Update::Keep => ReplaceWire::FromPrev(vec![cmsg]),
+            Update::Increment { inc, .. } => ReplaceWire::FromPrev(vec![inc, cmsg]),
+            Update::Replace { g: bg, wire: inner_wire, .. } => match inner_wire {
+                ReplaceWire::Dense => ReplaceWire::Fresh(vec![CVec::Dense(bg), cmsg]),
+                ReplaceWire::Fresh(mut parts) => {
+                    parts.push(cmsg);
+                    ReplaceWire::Fresh(parts)
+                }
+                ReplaceWire::FromPrev(mut parts) => {
+                    parts.push(cmsg);
+                    ReplaceWire::FromPrev(parts)
+                }
+            },
+        };
+        Update::Replace { g, bits, wire }
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

@@ -10,7 +10,7 @@
 //! Top-K₁/Top-K₂ on the sparse quadratic suite this frequently collapses
 //! to EF21 behaviour (Figures 14–15), which the experiments reproduce.
 
-use super::{ef21::Ef21, MechParams, ThreePointMap, Update};
+use super::{ef21::Ef21, MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{Contractive, Ctx, CtxInfo};
 
 pub struct V4 {
@@ -43,7 +43,9 @@ impl ThreePointMap for V4 {
         let bits = m2.wire_bits() + m1.wire_bits();
         let mut g = b;
         m1.add_into(&mut g);
-        Update::Replace { g, bits }
+        // g = h + C₂(x−h) + C₁(x−b): both messages relative to the
+        // server's mirror of h.
+        Update::Replace { g, bits, wire: ReplaceWire::FromPrev(vec![m2, m1]) }
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

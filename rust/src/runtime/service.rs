@@ -5,6 +5,7 @@
 //! `Send`.
 
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -35,6 +36,9 @@ impl Arg {
     }
 }
 
+// Without the pjrt feature no service loop consumes these, so the
+// variant fields are write-only as far as rustc can see.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 enum Req {
     LoadArtifact { name: String, path: PathBuf, resp: mpsc::Sender<Result<()>> },
     RegisterConst { key: String, data: Vec<f32>, dims: Vec<i64>, resp: mpsc::Sender<Result<()>> },
@@ -106,6 +110,7 @@ pub struct DeviceService {
 
 impl DeviceService {
     /// Spawn the device thread with a CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn start() -> Result<DeviceService> {
         let (tx, rx) = mpsc::channel::<Req>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -117,6 +122,18 @@ impl DeviceService {
             .recv()
             .context("device thread died during startup")??;
         Ok(DeviceService { handle: DeviceHandle { tx }, join: Some(join) })
+    }
+
+    /// Built without the `pjrt` cargo feature: no PJRT client exists, so
+    /// starting the service reports the configuration error instead of
+    /// linking against the (absent) `xla` crate.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn start() -> Result<DeviceService> {
+        anyhow::bail!(
+            "PJRT backend unavailable: threepc was built without the `pjrt` \
+             cargo feature (the offline image does not vendor the `xla` \
+             crate); use the native gradient backend instead"
+        )
     }
 
     pub fn handle(&self) -> DeviceHandle {
@@ -135,6 +152,7 @@ impl Drop for DeviceService {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_from(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     if dims.is_empty() {
         anyhow::ensure!(data.len() == 1, "scalar arg must have 1 element");
@@ -150,6 +168,7 @@ fn literal_from(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
@@ -252,6 +271,7 @@ fn run_service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_from_validates() {
         assert!(literal_from(&[1.0, 2.0], &[3]).is_err());

@@ -1,0 +1,150 @@
+//! Little-endian bit packing for the wire codec: sparse coordinate
+//! indices cost `⌈log₂ d⌉` bits each on the wire (the accounting unit of
+//! every paper plot), so the codec packs them below byte granularity.
+//!
+//! Layout: values are appended least-significant-bit first into a byte
+//! stream; the final partial byte is zero-padded. A field written with
+//! `push(v, n)` must be read back with `pull(n)` at the same offset.
+
+/// Append sub-byte fields to a byte buffer.
+pub struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    /// Bits already used in the last byte of `out` (0 = byte-aligned).
+    used: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> BitWriter<'a> {
+        BitWriter { out, used: 0 }
+    }
+
+    /// Append the low `nbits` bits of `v` (LSB first). `nbits ≤ 64`.
+    pub fn push(&mut self, v: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(nbits == 64 || v < (1u64 << nbits), "value {v} exceeds {nbits} bits");
+        let mut remaining = nbits;
+        let mut val = v;
+        while remaining > 0 {
+            if self.used == 0 {
+                self.out.push(0);
+            }
+            let free = 8 - self.used;
+            let take = free.min(remaining);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let chunk = (val & mask) as u8;
+            let last = self.out.last_mut().expect("byte pushed above");
+            *last |= chunk << self.used;
+            self.used = (self.used + take) % 8;
+            val >>= take;
+            remaining -= take;
+        }
+    }
+
+    /// Zero-pad to the next byte boundary.
+    pub fn align(&mut self) {
+        self.used = 0;
+    }
+}
+
+/// Read sub-byte fields from a byte buffer.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Absolute bit offset into `buf`.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `nbits` bits (LSB first). Returns `None` past the end.
+    pub fn pull(&mut self, nbits: u32) -> Option<u64> {
+        if self.pos + nbits as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < nbits {
+            let byte = self.buf[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(nbits - got);
+            let mask = ((1u16 << take) - 1) as u8;
+            let chunk = (byte >> off) & mask;
+            v |= (chunk as u64) << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Some(v)
+    }
+
+    /// Bytes consumed so far, rounding the current partial byte up.
+    pub fn bytes_consumed(&self) -> usize {
+        self.pos.div_ceil(8)
+    }
+}
+
+/// Bytes needed to hold `nbits` bits.
+pub fn bytes_for_bits(nbits: u64) -> usize {
+    nbits.div_ceil(8) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut buf = Vec::new();
+        let fields: Vec<(u64, u32)> =
+            vec![(1, 1), (5, 3), (1023, 10), (0, 7), (0xdead_beef, 32), (1, 1), (u64::MAX, 64)];
+        let mut w = BitWriter::new(&mut buf);
+        for &(v, n) in &fields {
+            w.push(v, n);
+        }
+        let total_bits: u32 = fields.iter().map(|&(_, n)| n).sum();
+        assert_eq!(buf.len(), bytes_for_bits(total_bits as u64));
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &fields {
+            assert_eq!(r.pull(n), Some(v), "field ({v}, {n})");
+        }
+        assert_eq!(r.bytes_consumed(), buf.len());
+    }
+
+    #[test]
+    fn align_pads_to_byte() {
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        w.push(0b101, 3);
+        w.align();
+        w.push(0xff, 8);
+        assert_eq!(buf, vec![0b101, 0xff]);
+    }
+
+    #[test]
+    fn pull_past_end_is_none() {
+        let buf = [0u8; 1];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.pull(8), Some(0));
+        assert_eq!(r.pull(1), None);
+    }
+
+    #[test]
+    fn dense_index_packing_matches_accounting() {
+        // 100 indices into d = 1000 must cost exactly ⌈100·10/8⌉ bytes.
+        let d = 1000usize;
+        let ib = crate::compressors::index_bits(d) as u32;
+        assert_eq!(ib, 10);
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        for i in 0..100u64 {
+            w.push(i * 9 % d as u64, ib);
+        }
+        assert_eq!(buf.len(), bytes_for_bits(100 * ib as u64));
+        let mut r = BitReader::new(&buf);
+        for i in 0..100u64 {
+            assert_eq!(r.pull(ib), Some(i * 9 % d as u64));
+        }
+    }
+}

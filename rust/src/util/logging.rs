@@ -19,7 +19,11 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -45,7 +49,7 @@ pub fn init_from_env() {
     if let Ok(v) = std::env::var("THREEPC_LOG") {
         set_level_str(&v);
     }
-    once_cell::sync::Lazy::force(&START);
+    let _ = start();
 }
 
 #[inline]
@@ -55,7 +59,7 @@ pub fn enabled(level: Level) -> bool {
 
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         let tag = match level {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",

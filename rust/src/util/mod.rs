@@ -2,6 +2,7 @@
 //! crates.io (`rand`, `clap`, `serde`, `log`, stats helpers) implemented
 //! in-tree because this build is fully offline.
 
+pub mod bits;
 pub mod cli;
 pub mod config;
 pub mod linalg;

@@ -1,0 +1,172 @@
+//! Property tests for the wire codec: CVec/Update encode→decode
+//! round-trips (including the sparse→dense cap crossover) and the
+//! measured-bytes vs declared-`wire_bits` agreement for every mechanism
+//! the spec grammar can produce.
+
+use threepc::compressors::{index_bits, CVec, Ctx, CtxInfo};
+use threepc::coordinator::protocol::{frame_overhead_bytes, wire_part_count};
+use threepc::coordinator::{decode_uplink, encode_uplink, UplinkMsg};
+use threepc::mechanisms::{parse_mechanism, update_bits, MechWorker, ReplaceWire, Update};
+use threepc::util::rng::Pcg64;
+
+fn random_cvec(rng: &mut Pcg64, dim: usize) -> CVec {
+    match rng.below(3) {
+        0 => CVec::Zero { dim },
+        1 => CVec::Dense((0..dim).map(|_| rng.normal() as f32).collect()),
+        _ => {
+            let nnz = rng.below(dim) + 1;
+            let idx: Vec<u32> = rng.sample_indices(dim, nnz).into_iter().map(|i| i as u32).collect();
+            let val: Vec<f32> = (0..nnz).map(|_| rng.normal() as f32).collect();
+            CVec::Sparse { dim, idx, val }
+        }
+    }
+}
+
+fn below_crossover(c: &CVec) -> bool {
+    match c {
+        CVec::Sparse { dim, idx, .. } => {
+            (idx.len() as u64) * (32 + index_bits(*dim)) < 32 * *dim as u64
+        }
+        _ => true,
+    }
+}
+
+/// Round-trips preserve the represented vector exactly; sparse frames
+/// below the cap crossover preserve the representation too, while
+/// frames at/past it decode as the (equally priced) dense form.
+#[test]
+fn cvec_roundtrip_fuzz() {
+    let mut rng = Pcg64::seed(0xc0dec);
+    for case in 0..500 {
+        let dim = rng.below(200) + 1;
+        let c = random_cvec(&mut rng, dim);
+        let mut buf = Vec::new();
+        c.encode(&mut buf);
+        assert_eq!(buf.len(), c.encoded_len(), "case {case}: {c:?}");
+        let mut pos = 0;
+        let back = CVec::decode(&buf, &mut pos).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(pos, buf.len(), "case {case}: did not consume the frame");
+        if below_crossover(&c) {
+            assert_eq!(back, c, "case {case}");
+        } else {
+            assert!(matches!(back, CVec::Dense(_)), "case {case}: cap crossover must go dense");
+            assert_eq!(back.to_dense(), c.to_dense(), "case {case}");
+        }
+    }
+}
+
+/// Byte-level payloads track the declared bit accounting: the only
+/// slack is the final index byte's zero padding.
+#[test]
+fn cvec_encoded_len_tracks_wire_bits() {
+    let mut rng = Pcg64::seed(0xb17);
+    for case in 0..500 {
+        let dim = rng.below(500) + 1;
+        let c = random_cvec(&mut rng, dim);
+        let header = match &c {
+            CVec::Sparse { .. } if below_crossover(&c) => 9,
+            _ => 5,
+        };
+        let payload_bits = ((c.encoded_len() - header) * 8) as u64;
+        assert!(payload_bits >= c.wire_bits(), "case {case}: {c:?}");
+        assert!(payload_bits - c.wire_bits() < 8, "case {case}: {c:?}");
+    }
+}
+
+/// The exact cap boundary: one entry below the crossover stays sparse,
+/// the crossover itself goes dense at exactly the capped cost.
+#[test]
+fn cap_crossover_boundary_is_exact() {
+    // dim = 16, ib = 4: sparse entry costs 36 bits, dense 512; the
+    // crossover sits at nnz ≥ ⌈512/36⌉ = 15 (15·36 = 540 ≥ 512).
+    let dim = 16usize;
+    let mk = |nnz: usize| CVec::Sparse {
+        dim,
+        idx: (0..nnz as u32).collect(),
+        val: vec![1.0; nnz],
+    };
+    let below = mk(14);
+    assert_eq!(below.wire_bits(), 14 * 36);
+    let mut buf = Vec::new();
+    below.encode(&mut buf);
+    let mut pos = 0;
+    assert!(matches!(CVec::decode(&buf, &mut pos).unwrap(), CVec::Sparse { .. }));
+
+    let at = mk(15);
+    assert_eq!(at.wire_bits(), 32 * dim as u64, "cap applies");
+    let mut buf = Vec::new();
+    at.encode(&mut buf);
+    assert_eq!(buf.len(), 5 + 4 * dim, "dense encoding at the cap");
+    let mut pos = 0;
+    assert_eq!(CVec::decode(&buf, &mut pos).unwrap().to_dense(), at.to_dense());
+}
+
+/// The declared `bits` of every Replace update equals the wire cost of
+/// its decomposition, and the serialized frame's measured payload
+/// matches within per-part byte padding — for every mechanism spec the
+/// grammar can produce (the `parse_all_specs` set).
+#[test]
+fn measured_bytes_agree_with_declared_bits_for_all_specs() {
+    let specs = [
+        "gd",
+        "dcgd:top4",
+        "ef21:top4",
+        "lag:4.0",
+        "clag:top4:2.0",
+        "v1:top4",
+        "v2:rand4:top4",
+        "v3:ef21:top4;top2",
+        "v4:top4:top2",
+        "v5:0.25:top4",
+        "marina:0.25:rand4",
+    ];
+    let d = 24usize;
+    let n = 4usize;
+    for spec in specs {
+        let map = parse_mechanism(spec).unwrap();
+        let mut meta = Pcg64::seed(0x5eed ^ spec.len() as u64);
+        let g0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let grad0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let mut worker = MechWorker::new(map, g0, grad0);
+        let mut rng = Pcg64::new(11, 0x77);
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: 0 };
+        for t in 0..12u64 {
+            let grad: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+            let h_before = worker.g().to_vec();
+            let mut ctx = Ctx::new(info, &mut rng, t);
+            let (update, g_err) = worker.round(&grad, &mut ctx);
+
+            // Declared invariant: Replace bits == decomposition cost.
+            if let Update::Replace { bits, wire, g, .. } = &update {
+                assert_eq!(*bits, wire.wire_bits(g.len()), "{spec} round {t}");
+                if matches!(wire, ReplaceWire::Dense) {
+                    // Dense wire means g itself crosses.
+                    assert_eq!(*bits, 32 * g.len() as u64, "{spec} round {t}");
+                }
+            }
+
+            // Measured agreement through the full frame codec.
+            let declared = update_bits(&update);
+            let parts = wire_part_count(&update);
+            let msg = UplinkMsg { worker_id: 0, update, g_err };
+            let bytes = encode_uplink(&msg);
+            let payload_bits = 8 * (bytes.len() - frame_overhead_bytes(&msg.update)) as u64;
+            assert!(
+                payload_bits >= declared,
+                "{spec} round {t}: payload {payload_bits} < declared {declared}"
+            );
+            assert!(
+                payload_bits - declared < 8 * parts.max(1) as u64,
+                "{spec} round {t}: payload {payload_bits} vs declared {declared} ({parts} parts)"
+            );
+
+            // And the decoded frame reconstructs the exact new state.
+            let decoded = decode_uplink(&bytes).unwrap();
+            let rebuilt = decoded.update.new_state(&h_before);
+            assert_eq!(rebuilt.len(), d);
+            for (i, (a, b)) in rebuilt.iter().zip(worker.g()).enumerate() {
+                assert!(a == b, "{spec} round {t}: coord {i}: {a} vs {b}");
+            }
+        }
+    }
+}

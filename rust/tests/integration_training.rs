@@ -4,16 +4,22 @@
 //! the HLO-path equivalents live in integration_runtime.rs).
 
 use std::sync::Arc;
-use threepc::coordinator::{train, InitPolicy, TrainConfig};
+use threepc::coordinator::{InitPolicy, TrainConfig, TrainResult, TrainSession};
 use threepc::data;
 use threepc::experiments::common;
-use threepc::mechanisms::parse_mechanism;
+use threepc::mechanisms::{parse_mechanism, ThreePointMap};
 use threepc::problems::quadratic;
-use threepc::problems::LocalProblem;
+use threepc::problems::{Distributed, LocalProblem};
 use threepc::util::stats;
 
 fn cfg(gamma: f64, rounds: usize) -> TrainConfig {
     TrainConfig { gamma, max_rounds: rounds, seed: 77, ..TrainConfig::default() }
+}
+
+/// All runs in this file go through the session API (the `train()` free
+/// function survives only as a deprecated shim).
+fn train(problem: &Distributed, map: Arc<dyn ThreePointMap>, cfg: &TrainConfig) -> TrainResult {
+    TrainSession::builder(problem).mechanism(map).config(cfg.clone()).run()
 }
 
 /// Theorem 5.8 made measurable: every 3PC method at its theoretical PŁ

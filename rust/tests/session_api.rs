@@ -1,0 +1,131 @@
+//! Integration tests for the composable `TrainSession` API: transport
+//! equivalence across the whole mechanism family, observer control
+//! flow, and checkpoint persistence through a real training run.
+
+use threepc::coordinator::{
+    Checkpoint, CheckpointObserver, Framed, InProcess, RoundCtx, RoundFlow, RoundObserver,
+    StopReason, StreamObserver, TrainConfig, TrainSession,
+};
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::quadratic;
+
+fn cfg(gamma: f64, rounds: usize) -> TrainConfig {
+    // threads = 1 pins the f64 fold order, making InProcess and Framed
+    // traces comparable at full precision.
+    TrainConfig { gamma, max_rounds: rounds, threads: 1, seed: 13, ..TrainConfig::default() }
+}
+
+/// The serializing transport reproduces the in-memory transport's
+/// optimization trajectory for every mechanism family member: the codec
+/// is semantically lossless along the whole training path.
+#[test]
+fn framed_matches_inprocess_for_every_mechanism() {
+    let suite = quadratic::generate(6, 30, 1e-2, 0.5, 21);
+    for spec in [
+        "gd",
+        "dcgd:top3",
+        "ef21:top3",
+        "lag:2.0",
+        "clag:top3:2.0",
+        "v1:top3",
+        "v2:rand3:top3",
+        "v3:ef21:top3;top2",
+        "v4:top3:top2",
+        "v5:0.3:top3",
+        "marina:0.3:rand3",
+    ] {
+        let c = cfg(0.02, 25);
+        let a = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism(spec).unwrap())
+            .config(c.clone())
+            .transport(InProcess::new(1))
+            .run();
+        let b = TrainSession::builder(&suite.problem)
+            .mechanism(parse_mechanism(spec).unwrap())
+            .config(c)
+            .transport(Framed)
+            .run();
+        assert_eq!(a.rounds_run, b.rounds_run, "{spec}");
+        assert!(b.wire_bytes_up > 0, "{spec}");
+        assert_eq!(a.wire_bytes_up, 0, "{spec}");
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.grad_norm_sq, rb.grad_norm_sq, "{spec} round {}", ra.t);
+            assert_eq!(ra.skipped_frac, rb.skipped_frac, "{spec} round {}", ra.t);
+            assert_eq!(ra.g_err, rb.g_err, "{spec} round {}", ra.t);
+            assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "{spec} round {}", ra.t);
+            // Framing overhead makes measured billing strictly larger.
+            assert!(rb.bits_up_cum > ra.bits_up_cum, "{spec} round {}", ra.t);
+        }
+    }
+}
+
+/// Framed billing is measured bytes: total_bits_up (beyond g⁰ init)
+/// must equal 8 × the transport's serialized byte count.
+#[test]
+fn framed_bills_exactly_its_measured_bytes() {
+    let suite = quadratic::generate(5, 20, 1e-2, 0.5, 3);
+    let r = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
+        .config(cfg(0.02, 15))
+        .transport(Framed)
+        .run();
+    let init_bits: u64 = 5 * 32 * 20; // FullGradient g⁰ sync, n = 5, d = 20
+    assert_eq!(r.total_bits_up - init_bits, 8 * r.wire_bytes_up);
+}
+
+/// Observers stream every round and can stop the session; built-in
+/// stop rules win over user observers on the same round.
+#[test]
+fn observers_stream_and_stop() {
+    let suite = quadratic::generate(4, 20, 1e-2, 0.5, 9);
+    let mut rounds_seen = 0usize;
+
+    struct HardStop {
+        at: usize,
+    }
+    impl RoundObserver for HardStop {
+        fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+            if ctx.snap.t >= self.at {
+                RoundFlow::Stop(StopReason::Custom("enough".into()))
+            } else {
+                RoundFlow::Continue
+            }
+        }
+    }
+
+    let r = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism("ef21:top2").unwrap())
+        .config(cfg(0.02, 100))
+        .observer(StreamObserver::new(|_s: &threepc::coordinator::RoundSnapshot<'_>| {
+            rounds_seen += 1;
+        }))
+        .observer(HardStop { at: 6 })
+        .run();
+    assert_eq!(r.rounds_run, 7);
+    assert_eq!(rounds_seen, 7);
+    assert!(!r.converged && !r.diverged);
+    // The stopped round is always recorded, even off-cadence.
+    assert_eq!(r.records.last().unwrap().t, 6);
+}
+
+/// Checkpoints persist the full `(x, g_i)` optimizer state and match
+/// the session's own final state when written on the last round.
+#[test]
+fn checkpoint_captures_final_state() {
+    let suite = quadratic::generate(3, 16, 1e-2, 0.5, 5);
+    let path = std::env::temp_dir().join(format!("threepc-session-ckpt-{}.bin", std::process::id()));
+    let rounds = 9;
+    let r = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism("clag:top2:1.0").unwrap())
+        .config(cfg(0.02, rounds))
+        .observer(CheckpointObserver::new(rounds - 1, path.clone()))
+        .run();
+    let cp = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(cp.t, rounds - 1);
+    assert_eq!(cp.x, r.final_x, "checkpointed iterate is the final iterate");
+    assert_eq!(cp.worker_g.len(), 3);
+    let mut ids: Vec<usize> = cp.worker_g.iter().map(|&(id, _)| id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+}
