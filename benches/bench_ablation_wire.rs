@@ -10,9 +10,10 @@
 #[path = "benchkit/mod.rs"]
 mod benchkit;
 
-use threepc::compressors::CVec;
+use threepc::compressors::{CVec, WireValueCoding};
 use threepc::coordinator::{
-    decode_uplink, encode_uplink, Framed, InProcess, TrainConfig, TrainSession, UplinkMsg,
+    decode_uplink, encode_uplink, encode_uplink_with, Framed, InProcess, TrainConfig,
+    TrainSession, UplinkMsg,
 };
 use threepc::mechanisms::{parse_mechanism, Update};
 use threepc::problems::quadratic;
@@ -61,6 +62,45 @@ fn main() {
     });
     println!("    → {:.1} MB/s", benchkit::throughput(&s, bytes.len()) / 1e6);
 
+    // Natural value coding: 9-bit sign+exponent vs raw f32 for
+    // power-of-two payloads (what natural-compressed mechanisms emit).
+    println!("\n== natural value coding: raw f32 vs 9-bit sign+exponent (d = 25088) ==");
+    for k in [251usize, 2508, 12544] {
+        let idx: Vec<u32> = rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
+        let val: Vec<f32> = (0..k)
+            .map(|i| {
+                let mag = 2.0f32.powi((i % 17) as i32 - 8);
+                if i % 2 == 0 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        let inc = CVec::Sparse { dim: d, idx, val };
+        let bits = inc.wire_bits();
+        let msg = UplinkMsg { worker_id: 0, update: Update::Increment { inc, bits }, g_err: 0.0 };
+        let raw = encode_uplink(&msg);
+        let nat = encode_uplink_with(&msg, WireValueCoding::Natural);
+        println!(
+            "  k={k}: raw {} B vs natural {} B ({:.2}x smaller)",
+            raw.len(),
+            nat.len(),
+            raw.len() as f64 / nat.len() as f64
+        );
+        let s = benchkit::measure(&format!("encode natural k={k}"), 10, 200, || {
+            std::hint::black_box(encode_uplink_with(
+                std::hint::black_box(&msg),
+                WireValueCoding::Natural,
+            ));
+        });
+        println!("    → {:.1} MB/s", benchkit::throughput(&s, nat.len()) / 1e6);
+        let s = benchkit::measure(&format!("decode natural k={k}"), 10, 200, || {
+            std::hint::black_box(decode_uplink(std::hint::black_box(&nat)).unwrap());
+        });
+        println!("    → {:.1} MB/s", benchkit::throughput(&s, nat.len()) / 1e6);
+    }
+
     // Framed vs InProcess per-round overhead: cheap gradients make the
     // difference pure transport cost.
     println!("\n== Framed vs InProcess per-round overhead (quadratic suite) ==");
@@ -89,7 +129,7 @@ fn main() {
                 TrainSession::builder(&suite.problem)
                     .mechanism(map.clone())
                     .config(cfg.clone())
-                    .transport(Framed)
+                    .transport(Framed::default())
                     .run(),
             );
         });

@@ -71,6 +71,50 @@ impl<'a> Ctx<'a> {
     }
 }
 
+/// How the wire codec writes f32 payload values.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WireValueCoding {
+    /// Raw IEEE-754 little-endian f32 — exact for any value (default).
+    #[default]
+    RawF32,
+    /// Natural value coding (Horváth et al.; see [`natural`]): sign +
+    /// 8-bit exponent, 9 bits per value. Lossless exactly when every
+    /// value is zero or a signed power of two — the output of the
+    /// [`Natural`] compressor — so the encoder applies it per frame and
+    /// falls back to raw f32 otherwise. Traces are unchanged either
+    /// way; only measured wire bytes shrink.
+    Natural,
+}
+
+/// 9-bit natural value code: bit 8 = sign, bits 0–7 = the IEEE-754 f32
+/// exponent field (0 = the value zero). `None` when `v` is not exactly
+/// representable (non-zero mantissa, subnormal, or non-finite).
+fn natural_code(v: f32) -> Option<u16> {
+    if v == 0.0 {
+        return Some(0);
+    }
+    let bits = v.to_bits();
+    let mantissa = bits & 0x007f_ffff;
+    let exp = (bits >> 23) & 0xff;
+    if mantissa != 0 || exp == 0 || exp == 255 {
+        return None;
+    }
+    let sign = (bits >> 31) as u16;
+    Some((sign << 8) | exp as u16)
+}
+
+/// Inverse of [`natural_code`] for a 9-bit wire field.
+fn natural_decode(code: u64) -> anyhow::Result<f32> {
+    let exp = (code & 0xff) as u32;
+    let sign = ((code >> 8) & 1) as u32;
+    if exp == 0 {
+        anyhow::ensure!(sign == 0, "natural code: signed zero");
+        return Ok(0.0);
+    }
+    anyhow::ensure!(exp != 255, "natural code: non-finite exponent");
+    Ok(f32::from_bits((sign << 31) | (exp << 23)))
+}
+
 /// A compressed vector. Index order is whatever the operator produced;
 /// consumers only add/scatter, so no sort is required.
 #[derive(Debug, Clone, PartialEq)]
@@ -162,6 +206,63 @@ impl CVec {
     ///
     /// [`wire_bits`]: CVec::wire_bits
     pub fn encode(&self, out: &mut Vec<u8>) {
+        self.encode_with(WireValueCoding::RawF32, out);
+    }
+
+    /// Whether every value is exactly representable under natural value
+    /// coding (zero or a signed normal power of two) — the shape the
+    /// [`Natural`] compressor produces.
+    pub fn natural_codable(&self) -> bool {
+        match self {
+            CVec::Zero { .. } => true,
+            CVec::Dense(v) => v.iter().all(|&x| natural_code(x).is_some()),
+            CVec::Sparse { val, .. } => val.iter().all(|&x| natural_code(x).is_some()),
+        }
+    }
+
+    /// [`CVec::encode`] with an explicit value coding. Natural coding
+    /// (tags 3/4 below) is used only when the frame is losslessly
+    /// codable ([`Self::natural_codable`]); otherwise the raw format is
+    /// emitted, so decoding always reproduces the represented vector:
+    ///
+    /// ```text
+    /// tag 3 (dense-natural)  dim:u32  v: dim × 9 bits, byte-padded
+    /// tag 4 (sparse-natural) dim:u32  nnz:u32
+    ///                        val: nnz × 9 bits, byte-padded
+    ///                        idx: nnz × ⌈log₂ d⌉ bits, byte-padded
+    /// ```
+    pub fn encode_with(&self, coding: WireValueCoding, out: &mut Vec<u8>) {
+        if coding == WireValueCoding::Natural && self.natural_codable() {
+            match self {
+                CVec::Zero { dim } => {
+                    out.push(0);
+                    out.extend_from_slice(&(*dim as u32).to_le_bytes());
+                }
+                CVec::Dense(v) => encode_dense_natural(v, out),
+                CVec::Sparse { dim, idx, val } => {
+                    if past_cap_crossover(*dim, idx.len(), 9) {
+                        // Crossover at natural value costs (9 bits):
+                        // sparsity stops paying earlier than in raw
+                        // coding, so the switch point is coding-aware.
+                        encode_dense_natural(&self.to_dense(), out);
+                        return;
+                    }
+                    out.push(4);
+                    out.extend_from_slice(&(*dim as u32).to_le_bytes());
+                    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                    let ib = index_bits(*dim) as u32;
+                    let mut w = crate::util::bits::BitWriter::new(out);
+                    for &v in val {
+                        w.push(natural_code(v).expect("checked natural_codable") as u64, 9);
+                    }
+                    w.align();
+                    for &i in idx {
+                        w.push(i as u64, ib);
+                    }
+                }
+            }
+            return;
+        }
         match self {
             CVec::Zero { dim } => {
                 out.push(0);
@@ -169,8 +270,7 @@ impl CVec {
             }
             CVec::Dense(v) => encode_dense(v, out),
             CVec::Sparse { dim, idx, val } => {
-                let per = 32 + index_bits(*dim);
-                if idx.len() as u64 * per >= 32 * *dim as u64 {
+                if past_cap_crossover(*dim, idx.len(), 32) {
                     // Cap crossover: sparsity stopped paying.
                     encode_dense(&self.to_dense(), out);
                     return;
@@ -196,8 +296,7 @@ impl CVec {
             CVec::Zero { .. } => 5,
             CVec::Dense(v) => 5 + 4 * v.len(),
             CVec::Sparse { dim, idx, .. } => {
-                let per = 32 + index_bits(*dim);
-                if idx.len() as u64 * per >= 32 * *dim as u64 {
+                if past_cap_crossover(*dim, idx.len(), 32) {
                     5 + 4 * dim
                 } else {
                     5 + 4 + 4 * idx.len()
@@ -205,6 +304,27 @@ impl CVec {
                 }
             }
         }
+    }
+
+    /// Exact number of bytes [`CVec::encode_with`] appends.
+    pub fn encoded_len_with(&self, coding: WireValueCoding) -> usize {
+        use crate::util::bits::bytes_for_bits;
+        if coding == WireValueCoding::Natural && self.natural_codable() {
+            return match self {
+                CVec::Zero { .. } => 5,
+                CVec::Dense(v) => 5 + bytes_for_bits(9 * v.len() as u64),
+                CVec::Sparse { dim, idx, .. } => {
+                    if past_cap_crossover(*dim, idx.len(), 9) {
+                        5 + bytes_for_bits(9 * *dim as u64)
+                    } else {
+                        5 + 4
+                            + bytes_for_bits(9 * idx.len() as u64)
+                            + bytes_for_bits(idx.len() as u64 * index_bits(*dim))
+                    }
+                }
+            };
+        }
+        self.encoded_len()
     }
 
     /// Decode one `cvec` frame starting at `buf[*pos..]`, advancing
@@ -232,7 +352,7 @@ impl CVec {
             2 => {
                 let nnz = read_u32(buf, pos)? as usize;
                 anyhow::ensure!(
-                    nnz as u64 * (32 + index_bits(dim)) < 32 * dim as u64,
+                    !past_cap_crossover(dim, nnz, 32),
                     "cvec: sparse frame past the dense crossover (nnz {nnz}, dim {dim})"
                 );
                 // Same wire-controlled-allocation guard as the dense arm.
@@ -258,6 +378,54 @@ impl CVec {
                 *pos += packed;
                 Ok(CVec::Sparse { dim, idx, val })
             }
+            3 => {
+                // Dense, natural-coded values (9 bits each).
+                let packed = crate::util::bits::bytes_for_bits(9 * dim as u64);
+                anyhow::ensure!(
+                    buf.len() - *pos >= packed,
+                    "cvec: truncated natural dense body (dim {dim})"
+                );
+                let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
+                let mut v = Vec::with_capacity(dim);
+                for _ in 0..dim {
+                    let code = r
+                        .pull(9)
+                        .ok_or_else(|| anyhow::anyhow!("cvec: truncated natural value"))?;
+                    v.push(natural_decode(code)?);
+                }
+                *pos += packed;
+                Ok(CVec::Dense(v))
+            }
+            4 => {
+                // Sparse, natural-coded values.
+                let nnz = read_u32(buf, pos)? as usize;
+                anyhow::ensure!(nnz <= dim, "cvec: natural sparse nnz {nnz} > dim {dim}");
+                let ib = index_bits(dim) as u32;
+                let vbytes = crate::util::bits::bytes_for_bits(9 * nnz as u64);
+                let ibytes = crate::util::bits::bytes_for_bits(nnz as u64 * ib as u64);
+                anyhow::ensure!(
+                    buf.len() - *pos >= vbytes + ibytes,
+                    "cvec: truncated natural sparse body (nnz {nnz})"
+                );
+                let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + vbytes]);
+                let mut val = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let code = r
+                        .pull(9)
+                        .ok_or_else(|| anyhow::anyhow!("cvec: truncated natural value"))?;
+                    val.push(natural_decode(code)?);
+                }
+                *pos += vbytes;
+                let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + ibytes]);
+                let mut idx = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
+                    anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
+                    idx.push(i as u32);
+                }
+                *pos += ibytes;
+                Ok(CVec::Sparse { dim, idx, val })
+            }
             other => anyhow::bail!("cvec: unknown tag {other}"),
         }
     }
@@ -268,6 +436,15 @@ fn encode_dense(v: &[f32], out: &mut Vec<u8>) {
     out.extend_from_slice(&(v.len() as u32).to_le_bytes());
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_dense_natural(v: &[f32], out: &mut Vec<u8>) {
+    out.push(3);
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    let mut w = crate::util::bits::BitWriter::new(out);
+    for &x in v {
+        w.push(natural_code(x).expect("checked natural_codable") as u64, 9);
     }
 }
 
@@ -298,6 +475,15 @@ pub(crate) fn read_f64(buf: &[u8], pos: &mut usize) -> anyhow::Result<f64> {
 /// Bits needed to address a coordinate of a d-dimensional vector.
 pub fn index_bits(d: usize) -> u64 {
     (usize::BITS - d.saturating_sub(1).leading_zeros()).max(1) as u64
+}
+
+/// The rational-sender crossover: true when a sparse frame of `nnz`
+/// entries stops paying against a dense one, for values costing
+/// `value_bits` bits each (32 raw, 9 natural). Encoders, length
+/// accounting and the decoder's validation must all agree on this
+/// predicate — keep it in one place.
+pub fn past_cap_crossover(dim: usize, nnz: usize, value_bits: u64) -> bool {
+    nnz as u64 * (value_bits + index_bits(dim)) >= value_bits * dim as u64
 }
 
 /// Contractive compressor (Eq. 4).
@@ -490,6 +676,77 @@ mod tests {
             assert!(payload_bits >= s.wire_bits(), "nnz {nnz}");
             assert!(payload_bits - s.wire_bits() < 8, "nnz {nnz}");
         }
+    }
+
+    #[test]
+    fn natural_value_coding_roundtrips_and_shrinks() {
+        // Power-of-two values: the Natural compressor's output shape.
+        let dense = CVec::Dense(vec![1.0, -2.0, 0.25, 0.0, 8.0]);
+        assert!(dense.natural_codable());
+        let mut raw = Vec::new();
+        dense.encode(&mut raw);
+        let mut nat = Vec::new();
+        dense.encode_with(WireValueCoding::Natural, &mut nat);
+        assert_eq!(nat.len(), dense.encoded_len_with(WireValueCoding::Natural));
+        assert!(nat.len() < raw.len(), "natural {} vs raw {}", nat.len(), raw.len());
+        let mut pos = 0;
+        assert_eq!(CVec::decode(&nat, &mut pos).unwrap(), dense);
+        assert_eq!(pos, nat.len());
+
+        let sparse = CVec::Sparse { dim: 1000, idx: vec![1, 10, 999], val: vec![0.5, -4.0, 64.0] };
+        assert!(sparse.natural_codable());
+        let mut nat = Vec::new();
+        sparse.encode_with(WireValueCoding::Natural, &mut nat);
+        assert_eq!(nat[0], 4, "sparse-natural tag");
+        assert_eq!(nat.len(), sparse.encoded_len_with(WireValueCoding::Natural));
+        assert!(nat.len() < sparse.encoded_len());
+        let mut pos = 0;
+        assert_eq!(CVec::decode(&nat, &mut pos).unwrap(), sparse);
+        assert_eq!(pos, nat.len());
+    }
+
+    #[test]
+    fn natural_coding_falls_back_to_raw_for_general_values() {
+        let c = CVec::Dense(vec![1.5, 3.7, -0.3]);
+        assert!(!c.natural_codable());
+        let mut nat = Vec::new();
+        c.encode_with(WireValueCoding::Natural, &mut nat);
+        let mut raw = Vec::new();
+        c.encode(&mut raw);
+        assert_eq!(nat, raw, "non-codable frames must fall back to the raw format");
+        assert_eq!(c.encoded_len_with(WireValueCoding::Natural), c.encoded_len());
+    }
+
+    #[test]
+    fn natural_sparse_crossover_goes_dense_natural() {
+        // dim 4: 4 sparse entries cross the cap → dense-natural frame.
+        let s = CVec::Sparse { dim: 4, idx: vec![0, 1, 2, 3], val: vec![1.0, 2.0, 4.0, 8.0] };
+        let mut nat = Vec::new();
+        s.encode_with(WireValueCoding::Natural, &mut nat);
+        assert_eq!(nat[0], 3, "dense-natural tag");
+        assert_eq!(nat.len(), s.encoded_len_with(WireValueCoding::Natural));
+        let mut pos = 0;
+        let back = CVec::decode(&nat, &mut pos).unwrap();
+        assert_eq!(back, CVec::Dense(vec![1.0, 2.0, 4.0, 8.0]));
+
+        // The switch point is coding-aware: between the natural (9-bit)
+        // and raw (32-bit) crossovers — dim 1000, ib 10: nnz ≥ 474 vs
+        // nnz ≥ 762 — natural coding goes dense while raw stays sparse.
+        let idx: Vec<u32> = (0..500).collect();
+        let val: Vec<f32> = (0..500).map(|i| if i % 2 == 0 { 2.0 } else { -0.5 }).collect();
+        let mid = CVec::Sparse { dim: 1000, idx, val };
+        assert!(past_cap_crossover(1000, 500, 9));
+        assert!(!past_cap_crossover(1000, 500, 32));
+        let mut nat = Vec::new();
+        mid.encode_with(WireValueCoding::Natural, &mut nat);
+        assert_eq!(nat[0], 3, "between the crossovers natural coding goes dense");
+        assert_eq!(nat.len(), mid.encoded_len_with(WireValueCoding::Natural));
+        let mut raw = Vec::new();
+        mid.encode(&mut raw);
+        assert_eq!(raw[0], 2, "raw coding stays sparse below its own crossover");
+        assert!(nat.len() < raw.len());
+        let mut pos = 0;
+        assert_eq!(CVec::decode(&nat, &mut pos).unwrap().to_dense(), mid.to_dense());
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct RoundRecord {
     pub skipped_frac: f64,
     /// `f(x^{t+1})` when this was an evaluation round.
     pub loss: Option<f64>,
+    /// Name of the mechanism a schedule switched to at the top of this
+    /// round (`None` when the mechanism did not change). Rounds with a
+    /// switch are always recorded, even on thinned traces.
+    pub mech_switch: Option<String>,
 }
 
 #[derive(Debug)]
@@ -44,6 +48,11 @@ pub struct TrainResult {
     /// encodes messages ([`Framed`](super::Framed)); 0 for transports
     /// that move structured updates in memory.
     pub wire_bytes_up: u64,
+    /// Bytes actually serialized on the downlink — the
+    /// [`MechSwitch`](super::MechSwitch) schedule directives a
+    /// serializing transport pushed through the codec. 0 for in-memory
+    /// transports and for runs whose schedule never switched.
+    pub wire_bytes_down: u64,
     pub elapsed: std::time::Duration,
 }
 
@@ -94,6 +103,14 @@ impl TrainResult {
             .collect()
     }
 
+    /// `(round, mechanism)` for every recorded schedule switch.
+    pub fn mech_switches(&self) -> Vec<(usize, String)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.mech_switch.clone().map(|m| (r.t, m)))
+            .collect()
+    }
+
     /// Overall skip rate (lazy aggregation savings).
     pub fn mean_skip_rate(&self) -> f64 {
         if self.records.is_empty() {
@@ -117,6 +134,7 @@ mod tests {
             bits_down_cum: 64.0 * (t + 1) as f64,
             skipped_frac: 0.5,
             loss: if t % 2 == 0 { Some(gns * 2.0) } else { None },
+            mech_switch: if t == 1 { Some("EF21(Top-2)".into()) } else { None },
         }
     }
 
@@ -130,6 +148,7 @@ mod tests {
             total_bits_up: 0,
             total_bits_down: 0,
             wire_bytes_up: 0,
+            wire_bytes_down: 0,
             elapsed: std::time::Duration::ZERO,
             records,
         }
@@ -149,5 +168,6 @@ mod tests {
         assert_eq!(r.loss_series(), vec![(0.0, 8.0), (2.0, 2.0)]);
         assert_eq!(r.bits_gradnorm_series().len(), 3);
         assert!((r.mean_skip_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(r.mech_switches(), vec![(1, "EF21(Top-2)".to_string())]);
     }
 }

@@ -52,24 +52,90 @@ pub mod worker;
 pub use metrics::{RoundRecord, TrainResult};
 pub use observer::{
     BitsBudgetStop, Checkpoint, CheckpointObserver, DivergenceGuard, GradTolStop, RoundCtx,
-    RoundFlow, RoundObserver, RoundSnapshot, StopReason, StreamObserver, TimeLimitStop,
+    RoundFlow, RoundObserver, RoundSnapshot, ScheduleObserver, StopReason, StreamObserver,
+    SwitchLog, TimeLimitStop,
 };
 #[allow(deprecated)]
 pub use orchestrator::train;
-pub use protocol::{decode_uplink, encode_uplink, DownlinkStat, UplinkMsg, WireMsg, WireUpdate};
+pub use protocol::{
+    decode_mech_switch, decode_uplink, encode_mech_switch, encode_uplink, encode_uplink_with,
+    DownlinkStat, MechSwitch, UplinkMsg, WireMsg, WireUpdate,
+};
 pub use server::Server;
 pub use session::{SessionBuilder, TrainConfig, TrainSession};
 pub use transport::{Framed, InProcess, RoundAggregate, Transport, TransportLink};
 pub use worker::WorkerState;
 
+/// A checkpointed optimizer state reorganised for session construction:
+/// `worker_g[id]` is worker `id`'s `g_i`, `g_sum` the leader's f64
+/// aggregate fold state (`n·g^t`). Built from a
+/// [`Checkpoint`] via [`ResumeState::from_checkpoint`] and installed
+/// through [`InitPolicy::FromState`] /
+/// [`SessionBuilder::resume_from`](session::SessionBuilder::resume_from).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeState {
+    /// The round the checkpoint was written at (the resumed session
+    /// starts at `t + 1`).
+    pub t: usize,
+    /// `‖∇f(x^{t+1})‖²` at the checkpoint — seeds the resumed result's
+    /// final gradient norm so a resume with no round headroom reports
+    /// the checkpointed value instead of NaN.
+    pub grad_norm_sq: f64,
+    /// The checkpointed iterate `x^{t+1}`.
+    pub x: Vec<f32>,
+    /// The leader's aggregate fold state `n·g^{t+1}` (f64, exact).
+    pub g_sum: Vec<f64>,
+    /// Per-worker `g_i^{t+1}`, indexed by worker id.
+    pub worker_g: Vec<Vec<f32>>,
+}
+
+impl ResumeState {
+    /// Validate and reindex a [`Checkpoint`]: every worker id `0..n`
+    /// must appear exactly once with the checkpoint's dimension.
+    pub fn from_checkpoint(cp: &Checkpoint) -> anyhow::Result<ResumeState> {
+        let n = cp.worker_g.len();
+        let d = cp.x.len();
+        anyhow::ensure!(
+            cp.g_sum.len() == d,
+            "checkpoint g_sum dim {} != x dim {d}",
+            cp.g_sum.len()
+        );
+        let mut slots: Vec<Option<Vec<f32>>> = vec![None; n];
+        for (id, g) in &cp.worker_g {
+            anyhow::ensure!(*id < n, "checkpoint worker id {id} out of range (n = {n})");
+            anyhow::ensure!(
+                g.len() == d,
+                "checkpoint worker {id} has dim {} (expected {d})",
+                g.len()
+            );
+            anyhow::ensure!(slots[*id].is_none(), "checkpoint repeats worker id {id}");
+            slots[*id] = Some(g.clone());
+        }
+        let worker_g = slots
+            .into_iter()
+            .map(|s| s.expect("n entries, unique in-range ids → every slot filled"))
+            .collect();
+        Ok(ResumeState {
+            t: cp.t,
+            grad_norm_sq: cp.grad_norm_sq,
+            x: cp.x.clone(),
+            g_sum: cp.g_sum.clone(),
+            worker_g,
+        })
+    }
+}
+
 /// Initialisation policy for `g_i^0` (§4.2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum InitPolicy {
     /// `g_i^0 = ∇f_i(x^0)` — full first-round synchronisation (the
     /// paper's default for LAG/CLAG; costs 32·d uplink bits per worker).
     FullGradient,
     /// `g_i^0 = 0` — free, but starts with large `G^0`.
     Zero,
+    /// `g_i^0` restored from a checkpointed state — leader and workers
+    /// load the same file, so it costs 0 uplink bits.
+    FromState(std::sync::Arc<ResumeState>),
 }
 
 impl std::str::FromStr for InitPolicy {

@@ -42,6 +42,11 @@ pub struct RoundSnapshot<'a> {
     pub loss: Option<f64>,
     /// The post-step iterate `x^{t+1}`.
     pub x: &'a [f32],
+    /// The leader's f64 aggregate fold state `n·g^{t+1}` (exact; what
+    /// checkpoints persist so resumed runs fold from identical state).
+    pub g_sum: &'a [f64],
+    /// Name of the mechanism active this round (the schedule's pick).
+    pub mech: &'a str,
     /// Wall-clock time since the session started.
     pub elapsed: Duration,
     pub max_rounds: usize,
@@ -176,30 +181,42 @@ impl<F: FnMut(&RoundSnapshot<'_>)> RoundObserver for StreamObserver<F> {
     }
 }
 
-/// A persisted `(x, g_i)` optimizer state.
+/// A persisted optimizer state: the iterate, the leader's exact f64
+/// aggregate, and every worker's `g_i` — the entire Algorithm-1 state,
+/// so a resumed session ([`SessionBuilder::resume_from`](super::SessionBuilder::resume_from))
+/// continues the original trajectory exactly (up to worker-private
+/// randomness, which draw-free mechanisms never consume).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub t: usize,
     pub grad_norm_sq: f64,
     pub x: Vec<f32>,
+    /// The leader's f64 aggregate fold state `n·g^{t+1}`.
+    pub g_sum: Vec<f64>,
     pub worker_g: Vec<(usize, Vec<f32>)>,
 }
 
 const CHECKPOINT_MAGIC: &[u8; 4] = b"3PCK";
 
 impl Checkpoint {
-    /// Serialize to the flat binary checkpoint format.
+    /// Serialize to the flat binary checkpoint format (version 2; the
+    /// pre-schedule version 1 lacked `g_sum` and is no longer read).
     pub fn to_bytes(&self) -> Vec<u8> {
         let d = self.x.len();
-        let mut out =
-            Vec::with_capacity(4 + 4 + 8 + 4 + 4 + 8 + 4 * d + self.worker_g.len() * (4 + 4 * d));
+        let mut out = Vec::with_capacity(
+            4 + 4 + 8 + 4 + 4 + 8 + 4 * d + 8 * d + self.worker_g.len() * (4 + 4 * d),
+        );
         out.extend_from_slice(CHECKPOINT_MAGIC);
-        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
         out.extend_from_slice(&(self.t as u64).to_le_bytes());
         out.extend_from_slice(&(d as u32).to_le_bytes());
         out.extend_from_slice(&(self.worker_g.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.grad_norm_sq.to_le_bytes());
         for v in &self.x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        debug_assert_eq!(self.g_sum.len(), d);
+        for v in &self.g_sum {
             out.extend_from_slice(&v.to_le_bytes());
         }
         for (id, g) in &self.worker_g {
@@ -217,7 +234,7 @@ impl Checkpoint {
         ensure!(buf.len() >= 4 && buf[..4] == CHECKPOINT_MAGIC[..], "not a 3PC checkpoint");
         let mut pos = 4usize;
         let version = read_u32(buf, &mut pos)?;
-        ensure!(version == 1, "unsupported checkpoint version {version}");
+        ensure!(version == 2, "unsupported checkpoint version {version}");
         ensure!(buf.len() >= pos + 8, "truncated checkpoint header");
         let t = u64::from_le_bytes(buf[pos..pos + 8].try_into().expect("8-byte slice")) as usize;
         pos += 8;
@@ -226,14 +243,20 @@ impl Checkpoint {
         let grad_norm_sq = read_f64(buf, &mut pos)?;
         // d and n are file-controlled: bound-check the whole body before
         // allocating so a corrupt file fails with Err, not an OOM abort
-        // (u128 arithmetic — 4·d·n can overflow usize on hostile input).
+        // (u128 arithmetic — the products can overflow usize on hostile
+        // input).
         ensure!(
-            (buf.len() - pos) as u128 >= 4 * d as u128 + n as u128 * (4 + 4 * d as u128),
+            (buf.len() - pos) as u128
+                >= 4 * d as u128 + 8 * d as u128 + n as u128 * (4 + 4 * d as u128),
             "truncated checkpoint body (d {d}, n {n})"
         );
         let mut x = Vec::with_capacity(d);
         for _ in 0..d {
             x.push(read_f32(buf, &mut pos)?);
+        }
+        let mut g_sum = Vec::with_capacity(d);
+        for _ in 0..d {
+            g_sum.push(read_f64(buf, &mut pos)?);
         }
         let mut worker_g = Vec::with_capacity(n);
         for _ in 0..n {
@@ -245,7 +268,7 @@ impl Checkpoint {
             worker_g.push((id, g));
         }
         ensure!(pos == buf.len(), "checkpoint has {} trailing bytes", buf.len() - pos);
-        Ok(Checkpoint { t, grad_norm_sq, x, worker_g })
+        Ok(Checkpoint { t, grad_norm_sq, x, g_sum, worker_g })
     }
 
     /// Read a checkpoint file written by [`CheckpointObserver`].
@@ -299,6 +322,7 @@ impl RoundObserver for CheckpointObserver {
                 t: ctx.snap.t,
                 grad_norm_sq: ctx.snap.grad_norm_sq,
                 x: ctx.snap.x.to_vec(),
+                g_sum: ctx.snap.g_sum.to_vec(),
                 worker_g: ctx.worker_states(),
             };
             self.write(&cp);
@@ -313,6 +337,53 @@ impl RoundObserver for CheckpointObserver {
     }
 }
 
+/// Shared, post-run-readable log of schedule switches: `(round, name)`
+/// pairs, the first entry being the initial mechanism.
+pub type SwitchLog = std::sync::Arc<std::sync::Mutex<Vec<(usize, String)>>>;
+
+/// Logs mechanism switches as they happen: records `(t, name)` whenever
+/// the active mechanism differs from the previous round's (including
+/// the initial mechanism at the first observed round). The log handle
+/// ([`ScheduleObserver::log`]) outlives the session, so callers can
+/// read the switch history after [`TrainSession::run`](super::TrainSession::run);
+/// switches are also recorded in the trace itself
+/// ([`RoundRecord::mech_switch`](super::RoundRecord)).
+pub struct ScheduleObserver {
+    last: Option<String>,
+    log: SwitchLog,
+}
+
+impl ScheduleObserver {
+    pub fn new() -> ScheduleObserver {
+        ScheduleObserver { last: None, log: SwitchLog::default() }
+    }
+
+    /// A shared handle to the switch log.
+    pub fn log(&self) -> SwitchLog {
+        std::sync::Arc::clone(&self.log)
+    }
+}
+
+impl Default for ScheduleObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoundObserver for ScheduleObserver {
+    fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
+        let mech = ctx.snap.mech;
+        if self.last.as_deref() != Some(mech) {
+            self.last = Some(mech.to_string());
+            self.log
+                .lock()
+                .expect("schedule switch log poisoned")
+                .push((ctx.snap.t, mech.to_string()));
+        }
+        RoundFlow::Continue
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +394,7 @@ mod tests {
             t: 42,
             grad_norm_sq: 0.125,
             x: vec![1.0, -2.0, 3.5],
+            g_sum: vec![-1.0, 0.5, 3.0],
             worker_g: vec![(0, vec![0.0, 0.5, 1.0]), (1, vec![-1.0, 0.0, 2.0])],
         };
         let bytes = cp.to_bytes();
@@ -330,5 +402,32 @@ mod tests {
         assert_eq!(back, cp);
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 2]).is_err());
         assert!(Checkpoint::from_bytes(b"nope").is_err());
+    }
+
+    #[test]
+    fn resume_state_reindexes_and_validates() {
+        use crate::coordinator::ResumeState;
+        let cp = Checkpoint {
+            t: 9,
+            grad_norm_sq: 1.0,
+            x: vec![0.0, 1.0],
+            g_sum: vec![3.0, 4.0],
+            worker_g: vec![(1, vec![2.0, 2.5]), (0, vec![1.0, 1.5])],
+        };
+        let rs = ResumeState::from_checkpoint(&cp).unwrap();
+        assert_eq!(rs.t, 9);
+        assert_eq!(rs.grad_norm_sq, 1.0);
+        assert_eq!(rs.worker_g, vec![vec![1.0, 1.5], vec![2.0, 2.5]]);
+        assert_eq!(rs.g_sum, vec![3.0, 4.0]);
+
+        let mut dup = cp.clone();
+        dup.worker_g[1].0 = 1;
+        assert!(ResumeState::from_checkpoint(&dup).is_err());
+        let mut oob = cp.clone();
+        oob.worker_g[0].0 = 5;
+        assert!(ResumeState::from_checkpoint(&oob).is_err());
+        let mut bad_dim = cp;
+        bad_dim.g_sum.pop();
+        assert!(ResumeState::from_checkpoint(&bad_dim).is_err());
     }
 }

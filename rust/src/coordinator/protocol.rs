@@ -22,7 +22,7 @@
 //!   tag 4 (Replace/FromPrev) body = nparts:u8  cvec*
 //! ```
 
-use crate::compressors::CVec;
+use crate::compressors::{CVec, WireValueCoding};
 use crate::mechanisms::{update_bits, ReplaceWire, Update};
 use anyhow::{bail, ensure, Result};
 
@@ -67,6 +67,16 @@ pub const MSG_HEADER_BYTES: usize = 13;
 
 /// Serialize an uplink message into the framed wire format.
 pub fn encode_uplink(msg: &UplinkMsg) -> Vec<u8> {
+    encode_uplink_with(msg, WireValueCoding::RawF32)
+}
+
+/// [`encode_uplink`] with an explicit payload value coding. Natural
+/// coding applies to the compressed payloads ([`CVec`] bodies); dense
+/// `Replace` state syncs stay raw f32 — they carry exact state by
+/// contract. Either way the decoded frame reproduces the sender's
+/// update exactly (the natural encoder falls back to raw per frame when
+/// a value is not a signed power of two).
+pub fn encode_uplink_with(msg: &UplinkMsg, coding: WireValueCoding) -> Vec<u8> {
     let mut out = Vec::with_capacity(MSG_HEADER_BYTES + 16);
     out.extend_from_slice(&(msg.worker_id as u32).to_le_bytes());
     out.extend_from_slice(&msg.g_err.to_le_bytes());
@@ -74,7 +84,7 @@ pub fn encode_uplink(msg: &UplinkMsg) -> Vec<u8> {
         Update::Keep => out.push(0),
         Update::Increment { inc, .. } => {
             out.push(1);
-            inc.encode(&mut out);
+            inc.encode_with(coding, &mut out);
         }
         Update::Replace { g, wire, .. } => match wire {
             ReplaceWire::Dense => {
@@ -86,22 +96,22 @@ pub fn encode_uplink(msg: &UplinkMsg) -> Vec<u8> {
             }
             ReplaceWire::Fresh(parts) => {
                 out.push(3);
-                encode_parts(parts, &mut out);
+                encode_parts(parts, coding, &mut out);
             }
             ReplaceWire::FromPrev(parts) => {
                 out.push(4);
-                encode_parts(parts, &mut out);
+                encode_parts(parts, coding, &mut out);
             }
         },
     }
     out
 }
 
-fn encode_parts(parts: &[CVec], out: &mut Vec<u8>) {
+fn encode_parts(parts: &[CVec], coding: WireValueCoding, out: &mut Vec<u8>) {
     assert!(parts.len() <= u8::MAX as usize, "replace decomposition too wide");
     out.push(parts.len() as u8);
     for p in parts {
-        p.encode(out);
+        p.encode_with(coding, out);
     }
 }
 
@@ -128,6 +138,21 @@ pub struct WireMsg {
 impl WireUpdate {
     pub fn skipped(&self) -> bool {
         matches!(self, WireUpdate::Keep)
+    }
+
+    /// The dimension this update carries, when it carries one (`Keep`
+    /// frames carry none). Receivers should check it against the
+    /// session dimension before folding — `new_state`/`fold_delta`
+    /// assume matching lengths.
+    pub fn dim(&self) -> Option<usize> {
+        match self {
+            WireUpdate::Keep => None,
+            WireUpdate::Increment(c) => Some(c.dim()),
+            WireUpdate::ReplaceDense(g) => Some(g.len()),
+            WireUpdate::ReplaceFresh(parts) | WireUpdate::ReplaceFromPrev(parts) => {
+                parts.first().map(|p| p.dim())
+            }
+        }
     }
 
     /// The worker state `g_i^{t+1}` this message encodes, given the
@@ -263,14 +288,70 @@ fn cvec_overhead_bytes(c: &CVec) -> usize {
     match c {
         CVec::Zero { .. } | CVec::Dense(_) => 5,
         CVec::Sparse { dim, idx, .. } => {
-            let per = 32 + crate::compressors::index_bits(*dim);
-            if idx.len() as u64 * per >= 32 * *dim as u64 {
+            if crate::compressors::past_cap_crossover(*dim, idx.len(), 32) {
                 5 // encoded dense past the cap crossover
             } else {
                 9
             }
         }
     }
+}
+
+/// A downlink mechanism-switch directive: the schedule's per-round
+/// decision, as it crosses the wire. The leader broadcasts one of these
+/// whenever the active [`MechanismSchedule`](crate::mechanisms::schedule::MechanismSchedule)
+/// changes its answer; workers install the named mechanism before
+/// producing their round-`round` update. The
+/// [`Framed`](crate::coordinator::Framed) transport serializes/decodes
+/// the frame for real and bills its measured bytes into the downlink
+/// accounting (`bits_down_cum`); the in-process transport bills the
+/// same declared cost without serializing.
+///
+/// ```text
+/// mech-switch frame := tag:u8(0xA5)  round:u64  len:u16  name:[u8; len] (utf-8)
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MechSwitch {
+    /// First round the new mechanism is active.
+    pub round: u64,
+    /// Display name of the mechanism being switched to.
+    pub mech: String,
+}
+
+/// Frame tag of a [`MechSwitch`] directive.
+pub const MECH_SWITCH_TAG: u8 = 0xa5;
+
+/// Fixed framing of a [`MechSwitch`]: `tag:u8 + round:u64 + len:u16`.
+pub const MECH_SWITCH_HEADER_BYTES: usize = 11;
+
+/// Serialize a mechanism-switch directive.
+pub fn encode_mech_switch(m: &MechSwitch) -> Vec<u8> {
+    assert!(m.mech.len() <= u16::MAX as usize, "mechanism name too long for the wire");
+    let mut out = Vec::with_capacity(MECH_SWITCH_HEADER_BYTES + m.mech.len());
+    out.push(MECH_SWITCH_TAG);
+    out.extend_from_slice(&m.round.to_le_bytes());
+    out.extend_from_slice(&(m.mech.len() as u16).to_le_bytes());
+    out.extend_from_slice(m.mech.as_bytes());
+    out
+}
+
+/// Decode one mechanism-switch frame (exact inverse of
+/// [`encode_mech_switch`]; rejects trailing bytes).
+pub fn decode_mech_switch(buf: &[u8]) -> Result<MechSwitch> {
+    ensure!(buf.len() >= MECH_SWITCH_HEADER_BYTES, "mech-switch: truncated header");
+    ensure!(buf[0] == MECH_SWITCH_TAG, "mech-switch: bad tag {:#04x}", buf[0]);
+    let round = u64::from_le_bytes(buf[1..9].try_into().expect("8-byte slice"));
+    let len = u16::from_le_bytes(buf[9..11].try_into().expect("2-byte slice")) as usize;
+    ensure!(
+        buf.len() == MECH_SWITCH_HEADER_BYTES + len,
+        "mech-switch: frame length mismatch ({} vs {})",
+        buf.len(),
+        MECH_SWITCH_HEADER_BYTES + len
+    );
+    let mech = std::str::from_utf8(&buf[MECH_SWITCH_HEADER_BYTES..])
+        .map_err(|e| anyhow::anyhow!("mech-switch: non-utf8 name: {e}"))?
+        .to_string();
+    Ok(MechSwitch { round, mech })
 }
 
 /// Number of wire messages a decomposition contains (the padding bound
@@ -419,5 +500,39 @@ mod tests {
         let mut bytes = encode_uplink(&msg);
         bytes.push(0); // trailing byte
         assert!(decode_uplink(&bytes).is_err());
+    }
+
+    #[test]
+    fn mech_switch_frame_roundtrips() {
+        let m = MechSwitch { round: 500, mech: "EF21(Top-4)".into() };
+        let bytes = encode_mech_switch(&m);
+        assert_eq!(bytes.len(), MECH_SWITCH_HEADER_BYTES + m.mech.len());
+        assert_eq!(bytes[0], MECH_SWITCH_TAG);
+        assert_eq!(decode_mech_switch(&bytes).unwrap(), m);
+
+        assert!(decode_mech_switch(&[]).is_err());
+        let mut bad = encode_mech_switch(&m);
+        bad[0] = 0x00;
+        assert!(decode_mech_switch(&bad).is_err());
+        let mut long = encode_mech_switch(&m);
+        long.push(0);
+        assert!(decode_mech_switch(&long).is_err());
+    }
+
+    #[test]
+    fn natural_uplink_shrinks_power_of_two_increments() {
+        use crate::compressors::WireValueCoding;
+        let inc = CVec::Sparse { dim: 1000, idx: vec![3, 500, 999], val: vec![0.5, -2.0, 16.0] };
+        let bits = inc.wire_bits();
+        let msg =
+            UplinkMsg { worker_id: 2, update: Update::Increment { inc, bits }, g_err: 0.5 };
+        let raw = encode_uplink(&msg);
+        let nat = encode_uplink_with(&msg, WireValueCoding::Natural);
+        assert!(nat.len() < raw.len(), "natural {} vs raw {}", nat.len(), raw.len());
+        // Both decode to the same update.
+        let h = vec![0.0f32; 1000];
+        let a = decode_uplink(&raw).unwrap();
+        let b = decode_uplink(&nat).unwrap();
+        assert_eq!(a.update.new_state(&h), b.update.new_state(&h));
     }
 }

@@ -40,8 +40,25 @@ impl Server {
         }
     }
 
+    /// Rebuild a leader from a checkpointed state: the iterate and the
+    /// exact f64 aggregate fold state `n·g^t` (so a resumed run folds
+    /// from bit-identical leader state). Bit accountants restart at
+    /// zero — resumed sessions restart the accounting clock.
+    pub fn from_state(x: Vec<f32>, g_sum: Vec<f64>, n: usize) -> Server {
+        let d = x.len();
+        debug_assert_eq!(g_sum.len(), d);
+        Server { x, g_sum, n, bits_up: vec![0; n], bits_down: 0, g_buf: vec![0.0f32; d] }
+    }
+
     pub fn n_workers(&self) -> usize {
         self.n
+    }
+
+    /// The f64 aggregate fold state `n·g^t` — exposed so checkpoints can
+    /// persist the leader's exact state (see
+    /// [`Checkpoint`](super::Checkpoint)).
+    pub fn g_sum(&self) -> &[f64] {
+        &self.g_sum
     }
 
     /// `g^t` as f32 (what the update rule consumes).

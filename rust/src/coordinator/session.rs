@@ -7,10 +7,15 @@
 //! # let suite = threepc::problems::quadratic::generate(4, 30, 1e-2, 0.5, 1);
 //! let _result = TrainSession::builder(&suite.problem)
 //!     .mechanism(parse_mechanism("clag:top4:2.0").unwrap())
-//!     .transport(Framed)
+//!     .transport(Framed::default())
 //!     .config(TrainConfig { gamma: 0.05, max_rounds: 100, ..TrainConfig::default() })
 //!     .run();
 //! ```
+//!
+//! The mechanism axis is a per-round decision: swap `.mechanism(..)`
+//! for `.schedule_spec("ef21:top32@0..500,ef21:top4@500..")` (or an
+//! `adaptive:` spec) and the session broadcasts a `MechSwitch`
+//! directive whenever the schedule's answer changes.
 //!
 //! The session owns the Algorithm-1 loop: build workers, initialise the
 //! leader ([`Server`]), then per round step the iterate, drive the
@@ -24,13 +29,15 @@
 
 use super::metrics::{RoundRecord, TrainResult};
 use super::observer::{
-    BitsBudgetStop, DivergenceGuard, GradTolStop, RoundCtx, RoundFlow, RoundObserver,
+    BitsBudgetStop, Checkpoint, DivergenceGuard, GradTolStop, RoundCtx, RoundFlow, RoundObserver,
     RoundSnapshot, StopReason, TimeLimitStop,
 };
+use super::protocol::{encode_mech_switch, MechSwitch};
 use super::server::Server;
 use super::transport::{InProcess, Transport};
 use super::worker::WorkerState;
-use super::InitPolicy;
+use super::{InitPolicy, ResumeState};
+use crate::mechanisms::schedule::{MechanismSchedule, RoundTelemetry, Static};
 use crate::mechanisms::ThreePointMap;
 use crate::problems::Distributed;
 use std::sync::Arc;
@@ -92,16 +99,19 @@ pub(crate) fn mix_seed(seed: u64, t: u64) -> u64 {
 /// Builder for a [`TrainSession`]. Obtain via [`TrainSession::builder`].
 pub struct SessionBuilder<'a> {
     problem: &'a Distributed,
-    map: Option<Arc<dyn ThreePointMap>>,
+    schedule: Option<Box<dyn MechanismSchedule>>,
+    resume: Option<Arc<ResumeState>>,
     cfg: TrainConfig,
     transport: Box<dyn Transport>,
     observers: Vec<Box<dyn RoundObserver + 'a>>,
 }
 
 impl<'a> SessionBuilder<'a> {
-    /// The 3PC mechanism driving every worker (required).
+    /// One fixed 3PC mechanism for the whole run — shorthand for
+    /// `.schedule(Static::new(map))`. A mechanism or schedule is
+    /// required.
     pub fn mechanism(mut self, map: Arc<dyn ThreePointMap>) -> Self {
-        self.map = Some(map);
+        self.schedule = Some(Box::new(Static::new(map)));
         self
     }
 
@@ -109,6 +119,56 @@ impl<'a> SessionBuilder<'a> {
     pub fn mechanism_spec(self, spec: &str) -> anyhow::Result<Self> {
         let map = crate::mechanisms::parse_mechanism(spec)?;
         Ok(self.mechanism(map))
+    }
+
+    /// An evolving mechanism schedule: the active 3PC map becomes a
+    /// per-round decision (see
+    /// [`MechanismSchedule`]). Switches are broadcast through the
+    /// transport as [`MechSwitch`] directives and billed downlink.
+    pub fn schedule<S: MechanismSchedule + 'static>(self, s: S) -> Self {
+        self.schedule_boxed(Box::new(s))
+    }
+
+    /// [`Self::schedule`] for an already-boxed schedule (what
+    /// [`parse_schedule`](crate::mechanisms::schedule::parse_schedule)
+    /// returns).
+    pub fn schedule_boxed(mut self, s: Box<dyn MechanismSchedule>) -> Self {
+        self.schedule = Some(s);
+        self
+    }
+
+    /// Parse-and-set convenience for [`Self::schedule`] (the
+    /// `--schedule` CLI grammar: a mechanism spec, a piecewise table
+    /// `spec@0..500,spec@500..`, or `adaptive[@window]:spec|spec|…`).
+    pub fn schedule_spec(self, spec: &str) -> anyhow::Result<Self> {
+        let s = crate::mechanisms::schedule::parse_schedule(spec)?;
+        Ok(self.schedule_boxed(s))
+    }
+
+    /// Resume from a [`Checkpoint`]: the session starts at round
+    /// `checkpoint.t + 1` with the checkpointed iterate, the leader's
+    /// exact f64 aggregate, and every worker's `g_i` (installed via
+    /// [`InitPolicy::FromState`], overriding `cfg.init`); bit
+    /// accountants restart at zero. Round seeds stay keyed to absolute
+    /// round numbers, so mechanisms that consume no worker-private
+    /// randomness (Top-K families, LAG/CLAG, GD) reproduce the original
+    /// trace round-for-round.
+    pub fn resume_from(mut self, cp: &Checkpoint) -> anyhow::Result<Self> {
+        let rs = ResumeState::from_checkpoint(cp)?;
+        anyhow::ensure!(
+            rs.x.len() == self.problem.dim(),
+            "checkpoint dim {} != problem dim {}",
+            rs.x.len(),
+            self.problem.dim()
+        );
+        anyhow::ensure!(
+            rs.worker_g.len() == self.problem.n_workers(),
+            "checkpoint has {} workers, problem has {}",
+            rs.worker_g.len(),
+            self.problem.n_workers()
+        );
+        self.resume = Some(Arc::new(rs));
+        Ok(self)
     }
 
     pub fn config(mut self, cfg: TrainConfig) -> Self {
@@ -141,7 +201,10 @@ impl<'a> SessionBuilder<'a> {
     pub fn build(self) -> TrainSession<'a> {
         TrainSession {
             problem: self.problem,
-            map: self.map.expect("TrainSession requires a mechanism (builder.mechanism(..))"),
+            schedule: self.schedule.expect(
+                "TrainSession requires a mechanism (builder.mechanism(..) or .schedule(..))",
+            ),
+            resume: self.resume,
             cfg: self.cfg,
             transport: self.transport,
             observers: self.observers,
@@ -153,7 +216,8 @@ impl<'a> SessionBuilder<'a> {
 /// Algorithm 1 to completion.
 pub struct TrainSession<'a> {
     problem: &'a Distributed,
-    map: Arc<dyn ThreePointMap>,
+    schedule: Box<dyn MechanismSchedule>,
+    resume: Option<Arc<ResumeState>>,
     cfg: TrainConfig,
     transport: Box<dyn Transport>,
     observers: Vec<Box<dyn RoundObserver + 'a>>,
@@ -163,19 +227,47 @@ impl<'a> TrainSession<'a> {
     pub fn builder(problem: &'a Distributed) -> SessionBuilder<'a> {
         SessionBuilder {
             problem,
-            map: None,
+            schedule: None,
+            resume: None,
             cfg: TrainConfig::default(),
             transport: Box::new(InProcess::default()),
             observers: Vec::new(),
         }
     }
 
+    /// Start a resumed-session builder from a persisted [`Checkpoint`]
+    /// (see [`SessionBuilder::resume_from`]): mechanism/schedule,
+    /// transport and observers are configured as usual, and the run
+    /// continues at round `checkpoint.t + 1`.
+    pub fn resume(
+        problem: &'a Distributed,
+        cp: &Checkpoint,
+    ) -> anyhow::Result<SessionBuilder<'a>> {
+        TrainSession::builder(problem).resume_from(cp)
+    }
+
     /// Run Algorithm 1 on the configured problem/mechanism/transport.
     pub fn run(mut self) -> TrainResult {
         let start = Instant::now();
-        let cfg = &self.cfg;
+        let cfg = self.cfg.clone();
         let n = self.problem.n_workers();
         let d = self.problem.dim();
+
+        // Resumed sessions restart from the checkpointed iterate and
+        // round number; fresh sessions from the problem's x⁰ at round 0.
+        let (x0, start_round) = match &self.resume {
+            Some(rs) => (rs.x.clone(), rs.t + 1),
+            None => (self.problem.x0.clone(), 0),
+        };
+        let init = match &self.resume {
+            Some(rs) => InitPolicy::FromState(Arc::clone(rs)),
+            None => cfg.init.clone(),
+        };
+
+        // The schedule's first pick is made at the starting round, so a
+        // resumed piecewise run lands in the right segment.
+        let mut telemetry = RoundTelemetry::initial();
+        let mut current_map = self.schedule.pick(start_round as u64, &telemetry);
 
         // Build workers (evaluates ∇f_i(x⁰) and applies the g⁰ policy).
         let workers: Vec<WorkerState> = (0..n)
@@ -184,19 +276,23 @@ impl<'a> TrainSession<'a> {
                     i,
                     n,
                     self.problem.locals[i].clone(),
-                    self.map.clone(),
-                    &self.problem.x0,
-                    cfg.init,
+                    current_map.clone(),
+                    &x0,
+                    init.clone(),
                     cfg.seed,
                 )
             })
             .collect();
-        let g0s: Vec<&[f32]> = workers.iter().map(|w| w.g()).collect();
-        let init_bits: Vec<u64> = workers.iter().map(|w| w.init_bits).collect();
-        let mut server = Server::new(self.problem.x0.clone(), &g0s, &init_bits);
-        drop(g0s);
+        let mut server = match &self.resume {
+            Some(rs) => Server::from_state(x0, rs.g_sum.clone(), n),
+            None => {
+                let g0s: Vec<&[f32]> = workers.iter().map(|w| w.g()).collect();
+                let init_bits: Vec<u64> = workers.iter().map(|w| w.init_bits).collect();
+                Server::new(x0, &g0s, &init_bits)
+            }
+        };
 
-        let mut link = self.transport.connect(workers, d, cfg);
+        let mut link = self.transport.connect(workers, d, &cfg);
 
         // The classic stop conditions, as observers, in the legacy
         // break-priority order.
@@ -215,11 +311,34 @@ impl<'a> TrainSession<'a> {
         let mut records: Vec<RoundRecord> = Vec::new();
         let mut converged = false;
         let mut diverged = false;
-        let mut final_grad_norm_sq = f64::NAN;
+        // Resumed sessions seed the final norm from the checkpoint, so a
+        // resume with no round headroom reports it instead of NaN.
+        let mut final_grad_norm_sq =
+            self.resume.as_ref().map_or(f64::NAN, |rs| rs.grad_norm_sq);
         let mut rounds_run = 0usize;
 
-        for t in 0..cfg.max_rounds {
-            rounds_run = t + 1;
+        for t in start_round..cfg.max_rounds {
+            rounds_run = t + 1 - start_round;
+
+            // Per-round schedule decision, made here on the coordinator
+            // and broadcast through the transport as a real downlink
+            // directive (billed into bits_down either way). The starting
+            // round's map was installed at worker construction.
+            let mut mech_switch: Option<String> = None;
+            if t > start_round {
+                let next = self.schedule.pick(t as u64, &telemetry);
+                if !Arc::ptr_eq(&next, &current_map) {
+                    let name = next.name();
+                    let frame =
+                        encode_mech_switch(&MechSwitch { round: t as u64, mech: name.clone() });
+                    let down_bits = link.switch_mechanism(next.clone(), &frame);
+                    server.bits_down += down_bits;
+                    mech_switch = Some(name);
+                    current_map = next;
+                }
+            }
+            let mech_name = current_map.name();
+
             // x^{t+1} = x^t − γ g^t; broadcast (bills downlink).
             server.step(cfg.gamma);
             let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
@@ -243,8 +362,20 @@ impl<'a> TrainSession<'a> {
                 skipped_frac: agg.skipped as f64 * inv_n,
                 loss: if eval_loss { Some(agg.loss_sum * inv_n) } else { None },
                 x: &server.x,
+                g_sum: server.g_sum(),
+                mech: &mech_name,
                 elapsed: start.elapsed(),
                 max_rounds: cfg.max_rounds,
+            };
+
+            // The schedule's next pick sees this round's observables.
+            telemetry = RoundTelemetry {
+                rounds_done: (t + 1) as u64,
+                grad_norm_sq,
+                g_err: snap.g_err,
+                bits_up_cum: snap.bits_up_cum,
+                bits_down_cum: snap.bits_down_cum,
+                skipped_frac: snap.skipped_frac,
             };
 
             // Every observer sees every round; the first Stop wins
@@ -265,7 +396,8 @@ impl<'a> TrainSession<'a> {
             }
 
             let last = t + 1 == cfg.max_rounds;
-            if t % cfg.record_every.max(1) == 0 || stop.is_some() || last {
+            if t % cfg.record_every.max(1) == 0 || stop.is_some() || last || mech_switch.is_some()
+            {
                 records.push(RoundRecord {
                     t,
                     grad_norm_sq,
@@ -275,6 +407,7 @@ impl<'a> TrainSession<'a> {
                     bits_down_cum: snap.bits_down_cum,
                     skipped_frac: snap.skipped_frac,
                     loss: snap.loss,
+                    mech_switch,
                 });
             }
             match stop {
@@ -301,6 +434,7 @@ impl<'a> TrainSession<'a> {
             total_bits_up: server.total_bits_up(),
             total_bits_down: server.bits_down,
             wire_bytes_up: link.measured_bytes_up(),
+            wire_bytes_down: link.measured_bytes_down(),
             elapsed: start.elapsed(),
         };
         for obs in self.observers.iter_mut() {
@@ -478,6 +612,7 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(cp.t, 10); // rounds 0, 5, 10 written; last wins
         assert_eq!(cp.x.len(), 40);
+        assert_eq!(cp.g_sum.len(), 40);
         assert_eq!(cp.worker_g.len(), 8);
         assert!(cp.worker_g.iter().all(|(_, g)| g.len() == 40));
         assert_eq!(r.rounds_run, 12);
@@ -494,7 +629,7 @@ mod tests {
         let b = TrainSession::builder(&suite.problem)
             .mechanism(parse_mechanism("clag:top4:2.0").unwrap())
             .config(c)
-            .transport(Framed)
+            .transport(Framed::default())
             .run();
         assert_eq!(a.rounds_run, b.rounds_run);
         assert!(b.wire_bytes_up > 0);

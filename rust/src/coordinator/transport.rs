@@ -21,9 +21,11 @@
 //!   encoded bytes. The codec tests pin measured bytes to the declared
 //!   accounting.
 
-use super::protocol::{decode_uplink, encode_uplink};
+use super::protocol::{decode_mech_switch, decode_uplink, encode_uplink_with};
 use super::session::TrainConfig;
 use super::worker::WorkerState;
+use crate::compressors::WireValueCoding;
+use crate::mechanisms::ThreePointMap;
 use crate::util::linalg;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -84,9 +86,25 @@ pub trait TransportLink {
     /// periodic, not per-round.
     fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)>;
 
+    /// Install `map` as every worker's mechanism before the next round,
+    /// carrying each worker's `(h, y)` state over
+    /// ([`WorkerState::swap_map`]). `frame` is the encoded downlink
+    /// [`MechSwitch`](super::protocol::MechSwitch) directive the
+    /// coordinator broadcasts; a serializing transport pushes it through
+    /// the codec for real, an in-memory one just bills it. Returns the
+    /// downlink bits billed per worker (`8 × frame.len()` either way, so
+    /// traces agree across transports).
+    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64;
+
     /// Cumulative uplink bytes actually serialized (0 when the
     /// transport moves structured updates in memory).
     fn measured_bytes_up(&self) -> u64 {
+        0
+    }
+
+    /// Cumulative downlink bytes actually serialized (the mechanism
+    /// switch directives; 0 for in-memory transports).
+    fn measured_bytes_down(&self) -> u64 {
         0
     }
 }
@@ -101,6 +119,10 @@ struct RoundTask {
 enum Cmd {
     Round(Arc<RoundTask>),
     Snapshot,
+    /// Install a new mechanism on every owned worker (no reply; the
+    /// per-thread command channel is FIFO, so the swap is applied
+    /// before any later `Round`).
+    Swap(Arc<dyn ThreePointMap>),
 }
 
 /// Per-thread fan-in report.
@@ -221,6 +243,12 @@ fn pool_thread(
                 slot,
                 gs: mine.iter().map(|w| (w.id, w.g().to_vec())).collect(),
             },
+            Cmd::Swap(map) => {
+                for w in mine.iter_mut() {
+                    w.swap_map(map.clone());
+                }
+                continue;
+            }
         };
         if reply.send(out).is_err() {
             break;
@@ -288,6 +316,13 @@ impl TransportLink for InProcessLink {
             .flat_map(|gs| gs.expect("missing thread snapshot"))
             .collect()
     }
+
+    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64 {
+        self.broadcast(|| Cmd::Swap(map.clone()));
+        // Declared billing: the directive's frame bytes (what the
+        // serializing transport measures for the same switch).
+        8 * frame.len() as u64
+    }
 }
 
 impl Drop for InProcessLink {
@@ -302,9 +337,31 @@ impl Drop for InProcessLink {
 /// The serializing transport: runs workers sequentially on the calling
 /// thread, pushes every uplink through the byte codec, decodes it as a
 /// real receiver would, and bills measured bytes (`8 × encoded_len`,
-/// framing included) instead of the declared `wire_bits`.
+/// framing included) instead of the declared `wire_bits`. Downlink
+/// schedule directives ([`MechSwitch`](super::protocol::MechSwitch)
+/// frames) take the same path: encoded by the coordinator, decoded
+/// here, billed by measured bytes.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct Framed;
+pub struct Framed {
+    /// How f32 payload values are coded on the uplink.
+    /// [`WireValueCoding::Natural`] shrinks frames whose values are
+    /// signed powers of two (mechanisms built on the
+    /// [`Natural`](crate::compressors::Natural) compressor) and falls
+    /// back to raw f32 per frame otherwise — traces are identical
+    /// either way, only measured bytes change.
+    pub value_coding: WireValueCoding,
+}
+
+impl Framed {
+    pub fn new() -> Framed {
+        Framed::default()
+    }
+
+    /// Natural value coding on the uplink (9-bit sign+exponent values).
+    pub fn natural() -> Framed {
+        Framed { value_coding: WireValueCoding::Natural }
+    }
+}
 
 impl Transport for Framed {
     fn name(&self) -> &'static str {
@@ -317,7 +374,13 @@ impl Transport for Framed {
         dim: usize,
         _cfg: &TrainConfig,
     ) -> Box<dyn TransportLink> {
-        Box::new(FramedLink { workers, dim, bytes_up: 0 })
+        Box::new(FramedLink {
+            workers,
+            dim,
+            bytes_up: 0,
+            bytes_down: 0,
+            coding: self.value_coding,
+        })
     }
 }
 
@@ -325,6 +388,8 @@ struct FramedLink {
     workers: Vec<WorkerState>,
     dim: usize,
     bytes_up: u64,
+    bytes_down: u64,
+    coding: WireValueCoding,
 }
 
 impl TransportLink for FramedLink {
@@ -339,11 +404,20 @@ impl TransportLink for FramedLink {
             if eval_loss {
                 agg.loss_sum += w.loss(x);
             }
-            let bytes = encode_uplink(&msg);
+            let bytes = encode_uplink_with(&msg, self.coding);
             self.bytes_up += bytes.len() as u64;
             let decoded =
                 decode_uplink(&bytes).expect("framed transport produced an undecodable frame");
             debug_assert_eq!(decoded.worker_id, w.id);
+            // Dimension check before folding: new_state/fold_delta
+            // truncate silently on short frames, so reject loudly here.
+            if let Some(frame_dim) = decoded.update.dim() {
+                assert_eq!(
+                    frame_dim, self.dim,
+                    "uplink frame dimension mismatch (worker {})",
+                    w.id
+                );
+            }
             // The receiver-side state must match the worker's own
             // advance bit-for-bit (up to non-finite blowups).
             #[cfg(debug_assertions)]
@@ -370,8 +444,27 @@ impl TransportLink for FramedLink {
         self.workers.iter().map(|w| (w.id, w.g().to_vec())).collect()
     }
 
+    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64 {
+        // A real receiver decodes the directive off the wire before
+        // acting on it; the map handle rides alongside (mechanism
+        // construction from the wire name is a registry concern, not a
+        // codec one).
+        let directive = decode_mech_switch(frame)
+            .expect("framed transport produced an undecodable MechSwitch frame");
+        debug_assert_eq!(directive.mech, map.name(), "switch directive names a different map");
+        self.bytes_down += frame.len() as u64;
+        for w in self.workers.iter_mut() {
+            w.swap_map(map.clone());
+        }
+        8 * frame.len() as u64
+    }
+
     fn measured_bytes_up(&self) -> u64 {
         self.bytes_up
+    }
+
+    fn measured_bytes_down(&self) -> u64 {
+        self.bytes_down
     }
 }
 
@@ -424,7 +517,7 @@ mod tests {
     fn framed_round_measures_bytes() {
         let (workers, d) = build_workers(4, 10);
         let cfg = TrainConfig::default();
-        let mut link = Framed.connect(workers, d, &cfg);
+        let mut link = Framed::default().connect(workers, d, &cfg);
         let x = vec![0.1f32; d];
         let agg = link.round(&x, 1, false);
         assert_eq!(agg.bits.len(), 4);
@@ -438,13 +531,47 @@ mod tests {
     }
 
     #[test]
+    fn switch_mechanism_installs_map_and_bills_frame_bits() {
+        use super::super::protocol::{encode_mech_switch, MechSwitch};
+        let d = 10;
+        let (w1, _) = build_workers(4, d);
+        let (w2, _) = build_workers(4, d);
+        let cfg = TrainConfig::default();
+        let mut a = InProcess::new(2).connect(w1, d, &cfg);
+        let mut b = Framed::default().connect(w2, d, &cfg);
+        let x = vec![0.05f32; d];
+        a.round(&x, 0, false);
+        b.round(&x, 0, false);
+        // Switch every worker to GD mid-run.
+        let gd = parse_mechanism("gd").unwrap();
+        let frame = encode_mech_switch(&MechSwitch { round: 1, mech: gd.name() });
+        let bits_a = a.switch_mechanism(gd.clone(), &frame);
+        let bits_b = b.switch_mechanism(gd, &frame);
+        assert_eq!(bits_a, 8 * frame.len() as u64);
+        assert_eq!(bits_a, bits_b, "declared billing must match measured");
+        assert_eq!(a.measured_bytes_down(), 0, "in-memory transport serializes nothing");
+        assert_eq!(b.measured_bytes_down(), frame.len() as u64);
+        // Post-switch rounds run GD (dense replace), so both transports
+        // fold identical deltas and no worker skips.
+        let ra = a.round(&x, 1, false);
+        let rb = b.round(&x, 1, false);
+        assert_eq!(ra.skipped, 0);
+        assert_eq!(rb.skipped, 0);
+        for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
+            assert!((da - db).abs() < 1e-9, "{da} vs {db}");
+        }
+        // GD replaces state with the exact gradient → g_err is 0.
+        assert_eq!(ra.g_err_sum, 0.0);
+    }
+
+    #[test]
     fn framed_and_inprocess_fold_the_same_delta() {
         let d = 10;
         let (w1, _) = build_workers(4, d);
         let (w2, _) = build_workers(4, d);
         let cfg = TrainConfig::default();
         let mut a = InProcess::new(1).connect(w1, d, &cfg);
-        let mut b = Framed.connect(w2, d, &cfg);
+        let mut b = Framed::default().connect(w2, d, &cfg);
         let x = vec![0.05f32; d];
         for t in 0..5u64 {
             let ra = a.round(&x, t, false);

@@ -41,6 +41,17 @@ impl WorkerState {
         let (g0, init_bits) = match init {
             InitPolicy::FullGradient => (grad0.clone(), 32 * d as u64),
             InitPolicy::Zero => (vec![0.0f32; d], 0),
+            InitPolicy::FromState(rs) => {
+                assert!(
+                    id < rs.worker_g.len(),
+                    "resume state has {} workers, worker {id} requested",
+                    rs.worker_g.len()
+                );
+                let g = rs.worker_g[id].clone();
+                assert_eq!(g.len(), d, "resume state dim mismatch for worker {id}");
+                // Leader and workers load the same checkpoint: 0 bits.
+                (g, 0)
+            }
         };
         let mech = MechWorker::new(map, g0, grad0);
         WorkerState { id, problem, mech, rng, info, grad_buf: vec![0.0f32; d], init_bits }
@@ -49,6 +60,13 @@ impl WorkerState {
     /// Current `g_i^t`.
     pub fn g(&self) -> &[f32] {
         self.mech.g()
+    }
+
+    /// Install a new mechanism for the following rounds (the schedule
+    /// axis); `(h, y)` carry over — see
+    /// [`MechWorker::swap_map`](crate::mechanisms::MechWorker::swap_map).
+    pub fn swap_map(&mut self, map: Arc<dyn ThreePointMap>) {
+        self.mech.swap_map(map);
     }
 
     /// Local loss at `x` (for evaluation rounds).
@@ -104,6 +122,20 @@ mod tests {
     fn zero_init_is_free() {
         let w = quad_worker(InitPolicy::Zero);
         assert_eq!(w.g(), &[0.0, 0.0, 0.0]);
+        assert_eq!(w.init_bits, 0);
+    }
+
+    #[test]
+    fn from_state_init_restores_g_for_free() {
+        let rs = std::sync::Arc::new(crate::coordinator::ResumeState {
+            t: 7,
+            grad_norm_sq: 0.5,
+            x: vec![1.0, 1.0, 1.0],
+            g_sum: vec![0.5, -0.5, 0.25],
+            worker_g: vec![vec![0.5f32, -0.5, 0.25]],
+        });
+        let w = quad_worker(InitPolicy::FromState(rs));
+        assert_eq!(w.g(), &[0.5, -0.5, 0.25]);
         assert_eq!(w.init_bits, 0);
     }
 

@@ -34,7 +34,7 @@ pub fn g0_policy(args: &Args) -> Result<()> {
                 gamma: base * 16.0,
                 max_rounds: args.num_or("rounds", 4000),
                 grad_tol: Some(tol),
-                init,
+                init: init.clone(),
                 seed: 3,
                 ..TrainConfig::default()
             };

@@ -111,6 +111,7 @@ pub fn tune_stepsize(
             total_bits_up: 0,
             total_bits_down: 0,
             wire_bytes_up: 0,
+            wire_bytes_down: 0,
             elapsed: std::time::Duration::ZERO,
         },
         score: None,

@@ -14,6 +14,7 @@ pub mod clag_heatmap;
 pub mod common;
 pub mod k1k2;
 pub mod quad_suite;
+pub mod schedule;
 pub mod tables;
 
 use crate::util::cli::Args;
@@ -42,6 +43,7 @@ pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
     ("fig15", "Fig 15 — 3PCv4 Top-Top vs EF21, K=0.02d", k1k2::fig15),
     ("fig16", "Fig 16 — 3PCv1 vs GD vs EF21 per round", quad_suite::fig16),
     ("fig21", "Figs 21–24 — CLAG/LAG/EF21 under bit budget (logreg)", budget::run),
+    ("schedule", "Evolving mechanism schedules — static vs piecewise vs adaptive", schedule::compare),
     ("ablation-g0", "Ablation — g0 init policy", ablation::g0_policy),
     ("ablation-wire", "Ablation — sparse/dense wire crossover", ablation::wire_format),
     ("ablation-stepsize", "Ablation — theoretical vs tuned stepsize", ablation::stepsize),

@@ -1,0 +1,72 @@
+//! Evolving mechanism schedules (the AdaCGD direction, ROADMAP item):
+//! static mechanisms vs a piecewise switch table vs the adaptive `G^t`
+//! ladder, on the synthetic quadratic suite.
+//!
+//! `threepc exp schedule [--workers N --d D --rounds T --tol EPS]`
+//!
+//! The table reports communication to tolerance and the switches each
+//! schedule actually made (from the [`ScheduleObserver`] log); CSV
+//! lands in `results/schedule/`.
+
+use super::common;
+use crate::coordinator::{ScheduleObserver, TrainConfig, TrainSession};
+use crate::mechanisms::schedule::{parse_schedule, RoundTelemetry};
+use crate::problems::quadratic;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+pub fn compare(args: &Args) -> Result<()> {
+    let n = args.num_or("workers", 10usize);
+    let d = args.num_or("d", 200usize);
+    let suite = quadratic::generate(n, d, 1e-3, 0.8, 9);
+    let rounds = args.num_or("rounds", 3000usize);
+    let tol = args.num_or("tol", 1e-3);
+
+    let specs = [
+        "ef21:top4",
+        "ef21:top32",
+        "ef21:top32@0..200,ef21:top4@200..",
+        "adaptive@25:ef21:top32|ef21:top8|ef21:top2",
+    ];
+    let mut t = Table::new(
+        "Evolving mechanism schedules — bits/worker to tolerance (quadratics)",
+        &["schedule", "bits to tol", "rounds", "final |grad f|^2", "switches"],
+    );
+    for spec in specs {
+        let mut sched = parse_schedule(spec)?;
+        let map0 = sched.pick(0, &RoundTelemetry::initial());
+        let base = common::base_gamma(&suite.problem, map0.as_ref());
+        let cfg = TrainConfig {
+            gamma: base * 16.0,
+            max_rounds: rounds,
+            grad_tol: Some(tol),
+            seed: 3,
+            ..TrainConfig::default()
+        };
+        let obs = ScheduleObserver::new();
+        let log = obs.log();
+        let r = TrainSession::builder(&suite.problem)
+            .schedule_boxed(sched)
+            .config(cfg)
+            .observer(obs)
+            .run();
+        let switches: Vec<String> = log
+            .lock()
+            .expect("schedule switch log poisoned")
+            .iter()
+            .skip(1) // the first entry is the initial mechanism
+            .map(|(t, m)| format!("{t}:{m}"))
+            .collect();
+        t.row(&[
+            spec.to_string(),
+            fnum(r.bits_to_grad_tol(tol).unwrap_or(f64::NAN)),
+            r.rounds_run.to_string(),
+            fnum(r.final_grad_norm_sq),
+            if switches.is_empty() { "-".to_string() } else { switches.join(" ") },
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(common::out_dir("schedule").join("schedule.csv"))?;
+    Ok(())
+}

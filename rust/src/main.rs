@@ -14,7 +14,7 @@ use std::sync::Arc;
 use threepc::coordinator::{Framed, InProcess, TrainConfig, TrainSession};
 use threepc::data;
 use threepc::experiments;
-use threepc::mechanisms::parse_mechanism;
+use threepc::mechanisms::schedule::{parse_schedule, RoundTelemetry};
 use threepc::problems::{Distributed, LocalProblem};
 use threepc::runtime::{DeviceService, Manifest};
 use threepc::util::cli::Args;
@@ -71,12 +71,18 @@ fn print_help() {
            --problem quad|logreg|ae   (default quad)\n\
            --mech <spec>              e.g. ef21:top16, clag:top16:4.0, lag:4.0,\n\
                                       v2:rand8:top8, v5:0.1:top8, marina:0.1:rand8, gd\n\
+           --schedule <spec>          evolving mechanism schedule (supersedes --mech):\n\
+                                      a mechanism spec (static), a switch table\n\
+                                      `ef21:top32@0..500,ef21:top4@500..`, or an\n\
+                                      adaptive ladder `adaptive@16:ef21:top32|ef21:top4`\n\
            --backend native|hlo       gradient execution path (default native)\n\
            --workers N --rounds T --gamma G | --gamma-mult M\n\
            --dataset phishing|w6a|a9a|ijcnn1 (logreg)\n\
            --d D --noise-scale S      (quad)\n\
            --tol EPS --loss-every K --seed S --threads P --init full|zero\n\
-           --transport inproc|framed  in-memory pool vs serializing codec path\n"
+           --transport inproc|framed|framed-natural\n\
+                                      in-memory pool vs serializing codec path\n\
+                                      (framed-natural: 9-bit natural value coding)\n"
     );
 }
 
@@ -99,8 +105,12 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // --schedule supersedes --mech; a bare mechanism spec is a static
+    // schedule, so both flags share one grammar.
     let mech_spec = args.str_or("mech", "ef21:top16");
-    let map = parse_mechanism(&mech_spec)?;
+    let schedule_spec = args.str_or("schedule", &mech_spec);
+    let mut schedule = parse_schedule(&schedule_spec)?;
+    let map = schedule.pick(0, &RoundTelemetry::initial());
     let backend = args.str_or("backend", "native");
     let n = args.num_or("workers", 10usize);
 
@@ -226,26 +236,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let transport = args.str_or("transport", "inproc");
     println!(
-        "threepc train: mech={mech_spec} backend={backend} transport={transport} n={} d={} gamma={} rounds={}",
+        "threepc train: schedule={schedule_spec} backend={backend} transport={transport} n={} d={} gamma={} rounds={}",
         problem.n_workers(),
         problem.dim(),
         fnum(cfg.gamma),
         cfg.max_rounds
     );
-    let builder = TrainSession::builder(&problem).mechanism(map).config(cfg.clone());
+    let builder = TrainSession::builder(&problem).schedule_boxed(schedule).config(cfg.clone());
     let r = match transport.as_str() {
         "inproc" | "inprocess" => builder.transport(InProcess::default()).run(),
-        "framed" => {
+        "framed" | "framed-natural" => {
             if cfg.threads > 1 {
                 eprintln!(
                     "note: --transport framed runs workers sequentially; --threads {} is ignored",
                     cfg.threads
                 );
             }
-            builder.transport(Framed).run()
+            let t = if transport == "framed-natural" { Framed::natural() } else { Framed::new() };
+            builder.transport(t).run()
         }
-        other => anyhow::bail!("unknown transport '{other}' (inproc|framed)"),
+        other => anyhow::bail!("unknown transport '{other}' (inproc|framed|framed-natural)"),
     };
+    for (t, m) in r.mech_switches() {
+        println!("schedule: switched to {m} at round {t}");
+    }
     let mut t = threepc::util::table::Table::new(
         "training trace (thinned)",
         &["round", "|grad f|^2", "G^t", "bits/worker", "skip%", "loss"],

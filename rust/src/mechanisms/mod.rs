@@ -25,6 +25,7 @@ pub mod dcgd;
 pub mod ef21;
 pub mod lag;
 pub mod marina;
+pub mod schedule;
 pub mod v1;
 pub mod v2;
 pub mod v3;
@@ -34,6 +35,10 @@ pub use dcgd::{Gd, NaiveDcgd};
 pub use ef21::Ef21;
 pub use lag::{Clag, Lag};
 pub use marina::{Marina, V5};
+pub use schedule::{
+    parse_schedule, AdaptiveGrad, MechanismSchedule, Piecewise, PiecewiseEntry, RoundTelemetry,
+    Static,
+};
 pub use v1::V1;
 pub use v2::V2;
 pub use v3::V3;
@@ -182,6 +187,18 @@ impl MechWorker {
 
     pub fn map_name(&self) -> String {
         self.map.name()
+    }
+
+    /// Install a new three point compressor mid-run (the schedule axis,
+    /// [`schedule::MechanismSchedule`]). `h = g_i^t` and
+    /// `y = ∇f_i(x^t)` carry over unchanged: the server mirrors `h`
+    /// through the update stream regardless of which map produced it,
+    /// and `y` is the worker's own previous local gradient — both are
+    /// exactly the state the mechanism recursion (8) needs, so
+    /// EF21-style memory survives the switch and the next update is
+    /// produced (and billed) under the new map.
+    pub fn swap_map(&mut self, map: std::sync::Arc<dyn ThreePointMap>) {
+        self.map = map;
     }
 
     /// One round: consume `∇f_i(x^{t+1})`, emit the wire update, advance
@@ -422,5 +439,26 @@ mod tests {
     #[test]
     fn ratio_handles_zero_b() {
         assert_eq!(MechParams { a: 1.0, b: 0.0 }.ratio(), 0.0);
+    }
+
+    #[test]
+    fn swap_map_carries_h_and_y_over() {
+        let map = parse_mechanism("ef21:top1").unwrap();
+        let mut w = MechWorker::new(map, vec![0.0f32; 3], vec![1.0f32, 0.5, 0.25]);
+        let info = CtxInfo::single(3);
+        let mut rng = Pcg64::seed(0);
+        let mut ctx = Ctx::new(info, &mut rng, 1);
+        w.round(&[2.0f32, 0.1, 0.1], &mut ctx);
+        assert_eq!(w.g(), &[2.0, 0.0, 0.0]);
+        // Switch to GD mid-run: the accumulated h survives the swap, and
+        // the next round runs (and bills) under the new map.
+        w.swap_map(parse_mechanism("gd").unwrap());
+        assert_eq!(w.g(), &[2.0, 0.0, 0.0], "h must survive the swap");
+        assert_eq!(w.map_name(), "GD");
+        let mut ctx = Ctx::new(info, &mut rng, 2);
+        let (u, gerr) = w.round(&[1.0f32, 1.0, 1.0], &mut ctx);
+        assert!(matches!(u, Update::Replace { .. }));
+        assert_eq!(w.g(), &[1.0, 1.0, 1.0]);
+        assert_eq!(gerr, 0.0);
     }
 }

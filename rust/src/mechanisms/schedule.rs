@@ -1,0 +1,424 @@
+//! Evolving mechanism schedules: the 3PC map as a *per-round* decision.
+//!
+//! The defining feature of 3PC (paper §4) is that the compressor may
+//! change along the optimization path — the inequality (6) certificate
+//! is per-application, not per-run. AdaCGD (Makarenko et al., 2022)
+//! exploits exactly that: switch the communication mechanism as training
+//! progresses and the observed compression error `G^t` changes regime.
+//!
+//! A [`MechanismSchedule`] is the axis that decides which
+//! [`ThreePointMap`] is active each round. The session asks it once per
+//! round (on the coordinator), and when the answer changes it broadcasts
+//! a [`MechSwitch`](crate::coordinator::protocol::MechSwitch) directive
+//! through the transport; every worker then installs the new map with
+//! [`MechWorker::swap_map`](super::MechWorker::swap_map), carrying its
+//! `(h, y)` state over so EF21-style memory survives the switch.
+//!
+//! Three implementations ship:
+//!
+//! * [`Static`] — one map for the whole run (the pre-schedule behavior,
+//!   and what a bare mechanism spec parses to);
+//! * [`Piecewise`] — a round-threshold switch table,
+//!   e.g. `ef21:top32@0..500,ef21:top4@500..`;
+//! * [`AdaptiveGrad`] — AdaCGD-style: escalate compression
+//!   aggressiveness while the observed `G^t` keeps improving, relax it
+//!   when `G^t` regresses.
+//!
+//! Grammar (`parse_schedule`): any mechanism spec from
+//! [`parse_mechanism`] is a valid (static) schedule; `@` ranges make a
+//! piecewise table; `adaptive[@<window>]:<spec>|<spec>|…` builds the
+//! adaptive ladder.
+
+use super::{parse_mechanism, ThreePointMap};
+use std::sync::Arc;
+
+/// What the coordinator knows about training progress when it asks the
+/// schedule for the next round's mechanism: the previous round's
+/// aggregate observables. Before any round has completed the error
+/// terms are `f64::INFINITY` and the counters zero.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundTelemetry {
+    /// Rounds completed so far.
+    pub rounds_done: u64,
+    /// `‖∇f(x)‖²` after the last completed round.
+    pub grad_norm_sq: f64,
+    /// `G^t = (1/n)Σ‖g_i − ∇f_i‖²` after the last completed round.
+    pub g_err: f64,
+    /// Mean cumulative uplink bits per worker.
+    pub bits_up_cum: f64,
+    /// Cumulative downlink bits per worker.
+    pub bits_down_cum: f64,
+    /// Fraction of workers that skipped the last completed round.
+    pub skipped_frac: f64,
+}
+
+impl RoundTelemetry {
+    /// The telemetry seen by the very first `pick` (no completed rounds).
+    pub fn initial() -> RoundTelemetry {
+        RoundTelemetry {
+            rounds_done: 0,
+            grad_norm_sq: f64::INFINITY,
+            g_err: f64::INFINITY,
+            bits_up_cum: 0.0,
+            bits_down_cum: 0.0,
+            skipped_frac: 0.0,
+        }
+    }
+}
+
+/// Per-round mechanism decision. The session calls [`Self::pick`]
+/// exactly once per round, in round order; returning the *same*
+/// `Arc` (pointer-equal) as the previous round means "no switch", so
+/// implementations should cache and clone their maps rather than
+/// rebuild them.
+pub trait MechanismSchedule: Send {
+    /// Human-readable description of the schedule.
+    fn name(&self) -> String;
+
+    /// The mechanism to use for `round`. `telemetry` summarises all
+    /// completed rounds (see [`RoundTelemetry`]).
+    fn pick(&mut self, round: u64, telemetry: &RoundTelemetry) -> Arc<dyn ThreePointMap>;
+}
+
+/// One map for the whole run — the default, and exactly the
+/// pre-schedule behavior (a degenerate schedule never emits a switch).
+pub struct Static {
+    map: Arc<dyn ThreePointMap>,
+}
+
+impl Static {
+    pub fn new(map: Arc<dyn ThreePointMap>) -> Static {
+        Static { map }
+    }
+}
+
+impl MechanismSchedule for Static {
+    fn name(&self) -> String {
+        format!("static({})", self.map.name())
+    }
+
+    fn pick(&mut self, _round: u64, _telemetry: &RoundTelemetry) -> Arc<dyn ThreePointMap> {
+        Arc::clone(&self.map)
+    }
+}
+
+/// One segment of a [`Piecewise`] schedule: `map` is active for rounds
+/// `start..end` (`end = None` means "to the end of the run").
+pub struct PiecewiseEntry {
+    pub start: u64,
+    pub end: Option<u64>,
+    pub map: Arc<dyn ThreePointMap>,
+    /// The mechanism spec this entry was parsed from (display only).
+    pub spec: String,
+}
+
+/// A round-threshold switch table: contiguous segments covering every
+/// round from 0, the last one open-ended.
+pub struct Piecewise {
+    entries: Vec<PiecewiseEntry>,
+}
+
+impl Piecewise {
+    /// Validates that the entries start at round 0, are contiguous, and
+    /// end with an open segment (so every round has a mechanism).
+    pub fn new(entries: Vec<PiecewiseEntry>) -> anyhow::Result<Piecewise> {
+        anyhow::ensure!(!entries.is_empty(), "piecewise schedule needs at least one entry");
+        anyhow::ensure!(
+            entries[0].start == 0,
+            "piecewise schedule must start at round 0 (first entry starts at {})",
+            entries[0].start
+        );
+        for w in entries.windows(2) {
+            anyhow::ensure!(
+                w[0].end == Some(w[1].start),
+                "piecewise entries must be contiguous: `{}` ends at {:?} but `{}` starts at {}",
+                w[0].spec,
+                w[0].end,
+                w[1].spec,
+                w[1].start
+            );
+        }
+        anyhow::ensure!(
+            entries.last().expect("non-empty").end.is_none(),
+            "the last piecewise entry must be open-ended (`<spec>@<start>..`)"
+        );
+        Ok(Piecewise { entries })
+    }
+
+    /// Parse a switch table: comma-separated `<mech-spec>@<start>..<end>`
+    /// entries, the last one `<mech-spec>@<start>..` (open).
+    pub fn parse(spec: &str) -> anyhow::Result<Piecewise> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (mech, range) = part.rsplit_once('@').ok_or_else(|| {
+                anyhow::anyhow!("piecewise entry `{part}` needs `<mech-spec>@<start>..<end>`")
+            })?;
+            let (a, b) = range.split_once("..").ok_or_else(|| {
+                anyhow::anyhow!("piecewise range `{range}` needs `<start>..<end>` or `<start>..`")
+            })?;
+            let start: u64 =
+                a.parse().map_err(|e| anyhow::anyhow!("piecewise start `{a}`: {e}"))?;
+            let end: Option<u64> = if b.is_empty() {
+                None
+            } else {
+                let e: u64 = b.parse().map_err(|e| anyhow::anyhow!("piecewise end `{b}`: {e}"))?;
+                anyhow::ensure!(e > start, "piecewise range `{range}` is empty");
+                Some(e)
+            };
+            entries.push(PiecewiseEntry {
+                start,
+                end,
+                map: parse_mechanism(mech)?,
+                spec: mech.to_string(),
+            });
+        }
+        Piecewise::new(entries)
+    }
+}
+
+impl MechanismSchedule for Piecewise {
+    fn name(&self) -> String {
+        let parts: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| match e.end {
+                Some(end) => format!("{}@{}..{}", e.spec, e.start, end),
+                None => format!("{}@{}..", e.spec, e.start),
+            })
+            .collect();
+        format!("piecewise({})", parts.join(","))
+    }
+
+    fn pick(&mut self, round: u64, _telemetry: &RoundTelemetry) -> Arc<dyn ThreePointMap> {
+        let entry = self
+            .entries
+            .iter()
+            .rev()
+            .find(|e| e.start <= round)
+            .expect("piecewise entries cover round 0 onward");
+        Arc::clone(&entry.map)
+    }
+}
+
+/// Default decision cadence of [`AdaptiveGrad`] (rounds between
+/// escalate/relax decisions).
+pub const ADAPTIVE_DEFAULT_WINDOW: u64 = 16;
+
+/// `G^t` must drop to this fraction of its value at the previous
+/// decision point for [`AdaptiveGrad`] to escalate one rung.
+pub const ADAPTIVE_IMPROVE_FACTOR: f64 = 0.5;
+
+/// AdaCGD-style adaptive schedule over a ladder of mechanisms ordered
+/// from least to most aggressive compression.
+///
+/// Every `window` rounds the schedule compares the observed compression
+/// error `G^t` (fed through [`RoundTelemetry`] by the session's
+/// round-observer loop) against its value at the previous decision:
+///
+/// * dropped to `≤ ADAPTIVE_IMPROVE_FACTOR ×` the previous value — the
+///   mechanism is tracking the gradients comfortably, so *escalate* one
+///   rung (spend fewer bits);
+/// * grew above the previous value — the current rung can't keep up, so
+///   *relax* one rung (spend more bits).
+///
+/// Bits spent are visible in the telemetry too
+/// ([`RoundTelemetry::bits_up_cum`]); the default policy keys off `G^t`
+/// because that is the quantity the 3PC theory contracts (Eq. 15).
+pub struct AdaptiveGrad {
+    ladder: Vec<(String, Arc<dyn ThreePointMap>)>,
+    window: u64,
+    level: usize,
+    last_decision: u64,
+    last_gerr: f64,
+}
+
+impl AdaptiveGrad {
+    /// `ladder` pairs each rung's display spec with its map, ordered
+    /// from least to most aggressive; the run starts on rung 0.
+    pub fn new(
+        ladder: Vec<(String, Arc<dyn ThreePointMap>)>,
+        window: u64,
+    ) -> anyhow::Result<AdaptiveGrad> {
+        anyhow::ensure!(!ladder.is_empty(), "adaptive schedule needs at least one mechanism");
+        anyhow::ensure!(window >= 1, "adaptive window must be >= 1");
+        Ok(AdaptiveGrad { ladder, window, level: 0, last_decision: 0, last_gerr: f64::INFINITY })
+    }
+
+    /// Parse `adaptive[@<window>]:<spec>|<spec>|…`.
+    pub fn parse(spec: &str) -> anyhow::Result<AdaptiveGrad> {
+        let rest = spec
+            .trim()
+            .strip_prefix("adaptive")
+            .ok_or_else(|| anyhow::anyhow!("adaptive spec must start with `adaptive`"))?;
+        let (window, body) = if let Some(r) = rest.strip_prefix('@') {
+            let (w, body) = r.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("adaptive spec needs `adaptive@<window>:<spec>|<spec>|…`")
+            })?;
+            (w.parse().map_err(|e| anyhow::anyhow!("adaptive window `{w}`: {e}"))?, body)
+        } else if let Some(body) = rest.strip_prefix(':') {
+            (ADAPTIVE_DEFAULT_WINDOW, body)
+        } else {
+            anyhow::bail!("adaptive spec needs `adaptive[@<window>]:<spec>|<spec>|…`")
+        };
+        let ladder = body
+            .split('|')
+            .map(|m| {
+                let m = m.trim();
+                Ok((m.to_string(), parse_mechanism(m)?))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        AdaptiveGrad::new(ladder, window)
+    }
+
+    /// The active rung (index into the ladder).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+}
+
+impl MechanismSchedule for AdaptiveGrad {
+    fn name(&self) -> String {
+        let rungs: Vec<&str> = self.ladder.iter().map(|(s, _)| s.as_str()).collect();
+        format!("adaptive@{}({})", self.window, rungs.join("|"))
+    }
+
+    fn pick(&mut self, round: u64, telemetry: &RoundTelemetry) -> Arc<dyn ThreePointMap> {
+        let due = telemetry.rounds_done > 0
+            && round.saturating_sub(self.last_decision) >= self.window
+            && telemetry.g_err.is_finite();
+        if due {
+            if self.last_gerr.is_finite() {
+                if telemetry.g_err <= ADAPTIVE_IMPROVE_FACTOR * self.last_gerr
+                    && self.level + 1 < self.ladder.len()
+                {
+                    self.level += 1;
+                } else if telemetry.g_err > self.last_gerr && self.level > 0 {
+                    self.level -= 1;
+                }
+            }
+            self.last_decision = round;
+            self.last_gerr = telemetry.g_err;
+        }
+        Arc::clone(&self.ladder[self.level].1)
+    }
+}
+
+/// Parse a schedule spec. Every mechanism spec accepted by
+/// [`parse_mechanism`] is a valid (static) schedule; `@` ranges make a
+/// [`Piecewise`] table; an `adaptive` prefix builds [`AdaptiveGrad`].
+pub fn parse_schedule(spec: &str) -> anyhow::Result<Box<dyn MechanismSchedule>> {
+    let s = spec.trim();
+    if s.starts_with("adaptive") {
+        return Ok(Box::new(AdaptiveGrad::parse(s)?));
+    }
+    if s.contains('@') {
+        return Ok(Box::new(Piecewise::parse(s)?));
+    }
+    Ok(Box::new(Static::new(parse_mechanism(s)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tel(rounds_done: u64, g_err: f64) -> RoundTelemetry {
+        RoundTelemetry {
+            rounds_done,
+            grad_norm_sq: 1.0,
+            g_err,
+            bits_up_cum: 0.0,
+            bits_down_cum: 0.0,
+            skipped_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn every_mechanism_spec_is_a_static_schedule() {
+        for s in [
+            "gd",
+            "dcgd:top4",
+            "ef21:top4",
+            "lag:4.0",
+            "clag:top4:2.0",
+            "v1:top4",
+            "v2:rand4:top4",
+            "v3:ef21:top4;top2",
+            "v4:top4:top2",
+            "v5:0.25:top4",
+            "marina:0.25:rand4",
+        ] {
+            let mut sched = parse_schedule(s).unwrap_or_else(|e| panic!("spec {s}: {e}"));
+            let t = RoundTelemetry::initial();
+            let a = sched.pick(0, &t);
+            let b = sched.pick(1, &t);
+            assert!(Arc::ptr_eq(&a, &b), "static schedule {s} must reuse its map");
+        }
+        assert!(parse_schedule("bogus").is_err());
+    }
+
+    #[test]
+    fn piecewise_picks_by_round_threshold() {
+        let mut p = Piecewise::parse("ef21:top4@0..500,ef21:top2@500..").unwrap();
+        let t = RoundTelemetry::initial();
+        let first = p.pick(0, &t);
+        assert!(Arc::ptr_eq(&first, &p.pick(499, &t)));
+        let second = p.pick(500, &t);
+        assert!(!Arc::ptr_eq(&first, &second));
+        assert!(Arc::ptr_eq(&second, &p.pick(10_000, &t)));
+        assert_eq!(p.name(), "piecewise(ef21:top4@0..500,ef21:top2@500..)");
+    }
+
+    #[test]
+    fn piecewise_rejects_bad_tables() {
+        // Must start at 0.
+        assert!(Piecewise::parse("ef21:top4@5..").is_err());
+        // Must be contiguous.
+        assert!(Piecewise::parse("ef21:top4@0..10,ef21:top2@20..").is_err());
+        // Last entry must be open.
+        assert!(Piecewise::parse("ef21:top4@0..10").is_err());
+        // Empty range.
+        assert!(Piecewise::parse("ef21:top4@0..0,ef21:top2@0..").is_err());
+        // Unknown inner mechanism.
+        assert!(Piecewise::parse("nope@0..").is_err());
+        // Missing range.
+        assert!(Piecewise::parse("ef21:top4").is_err());
+    }
+
+    #[test]
+    fn adaptive_escalates_and_relaxes_on_gerr_trend() {
+        let mut a = AdaptiveGrad::parse("adaptive@5:ef21:top8|ef21:top2|ef21:top1").unwrap();
+        assert_eq!(a.level(), 0);
+        // Round 0: nothing observed yet.
+        a.pick(0, &RoundTelemetry::initial());
+        assert_eq!(a.level(), 0);
+        // First due decision only records the baseline.
+        a.pick(5, &tel(5, 8.0));
+        assert_eq!(a.level(), 0);
+        // Not due yet — no decision.
+        a.pick(7, &tel(7, 0.1));
+        assert_eq!(a.level(), 0);
+        // G^t halved → escalate.
+        a.pick(10, &tel(10, 1.0));
+        assert_eq!(a.level(), 1);
+        // Halved again → escalate to the top rung.
+        a.pick(15, &tel(15, 0.25));
+        assert_eq!(a.level(), 2);
+        // At the top, further improvement keeps the rung.
+        a.pick(20, &tel(20, 0.01));
+        assert_eq!(a.level(), 2);
+        // Regression → relax one rung.
+        a.pick(25, &tel(25, 5.0));
+        assert_eq!(a.level(), 1);
+    }
+
+    #[test]
+    fn adaptive_parse_validates() {
+        assert!(AdaptiveGrad::parse("adaptive:").is_err());
+        assert!(AdaptiveGrad::parse("adaptive@0:ef21:top4").is_err());
+        assert!(AdaptiveGrad::parse("adaptive@x:ef21:top4").is_err());
+        assert!(AdaptiveGrad::parse("adaptive").is_err());
+        let a = AdaptiveGrad::parse("adaptive:ef21:top8|ef21:top1").unwrap();
+        assert_eq!(a.name(), "adaptive@16(ef21:top8|ef21:top1)");
+    }
+}

@@ -1,0 +1,265 @@
+//! Property and acceptance tests for the mechanism-schedule axis:
+//!
+//! * `Static(m)` and a degenerate one-entry `Piecewise` are bit-for-bit
+//!   identical to a fixed-mechanism run, for every spec the grammar can
+//!   produce, on both transports;
+//! * a `Piecewise` switch mid-run produces a `Framed` trace whose
+//!   measured downlink bytes include the `MechSwitch` frames, agrees
+//!   with the declared accounting, and matches the `InProcess` trace
+//!   round-for-round;
+//! * `AdaptiveGrad` demonstrably switches on the quadratic suite and is
+//!   logged in the trace and the `ScheduleObserver`;
+//! * a killed-and-resumed session reproduces the reference trace.
+
+use threepc::coordinator::{
+    encode_mech_switch, Checkpoint, CheckpointObserver, Framed, InProcess, InitPolicy, MechSwitch,
+    ScheduleObserver, TrainConfig, TrainResult, TrainSession,
+};
+use threepc::mechanisms::parse_mechanism;
+use threepc::problems::quadratic;
+
+/// Every spec `parse_all_specs` pins down.
+const ALL_SPECS: [&str; 11] = [
+    "gd",
+    "dcgd:top3",
+    "ef21:top3",
+    "lag:2.0",
+    "clag:top3:2.0",
+    "v1:top3",
+    "v2:rand3:top3",
+    "v3:ef21:top3;top2",
+    "v4:top3:top2",
+    "v5:0.3:top3",
+    "marina:0.3:rand3",
+];
+
+fn base_cfg(rounds: usize) -> TrainConfig {
+    // threads = 1 pins the f64 fold order so traces compare exactly.
+    TrainConfig { gamma: 0.02, max_rounds: rounds, threads: 1, seed: 13, ..TrainConfig::default() }
+}
+
+fn assert_identical(a: &TrainResult, b: &TrainResult, label: &str) {
+    assert_eq!(a.rounds_run, b.rounds_run, "{label}: rounds");
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.t, rb.t, "{label}");
+        assert_eq!(ra.grad_norm_sq, rb.grad_norm_sq, "{label} round {}", ra.t);
+        assert_eq!(ra.g_err, rb.g_err, "{label} round {}", ra.t);
+        assert_eq!(ra.bits_up_cum, rb.bits_up_cum, "{label} round {}", ra.t);
+        assert_eq!(ra.bits_up_max, rb.bits_up_max, "{label} round {}", ra.t);
+        assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "{label} round {}", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "{label} round {}", ra.t);
+        assert_eq!(ra.mech_switch, rb.mech_switch, "{label} round {}", ra.t);
+    }
+    assert_eq!(a.total_bits_up, b.total_bits_up, "{label}");
+    assert_eq!(a.total_bits_down, b.total_bits_down, "{label}");
+    assert_eq!(a.wire_bytes_up, b.wire_bytes_up, "{label}");
+    assert_eq!(a.wire_bytes_down, b.wire_bytes_down, "{label}");
+    assert_eq!(a.final_x, b.final_x, "{label}");
+}
+
+/// `Static(m)` (what `.schedule_spec(spec)` builds for a bare mechanism
+/// spec) and a degenerate one-entry `Piecewise` must be bit-for-bit
+/// identical to today's fixed-mechanism runs, for every spec in the
+/// grammar, on both transports.
+#[test]
+fn static_and_degenerate_piecewise_match_fixed_mechanism_runs() {
+    let suite = quadratic::generate(6, 30, 1e-2, 0.5, 21);
+    for spec in ALL_SPECS {
+        for framed in [false, true] {
+            let run = |builder: threepc::coordinator::SessionBuilder<'_>| {
+                let builder = builder.config(base_cfg(25));
+                if framed {
+                    builder.transport(Framed::default()).run()
+                } else {
+                    builder.transport(InProcess::new(1)).run()
+                }
+            };
+            let fixed = run(TrainSession::builder(&suite.problem)
+                .mechanism(parse_mechanism(spec).unwrap()));
+            let statik = run(TrainSession::builder(&suite.problem)
+                .schedule_spec(spec)
+                .unwrap());
+            let degenerate = run(TrainSession::builder(&suite.problem)
+                .schedule_spec(&format!("{spec}@0.."))
+                .unwrap());
+            let label = format!("{spec} (framed={framed})");
+            assert_identical(&fixed, &statik, &format!("static vs fixed: {label}"));
+            assert_identical(&fixed, &degenerate, &format!("piecewise vs fixed: {label}"));
+            // No switches anywhere, and nothing on the downlink wire.
+            assert!(fixed.mech_switches().is_empty(), "{label}");
+            assert!(degenerate.mech_switches().is_empty(), "{label}");
+            assert_eq!(degenerate.wire_bytes_down, 0, "{label}");
+        }
+    }
+}
+
+/// The ISSUE acceptance scenario: a `Piecewise` schedule switching a
+/// Top-K mechanism to EF21 mid-run. The `Framed` trace must include the
+/// `MechSwitch` frame in its measured downlink bytes, agree with the
+/// declared accounting, and match the `InProcess` trace round-for-round.
+#[test]
+fn piecewise_switch_framed_matches_inprocess_and_bills_the_directive() {
+    let suite = quadratic::generate(6, 30, 1e-2, 0.5, 21);
+    let sched = "clag:top4:2.0@0..15,ef21:top4@15..";
+    let rounds = 30;
+    let a = TrainSession::builder(&suite.problem)
+        .schedule_spec(sched)
+        .unwrap()
+        .config(base_cfg(rounds))
+        .transport(InProcess::new(1))
+        .run();
+    let b = TrainSession::builder(&suite.problem)
+        .schedule_spec(sched)
+        .unwrap()
+        .config(base_cfg(rounds))
+        .transport(Framed::default())
+        .run();
+
+    // Round-for-round trajectory equality across transports.
+    assert_eq!(a.rounds_run, b.rounds_run);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.grad_norm_sq, rb.grad_norm_sq, "round {}", ra.t);
+        assert_eq!(ra.g_err, rb.g_err, "round {}", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "round {}", ra.t);
+        assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "round {}", ra.t);
+        assert_eq!(ra.mech_switch, rb.mech_switch, "round {}", ra.t);
+    }
+
+    // Exactly one switch, at round 15, to EF21 — recorded in the trace.
+    let ef21_name = parse_mechanism("ef21:top4").unwrap().name();
+    assert_eq!(a.mech_switches(), vec![(15, ef21_name.clone())]);
+    assert_eq!(b.mech_switches(), a.mech_switches());
+
+    // The Framed transport put the directive on the wire for real, and
+    // its measured bytes agree with the declared billing.
+    let frame = encode_mech_switch(&MechSwitch { round: 15, mech: ef21_name });
+    assert_eq!(b.wire_bytes_down, frame.len() as u64);
+    assert_eq!(a.wire_bytes_down, 0, "in-memory transport serializes nothing");
+    let dense_broadcast_bits = (rounds * 32 * 30) as u64; // rounds × 32·d
+    assert_eq!(b.total_bits_down, dense_broadcast_bits + 8 * b.wire_bytes_down);
+    assert_eq!(a.total_bits_down, b.total_bits_down, "declared billing matches measured");
+}
+
+/// `AdaptiveGrad` must demonstrably switch mechanisms on the quadratic
+/// suite, log the switch in `RoundRecord`, and feed the
+/// `ScheduleObserver`.
+#[test]
+fn adaptive_schedule_switches_on_the_quadratic_suite_and_is_logged() {
+    let suite = quadratic::generate(8, 40, 5e-2, 0.5, 5);
+    let mut c = base_cfg(80);
+    // Zero init gives a large G⁰, so the EF21 transient contracts G^t
+    // hard between decision windows and the ladder escalates.
+    c.gamma = 1e-3;
+    c.init = InitPolicy::Zero;
+    let obs = ScheduleObserver::new();
+    let log = obs.log();
+    let r = TrainSession::builder(&suite.problem)
+        .schedule_spec("adaptive@5:ef21:top8|ef21:top1")
+        .unwrap()
+        .config(c)
+        .observer(obs)
+        .run();
+    assert_eq!(r.rounds_run, 80);
+
+    let switches = r.mech_switches();
+    assert!(!switches.is_empty(), "adaptive schedule must switch at least once");
+    let top1_name = parse_mechanism("ef21:top1").unwrap().name();
+    assert_eq!(switches[0].1, top1_name, "first move escalates to the aggressive rung");
+    assert!(switches[0].0 >= 10, "a decision needs two windows (baseline + compare)");
+
+    let logged = log.lock().expect("switch log");
+    assert_eq!(logged[0].0, 0, "the initial mechanism is logged at the first round");
+    assert_eq!(logged[0].1, parse_mechanism("ef21:top8").unwrap().name());
+    assert_eq!(logged.len(), switches.len() + 1, "observer log = initial + every switch");
+    for (w, s) in logged.iter().skip(1).zip(&switches) {
+        assert_eq!((w.0, w.1.clone()), (s.0, s.1.clone()));
+    }
+}
+
+/// Kill-and-resume: a session resumed from a `CheckpointObserver` file
+/// reproduces the uninterrupted reference trace round-for-round (the
+/// checkpoint carries the exact leader fold state, and round seeds are
+/// keyed to absolute round numbers).
+#[test]
+fn kill_and_resume_reproduces_the_reference_trace() {
+    let suite = quadratic::generate(6, 24, 1e-2, 0.5, 7);
+    let c = TrainConfig {
+        gamma: 0.02,
+        max_rounds: 30,
+        threads: 1,
+        seed: 13,
+        ..TrainConfig::default()
+    };
+    let reference = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
+        .config(c.clone())
+        .run();
+
+    // The "killed" run: cut at round 15, having checkpointed at 14.
+    let path = std::env::temp_dir().join(format!("threepc-resume-{}.bin", std::process::id()));
+    let mut killed_cfg = c.clone();
+    killed_cfg.max_rounds = 15;
+    let killed = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
+        .config(killed_cfg)
+        .observer(CheckpointObserver::new(14, path.clone()))
+        .run();
+    assert_eq!(killed.rounds_run, 15);
+    let cp = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(cp.t, 14);
+
+    // Resume to the same horizon and compare with the reference tail.
+    let resumed = TrainSession::resume(&suite.problem, &cp)
+        .unwrap()
+        .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
+        .config(c)
+        .run();
+    assert_eq!(resumed.rounds_run, 15, "rounds 15..30");
+    let tail: Vec<_> = reference.records.iter().filter(|r| r.t >= 15).collect();
+    assert_eq!(resumed.records.len(), tail.len());
+    for (rr, tr) in resumed.records.iter().zip(&tail) {
+        assert_eq!(rr.t, tr.t);
+        assert_eq!(rr.grad_norm_sq, tr.grad_norm_sq, "round {}", rr.t);
+        assert_eq!(rr.g_err, tr.g_err, "round {}", rr.t);
+        assert_eq!(rr.skipped_frac, tr.skipped_frac, "round {}", rr.t);
+    }
+    assert_eq!(resumed.final_x, reference.final_x);
+    // The accounting clock restarts on resume: only rounds 15..30 bill,
+    // and the free FromState init beats the reference's full-gradient
+    // g⁰ sync.
+    assert!(resumed.total_bits_up < reference.total_bits_up);
+}
+
+/// Natural value coding is transparent to the trajectory (lossless for
+/// power-of-two payloads, raw fallback otherwise) and strictly cheaper
+/// in measured bytes for natural-compressed mechanisms.
+#[test]
+fn natural_value_coding_matches_raw_trace_with_fewer_bytes() {
+    let suite = quadratic::generate(5, 20, 1e-2, 0.5, 3);
+    let spec = "marina:0.2:natural";
+    let raw = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism(spec).unwrap())
+        .config(base_cfg(20))
+        .transport(Framed::new())
+        .run();
+    let nat = TrainSession::builder(&suite.problem)
+        .mechanism(parse_mechanism(spec).unwrap())
+        .config(base_cfg(20))
+        .transport(Framed::natural())
+        .run();
+    assert_eq!(raw.rounds_run, nat.rounds_run);
+    for (ra, rb) in raw.records.iter().zip(&nat.records) {
+        assert_eq!(ra.grad_norm_sq, rb.grad_norm_sq, "round {}", ra.t);
+        assert_eq!(ra.g_err, rb.g_err, "round {}", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "round {}", ra.t);
+    }
+    assert_eq!(raw.final_x, nat.final_x, "value coding must not change the trajectory");
+    assert!(
+        nat.wire_bytes_up < raw.wire_bytes_up,
+        "natural coding must shrink the measured uplink ({} vs {})",
+        nat.wire_bytes_up,
+        raw.wire_bytes_up
+    );
+}

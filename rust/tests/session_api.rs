@@ -43,7 +43,7 @@ fn framed_matches_inprocess_for_every_mechanism() {
         let b = TrainSession::builder(&suite.problem)
             .mechanism(parse_mechanism(spec).unwrap())
             .config(c)
-            .transport(Framed)
+            .transport(Framed::default())
             .run();
         assert_eq!(a.rounds_run, b.rounds_run, "{spec}");
         assert!(b.wire_bytes_up > 0, "{spec}");
@@ -67,7 +67,7 @@ fn framed_bills_exactly_its_measured_bytes() {
     let r = TrainSession::builder(&suite.problem)
         .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
         .config(cfg(0.02, 15))
-        .transport(Framed)
+        .transport(Framed::default())
         .run();
     let init_bits: u64 = 5 * 32 * 20; // FullGradient g⁰ sync, n = 5, d = 20
     assert_eq!(r.total_bits_up - init_bits, 8 * r.wire_bytes_up);
