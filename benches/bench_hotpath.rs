@@ -1,22 +1,28 @@
 //! Hot-path microbenchmarks — the perf-pass instrument (EXPERIMENTS.md
-//! §Perf). Targets from DESIGN.md §7:
+//! §Perf). Targets from DESIGN.md §7 / PERF.md:
 //!   * Top-K selection ≥ 1e8 coords/s (quickselect, no full sort);
-//!   * mechanism apply dominated by the compressor, not allocation;
+//!   * mechanism apply dominated by the compressor, not allocation —
+//!     the scratch-pool `apply_into`/`compress_into` path is measured
+//!     against the allocating compat wrappers;
 //!   * server fold O(nnz);
-//!   * full coordinator round at (n=100, d=25088) dominated by gradient
-//!     compute, coordination overhead < 10%.
+//!   * full coordinator round at cheap-gradient settings dominated by
+//!     gradient compute, coordination overhead < 10%.
+//!
+//! Emits `BENCH_hotpath.json` (per-case medians + derived figures) —
+//! the machine-readable perf trajectory CI uploads per commit. Run with
+//! `BENCH_SMOKE=1` for the reduced-iteration CI mode.
 
 #[path = "benchkit/mod.rs"]
 mod benchkit;
 
-use std::sync::Arc;
-use threepc::compressors::{Contractive, Ctx, CtxInfo, TopK};
+use threepc::compressors::{CVec, Contractive, Ctx, CtxInfo, MechScratch, TopK};
 use threepc::coordinator::{TrainConfig, TrainSession};
-use threepc::mechanisms::parse_mechanism;
+use threepc::mechanisms::{parse_mechanism, recycle_update, ThreePointMap, Update};
 use threepc::problems::quadratic;
 use threepc::util::rng::Pcg64;
 
 fn main() {
+    let mut report = benchkit::JsonReport::new("hotpath");
     println!("== hot path microbenches ==");
     let d = 25_088;
     let mut rng = Pcg64::seed(1);
@@ -25,49 +31,85 @@ fn main() {
     // Top-K selection throughput.
     for k in [251usize, 2508] {
         let top = TopK::new(k);
-        let s = benchkit::measure(&format!("topk select k={k} d={d}"), 10, 200, || {
-            std::hint::black_box(top.select(&x));
-        });
-        println!("    → {:.1}e6 coords/s", benchkit::throughput(&s, d) / 1e6);
+        let s = benchkit::measure(
+            &format!("topk select k={k} d={d}"),
+            10,
+            benchkit::scaled(200),
+            || {
+                std::hint::black_box(top.select(&x));
+            },
+        );
+        let cps = benchkit::throughput(&s, d);
+        println!("    → {:.1}e6 coords/s", cps / 1e6);
+        report.push(&s, &[("coords_per_s", cps)]);
     }
 
-    // Full compressor (select + gather + alloc).
+    // Full compressor: allocating compat path vs the pooled
+    // `compress_into` hot path (RNG seeding hoisted out of the closures
+    // so the cases measure compression, not generator setup).
     let info = CtxInfo::single(d);
     let top = TopK::new(251);
-    benchkit::measure("topk compress k=251 (alloc+gather)", 10, 200, || {
-        let mut r = Pcg64::seed(2);
-        let mut ctx = Ctx::new(info, &mut r, 0);
+    let mut r2 = Pcg64::seed(2);
+    let s = benchkit::measure("topk compress k=251 (alloc compat)", 10, benchkit::scaled(200), || {
+        let mut ctx = Ctx::new(info, &mut r2, 0);
         std::hint::black_box(top.compress(&x, &mut ctx));
     });
+    report.push(&s, &[]);
+    let mut scratch = MechScratch::new();
+    let mut slot = CVec::Zero { dim: 0 };
+    let s = benchkit::measure("topk compress_into k=251 (pooled)", 10, benchkit::scaled(200), || {
+        let mut ctx = Ctx::with_scratch(info, &mut r2, 0, &mut scratch);
+        top.compress_into(&x, &mut ctx, &mut slot);
+        std::hint::black_box(&slot);
+    });
+    report.push(&s, &[]);
 
-    // Mechanism apply (EF21, CLAG skip and fire paths).
+    // Mechanism apply (EF21, CLAG skip and fire paths) through the
+    // recycled-slot scratch pipeline — the path every transport drives.
     let ef = parse_mechanism("ef21:top251").unwrap();
     let h = vec![0.0f32; d];
     let y = vec![0.0f32; d];
-    benchkit::measure("EF21 apply d=25088", 10, 200, || {
-        let mut r = Pcg64::seed(3);
-        let mut ctx = Ctx::new(info, &mut r, 0);
-        std::hint::black_box(ef.apply(&h, &y, &x, &mut ctx));
+    let mut r3 = Pcg64::seed(3);
+    let mut scratch = MechScratch::new();
+    let mut upd = Update::Keep;
+    let s = benchkit::measure("EF21 apply_into d=25088 (pooled)", 10, benchkit::scaled(200), || {
+        let mut ctx = Ctx::with_scratch(info, &mut r3, 0, &mut scratch);
+        recycle_update(&mut ctx, &mut upd);
+        ef.apply_into(&h, &y, &x, &mut ctx, &mut upd);
+        std::hint::black_box(&upd);
     });
+    report.push(&s, &[]);
     let clag = parse_mechanism("clag:top251:1e9").unwrap(); // huge ζ → always skips
-    benchkit::measure("CLAG apply (skip path) d=25088", 10, 200, || {
-        let mut r = Pcg64::seed(3);
-        let mut ctx = Ctx::new(info, &mut r, 0);
-        std::hint::black_box(clag.apply(&x, &x, &x, &mut ctx));
+    let s = benchkit::measure("CLAG apply_into (skip path) d=25088", 10, benchkit::scaled(200), || {
+        let mut ctx = Ctx::with_scratch(info, &mut r3, 0, &mut scratch);
+        recycle_update(&mut ctx, &mut upd);
+        clag.apply_into(&x, &x, &x, &mut ctx, &mut upd);
+        std::hint::black_box(&upd);
     });
+    report.push(&s, &[]);
 
-    // End-to-end round latency, n = 100 workers on the quadratic suite
-    // (cheap gradients → upper-bounds the coordination overhead).
+    // End-to-end round latency on the quadratic suite (cheap gradients
+    // → upper-bounds the coordination overhead). The n=1000 case is the
+    // acceptance metric for the zero-allocation round pipeline.
     println!("\n== coordinator round latency (cheap gradients → coordination overhead) ==");
     for (n, threads) in [(100usize, 1usize), (100, 0), (1000, 0)] {
         let suite = quadratic::generate(n, 1000, 1e-4, 0.5, 7);
         let map = parse_mechanism("clag:top20:4.0").unwrap();
         let rounds = 30;
-        let cfg = TrainConfig { gamma: 1e-3, max_rounds: rounds, threads, seed: 1, ..TrainConfig::default() };
+        let cfg = TrainConfig {
+            gamma: 1e-3,
+            max_rounds: rounds,
+            threads,
+            seed: 1,
+            ..TrainConfig::default()
+        };
         let s = benchkit::measure(
-            &format!("train {rounds} rounds n={n} d=1000 threads={}", if threads == 0 { "auto".into() } else { threads.to_string() }),
+            &format!(
+                "train {rounds} rounds n={n} d=1000 threads={}",
+                if threads == 0 { "auto".into() } else { threads.to_string() }
+            ),
             1,
-            5,
+            benchkit::scaled(5),
             || {
                 std::hint::black_box(
                     TrainSession::builder(&suite.problem)
@@ -77,23 +119,24 @@ fn main() {
                 );
             },
         );
-        println!(
-            "    → {:.2} ms/round",
-            s.median.as_secs_f64() * 1e3 / rounds as f64
-        );
+        let ms_per_round = s.median.as_secs_f64() * 1e3 / rounds as f64;
+        println!("    → {ms_per_round:.2} ms/round");
+        report.push(&s, &[("ms_per_round", ms_per_round)]);
     }
 
     // Mean-aggregation fold cost alone.
     println!("\n== server fold ==");
     let deltas: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64; d]).collect();
-    let g0: Vec<&[f32]> = Vec::new();
-    drop(g0);
     let mut server = threepc::coordinator::Server::new(vec![0.0f32; d], &[&x], &[0]);
-    benchkit::measure("fold 8 thread-partials d=25088", 10, 300, || {
+    let s = benchkit::measure("fold 8 thread-partials d=25088", 10, benchkit::scaled(300), || {
         for dd in &deltas {
             server.fold_delta(std::hint::black_box(dd));
         }
     });
+    report.push(&s, &[]);
 
-    let _ = Arc::strong_count(&ef);
+    match report.write(".") {
+        Ok(path) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] failed to write JSON report: {e}"),
+    }
 }

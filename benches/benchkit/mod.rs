@@ -4,8 +4,36 @@
 //! min; `run_experiment` times one paper-experiment regeneration
 //! end-to-end. Every bench target is `harness = false`, so `cargo bench`
 //! executes these `main`s directly.
+//!
+//! Two perf-trajectory additions:
+//! * [`JsonReport`] — a machine-readable emitter writing
+//!   `BENCH_<name>.json` (per-case median/MAD/min in ns plus
+//!   bench-specific derived figures like coords/s or ms/round), the
+//!   artifact CI uploads so hot-path regressions are diffable across
+//!   commits.
+//! * [`smoke`]/[`scaled`] — reduced-iteration smoke mode
+//!   (`BENCH_SMOKE=1`) so CI can execute every case cheaply; the JSON
+//!   records which mode produced it.
 
 use std::time::{Duration, Instant};
+
+/// True when `BENCH_SMOKE` is set (and not "0"): run each case with a
+/// fraction of the iterations so CI finishes quickly. Smoke numbers are
+/// for liveness, not comparison — the emitted JSON flags them.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| v != "0")
+}
+
+/// Scale an iteration count for the active mode (min 2 in smoke mode).
+#[allow(dead_code)]
+pub fn scaled(iters: usize) -> usize {
+    if smoke() {
+        (iters / 20).max(2)
+    } else {
+        iters
+    }
+}
 
 pub struct Sample {
     pub name: String,
@@ -56,6 +84,80 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
 #[allow(dead_code)]
 pub fn throughput(sample: &Sample, elements: usize) -> f64 {
     elements as f64 / sample.median.as_secs_f64()
+}
+
+/// Machine-readable bench report: accumulates cases and writes
+/// `BENCH_<name>.json` at the workspace root. Format:
+///
+/// ```json
+/// {"bench":"hotpath","smoke":false,"cases":[
+///   {"name":"topk select k=251 d=25088","median_ns":123456,
+///    "mad_ns":789,"min_ns":120000,"iters":200,"coords_per_s":2.0e8},
+///   ...]}
+/// ```
+///
+/// Derived figures (`coords_per_s`, `ms_per_round`, …) are attached
+/// per-case via the `extras` argument of [`JsonReport::push`]. Written
+/// with no external deps — names are escaped, non-finite extras become
+/// `null`.
+#[allow(dead_code)]
+pub struct JsonReport {
+    bench: String,
+    cases: Vec<String>,
+}
+
+#[allow(dead_code)]
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[allow(dead_code)]
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[allow(dead_code)]
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), cases: Vec::new() }
+    }
+
+    /// Record a measured sample plus bench-specific derived figures.
+    pub fn push(&mut self, s: &Sample, extras: &[(&str, f64)]) {
+        let mut obj = format!(
+            "{{\"name\":\"{}\",\"median_ns\":{},\"mad_ns\":{},\"min_ns\":{},\"iters\":{}",
+            json_escape(&s.name),
+            s.median.as_nanos(),
+            s.mad.as_nanos(),
+            s.min.as_nanos(),
+            s.iters
+        );
+        for (k, v) in extras {
+            obj.push_str(&format!(",\"{}\":{}", json_escape(k), json_f64(*v)));
+        }
+        obj.push('}');
+        self.cases.push(obj);
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir` (the workspace root when
+    /// run via `cargo bench`). Returns the path written.
+    pub fn write(&self, dir: &str) -> std::io::Result<String> {
+        let path = format!("{dir}/BENCH_{}.json", self.bench);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"bench\":\"{}\",\"smoke\":{},\"cases\":[",
+            json_escape(&self.bench),
+            smoke()
+        ));
+        out.push_str(&self.cases.join(","));
+        out.push_str("]}\n");
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
 }
 
 /// Time a whole experiment regeneration (the per-figure benches).

@@ -55,11 +55,12 @@ impl Contractive for Bernoulli {
         self.p
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         if self.flip(ctx) {
-            CVec::Dense(x.to_vec())
+            *out = CVec::Dense(ctx.take_f32_copy(x));
         } else {
-            CVec::Zero { dim: x.len() }
+            *out = CVec::Zero { dim: x.len() };
         }
     }
 }

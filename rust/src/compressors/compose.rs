@@ -37,11 +37,18 @@ impl Contractive for ComposedContractive {
         a1 * a2
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
-        let mid = self.first.compress(x, ctx).to_dense();
-        // The outer compressor sees the (mostly zero) intermediate; wire
-        // cost is computed from the actual payload it emits.
-        self.second.compress(&mid, ctx)
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        let mut mid = CVec::Zero { dim: 0 };
+        self.first.compress_into(x, ctx, &mut mid);
+        // The outer compressor sees the (mostly zero) densified
+        // intermediate; wire cost is computed from the actual payload it
+        // emits. Both the intermediate CVec and its dense rendering are
+        // pooled.
+        let mut dense = ctx.take_f32_zeroed(x.len());
+        mid.add_into(&mut dense);
+        ctx.recycle_cvec(&mut mid);
+        self.second.compress_into(&dense, ctx, out);
+        ctx.put_f32(dense);
     }
 }
 

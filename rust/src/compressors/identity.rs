@@ -15,8 +15,9 @@ impl Contractive for Identity {
         1.0
     }
 
-    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
-        CVec::Dense(x.to_vec())
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
+        *out = CVec::Dense(ctx.take_f32_copy(x));
     }
 }
 
@@ -33,8 +34,9 @@ impl Unbiased for IdentityUnbiased {
         0.0
     }
 
-    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
-        CVec::Dense(x.to_vec())
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
+        *out = CVec::Dense(ctx.take_f32_copy(x));
     }
 }
 

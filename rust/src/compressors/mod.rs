@@ -48,9 +48,115 @@ impl CtxInfo {
     }
 }
 
+/// Reusable heap buffers for the per-round mechanism/compressor hot
+/// path. One pool lives in each stateful worker wrapper
+/// ([`MechWorker`](crate::mechanisms::MechWorker)) and is lent to the
+/// compressors through [`Ctx`], so at steady state every diff/residual
+/// vector, Top-K selection scratch, sparse index/value buffer and
+/// `Replace` decomposition travels round → pool → next round without
+/// touching the allocator.
+///
+/// `take_*` uses best-capacity-fit so each request class (a `d`-sized
+/// residual vs. a `k`-sized value buffer) converges onto its own
+/// right-sized buffer after the first few rounds; if nothing fits, the
+/// smallest pooled buffer is grown rather than leaking a new one.
+#[derive(Default)]
+pub struct MechScratch {
+    f32_pool: Vec<Vec<f32>>,
+    u32_pool: Vec<Vec<u32>>,
+    parts_pool: Vec<Vec<CVec>>,
+}
+
+fn pool_take<T>(pool: &mut Vec<Vec<T>>, want: usize) -> Vec<T> {
+    let mut best: Option<(usize, usize)> = None; // fits `want`: (index, capacity)
+    let mut smallest: Option<(usize, usize)> = None;
+    for (i, v) in pool.iter().enumerate() {
+        let c = v.capacity();
+        if c >= want && best.map_or(true, |(_, bc)| c < bc) {
+            best = Some((i, c));
+        }
+        if smallest.map_or(true, |(_, sc)| c < sc) {
+            smallest = Some((i, c));
+        }
+    }
+    match best.or(smallest) {
+        Some((i, _)) => {
+            let mut v = pool.swap_remove(i);
+            v.clear();
+            v
+        }
+        None => Vec::with_capacity(want),
+    }
+}
+
+impl MechScratch {
+    pub fn new() -> MechScratch {
+        MechScratch::default()
+    }
+
+    /// An empty f32 buffer with capacity at least `cap` when the pool
+    /// can provide one.
+    pub fn take_f32(&mut self, cap: usize) -> Vec<f32> {
+        pool_take(&mut self.f32_pool, cap)
+    }
+
+    /// A zero-filled f32 buffer of length `len`.
+    pub fn take_f32_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.f32_pool.push(v);
+        }
+    }
+
+    pub fn take_u32(&mut self, cap: usize) -> Vec<u32> {
+        pool_take(&mut self.u32_pool, cap)
+    }
+
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        if v.capacity() > 0 {
+            self.u32_pool.push(v);
+        }
+    }
+
+    /// An empty container for a `Replace` wire decomposition.
+    pub fn take_parts(&mut self) -> Vec<CVec> {
+        self.parts_pool.pop().unwrap_or_default()
+    }
+
+    /// Salvage a decomposition: every part's buffers plus the container.
+    pub fn put_parts(&mut self, mut parts: Vec<CVec>) {
+        for c in parts.drain(..) {
+            self.reclaim_cvec(c);
+        }
+        if parts.capacity() > 0 {
+            self.parts_pool.push(parts);
+        }
+    }
+
+    /// Salvage a spent compressed vector's heap buffers.
+    pub fn reclaim_cvec(&mut self, c: CVec) {
+        match c {
+            CVec::Zero { .. } => {}
+            CVec::Dense(v) => self.put_f32(v),
+            CVec::Sparse { idx, val, .. } => {
+                self.put_u32(idx);
+                self.put_f32(val);
+            }
+        }
+    }
+}
+
 /// Per-call compression context: worker-private randomness plus
 /// round-shared randomness (identical across all workers within a round —
-/// Perm-K's permutation and MARINA's coin are *shared* draws).
+/// Perm-K's permutation and MARINA's coin are *shared* draws), plus an
+/// optional [`MechScratch`] buffer pool for the allocation-free hot path
+/// (`take_*`/`put_*` fall back to plain allocation when no pool is
+/// attached, so compressors are written once against this interface).
 pub struct Ctx<'a> {
     pub info: CtxInfo,
     /// Worker-private stream (independent across workers).
@@ -58,16 +164,93 @@ pub struct Ctx<'a> {
     /// Round-shared seed; compressors needing shared randomness spawn a
     /// deterministic stream from it so every worker draws the same values.
     pub round_seed: u64,
+    scratch: Option<&'a mut MechScratch>,
 }
 
 impl<'a> Ctx<'a> {
     pub fn new(info: CtxInfo, rng: &'a mut Pcg64, round_seed: u64) -> Ctx<'a> {
-        Ctx { info, rng, round_seed }
+        Ctx { info, rng, round_seed, scratch: None }
+    }
+
+    /// [`Ctx::new`] with a buffer pool attached — the steady-state
+    /// zero-allocation path the mechanism wrappers drive.
+    pub fn with_scratch(
+        info: CtxInfo,
+        rng: &'a mut Pcg64,
+        round_seed: u64,
+        scratch: &'a mut MechScratch,
+    ) -> Ctx<'a> {
+        Ctx { info, rng, round_seed, scratch: Some(scratch) }
     }
 
     /// The round-shared RNG stream (same for every worker this round).
     pub fn shared_rng(&self) -> Pcg64 {
         Pcg64::new(self.round_seed, 0x5eed)
+    }
+
+    /// The attached buffer pool, when one is present.
+    pub fn scratch_mut(&mut self) -> Option<&mut MechScratch> {
+        self.scratch.as_deref_mut()
+    }
+
+    /// An empty f32 buffer (pooled when a pool is attached).
+    pub fn take_f32(&mut self, cap: usize) -> Vec<f32> {
+        match self.scratch.as_deref_mut() {
+            Some(s) => s.take_f32(cap),
+            None => Vec::with_capacity(cap),
+        }
+    }
+
+    /// A zero-filled f32 buffer of length `len`.
+    pub fn take_f32_zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.scratch.as_deref_mut() {
+            Some(s) => s.take_f32_zeroed(len),
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A pooled copy of `x` — the dense-payload idiom every compressor
+    /// and dense-`Replace` mechanism shares.
+    pub fn take_f32_copy(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut v = self.take_f32(x.len());
+        v.extend_from_slice(x);
+        v
+    }
+
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if let Some(s) = self.scratch.as_deref_mut() {
+            s.put_f32(v);
+        }
+    }
+
+    pub fn take_u32(&mut self, cap: usize) -> Vec<u32> {
+        match self.scratch.as_deref_mut() {
+            Some(s) => s.take_u32(cap),
+            None => Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        if let Some(s) = self.scratch.as_deref_mut() {
+            s.put_u32(v);
+        }
+    }
+
+    /// An empty container for a `Replace` wire decomposition.
+    pub fn take_parts(&mut self) -> Vec<CVec> {
+        match self.scratch.as_deref_mut() {
+            Some(s) => s.take_parts(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Reset `slot` to an empty vector, salvaging its buffers into the
+    /// pool; compressors call this before overwriting an output slot.
+    pub fn recycle_cvec(&mut self, slot: &mut CVec) {
+        let old = std::mem::replace(slot, CVec::Zero { dim: 0 });
+        if let Some(s) = self.scratch.as_deref_mut() {
+            s.reclaim_cvec(old);
+        }
     }
 }
 
@@ -330,6 +513,19 @@ impl CVec {
     /// Decode one `cvec` frame starting at `buf[*pos..]`, advancing
     /// `*pos` past it.
     pub fn decode(buf: &[u8], pos: &mut usize) -> anyhow::Result<CVec> {
+        let mut pool = MechScratch::default();
+        CVec::decode_pooled(buf, pos, &mut pool)
+    }
+
+    /// [`CVec::decode`] drawing its output buffers from a
+    /// [`MechScratch`] pool — the per-link decode path of the `Framed`
+    /// transport, which reclaims the previous frame's buffers into the
+    /// same pool so steady-state decoding does not allocate.
+    pub fn decode_pooled(
+        buf: &[u8],
+        pos: &mut usize,
+        pool: &mut MechScratch,
+    ) -> anyhow::Result<CVec> {
         let tag = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("cvec: truncated tag"))?;
         *pos += 1;
         let dim = read_u32(buf, pos)? as usize;
@@ -343,7 +539,7 @@ impl CVec {
                     buf.len() - *pos >= 4 * dim,
                     "cvec: truncated dense body (dim {dim})"
                 );
-                let mut v = Vec::with_capacity(dim);
+                let mut v = pool.take_f32(dim);
                 for _ in 0..dim {
                     v.push(read_f32(buf, pos)?);
                 }
@@ -361,7 +557,7 @@ impl CVec {
                         >= 4 * nnz + crate::util::bits::bytes_for_bits(nnz as u64 * index_bits(dim)),
                     "cvec: truncated sparse body (nnz {nnz})"
                 );
-                let mut val = Vec::with_capacity(nnz);
+                let mut val = pool.take_f32(nnz);
                 for _ in 0..nnz {
                     val.push(read_f32(buf, pos)?);
                 }
@@ -369,7 +565,7 @@ impl CVec {
                 let packed = crate::util::bits::bytes_for_bits(nnz as u64 * ib as u64);
                 anyhow::ensure!(*pos + packed <= buf.len(), "cvec: truncated index block");
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
-                let mut idx = Vec::with_capacity(nnz);
+                let mut idx = pool.take_u32(nnz);
                 for _ in 0..nnz {
                     let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
                     anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
@@ -386,7 +582,7 @@ impl CVec {
                     "cvec: truncated natural dense body (dim {dim})"
                 );
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
-                let mut v = Vec::with_capacity(dim);
+                let mut v = pool.take_f32(dim);
                 for _ in 0..dim {
                     let code = r
                         .pull(9)
@@ -408,7 +604,7 @@ impl CVec {
                     "cvec: truncated natural sparse body (nnz {nnz})"
                 );
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + vbytes]);
-                let mut val = Vec::with_capacity(nnz);
+                let mut val = pool.take_f32(nnz);
                 for _ in 0..nnz {
                     let code = r
                         .pull(9)
@@ -417,7 +613,7 @@ impl CVec {
                 }
                 *pos += vbytes;
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + ibytes]);
-                let mut idx = Vec::with_capacity(nnz);
+                let mut idx = pool.take_u32(nnz);
                 for _ in 0..nnz {
                     let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
                     anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
@@ -487,19 +683,43 @@ pub fn past_cap_crossover(dim: usize, nnz: usize, value_bits: u64) -> bool {
 }
 
 /// Contractive compressor (Eq. 4).
+///
+/// Implementors provide [`Contractive::compress_into`], the
+/// buffer-reusing form the zero-allocation round pipeline drives;
+/// [`Contractive::compress`] stays available as a default-impl wrapper
+/// so existing callers keep working unchanged.
 pub trait Contractive: Send + Sync {
     fn name(&self) -> String;
     /// The contraction parameter α in `E‖C(x) − x‖² ≤ (1−α)‖x‖²`.
     fn alpha(&self, info: &CtxInfo) -> f64;
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec;
+    /// Compress `x` into `out`, salvaging `out`'s previous buffers (and
+    /// drawing any fresh ones) through `ctx`'s scratch pool. With a pool
+    /// attached this is allocation-free at steady state; without one it
+    /// degrades to the classic allocating behaviour.
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec);
+    /// Allocating convenience wrapper over
+    /// [`Contractive::compress_into`].
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let mut out = CVec::Zero { dim: x.len() };
+        self.compress_into(x, ctx, &mut out);
+        out
+    }
 }
 
-/// Unbiased compressor (Def. A.1).
+/// Unbiased compressor (Def. A.1). Same split as [`Contractive`]:
+/// implement `compress_into`, call either.
 pub trait Unbiased: Send + Sync {
     fn name(&self) -> String;
     /// The variance parameter ω in `E‖Q(x) − x‖² ≤ ω‖x‖²`.
     fn omega(&self, info: &CtxInfo) -> f64;
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec;
+    /// Buffer-reusing compression (see [`Contractive::compress_into`]).
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec);
+    /// Allocating convenience wrapper over [`Unbiased::compress_into`].
+    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+        let mut out = CVec::Zero { dim: x.len() };
+        self.compress_into(x, ctx, &mut out);
+        out
+    }
 }
 
 /// §A.5: any unbiased `Q` scaled by `1/(ω+1)` is contractive with
@@ -515,18 +735,13 @@ impl<Q: Unbiased> Contractive for Scaled<Q> {
         1.0 / (self.0.omega(info) + 1.0)
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
         let s = (1.0 / (self.0.omega(&ctx.info) + 1.0)) as f32;
-        match self.0.compress(x, ctx) {
-            CVec::Zero { dim } => CVec::Zero { dim },
-            CVec::Dense(mut v) => {
-                v.iter_mut().for_each(|t| *t *= s);
-                CVec::Dense(v)
-            }
-            CVec::Sparse { dim, idx, mut val } => {
-                val.iter_mut().for_each(|t| *t *= s);
-                CVec::Sparse { dim, idx, val }
-            }
+        self.0.compress_into(x, ctx, out);
+        match out {
+            CVec::Zero { .. } => {}
+            CVec::Dense(v) => v.iter_mut().for_each(|t| *t *= s),
+            CVec::Sparse { val, .. } => val.iter_mut().for_each(|t| *t *= s),
         }
     }
 }
@@ -758,6 +973,47 @@ mod tests {
         CVec::Dense(vec![1.0, 2.0]).encode(&mut buf);
         buf.truncate(buf.len() - 1);
         assert!(CVec::decode(&buf, &mut 0).is_err());
+    }
+
+    #[test]
+    fn mech_scratch_best_fit_keeps_request_classes_stable() {
+        let mut s = MechScratch::default();
+        let mut big = s.take_f32(100);
+        big.resize(100, 0.0);
+        let mut small = s.take_f32(4);
+        small.resize(4, 0.0);
+        let (bigcap, smallcap) = (big.capacity(), small.capacity());
+        assert!(bigcap >= 100 && smallcap >= 4 && smallcap < 100);
+        s.put_f32(big);
+        s.put_f32(small);
+        // Best fit: the small request must not steal the big buffer.
+        let a = s.take_f32(4);
+        assert_eq!(a.capacity(), smallcap);
+        let b = s.take_f32(100);
+        assert_eq!(b.capacity(), bigcap);
+        assert!(a.is_empty() && b.is_empty(), "taken buffers come back cleared");
+        // Zero-capacity returns are dropped, not pooled.
+        s.put_f32(Vec::new());
+        assert_eq!(s.take_f32(1).capacity(), 1);
+    }
+
+    #[test]
+    fn ctx_scratch_roundtrip_and_fallback() {
+        let mut rng = Pcg64::seed(0);
+        // Without a pool the helpers degrade to plain allocation.
+        let mut ctx = Ctx::new(CtxInfo::single(4), &mut rng, 0);
+        let v = ctx.take_f32_zeroed(4);
+        assert_eq!(v, vec![0.0; 4]);
+        ctx.put_f32(v); // dropped, no panic
+        // With a pool, recycle_cvec salvages the slot's buffers.
+        let mut pool = MechScratch::new();
+        let mut rng2 = Pcg64::seed(0);
+        let mut ctx = Ctx::with_scratch(CtxInfo::single(4), &mut rng2, 0, &mut pool);
+        let mut slot = CVec::Sparse { dim: 4, idx: vec![1, 2], val: vec![1.0, 2.0] };
+        ctx.recycle_cvec(&mut slot);
+        assert_eq!(slot, CVec::Zero { dim: 0 });
+        assert_eq!(ctx.take_u32(2).capacity(), 2);
+        assert_eq!(ctx.take_f32(2).capacity(), 2);
     }
 
     #[test]

@@ -21,23 +21,23 @@ impl Unbiased for Natural {
         0.125
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
-        let out = x
-            .iter()
-            .map(|&v| {
-                if v == 0.0 || !v.is_finite() {
-                    return v;
-                }
-                let a = v.abs() as f64;
-                let lo = 2f64.powi(a.log2().floor() as i32);
-                let hi = 2.0 * lo;
-                // P(round up) = (a − lo)/(hi − lo) = (a − lo)/lo.
-                let p_up = (a - lo) / lo;
-                let mag = if ctx.rng.bernoulli(p_up) { hi } else { lo };
-                (mag as f32).copysign(v)
-            })
-            .collect();
-        CVec::Dense(out)
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
+        let mut v = ctx.take_f32(x.len());
+        for &t in x {
+            if t == 0.0 || !t.is_finite() {
+                v.push(t);
+                continue;
+            }
+            let a = t.abs() as f64;
+            let lo = 2f64.powi(a.log2().floor() as i32);
+            let hi = 2.0 * lo;
+            // P(round up) = (a − lo)/(hi − lo) = (a − lo)/lo.
+            let p_up = (a - lo) / lo;
+            let mag = if ctx.rng.bernoulli(p_up) { hi } else { lo };
+            v.push((mag as f32).copysign(t));
+        }
+        *out = CVec::Dense(v);
     }
 }
 

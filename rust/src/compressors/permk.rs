@@ -17,19 +17,33 @@
 use super::{Contractive, Ctx, CtxInfo, CVec, Unbiased};
 
 /// The coordinate block owned by `worker_id` under this round's shared
-/// permutation. Handles `d % n != 0` by distributing the remainder over
-/// the first `d % n` workers (block sizes differ by at most one).
-fn worker_block(ctx: &Ctx<'_>, d: usize) -> Vec<u32> {
+/// permutation, appended to `out`. Handles `d % n != 0` by distributing
+/// the remainder over the first `d % n` workers (block sizes differ by
+/// at most one). The full permutation lives in a pooled scratch buffer;
+/// the Fisher–Yates draws are element-type agnostic, so the u32 shuffle
+/// is draw-for-draw identical to `Pcg64::permutation`.
+fn worker_block_into(ctx: &mut Ctx<'_>, d: usize, out: &mut Vec<u32>) {
     let n = ctx.info.n_workers.max(1);
     let mut shared = ctx.shared_rng();
-    let perm = shared.permutation(d);
+    let mut perm = ctx.take_u32(d);
+    perm.extend(0..d as u32);
+    shared.shuffle(&mut perm);
     let base = d / n;
     let extra = d % n;
     let w = ctx.info.worker_id;
     // Worker w owns [start, start + len) of the permuted coordinates.
     let len = base + usize::from(w < extra);
     let start = w * base + w.min(extra);
-    perm[start..start + len].iter().map(|&i| i as u32).collect()
+    out.extend_from_slice(&perm[start..start + len]);
+    ctx.put_u32(perm);
+}
+
+/// Allocating convenience wrapper over [`worker_block_into`].
+#[cfg(test)]
+fn worker_block(ctx: &mut Ctx<'_>, d: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    worker_block_into(ctx, d, &mut out);
+    out
 }
 
 /// Unbiased Perm-K (values scaled by n).
@@ -46,16 +60,20 @@ impl Unbiased for PermK {
         (info.n_workers.max(1) as f64) - 1.0
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         let d = x.len();
         let n = ctx.info.n_workers.max(1);
         if n == 1 {
-            return CVec::Dense(x.to_vec());
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            return;
         }
-        let idx = worker_block(ctx, d);
+        let mut idx = ctx.take_u32(d / n + 1);
+        worker_block_into(ctx, d, &mut idx);
         let scale = n as f32;
-        let val = idx.iter().map(|&i| x[i as usize] * scale).collect();
-        CVec::Sparse { dim: d, idx, val }
+        let mut val = ctx.take_f32(idx.len());
+        val.extend(idx.iter().map(|&i| x[i as usize] * scale));
+        *out = CVec::Sparse { dim: d, idx, val };
     }
 }
 
@@ -72,15 +90,19 @@ impl Contractive for CPermK {
         1.0 / info.n_workers.max(1) as f64
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         let d = x.len();
         let n = ctx.info.n_workers.max(1);
         if n == 1 {
-            return CVec::Dense(x.to_vec());
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            return;
         }
-        let idx = worker_block(ctx, d);
-        let val = idx.iter().map(|&i| x[i as usize]).collect();
-        CVec::Sparse { dim: d, idx, val }
+        let mut idx = ctx.take_u32(d / n + 1);
+        worker_block_into(ctx, d, &mut idx);
+        let mut val = ctx.take_f32(idx.len());
+        val.extend(idx.iter().map(|&i| x[i as usize]));
+        *out = CVec::Sparse { dim: d, idx, val };
     }
 }
 
@@ -101,8 +123,8 @@ mod tests {
             let mut seen = vec![0usize; d];
             for w in 0..n {
                 let mut rng = Pcg64::new(99, w as u64);
-                let c = ctx(&mut rng, d, n, w, 777);
-                for i in worker_block(&c, d) {
+                let mut c = ctx(&mut rng, d, n, w, 777);
+                for i in worker_block(&mut c, d) {
                     seen[i as usize] += 1;
                 }
             }
@@ -115,10 +137,10 @@ mod tests {
         let d = 16;
         let mut r1 = Pcg64::new(1, 1);
         let mut r2 = Pcg64::new(2, 2); // different private rngs
-        let b0 = worker_block(&ctx(&mut r1, d, 4, 0, 42), d);
-        let b0_again = worker_block(&ctx(&mut r2, d, 4, 0, 42), d);
+        let b0 = worker_block(&mut ctx(&mut r1, d, 4, 0, 42), d);
+        let b0_again = worker_block(&mut ctx(&mut r2, d, 4, 0, 42), d);
         assert_eq!(b0, b0_again, "same round seed → same block");
-        let b0_next = worker_block(&ctx(&mut r1, d, 4, 0, 43), d);
+        let b0_next = worker_block(&mut ctx(&mut r1, d, 4, 0, 43), d);
         assert_ne!(b0, b0_next, "different round → different permutation (w.h.p.)");
     }
 

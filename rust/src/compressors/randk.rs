@@ -30,16 +30,23 @@ impl Unbiased for RandK {
         info.dim as f64 / k - 1.0
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         let d = x.len();
         let k = self.k.min(d);
         if k == d {
-            return CVec::Dense(x.to_vec());
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            return;
         }
         let scale = (d as f64 / k as f64) as f32;
-        let idx: Vec<u32> = ctx.rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
-        let val = idx.iter().map(|&i| x[i as usize] * scale).collect();
-        CVec::Sparse { dim: d, idx, val }
+        // The index draw itself still allocates (Floyd sampling); the
+        // wire buffers are pooled.
+        let picks = ctx.rng.sample_indices(d, k);
+        let mut idx = ctx.take_u32(k);
+        idx.extend(picks.iter().map(|&i| i as u32));
+        let mut val = ctx.take_f32(k);
+        val.extend(idx.iter().map(|&i| x[i as usize] * scale));
+        *out = CVec::Sparse { dim: d, idx, val };
     }
 }
 
@@ -65,15 +72,20 @@ impl Contractive for CRandK {
         (self.k.min(info.dim) as f64) / info.dim as f64
     }
 
-    fn compress(&self, x: &[f32], ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         let d = x.len();
         let k = self.k.min(d);
         if k == d {
-            return CVec::Dense(x.to_vec());
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            return;
         }
-        let idx: Vec<u32> = ctx.rng.sample_indices(d, k).into_iter().map(|i| i as u32).collect();
-        let val = idx.iter().map(|&i| x[i as usize]).collect();
-        CVec::Sparse { dim: d, idx, val }
+        let picks = ctx.rng.sample_indices(d, k);
+        let mut idx = ctx.take_u32(k);
+        idx.extend(picks.iter().map(|&i| i as u32));
+        let mut val = ctx.take_f32(k);
+        val.extend(idx.iter().map(|&i| x[i as usize]));
+        *out = CVec::Sparse { dim: d, idx, val };
     }
 }
 

@@ -23,14 +23,18 @@ impl Contractive for SignL1 {
         1.0 / info.dim as f64
     }
 
-    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
         let d = x.len();
         let l1: f64 = x.iter().map(|v| v.abs() as f64).sum();
         if l1 == 0.0 {
-            return CVec::Zero { dim: d };
+            *out = CVec::Zero { dim: d };
+            return;
         }
         let mag = (l1 / d as f64) as f32;
-        CVec::Dense(x.iter().map(|&v| if v >= 0.0 { mag } else { -mag }).collect())
+        let mut v = ctx.take_f32(d);
+        v.extend(x.iter().map(|&t| if t >= 0.0 { mag } else { -mag }));
+        *out = CVec::Dense(v);
     }
 }
 

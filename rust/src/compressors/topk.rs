@@ -23,19 +23,25 @@ impl TopK {
     pub fn select(&self, x: &[f32]) -> Vec<u32> {
         let d = x.len();
         let k = self.k.min(d);
-        if k == d {
-            return (0..d as u32).collect();
-        }
         let mut idx: Vec<u32> = (0..d as u32).collect();
-        // Partition so the first k positions hold the largest magnitudes.
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            let ma = x[a as usize].abs();
-            let mb = x[b as usize].abs();
-            mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        if k < d {
+            partition_top_k(x, &mut idx, k);
+        }
         idx.truncate(k);
         idx
     }
+}
+
+/// Partition `idx` so its first `k` positions hold the largest-|x|
+/// coordinates. The magnitude comparator is `f32::total_cmp` — a total
+/// order even for NaN inputs (NaN sorts above every finite magnitude, so
+/// poisoned coordinates surface deterministically in the kept set
+/// instead of silently corrupting the introselect partition, which the
+/// `partial_cmp(..).unwrap_or(Equal)` comparator it replaces could do).
+fn partition_top_k(x: &[f32], idx: &mut [u32], k: usize) {
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize].abs().total_cmp(&x[a as usize].abs())
+    });
 }
 
 impl Contractive for TopK {
@@ -47,13 +53,23 @@ impl Contractive for TopK {
         (self.k.min(info.dim) as f64) / info.dim as f64
     }
 
-    fn compress(&self, x: &[f32], _ctx: &mut Ctx<'_>) -> CVec {
-        let idx = self.select(x);
-        if idx.len() == x.len() {
-            return CVec::Dense(x.to_vec());
+    fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
+        ctx.recycle_cvec(out);
+        let d = x.len();
+        let k = self.k.min(d);
+        if k == d {
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            return;
         }
-        let val = idx.iter().map(|&i| x[i as usize]).collect();
-        CVec::Sparse { dim: x.len(), idx, val }
+        // Selection runs in a pooled index buffer; the partitioned
+        // prefix *is* the sparse index vector, so no copy either.
+        let mut idx = ctx.take_u32(d);
+        idx.extend(0..d as u32);
+        partition_top_k(x, &mut idx, k);
+        idx.truncate(k);
+        let mut val = ctx.take_f32(k);
+        val.extend(idx.iter().map(|&i| x[i as usize]));
+        *out = CVec::Sparse { dim: d, idx, val };
     }
 }
 
@@ -106,6 +122,42 @@ mod tests {
     fn ties_still_pick_k() {
         let x = [1.0f32; 6];
         assert_eq!(compress(4, &x).nnz(), 4);
+    }
+
+    /// Regression: NaN inputs must not corrupt the introselect partition.
+    /// `total_cmp` gives a total order with NaN above every finite
+    /// magnitude, so the NaN coordinate is deterministically *kept* and
+    /// the remaining slots still hold the true largest magnitudes.
+    #[test]
+    fn nan_input_selects_deterministically() {
+        let mut x = vec![0.0f32; 64];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i * 37) % 13) as f32 - 6.0;
+        }
+        x[17] = f32::NAN;
+        x[3] = -50.0; // the unique largest finite magnitude
+        let out = compress(4, &x);
+        assert_eq!(out.nnz(), 4, "partition must still yield exactly k entries");
+        let idx = match &out {
+            CVec::Sparse { idx, .. } => idx.clone(),
+            other => panic!("expected sparse, got {other:?}"),
+        };
+        assert!(idx.contains(&17), "NaN magnitude sorts above all finite entries");
+        assert!(idx.contains(&3), "true top entries survive alongside the NaN");
+        // Deterministic across calls (a broken partial_cmp partition was
+        // order-dependent).
+        let again = compress(4, &x);
+        let idx2 = match &again {
+            CVec::Sparse { idx, .. } => idx.clone(),
+            other => panic!("expected sparse, got {other:?}"),
+        };
+        assert_eq!(idx, idx2);
+        // And the selection helper agrees with the compressor.
+        let mut sel = TopK::new(4).select(&x);
+        let mut sorted = idx;
+        sel.sort_unstable();
+        sorted.sort_unstable();
+        assert_eq!(sel, sorted);
     }
 
     /// Property: Top-K is the *best* K-sparse approximation, so the

@@ -58,13 +58,14 @@ pub use observer::{
 #[allow(deprecated)]
 pub use orchestrator::train;
 pub use protocol::{
-    decode_mech_switch, decode_uplink, encode_mech_switch, encode_uplink, encode_uplink_with,
-    DownlinkStat, MechSwitch, UplinkMsg, WireMsg, WireUpdate,
+    decode_mech_switch, decode_uplink, decode_uplink_into, encode_mech_switch, encode_uplink,
+    encode_uplink_into, encode_uplink_with, DownlinkStat, MechSwitch, UplinkMsg, WireMsg,
+    WireUpdate,
 };
 pub use server::Server;
 pub use session::{SessionBuilder, TrainConfig, TrainSession};
 pub use transport::{Framed, InProcess, RoundAggregate, Transport, TransportLink};
-pub use worker::WorkerState;
+pub use worker::{RoundOutcome, WorkerState};
 
 /// A checkpointed optimizer state reorganised for session construction:
 /// `worker_g[id]` is worker `id`'s `g_i`, `g_sum` the leader's f64

@@ -22,7 +22,7 @@
 //!   tag 4 (Replace/FromPrev) body = nparts:u8  cvec*
 //! ```
 
-use crate::compressors::{CVec, WireValueCoding};
+use crate::compressors::{CVec, MechScratch, WireValueCoding};
 use crate::mechanisms::{update_bits, ReplaceWire, Update};
 use anyhow::{bail, ensure, Result};
 
@@ -78,13 +78,28 @@ pub fn encode_uplink(msg: &UplinkMsg) -> Vec<u8> {
 /// a value is not a signed power of two).
 pub fn encode_uplink_with(msg: &UplinkMsg, coding: WireValueCoding) -> Vec<u8> {
     let mut out = Vec::with_capacity(MSG_HEADER_BYTES + 16);
-    out.extend_from_slice(&(msg.worker_id as u32).to_le_bytes());
-    out.extend_from_slice(&msg.g_err.to_le_bytes());
-    match &msg.update {
+    encode_uplink_into(msg.worker_id, msg.g_err, &msg.update, coding, &mut out);
+    out
+}
+
+/// The buffer-reusing form of [`encode_uplink_with`]: appends the frame
+/// to `out`, which a serializing transport keeps as a persistent
+/// per-link scratch buffer (clear + reuse per frame) so steady-state
+/// encoding allocates nothing.
+pub fn encode_uplink_into(
+    worker_id: usize,
+    g_err: f64,
+    update: &Update,
+    coding: WireValueCoding,
+    out: &mut Vec<u8>,
+) {
+    out.extend_from_slice(&(worker_id as u32).to_le_bytes());
+    out.extend_from_slice(&g_err.to_le_bytes());
+    match update {
         Update::Keep => out.push(0),
         Update::Increment { inc, .. } => {
             out.push(1);
-            inc.encode_with(coding, &mut out);
+            inc.encode_with(coding, out);
         }
         Update::Replace { g, wire, .. } => match wire {
             ReplaceWire::Dense => {
@@ -96,15 +111,14 @@ pub fn encode_uplink_with(msg: &UplinkMsg, coding: WireValueCoding) -> Vec<u8> {
             }
             ReplaceWire::Fresh(parts) => {
                 out.push(3);
-                encode_parts(parts, coding, &mut out);
+                encode_parts(parts, coding, out);
             }
             ReplaceWire::FromPrev(parts) => {
                 out.push(4);
-                encode_parts(parts, coding, &mut out);
+                encode_parts(parts, coding, out);
             }
         },
     }
-    out
 }
 
 fn encode_parts(parts: &[CVec], coding: WireValueCoding, out: &mut Vec<u8>) {
@@ -158,27 +172,34 @@ impl WireUpdate {
     /// The worker state `g_i^{t+1}` this message encodes, given the
     /// receiver's mirror `h = g_i^t`.
     pub fn new_state(&self, h: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.new_state_into(h, &mut out);
+        out
+    }
+
+    /// [`WireUpdate::new_state`] into a caller-provided buffer
+    /// (cleared and rewritten), so receivers can reuse one buffer
+    /// across frames. Same f32 operation order as the sender's advance.
+    pub fn new_state_into(&self, h: &[f32], out: &mut Vec<f32>) {
+        out.clear();
         match self {
-            WireUpdate::Keep => h.to_vec(),
+            WireUpdate::Keep => out.extend_from_slice(h),
             WireUpdate::Increment(inc) => {
-                let mut g = h.to_vec();
-                inc.add_into(&mut g);
-                g
+                out.extend_from_slice(h);
+                inc.add_into(out);
             }
-            WireUpdate::ReplaceDense(g) => g.clone(),
+            WireUpdate::ReplaceDense(g) => out.extend_from_slice(g),
             WireUpdate::ReplaceFresh(parts) => {
-                let mut g = vec![0.0f32; h.len()];
+                out.resize(h.len(), 0.0);
                 for p in parts {
-                    p.add_into(&mut g);
+                    p.add_into(out);
                 }
-                g
             }
             WireUpdate::ReplaceFromPrev(parts) => {
-                let mut g = h.to_vec();
+                out.extend_from_slice(h);
                 for p in parts {
-                    p.add_into(&mut g);
+                    p.add_into(out);
                 }
-                g
             }
         }
     }
@@ -187,17 +208,35 @@ impl WireUpdate {
     /// into an f64 accumulator (the aggregation path), given the
     /// receiver's mirror `h = g_i^t`.
     pub fn fold_delta(&self, h: &[f32], delta: &mut [f64]) {
+        let mut state_buf = Vec::new();
+        self.fold_delta_scratch(h, delta, &mut state_buf);
+    }
+
+    /// [`WireUpdate::fold_delta`] with a caller-provided scratch buffer
+    /// for the `Replace` state reconstruction, so a per-link buffer can
+    /// be reused across frames. The reconstruction goes through the
+    /// same f32 operation order as the sender's own advance, so the
+    /// leader's mirror tracks the workers bit-for-bit either way.
+    pub fn fold_delta_scratch(&self, h: &[f32], delta: &mut [f64], state_buf: &mut Vec<f32>) {
         match self {
             WireUpdate::Keep => {}
             WireUpdate::Increment(inc) => add_cvec_f64(inc, delta),
-            // Replace deltas go through the reconstructed f32 state
-            // (same operation order as the sender) so the leader's
-            // mirror tracks the workers exactly like the in-process
-            // path does.
             WireUpdate::ReplaceDense(g) => fold_replace_delta(g, h, delta),
-            WireUpdate::ReplaceFresh(_) | WireUpdate::ReplaceFromPrev(_) => {
-                let g = self.new_state(h);
-                fold_replace_delta(&g, h, delta);
+            WireUpdate::ReplaceFresh(parts) => {
+                state_buf.clear();
+                state_buf.resize(h.len(), 0.0);
+                for p in parts {
+                    p.add_into(state_buf);
+                }
+                fold_replace_delta(state_buf, h, delta);
+            }
+            WireUpdate::ReplaceFromPrev(parts) => {
+                state_buf.clear();
+                state_buf.extend_from_slice(h);
+                for p in parts {
+                    p.add_into(state_buf);
+                }
+                fold_replace_delta(state_buf, h, delta);
             }
         }
     }
@@ -229,19 +268,44 @@ fn add_cvec_f64(c: &CVec, acc: &mut [f64]) {
 /// Decode one uplink frame (the exact inverse of [`encode_uplink`];
 /// rejects trailing bytes).
 pub fn decode_uplink(buf: &[u8]) -> Result<WireMsg> {
+    let mut slot = WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep };
+    let mut pool = MechScratch::default();
+    decode_uplink_into(buf, &mut slot, &mut pool)?;
+    Ok(slot)
+}
+
+/// Salvage a spent decoded update's heap buffers into the pool.
+fn reclaim_wire(pool: &mut MechScratch, u: WireUpdate) {
+    match u {
+        WireUpdate::Keep => {}
+        WireUpdate::Increment(c) => pool.reclaim_cvec(c),
+        WireUpdate::ReplaceDense(g) => pool.put_f32(g),
+        WireUpdate::ReplaceFresh(parts) | WireUpdate::ReplaceFromPrev(parts) => {
+            pool.put_parts(parts)
+        }
+    }
+}
+
+/// The buffer-reusing form of [`decode_uplink`]: the previous frame's
+/// buffers in `slot` are salvaged into `pool` and the fresh decode
+/// draws from it, so a link decoding frame after frame allocates
+/// nothing at steady state. On error the slot is left in a valid but
+/// unspecified state (its previous contents already reclaimed).
+pub fn decode_uplink_into(buf: &[u8], slot: &mut WireMsg, pool: &mut MechScratch) -> Result<()> {
     use crate::compressors::{read_f32, read_f64, read_u32};
+    reclaim_wire(pool, std::mem::replace(&mut slot.update, WireUpdate::Keep));
     let mut pos = 0usize;
-    let worker_id = read_u32(buf, &mut pos)? as usize;
-    let g_err = read_f64(buf, &mut pos)?;
+    slot.worker_id = read_u32(buf, &mut pos)? as usize;
+    slot.g_err = read_f64(buf, &mut pos)?;
     let tag = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("uplink: truncated tag"))?;
     pos += 1;
-    let update = match tag {
+    slot.update = match tag {
         0 => WireUpdate::Keep,
-        1 => WireUpdate::Increment(CVec::decode(buf, &mut pos)?),
+        1 => WireUpdate::Increment(CVec::decode_pooled(buf, &mut pos, pool)?),
         2 => {
             let dim = read_u32(buf, &mut pos)? as usize;
             ensure!(buf.len() - pos >= 4 * dim, "uplink: truncated dense state");
-            let mut g = Vec::with_capacity(dim);
+            let mut g = pool.take_f32(dim);
             for _ in 0..dim {
                 g.push(read_f32(buf, &mut pos)?);
             }
@@ -250,9 +314,9 @@ pub fn decode_uplink(buf: &[u8]) -> Result<WireMsg> {
         3 | 4 => {
             let n = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("uplink: truncated part count"))?;
             pos += 1;
-            let mut parts = Vec::with_capacity(n as usize);
+            let mut parts = pool.take_parts();
             for _ in 0..n {
-                parts.push(CVec::decode(buf, &mut pos)?);
+                parts.push(CVec::decode_pooled(buf, &mut pos, pool)?);
             }
             if tag == 3 {
                 WireUpdate::ReplaceFresh(parts)
@@ -263,7 +327,7 @@ pub fn decode_uplink(buf: &[u8]) -> Result<WireMsg> {
         other => bail!("uplink: unknown update tag {other}"),
     };
     ensure!(pos == buf.len(), "uplink: {} trailing bytes", buf.len() - pos);
-    Ok(WireMsg { worker_id, g_err, update })
+    Ok(())
 }
 
 /// Exact framing bytes [`encode_uplink`] spends beyond the bit-level

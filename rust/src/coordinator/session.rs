@@ -34,7 +34,7 @@ use super::observer::{
 };
 use super::protocol::{encode_mech_switch, MechSwitch};
 use super::server::Server;
-use super::transport::{InProcess, Transport};
+use super::transport::{InProcess, RoundAggregate, Transport};
 use super::worker::WorkerState;
 use super::{InitPolicy, ResumeState};
 use crate::mechanisms::schedule::{MechanismSchedule, RoundTelemetry, Static};
@@ -308,6 +308,9 @@ impl<'a> TrainSession<'a> {
             stops.push(Box::new(TimeLimitStop { limit }));
         }
 
+        // One aggregate lives for the whole session: the O(d) fold
+        // vectors are reset and reused by the transport every round.
+        let mut agg = RoundAggregate::new(d, n);
         let mut records: Vec<RoundRecord> = Vec::new();
         let mut converged = false;
         let mut diverged = false;
@@ -342,7 +345,7 @@ impl<'a> TrainSession<'a> {
             // x^{t+1} = x^t − γ g^t; broadcast (bills downlink).
             server.step(cfg.gamma);
             let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
-            let agg = link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss);
+            link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss, &mut agg);
 
             server.fold_delta(&agg.delta_sum);
             for &(wid, b) in &agg.bits {

@@ -21,17 +21,23 @@
 //!   encoded bytes. The codec tests pin measured bytes to the declared
 //!   accounting.
 
-use super::protocol::{decode_mech_switch, decode_uplink, encode_uplink_with};
+use super::protocol::{
+    decode_mech_switch, decode_uplink_into, encode_uplink_into, WireMsg, WireUpdate,
+};
 use super::session::TrainConfig;
 use super::worker::WorkerState;
-use crate::compressors::WireValueCoding;
+use crate::compressors::{MechScratch, WireValueCoding};
 use crate::mechanisms::ThreePointMap;
 use crate::util::linalg;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 /// What one round produced, aggregated over all workers: the f64 fold
-/// inputs for the server plus the accounting and diagnostics.
+/// inputs for the server plus the accounting and diagnostics. The same
+/// shape serves as the per-thread partial report inside [`InProcess`]
+/// (recycled link → thread → link across rounds) and as the
+/// session-level out-parameter of [`TransportLink::round`].
+#[derive(Default)]
 pub struct RoundAggregate {
     /// Σ over workers of `g_i^{t+1} − g_i^t` (f64).
     pub delta_sum: Vec<f64>,
@@ -48,7 +54,11 @@ pub struct RoundAggregate {
 }
 
 impl RoundAggregate {
-    fn zeros(d: usize, n: usize) -> RoundAggregate {
+    /// An empty aggregate sized for a `(d, n)` session. The session
+    /// keeps one of these alive across rounds and hands it to
+    /// [`TransportLink::round`] as an out-parameter, so the O(d) fold
+    /// vectors are reused instead of reallocated every round.
+    pub fn new(d: usize, n: usize) -> RoundAggregate {
         RoundAggregate {
             delta_sum: vec![0.0; d],
             grad_sum: vec![0.0; d],
@@ -57,6 +67,19 @@ impl RoundAggregate {
             g_err_sum: 0.0,
             loss_sum: 0.0,
         }
+    }
+
+    /// Zero the accumulators for the next round, retaining capacity.
+    pub fn reset(&mut self, d: usize, n: usize) {
+        self.delta_sum.clear();
+        self.delta_sum.resize(d, 0.0);
+        self.grad_sum.clear();
+        self.grad_sum.resize(d, 0.0);
+        self.bits.clear();
+        self.bits.reserve(n);
+        self.skipped = 0;
+        self.g_err_sum = 0.0;
+        self.loss_sum = 0.0;
     }
 }
 
@@ -78,12 +101,17 @@ pub trait Transport {
 pub trait TransportLink {
     /// One round at the broadcast iterate `x^{t+1}`: every worker
     /// evaluates its gradient, runs its mechanism, and the results are
-    /// aggregated for the leader.
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate;
+    /// aggregated for the leader into `out` (reset by the link; the
+    /// caller keeps the aggregate alive across rounds so its fold
+    /// vectors are recycled instead of reallocated).
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate);
 
     /// Current `(worker_id, g_i)` states — the checkpoint observer's
-    /// source. Involves a full collective, so callers should be
-    /// periodic, not per-round.
+    /// source. This is the *only* place worker state is materialised as
+    /// owned copies: ordinary rounds never `to_vec` the `g_i` mirrors,
+    /// so the copy cost is paid exactly when an observer asks for a
+    /// snapshot (a full collective — callers should be periodic, not
+    /// per-round).
     fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)>;
 
     /// Install `map` as every worker's mechanism before the next round,
@@ -117,7 +145,10 @@ struct RoundTask {
 }
 
 enum Cmd {
-    Round(Arc<RoundTask>),
+    /// Run a round; the optional report is a recycled partial-aggregate
+    /// from a previous round (link → thread → link), so thread partials
+    /// reuse their `delta_sum`/`grad_sum` vectors across rounds.
+    Round(Arc<RoundTask>, Option<RoundAggregate>),
     Snapshot,
     /// Install a new mechanism on every owned worker (no reply; the
     /// per-thread command channel is FIFO, so the swap is applied
@@ -125,18 +156,8 @@ enum Cmd {
     Swap(Arc<dyn ThreePointMap>),
 }
 
-/// Per-thread fan-in report.
-struct ThreadReport {
-    delta_sum: Vec<f64>,
-    grad_sum: Vec<f64>,
-    bits: Vec<(usize, u64)>,
-    skipped: usize,
-    g_err_sum: f64,
-    loss_sum: f64,
-}
-
 enum Reply {
-    Round { slot: usize, report: ThreadReport },
+    Round { slot: usize, report: RoundAggregate },
     Snapshot { slot: usize, gs: Vec<(usize, Vec<f32>)> },
 }
 
@@ -202,7 +223,17 @@ impl Transport for InProcess {
             joins.push(join);
         }
         drop(reply_tx);
-        Box::new(InProcessLink { cmd_txs, reply_rx, joins, dim, n })
+        let report_slots = (0..threads).map(|_| None).collect();
+        Box::new(InProcessLink {
+            cmd_txs,
+            reply_rx,
+            joins,
+            dim,
+            n,
+            x_arc: Arc::new(Vec::new()),
+            spare_reports: Vec::new(),
+            report_slots,
+        })
     }
 }
 
@@ -215,29 +246,22 @@ fn pool_thread(
 ) {
     while let Ok(cmd) = rx.recv() {
         let out = match cmd {
-            Cmd::Round(task) => {
-                let mut delta_sum = vec![0.0f64; dim];
-                let mut grad_sum = vec![0.0f64; dim];
-                let mut bits = Vec::with_capacity(mine.len());
-                let mut skipped = 0usize;
-                let mut g_err_sum = 0.0f64;
-                let mut loss_sum = 0.0f64;
+            Cmd::Round(task, spare) => {
+                let mut rep = spare.unwrap_or_default();
+                rep.reset(dim, mine.len());
                 for w in mine.iter_mut() {
-                    let msg = w.round_acc(&task.x, task.round_seed, &mut delta_sum);
-                    linalg::add_into_f64(&mut grad_sum, w.true_grad());
-                    bits.push((msg.worker_id, msg.bits()));
-                    if msg.skipped() {
-                        skipped += 1;
+                    let o = w.round_acc(&task.x, task.round_seed, &mut rep.delta_sum);
+                    linalg::add_into_f64(&mut rep.grad_sum, w.true_grad());
+                    rep.bits.push((o.worker_id, o.bits));
+                    if o.skipped {
+                        rep.skipped += 1;
                     }
-                    g_err_sum += msg.g_err;
+                    rep.g_err_sum += o.g_err;
                     if task.eval_loss {
-                        loss_sum += w.loss(&task.x);
+                        rep.loss_sum += w.loss(&task.x);
                     }
                 }
-                Reply::Round {
-                    slot,
-                    report: ThreadReport { delta_sum, grad_sum, bits, skipped, g_err_sum, loss_sum },
-                }
+                Reply::Round { slot, report: rep }
             }
             Cmd::Snapshot => Reply::Snapshot {
                 slot,
@@ -262,6 +286,14 @@ struct InProcessLink {
     joins: Vec<std::thread::JoinHandle<()>>,
     dim: usize,
     n: usize,
+    /// Reused broadcast iterate. Every per-round clone of this Arc is
+    /// dropped by fan-in time, so at the next round's start the handle
+    /// is unique again and the buffer is rewritten in place.
+    x_arc: Arc<Vec<f32>>,
+    /// Thread partials recycled link → thread → link across rounds.
+    spare_reports: Vec<RoundAggregate>,
+    /// Per-slot landing area for fan-in (reused across rounds).
+    report_slots: Vec<Option<RoundAggregate>>,
 }
 
 impl InProcessLink {
@@ -273,32 +305,46 @@ impl InProcessLink {
 }
 
 impl TransportLink for InProcessLink {
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate {
-        let task = Arc::new(RoundTask { x: Arc::new(x.to_vec()), round_seed, eval_loss });
-        self.broadcast(|| Cmd::Round(task.clone()));
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate) {
+        if let Some(buf) = Arc::get_mut(&mut self.x_arc) {
+            buf.clear();
+            buf.extend_from_slice(x);
+        } else {
+            // Defensive: somebody kept a handle alive; fall back to a
+            // fresh buffer rather than blocking.
+            self.x_arc = Arc::new(x.to_vec());
+        }
+        let task = Arc::new(RoundTask { x: Arc::clone(&self.x_arc), round_seed, eval_loss });
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Round(task.clone(), self.spare_reports.pop()))
+                .expect("transport worker thread died");
+        }
+        drop(task);
         // Collect one report per thread, then fold in slot order so the
         // f64 accumulation is reproducible regardless of arrival order.
-        let mut reports: Vec<Option<ThreadReport>> = (0..self.cmd_txs.len()).map(|_| None).collect();
         for _ in 0..self.cmd_txs.len() {
             match self.reply_rx.recv().expect("transport worker thread died") {
-                Reply::Round { slot, report } => reports[slot] = Some(report),
+                Reply::Round { slot, report } => self.report_slots[slot] = Some(report),
                 Reply::Snapshot { .. } => unreachable!("unsolicited snapshot reply"),
             }
         }
-        let mut agg = RoundAggregate::zeros(self.dim, self.n);
-        for rep in reports.into_iter().map(|r| r.expect("missing thread report")) {
-            for (a, v) in agg.delta_sum.iter_mut().zip(&rep.delta_sum) {
+        out.reset(self.dim, self.n);
+        for slot in self.report_slots.iter_mut() {
+            let rep = slot.take().expect("missing thread report");
+            for (a, v) in out.delta_sum.iter_mut().zip(&rep.delta_sum) {
                 *a += v;
             }
-            for (a, v) in agg.grad_sum.iter_mut().zip(&rep.grad_sum) {
+            for (a, v) in out.grad_sum.iter_mut().zip(&rep.grad_sum) {
                 *a += v;
             }
-            agg.bits.extend(rep.bits);
-            agg.skipped += rep.skipped;
-            agg.g_err_sum += rep.g_err_sum;
-            agg.loss_sum += rep.loss_sum;
+            out.bits.extend_from_slice(&rep.bits);
+            out.skipped += rep.skipped;
+            out.g_err_sum += rep.g_err_sum;
+            out.loss_sum += rep.loss_sum;
+            // Close the recycling loop: this report's O(d) buffers go
+            // back out with the next round's command.
+            self.spare_reports.push(rep);
         }
-        agg
     }
 
     fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
@@ -380,6 +426,12 @@ impl Transport for Framed {
             bytes_up: 0,
             bytes_down: 0,
             coding: self.value_coding,
+            frame_buf: Vec::new(),
+            h_buf: Vec::new(),
+            state_buf: Vec::new(),
+            no_acc: Vec::new(),
+            msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
+            pool: MechScratch::new(),
         })
     }
 }
@@ -390,28 +442,45 @@ struct FramedLink {
     bytes_up: u64,
     bytes_down: u64,
     coding: WireValueCoding,
+    /// Persistent per-link encode scratch (cleared per frame, never
+    /// reallocated at steady state).
+    frame_buf: Vec<u8>,
+    /// The leader's mirror of `g_i^t` for the worker currently being
+    /// decoded — a reused buffer, not a per-round `to_vec` snapshot.
+    h_buf: Vec<f32>,
+    /// Replace-reconstruction scratch for the delta fold.
+    state_buf: Vec<f32>,
+    /// Permanently-empty sink: this link folds deltas from the decoded
+    /// wire content, not from the worker-side accumulation path.
+    no_acc: Vec<f64>,
+    /// Decoded-frame slot; its buffers recycle through `pool`.
+    msg: WireMsg,
+    pool: MechScratch,
 }
 
 impl TransportLink for FramedLink {
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool) -> RoundAggregate {
-        let mut agg = RoundAggregate::zeros(self.dim, self.workers.len());
+    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate) {
+        out.reset(self.dim, self.workers.len());
         for w in self.workers.iter_mut() {
             // The leader's mirror of g_i^t, needed to resolve
-            // Replace-style wire content.
-            let h_before = w.g().to_vec();
-            let msg = w.round(x, round_seed);
-            linalg::add_into_f64(&mut agg.grad_sum, w.true_grad());
+            // Replace-style wire content (copied into the persistent
+            // mirror buffer *before* the worker advances).
+            self.h_buf.clear();
+            self.h_buf.extend_from_slice(w.g());
+            let o = w.round_acc(x, round_seed, &mut self.no_acc);
+            linalg::add_into_f64(&mut out.grad_sum, w.true_grad());
             if eval_loss {
-                agg.loss_sum += w.loss(x);
+                out.loss_sum += w.loss(x);
             }
-            let bytes = encode_uplink_with(&msg, self.coding);
-            self.bytes_up += bytes.len() as u64;
-            let decoded =
-                decode_uplink(&bytes).expect("framed transport produced an undecodable frame");
-            debug_assert_eq!(decoded.worker_id, w.id);
+            self.frame_buf.clear();
+            encode_uplink_into(w.id, o.g_err, w.last_update(), self.coding, &mut self.frame_buf);
+            self.bytes_up += self.frame_buf.len() as u64;
+            decode_uplink_into(&self.frame_buf, &mut self.msg, &mut self.pool)
+                .expect("framed transport produced an undecodable frame");
+            debug_assert_eq!(self.msg.worker_id, w.id);
             // Dimension check before folding: new_state/fold_delta
             // truncate silently on short frames, so reject loudly here.
-            if let Some(frame_dim) = decoded.update.dim() {
+            if let Some(frame_dim) = self.msg.update.dim() {
                 assert_eq!(
                     frame_dim, self.dim,
                     "uplink frame dimension mismatch (worker {})",
@@ -419,25 +488,29 @@ impl TransportLink for FramedLink {
                 );
             }
             // The receiver-side state must match the worker's own
-            // advance bit-for-bit (up to non-finite blowups).
+            // advance bit-for-bit (up to non-finite blowups). Runs in
+            // the persistent reconstruction buffer, so debug builds
+            // (tests included) stay allocation-free too.
             #[cfg(debug_assertions)]
             {
-                let rebuilt = decoded.update.new_state(&h_before);
-                let consistent = rebuilt
+                self.msg.update.new_state_into(&self.h_buf, &mut self.state_buf);
+                let consistent = self
+                    .state_buf
                     .iter()
                     .zip(w.g())
                     .all(|(a, b)| a == b || (!a.is_finite() && !b.is_finite()));
                 debug_assert!(consistent, "codec reconstruction drifted for worker {}", w.id);
             }
-            decoded.update.fold_delta(&h_before, &mut agg.delta_sum);
-            if decoded.update.skipped() {
-                agg.skipped += 1;
+            self.msg
+                .update
+                .fold_delta_scratch(&self.h_buf, &mut out.delta_sum, &mut self.state_buf);
+            if self.msg.update.skipped() {
+                out.skipped += 1;
             }
-            agg.g_err_sum += decoded.g_err;
+            out.g_err_sum += self.msg.g_err;
             // Measured billing: the bytes that actually crossed.
-            agg.bits.push((decoded.worker_id, 8 * bytes.len() as u64));
+            out.bits.push((self.msg.worker_id, 8 * self.frame_buf.len() as u64));
         }
-        agg
     }
 
     fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
@@ -501,7 +574,8 @@ mod tests {
         let cfg = TrainConfig::default();
         let mut link = InProcess::new(2).connect(workers, d, &cfg);
         let x = vec![0.1f32; d];
-        let agg = link.round(&x, 1, false);
+        let mut agg = RoundAggregate::new(d, 5);
+        link.round(&x, 1, false, &mut agg);
         assert_eq!(agg.bits.len(), 5);
         assert_eq!(agg.delta_sum.len(), d);
         let mut ids: Vec<usize> = agg.bits.iter().map(|&(w, _)| w).collect();
@@ -519,7 +593,8 @@ mod tests {
         let cfg = TrainConfig::default();
         let mut link = Framed::default().connect(workers, d, &cfg);
         let x = vec![0.1f32; d];
-        let agg = link.round(&x, 1, false);
+        let mut agg = RoundAggregate::new(d, 4);
+        link.round(&x, 1, false, &mut agg);
         assert_eq!(agg.bits.len(), 4);
         assert!(link.measured_bytes_up() > 0);
         // Measured billing is bytes, so every entry is byte-aligned and
@@ -540,8 +615,10 @@ mod tests {
         let mut a = InProcess::new(2).connect(w1, d, &cfg);
         let mut b = Framed::default().connect(w2, d, &cfg);
         let x = vec![0.05f32; d];
-        a.round(&x, 0, false);
-        b.round(&x, 0, false);
+        let mut ra = RoundAggregate::new(d, 4);
+        let mut rb = RoundAggregate::new(d, 4);
+        a.round(&x, 0, false, &mut ra);
+        b.round(&x, 0, false, &mut rb);
         // Switch every worker to GD mid-run.
         let gd = parse_mechanism("gd").unwrap();
         let frame = encode_mech_switch(&MechSwitch { round: 1, mech: gd.name() });
@@ -553,8 +630,8 @@ mod tests {
         assert_eq!(b.measured_bytes_down(), frame.len() as u64);
         // Post-switch rounds run GD (dense replace), so both transports
         // fold identical deltas and no worker skips.
-        let ra = a.round(&x, 1, false);
-        let rb = b.round(&x, 1, false);
+        a.round(&x, 1, false, &mut ra);
+        b.round(&x, 1, false, &mut rb);
         assert_eq!(ra.skipped, 0);
         assert_eq!(rb.skipped, 0);
         for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
@@ -573,9 +650,11 @@ mod tests {
         let mut a = InProcess::new(1).connect(w1, d, &cfg);
         let mut b = Framed::default().connect(w2, d, &cfg);
         let x = vec![0.05f32; d];
+        let mut ra = RoundAggregate::new(d, 4);
+        let mut rb = RoundAggregate::new(d, 4);
         for t in 0..5u64 {
-            let ra = a.round(&x, t, false);
-            let rb = b.round(&x, t, false);
+            a.round(&x, t, false, &mut ra);
+            b.round(&x, t, false, &mut rb);
             for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
                 assert!((da - db).abs() < 1e-9, "{da} vs {db}");
             }

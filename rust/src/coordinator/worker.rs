@@ -5,10 +5,25 @@
 use super::protocol::UplinkMsg;
 use super::InitPolicy;
 use crate::compressors::{Ctx, CtxInfo};
-use crate::mechanisms::{MechWorker, ThreePointMap};
+use crate::mechanisms::{update_bits, MechWorker, ThreePointMap, Update};
 use crate::problems::LocalProblem;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
+
+/// What the transport needs to know about one worker-round without
+/// taking ownership of the update, which stays in the worker's recycled
+/// slot ([`WorkerState::last_update`]) so its buffers can be salvaged
+/// next round instead of hitting the allocator.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundOutcome {
+    pub worker_id: usize,
+    /// Billed uplink bits: payload + the 1-bit fire/skip frame flag.
+    pub bits: u64,
+    /// Whether the worker skipped (lazy aggregation).
+    pub skipped: bool,
+    /// `‖g_i^{t+1} − ∇f_i(x^{t+1})‖²` — the worker's `G^t` contribution.
+    pub g_err: f64,
+}
 
 pub struct WorkerState {
     pub id: usize,
@@ -77,18 +92,41 @@ impl WorkerState {
     /// One round at the new iterate `x^{t+1}`: compute the local gradient,
     /// run the mechanism, return the uplink message and expose the true
     /// gradient via `true_grad` for the leader's exact `∇f` accounting.
+    /// (Compat wrapper: the zero-allocation hot path is
+    /// [`Self::round_acc`] + [`Self::last_update`], which never clones
+    /// the update out of the recycled slot.)
     pub fn round(&mut self, x_new: &[f32], round_seed: u64) -> UplinkMsg {
         let mut unused = Vec::new();
-        self.round_acc(x_new, round_seed, &mut unused)
+        let out = self.round_acc(x_new, round_seed, &mut unused);
+        UplinkMsg { worker_id: self.id, update: self.mech.last_update().clone(), g_err: out.g_err }
     }
 
-    /// Like [`Self::round`], folding `g_i^{t+1} − g_i^t` into `delta_acc`
-    /// (empty = no accumulation) for the orchestrator's partial sums.
-    pub fn round_acc(&mut self, x_new: &[f32], round_seed: u64, delta_acc: &mut Vec<f64>) -> UplinkMsg {
+    /// Like [`Self::round`], but the update stays in the worker's
+    /// recycled slot ([`Self::last_update`]) and `g_i^{t+1} − g_i^t` is
+    /// folded into `delta_acc` (empty = no accumulation) for the
+    /// transport's partial sums.
+    pub fn round_acc(
+        &mut self,
+        x_new: &[f32],
+        round_seed: u64,
+        delta_acc: &mut Vec<f64>,
+    ) -> RoundOutcome {
         self.problem.grad(x_new, &mut self.grad_buf);
         let mut ctx = Ctx::new(self.info, &mut self.rng, round_seed);
-        let (update, g_err) = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
-        UplinkMsg { worker_id: self.id, update, g_err }
+        let g_err = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
+        let update = self.mech.last_update();
+        RoundOutcome {
+            worker_id: self.id,
+            bits: update_bits(update) + 1,
+            skipped: matches!(update, Update::Keep),
+            g_err,
+        }
+    }
+
+    /// The update produced by the most recent round, borrowed from the
+    /// mechanism wrapper's recycled slot.
+    pub fn last_update(&self) -> &Update {
+        self.mech.last_update()
     }
 
     /// The gradient computed by the last `round()` call.

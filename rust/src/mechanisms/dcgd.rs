@@ -8,8 +8,8 @@
 //! baseline (`params()` returns `None`, so no theoretical stepsize
 //! exists and the harness must be given one explicitly).
 
-use super::{MechParams, ReplaceWire, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
+use super::{recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 
 /// Exact gradient descent: `g_i^{t+1} = ∇f_i(x^{t+1})`, dense wire cost.
 pub struct Gd;
@@ -19,8 +19,10 @@ impl ThreePointMap for Gd {
         "GD".into()
     }
 
-    fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
-        Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64, wire: ReplaceWire::Dense }
+    fn apply_into(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
+        let g = ctx.take_f32_copy(x);
+        *out = Update::Replace { g, bits: 32 * x.len() as u64, wire: ReplaceWire::Dense };
     }
 
     fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
@@ -44,10 +46,16 @@ impl ThreePointMap for NaiveDcgd {
         format!("DCGD({})", self.c.name())
     }
 
-    fn apply(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
-        let msg = self.c.compress(x, ctx);
+    fn apply_into(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
+        let mut msg = CVec::Zero { dim: 0 };
+        self.c.compress_into(x, ctx, &mut msg);
         let bits = msg.wire_bits();
-        Update::Replace { g: msg.to_dense(), bits, wire: ReplaceWire::Fresh(vec![msg]) }
+        let mut g = ctx.take_f32_zeroed(x.len());
+        msg.add_into(&mut g);
+        let mut parts = ctx.take_parts();
+        parts.push(msg);
+        *out = Update::Replace { g, bits, wire: ReplaceWire::Fresh(parts) };
     }
 
     fn params(&self, _info: &CtxInfo) -> Option<MechParams> {

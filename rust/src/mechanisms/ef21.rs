@@ -6,13 +6,8 @@
 //! giving `A = 1 − √(1−α)` and `B = (1−α)/(1−√(1−α))`, hence
 //! `B/A = (1−α)/(1−√(1−α))² ≤ 4(1−α)/α²`.
 
-use super::{MechParams, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
-
-thread_local! {
-    /// Residual scratch shared by every EF21/CLAG apply on this thread.
-    pub(crate) static SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
-}
+use super::{recycle_update, MechParams, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 
 pub struct Ef21 {
     c: Box<dyn Contractive>,
@@ -39,19 +34,21 @@ impl ThreePointMap for Ef21 {
         format!("EF21({})", self.c.name())
     }
 
-    fn apply(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         // residual = x − h; message = C(residual); g_new = h + message.
-        // Perf (§Perf iteration 2): the residual lives in a thread-local
-        // scratch buffer — EF21/CLAG apply is once per worker-round, and
-        // a fresh 100 KB Vec per call showed up in the profile.
-        SCRATCH.with(|s| {
-            let mut residual = s.borrow_mut();
-            residual.resize(x.len(), 0.0);
-            crate::util::linalg::sub(x, h, &mut residual);
-            let inc = self.c.compress(&residual, ctx);
-            let bits = inc.wire_bits();
-            Update::Increment { inc, bits }
-        })
+        // Perf (§Perf iteration 3): the residual and the compressed
+        // message's buffers all come from the worker's scratch pool —
+        // this replaced the earlier thread-local residual hack with the
+        // uniform `apply_into`/`compress_into` mechanism, making the
+        // whole apply allocation-free at steady state.
+        recycle_update(ctx, out);
+        let mut residual = ctx.take_f32_zeroed(x.len());
+        crate::util::linalg::sub(x, h, &mut residual);
+        let mut inc = CVec::Zero { dim: 0 };
+        self.c.compress_into(&residual, ctx, &mut inc);
+        ctx.put_f32(residual);
+        let bits = inc.wire_bits();
+        *out = Update::Increment { inc, bits };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

@@ -13,8 +13,8 @@
 //! worker stays silent (zero payload bits — the essence of lazy
 //! aggregation).
 
-use super::{ef21::Ef21, MechParams, ReplaceWire, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
+use super::{ef21::Ef21, recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 use crate::util::linalg::dist_sq;
 
 /// The shared trigger predicate `‖x − h‖² > ζ‖x − y‖²`.
@@ -39,12 +39,14 @@ impl ThreePointMap for Lag {
         format!("LAG(zeta={})", self.zeta)
     }
 
-    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], _ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         if lag_trigger(h, y, x, self.zeta) {
-            Update::Replace { g: x.to_vec(), bits: 32 * x.len() as u64, wire: ReplaceWire::Dense }
-        } else {
-            Update::Keep
+            let g = ctx.take_f32_copy(x);
+            *out = Update::Replace { g, bits: 32 * x.len() as u64, wire: ReplaceWire::Dense };
         }
+        // Otherwise the slot stays `Keep` — the skip path touches no
+        // heap at all (the essence of lazy aggregation, now literally).
     }
 
     fn params(&self, _info: &CtxInfo) -> Option<MechParams> {
@@ -69,18 +71,18 @@ impl ThreePointMap for Clag {
         format!("CLAG({},zeta={})", self.c.name(), self.zeta)
     }
 
-    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         if !lag_trigger(h, y, x, self.zeta) {
-            return Update::Keep;
+            return; // slot stays `Keep`
         }
-        super::ef21::SCRATCH.with(|s| {
-            let mut residual = s.borrow_mut();
-            residual.resize(x.len(), 0.0);
-            crate::util::linalg::sub(x, h, &mut residual);
-            let inc = self.c.compress(&residual, ctx);
-            let bits = inc.wire_bits();
-            Update::Increment { inc, bits }
-        })
+        let mut residual = ctx.take_f32_zeroed(x.len());
+        crate::util::linalg::sub(x, h, &mut residual);
+        let mut inc = CVec::Zero { dim: 0 };
+        self.c.compress_into(&residual, ctx, &mut inc);
+        ctx.put_f32(residual);
+        let bits = inc.wire_bits();
+        *out = Update::Increment { inc, bits };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

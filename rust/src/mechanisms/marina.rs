@@ -11,8 +11,8 @@
 //!   ‖g^t − ∇f(x^t)‖²`, which inequality (16) covers; per Table 1 it does
 //!   not satisfy the per-worker definition (6)).
 
-use super::{MechParams, ReplaceWire, ThreePointMap, Update};
-use crate::compressors::{Bernoulli, Contractive, Ctx, CtxInfo, Unbiased};
+use super::{recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{Bernoulli, CVec, Contractive, Ctx, CtxInfo, Unbiased};
 
 /// 3PCv5: biased MARINA (Algorithm 9).
 pub struct V5 {
@@ -35,22 +35,23 @@ impl ThreePointMap for V5 {
         format!("3PCv5(p={},{})", self.coin.p, self.c.name())
     }
 
-    fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         if self.coin.flip(ctx) {
             // Full synchronisation round: dense gradient on the wire.
-            return Update::Replace {
-                g: x.to_vec(),
-                bits: 32 * x.len() as u64,
-                wire: ReplaceWire::Dense,
-            };
+            let g = ctx.take_f32_copy(x);
+            *out = Update::Replace { g, bits: 32 * x.len() as u64, wire: ReplaceWire::Dense };
+            return;
         }
         // g = h + C(x − y): compress the *gradient difference*
         // (the increment is relative to h, applied by the wrapper).
-        let mut diff = vec![0.0f32; x.len()];
+        let mut diff = ctx.take_f32_zeroed(x.len());
         crate::util::linalg::sub(x, y, &mut diff);
-        let inc = self.c.compress(&diff, ctx);
+        let mut inc = CVec::Zero { dim: 0 };
+        self.c.compress_into(&diff, ctx, &mut inc);
+        ctx.put_f32(diff);
         let bits = inc.wire_bits();
-        Update::Increment { inc, bits }
+        *out = Update::Increment { inc, bits };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {
@@ -92,19 +93,20 @@ impl ThreePointMap for Marina {
         format!("MARINA(p={},{})", self.coin.p, self.q.name())
     }
 
-    fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         if self.coin.flip(ctx) {
-            return Update::Replace {
-                g: x.to_vec(),
-                bits: 32 * x.len() as u64,
-                wire: ReplaceWire::Dense,
-            };
+            let g = ctx.take_f32_copy(x);
+            *out = Update::Replace { g, bits: 32 * x.len() as u64, wire: ReplaceWire::Dense };
+            return;
         }
-        let mut diff = vec![0.0f32; x.len()];
+        let mut diff = ctx.take_f32_zeroed(x.len());
         crate::util::linalg::sub(x, y, &mut diff);
-        let inc = self.q.compress(&diff, ctx);
+        let mut inc = CVec::Zero { dim: 0 };
+        self.q.compress_into(&diff, ctx, &mut inc);
+        ctx.put_f32(diff);
         let bits = inc.wire_bits();
-        Update::Increment { inc, bits }
+        *out = Update::Increment { inc, bits };
     }
 
     /// Aggregate-level certificate (Lemma D.1): A = p, B = (1−p)ω/n.

@@ -44,7 +44,7 @@ pub use v2::V2;
 pub use v3::V3;
 pub use v4::V4;
 
-use crate::compressors::{CVec, Ctx, CtxInfo};
+use crate::compressors::{CVec, Ctx, CtxInfo, MechScratch};
 use crate::util::linalg;
 
 /// The constants `(A, B)` of inequality (6), per Table 1 (with the
@@ -124,11 +124,28 @@ impl ReplaceWire {
 // transport drives after decoding.
 
 /// A three point compressor: the stateless map of Definition 4.1.
+///
+/// Implementors provide [`ThreePointMap::apply_into`], the
+/// scratch-buffer form driven by [`MechWorker`]'s recycled update slot;
+/// [`ThreePointMap::apply`] stays available as a default-impl wrapper
+/// for callers that want an owned [`Update`].
 pub trait ThreePointMap: Send + Sync {
     fn name(&self) -> String;
 
-    /// Apply `C_{h,y}(x)` and report what crossed the wire.
-    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update;
+    /// Apply `C_{h,y}(x)`, writing what crossed the wire into `out`.
+    /// Callers pass a reclaimed slot (its previous buffers already
+    /// salvaged into `ctx`'s scratch pool via [`recycle_update`]); the
+    /// mechanism draws every diff/residual/state buffer from the pool,
+    /// so with a pool attached a steady-state round allocates nothing.
+    fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update);
+
+    /// Allocating convenience wrapper over
+    /// [`ThreePointMap::apply_into`].
+    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+        let mut out = Update::Keep;
+        self.apply_into(h, y, x, ctx, &mut out);
+        out
+    }
 
     /// The `(A, B)` certificate of inequality (6). `None` for baselines
     /// that are *not* 3PC compressors (naive DCGD).
@@ -139,6 +156,38 @@ pub trait ThreePointMap: Send + Sync {
     /// this is informational).
     fn uses_shared_randomness(&self) -> bool {
         false
+    }
+}
+
+impl MechScratch {
+    /// Salvage every heap buffer of a spent [`Update`] back into the
+    /// pool: the state vector of a `Replace`, each wire part's
+    /// index/value buffers, and the decomposition container itself.
+    pub fn reclaim_update(&mut self, u: Update) {
+        match u {
+            Update::Keep => {}
+            Update::Increment { inc, .. } => self.reclaim_cvec(inc),
+            Update::Replace { g, wire, .. } => {
+                self.put_f32(g);
+                match wire {
+                    ReplaceWire::Dense => {}
+                    ReplaceWire::Fresh(parts) | ReplaceWire::FromPrev(parts) => {
+                        self.put_parts(parts)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reset `slot` to [`Update::Keep`], salvaging its buffers into `ctx`'s
+/// scratch pool (a no-op salvage when no pool is attached). Mechanism
+/// implementations call this before writing a fresh update into a slot
+/// they did not receive pre-reclaimed.
+pub fn recycle_update(ctx: &mut Ctx<'_>, slot: &mut Update) {
+    let old = std::mem::replace(slot, Update::Keep);
+    if let Some(s) = ctx.scratch_mut() {
+        s.reclaim_update(old);
     }
 }
 
@@ -164,13 +213,22 @@ pub fn update_bits(u: &Update) -> u64 {
 }
 
 /// Stateful per-worker wrapper: owns `h = g_i^t` and `y = ∇f_i(x^t)` and
-/// advances them per round (Algorithm 1 lines 6–8).
+/// advances them per round (Algorithm 1 lines 6–8). Also owns the
+/// round's recycled output slot and the [`MechScratch`] buffer pool, so
+/// at steady state [`MechWorker::round_acc`] performs zero heap
+/// allocations for allocation-free mechanisms (EF21/CLAG over Top-K —
+/// pinned by the `alloc_steady` regression test).
 pub struct MechWorker {
     map: std::sync::Arc<dyn ThreePointMap>,
     /// `g_i^t` — the state mirrored by the server through the updates.
     h: Vec<f32>,
     /// `y = ∇f_i(x^t)` — the previous local gradient.
     y: Vec<f32>,
+    /// The current round's update; its buffers are salvaged into
+    /// `scratch` at the start of the next round.
+    update: Update,
+    /// Buffer pool lent to the mechanism + compressors each round.
+    scratch: MechScratch,
 }
 
 impl MechWorker {
@@ -178,11 +236,17 @@ impl MechWorker {
     /// `grad0 = ∇f_i(x^0)`.
     pub fn new(map: std::sync::Arc<dyn ThreePointMap>, g0: Vec<f32>, grad0: Vec<f32>) -> MechWorker {
         assert_eq!(g0.len(), grad0.len());
-        MechWorker { map, h: g0, y: grad0 }
+        MechWorker { map, h: g0, y: grad0, update: Update::Keep, scratch: MechScratch::new() }
     }
 
     pub fn g(&self) -> &[f32] {
         &self.h
+    }
+
+    /// The update produced by the most recent round, borrowed from the
+    /// recycled slot (valid until the next `round`/`round_acc` call).
+    pub fn last_update(&self) -> &Update {
+        &self.update
     }
 
     pub fn map_name(&self) -> String {
@@ -204,26 +268,38 @@ impl MechWorker {
     /// One round: consume `∇f_i(x^{t+1})`, emit the wire update, advance
     /// internal state. Returns `(update, ‖g_i^{t+1} − ∇f_i(x^{t+1})‖²)`;
     /// the second term is this worker's contribution to `G^t` (Eq. 15),
-    /// which the rate-verification experiments track.
+    /// which the rate-verification experiments track. (Compat wrapper:
+    /// the hot path is [`Self::round_acc`] + [`Self::last_update`],
+    /// which never clones the update.)
     pub fn round(&mut self, grad_new: &[f32], ctx: &mut Ctx<'_>) -> (Update, f64) {
         let mut unused = Vec::new();
-        self.round_acc(grad_new, ctx, &mut unused)
+        let gerr = self.round_acc(grad_new, ctx, &mut unused);
+        (self.update.clone(), gerr)
     }
 
-    /// Like [`Self::round`], but additionally folds this worker's delta
-    /// `g_i^{t+1} − g_i^t` into `delta_acc` (the orchestrator's per-thread
-    /// f64 partial sum) without materialising intermediate copies.
-    /// `delta_acc` may be empty (no accumulation) or of length `d`.
+    /// Like [`Self::round`], but the update lands in the recycled slot
+    /// ([`Self::last_update`]) and this worker's delta
+    /// `g_i^{t+1} − g_i^t` is folded into `delta_acc` (the transport's
+    /// per-thread f64 partial sum) without materialising intermediate
+    /// copies. `delta_acc` may be empty (no accumulation) or of length
+    /// `d`. Returns the `G^t` contribution.
     pub fn round_acc(
         &mut self,
         grad_new: &[f32],
         ctx: &mut Ctx<'_>,
         delta_acc: &mut Vec<f64>,
-    ) -> (Update, f64) {
-        let update = self.map.apply(&self.h, &self.y, grad_new, ctx);
+    ) -> f64 {
+        // Salvage last round's buffers, then run the map with the pool
+        // attached — the whole apply is allocation-free at steady state.
+        let prev = std::mem::replace(&mut self.update, Update::Keep);
+        self.scratch.reclaim_update(prev);
+        let mut scratched =
+            Ctx::with_scratch(ctx.info, &mut *ctx.rng, ctx.round_seed, &mut self.scratch);
+        self.map.apply_into(&self.h, &self.y, grad_new, &mut scratched, &mut self.update);
+        drop(scratched);
         if !delta_acc.is_empty() {
             debug_assert_eq!(delta_acc.len(), self.h.len());
-            match &update {
+            match &self.update {
                 Update::Keep => {}
                 Update::Increment { inc, .. } => match inc {
                     CVec::Zero { .. } => {}
@@ -248,14 +324,13 @@ impl MechWorker {
         // Advance h in place (perf: `apply_update` would clone a fresh
         // d-vector per worker-round — ~10 MB/round at n=100, d=25088;
         // see EXPERIMENTS.md §Perf iteration 1).
-        match &update {
+        match &self.update {
             Update::Keep => {}
             Update::Increment { inc, .. } => inc.add_into(&mut self.h),
             Update::Replace { g, .. } => self.h.copy_from_slice(g),
         }
         self.y.copy_from_slice(grad_new);
-        let gerr = linalg::dist_sq(&self.h, grad_new);
-        (update, gerr)
+        linalg::dist_sq(&self.h, grad_new)
     }
 }
 

@@ -10,7 +10,7 @@
 //! bounds what EF21 could achieve with a perfect memory of the previous
 //! gradient. Reproduced in Figure 16.
 
-use super::{MechParams, ReplaceWire, ThreePointMap, Update};
+use super::{recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 
 pub struct V1 {
@@ -28,17 +28,24 @@ impl ThreePointMap for V1 {
         format!("3PCv1({})", self.c.name())
     }
 
-    fn apply(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
-        let mut diff = vec![0.0f32; x.len()];
+    fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
+        let d = x.len();
+        let mut diff = ctx.take_f32_zeroed(d);
         crate::util::linalg::sub(x, y, &mut diff);
-        let comp = self.c.compress(&diff, ctx);
-        let mut g = y.to_vec();
+        let mut comp = CVec::Zero { dim: 0 };
+        self.c.compress_into(&diff, ctx, &mut comp);
+        ctx.put_f32(diff);
+        let mut g = ctx.take_f32_copy(y);
         comp.add_into(&mut g);
         // Wire cost: dense shift y (the server has no copy) + the
         // compressed difference — the paper's d + K floats per node.
-        let bits = 32 * x.len() as u64 + comp.wire_bits();
-        let wire = ReplaceWire::Fresh(vec![CVec::Dense(y.to_vec()), comp]);
-        Update::Replace { g, bits, wire }
+        let bits = 32 * d as u64 + comp.wire_bits();
+        let shift = ctx.take_f32_copy(y);
+        let mut parts = ctx.take_parts();
+        parts.push(CVec::Dense(shift));
+        parts.push(comp);
+        *out = Update::Replace { g, bits, wire: ReplaceWire::Fresh(parts) };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

@@ -9,8 +9,8 @@
 //! `C(x−b)` — both sparse for the sparsifier instantiations of the
 //! experiments (Figures 1/5, 8–13); the bit accountant bills both.
 
-use super::{MechParams, ReplaceWire, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo, Unbiased};
+use super::{recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo, Unbiased};
 
 pub struct V2 {
     q: Box<dyn Unbiased>,
@@ -28,24 +28,34 @@ impl ThreePointMap for V2 {
         format!("3PCv2({},{})", self.q.name(), self.c.name())
     }
 
-    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         let d = x.len();
-        // b = h + Q(x − y)
-        let mut diff = vec![0.0f32; d];
+        // b = h + Q(x − y); the diff buffer is then rebuilt in place
+        // into b (one pooled buffer serves both roles).
+        let mut diff = ctx.take_f32_zeroed(d);
         crate::util::linalg::sub(x, y, &mut diff);
-        let qmsg = self.q.compress(&diff, ctx);
-        let mut b = h.to_vec();
+        let mut qmsg = CVec::Zero { dim: 0 };
+        self.q.compress_into(&diff, ctx, &mut qmsg);
+        let mut b = diff;
+        b.clear();
+        b.extend_from_slice(h);
         qmsg.add_into(&mut b);
         // g = b + C(x − b)
-        let mut residual = vec![0.0f32; d];
+        let mut residual = ctx.take_f32_zeroed(d);
         crate::util::linalg::sub(x, &b, &mut residual);
-        let cmsg = self.c.compress(&residual, ctx);
+        let mut cmsg = CVec::Zero { dim: 0 };
+        self.c.compress_into(&residual, ctx, &mut cmsg);
+        ctx.put_f32(residual);
         let mut g = b;
         cmsg.add_into(&mut g);
         let bits = qmsg.wire_bits() + cmsg.wire_bits();
         // Both compressed messages ARE the wire content: the server
         // rebuilds g = h + Q(x−y) + C(x−b) from its mirror of h.
-        Update::Replace { g, bits, wire: ReplaceWire::FromPrev(vec![qmsg, cmsg]) }
+        let mut parts = ctx.take_parts();
+        parts.push(qmsg);
+        parts.push(cmsg);
+        *out = Update::Replace { g, bits, wire: ReplaceWire::FromPrev(parts) };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

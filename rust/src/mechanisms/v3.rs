@@ -10,7 +10,7 @@
 //! is exactly the paper's formulation; note 3PCv2 is *not* the special
 //! case with `b = h + Q(x−y)` because that `b` is not itself a 3PC map.
 
-use super::{apply_update, update_bits, MechParams, ReplaceWire, ThreePointMap, Update};
+use super::{recycle_update, update_bits, MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 use std::sync::Arc;
 
@@ -30,13 +30,27 @@ impl ThreePointMap for V3 {
         format!("3PCv3({};{})", self.inner.name(), self.c.name())
     }
 
-    fn apply(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
-        let inner_update = self.inner.apply(h, y, x, ctx);
-        let b = apply_update(h, &inner_update);
+    fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
+        let mut inner_update = Update::Keep;
+        self.inner.apply_into(h, y, x, ctx, &mut inner_update);
         let inner_bits = update_bits(&inner_update);
-        let mut residual = vec![0.0f32; x.len()];
+        // b = the inner map's new state, materialised in a pooled buffer
+        // (the in-place equivalent of `apply_update(h, &inner_update)`).
+        let mut b = ctx.take_f32(x.len());
+        match &inner_update {
+            Update::Keep => b.extend_from_slice(h),
+            Update::Increment { inc, .. } => {
+                b.extend_from_slice(h);
+                inc.add_into(&mut b);
+            }
+            Update::Replace { g, .. } => b.extend_from_slice(g),
+        }
+        let mut residual = ctx.take_f32_zeroed(x.len());
         crate::util::linalg::sub(x, &b, &mut residual);
-        let cmsg = self.c.compress(&residual, ctx);
+        let mut cmsg = CVec::Zero { dim: 0 };
+        self.c.compress_into(&residual, ctx, &mut cmsg);
+        ctx.put_f32(residual);
         let bits = inner_bits + cmsg.wire_bits();
         let mut g = b;
         cmsg.add_into(&mut g);
@@ -44,21 +58,37 @@ impl ThreePointMap for V3 {
         // followed by the correction C(x−b), all relative to whatever
         // base the inner content used.
         let wire = match inner_update {
-            Update::Keep => ReplaceWire::FromPrev(vec![cmsg]),
-            Update::Increment { inc, .. } => ReplaceWire::FromPrev(vec![inc, cmsg]),
+            Update::Keep => {
+                let mut parts = ctx.take_parts();
+                parts.push(cmsg);
+                ReplaceWire::FromPrev(parts)
+            }
+            Update::Increment { inc, .. } => {
+                let mut parts = ctx.take_parts();
+                parts.push(inc);
+                parts.push(cmsg);
+                ReplaceWire::FromPrev(parts)
+            }
             Update::Replace { g: bg, wire: inner_wire, .. } => match inner_wire {
-                ReplaceWire::Dense => ReplaceWire::Fresh(vec![CVec::Dense(bg), cmsg]),
+                ReplaceWire::Dense => {
+                    let mut parts = ctx.take_parts();
+                    parts.push(CVec::Dense(bg));
+                    parts.push(cmsg);
+                    ReplaceWire::Fresh(parts)
+                }
                 ReplaceWire::Fresh(mut parts) => {
+                    ctx.put_f32(bg);
                     parts.push(cmsg);
                     ReplaceWire::Fresh(parts)
                 }
                 ReplaceWire::FromPrev(mut parts) => {
+                    ctx.put_f32(bg);
                     parts.push(cmsg);
                     ReplaceWire::FromPrev(parts)
                 }
             },
         };
-        Update::Replace { g, bits, wire }
+        *out = Update::Replace { g, bits, wire };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

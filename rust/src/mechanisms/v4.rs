@@ -10,8 +10,8 @@
 //! Top-K₁/Top-K₂ on the sparse quadratic suite this frequently collapses
 //! to EF21 behaviour (Figures 14–15), which the experiments reproduce.
 
-use super::{ef21::Ef21, MechParams, ReplaceWire, ThreePointMap, Update};
-use crate::compressors::{Contractive, Ctx, CtxInfo};
+use super::{ef21::Ef21, recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
+use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
 
 pub struct V4 {
     /// The inner compressor C₂ (applied to x − h).
@@ -31,21 +31,28 @@ impl ThreePointMap for V4 {
         format!("3PCv4({},{})", self.c2.name(), self.c1.name())
     }
 
-    fn apply(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>) -> Update {
+    fn apply_into(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
+        recycle_update(ctx, out);
         let d = x.len();
-        let mut residual = vec![0.0f32; d];
+        let mut residual = ctx.take_f32_zeroed(d);
         crate::util::linalg::sub(x, h, &mut residual);
-        let m2 = self.c2.compress(&residual, ctx);
-        let mut b = h.to_vec();
+        let mut m2 = CVec::Zero { dim: 0 };
+        self.c2.compress_into(&residual, ctx, &mut m2);
+        let mut b = ctx.take_f32_copy(h);
         m2.add_into(&mut b);
         crate::util::linalg::sub(x, &b, &mut residual);
-        let m1 = self.c1.compress(&residual, ctx);
+        let mut m1 = CVec::Zero { dim: 0 };
+        self.c1.compress_into(&residual, ctx, &mut m1);
+        ctx.put_f32(residual);
         let bits = m2.wire_bits() + m1.wire_bits();
         let mut g = b;
         m1.add_into(&mut g);
         // g = h + C₂(x−h) + C₁(x−b): both messages relative to the
         // server's mirror of h.
-        Update::Replace { g, bits, wire: ReplaceWire::FromPrev(vec![m2, m1]) }
+        let mut parts = ctx.take_parts();
+        parts.push(m2);
+        parts.push(m1);
+        *out = Update::Replace { g, bits, wire: ReplaceWire::FromPrev(parts) };
     }
 
     fn params(&self, info: &CtxInfo) -> Option<MechParams> {

@@ -1,0 +1,198 @@
+//! Steady-state allocation regression tests for the zero-allocation
+//! round pipeline.
+//!
+//! A counting global allocator (thread-local counters, so parallel test
+//! threads don't bleed into each other's measurements) pins the core
+//! perf invariant: once the `MechScratch` buffer pool is warm,
+//! `MechWorker::round_acc` performs **zero** heap allocations for
+//! allocation-free mechanisms — EF21 over Top-K (the paper's flagship)
+//! and the CLAG skip path (lazy aggregation's whole point is that a
+//! skipped round costs nothing, now including allocator traffic).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use threepc::compressors::{Ctx, CtxInfo};
+use threepc::coordinator::{
+    Framed, InitPolicy, RoundAggregate, TrainConfig, Transport, TransportLink, WorkerState,
+};
+use threepc::mechanisms::{parse_mechanism, MechWorker, Update};
+use threepc::problems::quadratic;
+use threepc::util::rng::Pcg64;
+
+/// Counts alloc/realloc events per thread. Dealloc is uncounted (frees
+/// are fine; it's acquisition traffic that fragments and serializes).
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocation events on this thread while `f` runs.
+fn count_allocs<F: FnMut()>(mut f: F) -> u64 {
+    let before = ALLOCS.with(|c| c.get());
+    f();
+    ALLOCS.with(|c| c.get()) - before
+}
+
+/// Drive `rounds` rounds of `worker` over a fixed gradient cycle,
+/// accumulating into `delta` like the transport does.
+fn drive(
+    worker: &mut MechWorker,
+    grads: &[Vec<f32>],
+    rng: &mut Pcg64,
+    info: CtxInfo,
+    delta: &mut Vec<f64>,
+    t0: u64,
+    rounds: u64,
+) {
+    for t in t0..t0 + rounds {
+        let grad = &grads[(t as usize) % grads.len()];
+        let mut ctx = Ctx::new(info, rng, t);
+        worker.round_acc(grad, &mut ctx, delta);
+    }
+}
+
+fn gradient_cycle(d: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut meta = Pcg64::seed(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| meta.normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn ef21_topk_round_acc_is_allocation_free_at_steady_state() {
+    let d = 512;
+    let info = CtxInfo::single(d);
+    let map = parse_mechanism("ef21:top16").unwrap();
+    let grads = gradient_cycle(d, 7, 0xa110c);
+    let mut worker = MechWorker::new(map, vec![0.0f32; d], grads[0].clone());
+    let mut rng = Pcg64::seed(1);
+    let mut delta = vec![0.0f64; d];
+
+    // Warm the scratch pool: the first rounds grow each buffer class to
+    // its steady size.
+    drive(&mut worker, &grads, &mut rng, info, &mut delta, 0, 10);
+
+    let allocs = count_allocs(|| {
+        drive(&mut worker, &grads, &mut rng, info, &mut delta, 10, 25);
+    });
+    assert_eq!(
+        allocs, 0,
+        "EF21(Top-16) steady-state round_acc must not touch the allocator"
+    );
+    // Sanity: the rounds actually produced sparse increments.
+    assert!(matches!(worker.last_update(), Update::Increment { .. }));
+}
+
+#[test]
+fn clag_skip_path_is_allocation_free() {
+    let d = 256;
+    let info = CtxInfo::single(d);
+    // ζ so large the trigger never fires → every round is a Keep.
+    let map = parse_mechanism("clag:top8:1e12").unwrap();
+    let grads = gradient_cycle(d, 5, 0xc1a6);
+    let mut worker = MechWorker::new(map, vec![0.0f32; d], grads[0].clone());
+    let mut rng = Pcg64::seed(2);
+    let mut delta = vec![0.0f64; d];
+
+    drive(&mut worker, &grads, &mut rng, info, &mut delta, 0, 5);
+    assert!(
+        matches!(worker.last_update(), Update::Keep),
+        "huge ζ must put CLAG on the skip path"
+    );
+
+    let allocs = count_allocs(|| {
+        drive(&mut worker, &grads, &mut rng, info, &mut delta, 5, 25);
+    });
+    assert_eq!(allocs, 0, "a skipped CLAG round must cost zero allocations");
+}
+
+/// The `Framed` transport runs its whole round on the calling thread
+/// (encode → decode → fold), so the pooled codec path is pinnable too:
+/// persistent frame buffer, recycled decode slot, reused mirror and
+/// reconstruction buffers. (The `InProcess` link crosses threads, so
+/// its recycling is exercised by the equivalence suites instead —
+/// thread-local counters can't observe pool threads.)
+#[test]
+fn framed_link_round_is_allocation_free_at_steady_state() {
+    let n = 4;
+    let d = 128;
+    let suite = quadratic::generate(n, d, 1e-2, 0.5, 3);
+    let map = parse_mechanism("ef21:top4").unwrap();
+    let workers: Vec<WorkerState> = (0..n)
+        .map(|i| {
+            WorkerState::new(
+                i,
+                n,
+                suite.problem.locals[i].clone(),
+                map.clone(),
+                &suite.problem.x0,
+                InitPolicy::FullGradient,
+                7,
+            )
+        })
+        .collect();
+    let cfg = TrainConfig::default();
+    let mut link = Framed::default().connect(workers, d, &cfg);
+    let mut agg = RoundAggregate::new(d, n);
+    let x = vec![0.05f32; d];
+    for t in 0..8u64 {
+        link.round(&x, t, false, &mut agg);
+    }
+    let allocs = count_allocs(|| {
+        for t in 8..28u64 {
+            link.round(&x, t, false, &mut agg);
+        }
+    });
+    assert_eq!(allocs, 0, "steady-state Framed rounds must not allocate");
+}
+
+#[test]
+fn clag_fire_path_is_allocation_free_at_steady_state() {
+    let d = 256;
+    let info = CtxInfo::single(d);
+    // ζ = 0 → fires every round (EF21 behaviour), exercising the
+    // trigger + compress pipeline.
+    let map = parse_mechanism("clag:top8:0.0").unwrap();
+    let grads = gradient_cycle(d, 5, 0xf19e);
+    let mut worker = MechWorker::new(map, vec![0.0f32; d], grads[0].clone());
+    let mut rng = Pcg64::seed(3);
+    let mut delta = vec![0.0f64; d];
+
+    drive(&mut worker, &grads, &mut rng, info, &mut delta, 0, 10);
+
+    let allocs = count_allocs(|| {
+        drive(&mut worker, &grads, &mut rng, info, &mut delta, 10, 25);
+    });
+    assert_eq!(allocs, 0, "CLAG fire path must be allocation-free once warm");
+}
