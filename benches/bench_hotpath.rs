@@ -17,6 +17,7 @@ mod benchkit;
 
 use threepc::compressors::{CVec, Contractive, Ctx, CtxInfo, MechScratch, TopK};
 use threepc::coordinator::{TrainConfig, TrainSession};
+use threepc::kernels::{self, ShardPool};
 use threepc::mechanisms::{parse_mechanism, recycle_update, ThreePointMap, Update};
 use threepc::problems::quadratic;
 use threepc::util::rng::Pcg64;
@@ -134,6 +135,104 @@ fn main() {
         }
     });
     report.push(&s, &[]);
+
+    // Per-kernel cases at the large-d regime: serial vs sharded over
+    // the machine's spare threads. The contract says the bits are
+    // identical; these cases measure what the fan-out buys.
+    println!("\n== kernel layer, d = 2^20 (serial vs sharded) ==");
+    let dbig = 1usize << 20;
+    let helpers = std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(1))
+        .unwrap_or(1)
+        .max(1);
+    let pool = ShardPool::new(helpers);
+    let mut rb = Pcg64::seed(11);
+    let xb: Vec<f32> = (0..dbig).map(|_| rb.normal() as f32).collect();
+    let yb: Vec<f32> = (0..dbig).map(|_| rb.normal() as f32).collect();
+    let mut accb = vec![0.0f64; dbig];
+    let mut outb = vec![0.0f32; dbig];
+    for (mode, sh) in [("serial", None), ("sharded", Some(&pool))] {
+        let s = benchkit::measure(
+            &format!("kernel sqnorm d=2^20 ({mode})"),
+            3,
+            benchkit::scaled(40),
+            || {
+                std::hint::black_box(kernels::sqnorm(sh, &xb));
+            },
+        );
+        report.push(&s, &[("coords_per_s", benchkit::throughput(&s, dbig))]);
+        let s = benchkit::measure(
+            &format!("kernel dist_sq d=2^20 ({mode})"),
+            3,
+            benchkit::scaled(40),
+            || {
+                std::hint::black_box(kernels::dist_sq(sh, &xb, &yb));
+            },
+        );
+        report.push(&s, &[("coords_per_s", benchkit::throughput(&s, dbig))]);
+        let s = benchkit::measure(
+            &format!("kernel fold_f64 d=2^20 ({mode})"),
+            3,
+            benchkit::scaled(40),
+            || {
+                kernels::fold_f64(sh, &mut accb, &xb);
+                std::hint::black_box(&accb);
+            },
+        );
+        report.push(&s, &[("coords_per_s", benchkit::throughput(&s, dbig))]);
+        let s = benchkit::measure(
+            &format!("kernel diff d=2^20 ({mode})"),
+            3,
+            benchkit::scaled(40),
+            || {
+                kernels::diff(sh, &xb, &yb, &mut outb);
+                std::hint::black_box(&outb);
+            },
+        );
+        report.push(&s, &[("coords_per_s", benchkit::throughput(&s, dbig))]);
+    }
+    drop(pool);
+    drop((xb, yb, accb, outb));
+
+    // The large-d/small-n round — the regime the coordinate sharding
+    // targets (d = 2^20, n = 4). `threads=1` is the serial reference;
+    // `threads=auto` uses every core: worker-parallel up to n, and any
+    // surplus cores shard coordinates. On a multi-core runner (cores >
+    // n) the auto case is the ≥2× acceptance metric; CI's perf-smoke
+    // step gates `ms_per_round` of both cases against the checked-in
+    // BENCH_hotpath.json baseline.
+    println!("\n== large-d round latency (d=2^20, n=4) ==");
+    {
+        let n = 4;
+        let suite = quadratic::generate(n, dbig, 1e-4, 0.5, 7);
+        let map = parse_mechanism("ef21:top4096").unwrap();
+        let rounds = 10;
+        for (label, threads) in [("threads=1", 1usize), ("threads=auto", 0)] {
+            let cfg = TrainConfig {
+                gamma: 1e-3,
+                max_rounds: rounds,
+                threads,
+                seed: 1,
+                ..TrainConfig::default()
+            };
+            let s = benchkit::measure(
+                &format!("train {rounds} rounds n={n} d=1048576 {label}"),
+                1,
+                benchkit::scaled(3),
+                || {
+                    std::hint::black_box(
+                        TrainSession::builder(&suite.problem)
+                            .mechanism(map.clone())
+                            .config(cfg.clone())
+                            .run(),
+                    );
+                },
+            );
+            let ms_per_round = s.median.as_secs_f64() * 1e3 / rounds as f64;
+            println!("    → {ms_per_round:.2} ms/round");
+            report.push(&s, &[("ms_per_round", ms_per_round)]);
+        }
+    }
 
     match report.write(".") {
         Ok(path) => println!("\n[bench] wrote {path}"),

@@ -145,11 +145,16 @@ impl JsonReport {
 
     /// Write `BENCH_<bench>.json` into `dir` (the workspace root when
     /// run via `cargo bench`). Returns the path written.
+    ///
+    /// `"source":"measured"` marks the file as a real bench run — the
+    /// checked-in baseline starts life as `"source":"bootstrap"` with
+    /// null figures (see tools/check_perf_smoke.py), and is armed by
+    /// committing a measured file over it.
     pub fn write(&self, dir: &str) -> std::io::Result<String> {
         let path = format!("{dir}/BENCH_{}.json", self.bench);
         let mut out = String::new();
         out.push_str(&format!(
-            "{{\"bench\":\"{}\",\"smoke\":{},\"cases\":[",
+            "{{\"bench\":\"{}\",\"smoke\":{},\"source\":\"measured\",\"cases\":[",
             json_escape(&self.bench),
             smoke()
         ));

@@ -30,6 +30,7 @@ pub use permk::{CPermK, PermK};
 pub use randk::{CRandK, RandK};
 pub use topk::TopK;
 
+use crate::kernels::{self, Shards};
 use crate::util::rng::Pcg64;
 
 /// Static information a compressor needs about its embedding: the vector
@@ -165,11 +166,15 @@ pub struct Ctx<'a> {
     /// deterministic stream from it so every worker draws the same values.
     pub round_seed: u64,
     scratch: Option<&'a mut MechScratch>,
+    /// Coordinate shard pool handle for the elementwise/reduction hot
+    /// loops (`None` = serial; bit-identical either way — see
+    /// [`crate::kernels`]).
+    shards: Shards<'a>,
 }
 
 impl<'a> Ctx<'a> {
     pub fn new(info: CtxInfo, rng: &'a mut Pcg64, round_seed: u64) -> Ctx<'a> {
-        Ctx { info, rng, round_seed, scratch: None }
+        Ctx { info, rng, round_seed, scratch: None, shards: None }
     }
 
     /// [`Ctx::new`] with a buffer pool attached — the steady-state
@@ -180,7 +185,23 @@ impl<'a> Ctx<'a> {
         round_seed: u64,
         scratch: &'a mut MechScratch,
     ) -> Ctx<'a> {
-        Ctx { info, rng, round_seed, scratch: Some(scratch) }
+        Ctx { info, rng, round_seed, scratch: Some(scratch), shards: None }
+    }
+
+    /// Attach a coordinate shard pool (builder-style): mechanism and
+    /// compressor kernels invoked through this context may then fan
+    /// their d-dimensional loops out over idle pool threads. Results
+    /// are bit-identical with or without a pool (the kernels'
+    /// fixed-chunk accumulation contract), so this is purely a
+    /// throughput axis.
+    pub fn sharded(mut self, sh: Shards<'a>) -> Ctx<'a> {
+        self.shards = sh;
+        self
+    }
+
+    /// The attached shard pool handle (`None` when serial).
+    pub fn shards(&self) -> Shards<'a> {
+        self.shards
     }
 
     /// The round-shared RNG stream (same for every worker this round).
@@ -329,13 +350,18 @@ impl CVec {
 
     /// `out += self`.
     pub fn add_into(&self, out: &mut [f32]) {
+        self.add_into_sh(None, out);
+    }
+
+    /// [`CVec::add_into`] with a shard handle: dense payloads fan out
+    /// over the pool (same bits — coordinates are independent); sparse
+    /// payloads are O(nnz) and stay on the calling thread.
+    pub fn add_into_sh(&self, sh: Shards<'_>, out: &mut [f32]) {
         match self {
             CVec::Zero { .. } => {}
             CVec::Dense(v) => {
                 debug_assert_eq!(v.len(), out.len());
-                for (o, &x) in out.iter_mut().zip(v) {
-                    *o += x;
-                }
+                kernels::add_assign(sh, v, out);
             }
             CVec::Sparse { idx, val, .. } => {
                 for (&i, &v) in idx.iter().zip(val) {

@@ -25,15 +25,23 @@ impl Contractive for SignL1 {
 
     fn compress_into(&self, x: &[f32], ctx: &mut Ctx<'_>, out: &mut CVec) {
         ctx.recycle_cvec(out);
+        let sh = ctx.shards();
         let d = x.len();
-        let l1: f64 = x.iter().map(|v| v.abs() as f64).sum();
+        // The magnitude scan is a chunked f64 reduction, so the sharded
+        // and serial paths agree bit-for-bit (kernels contract).
+        let l1 = crate::kernels::asum(sh, x);
         if l1 == 0.0 {
             *out = CVec::Zero { dim: d };
             return;
         }
         let mag = (l1 / d as f64) as f32;
         let mut v = ctx.take_f32(d);
-        v.extend(x.iter().map(|&t| if t >= 0.0 { mag } else { -mag }));
+        v.resize(d, 0.0);
+        crate::kernels::for_each_chunk_mut(sh, &mut v, &|s, vc| {
+            for (o, &t) in vc.iter_mut().zip(&x[s..s + vc.len()]) {
+                *o = if t >= 0.0 { mag } else { -mag };
+            }
+        });
         *out = CVec::Dense(v);
     }
 }

@@ -18,8 +18,10 @@ impl TopK {
         TopK { k }
     }
 
-    /// The indices of the K largest-|x| entries (ties broken arbitrarily,
-    /// as the paper allows).
+    /// The indices of the K largest-|x| entries. Ties are broken by
+    /// coordinate index (lower index wins), so the kept *set* is a
+    /// deterministic function of `x` — across runs, platforms and any
+    /// future sharded selection.
     pub fn select(&self, x: &[f32]) -> Vec<u32> {
         let d = x.len();
         let k = self.k.min(d);
@@ -36,11 +38,19 @@ impl TopK {
 /// coordinates. The magnitude comparator is `f32::total_cmp` — a total
 /// order even for NaN inputs (NaN sorts above every finite magnitude, so
 /// poisoned coordinates surface deterministically in the kept set
-/// instead of silently corrupting the introselect partition, which the
-/// `partial_cmp(..).unwrap_or(Equal)` comparator it replaces could do).
+/// instead of silently corrupting the introselect partition) — with the
+/// coordinate index as a secondary key, so equal magnitudes resolve to
+/// a unique order and the kept set is fully deterministic under ties.
+/// (Prerequisite for sharded selection and for cross-platform trace
+/// stability: `select_nth_unstable_by` may place tied keys on either
+/// side of the pivot, and its pivot choices are implementation details
+/// of the standard library.)
 fn partition_top_k(x: &[f32], idx: &mut [u32], k: usize) {
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        x[b as usize].abs().total_cmp(&x[a as usize].abs())
+        x[b as usize]
+            .abs()
+            .total_cmp(&x[a as usize].abs())
+            .then_with(|| a.cmp(&b))
     });
 }
 
@@ -122,6 +132,41 @@ mod tests {
     fn ties_still_pick_k() {
         let x = [1.0f32; 6];
         assert_eq!(compress(4, &x).nnz(), 4);
+    }
+
+    /// Regression: with tied magnitudes the kept *set* is the lowest
+    /// coordinate indices among the ties — a deterministic function of
+    /// the input, not of introselect pivot luck. (The comparator's
+    /// secondary `total_cmp` key on the coordinate index.)
+    #[test]
+    fn tied_magnitudes_keep_lowest_indices() {
+        // All-tied vector: keep must be exactly {0..k}.
+        let x = [2.0f32, -2.0, 2.0, 2.0, -2.0, 2.0, 2.0, -2.0];
+        for k in [1usize, 3, 5, 7] {
+            let mut sel = TopK::new(k).select(&x);
+            sel.sort_unstable();
+            let expect: Vec<u32> = (0..k as u32).collect();
+            assert_eq!(sel, expect, "k={k}");
+            // The compressor keeps the same set.
+            let out = compress(k, &x);
+            let mut idx = match &out {
+                CVec::Sparse { idx, .. } => idx.clone(),
+                other => panic!("expected sparse, got {other:?}"),
+            };
+            idx.sort_unstable();
+            assert_eq!(idx, expect, "k={k}");
+        }
+        // Mixed: unique large magnitudes always win; the remaining slot
+        // goes to the lowest-index tie.
+        let y = [1.0f32, 5.0, -1.0, 1.0, -5.0, 1.0];
+        let mut sel = TopK::new(3).select(&y);
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1, 4], "ties at |1.0| resolve to index 0");
+        // Signs don't perturb the tie order (|−2| == |2|).
+        let z = [-3.0f32, 3.0, -3.0, 3.0];
+        let mut sel = TopK::new(2).select(&z);
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1]);
     }
 
     /// Regression: NaN inputs must not corrupt the introselect partition.

@@ -244,19 +244,13 @@ impl WireUpdate {
 
 fn fold_replace_delta(g: &[f32], h: &[f32], delta: &mut [f64]) {
     debug_assert_eq!(g.len(), h.len());
-    for ((d, &gi), &hi) in delta.iter_mut().zip(g).zip(h) {
-        *d += gi as f64 - hi as f64;
-    }
+    crate::kernels::fold_delta_f64(None, delta, g, h);
 }
 
 fn add_cvec_f64(c: &CVec, acc: &mut [f64]) {
     match c {
         CVec::Zero { .. } => {}
-        CVec::Dense(v) => {
-            for (a, &x) in acc.iter_mut().zip(v) {
-                *a += x as f64;
-            }
-        }
+        CVec::Dense(v) => crate::kernels::fold_f64(None, acc, v),
         CVec::Sparse { idx, val, .. } => {
             for (&i, &v) in idx.iter().zip(val) {
                 acc[i as usize] += v as f64;

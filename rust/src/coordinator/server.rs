@@ -4,8 +4,8 @@
 //! and the bit accountant.
 
 use super::protocol::DownlinkStat;
+use crate::kernels::{self, Shards};
 use crate::mechanisms::Update;
-use crate::util::linalg;
 
 pub struct Server {
     /// Model iterate `x^t`.
@@ -28,7 +28,7 @@ impl Server {
         let n = worker_g0.len();
         let mut g_sum = vec![0.0f64; d];
         for g in worker_g0 {
-            linalg::add_into_f64(&mut g_sum, g);
+            kernels::fold_f64(None, &mut g_sum, g);
         }
         Server {
             x: x0,
@@ -63,18 +63,22 @@ impl Server {
 
     /// `g^t` as f32 (what the update rule consumes).
     pub fn g(&mut self) -> &[f32] {
-        linalg::scaled_to_f32(&self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
+        kernels::scaled_to_f32(None, &self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
         &self.g_buf
     }
 
     /// Gradient step `x^{t+1} = x^t − γ g^t`; bills the dense downlink
     /// broadcast.
     pub fn step(&mut self, gamma: f64) {
-        linalg::scaled_to_f32(&self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
-        let gam = gamma as f32;
-        for (xi, &gi) in self.x.iter_mut().zip(self.g_buf.iter()) {
-            *xi -= gam * gi;
-        }
+        self.step_sh(gamma, None);
+    }
+
+    /// [`Server::step`] with a shard handle (the session passes the
+    /// transport link's pool, idle between rounds): the O(d) render and
+    /// iterate update fan out with identical bits.
+    pub fn step_sh(&mut self, gamma: f64, sh: Shards<'_>) {
+        kernels::scaled_to_f32(sh, &self.g_sum, 1.0 / self.n as f64, &mut self.g_buf);
+        kernels::axpy(sh, -(gamma as f32), &self.g_buf, &mut self.x);
         self.bits_down += DownlinkStat::dense(self.x.len()).bits_per_worker;
     }
 
@@ -86,7 +90,7 @@ impl Server {
             Update::Keep => {}
             Update::Increment { inc, .. } => match inc {
                 crate::compressors::CVec::Zero { .. } => {}
-                crate::compressors::CVec::Dense(v) => linalg::add_into_f64(&mut self.g_sum, v),
+                crate::compressors::CVec::Dense(v) => kernels::fold_f64(None, &mut self.g_sum, v),
                 crate::compressors::CVec::Sparse { idx, val, .. } => {
                     for (&i, &v) in idx.iter().zip(val) {
                         self.g_sum[i as usize] += v as f64;
@@ -94,9 +98,7 @@ impl Server {
                 }
             },
             Update::Replace { g, .. } => {
-                for i in 0..g.len() {
-                    self.g_sum[i] += g[i] as f64 - h_before[i] as f64;
-                }
+                kernels::fold_delta_f64(None, &mut self.g_sum, g, h_before);
             }
         }
         self.bits_up[worker_id] += frame_and_payload_bits;
@@ -105,10 +107,14 @@ impl Server {
     /// Fold a thread's partial delta sum `Σ (g_i^{t+1} − g_i^t)` into the
     /// aggregate (the orchestrator's fan-in path).
     pub fn fold_delta(&mut self, delta_sum: &[f64]) {
+        self.fold_delta_sh(delta_sum, None);
+    }
+
+    /// [`Server::fold_delta`] with a shard handle (see
+    /// [`Server::step_sh`]).
+    pub fn fold_delta_sh(&mut self, delta_sum: &[f64], sh: Shards<'_>) {
         debug_assert_eq!(delta_sum.len(), self.g_sum.len());
-        for (g, &dv) in self.g_sum.iter_mut().zip(delta_sum) {
-            *g += dv;
-        }
+        kernels::add_f64(sh, &mut self.g_sum, delta_sum);
     }
 
     /// Bill uplink bits to a worker.
@@ -138,7 +144,7 @@ impl Server {
         let d = self.x.len();
         let mut exact = vec![0.0f64; d];
         for g in worker_g {
-            linalg::add_into_f64(&mut exact, g);
+            kernels::fold_f64(None, &mut exact, g);
         }
         exact
             .iter()

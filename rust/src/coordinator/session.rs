@@ -342,17 +342,20 @@ impl<'a> TrainSession<'a> {
             }
             let mech_name = current_map.name();
 
-            // x^{t+1} = x^t − γ g^t; broadcast (bills downlink).
-            server.step(cfg.gamma);
+            // x^{t+1} = x^t − γ g^t; broadcast (bills downlink). The
+            // session's own O(d) loops borrow the link's shard pool
+            // (idle between rounds); bit-identical to serial.
+            server.step_sh(cfg.gamma, link.shards());
             let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
             link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss, &mut agg);
 
-            server.fold_delta(&agg.delta_sum);
+            server.fold_delta_sh(&agg.delta_sum, link.shards());
             for &(wid, b) in &agg.bits {
                 server.add_bits(wid, b);
             }
             let inv_n = 1.0 / n as f64;
-            let grad_norm_sq: f64 = agg.grad_sum.iter().map(|&v| v * inv_n * v * inv_n).sum();
+            let grad_norm_sq =
+                crate::kernels::sqnorm_scaled_f64(link.shards(), &agg.grad_sum, inv_n);
             final_grad_norm_sq = grad_norm_sq;
 
             let snap = RoundSnapshot {

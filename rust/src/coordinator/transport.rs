@@ -27,8 +27,8 @@ use super::protocol::{
 use super::session::TrainConfig;
 use super::worker::WorkerState;
 use crate::compressors::{MechScratch, WireValueCoding};
+use crate::kernels::{self, ShardPool, Shards};
 use crate::mechanisms::ThreePointMap;
-use crate::util::linalg;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -71,10 +71,25 @@ impl RoundAggregate {
 
     /// Zero the accumulators for the next round, retaining capacity.
     pub fn reset(&mut self, d: usize, n: usize) {
-        self.delta_sum.clear();
-        self.delta_sum.resize(d, 0.0);
-        self.grad_sum.clear();
-        self.grad_sum.resize(d, 0.0);
+        self.reset_sh(d, n, None);
+    }
+
+    /// [`RoundAggregate::reset`] with a shard handle: once the fold
+    /// vectors are at their steady length the O(d) re-zeroing fans out
+    /// over idle pool threads.
+    pub fn reset_sh(&mut self, d: usize, n: usize, sh: Shards<'_>) {
+        if self.delta_sum.len() == d {
+            kernels::fill_f64(sh, &mut self.delta_sum, 0.0);
+        } else {
+            self.delta_sum.clear();
+            self.delta_sum.resize(d, 0.0);
+        }
+        if self.grad_sum.len() == d {
+            kernels::fill_f64(sh, &mut self.grad_sum, 0.0);
+        } else {
+            self.grad_sum.clear();
+            self.grad_sum.resize(d, 0.0);
+        }
         self.bits.clear();
         self.bits.reserve(n);
         self.skipped = 0;
@@ -124,6 +139,15 @@ pub trait TransportLink {
     /// traces agree across transports).
     fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64;
 
+    /// The link's coordinate shard pool, when it owns one. The session
+    /// threads this through its own per-round O(d) loops (iterate
+    /// update, aggregate fold, gradient-norm readout), which run
+    /// between rounds while the pool's helpers are otherwise idle.
+    /// Bit-identical to serial either way (kernels contract).
+    fn shards(&self) -> Shards<'_> {
+        None
+    }
+
     /// Cumulative uplink bytes actually serialized (0 when the
     /// transport moves structured updates in memory).
     fn measured_bytes_up(&self) -> u64 {
@@ -164,6 +188,15 @@ enum Reply {
 /// The in-memory thread-pool transport (the default). `threads = 0`
 /// inherits `TrainConfig::threads` (which itself falls back to the
 /// machine's available parallelism).
+///
+/// The thread budget is split over two parallelism axes: `min(threads,
+/// n)` threads own contiguous worker slices (the fold order every trace
+/// depends on), and any *surplus* (`threads > n` — the large-d/small-n
+/// regime) becomes a [`ShardPool`] of coordinate-shard helpers that the
+/// worker threads' O(d) loops and the link's fan-in fold draw on
+/// opportunistically. Sharding is trace-invisible: every kernel obeys
+/// the fixed-chunk accumulation contract, so traces are bit-identical
+/// for any thread count.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct InProcess {
     pub threads: usize,
@@ -188,13 +221,19 @@ impl Transport for InProcess {
     ) -> Box<dyn TransportLink> {
         let n = workers.len();
         let requested = if self.threads > 0 { self.threads } else { cfg.threads };
-        let threads = if requested == 0 {
+        let budget = if requested == 0 {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
         } else {
             requested
         }
-        .min(n)
         .max(1);
+        // Axis 1: workers. Axis 2: coordinates — any surplus threads
+        // beyond one-per-worker become coordinate-shard helpers instead
+        // of being dropped (the large-d/small-n regime).
+        let threads = budget.min(n).max(1);
+        let spare = budget - threads;
+        let shards: Option<Arc<ShardPool>> =
+            if spare > 0 { Some(Arc::new(ShardPool::new(spare))) } else { None };
 
         // Partition workers over threads (contiguous slices, preserving
         // worker order — the fold order every trace depends on).
@@ -216,9 +255,10 @@ impl Transport for InProcess {
             let (tx, rx) = mpsc::channel::<Cmd>();
             cmd_txs.push(tx);
             let reply = reply_tx.clone();
+            let pool = shards.clone();
             let join = std::thread::Builder::new()
                 .name(format!("threepc-worker-{slot}"))
-                .spawn(move || pool_thread(slot, slice, dim, rx, reply))
+                .spawn(move || pool_thread(slot, slice, dim, rx, reply, pool))
                 .expect("spawning transport worker thread");
             joins.push(join);
         }
@@ -233,6 +273,7 @@ impl Transport for InProcess {
             x_arc: Arc::new(Vec::new()),
             spare_reports: Vec::new(),
             report_slots,
+            shards,
         })
     }
 }
@@ -243,15 +284,21 @@ fn pool_thread(
     dim: usize,
     rx: mpsc::Receiver<Cmd>,
     reply: mpsc::Sender<Reply>,
+    shards: Option<Arc<ShardPool>>,
 ) {
+    // The shard pool is shared across worker threads; each kernel call
+    // grabs it opportunistically (a busy pool degrades that one call to
+    // the serial path with identical bits), so no coordination beyond
+    // the pool's own try-lock is needed here.
+    let sh: Shards<'_> = shards.as_deref();
     while let Ok(cmd) = rx.recv() {
         let out = match cmd {
             Cmd::Round(task, spare) => {
                 let mut rep = spare.unwrap_or_default();
-                rep.reset(dim, mine.len());
+                rep.reset_sh(dim, mine.len(), sh);
                 for w in mine.iter_mut() {
-                    let o = w.round_acc(&task.x, task.round_seed, &mut rep.delta_sum);
-                    linalg::add_into_f64(&mut rep.grad_sum, w.true_grad());
+                    let o = w.round_acc_sh(&task.x, task.round_seed, &mut rep.delta_sum, sh);
+                    kernels::fold_f64(sh, &mut rep.grad_sum, w.true_grad());
                     rep.bits.push((o.worker_id, o.bits));
                     if o.skipped {
                         rep.skipped += 1;
@@ -294,6 +341,10 @@ struct InProcessLink {
     spare_reports: Vec<RoundAggregate>,
     /// Per-slot landing area for fan-in (reused across rounds).
     report_slots: Vec<Option<RoundAggregate>>,
+    /// Coordinate-shard helpers (surplus threads beyond one-per-worker);
+    /// shared with the worker threads, and used by the link itself for
+    /// the fan-in fold and the broadcast-iterate rewrite.
+    shards: Option<Arc<ShardPool>>,
 }
 
 impl InProcessLink {
@@ -306,9 +357,16 @@ impl InProcessLink {
 
 impl TransportLink for InProcessLink {
     fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate) {
+        let sh: Shards<'_> = self.shards.as_deref();
         if let Some(buf) = Arc::get_mut(&mut self.x_arc) {
-            buf.clear();
-            buf.extend_from_slice(x);
+            if buf.len() == x.len() {
+                // Steady state: rewrite the broadcast iterate in place,
+                // sharded over idle helpers.
+                kernels::copy(sh, x, buf);
+            } else {
+                buf.clear();
+                buf.extend_from_slice(x);
+            }
         } else {
             // Defensive: somebody kept a handle alive; fall back to a
             // fresh buffer rather than blocking.
@@ -322,21 +380,20 @@ impl TransportLink for InProcessLink {
         drop(task);
         // Collect one report per thread, then fold in slot order so the
         // f64 accumulation is reproducible regardless of arrival order.
+        // (Per coordinate the additions still happen in slot order when
+        // the adds themselves are sharded — coordinates are independent,
+        // so the chunk fan-out is invisible in the folded bits.)
         for _ in 0..self.cmd_txs.len() {
             match self.reply_rx.recv().expect("transport worker thread died") {
                 Reply::Round { slot, report } => self.report_slots[slot] = Some(report),
                 Reply::Snapshot { .. } => unreachable!("unsolicited snapshot reply"),
             }
         }
-        out.reset(self.dim, self.n);
+        out.reset_sh(self.dim, self.n, sh);
         for slot in self.report_slots.iter_mut() {
             let rep = slot.take().expect("missing thread report");
-            for (a, v) in out.delta_sum.iter_mut().zip(&rep.delta_sum) {
-                *a += v;
-            }
-            for (a, v) in out.grad_sum.iter_mut().zip(&rep.grad_sum) {
-                *a += v;
-            }
+            kernels::add_f64(sh, &mut out.delta_sum, &rep.delta_sum);
+            kernels::add_f64(sh, &mut out.grad_sum, &rep.grad_sum);
             out.bits.extend_from_slice(&rep.bits);
             out.skipped += rep.skipped;
             out.g_err_sum += rep.g_err_sum;
@@ -368,6 +425,10 @@ impl TransportLink for InProcessLink {
         // Declared billing: the directive's frame bytes (what the
         // serializing transport measures for the same switch).
         8 * frame.len() as u64
+    }
+
+    fn shards(&self) -> Shards<'_> {
+        self.shards.as_deref()
     }
 }
 
@@ -468,7 +529,7 @@ impl TransportLink for FramedLink {
             self.h_buf.clear();
             self.h_buf.extend_from_slice(w.g());
             let o = w.round_acc(x, round_seed, &mut self.no_acc);
-            linalg::add_into_f64(&mut out.grad_sum, w.true_grad());
+            kernels::fold_f64(None, &mut out.grad_sum, w.true_grad());
             if eval_loss {
                 out.loss_sum += w.loss(x);
             }

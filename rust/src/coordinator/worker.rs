@@ -5,6 +5,7 @@
 use super::protocol::UplinkMsg;
 use super::InitPolicy;
 use crate::compressors::{Ctx, CtxInfo};
+use crate::kernels::Shards;
 use crate::mechanisms::{update_bits, MechWorker, ThreePointMap, Update};
 use crate::problems::LocalProblem;
 use crate::util::rng::Pcg64;
@@ -111,8 +112,24 @@ impl WorkerState {
         round_seed: u64,
         delta_acc: &mut Vec<f64>,
     ) -> RoundOutcome {
-        self.problem.grad(x_new, &mut self.grad_buf);
-        let mut ctx = Ctx::new(self.info, &mut self.rng, round_seed);
+        self.round_acc_sh(x_new, round_seed, delta_acc, None)
+    }
+
+    /// [`Self::round_acc`] with a coordinate shard pool attached: the
+    /// gradient evaluation, the mechanism's diff/residual arithmetic
+    /// and the delta fold may all fan their d-dimensional loops out
+    /// over idle pool threads. Bit-identical to the serial path for
+    /// any thread count (the [`crate::kernels`] fixed-chunk contract),
+    /// so transports enable this purely for throughput.
+    pub fn round_acc_sh(
+        &mut self,
+        x_new: &[f32],
+        round_seed: u64,
+        delta_acc: &mut Vec<f64>,
+        sh: Shards<'_>,
+    ) -> RoundOutcome {
+        self.problem.grad_sh(x_new, &mut self.grad_buf, sh);
+        let mut ctx = Ctx::new(self.info, &mut self.rng, round_seed).sharded(sh);
         let g_err = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
         let update = self.mech.last_update();
         RoundOutcome {

@@ -1,0 +1,52 @@
+//! Dense matrix kernels (oracle / sweep fast-path; the heavy matmuls in
+//! this project run through the HLO/Pallas path). Grown out of
+//! `util::linalg` — the row reductions now run on the chunked
+//! [`dot`](super::dot)/[`axpy`](super::axpy) kernels, so their f64
+//! accumulation obeys the same fixed-chunk contract as everything else.
+
+use super::{axpy, dot};
+
+/// Dense mat-vec: `out = M x` where `M` is row-major `(rows, cols)`.
+pub fn matvec(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        out[r] = dot(None, row, x) as f32;
+    }
+}
+
+/// Dense transposed mat-vec: `out = Mᵀ x`, `M` row-major `(rows, cols)`.
+pub fn matvec_t(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        let xr = x[r];
+        if xr != 0.0 {
+            axpy(None, xr, row, out);
+        }
+    }
+}
+
+/// `out = A B` with row-major `A (m,k)`, `B (k,n)`, `out (m,n)` —
+/// simple ikj loop order (cache-friendly over `B` rows).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                axpy(None, aip, brow, orow);
+            }
+        }
+    }
+}

@@ -1,0 +1,479 @@
+//! Vectorized, coordinate-shardable numeric kernels — the hot-loop
+//! layer under every mechanism, compressor, gradient and fold.
+//!
+//! # The fixed-chunk accumulation contract
+//!
+//! Every kernel processes coordinates in fixed [`CHUNK`]-sized chunks
+//! (`chunk c` covers `[c·CHUNK, min((c+1)·CHUNK, d))` — boundaries
+//! derive from `d` alone). Reductions accumulate a per-chunk f64
+//! partial with a fixed internal structure ([`LANES`]-striped
+//! accumulators folded in lane order) and combine partials in
+//! chunk-index order. Elementwise kernels write disjoint coordinate
+//! ranges. Consequence: **the serial path and any sharded path produce
+//! bit-identical results for every thread count**, so coordinate
+//! sharding is invisible in traces (pinned by the `kernels` test
+//! target and the `session_api` thread-count equivalence tests).
+//!
+//! # Sharding
+//!
+//! Each kernel takes a [`Shards`] handle — `None` runs serially,
+//! `Some(&pool)` lets idle [`ShardPool`] helper threads claim chunks.
+//! Dispatch is opportunistic (`try_run`): a busy pool degrades the
+//! caller to the serial path, which by the contract produces the same
+//! bits. Loops shorter than [`SHARD_MIN`] never dispatch (the
+//! rendezvous would cost more than the loop).
+//!
+//! The lane striping exists for throughput as well as determinism: a
+//! straight `for` fold over one f64 accumulator is a serial dependency
+//! chain the compiler must not reassociate, while eight independent
+//! lanes vectorize/pipeline and still have one fixed combine order.
+
+pub mod dense;
+pub mod pool;
+
+pub use pool::ShardPool;
+
+use std::cell::RefCell;
+
+/// Fixed accumulation chunk: 4096 coordinates. Every reduction is a
+/// chunk-order fold of per-chunk partials, whatever threads computed
+/// them.
+pub const CHUNK: usize = 4096;
+
+/// Independent accumulator lanes inside a chunk reduction (fixed fold
+/// order; part of the bit-identity contract).
+pub const LANES: usize = 8;
+
+/// Loops shorter than this run serially even with a pool attached.
+/// Additionally, a loop only dispatches when it has more chunks than
+/// the pool has helpers (see [`should_shard`]) — waking and
+/// rendezvousing with every helper costs more than a loop that can't
+/// give each participant at least one chunk is worth.
+pub const SHARD_MIN: usize = 2 * CHUNK;
+
+/// The dispatch predicate shared by [`run_chunked`] and
+/// [`reduce_chunked`]. Purely a throughput heuristic: by the
+/// fixed-chunk contract the serial and sharded paths produce the same
+/// bits, so callers never need to know which side was taken.
+fn should_shard(pool: &ShardPool, len: usize) -> bool {
+    len >= SHARD_MIN && n_chunks(len) > pool.helpers()
+}
+
+/// An optional handle to a [`ShardPool`]; `None` means serial.
+pub type Shards<'a> = Option<&'a ShardPool>;
+
+/// Number of fixed chunks covering a `len`-dimensional loop.
+pub fn n_chunks(len: usize) -> usize {
+    len.div_ceil(CHUNK)
+}
+
+/// A raw pointer the shard closures may carry across threads; safe
+/// because every chunk writes a disjoint coordinate range and the
+/// dispatcher outlives the dispatch.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+thread_local! {
+    /// Per-dispatcher chunk-partial landing buffer for sharded
+    /// reductions; grows to the largest chunk count seen and is then
+    /// reused (steady-state dispatch allocates nothing).
+    static PARTIALS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Drive `f(start, end)` over every fixed chunk of `[0, len)`:
+/// sharded over the pool when one is attached (and the loop is long
+/// enough), serially in chunk order otherwise. `f` must only touch
+/// coordinates in `[start, end)`.
+///
+/// Generic (not `&dyn`) so the ubiquitous serial path — `sh = None`,
+/// or any loop below the dispatch threshold — monomorphizes and
+/// inlines like the hand-written loops it replaced; the closure is
+/// erased to a trait object only at the [`ShardPool::try_run`]
+/// boundary.
+#[inline]
+pub fn run_chunked<F: Fn(usize, usize) + Sync>(sh: Shards<'_>, len: usize, f: F) {
+    if len == 0 {
+        return;
+    }
+    if let Some(pool) = sh {
+        if should_shard(pool, len) && pool.try_run(len, &f) {
+            return;
+        }
+    }
+    for c in 0..n_chunks(len) {
+        let s = c * CHUNK;
+        f(s, (s + CHUNK).min(len));
+    }
+}
+
+/// Chunk-order reduction of `f(start, end) -> f64` partials: the
+/// sharded path writes each chunk's partial to its fixed slot and sums
+/// the slots in chunk-index order; the serial path accumulates in the
+/// same order directly. Identical bits either way. Generic for the same
+/// inlining reason as [`run_chunked`].
+#[inline]
+pub fn reduce_chunked<F: Fn(usize, usize) -> f64 + Sync>(sh: Shards<'_>, len: usize, f: F) -> f64 {
+    if len == 0 {
+        return 0.0;
+    }
+    let chunks = n_chunks(len);
+    if let Some(pool) = sh {
+        if should_shard(pool, len) {
+            // `try_borrow_mut` (not `borrow_mut`): a chunk closure that
+            // itself runs a sharded reduction on the dispatcher thread
+            // must degrade to the serial path below, mirroring the
+            // pool's own busy try-lock, not panic on a nested borrow.
+            let sharded = PARTIALS.with(|cell| {
+                let mut buf = cell.try_borrow_mut().ok()?;
+                if buf.len() < chunks {
+                    buf.resize(chunks, 0.0);
+                }
+                let out = SendPtr(buf.as_mut_ptr());
+                let ran = pool.try_run(len, &|s, e| {
+                    // Partials land at fixed chunk-index slots, so the
+                    // combine below is chunk-ordered no matter which
+                    // thread produced which chunk.
+                    unsafe { *out.0.add(s / CHUNK) = f(s, e) };
+                });
+                if ran {
+                    Some(buf[..chunks].iter().sum::<f64>())
+                } else {
+                    None
+                }
+            });
+            if let Some(v) = sharded {
+                return v;
+            }
+        }
+    }
+    let mut acc = 0.0;
+    for c in 0..chunks {
+        let s = c * CHUNK;
+        acc += f(s, (s + CHUNK).min(len));
+    }
+    acc
+}
+
+/// Safe elementwise driver over one mutable slice: `f(start, chunk)`
+/// receives each chunk's coordinate offset and the disjoint sub-slice
+/// of `out` it owns. Read-only captures (e.g. the input vectors) ride
+/// in the closure.
+#[inline]
+pub fn for_each_chunk_mut<T, F>(sh: Shards<'_>, out: &mut [T], f: F)
+where
+    T: Send + Sync,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ptr = SendPtr(out.as_mut_ptr());
+    run_chunked(sh, out.len(), |s, e| {
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+        f(s, chunk);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Chunk reducers: LANES-striped f64 accumulation with a fixed combine
+// order. These are the only place reduction arithmetic lives — serial
+// and sharded paths both call them per chunk.
+
+#[inline]
+fn lanes_fold(acc: [f64; LANES]) -> f64 {
+    let mut total = 0.0;
+    for v in acc {
+        total += v;
+    }
+    total
+}
+
+macro_rules! chunk_reduce1 {
+    ($name:ident, $ty:ty, $map:expr) => {
+        #[inline]
+        fn $name(x: &[$ty]) -> f64 {
+            let map = $map;
+            let mut acc = [0.0f64; LANES];
+            let mut blocks = x.chunks_exact(LANES);
+            for blk in blocks.by_ref() {
+                for (l, &v) in blk.iter().enumerate() {
+                    acc[l] += map(v);
+                }
+            }
+            for (l, &v) in blocks.remainder().iter().enumerate() {
+                acc[l] += map(v);
+            }
+            lanes_fold(acc)
+        }
+    };
+}
+
+chunk_reduce1!(chunk_sqnorm, f32, |v: f32| {
+    let v = v as f64;
+    v * v
+});
+chunk_reduce1!(chunk_asum, f32, |v: f32| v.abs() as f64);
+
+macro_rules! chunk_reduce2 {
+    ($name:ident, $map:expr) => {
+        #[inline]
+        fn $name(x: &[f32], y: &[f32]) -> f64 {
+            debug_assert_eq!(x.len(), y.len());
+            let map = $map;
+            let mut acc = [0.0f64; LANES];
+            let mut xb = x.chunks_exact(LANES);
+            let mut yb = y.chunks_exact(LANES);
+            for (bx, by) in xb.by_ref().zip(yb.by_ref()) {
+                for l in 0..LANES {
+                    acc[l] += map(bx[l], by[l]);
+                }
+            }
+            for (l, (&a, &b)) in xb.remainder().iter().zip(yb.remainder()).enumerate() {
+                acc[l] += map(a, b);
+            }
+            lanes_fold(acc)
+        }
+    };
+}
+
+chunk_reduce2!(chunk_dot, |a: f32, b: f32| a as f64 * b as f64);
+chunk_reduce2!(chunk_dist_sq, |a: f32, b: f32| {
+    let d = a as f64 - b as f64;
+    d * d
+});
+
+#[inline]
+fn chunk_sqnorm_scaled_f64(v: &[f64], scale: f64) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut blocks = v.chunks_exact(LANES);
+    for blk in blocks.by_ref() {
+        for (l, &x) in blk.iter().enumerate() {
+            let t = x * scale;
+            acc[l] += t * t;
+        }
+    }
+    for (l, &x) in blocks.remainder().iter().enumerate() {
+        let t = x * scale;
+        acc[l] += t * t;
+    }
+    lanes_fold(acc)
+}
+
+// ---------------------------------------------------------------------
+// Reductions.
+
+/// Squared Euclidean norm `‖x‖²`, f64-accumulated.
+#[inline]
+pub fn sqnorm(sh: Shards<'_>, x: &[f32]) -> f64 {
+    reduce_chunked(sh, x.len(), &|s, e| chunk_sqnorm(&x[s..e]))
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(sh: Shards<'_>, x: &[f32]) -> f64 {
+    sqnorm(sh, x).sqrt()
+}
+
+/// Squared distance `‖x − y‖²`.
+#[inline]
+pub fn dist_sq(sh: Shards<'_>, x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    reduce_chunked(sh, x.len(), &|s, e| chunk_dist_sq(&x[s..e], &y[s..e]))
+}
+
+/// Dot product in f64.
+#[inline]
+pub fn dot(sh: Shards<'_>, x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    reduce_chunked(sh, x.len(), &|s, e| chunk_dot(&x[s..e], &y[s..e]))
+}
+
+/// ℓ₁ norm `Σ|xᵢ|` (the SignL1 magnitude scan).
+#[inline]
+pub fn asum(sh: Shards<'_>, x: &[f32]) -> f64 {
+    reduce_chunked(sh, x.len(), &|s, e| chunk_asum(&x[s..e]))
+}
+
+/// `Σ (vᵢ·scale)²` over an f64 accumulator — the leader's gradient-norm
+/// readout from its `n·g` fold state.
+#[inline]
+pub fn sqnorm_scaled_f64(sh: Shards<'_>, v: &[f64], scale: f64) -> f64 {
+    reduce_chunked(sh, v.len(), &|s, e| chunk_sqnorm_scaled_f64(&v[s..e], scale))
+}
+
+// ---------------------------------------------------------------------
+// Elementwise kernels (disjoint chunk writes; sharding never changes
+// the per-coordinate arithmetic).
+
+/// `y += a·x`.
+#[inline]
+pub fn axpy(sh: Shards<'_>, a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for_each_chunk_mut(sh, y, &|s, yc| {
+        for (yi, &xi) in yc.iter_mut().zip(&x[s..s + yc.len()]) {
+            *yi += a * xi;
+        }
+    });
+}
+
+/// `out = x − y` (the diff/residual kernel under every mechanism).
+#[inline]
+pub fn diff(sh: Shards<'_>, x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for_each_chunk_mut(sh, out, &|s, oc| {
+        let n = oc.len();
+        let (xc, yc) = (&x[s..s + n], &y[s..s + n]);
+        for i in 0..n {
+            oc[i] = xc[i] - yc[i];
+        }
+    });
+}
+
+/// `x *= a` in place.
+#[inline]
+pub fn scale(sh: Shards<'_>, x: &mut [f32], a: f32) {
+    for_each_chunk_mut(sh, x, &|_, xc| {
+        for v in xc.iter_mut() {
+            *v *= a;
+        }
+    });
+}
+
+/// `dst = src` (sharded memcpy — the broadcast-iterate rewrite).
+#[inline]
+pub fn copy(sh: Shards<'_>, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for_each_chunk_mut(sh, dst, &|s, dc| {
+        dc.copy_from_slice(&src[s..s + dc.len()]);
+    });
+}
+
+/// `out += x` (dense payload apply).
+#[inline]
+pub fn add_assign(sh: Shards<'_>, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for_each_chunk_mut(sh, out, &|s, oc| {
+        for (o, &v) in oc.iter_mut().zip(&x[s..s + oc.len()]) {
+            *o += v;
+        }
+    });
+}
+
+/// `acc += x` with an f64 accumulator (the transport fold).
+#[inline]
+pub fn fold_f64(sh: Shards<'_>, acc: &mut [f64], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for_each_chunk_mut(sh, acc, &|s, ac| {
+        for (a, &v) in ac.iter_mut().zip(&x[s..s + ac.len()]) {
+            *a += v as f64;
+        }
+    });
+}
+
+/// `acc += new − old` — the fused `Replace`-delta fold
+/// (`g_i^{t+1} − g_i^t` accumulated without a materialised diff).
+#[inline]
+pub fn fold_delta_f64(sh: Shards<'_>, acc: &mut [f64], new: &[f32], old: &[f32]) {
+    debug_assert_eq!(acc.len(), new.len());
+    debug_assert_eq!(acc.len(), old.len());
+    for_each_chunk_mut(sh, acc, &|s, ac| {
+        let n = ac.len();
+        let (nc, oc) = (&new[s..s + n], &old[s..s + n]);
+        for i in 0..n {
+            ac[i] += nc[i] as f64 - oc[i] as f64;
+        }
+    });
+}
+
+/// `acc += src` over f64 slices (chunk-partial combine; callers combine
+/// sources in a fixed order, this kernel keeps coordinates independent).
+#[inline]
+pub fn add_f64(sh: Shards<'_>, acc: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for_each_chunk_mut(sh, acc, &|s, ac| {
+        for (a, &v) in ac.iter_mut().zip(&src[s..s + ac.len()]) {
+            *a += v;
+        }
+    });
+}
+
+/// `v = val` everywhere (aggregate reset).
+#[inline]
+pub fn fill_f64(sh: Shards<'_>, v: &mut [f64], val: f64) {
+    for_each_chunk_mut(sh, v, &|_, vc| {
+        for t in vc.iter_mut() {
+            *t = val;
+        }
+    });
+}
+
+/// Round an f64 accumulator back to f32 with a scalar factor.
+#[inline]
+pub fn scaled_to_f32(sh: Shards<'_>, acc: &[f64], factor: f64, out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for_each_chunk_mut(sh, out, &|s, oc| {
+        for (o, &a) in oc.iter_mut().zip(&acc[s..s + oc.len()]) {
+            *o = (a * factor) as f32;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for len in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 7] {
+            let seen: Vec<AtomicU32> = (0..len).map(|_| AtomicU32::new(0)).collect();
+            run_chunked(None, len, &|s, e| {
+                assert!(s % CHUNK == 0 && e - s <= CHUNK && e <= len);
+                for c in &seen[s..e] {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1), "len {len}");
+        }
+    }
+
+    #[test]
+    fn reductions_match_reference_values() {
+        let x = [3.0f32, 4.0];
+        assert!((norm2(None, &x) - 5.0).abs() < 1e-12);
+        assert!((dot(None, &x, &x) - 25.0).abs() < 1e-12);
+        assert!((dist_sq(None, &x, &[0.0, 0.0]) - 25.0).abs() < 1e-12);
+        assert!((asum(None, &[-1.0, 2.0, -3.0]) - 6.0).abs() < 1e-12);
+        assert!((sqnorm_scaled_f64(None, &[2.0f64, -4.0], 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elementwise_kernels_match_reference() {
+        let x = [1.0f32, 2.0];
+        let mut y = [10.0f32, 20.0];
+        axpy(None, 2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        let mut out = [0.0f32; 2];
+        diff(None, &y, &x, &mut out);
+        assert_eq!(out, [11.0, 22.0]);
+        scale(None, &mut out, 2.0);
+        assert_eq!(out, [22.0, 44.0]);
+        add_assign(None, &x, &mut out);
+        assert_eq!(out, [23.0, 46.0]);
+        let mut acc = [0.0f64; 2];
+        fold_f64(None, &mut acc, &x);
+        fold_delta_f64(None, &mut acc, &[2.0, 2.0], &[1.0, 1.0]);
+        assert_eq!(acc, [2.0, 3.0]);
+        let mut acc2 = [1.0f64; 2];
+        add_f64(None, &mut acc2, &acc);
+        assert_eq!(acc2, [3.0, 4.0]);
+        fill_f64(None, &mut acc2, 0.0);
+        assert_eq!(acc2, [0.0, 0.0]);
+        let mut back = [0.0f32; 2];
+        scaled_to_f32(None, &[4.0f64, 8.0], 0.5, &mut back);
+        assert_eq!(back, [2.0, 4.0]);
+        let mut dst = [0.0f32; 2];
+        copy(None, &x, &mut dst);
+        assert_eq!(dst, x);
+    }
+}

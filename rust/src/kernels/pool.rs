@@ -1,0 +1,339 @@
+//! The coordinate shard pool: persistent helper threads that claim
+//! fixed 4096-coordinate chunks of a hot loop.
+//!
+//! The pool exists for the large-d/small-n regime: when a transport has
+//! more threads than workers, the spare threads sit here and lend
+//! themselves to whichever d-dimensional loop is running (a gradient
+//! stencil, a mechanism residual, an f64 fold). Work distribution is
+//! dynamic — threads race on an atomic chunk cursor — but the *results*
+//! are deterministic because every kernel in [`super`] accumulates per
+//! fixed chunk and combines partials in chunk-index order (the
+//! fixed-chunk accumulation contract). Which thread computed a chunk is
+//! therefore unobservable in the output bits.
+//!
+//! Dispatch is a try-lock ([`ShardPool::try_run`]): if the pool is busy
+//! serving another caller the new caller simply runs its loop serially,
+//! which by the contract produces the same bits. No caller ever blocks
+//! on another caller's work, so sharing one pool between all worker
+//! threads of a transport cannot deadlock.
+//!
+//! The dispatch path performs no heap allocation (the job slot, cursor
+//! and counters are pre-allocated; wake-ups are `unpark`), so sharded
+//! rounds stay inside the zero-allocation steady-state envelope pinned
+//! by `alloc_steady`.
+
+use super::{n_chunks, CHUNK};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Spins before a waiter falls back to parking/yielding.
+const SPIN_LIMIT: u32 = 4096;
+
+/// The erased chunk task: called as `f(start, end)` with a
+/// chunk-aligned coordinate range (`end − start ≤ CHUNK`).
+type ChunkFn = dyn Fn(usize, usize) + Sync;
+
+fn noop(_: usize, _: usize) {}
+/// Placeholder job target for the slot before the first dispatch.
+const NOOP: &(dyn Fn(usize, usize) + Sync) = &noop;
+
+struct Job {
+    /// Fat pointer to the dispatcher's closure, lifetime-erased. Only
+    /// dereferenced between the epoch publish and the full helper
+    /// check-in at the end of the same `try_run` call, during which the
+    /// closure is borrowed by the dispatcher's stack frame.
+    f: *const (dyn Fn(usize, usize) + Sync + 'static),
+    len: usize,
+    chunks: usize,
+}
+
+struct Core {
+    job: UnsafeCell<Job>,
+    /// Bumped (Release) once per dispatch after the job slot is written;
+    /// helpers Acquire-load it and then read the slot.
+    epoch: AtomicU64,
+    /// Next chunk index to claim; shared by helpers and the dispatcher.
+    cursor: AtomicUsize,
+    /// Chunks fully executed (any thread).
+    done: AtomicUsize,
+    /// Helpers that have finished participating in the current epoch.
+    checked_in: AtomicUsize,
+    /// Set when a helper's chunk closure panicked this epoch; the
+    /// dispatcher re-raises after the rendezvous.
+    poisoned: AtomicBool,
+    busy: AtomicBool,
+    shutdown: AtomicBool,
+    helpers: usize,
+}
+
+// Core is shared behind Arc across the helper threads; all mutable
+// state is atomics except the job slot, whose access is ordered by the
+// epoch/check-in protocol above.
+unsafe impl Sync for Core {}
+unsafe impl Send for Core {}
+
+/// A pool of persistent coordinate-shard helper threads. See the module
+/// docs for the determinism and non-blocking guarantees.
+pub struct ShardPool {
+    core: Arc<Core>,
+    threads: Vec<std::thread::Thread>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `helpers` (≥ 1) shard helper threads.
+    pub fn new(helpers: usize) -> ShardPool {
+        assert!(helpers >= 1, "a shard pool needs at least one helper");
+        let core = Arc::new(Core {
+            job: UnsafeCell::new(Job { f: NOOP as *const _, len: 0, chunks: 0 }),
+            epoch: AtomicU64::new(0),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            checked_in: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            busy: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            helpers,
+        });
+        let mut joins = Vec::with_capacity(helpers);
+        let mut threads = Vec::with_capacity(helpers);
+        for i in 0..helpers {
+            let c = Arc::clone(&core);
+            let join = std::thread::Builder::new()
+                .name(format!("threepc-shard-{i}"))
+                .spawn(move || helper_loop(&c))
+                .expect("spawning shard helper thread");
+            threads.push(join.thread().clone());
+            joins.push(join);
+        }
+        ShardPool { core, threads, joins }
+    }
+
+    /// Number of helper threads (the dispatcher itself also works, so
+    /// up to `helpers + 1` threads touch a dispatched loop).
+    pub fn helpers(&self) -> usize {
+        self.core.helpers
+    }
+
+    /// Run `f(start, end)` over every fixed chunk of `[0, len)`,
+    /// distributing chunks over the helpers and the calling thread.
+    /// Returns `false` without running anything when the pool is
+    /// already serving another dispatcher — the caller must then run
+    /// the loop serially (same bits, by the fixed-chunk contract).
+    ///
+    /// Blocks until every chunk has executed *and* every helper has
+    /// left the work loop, so the borrow of `f` (and everything it
+    /// captures) ends before this returns — including when `f` panics
+    /// on the dispatcher (a drop guard performs the rendezvous before
+    /// the unwind continues) or on a helper (caught, recorded, and
+    /// re-raised here after the rendezvous).
+    pub fn try_run(&self, len: usize, f: &ChunkFn) -> bool {
+        let core = &*self.core;
+        if core
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        let chunks = n_chunks(len);
+        // Lifetime erasure (fat reference → fat raw pointer, same
+        // layout): the pointer dies (is never read again) once every
+        // helper checks in below, while `f` is still borrowed. A plain
+        // `as` cast chain cannot change the trait object's lifetime
+        // bound, hence the transmute.
+        #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+        let f_erased: *const (dyn Fn(usize, usize) + Sync + 'static) =
+            unsafe { std::mem::transmute(f) };
+        unsafe {
+            let job = &mut *core.job.get();
+            job.f = f_erased;
+            job.len = len;
+            job.chunks = chunks;
+        }
+        core.done.store(0, Ordering::Relaxed);
+        core.checked_in.store(0, Ordering::Relaxed);
+        core.poisoned.store(false, Ordering::Relaxed);
+        core.cursor.store(0, Ordering::Relaxed);
+        core.epoch.fetch_add(1, Ordering::Release);
+        for t in &self.threads {
+            t.unpark();
+        }
+        // From here on the helpers may hold chunk work derived from
+        // `f`'s borrows; the guard waits for every helper to leave the
+        // work loop before this frame can unwind (soundness under a
+        // panicking `f`) and then releases the busy lock.
+        let guard = Rendezvous { core };
+        // The dispatcher claims chunks alongside the helpers.
+        loop {
+            let c = core.cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                break;
+            }
+            let start = c * CHUNK;
+            f(start, (start + CHUNK).min(len));
+            core.done.fetch_add(1, Ordering::Release);
+        }
+        // Normal completion: additionally wait for every chunk's result
+        // (helpers count panicked chunks as done, so this terminates).
+        let mut spins = 0u32;
+        while core.done.load(Ordering::Acquire) < chunks {
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        drop(guard); // full helper rendezvous + busy release
+        if core.poisoned.load(Ordering::Acquire) {
+            panic!("shard helper panicked while executing a chunk task");
+        }
+        true
+    }
+}
+
+/// Dispatcher-side drop guard: waits until every helper has checked in
+/// for the current epoch (no helper can still be touching the job slot
+/// or the dispatched closure's captures), then releases the pool. Runs
+/// on both the normal path and an unwinding one.
+struct Rendezvous<'a> {
+    core: &'a Core,
+}
+
+impl Drop for Rendezvous<'_> {
+    fn drop(&mut self) {
+        let mut spins = 0u32;
+        while self.core.checked_in.load(Ordering::Acquire) < self.core.helpers {
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        self.core.busy.store(false, Ordering::Release);
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        for t in &self.threads {
+            t.unpark();
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn helper_loop(core: &Core) {
+    // The construction-time epoch is 0 by definition. (Loading it here
+    // instead would race with a dispatch that lands before this thread
+    // body runs: the helper would read the already-bumped epoch, skip
+    // the first job, and the dispatcher would wait forever for its
+    // check-in.)
+    let mut seen = 0u64;
+    loop {
+        // Wait for the next epoch: spin briefly (back-to-back kernel
+        // dispatches within a round), then park.
+        let mut spins = 0u32;
+        loop {
+            if core.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let e = core.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::park();
+            }
+        }
+        let (f, len, chunks) = unsafe {
+            let job = &*core.job.get();
+            (job.f, job.len, job.chunks)
+        };
+        loop {
+            let c = core.cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                break;
+            }
+            let start = c * CHUNK;
+            // A panicking chunk must not strand the dispatcher: record
+            // the poison, count the chunk as done, keep going. The
+            // dispatcher re-raises after the rendezvous.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*f)(start, (start + CHUNK).min(len))
+            }));
+            if ok.is_err() {
+                core.poisoned.store(true, Ordering::Release);
+            }
+            core.done.fetch_add(1, Ordering::Release);
+        }
+        core.checked_in.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = ShardPool::new(2);
+        for len in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 5 * CHUNK + 123] {
+            let hits: Vec<AtomicU32> = (0..len).map(|_| AtomicU32::new(0)).collect();
+            let ran = pool.try_run(len, &|s, e| {
+                assert!(e - s <= CHUNK && s % CHUNK == 0);
+                for h in &hits[s..e] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(ran);
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "len {len}");
+        }
+    }
+
+    /// A panicking chunk task must propagate as a dispatcher panic —
+    /// whichever thread executed the chunk — and must leave the pool
+    /// usable, never stranded in the rendezvous wait.
+    #[test]
+    fn chunk_panic_is_reraised_not_hung() {
+        let pool = ShardPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.try_run(4 * CHUNK, &|s, _| {
+                if s == CHUNK {
+                    panic!("chunk boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "the chunk panic must reach the dispatcher");
+        // The pool survives and serves the next dispatch.
+        assert!(pool.try_run(CHUNK, &|_, _| {}));
+    }
+
+    #[test]
+    fn busy_pool_refuses_reentrant_dispatch() {
+        let pool = ShardPool::new(1);
+        let reentrant_ok = AtomicBool::new(true);
+        let ran = pool.try_run(3 * CHUNK, &|_, _| {
+            // A nested dispatch from inside a running job must fall
+            // back to serial, never deadlock.
+            if pool.try_run(CHUNK, &|_, _| {}) {
+                reentrant_ok.store(false, Ordering::Relaxed);
+            }
+        });
+        assert!(ran);
+        assert!(reentrant_ok.load(Ordering::Relaxed), "nested dispatch must be refused");
+        // And the pool is reusable afterwards.
+        assert!(pool.try_run(CHUNK, &|_, _| {}));
+    }
+}

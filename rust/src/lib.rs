@@ -9,7 +9,10 @@
 //!
 //! * **L3 (this crate)** — the distributed coordinator: the 3PC mechanism
 //!   family ([`mechanisms`]), contractive/unbiased compressors
-//!   ([`compressors`]), the leader/worker training runtime
+//!   ([`compressors`]), the coordinate-shardable numeric kernel layer
+//!   under every hot loop ([`kernels`] — fixed-chunk accumulation, so
+//!   sharded and serial execution are bit-identical), the leader/worker
+//!   training runtime
 //!   ([`coordinator`]) built around the composable
 //!   [`TrainSession`](coordinator::TrainSession) —
 //!   `builder(problem).mechanism(map).transport(t).observer(o).config(cfg).run()`
@@ -34,6 +37,7 @@ pub mod compressors;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod mechanisms;
 pub mod problems;
 pub mod runtime;

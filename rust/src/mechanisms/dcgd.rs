@@ -52,7 +52,7 @@ impl ThreePointMap for NaiveDcgd {
         self.c.compress_into(x, ctx, &mut msg);
         let bits = msg.wire_bits();
         let mut g = ctx.take_f32_zeroed(x.len());
-        msg.add_into(&mut g);
+        msg.add_into_sh(ctx.shards(), &mut g);
         let mut parts = ctx.take_parts();
         parts.push(msg);
         *out = Update::Replace { g, bits, wire: ReplaceWire::Fresh(parts) };

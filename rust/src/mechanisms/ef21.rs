@@ -43,7 +43,7 @@ impl ThreePointMap for Ef21 {
         // whole apply allocation-free at steady state.
         recycle_update(ctx, out);
         let mut residual = ctx.take_f32_zeroed(x.len());
-        crate::util::linalg::sub(x, h, &mut residual);
+        crate::kernels::diff(ctx.shards(), x, h, &mut residual);
         let mut inc = CVec::Zero { dim: 0 };
         self.c.compress_into(&residual, ctx, &mut inc);
         ctx.put_f32(residual);

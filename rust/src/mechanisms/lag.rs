@@ -15,12 +15,14 @@
 
 use super::{ef21::Ef21, recycle_update, MechParams, ReplaceWire, ThreePointMap, Update};
 use crate::compressors::{CVec, Contractive, Ctx, CtxInfo};
-use crate::util::linalg::dist_sq;
+use crate::kernels::{self, Shards};
 
-/// The shared trigger predicate `‖x − h‖² > ζ‖x − y‖²`.
+/// The shared trigger predicate `‖x − h‖² > ζ‖x − y‖²`. The two
+/// distance scans run on the chunked kernels, so a sharded evaluation
+/// reaches the same fire/skip decision bit-for-bit as a serial one.
 #[inline]
-pub fn lag_trigger(h: &[f32], y: &[f32], x: &[f32], zeta: f64) -> bool {
-    dist_sq(x, h) > zeta * dist_sq(x, y)
+pub fn lag_trigger(sh: Shards<'_>, h: &[f32], y: &[f32], x: &[f32], zeta: f64) -> bool {
+    kernels::dist_sq(sh, x, h) > zeta * kernels::dist_sq(sh, x, y)
 }
 
 pub struct Lag {
@@ -41,7 +43,7 @@ impl ThreePointMap for Lag {
 
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
-        if lag_trigger(h, y, x, self.zeta) {
+        if lag_trigger(ctx.shards(), h, y, x, self.zeta) {
             let g = ctx.take_f32_copy(x);
             *out = Update::Replace { g, bits: 32 * x.len() as u64, wire: ReplaceWire::Dense };
         }
@@ -73,11 +75,11 @@ impl ThreePointMap for Clag {
 
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
-        if !lag_trigger(h, y, x, self.zeta) {
+        if !lag_trigger(ctx.shards(), h, y, x, self.zeta) {
             return; // slot stays `Keep`
         }
         let mut residual = ctx.take_f32_zeroed(x.len());
-        crate::util::linalg::sub(x, h, &mut residual);
+        crate::kernels::diff(ctx.shards(), x, h, &mut residual);
         let mut inc = CVec::Zero { dim: 0 };
         self.c.compress_into(&residual, ctx, &mut inc);
         ctx.put_f32(residual);

@@ -46,7 +46,7 @@ impl ThreePointMap for V5 {
         // g = h + C(x − y): compress the *gradient difference*
         // (the increment is relative to h, applied by the wrapper).
         let mut diff = ctx.take_f32_zeroed(x.len());
-        crate::util::linalg::sub(x, y, &mut diff);
+        crate::kernels::diff(ctx.shards(), x, y, &mut diff);
         let mut inc = CVec::Zero { dim: 0 };
         self.c.compress_into(&diff, ctx, &mut inc);
         ctx.put_f32(diff);
@@ -101,7 +101,7 @@ impl ThreePointMap for Marina {
             return;
         }
         let mut diff = ctx.take_f32_zeroed(x.len());
-        crate::util::linalg::sub(x, y, &mut diff);
+        crate::kernels::diff(ctx.shards(), x, y, &mut diff);
         let mut inc = CVec::Zero { dim: 0 };
         self.q.compress_into(&diff, ctx, &mut inc);
         ctx.put_f32(diff);

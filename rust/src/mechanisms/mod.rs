@@ -45,7 +45,7 @@ pub use v3::V3;
 pub use v4::V4;
 
 use crate::compressors::{CVec, Ctx, CtxInfo, MechScratch};
-use crate::util::linalg;
+use crate::kernels;
 
 /// The constants `(A, B)` of inequality (6), per Table 1 (with the
 /// optimal `s*` already substituted where the method has a free `s`).
@@ -291,10 +291,15 @@ impl MechWorker {
     ) -> f64 {
         // Salvage last round's buffers, then run the map with the pool
         // attached — the whole apply is allocation-free at steady state.
+        // The shard handle rides along: every O(d) loop below (and
+        // inside the map) may fan out over idle pool threads with
+        // bit-identical results (kernels fixed-chunk contract).
+        let sh = ctx.shards();
         let prev = std::mem::replace(&mut self.update, Update::Keep);
         self.scratch.reclaim_update(prev);
         let mut scratched =
-            Ctx::with_scratch(ctx.info, &mut *ctx.rng, ctx.round_seed, &mut self.scratch);
+            Ctx::with_scratch(ctx.info, &mut *ctx.rng, ctx.round_seed, &mut self.scratch)
+                .sharded(sh);
         self.map.apply_into(&self.h, &self.y, grad_new, &mut scratched, &mut self.update);
         drop(scratched);
         if !delta_acc.is_empty() {
@@ -303,22 +308,14 @@ impl MechWorker {
                 Update::Keep => {}
                 Update::Increment { inc, .. } => match inc {
                     CVec::Zero { .. } => {}
-                    CVec::Dense(v) => {
-                        for (a, &x) in delta_acc.iter_mut().zip(v) {
-                            *a += x as f64;
-                        }
-                    }
+                    CVec::Dense(v) => kernels::fold_f64(sh, delta_acc, v),
                     CVec::Sparse { idx, val, .. } => {
                         for (&i, &v) in idx.iter().zip(val) {
                             delta_acc[i as usize] += v as f64;
                         }
                     }
                 },
-                Update::Replace { g, .. } => {
-                    for i in 0..g.len() {
-                        delta_acc[i] += g[i] as f64 - self.h[i] as f64;
-                    }
-                }
+                Update::Replace { g, .. } => kernels::fold_delta_f64(sh, delta_acc, g, &self.h),
             }
         }
         // Advance h in place (perf: `apply_update` would clone a fresh
@@ -326,11 +323,11 @@ impl MechWorker {
         // see EXPERIMENTS.md §Perf iteration 1).
         match &self.update {
             Update::Keep => {}
-            Update::Increment { inc, .. } => inc.add_into(&mut self.h),
-            Update::Replace { g, .. } => self.h.copy_from_slice(g),
+            Update::Increment { inc, .. } => inc.add_into_sh(sh, &mut self.h),
+            Update::Replace { g, .. } => kernels::copy(sh, g, &mut self.h),
         }
-        self.y.copy_from_slice(grad_new);
-        linalg::dist_sq(&self.h, grad_new)
+        kernels::copy(sh, grad_new, &mut self.y);
+        kernels::dist_sq(sh, &self.h, grad_new)
     }
 }
 

@@ -30,14 +30,15 @@ impl ThreePointMap for V1 {
 
     fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
+        let sh = ctx.shards();
         let d = x.len();
         let mut diff = ctx.take_f32_zeroed(d);
-        crate::util::linalg::sub(x, y, &mut diff);
+        crate::kernels::diff(sh, x, y, &mut diff);
         let mut comp = CVec::Zero { dim: 0 };
         self.c.compress_into(&diff, ctx, &mut comp);
         ctx.put_f32(diff);
         let mut g = ctx.take_f32_copy(y);
-        comp.add_into(&mut g);
+        comp.add_into_sh(sh, &mut g);
         // Wire cost: dense shift y (the server has no copy) + the
         // compressed difference — the paper's d + K floats per node.
         let bits = 32 * d as u64 + comp.wire_bits();

@@ -30,25 +30,25 @@ impl ThreePointMap for V2 {
 
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
+        let sh = ctx.shards();
         let d = x.len();
         // b = h + Q(x − y); the diff buffer is then rebuilt in place
         // into b (one pooled buffer serves both roles).
         let mut diff = ctx.take_f32_zeroed(d);
-        crate::util::linalg::sub(x, y, &mut diff);
+        crate::kernels::diff(sh, x, y, &mut diff);
         let mut qmsg = CVec::Zero { dim: 0 };
         self.q.compress_into(&diff, ctx, &mut qmsg);
         let mut b = diff;
-        b.clear();
-        b.extend_from_slice(h);
-        qmsg.add_into(&mut b);
+        crate::kernels::copy(sh, h, &mut b);
+        qmsg.add_into_sh(sh, &mut b);
         // g = b + C(x − b)
         let mut residual = ctx.take_f32_zeroed(d);
-        crate::util::linalg::sub(x, &b, &mut residual);
+        crate::kernels::diff(sh, x, &b, &mut residual);
         let mut cmsg = CVec::Zero { dim: 0 };
         self.c.compress_into(&residual, ctx, &mut cmsg);
         ctx.put_f32(residual);
         let mut g = b;
-        cmsg.add_into(&mut g);
+        cmsg.add_into_sh(sh, &mut g);
         let bits = qmsg.wire_bits() + cmsg.wire_bits();
         // Both compressed messages ARE the wire content: the server
         // rebuilds g = h + Q(x−y) + C(x−b) from its mirror of h.

@@ -32,6 +32,7 @@ impl ThreePointMap for V3 {
 
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
+        let sh = ctx.shards();
         let mut inner_update = Update::Keep;
         self.inner.apply_into(h, y, x, ctx, &mut inner_update);
         let inner_bits = update_bits(&inner_update);
@@ -42,18 +43,18 @@ impl ThreePointMap for V3 {
             Update::Keep => b.extend_from_slice(h),
             Update::Increment { inc, .. } => {
                 b.extend_from_slice(h);
-                inc.add_into(&mut b);
+                inc.add_into_sh(sh, &mut b);
             }
             Update::Replace { g, .. } => b.extend_from_slice(g),
         }
         let mut residual = ctx.take_f32_zeroed(x.len());
-        crate::util::linalg::sub(x, &b, &mut residual);
+        crate::kernels::diff(sh, x, &b, &mut residual);
         let mut cmsg = CVec::Zero { dim: 0 };
         self.c.compress_into(&residual, ctx, &mut cmsg);
         ctx.put_f32(residual);
         let bits = inner_bits + cmsg.wire_bits();
         let mut g = b;
-        cmsg.add_into(&mut g);
+        cmsg.add_into_sh(sh, &mut g);
         // The stack's wire content is the inner mechanism's messages
         // followed by the correction C(x−b), all relative to whatever
         // base the inner content used.

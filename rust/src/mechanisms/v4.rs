@@ -33,20 +33,21 @@ impl ThreePointMap for V4 {
 
     fn apply_into(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
+        let sh = ctx.shards();
         let d = x.len();
         let mut residual = ctx.take_f32_zeroed(d);
-        crate::util::linalg::sub(x, h, &mut residual);
+        crate::kernels::diff(sh, x, h, &mut residual);
         let mut m2 = CVec::Zero { dim: 0 };
         self.c2.compress_into(&residual, ctx, &mut m2);
         let mut b = ctx.take_f32_copy(h);
-        m2.add_into(&mut b);
-        crate::util::linalg::sub(x, &b, &mut residual);
+        m2.add_into_sh(sh, &mut b);
+        crate::kernels::diff(sh, x, &b, &mut residual);
         let mut m1 = CVec::Zero { dim: 0 };
         self.c1.compress_into(&residual, ctx, &mut m1);
         ctx.put_f32(residual);
         let bits = m2.wire_bits() + m1.wire_bits();
         let mut g = b;
-        m1.add_into(&mut g);
+        m1.add_into_sh(sh, &mut g);
         // g = h + C₂(x−h) + C₁(x−b): both messages relative to the
         // server's mirror of h.
         let mut parts = ctx.take_parts();

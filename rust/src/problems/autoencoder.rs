@@ -17,7 +17,7 @@
 //! so does our harness (no smoothness certificate is attached).
 
 use super::LocalProblem;
-use crate::util::linalg;
+use crate::kernels;
 
 pub struct Autoencoder {
     /// Row-major `(m, d_f)` data shard.
@@ -56,7 +56,7 @@ impl Autoencoder {
             let arow = &self.data[i * df..(i + 1) * df];
             let zrow = &mut z[i * de..(i + 1) * de];
             for (k, zk) in zrow.iter_mut().enumerate() {
-                *zk = linalg::dot(arow, &em[k * df..(k + 1) * df]) as f32;
+                *zk = kernels::dot(None, arow, &em[k * df..(k + 1) * df]) as f32;
             }
         }
         // R = Z Dᵀ − A: (m,de)·(de,df); D is (df,de) row-major →
@@ -67,7 +67,7 @@ impl Autoencoder {
             let arow = &self.data[i * df..(i + 1) * df];
             let rrow = &mut r[i * df..(i + 1) * df];
             for j in 0..df {
-                rrow[j] = linalg::dot(zrow, &dm[j * de..(j + 1) * de]) as f32 - arow[j];
+                rrow[j] = kernels::dot(None, zrow, &dm[j * de..(j + 1) * de]) as f32 - arow[j];
             }
         }
         (r, z)
@@ -82,7 +82,7 @@ impl LocalProblem for Autoencoder {
     fn loss(&self, x: &[f32]) -> f64 {
         let (dm, em) = self.split_params(x);
         let (r, _z) = self.forward(dm, em);
-        linalg::norm2_sq(&r) / self.m as f64
+        kernels::sqnorm(None, &r) / self.m as f64
     }
 
     fn grad(&self, x: &[f32], out: &mut [f32]) {
@@ -101,11 +101,11 @@ impl LocalProblem for Autoencoder {
                 for j in 0..df {
                     let rij = rrow[j];
                     if rij != 0.0 {
-                        linalg::axpy(rij, zrow, &mut gd[j * de..(j + 1) * de]);
+                        kernels::axpy(None, rij, zrow, &mut gd[j * de..(j + 1) * de]);
                     }
                 }
             }
-            linalg::scale(gd, scale);
+            kernels::scale(None, gd, scale);
         }
         // ∇E = (2/m)·Dᵀ Rᵀ A → first S = Rᵀ... computed per-sample:
         // ∇E[k][j] = Σ_i (Dᵀ rᵢ)[k] · A[i][j]; let u = Dᵀ rᵢ ∈ R^{de}.
@@ -121,16 +121,16 @@ impl LocalProblem for Autoencoder {
                 for j in 0..df {
                     let rij = rrow[j];
                     if rij != 0.0 {
-                        linalg::axpy(rij, &dm[j * de..(j + 1) * de], &mut u);
+                        kernels::axpy(None, rij, &dm[j * de..(j + 1) * de], &mut u);
                     }
                 }
                 for (k, &uk) in u.iter().enumerate() {
                     if uk != 0.0 {
-                        linalg::axpy(uk, arow, &mut ge[k * df..(k + 1) * df]);
+                        kernels::axpy(None, uk, arow, &mut ge[k * df..(k + 1) * df]);
                     }
                 }
             }
-            linalg::scale(ge, scale);
+            kernels::scale(None, ge, scale);
         }
     }
 }

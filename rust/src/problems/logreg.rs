@@ -12,7 +12,7 @@
 //! `∇f(x) = (1/N) Σᵢ −yᵢ σ(−yᵢ aᵢᵀx) aᵢ + λ · 2x/(1+x²)²` (elementwise).
 
 use super::LocalProblem;
-use crate::util::linalg;
+use crate::kernels;
 
 /// One worker's shard: `rows` is row-major `(m, d)`, labels in {−1, +1}.
 pub struct LogReg {
@@ -40,15 +40,15 @@ impl LogReg {
     /// by power iteration on AᵀA (matrix-free).
     pub fn smoothness_bound(&self) -> f64 {
         let mut v = vec![1.0f32; self.d];
-        let norm0 = linalg::norm2(&v);
-        linalg::scale(&mut v, (1.0 / norm0) as f32);
+        let norm0 = kernels::norm2(None, &v);
+        kernels::scale(None, &mut v, (1.0 / norm0) as f32);
         let mut av = vec![0.0f32; self.m];
         let mut atav = vec![0.0f32; self.d];
         let mut lam_max = 0.0f64;
         for _ in 0..50 {
-            linalg::matvec(&self.rows, self.m, self.d, &v, &mut av);
-            linalg::matvec_t(&self.rows, self.m, self.d, &av, &mut atav);
-            lam_max = linalg::norm2(&atav);
+            kernels::dense::matvec(&self.rows, self.m, self.d, &v, &mut av);
+            kernels::dense::matvec_t(&self.rows, self.m, self.d, &av, &mut atav);
+            lam_max = kernels::norm2(None, &atav);
             if lam_max == 0.0 {
                 break;
             }
@@ -92,7 +92,7 @@ impl LocalProblem for LogReg {
         let mut acc = 0.0f64;
         for i in 0..self.m {
             let row = &self.rows[i * self.d..(i + 1) * self.d];
-            let margin = self.labels[i] as f64 * linalg::dot(row, x);
+            let margin = self.labels[i] as f64 * kernels::dot(None, row, x);
             acc += softplus(-margin);
         }
         let mut reg = 0.0f64;
@@ -109,9 +109,9 @@ impl LocalProblem for LogReg {
         for i in 0..self.m {
             let row = &self.rows[i * self.d..(i + 1) * self.d];
             let y = self.labels[i] as f64;
-            let margin = y * linalg::dot(row, x);
+            let margin = y * kernels::dot(None, row, x);
             let coef = (-y * sigmoid(-margin) / self.m as f64) as f32;
-            linalg::axpy(coef, row, out);
+            kernels::axpy(None, coef, row, out);
         }
         // Regulariser: λ · 2x/(1+x²)².
         for (o, &xi) in out.iter_mut().zip(x) {
@@ -158,7 +158,7 @@ mod tests {
         let mut g = vec![0.0f32; 6];
         p.grad(&x, &mut g);
         let mut x2 = x.clone();
-        linalg::axpy(-0.1, &g, &mut x2);
+        kernels::axpy(None, -0.1, &g, &mut x2);
         assert!(p.loss(&x2) < p.loss(&x));
     }
 
@@ -183,7 +183,7 @@ mod tests {
         let mut g = vec![0.0f32; 8];
         p.grad(&x, &mut g);
         let mut x2 = x.clone();
-        linalg::axpy((-1.0 / l) as f32, &g, &mut x2);
+        kernels::axpy(None, (-1.0 / l) as f32, &g, &mut x2);
         assert!(p.loss(&x2) <= p.loss(&x) + 1e-12);
     }
 }

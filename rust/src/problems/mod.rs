@@ -17,6 +17,7 @@ pub use autoencoder::Autoencoder;
 pub use logreg::LogReg;
 pub use quadratic::{QuadLocal, QuadSuite};
 
+use crate::kernels::{self, Shards};
 use crate::theory::Smoothness;
 use std::sync::Arc;
 
@@ -26,6 +27,15 @@ pub trait LocalProblem: Send + Sync {
     fn loss(&self, x: &[f32]) -> f64;
     /// Write `∇f_i(x)` into `out`.
     fn grad(&self, x: &[f32], out: &mut [f32]);
+
+    /// [`LocalProblem::grad`] with a coordinate shard pool: problems
+    /// whose gradient is a per-coordinate map (the quadratic stencil)
+    /// override this to fan the loop out over idle pool threads, with
+    /// bit-identical output (the [`crate::kernels`] fixed-chunk
+    /// contract). The default ignores the pool.
+    fn grad_sh(&self, x: &[f32], out: &mut [f32], _sh: Shards<'_>) {
+        self.grad(x, out);
+    }
 }
 
 /// The distributed objective `f = (1/n) Σ f_i`.
@@ -69,16 +79,16 @@ impl Distributed {
         let mut tmp = vec![0.0f32; self.dim];
         for l in &self.locals {
             l.grad(x, &mut tmp);
-            crate::util::linalg::add_into_f64(&mut acc, &tmp);
+            kernels::fold_f64(None, &mut acc, &tmp);
         }
-        crate::util::linalg::scaled_to_f32(&acc, 1.0 / self.locals.len() as f64, out);
+        kernels::scaled_to_f32(None, &acc, 1.0 / self.locals.len() as f64, out);
     }
 
     /// Squared norm of the global gradient (convergence criterion).
     pub fn grad_norm_sq(&self, x: &[f32]) -> f64 {
         let mut g = vec![0.0f32; self.dim];
         self.grad(x, &mut g);
-        crate::util::linalg::norm2_sq(&g)
+        kernels::sqnorm(None, &g)
     }
 }
 

@@ -17,6 +17,7 @@
 //! diagonalisable — the maxima are over the same eigenbasis).
 
 use super::{Distributed, LocalProblem};
+use crate::kernels::{self, Shards};
 use crate::theory::Smoothness;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
@@ -35,16 +36,28 @@ impl QuadLocal {
         QuadLocal { nu, shift, b, d }
     }
 
-    /// `out = A x` via the tridiagonal stencil (O(d)).
-    pub fn apply_a(&self, x: &[f32], out: &mut [f32]) {
+    /// `out = A x` via the tridiagonal stencil (O(d)). Each output
+    /// coordinate is an independent 3-point read of `x`, so the loop
+    /// shards over coordinates with bit-identical results.
+    pub fn apply_a_sh(&self, x: &[f32], out: &mut [f32], sh: Shards<'_>) {
         let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(out.len(), d);
         let s = (self.nu / 4.0) as f32;
         let c = self.shift as f32;
-        for i in 0..d {
-            let left = if i > 0 { x[i - 1] } else { 0.0 };
-            let right = if i + 1 < d { x[i + 1] } else { 0.0 };
-            out[i] = s * (2.0 * x[i] - left - right) + c * x[i];
-        }
+        kernels::for_each_chunk_mut(sh, out, &|start, oc| {
+            for (j, oj) in oc.iter_mut().enumerate() {
+                let i = start + j;
+                let left = if i > 0 { x[i - 1] } else { 0.0 };
+                let right = if i + 1 < d { x[i + 1] } else { 0.0 };
+                *oj = s * (2.0 * x[i] - left - right) + c * x[i];
+            }
+        });
+    }
+
+    /// Serial convenience for [`QuadLocal::apply_a_sh`].
+    pub fn apply_a(&self, x: &[f32], out: &mut [f32]) {
+        self.apply_a_sh(x, out, None);
     }
 }
 
@@ -56,14 +69,30 @@ impl LocalProblem for QuadLocal {
     fn loss(&self, x: &[f32]) -> f64 {
         let mut ax = vec![0.0f32; self.d];
         self.apply_a(x, &mut ax);
-        0.5 * crate::util::linalg::dot(x, &ax) - crate::util::linalg::dot(x, &self.b)
+        0.5 * kernels::dot(None, x, &ax) - kernels::dot(None, x, &self.b)
     }
 
     fn grad(&self, x: &[f32], out: &mut [f32]) {
-        self.apply_a(x, out);
-        for (o, &bi) in out.iter_mut().zip(&self.b) {
-            *o -= bi;
-        }
+        self.grad_sh(x, out, None);
+    }
+
+    /// `∇f(x) = A x − b`, the stencil and the `− b` pass fused into one
+    /// coordinate-sharded sweep.
+    fn grad_sh(&self, x: &[f32], out: &mut [f32], sh: Shards<'_>) {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(out.len(), d);
+        let s = (self.nu / 4.0) as f32;
+        let c = self.shift as f32;
+        let b = &self.b;
+        kernels::for_each_chunk_mut(sh, out, &|start, oc| {
+            for (j, oj) in oc.iter_mut().enumerate() {
+                let i = start + j;
+                let left = if i > 0 { x[i - 1] } else { 0.0 };
+                let right = if i + 1 < d { x[i + 1] } else { 0.0 };
+                *oj = s * (2.0 * x[i] - left - right) + c * x[i] - b[i];
+            }
+        });
     }
 }
 

@@ -1,138 +1,93 @@
-//! Dense vector kernels used throughout the coordinator hot path.
+//! Compatibility façade over the [`crate::kernels`] layer.
 //!
-//! All state that crosses the wire is `f32` (matching the HLO artifacts);
-//! accumulations that span many rounds or many workers are carried in
-//! `f64` to keep the server/worker consistency invariant testable.
+//! The dense vector primitives that used to live here were grown into
+//! `rust/src/kernels/` (chunked, vectorized, coordinate-shardable; see
+//! the kernel migration table in PERF.md). These wrappers keep the old
+//! names compiling for cold callers (theory, experiments, tests); hot
+//! paths call [`crate::kernels`] directly and thread a
+//! [`Shards`](crate::kernels::Shards) handle through.
+//!
+//! All state that crosses the wire is `f32` (matching the HLO
+//! artifacts); accumulations that span many rounds or many workers are
+//! carried in `f64` under the kernels' fixed-chunk accumulation
+//! contract, which is what keeps the server/worker consistency
+//! invariant testable for any thread count.
+
+use crate::kernels;
 
 /// Squared Euclidean norm, accumulated in f64.
 #[inline]
 pub fn norm2_sq(x: &[f32]) -> f64 {
-    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    kernels::sqnorm(None, x)
 }
 
 /// Euclidean norm.
 #[inline]
 pub fn norm2(x: &[f32]) -> f64 {
-    norm2_sq(x).sqrt()
+    kernels::norm2(None, x)
 }
 
 /// Squared distance ‖x − y‖².
 #[inline]
 pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    x.iter()
-        .zip(y)
-        .map(|(&a, &b)| {
-            let d = a as f64 - b as f64;
-            d * d
-        })
-        .sum()
+    kernels::dist_sq(None, x, y)
 }
 
 /// Dot product in f64.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+    kernels::dot(None, x, y)
 }
 
 /// `y += a * x`.
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    kernels::axpy(None, a, x, y);
 }
 
 /// `out = x - y`.
 #[inline]
 pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
-        out[i] = x[i] - y[i];
-    }
+    kernels::diff(None, x, y, out);
 }
 
 /// `x *= a` in place.
 #[inline]
 pub fn scale(x: &mut [f32], a: f32) {
-    for v in x.iter_mut() {
-        *v *= a;
-    }
+    kernels::scale(None, x, a);
 }
 
 /// Copy `src` into `dst`.
 #[inline]
 pub fn copy(src: &[f32], dst: &mut [f32]) {
-    dst.copy_from_slice(src);
+    kernels::copy(None, src, dst);
 }
 
 /// `acc += x` with an f64 accumulator.
 #[inline]
 pub fn add_into_f64(acc: &mut [f64], x: &[f32]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (a, &v) in acc.iter_mut().zip(x) {
-        *a += v as f64;
-    }
+    kernels::fold_f64(None, acc, x);
 }
 
 /// Round an f64 accumulator back to f32 with a scalar factor.
 #[inline]
 pub fn scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]) {
-    debug_assert_eq!(acc.len(), out.len());
-    for (o, &a) in out.iter_mut().zip(acc) {
-        *o = (a * factor) as f32;
-    }
+    kernels::scaled_to_f32(None, acc, factor, out);
 }
 
 /// Dense mat-vec: `out = M x` where `M` is row-major `(rows, cols)`.
 pub fn matvec(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(m.len(), rows * cols);
-    debug_assert_eq!(x.len(), cols);
-    debug_assert_eq!(out.len(), rows);
-    for r in 0..rows {
-        let row = &m[r * cols..(r + 1) * cols];
-        out[r] = dot(row, x) as f32;
-    }
+    kernels::dense::matvec(m, rows, cols, x, out);
 }
 
 /// Dense transposed mat-vec: `out = Mᵀ x`, `M` row-major `(rows, cols)`.
 pub fn matvec_t(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(m.len(), rows * cols);
-    debug_assert_eq!(x.len(), rows);
-    debug_assert_eq!(out.len(), cols);
-    out.iter_mut().for_each(|o| *o = 0.0);
-    for r in 0..rows {
-        let row = &m[r * cols..(r + 1) * cols];
-        let xr = x[r];
-        if xr != 0.0 {
-            axpy(xr, row, out);
-        }
-    }
+    kernels::dense::matvec_t(m, rows, cols, x, out);
 }
 
 /// `out = A B` with row-major `A (m,k)`, `B (k,n)`, `out (m,n)`.
-///
-/// Simple ikj loop order (cache-friendly over `B` rows); the heavy matmuls
-/// in this project run through the HLO/Pallas path — this native version
-/// is the oracle and the sweep fast-path for small models.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.iter_mut().for_each(|o| *o = 0.0);
-    for i in 0..m {
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip != 0.0 {
-                let brow = &b[p * n..(p + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                axpy(aip, brow, orow);
-            }
-        }
-    }
+    kernels::dense::matmul(a, b, m, k, n, out);
 }
 
 #[cfg(test)]

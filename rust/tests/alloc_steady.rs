@@ -16,6 +16,7 @@ use threepc::compressors::{Ctx, CtxInfo};
 use threepc::coordinator::{
     Framed, InitPolicy, RoundAggregate, TrainConfig, Transport, TransportLink, WorkerState,
 };
+use threepc::kernels::{ShardPool, Shards};
 use threepc::mechanisms::{parse_mechanism, MechWorker, Update};
 use threepc::problems::quadratic;
 use threepc::util::rng::Pcg64;
@@ -75,9 +76,24 @@ fn drive(
     t0: u64,
     rounds: u64,
 ) {
+    drive_sh(worker, grads, rng, info, delta, t0, rounds, None);
+}
+
+/// [`drive`] with a coordinate shard pool attached to the context.
+#[allow(clippy::too_many_arguments)]
+fn drive_sh(
+    worker: &mut MechWorker,
+    grads: &[Vec<f32>],
+    rng: &mut Pcg64,
+    info: CtxInfo,
+    delta: &mut Vec<f64>,
+    t0: u64,
+    rounds: u64,
+    sh: Shards<'_>,
+) {
     for t in t0..t0 + rounds {
         let grad = &grads[(t as usize) % grads.len()];
-        let mut ctx = Ctx::new(info, rng, t);
+        let mut ctx = Ctx::new(info, rng, t).sharded(sh);
         worker.round_acc(grad, &mut ctx, delta);
     }
 }
@@ -175,6 +191,57 @@ fn framed_link_round_is_allocation_free_at_steady_state() {
         }
     });
     assert_eq!(allocs, 0, "steady-state Framed rounds must not allocate");
+}
+
+/// The coordinate-sharded path must stay inside the zero-allocation
+/// envelope: dispatching a kernel to the shard pool is unpark + atomics
+/// against pre-allocated state, and the per-dispatcher chunk-partial
+/// buffer is a thread-local that warms once. Counters are thread-local,
+/// so this pins the dispatcher side (the worker thread driving the
+/// round); helper threads execute only the dispatched chunk arithmetic,
+/// which owns no allocation sites.
+#[test]
+fn sharded_round_acc_is_allocation_free_at_steady_state() {
+    // d ≥ SHARD_MIN so the kernels actually dispatch to the pool.
+    let d = 8 * threepc::kernels::CHUNK;
+    assert!(d >= threepc::kernels::SHARD_MIN);
+    let info = CtxInfo::single(d);
+    let pool = ShardPool::new(2);
+    let sh: Shards<'_> = Some(&pool);
+    let map = parse_mechanism("ef21:top64").unwrap();
+    let grads = gradient_cycle(d, 3, 0x54a6d);
+    let mut worker = MechWorker::new(map, vec![0.0f32; d], grads[0].clone());
+    let mut rng = Pcg64::seed(4);
+    let mut delta = vec![0.0f64; d];
+
+    // Warm the scratch pool AND the dispatcher's thread-local partial
+    // buffer (first sharded reduction grows it once).
+    drive_sh(&mut worker, &grads, &mut rng, info, &mut delta, 0, 10, sh);
+
+    let allocs = count_allocs(|| {
+        drive_sh(&mut worker, &grads, &mut rng, info, &mut delta, 10, 20, sh);
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state sharded round_acc must not allocate on the dispatcher thread"
+    );
+    assert!(matches!(worker.last_update(), Update::Increment { .. }));
+
+    // And the sharded trajectory is the serial trajectory, bit for bit
+    // (the kernels' fixed-chunk contract, end to end): replay the same
+    // rounds serially from a fresh worker and compare the final state.
+    let map2 = parse_mechanism("ef21:top64").unwrap();
+    let mut serial = MechWorker::new(map2, vec![0.0f32; d], grads[0].clone());
+    let mut rng2 = Pcg64::seed(4);
+    let mut delta2 = vec![0.0f64; d];
+    drive(&mut serial, &grads, &mut rng2, info, &mut delta2, 0, 30);
+    assert_eq!(serial.g().len(), worker.g().len());
+    for (i, (a, b)) in serial.g().iter().zip(worker.g()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "g[{i}] diverged: {a} vs {b}");
+    }
+    for (i, (a, b)) in delta2.iter().zip(&delta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "delta[{i}] diverged: {a} vs {b}");
+    }
 }
 
 #[test]

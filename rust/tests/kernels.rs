@@ -1,0 +1,235 @@
+//! Serial ≡ sharded bit-identity for the kernel layer — the fixed-chunk
+//! accumulation contract, pinned.
+//!
+//! Every reduction and elementwise kernel must produce *bit-identical*
+//! results whether it runs serially or fanned out over a [`ShardPool`]
+//! of any helper count, for sizes straddling the chunk boundaries
+//! (d = 1, 4095, 4096, 4097, …, 2^20). This is what makes coordinate
+//! sharding trace-invisible (the `session_api` thread-count equivalence
+//! test pins the end-to-end consequence).
+
+use threepc::kernels::{self, ShardPool, Shards, CHUNK, SHARD_MIN};
+use threepc::util::rng::Pcg64;
+
+fn vec_f32(rng: &mut Pcg64, d: usize, scale: f64) -> Vec<f32> {
+    (0..d).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn vec_f64(rng: &mut Pcg64, d: usize) -> Vec<f64> {
+    (0..d).map(|_| rng.normal()).collect()
+}
+
+/// The boundary-straddling size ladder from the issue, plus sizes above
+/// the dispatch threshold so the pool actually engages. (Dispatch
+/// requires `len >= SHARD_MIN` *and* more chunks than helpers; smaller
+/// sizes exercise the contract trivially — sharded call = serial path —
+/// while the pool-partition test below drives them through the pool
+/// directly.)
+fn sizes() -> Vec<usize> {
+    vec![
+        1,
+        CHUNK - 1,       // 4095
+        CHUNK,           // 4096
+        CHUNK + 1,       // 4097
+        SHARD_MIN,       // smallest size that can dispatch (1 helper)
+        SHARD_MIN + 1,
+        3 * CHUNK + 17,
+        8 * CHUNK,       // dispatches for every helper count used here
+        1 << 20,         // the large-d bench regime
+        (1 << 20) + CHUNK - 1,
+    ]
+}
+
+fn assert_bits_eq_f32(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coordinate {i}: {x} vs {y}");
+    }
+}
+
+fn assert_bits_eq_f64(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coordinate {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn reductions_serial_equals_sharded_bit_for_bit() {
+    let mut rng = Pcg64::seed(0x5eed5);
+    for helpers in [1usize, 2, 3] {
+        let pool = ShardPool::new(helpers);
+        let sh: Shards<'_> = Some(&pool);
+        for d in sizes() {
+            let x = vec_f32(&mut rng, d, 1.5);
+            let y = vec_f32(&mut rng, d, 0.7);
+            let v = vec_f64(&mut rng, d);
+            let label = format!("d={d} helpers={helpers}");
+            assert_eq!(
+                kernels::sqnorm(None, &x).to_bits(),
+                kernels::sqnorm(sh, &x).to_bits(),
+                "sqnorm {label}"
+            );
+            assert_eq!(
+                kernels::dist_sq(None, &x, &y).to_bits(),
+                kernels::dist_sq(sh, &x, &y).to_bits(),
+                "dist_sq {label}"
+            );
+            assert_eq!(
+                kernels::dot(None, &x, &y).to_bits(),
+                kernels::dot(sh, &x, &y).to_bits(),
+                "dot {label}"
+            );
+            assert_eq!(
+                kernels::asum(None, &x).to_bits(),
+                kernels::asum(sh, &x).to_bits(),
+                "asum {label}"
+            );
+            assert_eq!(
+                kernels::sqnorm_scaled_f64(None, &v, 0.125).to_bits(),
+                kernels::sqnorm_scaled_f64(sh, &v, 0.125).to_bits(),
+                "sqnorm_scaled_f64 {label}"
+            );
+        }
+    }
+}
+
+#[test]
+fn elementwise_serial_equals_sharded_bit_for_bit() {
+    let mut rng = Pcg64::seed(0xe1e);
+    let pool = ShardPool::new(2);
+    let sh: Shards<'_> = Some(&pool);
+    for d in sizes() {
+        let x = vec_f32(&mut rng, d, 1.0);
+        let y = vec_f32(&mut rng, d, 2.0);
+        let label = format!("d={d}");
+
+        // axpy
+        let mut a = y.clone();
+        let mut b = y.clone();
+        kernels::axpy(None, 0.37, &x, &mut a);
+        kernels::axpy(sh, 0.37, &x, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("axpy {label}"));
+
+        // diff
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        kernels::diff(None, &x, &y, &mut a);
+        kernels::diff(sh, &x, &y, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("diff {label}"));
+
+        // scale / copy / add_assign
+        let mut a = x.clone();
+        let mut b = x.clone();
+        kernels::scale(None, &mut a, -1.25);
+        kernels::scale(sh, &mut b, -1.25);
+        assert_bits_eq_f32(&a, &b, &format!("scale {label}"));
+        kernels::copy(None, &y, &mut a);
+        kernels::copy(sh, &y, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("copy {label}"));
+        kernels::add_assign(None, &x, &mut a);
+        kernels::add_assign(sh, &x, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("add_assign {label}"));
+
+        // f64 folds
+        let seed_acc = vec_f64(&mut rng, d);
+        let mut a = seed_acc.clone();
+        let mut b = seed_acc.clone();
+        kernels::fold_f64(None, &mut a, &x);
+        kernels::fold_f64(sh, &mut b, &x);
+        assert_bits_eq_f64(&a, &b, &format!("fold_f64 {label}"));
+        kernels::fold_delta_f64(None, &mut a, &x, &y);
+        kernels::fold_delta_f64(sh, &mut b, &x, &y);
+        assert_bits_eq_f64(&a, &b, &format!("fold_delta_f64 {label}"));
+        kernels::add_f64(None, &mut a, &seed_acc);
+        kernels::add_f64(sh, &mut b, &seed_acc);
+        assert_bits_eq_f64(&a, &b, &format!("add_f64 {label}"));
+
+        // scaled_to_f32 readout
+        let mut fa = vec![0.0f32; d];
+        let mut fb = vec![0.0f32; d];
+        kernels::scaled_to_f32(None, &a, 1.0 / 3.0, &mut fa);
+        kernels::scaled_to_f32(sh, &b, 1.0 / 3.0, &mut fb);
+        assert_bits_eq_f32(&fa, &fb, &format!("scaled_to_f32 {label}"));
+
+        // fill
+        kernels::fill_f64(None, &mut a, 0.0);
+        kernels::fill_f64(sh, &mut b, 0.0);
+        assert_bits_eq_f64(&a, &b, &format!("fill_f64 {label}"));
+    }
+}
+
+/// Below [`SHARD_MIN`] the public API never dispatches, so the chunk
+/// partition itself is exercised directly through the pool for the
+/// boundary sizes: every coordinate must be visited exactly once, in
+/// chunk-aligned ranges.
+#[test]
+fn pool_partitions_boundary_sizes_exactly() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    let pool = ShardPool::new(2);
+    for d in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3] {
+        let hits: Vec<AtomicU32> = (0..d).map(|_| AtomicU32::new(0)).collect();
+        let ran = pool.try_run(d, &|s, e| {
+            assert_eq!(s % CHUNK, 0, "d={d}: shard start must be chunk-aligned");
+            assert!(e - s <= CHUNK && e <= d, "d={d}: bad shard [{s}, {e})");
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(ran, "d={d}: idle pool must accept the dispatch");
+        assert!(
+            hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+            "d={d}: every coordinate exactly once"
+        );
+    }
+}
+
+/// Helper-count invariance: the same reduction over 1, 2 and 3 helpers
+/// (different shard interleavings at runtime) lands on identical bits.
+#[test]
+fn helper_count_is_unobservable_in_reduction_bits() {
+    let mut rng = Pcg64::seed(77);
+    let d = (1 << 18) + 4095;
+    let x = vec_f32(&mut rng, d, 3.0);
+    let serial = kernels::sqnorm(None, &x).to_bits();
+    for helpers in [1usize, 2, 3, 5] {
+        let pool = ShardPool::new(helpers);
+        // Repeat: chunk→thread assignment varies run to run; bits must not.
+        for rep in 0..5 {
+            assert_eq!(
+                kernels::sqnorm(Some(&pool), &x).to_bits(),
+                serial,
+                "helpers={helpers} rep={rep}"
+            );
+        }
+    }
+}
+
+/// Two threads hammering one pool: the loser of the try-lock degrades
+/// to serial, so both still compute correct (identical) bits.
+#[test]
+fn concurrent_dispatch_degrades_to_serial_not_to_wrong_bits() {
+    let mut rng = Pcg64::seed(9);
+    let d = 1 << 17;
+    let x = vec_f32(&mut rng, d, 1.0);
+    let y = vec_f32(&mut rng, d, 1.0);
+    let expect_x = kernels::sqnorm(None, &x).to_bits();
+    let expect_y = kernels::sqnorm(None, &y).to_bits();
+    let pool = ShardPool::new(2);
+    std::thread::scope(|s| {
+        let pool = &pool;
+        let (x, y) = (&x, &y);
+        let a = s.spawn(move || {
+            for _ in 0..50 {
+                assert_eq!(kernels::sqnorm(Some(pool), x).to_bits(), expect_x);
+            }
+        });
+        let b = s.spawn(move || {
+            for _ in 0..50 {
+                assert_eq!(kernels::sqnorm(Some(pool), y).to_bits(), expect_y);
+            }
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+}

@@ -108,6 +108,63 @@ fn observers_stream_and_stop() {
     assert_eq!(r.records.last().unwrap().t, 6);
 }
 
+/// Coordinate sharding is trace-invisible: with `threads > n` the
+/// surplus threads shard the d-dimensional hot loops, and the kernels'
+/// fixed-chunk accumulation contract guarantees the folded f64 bits are
+/// identical to the unsharded run — for *any* thread count. Pinned at
+/// full precision (`assert_eq!` on the f64 records), on a dimension
+/// large enough that the kernels really dispatch to the pool.
+#[test]
+fn coordinate_sharding_leaves_traces_bit_identical() {
+    // Enough chunks that the kernels dispatch even for the largest
+    // helper count below (the gate requires chunks > helpers).
+    let d = 12 * threepc::kernels::CHUNK;
+    let n = 4;
+    let suite = quadratic::generate(n, d, 1e-3, 0.5, 31);
+    for spec in ["ef21:top128", "clag:top128:2.0", "gd", "lag:4.0"] {
+        let run = |threads: usize| {
+            let c = TrainConfig {
+                gamma: 0.01,
+                max_rounds: 12,
+                threads: 1, // overridden by the transport's own count
+                seed: 13,
+                ..TrainConfig::default()
+            };
+            TrainSession::builder(&suite.problem)
+                .mechanism(parse_mechanism(spec).unwrap())
+                .config(c)
+                .transport(InProcess::new(threads))
+                .run()
+        };
+        // threads = n → no helpers (the pre-sharding layout);
+        // threads > n → same worker partition + 2 or 8 shard helpers.
+        let base = run(n);
+        for threads in [n + 2, n + 8] {
+            let sharded = run(threads);
+            assert_eq!(base.rounds_run, sharded.rounds_run, "{spec} threads={threads}");
+            for (ra, rb) in base.records.iter().zip(&sharded.records) {
+                assert_eq!(
+                    ra.grad_norm_sq.to_bits(),
+                    rb.grad_norm_sq.to_bits(),
+                    "{spec} threads={threads} round {}",
+                    ra.t
+                );
+                assert_eq!(
+                    ra.g_err.to_bits(),
+                    rb.g_err.to_bits(),
+                    "{spec} threads={threads} round {}",
+                    ra.t
+                );
+                assert_eq!(ra.bits_up_cum, rb.bits_up_cum, "{spec} threads={threads}");
+                assert_eq!(ra.skipped_frac, rb.skipped_frac, "{spec} threads={threads}");
+            }
+            for (a, b) in base.final_x.iter().zip(&sharded.final_x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec} threads={threads} final_x");
+            }
+        }
+    }
+}
+
 /// Checkpoints persist the full `(x, g_i)` optimizer state and match
 /// the session's own final state when written on the last round.
 #[test]

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Perf-smoke regression gate for BENCH_hotpath.json (see PERF.md).
+
+Compares a fresh bench report against the baseline checked in at
+`HEAD:BENCH_hotpath.json` (the bench overwrites the working-tree copy,
+so the baseline is always read from git). Rules:
+
+* every case the baseline tracks (its ``cases[].name`` list) must be
+  present in the fresh report with a finite ``ms_per_round`` — coverage
+  cannot silently disappear;
+* when the baseline case carries a measured ``ms_per_round`` number
+  *and* both files were produced in the same bench mode (the ``smoke``
+  flag — PERF.md: compare trajectories only across same-mode runs),
+  the fresh value must be <= REGRESSION_FACTOR x the baseline; a mode
+  mismatch downgrades the ratio check to a printed notice;
+* a baseline value of ``null`` (the ``"source": "bootstrap"`` state the
+  file is first committed in, before any runner has measured it) skips
+  the ratio check for that case and prints a refresh reminder. Arm the
+  CI gate by running ``BENCH_SMOKE=1 cargo bench --bench bench_hotpath``
+  on the reference runner (CI runs in smoke mode, so the baseline must
+  be smoke-mode to gate there) and committing the emitted file over the
+  baseline.
+
+Usage: tools/check_perf_smoke.py [FRESH_JSON] [--baseline FILE]
+       (FRESH_JSON defaults to BENCH_hotpath.json; the baseline
+        defaults to `git show HEAD:BENCH_hotpath.json`.)
+"""
+
+import json
+import subprocess
+import sys
+
+REGRESSION_FACTOR = 2.0
+BASELINE_REF = "HEAD:BENCH_hotpath.json"
+
+
+def load_baseline(path):
+    if path is not None:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    out = subprocess.run(
+        ["git", "show", BASELINE_REF],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    if out.returncode != 0:
+        print(f"[perf-smoke] FAIL: no baseline at {BASELINE_REF}: {out.stderr.strip()}")
+        sys.exit(1)
+    return json.loads(out.stdout)
+
+
+def main(argv):
+    fresh_path = "BENCH_hotpath.json"
+    baseline_path = None
+    args = argv[1:]
+    while args:
+        a = args.pop(0)
+        if a == "--baseline":
+            baseline_path = args.pop(0)
+        else:
+            fresh_path = a
+
+    with open(fresh_path, encoding="utf-8") as f:
+        fresh = json.load(f)
+    baseline = load_baseline(baseline_path)
+
+    fresh_cases = {c["name"]: c for c in fresh.get("cases", [])}
+    same_mode = bool(fresh.get("smoke")) == bool(baseline.get("smoke"))
+    failures = []
+    checked = 0
+    for base_case in baseline.get("cases", []):
+        if "ms_per_round" not in base_case:
+            continue  # baseline only gates round-latency cases
+        name = base_case["name"]
+        got = fresh_cases.get(name)
+        if got is None or not isinstance(got.get("ms_per_round"), (int, float)):
+            failures.append(f"tracked case missing from fresh report: {name!r}")
+            continue
+        fresh_ms = float(got["ms_per_round"])
+        base_ms = base_case["ms_per_round"]
+        if base_ms is None:
+            print(
+                f"[perf-smoke] {name}: {fresh_ms:.2f} ms/round "
+                "(baseline unmeasured — bootstrap; commit a measured "
+                "BENCH_hotpath.json to arm the gate)"
+            )
+            continue
+        if not same_mode:
+            # Smoke medians come from ~1/20 the iterations; gating them
+            # against a full-mode baseline (or vice versa) violates the
+            # same-mode comparison rule, so report without failing.
+            print(
+                f"[perf-smoke] {name}: {fresh_ms:.2f} ms/round vs baseline "
+                f"{float(base_ms):.2f} (bench-mode mismatch: fresh "
+                f"smoke={bool(fresh.get('smoke'))}, baseline "
+                f"smoke={bool(baseline.get('smoke'))} — ratio not gated)"
+            )
+            continue
+        checked += 1
+        ratio = fresh_ms / float(base_ms)
+        verdict = "OK" if ratio <= REGRESSION_FACTOR else "REGRESSED"
+        print(
+            f"[perf-smoke] {name}: {fresh_ms:.2f} ms/round vs baseline "
+            f"{float(base_ms):.2f} ({ratio:.2f}x) {verdict}"
+        )
+        if ratio > REGRESSION_FACTOR:
+            failures.append(
+                f"{name}: {fresh_ms:.2f} ms/round is {ratio:.2f}x the "
+                f"baseline {float(base_ms):.2f} (limit {REGRESSION_FACTOR}x)"
+            )
+
+    if failures:
+        print("[perf-smoke] FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"[perf-smoke] PASS ({checked} gated, {len(baseline.get('cases', []))} tracked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
