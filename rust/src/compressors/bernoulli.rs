@@ -51,6 +51,12 @@ impl Contractive for Bernoulli {
         }
     }
 
+    fn spec(&self) -> String {
+        // The shared-coin variant is not parser-reachable; its spec
+        // degrades to the private-coin form (documented in PROTOCOL.md).
+        format!("bern{}", self.p)
+    }
+
     fn alpha(&self, _info: &CtxInfo) -> f64 {
         self.p
     }

@@ -25,6 +25,10 @@ impl Contractive for ComposedContractive {
         format!("{}*{}", self.first.name(), self.second.name())
     }
 
+    fn spec(&self) -> String {
+        format!("{}*{}", self.first.spec(), self.second.spec())
+    }
+
     fn alpha(&self, info: &CtxInfo) -> f64 {
         // With e₁ = ‖x − C₁x‖² ≤ (1−α₁)‖x‖² and the outer contraction
         // applied to C₁x on an orthogonal support,

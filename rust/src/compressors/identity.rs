@@ -11,6 +11,10 @@ impl Contractive for Identity {
         "Identity".into()
     }
 
+    fn spec(&self) -> String {
+        "identity".into()
+    }
+
     fn alpha(&self, _info: &CtxInfo) -> f64 {
         1.0
     }
@@ -28,6 +32,10 @@ pub struct IdentityUnbiased;
 impl Unbiased for IdentityUnbiased {
     fn name(&self) -> String {
         "Identity".into()
+    }
+
+    fn spec(&self) -> String {
+        "identity".into()
     }
 
     fn omega(&self, _info: &CtxInfo) -> f64 {

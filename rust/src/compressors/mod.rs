@@ -545,8 +545,16 @@ impl CVec {
 
     /// [`CVec::decode`] drawing its output buffers from a
     /// [`MechScratch`] pool — the per-link decode path of the `Framed`
-    /// transport, which reclaims the previous frame's buffers into the
-    /// same pool so steady-state decoding does not allocate.
+    /// and `Socket` transports, which reclaim the previous frame's
+    /// buffers into the same pool so steady-state decoding does not
+    /// allocate.
+    ///
+    /// Hostile-input contract: `dim`/`nnz` are wire-controlled, so
+    /// every body bound is checked in u64 *before* any allocation (the
+    /// naive `4 * dim` products wrap on 32-bit targets), every sparse
+    /// index is range-checked, and duplicate indices are rejected — a
+    /// frame naming a coordinate twice would double-apply it in
+    /// [`CVec::add_into`] and skew the leader's f64 delta folds.
     pub fn decode_pooled(
         buf: &[u8],
         pos: &mut usize,
@@ -555,16 +563,13 @@ impl CVec {
         let tag = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("cvec: truncated tag"))?;
         *pos += 1;
         let dim = read_u32(buf, pos)? as usize;
+        let avail = (buf.len() - *pos) as u64;
         match tag {
             0 => Ok(CVec::Zero { dim }),
             1 => {
-                // Bound-check the whole body before allocating: dim is
-                // wire-controlled, and a corrupt frame must fail with
-                // Err, not an OOM abort.
-                anyhow::ensure!(
-                    buf.len() - *pos >= 4 * dim,
-                    "cvec: truncated dense body (dim {dim})"
-                );
+                // Bound-check the whole body before allocating: a
+                // corrupt frame must fail with Err, not an OOM abort.
+                anyhow::ensure!(avail >= 4 * dim as u64, "cvec: truncated dense body (dim {dim})");
                 let mut v = pool.take_f32(dim);
                 for _ in 0..dim {
                     v.push(read_f32(buf, pos)?);
@@ -573,40 +578,49 @@ impl CVec {
             }
             2 => {
                 let nnz = read_u32(buf, pos)? as usize;
+                // Explicit even though the crossover check subsumes it
+                // today: the decoder's validity envelope must not depend
+                // on the crossover formula staying exactly as-is.
+                anyhow::ensure!(nnz <= dim, "cvec: sparse nnz {nnz} > dim {dim}");
                 anyhow::ensure!(
                     !past_cap_crossover(dim, nnz, 32),
                     "cvec: sparse frame past the dense crossover (nnz {nnz}, dim {dim})"
                 );
-                // Same wire-controlled-allocation guard as the dense arm.
+                let ib = index_bits(dim);
+                let avail = (buf.len() - *pos) as u64;
                 anyhow::ensure!(
-                    buf.len() - *pos
-                        >= 4 * nnz + crate::util::bits::bytes_for_bits(nnz as u64 * index_bits(dim)),
+                    avail >= 4 * nnz as u64 + (nnz as u64 * ib).div_ceil(8),
                     "cvec: truncated sparse body (nnz {nnz})"
                 );
                 let mut val = pool.take_f32(nnz);
                 for _ in 0..nnz {
                     val.push(read_f32(buf, pos)?);
                 }
-                let ib = index_bits(dim) as u32;
-                let packed = crate::util::bits::bytes_for_bits(nnz as u64 * ib as u64);
-                anyhow::ensure!(*pos + packed <= buf.len(), "cvec: truncated index block");
+                let packed = crate::util::bits::bytes_for_bits(nnz as u64 * ib);
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
                 let mut idx = pool.take_u32(nnz);
                 for _ in 0..nnz {
-                    let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
+                    let i = r
+                        .pull(ib as u32)
+                        .ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
                     anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
                     idx.push(i as u32);
                 }
                 *pos += packed;
+                if let Err(e) = ensure_unique_indices(&idx, pool) {
+                    pool.put_u32(idx);
+                    pool.put_f32(val);
+                    return Err(e);
+                }
                 Ok(CVec::Sparse { dim, idx, val })
             }
             3 => {
                 // Dense, natural-coded values (9 bits each).
-                let packed = crate::util::bits::bytes_for_bits(9 * dim as u64);
                 anyhow::ensure!(
-                    buf.len() - *pos >= packed,
+                    avail >= (9 * dim as u64).div_ceil(8),
                     "cvec: truncated natural dense body (dim {dim})"
                 );
+                let packed = crate::util::bits::bytes_for_bits(9 * dim as u64);
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + packed]);
                 let mut v = pool.take_f32(dim);
                 for _ in 0..dim {
@@ -622,13 +636,16 @@ impl CVec {
                 // Sparse, natural-coded values.
                 let nnz = read_u32(buf, pos)? as usize;
                 anyhow::ensure!(nnz <= dim, "cvec: natural sparse nnz {nnz} > dim {dim}");
-                let ib = index_bits(dim) as u32;
-                let vbytes = crate::util::bits::bytes_for_bits(9 * nnz as u64);
-                let ibytes = crate::util::bits::bytes_for_bits(nnz as u64 * ib as u64);
+                let ib = index_bits(dim);
+                let vbits = 9 * nnz as u64;
+                let ibits = nnz as u64 * ib;
+                let avail = (buf.len() - *pos) as u64;
                 anyhow::ensure!(
-                    buf.len() - *pos >= vbytes + ibytes,
+                    avail >= vbits.div_ceil(8) + ibits.div_ceil(8),
                     "cvec: truncated natural sparse body (nnz {nnz})"
                 );
+                let vbytes = crate::util::bits::bytes_for_bits(vbits);
+                let ibytes = crate::util::bits::bytes_for_bits(ibits);
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + vbytes]);
                 let mut val = pool.take_f32(nnz);
                 for _ in 0..nnz {
@@ -641,15 +658,40 @@ impl CVec {
                 let mut r = crate::util::bits::BitReader::new(&buf[*pos..*pos + ibytes]);
                 let mut idx = pool.take_u32(nnz);
                 for _ in 0..nnz {
-                    let i = r.pull(ib).ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
+                    let i = r
+                        .pull(ib as u32)
+                        .ok_or_else(|| anyhow::anyhow!("cvec: truncated index"))?;
                     anyhow::ensure!((i as usize) < dim, "cvec: index {i} out of dim {dim}");
                     idx.push(i as u32);
                 }
                 *pos += ibytes;
+                if let Err(e) = ensure_unique_indices(&idx, pool) {
+                    pool.put_u32(idx);
+                    pool.put_f32(val);
+                    return Err(e);
+                }
                 Ok(CVec::Sparse { dim, idx, val })
             }
             other => anyhow::bail!("cvec: unknown tag {other}"),
         }
+    }
+}
+
+/// Reject wire-carried duplicate coordinate indices (see
+/// [`CVec::decode_pooled`]). Runs in a pooled scratch buffer —
+/// O(nnz log nnz), allocation-free at steady state.
+fn ensure_unique_indices(idx: &[u32], pool: &mut MechScratch) -> anyhow::Result<()> {
+    if idx.len() < 2 {
+        return Ok(());
+    }
+    let mut sorted = pool.take_u32(idx.len());
+    sorted.extend_from_slice(idx);
+    sorted.sort_unstable();
+    let dup = sorted.windows(2).find(|w| w[0] == w[1]).map(|w| w[0]);
+    pool.put_u32(sorted);
+    match dup {
+        Some(i) => anyhow::bail!("cvec: duplicate index {i}"),
+        None => Ok(()),
     }
 }
 
@@ -716,6 +758,13 @@ pub fn past_cap_crossover(dim: usize, nnz: usize, value_bits: u64) -> bool {
 /// so existing callers keep working unchanged.
 pub trait Contractive: Send + Sync {
     fn name(&self) -> String;
+    /// The canonical parseable spec of this compressor: feeding it back
+    /// through [`parse_contractive`] reconstructs an equivalent
+    /// operator. This is what crosses the wire in downlink mechanism
+    /// directives (a [`name`](Contractive::name) is for humans, a spec
+    /// is for peers), so every parser-constructible compressor must
+    /// round-trip.
+    fn spec(&self) -> String;
     /// The contraction parameter α in `E‖C(x) − x‖² ≤ (1−α)‖x‖²`.
     fn alpha(&self, info: &CtxInfo) -> f64;
     /// Compress `x` into `out`, salvaging `out`'s previous buffers (and
@@ -736,6 +785,9 @@ pub trait Contractive: Send + Sync {
 /// implement `compress_into`, call either.
 pub trait Unbiased: Send + Sync {
     fn name(&self) -> String;
+    /// The canonical parseable spec (see [`Contractive::spec`]); must
+    /// round-trip through [`parse_unbiased`].
+    fn spec(&self) -> String;
     /// The variance parameter ω in `E‖Q(x) − x‖² ≤ ω‖x‖²`.
     fn omega(&self, info: &CtxInfo) -> f64;
     /// Buffer-reusing compression (see [`Contractive::compress_into`]).
@@ -755,6 +807,12 @@ pub struct Scaled<Q: Unbiased>(pub Q);
 impl<Q: Unbiased> Contractive for Scaled<Q> {
     fn name(&self) -> String {
         format!("scaled({})", self.0.name())
+    }
+
+    fn spec(&self) -> String {
+        // Matches the parser's `scaled-rand<K>` / `scaled-perm` /
+        // `scaled-natural` grammar for every Q the parser can build.
+        format!("scaled-{}", self.0.spec())
     }
 
     fn alpha(&self, info: &CtxInfo) -> f64 {
@@ -1002,6 +1060,54 @@ mod tests {
     }
 
     #[test]
+    fn decode_rejects_duplicate_sparse_indices() {
+        // A crafted frame naming a coordinate twice would double-apply
+        // it in add_into; both sparse arms must reject it.
+        let good = CVec::Sparse { dim: 1000, idx: vec![1, 10], val: vec![1.0, 2.0] };
+        let mut buf = Vec::new();
+        good.encode(&mut buf);
+        assert!(CVec::decode(&buf, &mut 0).is_ok());
+
+        let dup = CVec::Sparse { dim: 1000, idx: vec![10, 10], val: vec![1.0, 2.0] };
+        let mut buf = Vec::new();
+        dup.encode(&mut buf);
+        assert_eq!(buf[0], 2, "raw sparse tag");
+        assert!(CVec::decode(&buf, &mut 0).is_err(), "tag-2 duplicate index must be rejected");
+
+        let dupn = CVec::Sparse { dim: 1000, idx: vec![7, 7], val: vec![2.0, -4.0] };
+        assert!(dupn.natural_codable());
+        let mut nat = Vec::new();
+        dupn.encode_with(WireValueCoding::Natural, &mut nat);
+        assert_eq!(nat[0], 4, "natural sparse tag");
+        assert!(CVec::decode(&nat, &mut 0).is_err(), "tag-4 duplicate index must be rejected");
+    }
+
+    #[test]
+    fn decode_rejects_hostile_sizes_without_allocating() {
+        // Wire-controlled dim/nnz far beyond the body must fail with
+        // Err before any allocation is sized from them (and without
+        // overflowing the bounds arithmetic on 32-bit targets).
+        let mut buf = vec![1u8]; // dense
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0, 0, 0]);
+        assert!(CVec::decode(&buf, &mut 0).is_err());
+
+        let mut buf = vec![3u8]; // natural dense
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(CVec::decode(&buf, &mut 0).is_err());
+
+        let mut buf = vec![2u8]; // sparse, hostile nnz
+        buf.extend_from_slice(&1000u32.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(CVec::decode(&buf, &mut 0).is_err());
+
+        let mut buf = vec![4u8]; // natural sparse, nnz > dim
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&9u32.to_le_bytes());
+        assert!(CVec::decode(&buf, &mut 0).is_err());
+    }
+
+    #[test]
     fn mech_scratch_best_fit_keeps_request_classes_stable() {
         let mut s = MechScratch::default();
         let mut big = s.take_f32(100);
@@ -1051,5 +1157,22 @@ mod tests {
             assert!(parse_unbiased(spec).is_ok(), "{spec}");
         }
         assert!(parse_contractive("nope").is_err());
+    }
+
+    #[test]
+    fn specs_roundtrip_through_parser() {
+        // The wire carries specs, not display names: parse → spec →
+        // parse must land on an equivalent operator for everything the
+        // grammar can produce.
+        for spec in ["identity", "top16", "crand8", "cperm", "bern0.25", "scaled-rand4", "cperm*crand8", "sign", "scaled-natural"] {
+            let c = parse_contractive(spec).unwrap();
+            let back = parse_contractive(&c.spec()).unwrap();
+            assert_eq!(back.name(), c.name(), "{spec} → {}", c.spec());
+        }
+        for spec in ["rand8", "perm", "identity", "natural"] {
+            let q = parse_unbiased(spec).unwrap();
+            let back = parse_unbiased(&q.spec()).unwrap();
+            assert_eq!(back.name(), q.name(), "{spec} → {}", q.spec());
+        }
     }
 }

@@ -17,6 +17,10 @@ impl Unbiased for Natural {
         "Natural".into()
     }
 
+    fn spec(&self) -> String {
+        "natural".into()
+    }
+
     fn omega(&self, _info: &CtxInfo) -> f64 {
         0.125
     }

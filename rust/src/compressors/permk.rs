@@ -55,6 +55,10 @@ impl Unbiased for PermK {
         "Perm-K".into()
     }
 
+    fn spec(&self) -> String {
+        "perm".into()
+    }
+
     fn omega(&self, info: &CtxInfo) -> f64 {
         // ω = n − 1 (exact when n | d; an upper bound otherwise).
         (info.n_workers.max(1) as f64) - 1.0
@@ -84,6 +88,10 @@ pub struct CPermK;
 impl Contractive for CPermK {
     fn name(&self) -> String {
         "cPerm-K".into()
+    }
+
+    fn spec(&self) -> String {
+        "cperm".into()
     }
 
     fn alpha(&self, info: &CtxInfo) -> f64 {

@@ -25,6 +25,10 @@ impl Unbiased for RandK {
         format!("Rand-{}", self.k)
     }
 
+    fn spec(&self) -> String {
+        format!("rand{}", self.k)
+    }
+
     fn omega(&self, info: &CtxInfo) -> f64 {
         let k = self.k.min(info.dim) as f64;
         info.dim as f64 / k - 1.0
@@ -66,6 +70,10 @@ impl CRandK {
 impl Contractive for CRandK {
     fn name(&self) -> String {
         format!("cRand-{}", self.k)
+    }
+
+    fn spec(&self) -> String {
+        format!("crand{}", self.k)
     }
 
     fn alpha(&self, info: &CtxInfo) -> f64 {

@@ -19,6 +19,10 @@ impl Contractive for SignL1 {
         "SignL1".into()
     }
 
+    fn spec(&self) -> String {
+        "sign".into()
+    }
+
     fn alpha(&self, info: &CtxInfo) -> f64 {
         1.0 / info.dim as f64
     }

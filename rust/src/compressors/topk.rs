@@ -59,6 +59,10 @@ impl Contractive for TopK {
         format!("Top-{}", self.k)
     }
 
+    fn spec(&self) -> String {
+        format!("top{}", self.k)
+    }
+
     fn alpha(&self, info: &CtxInfo) -> f64 {
         (self.k.min(info.dim) as f64) / info.dim as f64
     }

@@ -50,9 +50,16 @@ pub struct TrainResult {
     pub wire_bytes_up: u64,
     /// Bytes actually serialized on the downlink — the
     /// [`MechSwitch`](super::MechSwitch) schedule directives a
-    /// serializing transport pushed through the codec. 0 for in-memory
-    /// transports and for runs whose schedule never switched.
+    /// serializing transport pushed through the codec (plus, for the
+    /// socket transport, the per-round iterate broadcasts). 0 for
+    /// in-memory transports and for runs whose schedule never switched.
     pub wire_bytes_down: u64,
+    /// The wire-path failure that ended the run early, when one did:
+    /// connect/handshake failures, malformed or malicious peer frames,
+    /// a worker dying mid-round. `None` for clean runs, and always
+    /// `None` for the in-memory transports. The trace up to the failed
+    /// round is retained.
+    pub transport_error: Option<super::transport::TransportError>,
     pub elapsed: std::time::Duration,
 }
 
@@ -149,6 +156,7 @@ mod tests {
             total_bits_down: 0,
             wire_bytes_up: 0,
             wire_bytes_down: 0,
+            transport_error: None,
             elapsed: std::time::Duration::ZERO,
             records,
         }

@@ -24,7 +24,12 @@
 //! bills the *declared* `wire_bits` (the paper's accounting);
 //! [`Framed`] serializes every message through the binary codec in
 //! [`protocol`] and bills *measured* encoded bytes, cross-checked
-//! against the declared accounting by the codec tests. The **observer**
+//! against the declared accounting by the codec tests; [`Socket`]
+//! carries the same frames over real TCP/Unix-domain sockets to worker
+//! agents in other processes (`threepc worker --connect`), with an
+//! error-propagating link — every peer failure surfaces as a
+//! [`TransportError`] in [`TrainResult::transport_error`], never a
+//! panic (see PROTOCOL.md). The **observer**
 //! axis ([`RoundObserver`]) streams per-round metrics, persists
 //! `(x, g_i)` checkpoints, and subsumes the classic stop rules
 //! (`grad_tol`, `bits_budget`, `time_limit`, divergence guard), which
@@ -46,6 +51,7 @@ pub mod orchestrator;
 pub mod protocol;
 pub mod server;
 pub mod session;
+pub mod socket;
 pub mod transport;
 pub mod worker;
 
@@ -64,7 +70,10 @@ pub use protocol::{
 };
 pub use server::Server;
 pub use session::{SessionBuilder, TrainConfig, TrainSession};
-pub use transport::{Framed, InProcess, RoundAggregate, Transport, TransportLink};
+pub use socket::{run_worker_agent, AgentConfig, Socket};
+pub use transport::{
+    Framed, InProcess, RoundAggregate, Transport, TransportError, TransportLink,
+};
 pub use worker::{RoundOutcome, WorkerState};
 
 /// A checkpointed optimizer state reorganised for session construction:

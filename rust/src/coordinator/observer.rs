@@ -17,7 +17,7 @@
 //! [`CheckpointObserver`] periodically persists the full optimizer
 //! state `(x, g_i)` via the transport's worker snapshot collective.
 
-use super::transport::TransportLink;
+use super::transport::{TransportError, TransportLink};
 use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -61,8 +61,10 @@ pub struct RoundCtx<'a> {
 
 impl RoundCtx<'_> {
     /// Fetch the current `(worker_id, g_i)` states from the transport
-    /// (a full collective — use periodically).
-    pub fn worker_states(&mut self) -> Vec<(usize, Vec<f32>)> {
+    /// (a full collective — use periodically). Errs when the transport
+    /// can no longer reach its peers; observers should degrade
+    /// gracefully rather than abort the run.
+    pub fn worker_states(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError> {
         self.link.snapshot_g()
     }
 }
@@ -318,12 +320,22 @@ impl CheckpointObserver {
 impl RoundObserver for CheckpointObserver {
     fn on_round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundFlow {
         if ctx.snap.t % self.every == 0 {
+            let worker_g = match ctx.worker_states() {
+                Ok(w) => w,
+                Err(e) => {
+                    // A failing transport already ends the run through
+                    // the round path; the observer just records why the
+                    // checkpoint was skipped.
+                    self.last_error = Some(format!("checkpoint snapshot: {e}"));
+                    return RoundFlow::Continue;
+                }
+            };
             let cp = Checkpoint {
                 t: ctx.snap.t,
                 grad_norm_sq: ctx.snap.grad_norm_sq,
                 x: ctx.snap.x.to_vec(),
                 g_sum: ctx.snap.g_sum.to_vec(),
-                worker_g: ctx.worker_states(),
+                worker_g,
             };
             self.write(&cp);
         }

@@ -22,7 +22,7 @@
 //!   tag 4 (Replace/FromPrev) body = nparts:u8  cvec*
 //! ```
 
-use crate::compressors::{CVec, MechScratch, WireValueCoding};
+use crate::compressors::{read_f32, read_u32, CVec, MechScratch, WireValueCoding};
 use crate::mechanisms::{update_bits, ReplaceWire, Update};
 use anyhow::{bail, ensure, Result};
 
@@ -286,7 +286,7 @@ fn reclaim_wire(pool: &mut MechScratch, u: WireUpdate) {
 /// nothing at steady state. On error the slot is left in a valid but
 /// unspecified state (its previous contents already reclaimed).
 pub fn decode_uplink_into(buf: &[u8], slot: &mut WireMsg, pool: &mut MechScratch) -> Result<()> {
-    use crate::compressors::{read_f32, read_f64, read_u32};
+    use crate::compressors::read_f64;
     reclaim_wire(pool, std::mem::replace(&mut slot.update, WireUpdate::Keep));
     let mut pos = 0usize;
     slot.worker_id = read_u32(buf, &mut pos)? as usize;
@@ -298,7 +298,12 @@ pub fn decode_uplink_into(buf: &[u8], slot: &mut WireMsg, pool: &mut MechScratch
         1 => WireUpdate::Increment(CVec::decode_pooled(buf, &mut pos, pool)?),
         2 => {
             let dim = read_u32(buf, &mut pos)? as usize;
-            ensure!(buf.len() - pos >= 4 * dim, "uplink: truncated dense state");
+            // u64 bound check: `4 * dim` is wire-controlled and wraps
+            // on 32-bit targets — a hostile dim must fail with Err.
+            ensure!(
+                (buf.len() - pos) as u64 >= 4 * dim as u64,
+                "uplink: truncated dense state (dim {dim})"
+            );
             let mut g = pool.take_f32(dim);
             for _ in 0..dim {
                 g.push(read_f32(buf, &mut pos)?);
@@ -363,34 +368,50 @@ fn cvec_overhead_bytes(c: &CVec) -> usize {
 /// [`Framed`](crate::coordinator::Framed) transport serializes/decodes
 /// the frame for real and bills its measured bytes into the downlink
 /// accounting (`bits_down_cum`); the in-process transport bills the
-/// same declared cost without serializing.
+/// same declared cost without serializing; the socket transport is the
+/// frame's *raison d'être* — a remote worker has no map handle riding
+/// alongside, so it instantiates the mechanism from `spec` alone.
 ///
 /// ```text
-/// mech-switch frame := tag:u8(0xA5)  round:u64  len:u16  name:[u8; len] (utf-8)
+/// mech-switch frame := tag:u8(0xA5)  round:u64
+///                      name_len:u16  name:[u8; name_len]  (utf-8)
+///                      spec_len:u16  spec:[u8; spec_len]  (utf-8)
 /// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MechSwitch {
     /// First round the new mechanism is active.
     pub round: u64,
-    /// Display name of the mechanism being switched to.
+    /// Display name of the mechanism being switched to (traces, logs).
     pub mech: String,
+    /// Canonical parseable spec
+    /// ([`ThreePointMap::spec`](crate::mechanisms::ThreePointMap::spec)):
+    /// what a remote worker feeds to
+    /// [`parse_mechanism`](crate::mechanisms::parse_mechanism).
+    pub spec: String,
 }
 
 /// Frame tag of a [`MechSwitch`] directive.
 pub const MECH_SWITCH_TAG: u8 = 0xa5;
 
-/// Fixed framing of a [`MechSwitch`]: `tag:u8 + round:u64 + len:u16`.
+/// Fixed framing of a [`MechSwitch`]: `tag:u8 + round:u64 + name_len:u16`
+/// (the `spec_len:u16` follows the name bytes).
 pub const MECH_SWITCH_HEADER_BYTES: usize = 11;
 
-/// Serialize a mechanism-switch directive.
-pub fn encode_mech_switch(m: &MechSwitch) -> Vec<u8> {
-    assert!(m.mech.len() <= u16::MAX as usize, "mechanism name too long for the wire");
-    let mut out = Vec::with_capacity(MECH_SWITCH_HEADER_BYTES + m.mech.len());
+/// Serialize a mechanism-switch directive. Errs when a name or spec
+/// exceeds the wire's u16 length fields — propagated, not asserted, so
+/// an unencodable directive can never abort a running leader.
+pub fn encode_mech_switch(m: &MechSwitch) -> Result<Vec<u8>> {
+    ensure!(m.mech.len() <= u16::MAX as usize, "mech-switch: name too long for the wire");
+    ensure!(m.spec.len() <= u16::MAX as usize, "mech-switch: spec too long for the wire");
+    let mut out =
+        Vec::with_capacity(MECH_SWITCH_HEADER_BYTES + m.mech.len() + 2 + m.spec.len());
     out.push(MECH_SWITCH_TAG);
     out.extend_from_slice(&m.round.to_le_bytes());
     out.extend_from_slice(&(m.mech.len() as u16).to_le_bytes());
     out.extend_from_slice(m.mech.as_bytes());
-    out
+    out.extend_from_slice(&(m.spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(m.spec.as_bytes());
+    Ok(out)
 }
 
 /// Decode one mechanism-switch frame (exact inverse of
@@ -399,17 +420,332 @@ pub fn decode_mech_switch(buf: &[u8]) -> Result<MechSwitch> {
     ensure!(buf.len() >= MECH_SWITCH_HEADER_BYTES, "mech-switch: truncated header");
     ensure!(buf[0] == MECH_SWITCH_TAG, "mech-switch: bad tag {:#04x}", buf[0]);
     let round = u64::from_le_bytes(buf[1..9].try_into().expect("8-byte slice"));
-    let len = u16::from_le_bytes(buf[9..11].try_into().expect("2-byte slice")) as usize;
-    ensure!(
-        buf.len() == MECH_SWITCH_HEADER_BYTES + len,
-        "mech-switch: frame length mismatch ({} vs {})",
-        buf.len(),
-        MECH_SWITCH_HEADER_BYTES + len
-    );
-    let mech = std::str::from_utf8(&buf[MECH_SWITCH_HEADER_BYTES..])
+    let name_len = u16::from_le_bytes(buf[9..11].try_into().expect("2-byte slice")) as usize;
+    let spec_at = MECH_SWITCH_HEADER_BYTES + name_len;
+    ensure!(buf.len() >= spec_at + 2, "mech-switch: truncated name/spec length");
+    let mech = std::str::from_utf8(&buf[MECH_SWITCH_HEADER_BYTES..spec_at])
         .map_err(|e| anyhow::anyhow!("mech-switch: non-utf8 name: {e}"))?
         .to_string();
-    Ok(MechSwitch { round, mech })
+    let spec_len =
+        u16::from_le_bytes(buf[spec_at..spec_at + 2].try_into().expect("2-byte slice")) as usize;
+    ensure!(
+        buf.len() == spec_at + 2 + spec_len,
+        "mech-switch: frame length mismatch ({} vs {})",
+        buf.len(),
+        spec_at + 2 + spec_len
+    );
+    let spec = std::str::from_utf8(&buf[spec_at + 2..])
+        .map_err(|e| anyhow::anyhow!("mech-switch: non-utf8 spec: {e}"))?
+        .to_string();
+    Ok(MechSwitch { round, mech, spec })
+}
+
+// ---------------------------------------------------------------------
+// Socket transport frame vocabulary.
+//
+// The socket transport ships every frame below inside a length-prefixed
+// envelope (`len:u32 LE` + body); the body's first byte is a kind tag.
+// The *semantic* payload of a frame — what the downlink byte accounting
+// measures — excludes the kind tag and the length prefix (transport
+// framing), mirroring how the uplink measures the codec frame but not
+// its envelope. See PROTOCOL.md for the full grammar.
+// ---------------------------------------------------------------------
+
+/// Protocol version carried by both hello frames. A mismatch fails the
+/// handshake with a descriptive error (no silent downgrade).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Downlink (leader → worker) frame kinds.
+pub const DOWN_HELLO: u8 = 0xd1;
+pub const DOWN_ROUND: u8 = 0xd2;
+pub const DOWN_SWITCH: u8 = 0xd3;
+pub const DOWN_SHUTDOWN: u8 = 0xd4;
+
+/// Uplink (worker → leader) frame kinds.
+pub const UP_HELLO: u8 = 0xe1;
+pub const UP_ROUND: u8 = 0xe2;
+
+/// Magic prefixes inside the hello frames (peer sanity: a stray client
+/// speaking another protocol fails fast with a readable error).
+pub const DOWN_MAGIC: &[u8; 4] = b"3PCS";
+pub const UP_MAGIC: &[u8; 4] = b"3PCW";
+
+/// Semantic payload bytes of a round frame beyond the iterate itself:
+/// `t:u64 + round_seed:u64 + flags:u8` (the kind tag is transport
+/// framing and uncounted). A round broadcast therefore measures
+/// `ROUND_PAYLOAD_BYTES + 4·d` downlink bytes per worker.
+pub const ROUND_PAYLOAD_BYTES: usize = 17;
+
+/// Everything a remote worker agent needs to reconstruct its
+/// [`WorkerState`](super::WorkerState) from wire bytes alone: the
+/// cohort layout `(worker_id, n, d)`, the shared seed, the `g⁰` policy,
+/// the uplink value coding, the initial mechanism (as a parseable
+/// spec), and the problem shard (as a parseable problem spec — see
+/// [`socket::parse_problem_spec`](super::socket::parse_problem_spec)).
+///
+/// ```text
+/// hello := kind:u8(0xD1)  magic:"3PCS"  version:u16  worker_id:u32
+///          n:u32  d:u32  seed:u64  init:u8(0=full|1=zero)
+///          coding:u8(0=raw|1=natural)
+///          mech_len:u16  mech_spec:[u8]  prob_len:u16  problem_spec:[u8]
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionHello {
+    pub worker_id: u32,
+    pub n_workers: u32,
+    pub dim: u32,
+    pub seed: u64,
+    /// `g⁰` policy: false = FullGradient, true = Zero. (`FromState`
+    /// resumes cannot cross the wire and are rejected at connect time.)
+    pub zero_init: bool,
+    pub value_coding: WireValueCoding,
+    /// Initial mechanism, as a parseable spec.
+    pub mech_spec: String,
+    /// Problem shard recipe, as a parseable spec (`quad:…`).
+    pub problem_spec: String,
+}
+
+/// Serialize a session hello (full body, kind tag included).
+pub fn encode_session_hello(h: &SessionHello) -> Result<Vec<u8>> {
+    ensure!(h.mech_spec.len() <= u16::MAX as usize, "hello: mech spec too long for the wire");
+    ensure!(
+        h.problem_spec.len() <= u16::MAX as usize,
+        "hello: problem spec too long for the wire"
+    );
+    let mut out = Vec::with_capacity(29 + h.mech_spec.len() + 2 + h.problem_spec.len());
+    out.push(DOWN_HELLO);
+    out.extend_from_slice(DOWN_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&h.worker_id.to_le_bytes());
+    out.extend_from_slice(&h.n_workers.to_le_bytes());
+    out.extend_from_slice(&h.dim.to_le_bytes());
+    out.extend_from_slice(&h.seed.to_le_bytes());
+    out.push(u8::from(h.zero_init));
+    out.push(match h.value_coding {
+        WireValueCoding::RawF32 => 0,
+        WireValueCoding::Natural => 1,
+    });
+    out.extend_from_slice(&(h.mech_spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(h.mech_spec.as_bytes());
+    out.extend_from_slice(&(h.problem_spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(h.problem_spec.as_bytes());
+    Ok(out)
+}
+
+fn read_u16(buf: &[u8], pos: &mut usize) -> Result<u16> {
+    ensure!(*pos + 2 <= buf.len(), "codec: truncated u16");
+    let v = u16::from_le_bytes(buf[*pos..*pos + 2].try_into().expect("2-byte slice"));
+    *pos += 2;
+    Ok(v)
+}
+
+fn read_str(buf: &[u8], pos: &mut usize, what: &str) -> Result<String> {
+    let len = read_u16(buf, pos)? as usize;
+    ensure!(*pos + len <= buf.len(), "codec: truncated {what}");
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|e| anyhow::anyhow!("codec: non-utf8 {what}: {e}"))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+/// Decode a session hello (exact inverse of [`encode_session_hello`];
+/// rejects bad magic, version mismatch and trailing bytes).
+pub fn decode_session_hello(buf: &[u8]) -> Result<SessionHello> {
+    ensure!(buf.first() == Some(&DOWN_HELLO), "hello: bad kind");
+    let mut pos = 1usize;
+    ensure!(buf.len() >= pos + 4 && buf[pos..pos + 4] == DOWN_MAGIC[..], "hello: bad magic");
+    pos += 4;
+    let version = read_u16(buf, &mut pos)?;
+    ensure!(
+        version == WIRE_VERSION,
+        "hello: protocol version {version} (this build speaks {WIRE_VERSION})"
+    );
+    let worker_id = read_u32(buf, &mut pos)?;
+    let n_workers = read_u32(buf, &mut pos)?;
+    let dim = read_u32(buf, &mut pos)?;
+    ensure!(buf.len() >= pos + 8, "hello: truncated seed");
+    let seed = u64::from_le_bytes(buf[pos..pos + 8].try_into().expect("8-byte slice"));
+    pos += 8;
+    let init = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("hello: truncated init"))?;
+    pos += 1;
+    ensure!(init <= 1, "hello: unknown init policy {init}");
+    let coding = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("hello: truncated coding"))?;
+    pos += 1;
+    let value_coding = match coding {
+        0 => WireValueCoding::RawF32,
+        1 => WireValueCoding::Natural,
+        other => bail!("hello: unknown value coding {other}"),
+    };
+    let mech_spec = read_str(buf, &mut pos, "mech spec")?;
+    let problem_spec = read_str(buf, &mut pos, "problem spec")?;
+    ensure!(pos == buf.len(), "hello: {} trailing bytes", buf.len() - pos);
+    ensure!(worker_id < n_workers, "hello: worker id {worker_id} out of range (n {n_workers})");
+    Ok(SessionHello {
+        worker_id,
+        n_workers,
+        dim,
+        seed,
+        zero_init: init == 1,
+        value_coding,
+        mech_spec,
+        problem_spec,
+    })
+}
+
+/// Serialize a worker hello (the agent's first bytes after connecting).
+///
+/// ```text
+/// worker-hello := kind:u8(0xE1)  magic:"3PCW"  version:u16
+/// ```
+pub fn encode_worker_hello() -> Vec<u8> {
+    let mut out = Vec::with_capacity(7);
+    out.push(UP_HELLO);
+    out.extend_from_slice(UP_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out
+}
+
+/// Validate a worker hello (exact inverse of [`encode_worker_hello`]).
+pub fn decode_worker_hello(buf: &[u8]) -> Result<()> {
+    ensure!(buf.first() == Some(&UP_HELLO), "worker-hello: bad kind");
+    ensure!(buf.len() == 7, "worker-hello: frame length {} (expected 7)", buf.len());
+    ensure!(buf[1..5] == UP_MAGIC[..], "worker-hello: bad magic");
+    let version = u16::from_le_bytes(buf[5..7].try_into().expect("2-byte slice"));
+    ensure!(
+        version == WIRE_VERSION,
+        "worker-hello: protocol version {version} (this build speaks {WIRE_VERSION})"
+    );
+    Ok(())
+}
+
+/// Append a round broadcast body: the round header plus the iterate.
+///
+/// ```text
+/// round := kind:u8(0xD2)  t:u64  round_seed:u64  flags:u8(bit0=eval_loss)
+///          x:[f32; d]
+/// ```
+pub fn encode_round_start(
+    t: u64,
+    round_seed: u64,
+    eval_loss: bool,
+    x: &[f32],
+    out: &mut Vec<u8>,
+) {
+    out.push(DOWN_ROUND);
+    out.extend_from_slice(&t.to_le_bytes());
+    out.extend_from_slice(&round_seed.to_le_bytes());
+    out.push(u8::from(eval_loss));
+    for v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// A decoded downlink frame, as the worker agent consumes them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DownlinkFrame {
+    Hello(SessionHello),
+    Round { t: u64, round_seed: u64, eval_loss: bool, x: Vec<f32> },
+    Switch(MechSwitch),
+    Shutdown,
+}
+
+/// Decode one downlink frame body (the bytes inside the length
+/// envelope), dispatching on the kind tag. The iterate length of a
+/// round frame is implied by the body length; the *session* dimension
+/// check happens at the link layer, which knows `d`.
+pub fn decode_downlink(buf: &[u8]) -> Result<DownlinkFrame> {
+    let kind = *buf.first().ok_or_else(|| anyhow::anyhow!("downlink: empty frame"))?;
+    match kind {
+        DOWN_HELLO => Ok(DownlinkFrame::Hello(decode_session_hello(buf)?)),
+        DOWN_ROUND => {
+            ensure!(
+                buf.len() >= 1 + ROUND_PAYLOAD_BYTES,
+                "round: truncated header ({} bytes)",
+                buf.len()
+            );
+            let t = u64::from_le_bytes(buf[1..9].try_into().expect("8-byte slice"));
+            let round_seed = u64::from_le_bytes(buf[9..17].try_into().expect("8-byte slice"));
+            let flags = buf[17];
+            ensure!(flags <= 1, "round: unknown flags {flags:#04x}");
+            let body = &buf[1 + ROUND_PAYLOAD_BYTES..];
+            ensure!(body.len() % 4 == 0, "round: iterate not a whole number of f32s");
+            let mut x = Vec::with_capacity(body.len() / 4);
+            let mut pos = 0usize;
+            while pos < body.len() {
+                x.push(read_f32(body, &mut pos)?);
+            }
+            Ok(DownlinkFrame::Round { t, round_seed, eval_loss: flags & 1 == 1, x })
+        }
+        DOWN_SWITCH => Ok(DownlinkFrame::Switch(decode_mech_switch(&buf[1..])?)),
+        DOWN_SHUTDOWN => {
+            ensure!(buf.len() == 1, "shutdown: unexpected body");
+            Ok(DownlinkFrame::Shutdown)
+        }
+        other => bail!("downlink: unknown frame kind {other:#04x}"),
+    }
+}
+
+/// Append a worker's round reply: the billable uplink codec frame plus
+/// the diagnostic sidecar (the exact local gradient for the leader's
+/// `‖∇f‖²` metric, and the local loss on evaluation rounds). Only
+/// `upframe` is measured/billed; the sidecar carries metrics the
+/// in-process transports read from shared memory for free.
+///
+/// ```text
+/// round-reply := kind:u8(0xE2)  flags:u8(bit0=has_loss)  up_len:u32
+///                upframe:[u8; up_len]  grad:[f32; d]  loss:f64?
+/// ```
+pub fn encode_round_reply(upframe: &[u8], grad: &[f32], loss: Option<f64>, out: &mut Vec<u8>) {
+    out.push(UP_ROUND);
+    out.push(u8::from(loss.is_some()));
+    out.extend_from_slice(&(upframe.len() as u32).to_le_bytes());
+    out.extend_from_slice(upframe);
+    for v in grad {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    if let Some(l) = loss {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+}
+
+/// Borrowed view of a round reply's parts.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundReply<'a> {
+    /// The billable uplink codec frame ([`decode_uplink_into`] input).
+    pub upframe: &'a [u8],
+    /// The gradient sidecar, still as raw little-endian f32 bytes.
+    pub grad: &'a [u8],
+    pub loss: Option<f64>,
+}
+
+/// Split a round-reply body into its parts, validating every length
+/// against the body (the gradient's length against the session `d` is
+/// the link layer's check — it knows `d`, this function doesn't).
+pub fn split_round_reply(buf: &[u8]) -> Result<RoundReply<'_>> {
+    ensure!(buf.first() == Some(&UP_ROUND), "round-reply: bad kind");
+    ensure!(buf.len() >= 6, "round-reply: truncated header");
+    let flags = buf[1];
+    ensure!(flags <= 1, "round-reply: unknown flags {flags:#04x}");
+    let has_loss = flags & 1 == 1;
+    let up_len = u32::from_le_bytes(buf[2..6].try_into().expect("4-byte slice")) as usize;
+    let tail = if has_loss { 8 } else { 0 };
+    ensure!(
+        (buf.len() - 6) as u64 >= up_len as u64 + tail as u64,
+        "round-reply: truncated uplink frame (up_len {up_len})"
+    );
+    let upframe = &buf[6..6 + up_len];
+    let rest = &buf[6 + up_len..];
+    let grad = &rest[..rest.len() - tail];
+    ensure!(grad.len() % 4 == 0, "round-reply: gradient not a whole number of f32s");
+    let loss = if has_loss {
+        Some(f64::from_le_bytes(
+            rest[rest.len() - 8..].try_into().expect("8-byte slice"),
+        ))
+    } else {
+        None
+    };
+    Ok(RoundReply { upframe, grad, loss })
 }
 
 /// Number of wire messages a decomposition contains (the padding bound
@@ -562,19 +898,152 @@ mod tests {
 
     #[test]
     fn mech_switch_frame_roundtrips() {
-        let m = MechSwitch { round: 500, mech: "EF21(Top-4)".into() };
-        let bytes = encode_mech_switch(&m);
-        assert_eq!(bytes.len(), MECH_SWITCH_HEADER_BYTES + m.mech.len());
+        let m = MechSwitch { round: 500, mech: "EF21(Top-4)".into(), spec: "ef21:top4".into() };
+        let bytes = encode_mech_switch(&m).unwrap();
+        assert_eq!(
+            bytes.len(),
+            MECH_SWITCH_HEADER_BYTES + m.mech.len() + 2 + m.spec.len()
+        );
         assert_eq!(bytes[0], MECH_SWITCH_TAG);
         assert_eq!(decode_mech_switch(&bytes).unwrap(), m);
 
         assert!(decode_mech_switch(&[]).is_err());
-        let mut bad = encode_mech_switch(&m);
+        let mut bad = encode_mech_switch(&m).unwrap();
         bad[0] = 0x00;
         assert!(decode_mech_switch(&bad).is_err());
-        let mut long = encode_mech_switch(&m);
+        let mut long = encode_mech_switch(&m).unwrap();
         long.push(0);
         assert!(decode_mech_switch(&long).is_err());
+        // An over-long spec is an Err, not a panic.
+        let huge = MechSwitch {
+            round: 0,
+            mech: "x".into(),
+            spec: "y".repeat(u16::MAX as usize + 1),
+        };
+        assert!(encode_mech_switch(&huge).is_err());
+    }
+
+    #[test]
+    fn session_hello_roundtrips_and_validates() {
+        let h = SessionHello {
+            worker_id: 3,
+            n_workers: 8,
+            dim: 1000,
+            seed: 42,
+            zero_init: false,
+            value_coding: crate::compressors::WireValueCoding::Natural,
+            mech_spec: "ef21:top16".into(),
+            problem_spec: "quad:8:1000:0.0001:0.8:42".into(),
+        };
+        let bytes = encode_session_hello(&h).unwrap();
+        assert_eq!(decode_session_hello(&bytes).unwrap(), h);
+        match decode_downlink(&bytes).unwrap() {
+            DownlinkFrame::Hello(back) => assert_eq!(back, h),
+            other => panic!("expected hello, got {other:?}"),
+        }
+
+        // Bad magic, bad version, truncations, trailing bytes: all Err.
+        let mut bad = bytes.clone();
+        bad[1] = b'X';
+        assert!(decode_session_hello(&bad).is_err());
+        let mut bad = bytes.clone();
+        bad[5] = 0xff; // version
+        assert!(decode_session_hello(&bad).is_err());
+        for cut in 0..bytes.len() {
+            assert!(decode_session_hello(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_session_hello(&long).is_err());
+        // worker_id must be < n.
+        let oob = SessionHello { worker_id: 8, ..h };
+        let bytes = encode_session_hello(&oob).unwrap();
+        assert!(decode_session_hello(&bytes).is_err());
+    }
+
+    #[test]
+    fn worker_hello_roundtrips_and_validates() {
+        let bytes = encode_worker_hello();
+        assert!(decode_worker_hello(&bytes).is_ok());
+        assert!(decode_worker_hello(&bytes[..6]).is_err());
+        let mut bad = bytes.clone();
+        bad[2] = b'X';
+        assert!(decode_worker_hello(&bad).is_err());
+        let mut bad = bytes.clone();
+        bad[5] = 0x7f;
+        assert!(decode_worker_hello(&bad).is_err());
+    }
+
+    #[test]
+    fn round_frames_roundtrip() {
+        let x = vec![1.0f32, -2.5, 0.0, 3.25];
+        let mut body = Vec::new();
+        encode_round_start(7, 0xdead_beef, true, &x, &mut body);
+        assert_eq!(body.len(), 1 + ROUND_PAYLOAD_BYTES + 4 * x.len());
+        match decode_downlink(&body).unwrap() {
+            DownlinkFrame::Round { t, round_seed, eval_loss, x: back } => {
+                assert_eq!(t, 7);
+                assert_eq!(round_seed, 0xdead_beef);
+                assert!(eval_loss);
+                assert_eq!(back, x);
+            }
+            other => panic!("expected round, got {other:?}"),
+        }
+        // Truncations and a torn iterate reject.
+        for cut in 0..body.len() {
+            let d = decode_downlink(&body[..cut]);
+            if cut == 0 {
+                assert!(d.is_err());
+            } else if body[..cut].len() >= 1 + ROUND_PAYLOAD_BYTES
+                && (cut - 1 - ROUND_PAYLOAD_BYTES) % 4 == 0
+            {
+                // A shorter-but-aligned iterate decodes; the link layer
+                // rejects it against the session dimension.
+                assert!(d.is_ok(), "cut {cut}");
+            } else {
+                assert!(d.is_err(), "cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_and_unknown_downlink_kinds() {
+        assert_eq!(decode_downlink(&[DOWN_SHUTDOWN]).unwrap(), DownlinkFrame::Shutdown);
+        assert!(decode_downlink(&[DOWN_SHUTDOWN, 0]).is_err());
+        assert!(decode_downlink(&[]).is_err());
+        assert!(decode_downlink(&[0x42]).is_err());
+    }
+
+    #[test]
+    fn round_reply_splits_exactly() {
+        let up = encode_uplink(&UplinkMsg { worker_id: 2, update: Update::Keep, g_err: 0.5 });
+        let grad = vec![1.0f32, 2.0, 3.0];
+        let mut body = Vec::new();
+        encode_round_reply(&up, &grad, Some(1.25), &mut body);
+        let r = split_round_reply(&body).unwrap();
+        assert_eq!(r.upframe, &up[..]);
+        assert_eq!(r.grad.len(), 12);
+        assert_eq!(r.loss, Some(1.25));
+
+        let mut body = Vec::new();
+        encode_round_reply(&up, &grad, None, &mut body);
+        let r = split_round_reply(&body).unwrap();
+        assert_eq!(r.loss, None);
+        assert_eq!(r.grad.len(), 12);
+
+        // Truncation anywhere is an Err (grad alignment or up_len).
+        for cut in 0..body.len() {
+            let s = split_round_reply(&body[..cut]);
+            if let Ok(r) = s {
+                // Only an aligned-short gradient can still parse; the
+                // link layer rejects that against d.
+                assert!(r.grad.len() % 4 == 0 && r.grad.len() < 12, "cut {cut}");
+            }
+        }
+        // A lying up_len is an Err.
+        let mut bad = body.clone();
+        bad[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(split_round_reply(&bad).is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::observer::{
 };
 use super::protocol::{encode_mech_switch, MechSwitch};
 use super::server::Server;
-use super::transport::{InProcess, RoundAggregate, Transport};
+use super::transport::{InProcess, RoundAggregate, Transport, TransportError};
 use super::worker::WorkerState;
 use super::{InitPolicy, ResumeState};
 use crate::mechanisms::schedule::{MechanismSchedule, RoundTelemetry, Static};
@@ -292,7 +292,42 @@ impl<'a> TrainSession<'a> {
             }
         };
 
-        let mut link = self.transport.connect(workers, d, &cfg);
+        // The wire path is error-propagating end to end: a transport
+        // that cannot stand up (bind/accept/handshake failure) or that
+        // fails mid-round (malformed frame, dead peer) ends the run
+        // with `TrainResult::transport_error` set — peers' bytes can
+        // never panic the leader. The transport sees the *effective*
+        // g⁰ policy (a `resume_from` overrides `cfg.init`), so a
+        // transport that cannot reproduce it remotely — the socket
+        // transport with `FromState` — rejects at connect time instead
+        // of silently desynchronising leader and agents.
+        let link_cfg = TrainConfig { init: init.clone(), ..cfg.clone() };
+        let mut link = match self.transport.connect(workers, d, &link_cfg) {
+            Ok(link) => link,
+            Err(e) => {
+                let result = TrainResult {
+                    records: Vec::new(),
+                    rounds_run: 0,
+                    converged: false,
+                    diverged: false,
+                    final_x: server.x.clone(),
+                    final_grad_norm_sq: self
+                        .resume
+                        .as_ref()
+                        .map_or(f64::NAN, |rs| rs.grad_norm_sq),
+                    total_bits_up: server.total_bits_up(),
+                    total_bits_down: server.bits_down,
+                    wire_bytes_up: 0,
+                    wire_bytes_down: 0,
+                    transport_error: Some(e),
+                    elapsed: start.elapsed(),
+                };
+                for obs in self.observers.iter_mut() {
+                    obs.on_complete(&result);
+                }
+                return result;
+            }
+        };
 
         // The classic stop conditions, as observers, in the legacy
         // break-priority order.
@@ -319,6 +354,7 @@ impl<'a> TrainSession<'a> {
         let mut final_grad_norm_sq =
             self.resume.as_ref().map_or(f64::NAN, |rs| rs.grad_norm_sq);
         let mut rounds_run = 0usize;
+        let mut transport_error: Option<TransportError> = None;
 
         for t in start_round..cfg.max_rounds {
             rounds_run = t + 1 - start_round;
@@ -326,18 +362,36 @@ impl<'a> TrainSession<'a> {
             // Per-round schedule decision, made here on the coordinator
             // and broadcast through the transport as a real downlink
             // directive (billed into bits_down either way). The starting
-            // round's map was installed at worker construction.
+            // round's map was installed at worker construction; the
+            // directive carries both the display name (traces) and the
+            // parseable spec (what a remote worker rebuilds the map
+            // from).
             let mut mech_switch: Option<String> = None;
             if t > start_round {
                 let next = self.schedule.pick(t as u64, &telemetry);
                 if !Arc::ptr_eq(&next, &current_map) {
                     let name = next.name();
-                    let frame =
-                        encode_mech_switch(&MechSwitch { round: t as u64, mech: name.clone() });
-                    let down_bits = link.switch_mechanism(next.clone(), &frame);
-                    server.bits_down += down_bits;
-                    mech_switch = Some(name);
-                    current_map = next;
+                    let switched = encode_mech_switch(&MechSwitch {
+                        round: t as u64,
+                        mech: name.clone(),
+                        spec: next.spec(),
+                    })
+                    .map_err(|e| {
+                        TransportError::Protocol(format!("encoding MechSwitch: {e:#}"))
+                    })
+                    .and_then(|frame| link.switch_mechanism(next.clone(), &frame));
+                    match switched {
+                        Ok(down_bits) => {
+                            server.bits_down += down_bits;
+                            mech_switch = Some(name);
+                            current_map = next;
+                        }
+                        Err(e) => {
+                            transport_error = Some(e);
+                            rounds_run = t - start_round;
+                            break;
+                        }
+                    }
                 }
             }
             let mech_name = current_map.name();
@@ -347,7 +401,12 @@ impl<'a> TrainSession<'a> {
             // (idle between rounds); bit-identical to serial.
             server.step_sh(cfg.gamma, link.shards());
             let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
-            link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss, &mut agg);
+            if let Err(e) = link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss, &mut agg)
+            {
+                transport_error = Some(e);
+                rounds_run = t - start_round;
+                break;
+            }
 
             server.fold_delta_sh(&agg.delta_sum, link.shards());
             for &(wid, b) in &agg.bits {
@@ -441,6 +500,7 @@ impl<'a> TrainSession<'a> {
             total_bits_down: server.bits_down,
             wire_bytes_up: link.measured_bytes_up(),
             wire_bytes_down: link.measured_bytes_down(),
+            transport_error,
             elapsed: start.elapsed(),
         };
         for obs in self.observers.iter_mut() {

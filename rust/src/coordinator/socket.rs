@@ -1,0 +1,900 @@
+//! The socket-backed transport: length-prefixed frames over TCP or
+//! Unix-domain sockets, with worker agents living in other processes
+//! (or machines) — the ROADMAP's "workers elsewhere" milestone.
+//!
+//! Topology: the leader binds a listener ([`Socket::bind`]) and the
+//! session's [`Transport::connect`] accepts exactly `n` worker agents
+//! (`threepc worker --connect <addr>`, or [`run_worker_agent`] on a
+//! thread for loopback tests). Each accepted connection handshakes —
+//! worker hello up, [`SessionHello`] down carrying `(worker_id, n, d,
+//! seed, g⁰ policy, value coding, mech spec, problem spec)` — after
+//! which the agent owns the *real* [`WorkerState`], reconstructed from
+//! wire bytes alone, and the leader keeps only a per-worker mirror of
+//! `g_i^t` (exactly like a real parameter server).
+//!
+//! Per round the leader broadcasts one frame (`t`, the shared round
+//! seed, the eval flag, and the dense iterate `x^{t+1}`) and reads one
+//! reply per worker in id order: the billable uplink codec frame —
+//! byte-identical to what [`Framed`](super::Framed) produces for the
+//! same worker state — plus a diagnostic sidecar (the exact local
+//! gradient for the `‖∇f‖²` metric, and the loss on eval rounds).
+//! Decoding, validation ([`validate_wire_msg`]) and the f64 folds run
+//! in the same order as `Framed`'s, so traces are bit-for-bit equal
+//! across `InProcess` ≡ `Framed` ≡ `Socket` (pinned by the
+//! `socket_transport` test target).
+//!
+//! Hardening: every stream carries read/write timeouts, the agent's
+//! connect-and-handshake is retried a bounded number of times with
+//! backoff, frame lengths are capped before allocation, and every
+//! failure — malformed bytes, version mismatch, a peer dying mid-round
+//! — surfaces as a [`TransportError`] value through
+//! [`TransportLink::round`], never a panic.
+//!
+//! Accounting: `measured_bytes_up` counts exactly the uplink codec
+//! frames (agreeing with `Framed` for identical runs);
+//! `measured_bytes_down` counts the per-worker semantic downlink
+//! payload — mech-switch frames (agreeing with `Framed`) plus
+//! `ROUND_PAYLOAD_BYTES + 4·d` per round broadcast. Transport framing
+//! (length prefixes, kind tags, handshakes) and the diagnostic sidecar
+//! are not billed or measured, mirroring how the in-process transports
+//! read metrics from shared memory for free. See PROTOCOL.md.
+
+use super::protocol::{
+    self as proto, decode_uplink_into, encode_uplink_into, DownlinkFrame, SessionHello, WireMsg,
+    WireUpdate,
+};
+use super::session::TrainConfig;
+use super::transport::{
+    validate_wire_msg, RoundAggregate, Transport, TransportError, TransportLink,
+};
+use super::worker::WorkerState;
+use super::InitPolicy;
+use crate::compressors::{MechScratch, WireValueCoding};
+use crate::kernels;
+use crate::mechanisms::{parse_mechanism, ThreePointMap};
+use crate::problems::Distributed;
+use anyhow::Context;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on a single frame's length prefix. The prefix is
+/// wire-controlled; cap it before sizing any allocation from it. 256
+/// MiB covers a dense round broadcast for every dimension
+/// [`parse_problem_spec`] admits (d ≤ 2²⁵ → 128 MiB + header), with
+/// 2× headroom.
+const MAX_FRAME_BYTES: u32 = 1 << 28;
+
+// ---------------------------------------------------------------------
+// Addresses, listeners, streams.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Addr {
+    /// `tcp://host:port` (port 0 = kernel-assigned; read it back via
+    /// [`Socket::local_addr`]).
+    Tcp(String),
+    /// `uds://<path>` — Unix-domain stream socket at a filesystem path.
+    Uds(PathBuf),
+}
+
+fn parse_addr(addr: &str) -> Result<Addr, TransportError> {
+    if let Some(hostport) = addr.strip_prefix("tcp://") {
+        if hostport.is_empty() {
+            return Err(TransportError::Io(format!("empty tcp address '{addr}'")));
+        }
+        return Ok(Addr::Tcp(hostport.to_string()));
+    }
+    if let Some(path) = addr.strip_prefix("uds://") {
+        if path.is_empty() {
+            return Err(TransportError::Io(format!("empty uds path '{addr}'")));
+        }
+        return Ok(Addr::Uds(PathBuf::from(path)));
+    }
+    Err(TransportError::Io(format!(
+        "unsupported address '{addr}' (expected tcp://host:port or uds://path)"
+    )))
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.accept().map(|(s, _)| Stream::Uds(s)),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Stream {
+    /// Accepted/connected streams run blocking with per-op timeouts
+    /// (zero = wait forever). TCP also disables Nagle: every frame is a
+    /// latency-sensitive round-trip.
+    fn configure(&self, io_timeout: Duration) -> std::io::Result<()> {
+        let t = if io_timeout.is_zero() { None } else { Some(io_timeout) };
+        match self {
+            Stream::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(t)?;
+                s.set_write_timeout(t)
+            }
+            #[cfg(unix)]
+            Stream::Uds(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(t)?;
+                s.set_write_timeout(t)
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// Prefix an error with the worker it concerns — formatted only on the
+/// error path, so the steady-state round loop never allocates for
+/// context strings.
+fn tag_worker(e: TransportError, wid: usize) -> TransportError {
+    match e {
+        TransportError::Io(m) => TransportError::Io(format!("worker {wid}: {m}")),
+        TransportError::Protocol(m) => TransportError::Protocol(format!("worker {wid}: {m}")),
+        TransportError::Disconnected(m) => {
+            TransportError::Disconnected(format!("worker {wid}: {m}"))
+        }
+    }
+}
+
+/// Map an io error onto the transport error taxonomy: EOF/reset means
+/// the peer is gone, EAGAIN/timeout means the link stalled.
+fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe => TransportError::Disconnected(format!("{ctx}: {e}")),
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            TransportError::Io(format!("{ctx}: timed out ({e})"))
+        }
+        _ => TransportError::Io(format!("{ctx}: {e}")),
+    }
+}
+
+/// Write one length-prefixed frame (`len:u32 LE` + body).
+fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), TransportError> {
+    if body.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(TransportError::Protocol(format!(
+            "{ctx}: frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+            body.len()
+        )));
+    }
+    s.write_all(&(body.len() as u32).to_le_bytes()).map_err(|e| io_err(ctx, e))?;
+    s.write_all(body).map_err(|e| io_err(ctx, e))?;
+    s.flush().map_err(|e| io_err(ctx, e))
+}
+
+/// Read one length-prefixed frame into `buf` (reused across calls).
+/// The wire-controlled length is capped before the buffer is sized.
+fn read_frame<'a>(
+    s: &mut Stream,
+    buf: &'a mut Vec<u8>,
+    ctx: &str,
+) -> Result<&'a [u8], TransportError> {
+    let mut lb = [0u8; 4];
+    s.read_exact(&mut lb).map_err(|e| io_err(ctx, e))?;
+    let len = u32::from_le_bytes(lb);
+    if len > MAX_FRAME_BYTES {
+        return Err(TransportError::Protocol(format!(
+            "{ctx}: frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+        )));
+    }
+    buf.clear();
+    buf.resize(len as usize, 0);
+    s.read_exact(buf).map_err(|e| io_err(ctx, e))?;
+    Ok(&buf[..])
+}
+
+// ---------------------------------------------------------------------
+// Problem specs: the shard recipe a hello can carry.
+// ---------------------------------------------------------------------
+
+/// Build the canonical quadratic problem spec
+/// (`quad:<n>:<d>:<lambda>:<noise>:<seed>`) — the exact arguments of
+/// [`quadratic::generate`](crate::problems::quadratic::generate), so
+/// leader and agents regenerate bit-identical shards independently.
+pub fn quad_problem_spec(n: usize, d: usize, lambda: f64, noise: f64, seed: u64) -> String {
+    format!("quad:{n}:{d}:{lambda}:{noise}:{seed}")
+}
+
+/// Parse a wire-carried problem spec into the full distributed
+/// objective. Only deterministically-regenerable problems can cross the
+/// wire; today that is the quadratic suite. Sizes are sanity-capped so
+/// a hostile hello cannot OOM an agent.
+pub fn parse_problem_spec(spec: &str) -> anyhow::Result<Distributed> {
+    let rest = spec.strip_prefix("quad:").ok_or_else(|| {
+        anyhow::anyhow!(
+            "unsupported problem spec '{spec}' (only quad:<n>:<d>:<lambda>:<noise>:<seed> \
+             can cross the wire)"
+        )
+    })?;
+    let parts: Vec<&str> = rest.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 5,
+        "quad spec needs <n>:<d>:<lambda>:<noise>:<seed>, got '{rest}'"
+    );
+    let n: usize = parts[0].parse().context("quad spec: n")?;
+    let d: usize = parts[1].parse().context("quad spec: d")?;
+    let lambda: f64 = parts[2].parse().context("quad spec: lambda")?;
+    let noise: f64 = parts[3].parse().context("quad spec: noise")?;
+    let seed: u64 = parts[4].parse().context("quad spec: seed")?;
+    anyhow::ensure!(n >= 1 && n <= 1 << 16, "quad spec: n {n} out of range");
+    // The d cap keeps a round broadcast (17 + 4·d payload bytes, plus
+    // framing) comfortably inside MAX_FRAME_BYTES.
+    anyhow::ensure!(d >= 1 && d <= 1 << 25, "quad spec: d {d} out of range");
+    anyhow::ensure!(lambda.is_finite() && noise.is_finite(), "quad spec: non-finite parameter");
+    Ok(crate::problems::quadratic::generate(n, d, lambda, noise, seed).problem)
+}
+
+// ---------------------------------------------------------------------
+// The leader side: Socket (Transport) and SocketLink.
+// ---------------------------------------------------------------------
+
+/// The socket transport configuration (leader side).
+///
+/// ```no_run
+/// use threepc::coordinator::{Socket, TrainSession, TrainConfig};
+/// # let suite = threepc::problems::quadratic::generate(4, 30, 1e-2, 0.5, 1);
+/// let sock = Socket::bind(
+///     "tcp://127.0.0.1:0",
+///     &threepc::coordinator::socket::quad_problem_spec(4, 30, 1e-2, 0.5, 1),
+/// ).unwrap();
+/// let addr = sock.local_addr().unwrap(); // hand this to `threepc worker --connect`
+/// # drop(addr);
+/// let _r = TrainSession::builder(&suite.problem)
+///     .mechanism_spec("ef21:top4").unwrap()
+///     .transport(sock)
+///     .config(TrainConfig::default())
+///     .run();
+/// ```
+pub struct Socket {
+    addr: String,
+    /// Pre-bound listener (so a `tcp://…:0` port can be discovered via
+    /// [`Socket::local_addr`] before the session starts accepting).
+    listener: Mutex<Option<Listener>>,
+    /// Resolved listen address once bound.
+    local: Mutex<Option<String>>,
+    /// The shard recipe broadcast in every session hello.
+    problem_spec: String,
+    value_coding: WireValueCoding,
+    /// Per-operation read/write timeout on every link (zero = none).
+    io_timeout: Duration,
+    /// Deadline for all `n` workers to connect and handshake.
+    accept_timeout: Duration,
+}
+
+impl Socket {
+    /// A socket transport that binds lazily at session-connect time.
+    pub fn new(addr: &str, problem_spec: &str) -> Socket {
+        Socket {
+            addr: addr.to_string(),
+            listener: Mutex::new(None),
+            local: Mutex::new(None),
+            problem_spec: problem_spec.to_string(),
+            value_coding: WireValueCoding::RawF32,
+            io_timeout: Duration::from_secs(30),
+            accept_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// Bind the listener now, so the resolved address (`tcp://…:0` →
+    /// real port) is known before workers are told where to connect.
+    pub fn bind(addr: &str, problem_spec: &str) -> Result<Socket, TransportError> {
+        let sock = Socket::new(addr, problem_spec);
+        let (listener, local) = bind_listener(&sock.addr)?;
+        *sock.listener.lock().expect("socket listener lock") = Some(listener);
+        *sock.local.lock().expect("socket local lock") = Some(local);
+        Ok(sock)
+    }
+
+    /// The resolved listen address (available once bound).
+    pub fn local_addr(&self) -> Option<String> {
+        self.local.lock().expect("socket local lock").clone()
+    }
+
+    /// Natural (9-bit sign+exponent) uplink value coding — the
+    /// [`Framed::natural`](super::Framed::natural) analog.
+    pub fn natural(mut self) -> Socket {
+        self.value_coding = WireValueCoding::Natural;
+        self
+    }
+
+    /// Per-operation read/write timeout on every link (zero disables).
+    pub fn io_timeout(mut self, d: Duration) -> Socket {
+        self.io_timeout = d;
+        self
+    }
+
+    /// Deadline for all workers to connect and complete the handshake.
+    pub fn accept_timeout(mut self, d: Duration) -> Socket {
+        self.accept_timeout = d;
+        self
+    }
+}
+
+fn bind_listener(addr: &str) -> Result<(Listener, String), TransportError> {
+    match parse_addr(addr)? {
+        Addr::Tcp(hostport) => {
+            let l = TcpListener::bind(&hostport)
+                .map_err(|e| io_err(&format!("binding tcp://{hostport}"), e))?;
+            let local = l
+                .local_addr()
+                .map(|a| format!("tcp://{a}"))
+                .unwrap_or_else(|_| format!("tcp://{hostport}"));
+            Ok((Listener::Tcp(l), local))
+        }
+        #[cfg(unix)]
+        Addr::Uds(path) => {
+            // A stale socket file from a dead leader blocks rebinding;
+            // remove it first (standard UDS server practice).
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .map_err(|e| io_err(&format!("binding uds://{}", path.display()), e))?;
+            Ok((Listener::Uds(l), format!("uds://{}", path.display())))
+        }
+        #[cfg(not(unix))]
+        Addr::Uds(path) => Err(TransportError::Io(format!(
+            "uds://{} is not supported on this platform",
+            path.display()
+        ))),
+    }
+}
+
+fn accept_with_deadline(l: &Listener, deadline: Instant) -> Result<Stream, TransportError> {
+    l.set_nonblocking(true).map_err(|e| io_err("listener set_nonblocking", e))?;
+    loop {
+        match l.accept() {
+            Ok(s) => return Ok(s),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(TransportError::Io(
+                        "accept timed out waiting for workers to connect".into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(io_err("accept", e)),
+        }
+    }
+}
+
+impl Transport for Socket {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn connect(
+        &self,
+        workers: Vec<WorkerState>,
+        dim: usize,
+        cfg: &TrainConfig,
+    ) -> Result<Box<dyn TransportLink>, TransportError> {
+        let n = workers.len();
+        if n == 0 {
+            return Err(TransportError::Protocol("socket transport needs ≥ 1 worker".into()));
+        }
+        let zero_init = match &cfg.init {
+            InitPolicy::FullGradient => false,
+            InitPolicy::Zero => true,
+            InitPolicy::FromState(_) => {
+                return Err(TransportError::Protocol(
+                    "socket transport cannot resume from checkpointed state \
+                     (a FromState g⁰ cannot cross the wire)"
+                        .into(),
+                ))
+            }
+        };
+        let mech_spec = workers[0].map_spec();
+        let (listener, _local) = match self.listener.lock().expect("socket listener lock").take()
+        {
+            Some(l) => (l, self.local_addr().unwrap_or_else(|| self.addr.clone())),
+            None => bind_listener(&self.addr)?,
+        };
+
+        // Accept exactly n agents under one deadline; connection order
+        // assigns worker ids (the hello tells each agent which shard it
+        // owns, so arrival order never changes the trace).
+        let deadline = Instant::now() + self.accept_timeout;
+        let mut scratch = Vec::new();
+        let mut peers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let mut stream = accept_with_deadline(&listener, deadline)?;
+            stream
+                .configure(self.io_timeout)
+                .map_err(|e| io_err("configuring accepted stream", e))?;
+            let ctx = format!("handshake (worker {wid})");
+            let body = read_frame(&mut stream, &mut scratch, &ctx)?;
+            proto::decode_worker_hello(body)
+                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+            let hello = SessionHello {
+                worker_id: wid as u32,
+                n_workers: n as u32,
+                dim: dim as u32,
+                seed: cfg.seed,
+                zero_init,
+                value_coding: self.value_coding,
+                mech_spec: mech_spec.clone(),
+                problem_spec: self.problem_spec.clone(),
+            };
+            let frame = proto::encode_session_hello(&hello)
+                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+            write_frame(&mut stream, &frame, &ctx)?;
+            peers.push(Peer { id: wid, stream });
+        }
+
+        // The leader keeps only the g_i^t mirrors; the heavy worker
+        // state lives in the agents (which regenerate identical g⁰ from
+        // the hello, so the mirrors start in sync).
+        let h: Vec<Vec<f32>> = workers.iter().map(|w| w.g().to_vec()).collect();
+        drop(workers);
+        Ok(Box::new(SocketLink {
+            peers,
+            dim,
+            round_idx: 0,
+            h,
+            state_buf: Vec::new(),
+            grad_buf: Vec::new(),
+            msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
+            pool: MechScratch::new(),
+            down_buf: Vec::new(),
+            reply_buf: Vec::new(),
+            bytes_up: 0,
+            bytes_down: 0,
+        }))
+    }
+}
+
+struct Peer {
+    id: usize,
+    stream: Stream,
+}
+
+/// The leader side of a running socket session: one stream per worker,
+/// per-worker `g_i^t` mirrors, and the same pooled decode-and-fold
+/// machinery as [`Framed`](super::Framed) — which is exactly why the
+/// two produce bit-identical traces.
+struct SocketLink {
+    peers: Vec<Peer>,
+    dim: usize,
+    /// Leader-side round counter (the `t` stamped on round frames).
+    round_idx: u64,
+    /// Per-worker mirrors of `g_i^t`, advanced from decoded wire
+    /// content only (`WireUpdate::new_state_into` replays the sender's
+    /// own f32 operation order, so the mirror tracks bit-for-bit).
+    h: Vec<Vec<f32>>,
+    /// Replace-reconstruction / mirror-advance scratch.
+    state_buf: Vec<f32>,
+    /// Decoded gradient-sidecar scratch.
+    grad_buf: Vec<f32>,
+    /// Decoded uplink slot; its buffers recycle through `pool`.
+    msg: WireMsg,
+    pool: MechScratch,
+    /// Downlink frame encode scratch.
+    down_buf: Vec<u8>,
+    /// Uplink frame read scratch.
+    reply_buf: Vec<u8>,
+    bytes_up: u64,
+    bytes_down: u64,
+}
+
+impl TransportLink for SocketLink {
+    fn round(
+        &mut self,
+        x: &[f32],
+        round_seed: u64,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
+        if x.len() != self.dim {
+            return Err(TransportError::Protocol(format!(
+                "broadcast iterate has {} coords (session dimension {})",
+                x.len(),
+                self.dim
+            )));
+        }
+        out.reset(self.dim, self.peers.len());
+        let t = self.round_idx;
+        self.round_idx += 1;
+
+        // Broadcast the round frame to every agent, then collect one
+        // reply per agent in worker-id order — agents compute
+        // concurrently, the f64 folds stay in the id order every trace
+        // depends on.
+        self.down_buf.clear();
+        proto::encode_round_start(t, round_seed, eval_loss, x, &mut self.down_buf);
+        for p in self.peers.iter_mut() {
+            write_frame(&mut p.stream, &self.down_buf, "round broadcast")
+                .map_err(|e| tag_worker(e, p.id))?;
+        }
+        // Per-worker semantic downlink bytes: header + iterate (the
+        // kind tag and length prefix are transport framing).
+        self.bytes_down += (proto::ROUND_PAYLOAD_BYTES + 4 * self.dim) as u64;
+
+        for i in 0..self.peers.len() {
+            let wid = self.peers[i].id;
+            let body = read_frame(&mut self.peers[i].stream, &mut self.reply_buf, "round reply")
+                .map_err(|e| tag_worker(e, wid))?;
+            let reply = proto::split_round_reply(body).map_err(|e| {
+                TransportError::Protocol(format!("round reply (worker {wid}): {e:#}"))
+            })?;
+            if reply.loss.is_some() != eval_loss {
+                return Err(TransportError::Protocol(format!(
+                    "round reply (worker {wid}): loss sidecar {} but eval_loss was {eval_loss}",
+                    if reply.loss.is_some() { "present" } else { "absent" },
+                )));
+            }
+            if reply.grad.len() != 4 * self.dim {
+                return Err(TransportError::Protocol(format!(
+                    "round reply (worker {wid}): gradient sidecar carries {} bytes (expected {})",
+                    reply.grad.len(),
+                    4 * self.dim
+                )));
+            }
+            let up_len = reply.upframe.len();
+            decode_uplink_into(reply.upframe, &mut self.msg, &mut self.pool).map_err(|e| {
+                TransportError::Protocol(format!("round reply (worker {wid}): {e:#}"))
+            })?;
+            validate_wire_msg(&self.msg, wid, self.dim)?;
+
+            // Folds in the same per-worker order as Framed: exact
+            // gradient (metric), loss, then the update delta.
+            self.grad_buf.clear();
+            for c in reply.grad.chunks_exact(4) {
+                self.grad_buf.push(f32::from_le_bytes(c.try_into().expect("4-byte chunk")));
+            }
+            kernels::fold_f64(None, &mut out.grad_sum, &self.grad_buf);
+            if let Some(l) = reply.loss {
+                out.loss_sum += l;
+            }
+            self.msg
+                .update
+                .fold_delta_scratch(&self.h[i], &mut out.delta_sum, &mut self.state_buf);
+            // Advance the mirror through the sender's own f32 op order.
+            self.msg.update.new_state_into(&self.h[i], &mut self.state_buf);
+            std::mem::swap(&mut self.h[i], &mut self.state_buf);
+            if self.msg.update.skipped() {
+                out.skipped += 1;
+            }
+            out.g_err_sum += self.msg.g_err;
+            // Measured billing: the codec frame that actually crossed.
+            out.bits.push((wid, 8 * up_len as u64));
+            self.bytes_up += up_len as u64;
+        }
+        Ok(())
+    }
+
+    fn snapshot_g(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError> {
+        // The mirrors are bit-exact copies of the agents' g_i (the
+        // round path rejects any frame that could desynchronise them),
+        // so snapshots need no extra collective.
+        Ok(self.peers.iter().zip(&self.h).map(|(p, h)| (p.id, h.clone())).collect())
+    }
+
+    fn switch_mechanism(
+        &mut self,
+        _map: Arc<dyn ThreePointMap>,
+        frame: &[u8],
+    ) -> Result<u64, TransportError> {
+        // Remote workers cannot take the map handle — they rebuild the
+        // mechanism from the directive's parseable spec, which is the
+        // whole point of the MechSwitch wire format.
+        self.down_buf.clear();
+        self.down_buf.push(proto::DOWN_SWITCH);
+        self.down_buf.extend_from_slice(frame);
+        for p in self.peers.iter_mut() {
+            write_frame(&mut p.stream, &self.down_buf, "mech-switch broadcast")
+                .map_err(|e| tag_worker(e, p.id))?;
+        }
+        self.bytes_down += frame.len() as u64;
+        Ok(8 * frame.len() as u64)
+    }
+
+    fn measured_bytes_up(&self) -> u64 {
+        self.bytes_up
+    }
+
+    fn measured_bytes_down(&self) -> u64 {
+        self.bytes_down
+    }
+}
+
+impl Drop for SocketLink {
+    fn drop(&mut self) {
+        // Best-effort orderly shutdown so agents exit cleanly.
+        for p in self.peers.iter_mut() {
+            let _ = write_frame(&mut p.stream, &[proto::DOWN_SHUTDOWN], "shutdown");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The worker side: the agent the far end runs.
+// ---------------------------------------------------------------------
+
+/// Worker-agent resilience knobs.
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    /// Bounded connect-and-handshake attempts before giving up.
+    pub connect_attempts: u32,
+    /// Sleep between attempts.
+    pub retry_backoff: Duration,
+    /// Per-operation read/write timeout once connected (zero = none).
+    pub io_timeout: Duration,
+}
+
+impl Default for AgentConfig {
+    fn default() -> AgentConfig {
+        AgentConfig {
+            connect_attempts: 20,
+            retry_backoff: Duration::from_millis(100),
+            io_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+fn try_connect(addr: &Addr) -> std::io::Result<Stream> {
+    match addr {
+        Addr::Tcp(hostport) => TcpStream::connect(hostport).map(Stream::Tcp),
+        #[cfg(unix)]
+        Addr::Uds(path) => UnixStream::connect(path).map(Stream::Uds),
+        #[cfg(not(unix))]
+        Addr::Uds(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "unix-domain sockets are not supported on this platform",
+        )),
+    }
+}
+
+/// Bounded reconnect-with-handshake: dial, send the worker hello, and
+/// wait for the session hello; io-level failures (leader not up yet,
+/// accept backlog, timeouts) retry with backoff, protocol-level
+/// failures (bad magic, version mismatch) fail fast — retrying cannot
+/// fix those.
+fn connect_and_handshake(
+    addr: &str,
+    cfg: &AgentConfig,
+) -> Result<(Stream, SessionHello), TransportError> {
+    let parsed = parse_addr(addr)?;
+    let attempts = cfg.connect_attempts.max(1);
+    let mut last = TransportError::Io(format!("no connect attempts made for {addr}"));
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(cfg.retry_backoff);
+        }
+        let mut stream = match try_connect(&parsed) {
+            Ok(s) => s,
+            Err(e) => {
+                last = io_err(&format!("connecting to {addr} (attempt {})", attempt + 1), e);
+                continue;
+            }
+        };
+        if let Err(e) = stream.configure(cfg.io_timeout) {
+            last = io_err("configuring stream", e);
+            continue;
+        }
+        if let Err(e) = write_frame(&mut stream, &proto::encode_worker_hello(), "worker hello") {
+            last = e;
+            continue;
+        }
+        let mut buf = Vec::new();
+        let hello = match read_frame(&mut stream, &mut buf, "awaiting session hello") {
+            Ok(body) => match proto::decode_downlink(body) {
+                Ok(DownlinkFrame::Hello(h)) => h,
+                Ok(other) => {
+                    // A leader speaking the right protocol but out of
+                    // sequence: not transient.
+                    return Err(TransportError::Protocol(format!(
+                        "expected session hello, got {other:?}"
+                    )));
+                }
+                Err(e) => {
+                    // Undecodable hello = wrong protocol/version on the
+                    // far end: not transient.
+                    return Err(TransportError::Protocol(format!("bad session hello: {e:#}")));
+                }
+            },
+            Err(e @ TransportError::Protocol(_)) => return Err(e),
+            Err(e) => {
+                last = e;
+                continue;
+            }
+        };
+        return Ok((stream, hello));
+    }
+    Err(last)
+}
+
+/// Run a worker agent to session completion: connect to the leader at
+/// `addr` (`tcp://host:port` or `uds://path`), handshake, reconstruct
+/// the local [`WorkerState`] from the hello, then serve rounds until a
+/// shutdown frame (clean `Ok`) or a wire failure (`Err`). This is the
+/// body of `threepc worker --connect <addr>`, and what loopback tests
+/// spawn on threads.
+pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
+    let (mut stream, hello) =
+        connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let d = hello.dim as usize;
+    let n = hello.n_workers as usize;
+    let wid = hello.worker_id as usize;
+    let problem = parse_problem_spec(&hello.problem_spec)
+        .with_context(|| format!("hello problem spec '{}'", hello.problem_spec))?;
+    anyhow::ensure!(
+        problem.n_workers() == n,
+        "problem spec has {} shards, session has {n} workers",
+        problem.n_workers()
+    );
+    anyhow::ensure!(
+        problem.dim() == d,
+        "problem spec dimension {} != session dimension {d}",
+        problem.dim()
+    );
+    let map = parse_mechanism(&hello.mech_spec)
+        .with_context(|| format!("hello mech spec '{}'", hello.mech_spec))?;
+    let init = if hello.zero_init { InitPolicy::Zero } else { InitPolicy::FullGradient };
+    let mut worker =
+        WorkerState::new(wid, n, problem.locals[wid].clone(), map, &problem.x0, init, hello.seed);
+
+    let mut buf = Vec::new();
+    let mut no_acc: Vec<f64> = Vec::new();
+    let mut up = Vec::new();
+    let mut reply = Vec::new();
+    loop {
+        let body = read_frame(&mut stream, &mut buf, "awaiting round")
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        match proto::decode_downlink(body)? {
+            DownlinkFrame::Round { round_seed, eval_loss, x, .. } => {
+                anyhow::ensure!(
+                    x.len() == d,
+                    "round iterate has {} coords (session dimension {d})",
+                    x.len()
+                );
+                let o = worker.round_acc(&x, round_seed, &mut no_acc);
+                up.clear();
+                encode_uplink_into(
+                    wid,
+                    o.g_err,
+                    worker.last_update(),
+                    hello.value_coding,
+                    &mut up,
+                );
+                let loss = if eval_loss { Some(worker.loss(&x)) } else { None };
+                reply.clear();
+                proto::encode_round_reply(&up, worker.true_grad(), loss, &mut reply);
+                write_frame(&mut stream, &reply, "round reply")
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            DownlinkFrame::Switch(ms) => {
+                let map = parse_mechanism(&ms.spec)
+                    .with_context(|| format!("switch directive spec '{}'", ms.spec))?;
+                worker.swap_map(map);
+            }
+            DownlinkFrame::Shutdown => return Ok(()),
+            DownlinkFrame::Hello(_) => anyhow::bail!("unexpected mid-session hello"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_grammar() {
+        assert_eq!(parse_addr("tcp://127.0.0.1:9000").unwrap(), Addr::Tcp("127.0.0.1:9000".into()));
+        assert_eq!(
+            parse_addr("uds:///tmp/x.sock").unwrap(),
+            Addr::Uds(PathBuf::from("/tmp/x.sock"))
+        );
+        assert!(parse_addr("tcp://").is_err());
+        assert!(parse_addr("uds://").is_err());
+        assert!(parse_addr("http://x").is_err());
+        assert!(parse_addr("127.0.0.1:9000").is_err());
+    }
+
+    #[test]
+    fn quad_spec_roundtrips() {
+        let spec = quad_problem_spec(4, 30, 1e-2, 0.5, 21);
+        assert_eq!(spec, "quad:4:30:0.01:0.5:21");
+        let p = parse_problem_spec(&spec).unwrap();
+        assert_eq!(p.n_workers(), 4);
+        assert_eq!(p.dim(), 30);
+        // Regeneration is deterministic: same spec, same objective.
+        let q = parse_problem_spec(&spec).unwrap();
+        assert_eq!(p.x0, q.x0);
+        assert!(parse_problem_spec("quad:4:30:0.01:0.5").is_err());
+        assert!(parse_problem_spec("logreg:ijcnn1").is_err());
+        assert!(parse_problem_spec("quad:0:30:0.01:0.5:21").is_err());
+    }
+
+    #[test]
+    fn socket_connect_without_workers_errs() {
+        let sock = Socket::new("tcp://127.0.0.1:0", "quad:1:4:0.01:0.5:1");
+        let cfg = TrainConfig::default();
+        match sock.connect(Vec::new(), 4, &cfg) {
+            Err(TransportError::Protocol(_)) => {}
+            other => panic!("expected protocol error, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn accept_deadline_expires_when_nobody_connects() {
+        let sock = Socket::bind("tcp://127.0.0.1:0", "quad:1:4:0.01:0.5:1")
+            .unwrap()
+            .accept_timeout(Duration::from_millis(50));
+        let suite = crate::problems::quadratic::generate(1, 4, 1e-2, 0.5, 1);
+        let map = parse_mechanism("gd").unwrap();
+        let cfg = TrainConfig::default();
+        let w = WorkerState::new(
+            0,
+            1,
+            suite.problem.locals[0].clone(),
+            map,
+            &suite.problem.x0,
+            InitPolicy::FullGradient,
+            cfg.seed,
+        );
+        match sock.connect(vec![w], 4, &cfg) {
+            Err(TransportError::Io(m)) => assert!(m.contains("accept timed out"), "{m}"),
+            other => panic!("expected accept timeout, got {:?}", other.map(|_| ())),
+        }
+    }
+}

@@ -32,6 +32,64 @@ use crate::mechanisms::ThreePointMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
+/// Why a transport operation failed. The wire path is
+/// error-propagating by contract: bytes from a peer can never panic the
+/// leader — socket-level failures, undecodable frames and
+/// session-contract violations all surface as values, flow through
+/// [`TransportLink::round`] into `TrainSession::run`, and land in
+/// [`TrainResult::transport_error`](super::TrainResult).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Socket-level failure: bind, accept deadline, read/write timeout.
+    Io(String),
+    /// A peer's bytes failed to decode or violated the session
+    /// contract (bad worker id, wrong dimension, malformed frame,
+    /// handshake/version mismatch).
+    Protocol(String),
+    /// A peer disappeared mid-session (EOF / connection reset).
+    Disconnected(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(m) => write!(f, "transport i/o error: {m}"),
+            TransportError::Protocol(m) => write!(f, "transport protocol error: {m}"),
+            TransportError::Disconnected(m) => write!(f, "peer disconnected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Link-layer validation of a decoded uplink frame against the session
+/// contract, *before* anything is folded into a [`RoundAggregate`]:
+/// the wire-carried worker id must be the one the slot belongs to (and
+/// therefore `< n`), and a dimension-carrying update must match the
+/// session dimension — `new_state`/`fold_delta` assume matching
+/// lengths. Shared by every serializing link (`Framed`, `Socket`).
+pub(crate) fn validate_wire_msg(
+    msg: &WireMsg,
+    expect_worker: usize,
+    dim: usize,
+) -> Result<(), TransportError> {
+    if msg.worker_id != expect_worker {
+        return Err(TransportError::Protocol(format!(
+            "uplink frame names worker {} (expected worker {})",
+            msg.worker_id, expect_worker
+        )));
+    }
+    if let Some(frame_dim) = msg.update.dim() {
+        if frame_dim != dim {
+            return Err(TransportError::Protocol(format!(
+                "uplink frame dimension {frame_dim} != session dimension {dim} (worker {})",
+                msg.worker_id
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// What one round produced, aggregated over all workers: the f64 fold
 /// inputs for the server plus the accounting and diagnostics. The same
 /// shape serves as the per-thread partial report inside [`InProcess`]
@@ -103,23 +161,38 @@ impl RoundAggregate {
 pub trait Transport {
     fn name(&self) -> &'static str;
 
-    /// Take the per-worker states and start the transport.
+    /// Take the per-worker states and start the transport. In-memory
+    /// transports cannot fail here; a socket transport surfaces bind /
+    /// accept / handshake failures as values instead of panicking.
     fn connect(
         &self,
         workers: Vec<WorkerState>,
         dim: usize,
         cfg: &TrainConfig,
-    ) -> Box<dyn TransportLink>;
+    ) -> Result<Box<dyn TransportLink>, TransportError>;
 }
 
 /// A running transport: executes rounds until dropped.
+///
+/// Every method that can observe a peer returns `Result`: the wire
+/// path is error-propagating by contract, so malformed frames and dead
+/// peers surface as [`TransportError`] values, never panics. The
+/// in-memory transports are infallible and always return `Ok`.
 pub trait TransportLink {
     /// One round at the broadcast iterate `x^{t+1}`: every worker
     /// evaluates its gradient, runs its mechanism, and the results are
     /// aggregated for the leader into `out` (reset by the link; the
     /// caller keeps the aggregate alive across rounds so its fold
-    /// vectors are recycled instead of reallocated).
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate);
+    /// vectors are recycled instead of reallocated). On `Err` the
+    /// aggregate's contents are unspecified and the round must not be
+    /// applied.
+    fn round(
+        &mut self,
+        x: &[f32],
+        round_seed: u64,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError>;
 
     /// Current `(worker_id, g_i)` states — the checkpoint observer's
     /// source. This is the *only* place worker state is materialised as
@@ -127,7 +200,7 @@ pub trait TransportLink {
     /// so the copy cost is paid exactly when an observer asks for a
     /// snapshot (a full collective — callers should be periodic, not
     /// per-round).
-    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)>;
+    fn snapshot_g(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError>;
 
     /// Install `map` as every worker's mechanism before the next round,
     /// carrying each worker's `(h, y)` state over
@@ -137,7 +210,11 @@ pub trait TransportLink {
     /// the codec for real, an in-memory one just bills it. Returns the
     /// downlink bits billed per worker (`8 × frame.len()` either way, so
     /// traces agree across transports).
-    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64;
+    fn switch_mechanism(
+        &mut self,
+        map: Arc<dyn ThreePointMap>,
+        frame: &[u8],
+    ) -> Result<u64, TransportError>;
 
     /// The link's coordinate shard pool, when it owns one. The session
     /// threads this through its own per-round O(d) loops (iterate
@@ -218,7 +295,7 @@ impl Transport for InProcess {
         workers: Vec<WorkerState>,
         dim: usize,
         cfg: &TrainConfig,
-    ) -> Box<dyn TransportLink> {
+    ) -> Result<Box<dyn TransportLink>, TransportError> {
         let n = workers.len();
         let requested = if self.threads > 0 { self.threads } else { cfg.threads };
         let budget = if requested == 0 {
@@ -264,7 +341,7 @@ impl Transport for InProcess {
         }
         drop(reply_tx);
         let report_slots = (0..threads).map(|_| None).collect();
-        Box::new(InProcessLink {
+        Ok(Box::new(InProcessLink {
             cmd_txs,
             reply_rx,
             joins,
@@ -274,7 +351,7 @@ impl Transport for InProcess {
             spare_reports: Vec::new(),
             report_slots,
             shards,
-        })
+        }))
     }
 }
 
@@ -356,7 +433,13 @@ impl InProcessLink {
 }
 
 impl TransportLink for InProcessLink {
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate) {
+    fn round(
+        &mut self,
+        x: &[f32],
+        round_seed: u64,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
         let sh: Shards<'_> = self.shards.as_deref();
         if let Some(buf) = Arc::get_mut(&mut self.x_arc) {
             if buf.len() == x.len() {
@@ -402,9 +485,10 @@ impl TransportLink for InProcessLink {
             // back out with the next round's command.
             self.spare_reports.push(rep);
         }
+        Ok(())
     }
 
-    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
+    fn snapshot_g(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError> {
         self.broadcast(|| Cmd::Snapshot);
         let mut per_slot: Vec<Option<Vec<(usize, Vec<f32>)>>> =
             (0..self.cmd_txs.len()).map(|_| None).collect();
@@ -414,17 +498,21 @@ impl TransportLink for InProcessLink {
                 Reply::Round { .. } => unreachable!("unsolicited round reply"),
             }
         }
-        per_slot
+        Ok(per_slot
             .into_iter()
             .flat_map(|gs| gs.expect("missing thread snapshot"))
-            .collect()
+            .collect())
     }
 
-    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64 {
+    fn switch_mechanism(
+        &mut self,
+        map: Arc<dyn ThreePointMap>,
+        frame: &[u8],
+    ) -> Result<u64, TransportError> {
         self.broadcast(|| Cmd::Swap(map.clone()));
         // Declared billing: the directive's frame bytes (what the
         // serializing transport measures for the same switch).
-        8 * frame.len() as u64
+        Ok(8 * frame.len() as u64)
     }
 
     fn shards(&self) -> Shards<'_> {
@@ -480,8 +568,8 @@ impl Transport for Framed {
         workers: Vec<WorkerState>,
         dim: usize,
         _cfg: &TrainConfig,
-    ) -> Box<dyn TransportLink> {
-        Box::new(FramedLink {
+    ) -> Result<Box<dyn TransportLink>, TransportError> {
+        Ok(Box::new(FramedLink {
             workers,
             dim,
             bytes_up: 0,
@@ -493,7 +581,7 @@ impl Transport for Framed {
             no_acc: Vec::new(),
             msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
             pool: MechScratch::new(),
-        })
+        }))
     }
 }
 
@@ -520,7 +608,13 @@ struct FramedLink {
 }
 
 impl TransportLink for FramedLink {
-    fn round(&mut self, x: &[f32], round_seed: u64, eval_loss: bool, out: &mut RoundAggregate) {
+    fn round(
+        &mut self,
+        x: &[f32],
+        round_seed: u64,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
         out.reset(self.dim, self.workers.len());
         for w in self.workers.iter_mut() {
             // The leader's mirror of g_i^t, needed to resolve
@@ -536,18 +630,17 @@ impl TransportLink for FramedLink {
             self.frame_buf.clear();
             encode_uplink_into(w.id, o.g_err, w.last_update(), self.coding, &mut self.frame_buf);
             self.bytes_up += self.frame_buf.len() as u64;
-            decode_uplink_into(&self.frame_buf, &mut self.msg, &mut self.pool)
-                .expect("framed transport produced an undecodable frame");
-            debug_assert_eq!(self.msg.worker_id, w.id);
-            // Dimension check before folding: new_state/fold_delta
-            // truncate silently on short frames, so reject loudly here.
-            if let Some(frame_dim) = self.msg.update.dim() {
-                assert_eq!(
-                    frame_dim, self.dim,
-                    "uplink frame dimension mismatch (worker {})",
+            decode_uplink_into(&self.frame_buf, &mut self.msg, &mut self.pool).map_err(|e| {
+                TransportError::Protocol(format!(
+                    "undecodable uplink frame (worker {}): {e:#}",
                     w.id
-                );
-            }
+                ))
+            })?;
+            // Receiver-side contract checks before folding: the wire
+            // names the worker and the dimension, and new_state/
+            // fold_delta assume matching lengths — reject with Err, not
+            // a panic, exactly like a remote receiver would.
+            validate_wire_msg(&self.msg, w.id, self.dim)?;
             // The receiver-side state must match the worker's own
             // advance bit-for-bit (up to non-finite blowups). Runs in
             // the persistent reconstruction buffer, so debug builds
@@ -572,25 +665,31 @@ impl TransportLink for FramedLink {
             // Measured billing: the bytes that actually crossed.
             out.bits.push((self.msg.worker_id, 8 * self.frame_buf.len() as u64));
         }
+        Ok(())
     }
 
-    fn snapshot_g(&mut self) -> Vec<(usize, Vec<f32>)> {
-        self.workers.iter().map(|w| (w.id, w.g().to_vec())).collect()
+    fn snapshot_g(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError> {
+        Ok(self.workers.iter().map(|w| (w.id, w.g().to_vec())).collect())
     }
 
-    fn switch_mechanism(&mut self, map: Arc<dyn ThreePointMap>, frame: &[u8]) -> u64 {
+    fn switch_mechanism(
+        &mut self,
+        map: Arc<dyn ThreePointMap>,
+        frame: &[u8],
+    ) -> Result<u64, TransportError> {
         // A real receiver decodes the directive off the wire before
-        // acting on it; the map handle rides alongside (mechanism
-        // construction from the wire name is a registry concern, not a
-        // codec one).
-        let directive = decode_mech_switch(frame)
-            .expect("framed transport produced an undecodable MechSwitch frame");
+        // acting on it; the map handle rides alongside (a remote
+        // receiver would instead build the map from the directive's
+        // spec — see the socket transport).
+        let directive = decode_mech_switch(frame).map_err(|e| {
+            TransportError::Protocol(format!("undecodable MechSwitch frame: {e:#}"))
+        })?;
         debug_assert_eq!(directive.mech, map.name(), "switch directive names a different map");
         self.bytes_down += frame.len() as u64;
         for w in self.workers.iter_mut() {
             w.swap_map(map.clone());
         }
-        8 * frame.len() as u64
+        Ok(8 * frame.len() as u64)
     }
 
     fn measured_bytes_up(&self) -> u64 {
@@ -633,16 +732,16 @@ mod tests {
     fn inprocess_round_covers_all_workers() {
         let (workers, d) = build_workers(5, 12);
         let cfg = TrainConfig::default();
-        let mut link = InProcess::new(2).connect(workers, d, &cfg);
+        let mut link = InProcess::new(2).connect(workers, d, &cfg).unwrap();
         let x = vec![0.1f32; d];
         let mut agg = RoundAggregate::new(d, 5);
-        link.round(&x, 1, false, &mut agg);
+        link.round(&x, 1, false, &mut agg).unwrap();
         assert_eq!(agg.bits.len(), 5);
         assert_eq!(agg.delta_sum.len(), d);
         let mut ids: Vec<usize> = agg.bits.iter().map(|&(w, _)| w).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
-        let snap = link.snapshot_g();
+        let snap = link.snapshot_g().unwrap();
         assert_eq!(snap.len(), 5);
         assert!(snap.iter().all(|(_, g)| g.len() == d));
         assert_eq!(link.measured_bytes_up(), 0);
@@ -652,10 +751,10 @@ mod tests {
     fn framed_round_measures_bytes() {
         let (workers, d) = build_workers(4, 10);
         let cfg = TrainConfig::default();
-        let mut link = Framed::default().connect(workers, d, &cfg);
+        let mut link = Framed::default().connect(workers, d, &cfg).unwrap();
         let x = vec![0.1f32; d];
         let mut agg = RoundAggregate::new(d, 4);
-        link.round(&x, 1, false, &mut agg);
+        link.round(&x, 1, false, &mut agg).unwrap();
         assert_eq!(agg.bits.len(), 4);
         assert!(link.measured_bytes_up() > 0);
         // Measured billing is bytes, so every entry is byte-aligned and
@@ -673,26 +772,28 @@ mod tests {
         let (w1, _) = build_workers(4, d);
         let (w2, _) = build_workers(4, d);
         let cfg = TrainConfig::default();
-        let mut a = InProcess::new(2).connect(w1, d, &cfg);
-        let mut b = Framed::default().connect(w2, d, &cfg);
+        let mut a = InProcess::new(2).connect(w1, d, &cfg).unwrap();
+        let mut b = Framed::default().connect(w2, d, &cfg).unwrap();
         let x = vec![0.05f32; d];
         let mut ra = RoundAggregate::new(d, 4);
         let mut rb = RoundAggregate::new(d, 4);
-        a.round(&x, 0, false, &mut ra);
-        b.round(&x, 0, false, &mut rb);
+        a.round(&x, 0, false, &mut ra).unwrap();
+        b.round(&x, 0, false, &mut rb).unwrap();
         // Switch every worker to GD mid-run.
         let gd = parse_mechanism("gd").unwrap();
-        let frame = encode_mech_switch(&MechSwitch { round: 1, mech: gd.name() });
-        let bits_a = a.switch_mechanism(gd.clone(), &frame);
-        let bits_b = b.switch_mechanism(gd, &frame);
+        let frame =
+            encode_mech_switch(&MechSwitch { round: 1, mech: gd.name(), spec: gd.spec() })
+                .unwrap();
+        let bits_a = a.switch_mechanism(gd.clone(), &frame).unwrap();
+        let bits_b = b.switch_mechanism(gd, &frame).unwrap();
         assert_eq!(bits_a, 8 * frame.len() as u64);
         assert_eq!(bits_a, bits_b, "declared billing must match measured");
         assert_eq!(a.measured_bytes_down(), 0, "in-memory transport serializes nothing");
         assert_eq!(b.measured_bytes_down(), frame.len() as u64);
         // Post-switch rounds run GD (dense replace), so both transports
         // fold identical deltas and no worker skips.
-        a.round(&x, 1, false, &mut ra);
-        b.round(&x, 1, false, &mut rb);
+        a.round(&x, 1, false, &mut ra).unwrap();
+        b.round(&x, 1, false, &mut rb).unwrap();
         assert_eq!(ra.skipped, 0);
         assert_eq!(rb.skipped, 0);
         for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
@@ -708,14 +809,14 @@ mod tests {
         let (w1, _) = build_workers(4, d);
         let (w2, _) = build_workers(4, d);
         let cfg = TrainConfig::default();
-        let mut a = InProcess::new(1).connect(w1, d, &cfg);
-        let mut b = Framed::default().connect(w2, d, &cfg);
+        let mut a = InProcess::new(1).connect(w1, d, &cfg).unwrap();
+        let mut b = Framed::default().connect(w2, d, &cfg).unwrap();
         let x = vec![0.05f32; d];
         let mut ra = RoundAggregate::new(d, 4);
         let mut rb = RoundAggregate::new(d, 4);
         for t in 0..5u64 {
-            a.round(&x, t, false, &mut ra);
-            b.round(&x, t, false, &mut rb);
+            a.round(&x, t, false, &mut ra).unwrap();
+            b.round(&x, t, false, &mut rb).unwrap();
             for (da, db) in ra.delta_sum.iter().zip(&rb.delta_sum) {
                 assert!((da - db).abs() < 1e-9, "{da} vs {db}");
             }

@@ -78,6 +78,13 @@ impl WorkerState {
         self.mech.g()
     }
 
+    /// Canonical parseable spec of the worker's installed mechanism —
+    /// what a socket transport's session hello carries so a remote
+    /// agent can reconstruct the map from wire bytes alone.
+    pub fn map_spec(&self) -> String {
+        self.mech.map_spec()
+    }
+
     /// Install a new mechanism for the following rounds (the schedule
     /// axis); `(h, y)` carry over — see
     /// [`MechWorker::swap_map`](crate::mechanisms::MechWorker::swap_map).

@@ -112,6 +112,7 @@ pub fn tune_stepsize(
             total_bits_down: 0,
             wire_bytes_up: 0,
             wire_bytes_down: 0,
+            transport_error: None,
             elapsed: std::time::Duration::ZERO,
         },
         score: None,

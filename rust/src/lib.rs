@@ -16,9 +16,13 @@
 //!   ([`coordinator`]) built around the composable
 //!   [`TrainSession`](coordinator::TrainSession) —
 //!   `builder(problem).mechanism(map).transport(t).observer(o).config(cfg).run()`
-//!   — with pluggable transports (in-memory thread pool, or the framed
+//!   — with pluggable transports (in-memory thread pool; the framed
 //!   byte codec that bills *measured* wire bytes against the paper's
-//!   declared bit accounting), streaming round observers with early-stop
+//!   declared bit accounting; and a socket transport — TCP or
+//!   Unix-domain, `threepc worker --connect` agents on the far end,
+//!   wire grammar in PROTOCOL.md — whose error-propagating link
+//!   surfaces every peer failure as a `TransportError` value instead
+//!   of a panic), streaming round observers with early-stop
 //!   control and `(x, g_i)` checkpointing, the training objectives
 //!   ([`problems`], [`data`]), convergence theory ([`theory`]) and the
 //!   experiment harness that regenerates every paper figure/table

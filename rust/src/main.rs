@@ -11,7 +11,8 @@
 
 use anyhow::Result;
 use std::sync::Arc;
-use threepc::coordinator::{Framed, InProcess, TrainConfig, TrainSession};
+use std::time::Duration;
+use threepc::coordinator::{AgentConfig, Framed, InProcess, Socket, TrainConfig, TrainSession};
 use threepc::data;
 use threepc::experiments;
 use threepc::mechanisms::schedule::{parse_schedule, RoundTelemetry};
@@ -50,6 +51,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             }
         }
         "train" => cmd_train(args),
+        "worker" => cmd_worker(args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -58,13 +60,32 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
+/// Run a worker agent: connect to a leader started with
+/// `threepc train --transport tcp://…|uds://…`, reconstruct the local
+/// shard from the session hello, and serve rounds until shutdown.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get("connect").ok_or_else(|| {
+        anyhow::anyhow!("worker needs --connect tcp://host:port or uds://path")
+    })?;
+    let cfg = AgentConfig {
+        connect_attempts: args.num_or("retries", 20u32),
+        retry_backoff: Duration::from_millis(args.num_or("retry-backoff-ms", 100u64)),
+        io_timeout: Duration::from_millis(args.num_or("io-timeout-ms", 60_000u64)),
+    };
+    println!("threepc worker: connecting to {addr}");
+    threepc::coordinator::run_worker_agent(addr, &cfg)?;
+    println!("threepc worker: session complete");
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "threepc — 3PC: Three Point Compressors (ICML 2022) reproduction\n\
          \n\
          USAGE:\n\
            threepc exp list | <id> [flags]   regenerate paper figures/tables\n\
-           threepc train [flags]             one training run\n\
+           threepc train [flags]             one training run (the leader)\n\
+           threepc worker --connect <addr>   a remote worker agent (socket transport)\n\
            threepc info                      build + artifact status\n\
          \n\
          train flags:\n\
@@ -80,9 +101,19 @@ fn print_help() {
            --dataset phishing|w6a|a9a|ijcnn1 (logreg)\n\
            --d D --noise-scale S      (quad)\n\
            --tol EPS --loss-every K --seed S --threads P --init full|zero\n\
-           --transport inproc|framed|framed-natural\n\
-                                      in-memory pool vs serializing codec path\n\
-                                      (framed-natural: 9-bit natural value coding)\n"
+           --transport inproc|framed|framed-natural|tcp://host:port|uds://path\n\
+                                      in-memory pool, serializing codec path, or a\n\
+                                      real socket leader waiting for worker agents\n\
+                                      (framed-natural: 9-bit natural value coding;\n\
+                                      socket: --wire-natural for the same, and\n\
+                                      --spawn-workers to run the agents in-process\n\
+                                      over loopback; quad problems only)\n\
+         \n\
+         worker flags:\n\
+           --connect tcp://host:port|uds://path  the leader's listen address\n\
+           --retries N                bounded connect-and-handshake attempts (20)\n\
+           --retry-backoff-ms M       sleep between attempts (100)\n\
+           --io-timeout-ms M          per-read/write timeout once connected (60000)\n"
     );
 }
 
@@ -117,16 +148,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     // Keep the device service alive for HLO-backed problems.
     let mut _service: Option<DeviceService> = None;
 
+    // The shard recipe a socket leader broadcasts in its session hello,
+    // when the chosen problem can be regenerated from a spec.
+    let mut socket_problem_spec: Option<String> = None;
+
     let problem: Distributed = match args.str_or("problem", "quad").as_str() {
         "quad" => {
             let d = args.num_or("d", 1000usize);
-            let suite = threepc::problems::quadratic::generate(
-                n,
-                d,
-                args.num_or("lambda", 1e-4),
-                args.num_or("noise-scale", 0.8),
-                args.num_or("seed", 42u64),
-            );
+            let lambda = args.num_or("lambda", 1e-4);
+            let noise = args.num_or("noise-scale", 0.8);
+            let qseed = args.num_or("seed", 42u64);
+            let suite = threepc::problems::quadratic::generate(n, d, lambda, noise, qseed);
+            if backend != "hlo" {
+                socket_problem_spec = Some(threepc::coordinator::socket::quad_problem_spec(
+                    n, d, lambda, noise, qseed,
+                ));
+            }
             if backend == "hlo" {
                 let manifest = Manifest::load(threepc::runtime::default_artifacts_dir())?;
                 let svc = DeviceService::start()?;
@@ -255,8 +292,52 @@ fn cmd_train(args: &Args) -> Result<()> {
             let t = if transport == "framed-natural" { Framed::natural() } else { Framed::new() };
             builder.transport(t).run()
         }
-        other => anyhow::bail!("unknown transport '{other}' (inproc|framed|framed-natural)"),
+        addr if addr.starts_with("tcp://") || addr.starts_with("uds://") => {
+            let spec = socket_problem_spec.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--transport {addr} requires --problem quad with --backend native: only \
+                     deterministically regenerable problems can cross the wire today"
+                )
+            })?;
+            let mut sock = Socket::bind(addr, &spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if args.flag("wire-natural") {
+                sock = sock.natural();
+            }
+            let listen = sock.local_addr().unwrap_or_else(|| addr.to_string());
+            println!(
+                "threepc leader listening on {listen}; waiting for {n} workers \
+                 (start each with: threepc worker --connect {listen})"
+            );
+            let mut agent_joins = Vec::new();
+            if args.flag("spawn-workers") {
+                println!("spawning {n} in-process worker agents over loopback");
+                for _ in 0..n {
+                    let agent_addr = listen.clone();
+                    agent_joins.push(std::thread::spawn(move || {
+                        threepc::coordinator::run_worker_agent(
+                            &agent_addr,
+                            &AgentConfig::default(),
+                        )
+                    }));
+                }
+            }
+            let r = builder.transport(sock).run();
+            for j in agent_joins {
+                match j.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => eprintln!("worker agent error: {e:#}"),
+                    Err(_) => eprintln!("worker agent thread panicked"),
+                }
+            }
+            r
+        }
+        other => anyhow::bail!(
+            "unknown transport '{other}' (inproc|framed|framed-natural|tcp://…|uds://…)"
+        ),
     };
+    if let Some(e) = &r.transport_error {
+        eprintln!("transport error ended the run early: {e}");
+    }
     for (t, m) in r.mech_switches() {
         println!("schedule: switched to {m} at round {t}");
     }

@@ -19,6 +19,10 @@ impl ThreePointMap for Gd {
         "GD".into()
     }
 
+    fn spec(&self) -> String {
+        "gd".into()
+    }
+
     fn apply_into(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         let g = ctx.take_f32_copy(x);
@@ -44,6 +48,10 @@ impl NaiveDcgd {
 impl ThreePointMap for NaiveDcgd {
     fn name(&self) -> String {
         format!("DCGD({})", self.c.name())
+    }
+
+    fn spec(&self) -> String {
+        format!("dcgd:{}", self.c.spec())
     }
 
     fn apply_into(&self, _h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {

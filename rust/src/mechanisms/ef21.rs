@@ -34,6 +34,10 @@ impl ThreePointMap for Ef21 {
         format!("EF21({})", self.c.name())
     }
 
+    fn spec(&self) -> String {
+        format!("ef21:{}", self.c.spec())
+    }
+
     fn apply_into(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         // residual = x − h; message = C(residual); g_new = h + message.
         // Perf (§Perf iteration 3): the residual and the compressed

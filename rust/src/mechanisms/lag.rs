@@ -41,6 +41,10 @@ impl ThreePointMap for Lag {
         format!("LAG(zeta={})", self.zeta)
     }
 
+    fn spec(&self) -> String {
+        format!("lag:{}", self.zeta)
+    }
+
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         if lag_trigger(ctx.shards(), h, y, x, self.zeta) {
@@ -71,6 +75,10 @@ impl Clag {
 impl ThreePointMap for Clag {
     fn name(&self) -> String {
         format!("CLAG({},zeta={})", self.c.name(), self.zeta)
+    }
+
+    fn spec(&self) -> String {
+        format!("clag:{}:{}", self.c.spec(), self.zeta)
     }
 
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {

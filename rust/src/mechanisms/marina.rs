@@ -35,6 +35,10 @@ impl ThreePointMap for V5 {
         format!("3PCv5(p={},{})", self.coin.p, self.c.name())
     }
 
+    fn spec(&self) -> String {
+        format!("v5:{}:{}", self.coin.p, self.c.spec())
+    }
+
     fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         if self.coin.flip(ctx) {
@@ -91,6 +95,10 @@ impl Marina {
 impl ThreePointMap for Marina {
     fn name(&self) -> String {
         format!("MARINA(p={},{})", self.coin.p, self.q.name())
+    }
+
+    fn spec(&self) -> String {
+        format!("marina:{}:{}", self.coin.p, self.q.spec())
     }
 
     fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {

@@ -132,6 +132,14 @@ impl ReplaceWire {
 pub trait ThreePointMap: Send + Sync {
     fn name(&self) -> String;
 
+    /// The canonical parseable spec of this map: feeding it back
+    /// through [`parse_mechanism`] reconstructs an equivalent map. This
+    /// is what downlink `MechSwitch` directives carry so a *remote*
+    /// worker (socket transport) can instantiate the mechanism from
+    /// wire bytes alone — display [`name`](ThreePointMap::name)s are
+    /// for humans and traces, specs are for peers.
+    fn spec(&self) -> String;
+
     /// Apply `C_{h,y}(x)`, writing what crossed the wire into `out`.
     /// Callers pass a reclaimed slot (its previous buffers already
     /// salvaged into `ctx`'s scratch pool via [`recycle_update`]); the
@@ -251,6 +259,12 @@ impl MechWorker {
 
     pub fn map_name(&self) -> String {
         self.map.name()
+    }
+
+    /// Canonical parseable spec of the installed map (see
+    /// [`ThreePointMap::spec`]).
+    pub fn map_spec(&self) -> String {
+        self.map.spec()
     }
 
     /// Install a new three point compressor mid-run (the schedule axis,
@@ -489,6 +503,33 @@ mod tests {
         }
         assert!(parse_mechanism("bogus").is_err());
         assert!(parse_mechanism("v2:rand4").is_err());
+    }
+
+    #[test]
+    fn mechanism_specs_roundtrip_through_parser() {
+        // `spec()` is the wire form of a mechanism (MechSwitch
+        // directives carry it so remote workers can reconstruct the
+        // map): parse → spec → parse must land on an equivalent map.
+        for s in [
+            "gd",
+            "dcgd:top4",
+            "ef21:top4",
+            "lag:4.0",
+            "clag:top4:2.0",
+            "v1:top4",
+            "v2:rand4:top4",
+            "v3:ef21:top4;top2",
+            "v4:top4:top2",
+            "v5:0.25:top4",
+            "marina:0.25:rand4",
+            "ef21:cperm*crand8",
+            "clag:scaled-natural:2.0",
+        ] {
+            let map = parse_mechanism(s).unwrap();
+            let back = parse_mechanism(&map.spec())
+                .unwrap_or_else(|e| panic!("{s}: spec '{}' unparseable: {e}", map.spec()));
+            assert_eq!(back.name(), map.name(), "{s} → {}", map.spec());
+        }
     }
 
     #[test]

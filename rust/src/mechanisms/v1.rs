@@ -28,6 +28,10 @@ impl ThreePointMap for V1 {
         format!("3PCv1({})", self.c.name())
     }
 
+    fn spec(&self) -> String {
+        format!("v1:{}", self.c.spec())
+    }
+
     fn apply_into(&self, _h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         let sh = ctx.shards();

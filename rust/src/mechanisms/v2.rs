@@ -28,6 +28,10 @@ impl ThreePointMap for V2 {
         format!("3PCv2({},{})", self.q.name(), self.c.name())
     }
 
+    fn spec(&self) -> String {
+        format!("v2:{}:{}", self.q.spec(), self.c.spec())
+    }
+
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         let sh = ctx.shards();

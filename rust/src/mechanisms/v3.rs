@@ -30,6 +30,10 @@ impl ThreePointMap for V3 {
         format!("3PCv3({};{})", self.inner.name(), self.c.name())
     }
 
+    fn spec(&self) -> String {
+        format!("v3:{};{}", self.inner.spec(), self.c.spec())
+    }
+
     fn apply_into(&self, h: &[f32], y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         let sh = ctx.shards();

@@ -31,6 +31,10 @@ impl ThreePointMap for V4 {
         format!("3PCv4({},{})", self.c2.name(), self.c1.name())
     }
 
+    fn spec(&self) -> String {
+        format!("v4:{}:{}", self.c2.spec(), self.c1.spec())
+    }
+
     fn apply_into(&self, h: &[f32], _y: &[f32], x: &[f32], ctx: &mut Ctx<'_>, out: &mut Update) {
         recycle_update(ctx, out);
         let sh = ctx.shards();

@@ -179,15 +179,15 @@ fn framed_link_round_is_allocation_free_at_steady_state() {
         })
         .collect();
     let cfg = TrainConfig::default();
-    let mut link = Framed::default().connect(workers, d, &cfg);
+    let mut link = Framed::default().connect(workers, d, &cfg).unwrap();
     let mut agg = RoundAggregate::new(d, n);
     let x = vec![0.05f32; d];
     for t in 0..8u64 {
-        link.round(&x, t, false, &mut agg);
+        link.round(&x, t, false, &mut agg).unwrap();
     }
     let allocs = count_allocs(|| {
         for t in 8..28u64 {
-            link.round(&x, t, false, &mut agg);
+            link.round(&x, t, false, &mut agg).expect("steady-state framed round");
         }
     });
     assert_eq!(allocs, 0, "steady-state Framed rounds must not allocate");

@@ -133,7 +133,12 @@ fn piecewise_switch_framed_matches_inprocess_and_bills_the_directive() {
 
     // The Framed transport put the directive on the wire for real, and
     // its measured bytes agree with the declared billing.
-    let frame = encode_mech_switch(&MechSwitch { round: 15, mech: ef21_name });
+    let frame = encode_mech_switch(&MechSwitch {
+        round: 15,
+        mech: ef21_name,
+        spec: parse_mechanism("ef21:top4").unwrap().spec(),
+    })
+    .unwrap();
     assert_eq!(b.wire_bytes_down, frame.len() as u64);
     assert_eq!(a.wire_bytes_down, 0, "in-memory transport serializes nothing");
     let dense_broadcast_bits = (rounds * 32 * 30) as u64; // rounds × 32·d

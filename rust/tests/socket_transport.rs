@@ -1,0 +1,484 @@
+//! Acceptance suite for the socket transport: loopback TCP and UDS
+//! sessions with real worker agents must reproduce the `Framed` and
+//! `InProcess` traces bit-for-bit for every mechanism the spec grammar
+//! can produce, with measured byte accounting agreeing across
+//! transports; and every hostile condition — malformed frames, a
+//! session-contract violation, a peer dying mid-round, workers that
+//! never connect — must surface as `TrainResult::transport_error`,
+//! never a panic.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::Duration;
+
+use threepc::coordinator::protocol::{
+    decode_downlink, encode_round_reply, encode_uplink, encode_worker_hello, DownlinkFrame,
+    ROUND_PAYLOAD_BYTES,
+};
+use threepc::coordinator::socket::quad_problem_spec;
+use threepc::coordinator::{
+    encode_mech_switch, run_worker_agent, AgentConfig, Framed, InProcess, InitPolicy, MechSwitch,
+    ResumeState, Socket, TrainConfig, TrainResult, TrainSession, TransportError, UplinkMsg,
+};
+use threepc::mechanisms::{parse_mechanism, ReplaceWire, Update};
+use threepc::problems::quadratic;
+
+const N: usize = 4;
+const D: usize = 30;
+const LAMBDA: f64 = 1e-2;
+const NOISE: f64 = 0.5;
+const QSEED: u64 = 21;
+
+/// Every spec `parse_all_specs` pins down.
+const ALL_SPECS: [&str; 11] = [
+    "gd",
+    "dcgd:top3",
+    "ef21:top3",
+    "lag:2.0",
+    "clag:top3:2.0",
+    "v1:top3",
+    "v2:rand3:top3",
+    "v3:ef21:top3;top2",
+    "v4:top3:top2",
+    "v5:0.3:top3",
+    "marina:0.3:rand3",
+];
+
+fn suite() -> quadratic::QuadSuite {
+    quadratic::generate(N, D, LAMBDA, NOISE, QSEED)
+}
+
+fn problem_spec() -> String {
+    quad_problem_spec(N, D, LAMBDA, NOISE, QSEED)
+}
+
+fn cfg(rounds: usize) -> TrainConfig {
+    // threads = 1 pins the in-process f64 fold order; the serializing
+    // transports fold in worker order by construction.
+    TrainConfig { gamma: 0.02, max_rounds: rounds, threads: 1, seed: 13, ..TrainConfig::default() }
+}
+
+fn bind_socket(addr: &str) -> Socket {
+    Socket::bind(addr, &problem_spec())
+        .expect("bind")
+        .accept_timeout(Duration::from_secs(60))
+        .io_timeout(Duration::from_secs(60))
+}
+
+/// A fresh, short, unique uds path (parallel tests must not collide).
+fn uds_addr() -> String {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let id = NEXT.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "3pc-{}-{}.sock",
+        std::process::id(),
+        id
+    ));
+    format!("uds://{}", path.display())
+}
+
+fn spawn_agents(addr: &str, n: usize) -> Vec<thread::JoinHandle<anyhow::Result<()>>> {
+    (0..n)
+        .map(|_| {
+            let a = addr.to_string();
+            thread::spawn(move || run_worker_agent(&a, &AgentConfig::default()))
+        })
+        .collect()
+}
+
+fn join_agents(joins: Vec<thread::JoinHandle<anyhow::Result<()>>>) {
+    for j in joins {
+        j.join().expect("agent thread").expect("agent exits cleanly");
+    }
+}
+
+fn run_inproc(s: &quadratic::QuadSuite, spec: &str, c: &TrainConfig) -> TrainResult {
+    TrainSession::builder(&s.problem)
+        .mechanism_spec(spec)
+        .unwrap()
+        .config(c.clone())
+        .transport(InProcess::new(1))
+        .run()
+}
+
+fn run_framed(s: &quadratic::QuadSuite, spec: &str, c: &TrainConfig) -> TrainResult {
+    TrainSession::builder(&s.problem)
+        .mechanism_spec(spec)
+        .unwrap()
+        .config(c.clone())
+        .transport(Framed::default())
+        .run()
+}
+
+fn run_socket(s: &quadratic::QuadSuite, spec: &str, c: &TrainConfig, addr: &str) -> TrainResult {
+    let sock = bind_socket(addr);
+    let listen = sock.local_addr().expect("bound address");
+    let joins = spawn_agents(&listen, N);
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec(spec)
+        .unwrap()
+        .config(c.clone())
+        .transport(sock)
+        .run();
+    join_agents(joins);
+    r
+}
+
+/// Bit-for-bit physics equality (everything transport-independent).
+fn assert_trace_eq(a: &TrainResult, b: &TrainResult, tag: &str) {
+    assert_eq!(a.rounds_run, b.rounds_run, "{tag}: rounds_run");
+    assert_eq!(a.records.len(), b.records.len(), "{tag}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            ra.grad_norm_sq.to_bits(),
+            rb.grad_norm_sq.to_bits(),
+            "{tag} round {}: grad_norm_sq {} vs {}",
+            ra.t,
+            ra.grad_norm_sq,
+            rb.grad_norm_sq
+        );
+        assert_eq!(ra.g_err.to_bits(), rb.g_err.to_bits(), "{tag} round {}: g_err", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "{tag} round {}: skipped_frac", ra.t);
+        assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "{tag} round {}: bits_down_cum", ra.t);
+        assert_eq!(ra.mech_switch, rb.mech_switch, "{tag} round {}: mech_switch", ra.t);
+        assert_eq!(ra.loss, rb.loss, "{tag} round {}: loss", ra.t);
+    }
+    for (i, (xa, xb)) in a.final_x.iter().zip(&b.final_x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{tag}: final_x[{i}]");
+    }
+}
+
+/// The measured-byte contract a socket run must satisfy against its
+/// `Framed` twin: identical uplink frames (so identical measured
+/// uplink bytes and billed bits), and downlink = Framed's billable
+/// directives plus the per-round broadcast payload.
+fn assert_socket_accounting(framed: &TrainResult, sock: &TrainResult, init_bits: u64, tag: &str) {
+    assert!(sock.transport_error.is_none(), "{tag}: {:?}", sock.transport_error);
+    for (rb, rc) in framed.records.iter().zip(&sock.records) {
+        assert_eq!(rb.bits_up_cum, rc.bits_up_cum, "{tag} round {}: bits_up_cum", rb.t);
+        assert_eq!(rb.bits_up_max, rc.bits_up_max, "{tag} round {}: bits_up_max", rb.t);
+    }
+    assert_eq!(framed.wire_bytes_up, sock.wire_bytes_up, "{tag}: measured uplink bytes");
+    assert_eq!(
+        8 * sock.wire_bytes_up,
+        sock.total_bits_up - init_bits,
+        "{tag}: every billed uplink bit beyond g⁰ init is a measured wire byte"
+    );
+    let broadcast = (sock.rounds_run as u64) * (ROUND_PAYLOAD_BYTES as u64 + 4 * D as u64);
+    assert_eq!(
+        sock.wire_bytes_down,
+        framed.wire_bytes_down + broadcast,
+        "{tag}: downlink = framed's directives + round broadcasts"
+    );
+}
+
+#[test]
+fn socket_tcp_matches_framed_and_inprocess_for_every_mechanism() {
+    let s = suite();
+    let c = cfg(25);
+    let init_bits = (N * 32 * D) as u64;
+    for spec in ALL_SPECS {
+        let a = run_inproc(&s, spec, &c);
+        let b = run_framed(&s, spec, &c);
+        let sock = run_socket(&s, spec, &c, "tcp://127.0.0.1:0");
+        assert_trace_eq(&a, &sock, &format!("tcp {spec} (vs inprocess)"));
+        assert_trace_eq(&b, &sock, &format!("tcp {spec} (vs framed)"));
+        assert_socket_accounting(&b, &sock, init_bits, &format!("tcp {spec}"));
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_uds_matches_framed_and_inprocess_for_every_mechanism() {
+    let s = suite();
+    let c = cfg(25);
+    let init_bits = (N * 32 * D) as u64;
+    for spec in ALL_SPECS {
+        let b = run_framed(&s, spec, &c);
+        let sock = run_socket(&s, spec, &c, &uds_addr());
+        assert_trace_eq(&b, &sock, &format!("uds {spec}"));
+        assert_socket_accounting(&b, &sock, init_bits, &format!("uds {spec}"));
+    }
+}
+
+#[test]
+fn schedule_switch_crosses_the_socket() {
+    let s = suite();
+    let sched = "clag:top3:2.0@0..8,ef21:top3@8..";
+    let c = cfg(16);
+    let a = TrainSession::builder(&s.problem)
+        .schedule_spec(sched)
+        .unwrap()
+        .config(c.clone())
+        .transport(InProcess::new(1))
+        .run();
+    let sock = bind_socket("tcp://127.0.0.1:0");
+    let listen = sock.local_addr().unwrap();
+    let joins = spawn_agents(&listen, N);
+    let r = TrainSession::builder(&s.problem)
+        .schedule_spec(sched)
+        .unwrap()
+        .config(c)
+        .transport(sock)
+        .run();
+    // Agents exiting cleanly proves they parsed and installed the
+    // switched mechanism from the directive's spec.
+    join_agents(joins);
+    assert_trace_eq(&a, &r, "piecewise over socket");
+    assert_eq!(r.mech_switches(), a.mech_switches());
+    let ef = parse_mechanism("ef21:top3").unwrap();
+    let frame =
+        encode_mech_switch(&MechSwitch { round: 8, mech: ef.name(), spec: ef.spec() }).unwrap();
+    let broadcast = (r.rounds_run as u64) * (ROUND_PAYLOAD_BYTES as u64 + 4 * D as u64);
+    assert_eq!(r.wire_bytes_down, broadcast + frame.len() as u64);
+}
+
+#[test]
+fn loss_sidecar_matches_framed() {
+    let s = suite();
+    let mut c = cfg(12);
+    c.eval_loss_every = 3;
+    let b = run_framed(&s, "ef21:top3", &c);
+    let sock = run_socket(&s, "ef21:top3", &c, "tcp://127.0.0.1:0");
+    assert_trace_eq(&b, &sock, "loss eval");
+    assert!(sock.records.iter().any(|r| r.loss.is_some()), "loss rounds present");
+}
+
+#[test]
+fn natural_value_coding_agrees_with_framed_natural() {
+    let s = suite();
+    let c = cfg(15);
+    let b = TrainSession::builder(&s.problem)
+        .mechanism_spec("ef21:top3")
+        .unwrap()
+        .config(c.clone())
+        .transport(Framed::natural())
+        .run();
+    let sock = Socket::bind("tcp://127.0.0.1:0", &problem_spec())
+        .unwrap()
+        .accept_timeout(Duration::from_secs(60))
+        .natural();
+    let listen = sock.local_addr().unwrap();
+    let joins = spawn_agents(&listen, N);
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec("ef21:top3")
+        .unwrap()
+        .config(c)
+        .transport(sock)
+        .run();
+    join_agents(joins);
+    assert_trace_eq(&b, &r, "natural coding");
+    assert_eq!(b.wire_bytes_up, r.wire_bytes_up, "natural frames agree byte-for-byte");
+}
+
+#[test]
+fn zero_init_crosses_the_wire() {
+    let s = suite();
+    let mut c = cfg(10);
+    c.init = InitPolicy::Zero;
+    let b = run_framed(&s, "clag:top3:2.0", &c);
+    let sock = run_socket(&s, "clag:top3:2.0", &c, "tcp://127.0.0.1:0");
+    assert_trace_eq(&b, &sock, "zero init");
+    // Zero init bills nothing, so all billed bits are measured bytes.
+    assert_eq!(8 * sock.wire_bytes_up, sock.total_bits_up);
+}
+
+// ---------------------------------------------------------------------
+// Hostile peers. A rogue client speaks just enough of the protocol to
+// reach the round loop, then misbehaves; the leader must end the run
+// with a descriptive TransportError, never a panic.
+// ---------------------------------------------------------------------
+
+enum Rogue {
+    /// Replies to the first round with an undecodable frame.
+    Garbage,
+    /// Replies with a well-formed frame whose update carries the wrong
+    /// dimension (the link-layer contract check).
+    WrongDim,
+    /// Drops the connection after reading the first round frame.
+    Disconnect,
+}
+
+fn write_raw(s: &mut TcpStream, body: &[u8]) {
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+}
+
+fn read_raw(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut lb = [0u8; 4];
+    s.read_exact(&mut lb).ok()?;
+    let mut b = vec![0u8; u32::from_le_bytes(lb) as usize];
+    s.read_exact(&mut b).ok()?;
+    Some(b)
+}
+
+fn spawn_rogue(addr: String, mode: Rogue) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let hostport = addr.strip_prefix("tcp://").expect("tcp address").to_string();
+        let mut s = TcpStream::connect(&hostport).expect("rogue connect");
+        write_raw(&mut s, &encode_worker_hello());
+        let hello = match decode_downlink(&read_raw(&mut s).expect("hello")).expect("hello frame")
+        {
+            DownlinkFrame::Hello(h) => h,
+            other => panic!("expected hello, got {other:?}"),
+        };
+        // Await the first round broadcast, then misbehave.
+        let _ = read_raw(&mut s).expect("round frame");
+        match mode {
+            Rogue::Disconnect => drop(s),
+            Rogue::Garbage => {
+                write_raw(&mut s, &[0xe2, 0x00, 0x03]);
+                let _ = read_raw(&mut s); // leader shutdown / close
+            }
+            Rogue::WrongDim => {
+                let d = hello.dim as usize;
+                let up = encode_uplink(&UplinkMsg {
+                    worker_id: hello.worker_id as usize,
+                    update: Update::Replace {
+                        g: vec![0.0; d + 1],
+                        bits: 32 * (d as u64 + 1),
+                        wire: ReplaceWire::Dense,
+                    },
+                    g_err: 0.0,
+                });
+                let grad = vec![0.0f32; d];
+                let mut body = Vec::new();
+                encode_round_reply(&up, &grad, None, &mut body);
+                write_raw(&mut s, &body);
+                let _ = read_raw(&mut s);
+            }
+        }
+    })
+}
+
+/// Run a session against N-1 honest agents and one rogue.
+fn run_with_rogue(mode: Rogue) -> TrainResult {
+    let s = suite();
+    let sock = bind_socket("tcp://127.0.0.1:0");
+    let listen = sock.local_addr().unwrap();
+    let rogue = spawn_rogue(listen.clone(), mode);
+    let agents = spawn_agents(&listen, N - 1);
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec("ef21:top3")
+        .unwrap()
+        .config(cfg(10))
+        .transport(sock)
+        .run();
+    let _ = rogue.join();
+    // Honest agents end via the leader's shutdown frame or the dropped
+    // connection; either way they must not hang.
+    for a in agents {
+        let _ = a.join().expect("agent thread");
+    }
+    r
+}
+
+#[test]
+fn malformed_reply_surfaces_as_protocol_error() {
+    let r = run_with_rogue(Rogue::Garbage);
+    match &r.transport_error {
+        Some(TransportError::Protocol(m)) => {
+            assert!(m.contains("reply"), "unexpected message: {m}")
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert_eq!(r.rounds_run, 0, "the failed round must not count");
+    assert!(r.records.is_empty());
+}
+
+#[test]
+fn wrong_dimension_update_surfaces_as_protocol_error() {
+    let r = run_with_rogue(Rogue::WrongDim);
+    match &r.transport_error {
+        Some(TransportError::Protocol(m)) => {
+            assert!(m.contains("dimension"), "unexpected message: {m}")
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+}
+
+#[test]
+fn mid_round_disconnect_surfaces_as_transport_error() {
+    let r = run_with_rogue(Rogue::Disconnect);
+    match &r.transport_error {
+        Some(TransportError::Disconnected(_)) | Some(TransportError::Io(_)) => {}
+        other => panic!("expected a disconnect/io error, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_workers_surface_as_connect_error() {
+    let s = suite();
+    let sock = Socket::bind("tcp://127.0.0.1:0", &problem_spec())
+        .unwrap()
+        .accept_timeout(Duration::from_millis(100));
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec("gd")
+        .unwrap()
+        .config(cfg(5))
+        .transport(sock)
+        .run();
+    match &r.transport_error {
+        Some(TransportError::Io(m)) => assert!(m.contains("accept timed out"), "{m}"),
+        other => panic!("expected an accept timeout, got {other:?}"),
+    }
+    assert_eq!(r.rounds_run, 0);
+    assert!(r.records.is_empty());
+}
+
+#[test]
+fn resume_from_builder_cannot_cross_the_wire_either() {
+    // `resume_from` overrides cfg.init inside the session; the socket
+    // transport must see the *effective* policy and reject it, not the
+    // stale cfg.init (regression: a resumed socket session would
+    // otherwise silently desynchronise leader mirrors and agents).
+    use threepc::coordinator::Checkpoint;
+    let s = suite();
+    let cp = Checkpoint {
+        t: 2,
+        grad_norm_sq: 1.0,
+        x: s.problem.x0.clone(),
+        g_sum: vec![0.0; D],
+        worker_g: (0..N).map(|i| (i, vec![0.0f32; D])).collect(),
+    };
+    let sock = Socket::bind("tcp://127.0.0.1:0", &problem_spec()).unwrap();
+    let r = TrainSession::resume(&s.problem, &cp)
+        .unwrap()
+        .mechanism_spec("gd")
+        .unwrap()
+        .config(cfg(5))
+        .transport(sock)
+        .run();
+    match &r.transport_error {
+        Some(TransportError::Protocol(m)) => assert!(m.contains("FromState"), "{m}"),
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+}
+
+#[test]
+fn checkpoint_resume_cannot_cross_the_wire() {
+    let s = suite();
+    let rs = ResumeState {
+        t: 3,
+        grad_norm_sq: 1.0,
+        x: s.problem.x0.clone(),
+        g_sum: vec![0.0; D],
+        worker_g: (0..N).map(|_| vec![0.0f32; D]).collect(),
+    };
+    let mut c = cfg(5);
+    c.init = InitPolicy::FromState(std::sync::Arc::new(rs));
+    let sock = Socket::bind("tcp://127.0.0.1:0", &problem_spec()).unwrap();
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec("gd")
+        .unwrap()
+        .config(c)
+        .transport(sock)
+        .run();
+    match &r.transport_error {
+        Some(TransportError::Protocol(m)) => assert!(m.contains("FromState"), "{m}"),
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+}

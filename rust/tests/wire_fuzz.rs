@@ -1,0 +1,286 @@
+//! Decoder-robustness corpus fuzz: every valid wire frame the system
+//! can produce is truncated at every byte offset and bit-flipped at
+//! every bit position, and every decoder must come back with `Ok` or
+//! `Err` — never a panic — while allocating no more than a small
+//! multiple of the frame's own length (a hostile length field must
+//! fail its bounds check *before* any allocation is sized from it).
+//!
+//! The corpus covers the uplink codec (all `parse_all_specs`
+//! mechanisms, both value codings), the standalone `CVec` codec, the
+//! `MechSwitch` directive, the socket transport's downlink vocabulary
+//! (session hello, round broadcast, shutdown), the round reply, and
+//! the checkpoint file format.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use threepc::compressors::{CVec, Ctx, CtxInfo, WireValueCoding};
+use threepc::coordinator::protocol::{
+    decode_downlink, decode_mech_switch, decode_worker_hello, encode_mech_switch,
+    encode_round_reply, encode_round_start, encode_session_hello, encode_uplink_with,
+    encode_worker_hello, split_round_reply, SessionHello,
+};
+use threepc::coordinator::{decode_uplink, Checkpoint, MechSwitch, UplinkMsg};
+use threepc::mechanisms::{parse_mechanism, MechWorker};
+use threepc::util::rng::Pcg64;
+
+/// Byte-accounting global allocator (thread-local, like the
+/// `alloc_steady` counter): records how many bytes each decode attempt
+/// *requests*, so an attempted 16 GiB `Vec::with_capacity` from a
+/// hostile dim is caught even on machines where it would succeed.
+struct ByteCountingAlloc;
+
+thread_local! {
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump(n: usize) {
+    BYTES.with(|c| c.set(c.get() + n as u64));
+}
+
+unsafe impl GlobalAlloc for ByteCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: ByteCountingAlloc = ByteCountingAlloc;
+
+fn bytes_during<F: FnOnce()>(f: F) -> u64 {
+    let before = BYTES.with(|c| c.get());
+    f();
+    BYTES.with(|c| c.get()) - before
+}
+
+/// The frame-implied allocation bound. Decoded payloads expand their
+/// wire form by small constant factors (9-bit naturals → f32 is ×3.6,
+/// bit-packed indices → u32 is ≤ ×32 at 1-bit indices); 64× plus slack
+/// for error strings and `Vec` rounding covers every legitimate decode
+/// while still failing loudly on an unchecked hostile length.
+fn alloc_bound(frame_len: usize) -> u64 {
+    64 * frame_len as u64 + 4096
+}
+
+/// Run `decode` over the frame, asserting only that it neither panics
+/// nor allocates beyond the frame-implied bound (`Err` is the expected
+/// outcome for most mutations; a lucky bit flip may still be valid).
+fn check(buf: &[u8], decode: &dyn Fn(&[u8])) {
+    let used = bytes_during(|| decode(buf));
+    let bound = alloc_bound(buf.len());
+    assert!(
+        used <= bound,
+        "decoding a {}-byte frame allocated {used} bytes (bound {bound})",
+        buf.len()
+    );
+}
+
+/// Truncate at every offset and flip every bit of every byte.
+fn fuzz_decoder(buf: &[u8], decode: &dyn Fn(&[u8])) {
+    for cut in 0..buf.len() {
+        check(&buf[..cut], decode);
+    }
+    let mut work = buf.to_vec();
+    for i in 0..work.len() {
+        for bit in 0..8 {
+            work[i] ^= 1 << bit;
+            check(&work, decode);
+            work[i] ^= 1 << bit;
+        }
+    }
+}
+
+const ALL_SPECS: [&str; 11] = [
+    "gd",
+    "dcgd:top4",
+    "ef21:top4",
+    "lag:4.0",
+    "clag:top4:2.0",
+    "v1:top4",
+    "v2:rand4:top4",
+    "v3:ef21:top4;top2",
+    "v4:top4:top2",
+    "v5:0.25:top4",
+    "marina:0.25:rand4",
+];
+
+/// Drive every mechanism for a few rounds and collect its encoded
+/// uplink frames under both value codings.
+fn uplink_corpus() -> Vec<Vec<u8>> {
+    let d = 24usize;
+    let n = 4usize;
+    let mut corpus = Vec::new();
+    for spec in ALL_SPECS {
+        let map = parse_mechanism(spec).unwrap();
+        let mut meta = Pcg64::seed(0xf022 ^ spec.len() as u64);
+        let g0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let grad0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let mut worker = MechWorker::new(map, g0, grad0);
+        let mut rng = Pcg64::new(11, 0x77);
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: 1 };
+        for t in 0..6u64 {
+            let grad: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+            let mut ctx = Ctx::new(info, &mut rng, t);
+            let (update, g_err) = worker.round(&grad, &mut ctx);
+            let msg = UplinkMsg { worker_id: 1, update, g_err };
+            for coding in [WireValueCoding::RawF32, WireValueCoding::Natural] {
+                corpus.push(encode_uplink_with(&msg, coding));
+            }
+        }
+    }
+    corpus
+}
+
+#[test]
+fn uplink_frames_survive_truncation_and_bit_flips() {
+    let corpus = uplink_corpus();
+    assert!(corpus.len() > 100, "corpus too small: {}", corpus.len());
+    let decode: &dyn Fn(&[u8]) = &|b| {
+        let _ = decode_uplink(b);
+    };
+    for frame in &corpus {
+        // Corpus sanity: the unmutated frame decodes.
+        assert!(decode_uplink(frame).is_ok());
+        fuzz_decoder(frame, decode);
+    }
+}
+
+#[test]
+fn cvec_frames_survive_truncation_and_bit_flips() {
+    let cases = [
+        CVec::Zero { dim: 17 },
+        CVec::Dense(vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE, 8.0]),
+        CVec::Sparse { dim: 1000, idx: vec![0, 7, 999, 500], val: vec![1.0, -0.5, 3.25, 2.0] },
+        // Natural-codable values (tags 3/4 under natural coding).
+        CVec::Dense(vec![1.0, -2.0, 0.25, 0.0, 8.0]),
+        CVec::Sparse { dim: 1000, idx: vec![1, 10, 999], val: vec![0.5, -4.0, 64.0] },
+    ];
+    let decode: &dyn Fn(&[u8]) = &|b| {
+        let _ = CVec::decode(b, &mut 0);
+    };
+    for c in &cases {
+        for coding in [WireValueCoding::RawF32, WireValueCoding::Natural] {
+            let mut buf = Vec::new();
+            c.encode_with(coding, &mut buf);
+            assert!(CVec::decode(&buf, &mut 0).is_ok());
+            fuzz_decoder(&buf, decode);
+        }
+    }
+}
+
+#[test]
+fn downlink_frames_survive_truncation_and_bit_flips() {
+    let hello = encode_session_hello(&SessionHello {
+        worker_id: 2,
+        n_workers: 6,
+        dim: 30,
+        seed: 21,
+        zero_init: false,
+        value_coding: WireValueCoding::Natural,
+        mech_spec: "clag:top4:2.0".into(),
+        problem_spec: "quad:6:30:0.01:0.5:21".into(),
+    })
+    .unwrap();
+    let mut round = Vec::new();
+    let x: Vec<f32> = (0..30).map(|i| i as f32 * 0.25 - 3.0).collect();
+    encode_round_start(9, 0xfeed_f00d, true, &x, &mut round);
+    let switch = {
+        let inner = encode_mech_switch(&MechSwitch {
+            round: 15,
+            mech: "EF21(Top-4)".into(),
+            spec: "ef21:top4".into(),
+        })
+        .unwrap();
+        let mut body = vec![0xd3u8]; // DOWN_SWITCH
+        body.extend_from_slice(&inner);
+        body
+    };
+    let shutdown = vec![0xd4u8]; // DOWN_SHUTDOWN
+    let decode: &dyn Fn(&[u8]) = &|b| {
+        let _ = decode_downlink(b);
+    };
+    for frame in [&hello, &round, &switch, &shutdown] {
+        assert!(decode_downlink(frame).is_ok());
+        fuzz_decoder(frame, decode);
+    }
+}
+
+#[test]
+fn handshake_and_switch_frames_survive_truncation_and_bit_flips() {
+    let wh = encode_worker_hello();
+    assert!(decode_worker_hello(&wh).is_ok());
+    fuzz_decoder(&wh, &|b| {
+        let _ = decode_worker_hello(b);
+    });
+
+    let ms = encode_mech_switch(&MechSwitch {
+        round: 500,
+        mech: "CLAG(Top-4,zeta=2)".into(),
+        spec: "clag:top4:2".into(),
+    })
+    .unwrap();
+    assert!(decode_mech_switch(&ms).is_ok());
+    fuzz_decoder(&ms, &|b| {
+        let _ = decode_mech_switch(b);
+    });
+}
+
+#[test]
+fn round_replies_survive_truncation_and_bit_flips() {
+    let up = encode_uplink_with(
+        &UplinkMsg {
+            worker_id: 0,
+            update: threepc::mechanisms::Update::Replace {
+                g: vec![1.0, 2.0, 3.0, 4.0],
+                bits: 128,
+                wire: threepc::mechanisms::ReplaceWire::Dense,
+            },
+            g_err: 0.25,
+        },
+        WireValueCoding::RawF32,
+    );
+    let grad = vec![0.5f32, -1.0, 2.0, 0.0];
+    for loss in [None, Some(3.5)] {
+        let mut body = Vec::new();
+        encode_round_reply(&up, &grad, loss, &mut body);
+        assert!(split_round_reply(&body).is_ok());
+        fuzz_decoder(&body, &|b| {
+            // Chain into the uplink decoder like the leader link does.
+            if let Ok(r) = split_round_reply(b) {
+                let _ = decode_uplink(r.upframe);
+            }
+        });
+    }
+}
+
+#[test]
+fn checkpoint_files_survive_truncation_and_bit_flips() {
+    let cp = Checkpoint {
+        t: 42,
+        grad_norm_sq: 0.125,
+        x: vec![1.0, -2.0, 3.5],
+        g_sum: vec![-1.0, 0.5, 3.0],
+        worker_g: vec![(0, vec![0.0, 0.5, 1.0]), (1, vec![-1.0, 0.0, 2.0])],
+    };
+    let bytes = cp.to_bytes();
+    assert!(Checkpoint::from_bytes(&bytes).is_ok());
+    fuzz_decoder(&bytes, &|b| {
+        let _ = Checkpoint::from_bytes(b);
+    });
+}
