@@ -5,7 +5,7 @@
 /// Per-round measurements. Norms refer to the *post-step* iterate
 /// `x^{t+1}`; bit counters are cumulative from the start of training
 /// (including `g⁰` initialisation bits).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub t: usize,
     /// `‖∇f(x^{t+1})‖²` — exact (from the workers' true gradients).

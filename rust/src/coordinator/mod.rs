@@ -50,6 +50,7 @@ pub mod observer;
 pub mod orchestrator;
 pub mod protocol;
 pub mod server;
+pub mod service;
 pub mod session;
 pub mod socket;
 pub mod transport;
@@ -68,8 +69,12 @@ pub use protocol::{
     encode_uplink_into, encode_uplink_with, DownlinkStat, MechSwitch, UplinkMsg, WireMsg,
     WireUpdate,
 };
+pub use protocol::{
+    ClientFrame, MetricUpdate, RejectCode, ServeFrame, SessionPhase, SessionResult, SessionStatus,
+};
 pub use server::Server;
-pub use session::{SessionBuilder, TrainConfig, TrainSession};
+pub use service::{ServeOptions, Service, ServiceClient, SessionSpec};
+pub use session::{SessionBuilder, SessionDriver, StepFlow, TrainConfig, TrainSession};
 pub use socket::{run_worker_agent, AgentConfig, Socket};
 pub use transport::{
     Framed, InProcess, RoundAggregate, Transport, TransportError, TransportLink,

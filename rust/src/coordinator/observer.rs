@@ -279,6 +279,23 @@ impl Checkpoint {
             .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
         Checkpoint::from_bytes(&buf)
     }
+
+    /// Persist atomically to `path` (write-to-temp + rename), creating
+    /// parent directories — the write [`CheckpointObserver`] performs
+    /// every `every` rounds, also used directly by the `threepc serve`
+    /// drain path when shutdown interrupts a session mid-run.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
 }
 
 /// Every `every` rounds, persists the full optimizer state — the
@@ -300,18 +317,7 @@ impl CheckpointObserver {
     }
 
     fn write(&mut self, cp: &Checkpoint) {
-        let result = (|| -> Result<()> {
-            if let Some(dir) = self.path.parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)?;
-                }
-            }
-            let tmp = self.path.with_extension("tmp");
-            std::fs::write(&tmp, cp.to_bytes())?;
-            std::fs::rename(&tmp, &self.path)?;
-            Ok(())
-        })();
-        if let Err(e) = result {
+        if let Err(e) = cp.save(&self.path) {
             self.last_error = Some(format!("checkpoint {}: {e:#}", self.path.display()));
         }
     }

@@ -22,7 +22,8 @@
 //!   tag 4 (Replace/FromPrev) body = nparts:u8  cvec*
 //! ```
 
-use crate::compressors::{read_f32, read_u32, CVec, MechScratch, WireValueCoding};
+use super::metrics::RoundRecord;
+use crate::compressors::{read_f32, read_f64, read_u32, CVec, MechScratch, WireValueCoding};
 use crate::mechanisms::{update_bits, ReplaceWire, Update};
 use anyhow::{bail, ensure, Result};
 
@@ -286,7 +287,6 @@ fn reclaim_wire(pool: &mut MechScratch, u: WireUpdate) {
 /// nothing at steady state. On error the slot is left in a valid but
 /// unspecified state (its previous contents already reclaimed).
 pub fn decode_uplink_into(buf: &[u8], slot: &mut WireMsg, pool: &mut MechScratch) -> Result<()> {
-    use crate::compressors::read_f64;
     reclaim_wire(pool, std::mem::replace(&mut slot.update, WireUpdate::Keep));
     let mut pos = 0usize;
     slot.worker_id = read_u32(buf, &mut pos)? as usize;
@@ -460,15 +460,39 @@ pub const DOWN_HELLO: u8 = 0xd1;
 pub const DOWN_ROUND: u8 = 0xd2;
 pub const DOWN_SWITCH: u8 = 0xd3;
 pub const DOWN_SHUTDOWN: u8 = 0xd4;
+/// Session over, connection stays: the `threepc serve` daemon releases
+/// the worker back to the idle fleet and a fresh [`SessionHello`] will
+/// follow when it is next granted to a session. A solo leader never
+/// sends this ([`DOWN_SHUTDOWN`] still ends the connection).
+pub const DOWN_SESSION_END: u8 = 0xd5;
 
 /// Uplink (worker → leader) frame kinds.
 pub const UP_HELLO: u8 = 0xe1;
 pub const UP_ROUND: u8 = 0xe2;
 
+/// Client (control-plane) frame kinds, `threepc submit/status/attach/
+/// cancel` → daemon. A connection's first frame tells the daemon which
+/// family it speaks: [`UP_HELLO`] means worker, [`CLIENT_HELLO`] means
+/// client.
+pub const CLIENT_HELLO: u8 = 0xc1;
+pub const CLIENT_SUBMIT: u8 = 0xc2;
+pub const CLIENT_STATUS: u8 = 0xc3;
+pub const CLIENT_ATTACH: u8 = 0xc4;
+pub const CLIENT_CANCEL: u8 = 0xc5;
+
+/// Daemon → client frame kinds.
+pub const SERVE_HELLO: u8 = 0xc8;
+pub const SERVE_STATUS: u8 = 0xc9;
+pub const SERVE_RESULT: u8 = 0xca;
+pub const SERVE_METRIC: u8 = 0xcb;
+pub const SERVE_REJECT: u8 = 0xcc;
+
 /// Magic prefixes inside the hello frames (peer sanity: a stray client
 /// speaking another protocol fails fast with a readable error).
 pub const DOWN_MAGIC: &[u8; 4] = b"3PCS";
 pub const UP_MAGIC: &[u8; 4] = b"3PCW";
+pub const CLIENT_MAGIC: &[u8; 4] = b"3PCC";
+pub const SERVE_MAGIC: &[u8; 4] = b"3PCD";
 
 /// Semantic payload bytes of a round frame beyond the iterate itself:
 /// `t:u64 + round_seed:u64 + flags:u8` (the kind tag is transport
@@ -648,6 +672,9 @@ pub enum DownlinkFrame {
     Round { t: u64, round_seed: u64, eval_loss: bool, x: Vec<f32> },
     Switch(MechSwitch),
     Shutdown,
+    /// Daemon-only: the session is over but the connection persists;
+    /// the agent discards its worker state and awaits the next hello.
+    SessionEnd,
 }
 
 /// Decode one downlink frame body (the bytes inside the length
@@ -681,6 +708,10 @@ pub fn decode_downlink(buf: &[u8]) -> Result<DownlinkFrame> {
         DOWN_SHUTDOWN => {
             ensure!(buf.len() == 1, "shutdown: unexpected body");
             Ok(DownlinkFrame::Shutdown)
+        }
+        DOWN_SESSION_END => {
+            ensure!(buf.len() == 1, "session-end: unexpected body");
+            Ok(DownlinkFrame::SessionEnd)
         }
         other => bail!("downlink: unknown frame kind {other:#04x}"),
     }
@@ -759,6 +790,429 @@ pub fn wire_part_count(u: &Update) -> usize {
             ReplaceWire::Fresh(parts) | ReplaceWire::FromPrev(parts) => parts.len(),
         },
     }
+}
+
+// ---------------------------------------------------------------------
+// Client (control-plane) frame vocabulary: `threepc submit/status/
+// attach/cancel` speaking to the `threepc serve` daemon. Same
+// length-prefixed envelope as the worker wire; the body's first byte is
+// the kind tag. These frames carry no optimization payload, so nothing
+// here is billed — the accounting above is untouched.
+// ---------------------------------------------------------------------
+
+fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(*pos + 8 <= buf.len(), "codec: truncated u64");
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().expect("8-byte slice"));
+    *pos += 8;
+    Ok(v)
+}
+
+fn push_str(s: &str, what: &str, out: &mut Vec<u8>) -> Result<()> {
+    ensure!(s.len() <= u16::MAX as usize, "{what} too long for the wire ({} bytes)", s.len());
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// A decoded client → daemon frame, as the daemon consumes them.
+///
+/// ```text
+/// client-hello := kind:u8(0xC1)  magic:"3PCC"  version:u16
+/// submit       := kind:u8(0xC2)  spec_len:u16  spec:[u8]
+/// status       := kind:u8(0xC3)  id:u64
+/// attach       := kind:u8(0xC4)  id:u64
+/// cancel       := kind:u8(0xC5)  id:u64
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientFrame {
+    /// First frame on a client connection (how the daemon's demux tells
+    /// clients from workers, whose first frame is the `3PCW` hello).
+    Hello,
+    /// Submit a session spec (see `service::SessionSpec` for the
+    /// grammar); answered with `SERVE_STATUS` or `SERVE_REJECT`.
+    Submit { spec: String },
+    Status { id: u64 },
+    /// Stream the session's metrics: status + every recorded round so
+    /// far, then live records, closed by its `SERVE_RESULT`.
+    Attach { id: u64 },
+    Cancel { id: u64 },
+}
+
+/// Serialize a client frame (full body, kind tag included).
+pub fn encode_client_frame(f: &ClientFrame) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16);
+    match f {
+        ClientFrame::Hello => {
+            out.push(CLIENT_HELLO);
+            out.extend_from_slice(CLIENT_MAGIC);
+            out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        }
+        ClientFrame::Submit { spec } => {
+            out.push(CLIENT_SUBMIT);
+            push_str(spec, "submit: session spec", &mut out)?;
+        }
+        ClientFrame::Status { id } | ClientFrame::Attach { id } | ClientFrame::Cancel { id } => {
+            out.push(match f {
+                ClientFrame::Status { .. } => CLIENT_STATUS,
+                ClientFrame::Attach { .. } => CLIENT_ATTACH,
+                _ => CLIENT_CANCEL,
+            });
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode one client frame body (exact inverse of
+/// [`encode_client_frame`]; rejects bad magic, version mismatch and
+/// trailing bytes).
+pub fn decode_client_frame(buf: &[u8]) -> Result<ClientFrame> {
+    let kind = *buf.first().ok_or_else(|| anyhow::anyhow!("client: empty frame"))?;
+    let mut pos = 1usize;
+    match kind {
+        CLIENT_HELLO => {
+            ensure!(
+                buf.len() >= pos + 4 && buf[pos..pos + 4] == CLIENT_MAGIC[..],
+                "client-hello: bad magic"
+            );
+            pos += 4;
+            let version = read_u16(buf, &mut pos)?;
+            ensure!(
+                version == WIRE_VERSION,
+                "client-hello: protocol version {version} (this build speaks {WIRE_VERSION})"
+            );
+            ensure!(pos == buf.len(), "client-hello: {} trailing bytes", buf.len() - pos);
+            Ok(ClientFrame::Hello)
+        }
+        CLIENT_SUBMIT => {
+            let spec = read_str(buf, &mut pos, "session spec")?;
+            ensure!(pos == buf.len(), "submit: {} trailing bytes", buf.len() - pos);
+            Ok(ClientFrame::Submit { spec })
+        }
+        CLIENT_STATUS | CLIENT_ATTACH | CLIENT_CANCEL => {
+            let id = read_u64(buf, &mut pos)?;
+            ensure!(pos == buf.len(), "client: {} trailing bytes", buf.len() - pos);
+            Ok(match kind {
+                CLIENT_STATUS => ClientFrame::Status { id },
+                CLIENT_ATTACH => ClientFrame::Attach { id },
+                _ => ClientFrame::Cancel { id },
+            })
+        }
+        other => bail!("client: unknown frame kind {other:#04x}"),
+    }
+}
+
+/// Where a submitted session is in its life cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionPhase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl SessionPhase {
+    fn tag(self) -> u8 {
+        match self {
+            SessionPhase::Queued => 0,
+            SessionPhase::Running => 1,
+            SessionPhase::Done => 2,
+            SessionPhase::Failed => 3,
+            SessionPhase::Cancelled => 4,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => SessionPhase::Queued,
+            1 => SessionPhase::Running,
+            2 => SessionPhase::Done,
+            3 => SessionPhase::Failed,
+            4 => SessionPhase::Cancelled,
+            other => bail!("status: unknown session phase {other}"),
+        })
+    }
+}
+
+impl std::fmt::Display for SessionPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SessionPhase::Queued => "queued",
+            SessionPhase::Running => "running",
+            SessionPhase::Done => "done",
+            SessionPhase::Failed => "failed",
+            SessionPhase::Cancelled => "cancelled",
+        })
+    }
+}
+
+/// Why the daemon refused a client request (admission rejects a bad
+/// submit, lookups reject an unknown id) — structured, so clients can
+/// branch without parsing the reason text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The spec failed to parse (unknown key, malformed problem or
+    /// mechanism/schedule spec, bad number).
+    BadSpec,
+    /// The spec is valid but needs more workers than the daemon's fleet
+    /// will ever hold.
+    FleetMismatch,
+    /// The problem family cannot be rebuilt from bytes on the agent
+    /// side (only `quad:` crosses the wire today).
+    UnsupportedProblem,
+    /// `status`/`attach`/`cancel` for an id the registry never issued.
+    UnknownSession,
+}
+
+impl RejectCode {
+    fn tag(self) -> u8 {
+        match self {
+            RejectCode::BadSpec => 0,
+            RejectCode::FleetMismatch => 1,
+            RejectCode::UnsupportedProblem => 2,
+            RejectCode::UnknownSession => 3,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => RejectCode::BadSpec,
+            1 => RejectCode::FleetMismatch,
+            2 => RejectCode::UnsupportedProblem,
+            3 => RejectCode::UnknownSession,
+            other => bail!("reject: unknown reject code {other}"),
+        })
+    }
+}
+
+impl std::fmt::Display for RejectCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RejectCode::BadSpec => "bad spec",
+            RejectCode::FleetMismatch => "fleet mismatch",
+            RejectCode::UnsupportedProblem => "unsupported problem",
+            RejectCode::UnknownSession => "unknown session",
+        })
+    }
+}
+
+/// A session's registry entry, as `status` reports it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionStatus {
+    pub id: u64,
+    pub phase: SessionPhase,
+    /// Rounds completed so far.
+    pub rounds: u64,
+    /// Human-readable detail: the failure message for `Failed`, empty
+    /// otherwise.
+    pub detail: String,
+}
+
+/// The terminal summary of a session — the wire form of the solo run's
+/// [`TrainResult`](super::TrainResult) scalars (the full per-round
+/// trace streams as [`SERVE_METRIC`] frames on `attach`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionResult {
+    pub id: u64,
+    pub rounds_run: u64,
+    pub converged: bool,
+    pub diverged: bool,
+    pub final_grad_norm_sq: f64,
+    pub total_bits_up: u64,
+    pub total_bits_down: u64,
+    pub wire_bytes_up: u64,
+    pub wire_bytes_down: u64,
+    /// The transport/shutdown error that ended the run, if any.
+    pub error: Option<String>,
+}
+
+/// One streamed [`RoundRecord`] on an attached connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricUpdate {
+    pub id: u64,
+    pub record: RoundRecord,
+}
+
+/// A decoded daemon → client frame, as the client CLI consumes them.
+///
+/// ```text
+/// serve-hello  := kind:u8(0xC8)  magic:"3PCD"  version:u16
+/// serve-status := kind:u8(0xC9)  id:u64  phase:u8  rounds:u64
+///                 detail_len:u16  detail:[u8]
+/// serve-result := kind:u8(0xCA)  id:u64  rounds_run:u64
+///                 flags:u8(bit0=converged|bit1=diverged)
+///                 final_grad_norm_sq:f64  total_bits_up:u64
+///                 total_bits_down:u64  wire_bytes_up:u64
+///                 wire_bytes_down:u64  err_len:u16  error:[u8]
+/// serve-metric := kind:u8(0xCB)  id:u64  t:u64  grad_norm_sq:f64
+///                 g_err:f64  bits_up_cum:f64  bits_up_max:u64
+///                 bits_down_cum:f64  skipped_frac:f64
+///                 flags:u8(bit0=loss|bit1=switch)  loss:f64?
+///                 switch_len:u16?  switch:[u8]?
+/// serve-reject := kind:u8(0xCC)  code:u8  reason_len:u16  reason:[u8]
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeFrame {
+    Hello,
+    Status(SessionStatus),
+    Result(SessionResult),
+    Metric(MetricUpdate),
+    Reject { code: RejectCode, reason: String },
+}
+
+/// Serialize a daemon frame (full body, kind tag included).
+pub fn encode_serve_frame(f: &ServeFrame) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(32);
+    match f {
+        ServeFrame::Hello => {
+            out.push(SERVE_HELLO);
+            out.extend_from_slice(SERVE_MAGIC);
+            out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        }
+        ServeFrame::Status(s) => {
+            out.push(SERVE_STATUS);
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.push(s.phase.tag());
+            out.extend_from_slice(&s.rounds.to_le_bytes());
+            push_str(&s.detail, "status: detail", &mut out)?;
+        }
+        ServeFrame::Result(r) => {
+            out.push(SERVE_RESULT);
+            out.extend_from_slice(&r.id.to_le_bytes());
+            out.extend_from_slice(&r.rounds_run.to_le_bytes());
+            out.push(u8::from(r.converged) | (u8::from(r.diverged) << 1));
+            out.extend_from_slice(&r.final_grad_norm_sq.to_le_bytes());
+            out.extend_from_slice(&r.total_bits_up.to_le_bytes());
+            out.extend_from_slice(&r.total_bits_down.to_le_bytes());
+            out.extend_from_slice(&r.wire_bytes_up.to_le_bytes());
+            out.extend_from_slice(&r.wire_bytes_down.to_le_bytes());
+            push_str(r.error.as_deref().unwrap_or(""), "result: error", &mut out)?;
+        }
+        ServeFrame::Metric(m) => {
+            let rec = &m.record;
+            out.push(SERVE_METRIC);
+            out.extend_from_slice(&m.id.to_le_bytes());
+            out.extend_from_slice(&(rec.t as u64).to_le_bytes());
+            out.extend_from_slice(&rec.grad_norm_sq.to_le_bytes());
+            out.extend_from_slice(&rec.g_err.to_le_bytes());
+            out.extend_from_slice(&rec.bits_up_cum.to_le_bytes());
+            out.extend_from_slice(&rec.bits_up_max.to_le_bytes());
+            out.extend_from_slice(&rec.bits_down_cum.to_le_bytes());
+            out.extend_from_slice(&rec.skipped_frac.to_le_bytes());
+            out.push(u8::from(rec.loss.is_some()) | (u8::from(rec.mech_switch.is_some()) << 1));
+            if let Some(l) = rec.loss {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+            if let Some(s) = &rec.mech_switch {
+                push_str(s, "metric: mech switch", &mut out)?;
+            }
+        }
+        ServeFrame::Reject { code, reason } => {
+            out.push(SERVE_REJECT);
+            out.push(code.tag());
+            push_str(reason, "reject: reason", &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Decode one daemon frame body (exact inverse of
+/// [`encode_serve_frame`]; rejects bad magic, version mismatch,
+/// unknown tags and trailing bytes).
+pub fn decode_serve_frame(buf: &[u8]) -> Result<ServeFrame> {
+    let kind = *buf.first().ok_or_else(|| anyhow::anyhow!("serve: empty frame"))?;
+    let mut pos = 1usize;
+    let frame = match kind {
+        SERVE_HELLO => {
+            ensure!(
+                buf.len() >= pos + 4 && buf[pos..pos + 4] == SERVE_MAGIC[..],
+                "serve-hello: bad magic"
+            );
+            pos += 4;
+            let version = read_u16(buf, &mut pos)?;
+            ensure!(
+                version == WIRE_VERSION,
+                "serve-hello: protocol version {version} (this build speaks {WIRE_VERSION})"
+            );
+            ServeFrame::Hello
+        }
+        SERVE_STATUS => {
+            let id = read_u64(buf, &mut pos)?;
+            let phase = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("status: truncated phase"))?;
+            pos += 1;
+            let phase = SessionPhase::from_tag(phase)?;
+            let rounds = read_u64(buf, &mut pos)?;
+            let detail = read_str(buf, &mut pos, "status detail")?;
+            ServeFrame::Status(SessionStatus { id, phase, rounds, detail })
+        }
+        SERVE_RESULT => {
+            let id = read_u64(buf, &mut pos)?;
+            let rounds_run = read_u64(buf, &mut pos)?;
+            let flags = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("result: truncated flags"))?;
+            pos += 1;
+            ensure!(flags <= 3, "result: unknown flags {flags:#04x}");
+            let final_grad_norm_sq = read_f64(buf, &mut pos)?;
+            let total_bits_up = read_u64(buf, &mut pos)?;
+            let total_bits_down = read_u64(buf, &mut pos)?;
+            let wire_bytes_up = read_u64(buf, &mut pos)?;
+            let wire_bytes_down = read_u64(buf, &mut pos)?;
+            let error = read_str(buf, &mut pos, "result error")?;
+            ServeFrame::Result(SessionResult {
+                id,
+                rounds_run,
+                converged: flags & 1 == 1,
+                diverged: flags & 2 == 2,
+                final_grad_norm_sq,
+                total_bits_up,
+                total_bits_down,
+                wire_bytes_up,
+                wire_bytes_down,
+                error: if error.is_empty() { None } else { Some(error) },
+            })
+        }
+        SERVE_METRIC => {
+            let id = read_u64(buf, &mut pos)?;
+            let t = read_u64(buf, &mut pos)?;
+            ensure!(t <= usize::MAX as u64, "metric: round {t} out of range");
+            let grad_norm_sq = read_f64(buf, &mut pos)?;
+            let g_err = read_f64(buf, &mut pos)?;
+            let bits_up_cum = read_f64(buf, &mut pos)?;
+            let bits_up_max = read_u64(buf, &mut pos)?;
+            let bits_down_cum = read_f64(buf, &mut pos)?;
+            let skipped_frac = read_f64(buf, &mut pos)?;
+            let flags = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("metric: truncated flags"))?;
+            pos += 1;
+            ensure!(flags <= 3, "metric: unknown flags {flags:#04x}");
+            let loss = if flags & 1 == 1 { Some(read_f64(buf, &mut pos)?) } else { None };
+            let mech_switch =
+                if flags & 2 == 2 { Some(read_str(buf, &mut pos, "mech switch")?) } else { None };
+            ServeFrame::Metric(MetricUpdate {
+                id,
+                record: RoundRecord {
+                    t: t as usize,
+                    grad_norm_sq,
+                    g_err,
+                    bits_up_cum,
+                    bits_up_max,
+                    bits_down_cum,
+                    skipped_frac,
+                    loss,
+                    mech_switch,
+                },
+            })
+        }
+        SERVE_REJECT => {
+            let code = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("reject: truncated code"))?;
+            pos += 1;
+            let code = RejectCode::from_tag(code)?;
+            let reason = read_str(buf, &mut pos, "reject reason")?;
+            ServeFrame::Reject { code, reason }
+        }
+        other => bail!("serve: unknown frame kind {other:#04x}"),
+    };
+    ensure!(pos == buf.len(), "serve: {} trailing bytes", buf.len() - pos);
+    Ok(frame)
 }
 
 #[cfg(test)]
@@ -1061,5 +1515,133 @@ mod tests {
         let a = decode_uplink(&raw).unwrap();
         let b = decode_uplink(&nat).unwrap();
         assert_eq!(a.update.new_state(&h), b.update.new_state(&h));
+    }
+
+    #[test]
+    fn session_end_downlink_roundtrips() {
+        assert_eq!(decode_downlink(&[DOWN_SESSION_END]).unwrap(), DownlinkFrame::SessionEnd);
+        assert!(decode_downlink(&[DOWN_SESSION_END, 0]).is_err());
+    }
+
+    fn client_corpus() -> Vec<ClientFrame> {
+        vec![
+            ClientFrame::Hello,
+            ClientFrame::Submit {
+                spec: "problem=quad:4:30:0.01:0.5:21;mech=ef21:top4;rounds=20".into(),
+            },
+            ClientFrame::Status { id: 7 },
+            ClientFrame::Attach { id: u64::MAX },
+            ClientFrame::Cancel { id: 0 },
+        ]
+    }
+
+    #[test]
+    fn client_frames_roundtrip() {
+        for f in client_corpus() {
+            let bytes = encode_client_frame(&f).unwrap();
+            assert_eq!(decode_client_frame(&bytes).unwrap(), f);
+            // Trailing bytes are rejected.
+            let mut fat = bytes.clone();
+            fat.push(0);
+            assert!(decode_client_frame(&fat).is_err());
+        }
+        assert!(decode_client_frame(&[]).is_err());
+        assert!(decode_client_frame(&[0x42]).is_err());
+    }
+
+    fn serve_corpus() -> Vec<ServeFrame> {
+        vec![
+            ServeFrame::Hello,
+            ServeFrame::Status(SessionStatus {
+                id: 3,
+                phase: SessionPhase::Running,
+                rounds: 12,
+                detail: String::new(),
+            }),
+            ServeFrame::Status(SessionStatus {
+                id: 4,
+                phase: SessionPhase::Failed,
+                rounds: 0,
+                detail: "server shutdown".into(),
+            }),
+            ServeFrame::Result(SessionResult {
+                id: 3,
+                rounds_run: 40,
+                converged: true,
+                diverged: false,
+                final_grad_norm_sq: 1.25e-9,
+                total_bits_up: 123_456,
+                total_bits_down: 789_012,
+                wire_bytes_up: 3456,
+                wire_bytes_down: 7890,
+                error: None,
+            }),
+            ServeFrame::Result(SessionResult {
+                id: 5,
+                rounds_run: 2,
+                converged: false,
+                diverged: false,
+                final_grad_norm_sq: f64::NAN,
+                total_bits_up: 0,
+                total_bits_down: 0,
+                wire_bytes_up: 0,
+                wire_bytes_down: 0,
+                error: Some("transport: peer went away".into()),
+            }),
+            ServeFrame::Metric(MetricUpdate {
+                id: 3,
+                record: RoundRecord {
+                    t: 15,
+                    grad_norm_sq: 0.5,
+                    g_err: 0.25,
+                    bits_up_cum: 320.0,
+                    bits_up_max: 400,
+                    bits_down_cum: 960.0,
+                    skipped_frac: 0.5,
+                    loss: Some(1.75),
+                    mech_switch: Some("ef21:top2".into()),
+                },
+            }),
+            ServeFrame::Metric(MetricUpdate {
+                id: 9,
+                record: RoundRecord {
+                    t: 0,
+                    grad_norm_sq: 8.0,
+                    g_err: 0.0,
+                    bits_up_cum: 32.0,
+                    bits_up_max: 32,
+                    bits_down_cum: 0.0,
+                    skipped_frac: 0.0,
+                    loss: None,
+                    mech_switch: None,
+                },
+            }),
+            ServeFrame::Reject {
+                code: RejectCode::BadSpec,
+                reason: "unknown key `gammma`".into(),
+            },
+            ServeFrame::Reject { code: RejectCode::UnknownSession, reason: "id 99".into() },
+        ]
+    }
+
+    #[test]
+    fn serve_frames_roundtrip() {
+        for f in serve_corpus() {
+            let bytes = encode_serve_frame(&f).unwrap();
+            let back = decode_serve_frame(&bytes).unwrap();
+            // NaN ≠ NaN under PartialEq; compare those by bit pattern.
+            if let (ServeFrame::Result(a), ServeFrame::Result(b)) = (&f, &back) {
+                assert_eq!(a.final_grad_norm_sq.to_bits(), b.final_grad_norm_sq.to_bits());
+                if a.final_grad_norm_sq.is_nan() {
+                    continue;
+                }
+            }
+            assert_eq!(back, f);
+            let mut fat = bytes.clone();
+            fat.push(0);
+            assert!(decode_serve_frame(&fat).is_err());
+        }
+        assert!(decode_serve_frame(&[]).is_err());
+        assert!(decode_serve_frame(&[0x42]).is_err());
     }
 }

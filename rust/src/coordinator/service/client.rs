@@ -1,0 +1,85 @@
+//! The client side of the daemon protocol — what `threepc
+//! submit/status/attach/cancel` run, and what the loopback tests drive
+//! directly.
+
+use super::super::protocol::{self as proto, ClientFrame, ServeFrame};
+use super::super::socket::{io_err, parse_addr, read_frame, try_connect, write_frame, Stream};
+use super::super::transport::TransportError;
+use std::time::Duration;
+
+/// A connected control client: one request/response (or streaming
+/// attach) conversation with a `threepc serve` daemon.
+pub struct ServiceClient {
+    stream: Stream,
+    buf: Vec<u8>,
+}
+
+impl ServiceClient {
+    /// Dial the daemon and exchange hellos. `io_timeout` bounds every
+    /// request/response pair (zero = wait forever); [`attach`] lifts
+    /// the read bound while streaming, since rounds may be far apart.
+    ///
+    /// [`attach`]: ServiceClient::attach
+    pub fn connect(addr: &str, io_timeout: Duration) -> Result<ServiceClient, TransportError> {
+        let parsed = parse_addr(addr)?;
+        let stream = try_connect(&parsed).map_err(|e| io_err("connecting", e))?;
+        stream.configure(io_timeout).map_err(|e| io_err("configuring stream", e))?;
+        let mut client = ServiceClient { stream, buf: Vec::new() };
+        client.send(&ClientFrame::Hello)?;
+        match client.recv()? {
+            ServeFrame::Hello => Ok(client),
+            other => {
+                Err(TransportError::Protocol(format!("expected a serve hello, got {other:?}")))
+            }
+        }
+    }
+
+    fn send(&mut self, frame: &ClientFrame) -> Result<(), TransportError> {
+        let body = proto::encode_client_frame(frame)
+            .map_err(|e| TransportError::Protocol(format!("encoding request: {e:#}")))?;
+        write_frame(&mut self.stream, &body, "client request")
+    }
+
+    /// Read one daemon frame.
+    pub fn recv(&mut self) -> Result<ServeFrame, TransportError> {
+        let body = read_frame(&mut self.stream, &mut self.buf, "daemon reply")?;
+        proto::decode_serve_frame(body)
+            .map_err(|e| TransportError::Protocol(format!("daemon reply: {e:#}")))
+    }
+
+    /// Submit a session spec; `Status{Queued}` or `Reject` comes back.
+    pub fn submit(&mut self, spec: &str) -> Result<ServeFrame, TransportError> {
+        self.send(&ClientFrame::Submit { spec: spec.into() })?;
+        self.recv()
+    }
+
+    pub fn status(&mut self, id: u64) -> Result<ServeFrame, TransportError> {
+        self.send(&ClientFrame::Status { id })?;
+        self.recv()
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<ServeFrame, TransportError> {
+        self.send(&ClientFrame::Cancel { id })?;
+        self.recv()
+    }
+
+    /// Attach to a session: its status frame and every record replay
+    /// through `on_frame`, then live records as they happen, until the
+    /// terminal frame (`Result`, or `Reject` for an unknown id), which
+    /// is returned. Reads wait forever while attached.
+    pub fn attach(
+        &mut self,
+        id: u64,
+        mut on_frame: impl FnMut(&ServeFrame),
+    ) -> Result<ServeFrame, TransportError> {
+        self.stream.set_timeouts(None, None).map_err(|e| io_err("configuring stream", e))?;
+        self.send(&ClientFrame::Attach { id })?;
+        loop {
+            let frame = self.recv()?;
+            match frame {
+                ServeFrame::Result(_) | ServeFrame::Reject { .. } => return Ok(frame),
+                other => on_frame(&other),
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! The `threepc serve` daemon: a long-lived coordinator that accepts
+//! *worker* connections (the existing `3PCW` hello) into a shared
+//! fleet and *client* connections (the `3PCC` hello) submitting
+//! session specs, then runs the submitted sessions concurrently by
+//! interleaving their rounds.
+//!
+//! The layering:
+//!
+//! - **demux** (this module): one accept thread classifies each fresh
+//!   connection by its first frame — deadline-bounded, so a silent
+//!   peer cannot stall setup — and one reader thread per client turns
+//!   its frames into scheduler events;
+//! - **[`registry`]**: spec parsing/validation at admission and the
+//!   `Queued → Running → Done/Failed` state machine;
+//! - **[`scheduler`]**: a single thread owning every session, stepping
+//!   runnable ones one round at a time on their own
+//!   [`SessionDriver`](super::session::SessionDriver)s;
+//! - **[`client`]**: the CLI side ([`ServiceClient`]).
+//!
+//! Determinism: a session run through the daemon reproduces its solo
+//! [`Socket`](super::Socket) trace bit-for-bit regardless of how many
+//! sessions share the fleet — the granted workers rebuild their state
+//! from the same `SessionHello`, the link is the same `SocketLink`,
+//! and every fold happens inside the session's own driver.
+
+mod client;
+mod registry;
+mod scheduler;
+
+pub use self::client::ServiceClient;
+pub use self::registry::SessionSpec;
+
+use self::scheduler::{Event, Scheduler};
+use super::protocol::{self as proto, ServeFrame};
+use super::socket::{
+    bind_listener, handshake_read_timeout, io_err, read_frame, run_worker_agent, write_frame,
+    Listener, Stream,
+};
+use super::transport::TransportError;
+use super::AgentConfig;
+use crate::kernels::ShardPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Daemon knobs, the `threepc serve` flag set.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// `tcp://host:port` or `uds://path` to listen on.
+    pub listen: String,
+    /// Worker-fleet ceiling: admission refuses specs needing more
+    /// workers than this with a structured `FleetMismatch` reject, and
+    /// `--spawn-workers` spawns exactly this many in-process agents.
+    /// `None` = unbounded (externally-run fleet of unknown size).
+    pub fleet: Option<usize>,
+    /// Spawn the fleet as in-process agent threads dialing our own
+    /// listener (the loopback/CI mode; needs `fleet`).
+    pub spawn_workers: bool,
+    /// Helper threads for a shared coordinate-sharding
+    /// [`ShardPool`] every session's link uses (0 = serial kernels).
+    pub threads: usize,
+    /// Steady-state per-op io timeout on worker streams and client
+    /// replies (zero = none).
+    pub io_timeout: Duration,
+    /// Budget for a connection's first frame (the accept-path
+    /// `--io-timeout-ms` discipline; never "wait forever").
+    pub handshake_timeout: Duration,
+}
+
+impl ServeOptions {
+    pub fn new(listen: impl Into<String>) -> ServeOptions {
+        ServeOptions {
+            listen: listen.into(),
+            fleet: None,
+            spawn_workers: false,
+            threads: 0,
+            io_timeout: Duration::from_secs(30),
+            handshake_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// A bound daemon, not yet serving. Binding and running are split so a
+/// caller (tests, `--listen tcp://127.0.0.1:0`) can learn the actual
+/// address and keep a shutdown handle before the blocking [`run`].
+///
+/// [`run`]: Service::run
+pub struct Service {
+    opts: ServeOptions,
+    listener: Listener,
+    local: String,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Service {
+    pub fn bind(opts: ServeOptions) -> Result<Service, TransportError> {
+        let (listener, local) = bind_listener(&opts.listen)?;
+        Ok(Service { opts, listener, local, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (with the real port when `listen` had port 0).
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Setting this flag (a signal handler, another thread) makes
+    /// [`run`](Service::run) drain gracefully: running sessions stop at
+    /// a round boundary (checkpointing where configured), queued ones
+    /// fail with "server shutdown", the fleet gets shutdown frames.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until shut down. Blocks; the accept loop and client
+    /// readers run on their own threads, sessions on this one.
+    pub fn run(self) -> anyhow::Result<()> {
+        let Service { opts, listener, local, shutdown } = self;
+        let pool =
+            if opts.threads > 0 { Some(Arc::new(ShardPool::new(opts.threads))) } else { None };
+        let (tx, rx) = mpsc::channel();
+
+        let mut agents = Vec::new();
+        if opts.spawn_workers {
+            let n = opts.fleet.unwrap_or(0);
+            anyhow::ensure!(n > 0, "spawn_workers needs a fleet size (--fleet <n>)");
+            for _ in 0..n {
+                let addr = local.clone();
+                // Parked agents idle between sessions indefinitely;
+                // their io patience must be infinite.
+                let cfg = AgentConfig { io_timeout: Duration::ZERO, ..AgentConfig::default() };
+                agents.push(thread::spawn(move || run_worker_agent(&addr, &cfg)));
+            }
+        }
+
+        let accept = {
+            let tx = tx.clone();
+            let shutdown = Arc::clone(&shutdown);
+            let (io, hs) = (opts.io_timeout, opts.handshake_timeout);
+            thread::spawn(move || accept_loop(listener, tx, shutdown, io, hs))
+        };
+        drop(tx);
+
+        Scheduler::new(rx, Arc::clone(&shutdown), opts.fleet, pool).run();
+        // The scheduler can also exit on channel disconnect; make sure
+        // the accept loop (and any signal-race observer) sees the end.
+        shutdown.store(true, Ordering::SeqCst);
+        accept.join().ok();
+        for agent in agents {
+            match agent.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("serve: worker agent: {e:#}"),
+                Err(_) => eprintln!("serve: worker agent panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Poll-accept until shutdown; each fresh connection is classified by
+/// its first frame and handed to the scheduler.
+fn accept_loop(
+    listener: Listener,
+    tx: Sender<Event>,
+    shutdown: Arc<AtomicBool>,
+    io_timeout: Duration,
+    handshake_timeout: Duration,
+) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("serve: accept loop: {e}");
+        return;
+    }
+    let mut next_client = 1u64;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                if let Err(e) =
+                    admit_connection(stream, &mut next_client, &tx, io_timeout, handshake_timeout)
+                {
+                    eprintln!("serve: rejected connection: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("serve: accept: {e}");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// The demux: a worker hello (`3PCW`) joins the fleet, a client hello
+/// (`3PCC`) gets a serve hello back and a reader thread. Either way
+/// the first read runs under the handshake deadline — a peer that
+/// connects and sends nothing surfaces as a timeout
+/// ([`TransportError::Io`]) instead of stalling the daemon.
+fn admit_connection(
+    mut stream: Stream,
+    next_client: &mut u64,
+    tx: &Sender<Event>,
+    io_timeout: Duration,
+    handshake_timeout: Duration,
+) -> Result<(), TransportError> {
+    let deadline = Instant::now() + handshake_timeout;
+    stream
+        .configure(handshake_read_timeout(io_timeout, deadline))
+        .map_err(|e| io_err("configuring accepted stream", e))?;
+    let mut buf = Vec::new();
+    let body = read_frame(&mut stream, &mut buf, "connection hello")?;
+    match body.first() {
+        Some(&proto::UP_HELLO) => {
+            proto::decode_worker_hello(body)
+                .map_err(|e| TransportError::Protocol(format!("worker hello: {e:#}")))?;
+            stream.configure(io_timeout).map_err(|e| io_err("configuring worker stream", e))?;
+            let _ = tx.send(Event::Worker(stream));
+            Ok(())
+        }
+        Some(&proto::CLIENT_HELLO) => {
+            proto::decode_client_frame(body)
+                .map_err(|e| TransportError::Protocol(format!("client hello: {e:#}")))?;
+            let reply = proto::encode_serve_frame(&ServeFrame::Hello)
+                .map_err(|e| TransportError::Protocol(format!("serve hello: {e:#}")))?;
+            write_frame(&mut stream, &reply, "serve hello")?;
+            // Requests may be far apart (an attach watches a whole
+            // run): reads wait forever, replies stay bounded. Timeouts
+            // are per socket, so this covers the writer clone too.
+            let write = if io_timeout.is_zero() { None } else { Some(io_timeout) };
+            stream.set_timeouts(None, write).map_err(|e| io_err("configuring client stream", e))?;
+            let writer = stream.try_clone().map_err(|e| io_err("cloning client stream", e))?;
+            let id = *next_client;
+            *next_client += 1;
+            let _ = tx.send(Event::Client { id, stream: writer });
+            let tx = tx.clone();
+            thread::spawn(move || client_reader(id, stream, tx));
+            Ok(())
+        }
+        _ => Err(TransportError::Protocol(
+            "first frame is neither a worker nor a client hello".into(),
+        )),
+    }
+}
+
+/// Decode one client's requests until it hangs up (or sends garbage).
+fn client_reader(id: u64, mut stream: Stream, tx: Sender<Event>) {
+    let mut buf = Vec::new();
+    loop {
+        let Ok(body) = read_frame(&mut stream, &mut buf, "client request") else { break };
+        let Ok(frame) = proto::decode_client_frame(body) else { break };
+        if tx.send(Event::Request { client: id, frame }).is_err() {
+            break;
+        }
+    }
+    let _ = tx.send(Event::ClientGone(id));
+}

@@ -1,0 +1,308 @@
+//! The session registry: id allocation, spec parsing/validation at
+//! admission time, and each session's place in the
+//! `Queued → Running → Done/Failed` (or `Cancelled`) state machine.
+//!
+//! Validation happens *here*, when the submit frame arrives — a spec
+//! that cannot run is refused with a structured [`RejectCode`] over the
+//! wire instead of being discovered (and dropped) at start time.
+
+use super::super::metrics::RoundRecord;
+use super::super::protocol::{RejectCode, SessionPhase, SessionResult};
+use super::super::session::{SessionDriver, TrainConfig};
+use super::super::socket::parse_problem_spec;
+use crate::compressors::WireValueCoding;
+use crate::mechanisms::parse_schedule;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// A parsed, validated session submission.
+///
+/// The wire grammar is `key=value` pairs joined by `;`:
+///
+/// ```text
+/// problem=quad:<n>:<d>:<lambda>:<noise>:<seed>   (required)
+/// mech=<spec> | schedule=<spec>                  (exactly one required)
+/// rounds=<usize>      gamma=<f64>     seed=<u64>
+/// tol=<f64>           bits-budget=<f64>
+/// loss-every=<usize>  record-every=<usize>
+/// init=full|zero      coding=raw|natural
+/// checkpoint=<path>   checkpoint-every=<usize>
+/// ```
+///
+/// Unknown keys are a [`RejectCode::BadSpec`]: a typo'd knob silently
+/// ignored would produce a *valid-looking but wrong* run.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Canonical problem spec, exactly as the `SessionHello` will carry
+    /// it to the granted workers.
+    pub problem_spec: String,
+    /// Mechanism/schedule spec; re-parsed at start (schedules are
+    /// stateful, so the registry keeps the string, not the object).
+    pub schedule_spec: String,
+    pub cfg: TrainConfig,
+    pub value_coding: WireValueCoding,
+    /// `(every, path)` for a periodic `CheckpointObserver`, and where
+    /// the graceful-shutdown drain writes its final state.
+    pub checkpoint: Option<(usize, PathBuf)>,
+    /// Worker count the problem requires (= streams to grant).
+    pub n_workers: usize,
+    pub dim: usize,
+}
+
+fn reject(code: RejectCode, reason: impl Into<String>) -> (RejectCode, String) {
+    (code, reason.into())
+}
+
+fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, (RejectCode, String)>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| reject(RejectCode::BadSpec, format!("{key}: {e}")))
+}
+
+impl SessionSpec {
+    /// Parse and validate a submitted spec string. `fleet_cap` is the
+    /// daemon's worker-fleet ceiling, when it has one — a spec needing
+    /// more workers than will ever connect is refused up front rather
+    /// than queued forever.
+    pub fn parse(
+        spec: &str,
+        fleet_cap: Option<usize>,
+    ) -> Result<SessionSpec, (RejectCode, String)> {
+        let mut problem = None;
+        let mut schedule = None;
+        let mut cfg = TrainConfig::default();
+        let mut coding = WireValueCoding::RawF32;
+        let mut checkpoint_path: Option<PathBuf> = None;
+        let mut checkpoint_every = 25usize;
+
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                return Err(reject(
+                    RejectCode::BadSpec,
+                    format!("'{part}' is not a key=value pair"),
+                ));
+            };
+            match key {
+                "problem" => problem = Some(value.to_string()),
+                "mech" | "schedule" => {
+                    if schedule.is_some() {
+                        return Err(reject(
+                            RejectCode::BadSpec,
+                            "mech/schedule given more than once",
+                        ));
+                    }
+                    schedule = Some(value.to_string());
+                }
+                "rounds" => cfg.max_rounds = num(key, value)?,
+                "gamma" => cfg.gamma = num(key, value)?,
+                "seed" => cfg.seed = num(key, value)?,
+                "tol" => cfg.grad_tol = Some(num(key, value)?),
+                "bits-budget" => cfg.bits_budget = Some(num(key, value)?),
+                "loss-every" => cfg.eval_loss_every = num(key, value)?,
+                "record-every" => cfg.record_every = num(key, value)?,
+                "init" => {
+                    cfg.init = value
+                        .parse()
+                        .map_err(|e| reject(RejectCode::BadSpec, format!("init: {e:#}")))?
+                }
+                "coding" => {
+                    coding = match value {
+                        "raw" => WireValueCoding::RawF32,
+                        "natural" => WireValueCoding::Natural,
+                        other => {
+                            return Err(reject(
+                                RejectCode::BadSpec,
+                                format!("coding: unknown value coding '{other}' (raw|natural)"),
+                            ))
+                        }
+                    }
+                }
+                "checkpoint" => checkpoint_path = Some(PathBuf::from(value)),
+                "checkpoint-every" => checkpoint_every = num(key, value)?,
+                other => {
+                    return Err(reject(RejectCode::BadSpec, format!("unknown key '{other}'")))
+                }
+            }
+        }
+
+        let Some(problem_spec) = problem else {
+            return Err(reject(RejectCode::BadSpec, "missing required key 'problem'"));
+        };
+        // Family check first, for the distinct code: only problems the
+        // agents can regenerate from bytes can run behind this daemon.
+        if problem_spec.split(':').next() != Some("quad") {
+            return Err(reject(
+                RejectCode::UnsupportedProblem,
+                format!(
+                    "problem family '{}' cannot cross the wire (only quad: can)",
+                    problem_spec.split(':').next().unwrap_or("")
+                ),
+            ));
+        }
+        let built = parse_problem_spec(&problem_spec)
+            .map_err(|e| reject(RejectCode::BadSpec, format!("problem: {e:#}")))?;
+        let (n_workers, dim) = (built.n_workers(), built.dim());
+
+        let Some(schedule_spec) = schedule else {
+            return Err(reject(RejectCode::BadSpec, "missing required key 'mech' or 'schedule'"));
+        };
+        parse_schedule(&schedule_spec)
+            .map_err(|e| reject(RejectCode::BadSpec, format!("schedule: {e:#}")))?;
+
+        if checkpoint_every == 0 {
+            return Err(reject(RejectCode::BadSpec, "checkpoint-every: must be ≥ 1"));
+        }
+        if let Some(cap) = fleet_cap {
+            if n_workers > cap {
+                return Err(reject(
+                    RejectCode::FleetMismatch,
+                    format!("problem needs {n_workers} workers; the fleet holds at most {cap}"),
+                ));
+            }
+        }
+
+        Ok(SessionSpec {
+            problem_spec,
+            schedule_spec,
+            cfg,
+            value_coding: coding,
+            checkpoint: checkpoint_path.map(|p| (checkpoint_every, p)),
+            n_workers,
+            dim,
+        })
+    }
+}
+
+/// One submitted session, from admission to its terminal phase.
+pub(crate) struct Session {
+    pub id: u64,
+    pub spec: SessionSpec,
+    pub phase: SessionPhase,
+    /// Failure detail (`Failed`) or cancel/shutdown note; empty else.
+    pub detail: String,
+    /// Rounds completed (mirrors the driver while running).
+    pub rounds: u64,
+    /// Every record produced so far — retained for attach replay, and
+    /// appended to as the driver steps.
+    pub records: Vec<RoundRecord>,
+    /// Set exactly when the phase turns terminal.
+    pub result: Option<SessionResult>,
+    /// Present iff `phase == Running`.
+    pub driver: Option<SessionDriver<'static>>,
+}
+
+impl Session {
+    pub(crate) fn terminal(&self) -> bool {
+        matches!(
+            self.phase,
+            SessionPhase::Done | SessionPhase::Failed | SessionPhase::Cancelled
+        )
+    }
+}
+
+/// Id allocation + id-ordered storage (admission scans in submit
+/// order, so a `BTreeMap` keyed by id is exactly the queue).
+pub(crate) struct Registry {
+    next_id: u64,
+    pub sessions: BTreeMap<u64, Session>,
+}
+
+impl Registry {
+    pub(crate) fn new() -> Registry {
+        Registry { next_id: 1, sessions: BTreeMap::new() }
+    }
+
+    /// Admit a validated spec: allocate an id, enqueue, return the id.
+    pub(crate) fn submit(&mut self, spec: SessionSpec) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.insert(
+            id,
+            Session {
+                id,
+                spec,
+                phase: SessionPhase::Queued,
+                detail: String::new(),
+                rounds: 0,
+                records: Vec::new(),
+                result: None,
+                driver: None,
+            },
+        );
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OK_SPEC: &str = "problem=quad:4:16:0.01:0.5:7;mech=ef21:top4;rounds=40";
+
+    #[test]
+    fn well_formed_spec_parses() {
+        let s = SessionSpec::parse(OK_SPEC, Some(8)).expect("valid spec");
+        assert_eq!(s.n_workers, 4);
+        assert_eq!(s.dim, 16);
+        assert_eq!(s.cfg.max_rounds, 40);
+        assert_eq!(s.schedule_spec, "ef21:top4");
+        assert!(s.checkpoint.is_none());
+    }
+
+    #[test]
+    fn every_knob_round_trips() {
+        let s = SessionSpec::parse(
+            "problem=quad:2:8:0.1:0.0:3; schedule=ef21:top8@0..5,ef21:top2@5..; \
+             gamma=0.05; seed=9; tol=1e-8; loss-every=2; record-every=3; \
+             init=zero; coding=natural; checkpoint=/tmp/cp.bin; checkpoint-every=7",
+            None,
+        )
+        .expect("valid spec");
+        assert_eq!(s.cfg.gamma, 0.05);
+        assert_eq!(s.cfg.seed, 9);
+        assert_eq!(s.cfg.grad_tol, Some(1e-8));
+        assert_eq!(s.cfg.eval_loss_every, 2);
+        assert_eq!(s.cfg.record_every, 3);
+        assert_eq!(s.value_coding, WireValueCoding::Natural);
+        assert_eq!(s.checkpoint, Some((7, PathBuf::from("/tmp/cp.bin"))));
+    }
+
+    #[test]
+    fn structured_rejects() {
+        let cases: &[(&str, RejectCode)] = &[
+            ("", RejectCode::BadSpec),                                   // no problem
+            ("problem=quad:4:16:0.01:0.5:7", RejectCode::BadSpec),       // no mechanism
+            ("problem=quad:4:16:0.01:0.5:7;mech=bogus", RejectCode::BadSpec),
+            ("problem=quad:nope;mech=ef21:top4", RejectCode::BadSpec),
+            ("problem=logreg:a9a;mech=ef21:top4", RejectCode::UnsupportedProblem),
+            ("problem=quad:4:16:0.01:0.5:7;mech=ef21:top4;turbo=1", RejectCode::BadSpec),
+            ("problem=quad:4:16:0.01:0.5:7;mech=ef21:top4;rounds=ten", RejectCode::BadSpec),
+            ("problem=quad:4:16:0.01:0.5:7;mech=ef21:top4;coding=utf9", RejectCode::BadSpec),
+            ("problem=quad:4:16:0.01:0.5:7;mech=a;schedule=b", RejectCode::BadSpec),
+        ];
+        for (spec, want) in cases {
+            let (code, reason) = SessionSpec::parse(spec, None).expect_err(spec);
+            assert_eq!(code, *want, "spec '{spec}' → '{reason}'");
+            assert!(!reason.is_empty());
+        }
+        // Fleet ceiling: valid spec, impossible worker count.
+        let (code, _) = SessionSpec::parse(OK_SPEC, Some(2)).expect_err("cap 2");
+        assert_eq!(code, RejectCode::FleetMismatch);
+    }
+
+    #[test]
+    fn registry_allocates_monotonic_ids() {
+        let mut reg = Registry::new();
+        let spec = SessionSpec::parse(OK_SPEC, None).unwrap();
+        let a = reg.submit(spec.clone());
+        let b = reg.submit(spec);
+        assert!(b > a);
+        assert_eq!(reg.sessions[&a].phase, SessionPhase::Queued);
+        assert!(!reg.sessions[&a].terminal());
+    }
+}

@@ -1,0 +1,510 @@
+//! The daemon's single-threaded scheduler: owns every session, the
+//! idle worker fleet and all client reply streams, and interleaves
+//! rounds from runnable sessions one `step()` at a time.
+//!
+//! One thread owning everything is the determinism argument in its
+//! simplest form: a session's rounds execute on its own
+//! [`SessionDriver`] with its own per-session state (server, mirrors,
+//! schedule, RNG stream seeded by its own `cfg.seed`), so *which*
+//! other sessions' rounds run between two of its steps cannot touch
+//! its trace — interleaving changes wall-clock, never values.
+
+use super::super::metrics::{RoundRecord, TrainResult};
+use super::super::observer::{CheckpointObserver, RoundObserver};
+use super::super::protocol::{
+    self as proto, ClientFrame, MetricUpdate, RejectCode, ServeFrame, SessionPhase, SessionResult,
+    SessionStatus,
+};
+use super::super::session::{SessionDriver, StepFlow};
+use super::super::socket::{parse_problem_spec, write_frame, FleetReturn, PreConnected, Stream};
+use super::super::transport::Transport;
+use super::registry::{Registry, Session, SessionSpec};
+use crate::kernels::ShardPool;
+use crate::mechanisms::parse_schedule;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the accept/reader threads feed the scheduler.
+pub(crate) enum Event {
+    /// A hello-validated worker connection joins the idle fleet.
+    Worker(Stream),
+    /// A hello'd client connection; `stream` is the reply handle (the
+    /// reader clone lives on its own thread).
+    Client { id: u64, stream: Stream },
+    /// A decoded request from client `client`.
+    Request { client: u64, frame: ClientFrame },
+    /// The client's reader thread saw EOF/error; drop its state.
+    ClientGone(u64),
+}
+
+/// A connected client: its reply stream and (at most one) attachment.
+struct ClientConn {
+    stream: Stream,
+    /// `(session id, records already sent)` while attached.
+    attached: Option<(u64, usize)>,
+}
+
+pub(crate) struct Scheduler {
+    registry: Registry,
+    clients: HashMap<u64, ClientConn>,
+    /// Parked worker streams, grant order = FIFO.
+    idle: Vec<Stream>,
+    /// Where finished sessions' links return their streams.
+    fleet_return: Arc<FleetReturn>,
+    /// Shared coordinate-sharding pool, handed to every session's link.
+    pool: Option<Arc<ShardPool>>,
+    rx: Receiver<Event>,
+    shutdown: Arc<AtomicBool>,
+    fleet_cap: Option<usize>,
+}
+
+impl Scheduler {
+    pub(crate) fn new(
+        rx: Receiver<Event>,
+        shutdown: Arc<AtomicBool>,
+        fleet_cap: Option<usize>,
+        pool: Option<Arc<ShardPool>>,
+    ) -> Scheduler {
+        Scheduler {
+            registry: Registry::new(),
+            clients: HashMap::new(),
+            idle: Vec::new(),
+            fleet_return: FleetReturn::new(),
+            pool,
+            rx,
+            shutdown,
+            fleet_cap,
+        }
+    }
+
+    /// The daemon's main loop; returns only on shutdown (flag set, or
+    /// every event source gone).
+    pub(crate) fn run(mut self) {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.drain_and_exit();
+                return;
+            }
+            if self.any_running() {
+                // Busy: don't block, rounds are waiting.
+                while let Ok(ev) = self.rx.try_recv() {
+                    self.handle(ev);
+                }
+            } else {
+                // Idle: sleep on the channel, waking to poll the flag.
+                match self.rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(ev) => {
+                        self.handle(ev);
+                        while let Ok(ev) = self.rx.try_recv() {
+                            self.handle(ev);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.drain_and_exit();
+                        return;
+                    }
+                }
+            }
+            self.reclaim();
+            self.admit();
+            self.step_all();
+        }
+    }
+
+    fn any_running(&self) -> bool {
+        self.registry.sessions.values().any(|s| s.phase == SessionPhase::Running)
+    }
+
+    /// Move streams returned by finished sessions' links back into the
+    /// idle fleet.
+    fn reclaim(&mut self) {
+        let mut back = self.fleet_return.streams.lock().expect("fleet return lock");
+        self.idle.append(&mut back);
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Worker(stream) => self.idle.push(stream),
+            Event::Client { id, stream } => {
+                self.clients.insert(id, ClientConn { stream, attached: None });
+            }
+            Event::ClientGone(id) => {
+                self.clients.remove(&id);
+            }
+            Event::Request { client, frame } => match frame {
+                // A repeated hello is harmless; ignore it.
+                ClientFrame::Hello => {}
+                ClientFrame::Submit { spec } => self.on_submit(client, &spec),
+                ClientFrame::Status { id } => self.on_status(client, id),
+                ClientFrame::Attach { id } => self.on_attach(client, id),
+                ClientFrame::Cancel { id } => self.on_cancel(client, id),
+            },
+        }
+    }
+
+    fn on_submit(&mut self, client: u64, spec: &str) {
+        let frame = match SessionSpec::parse(spec, self.fleet_cap) {
+            Ok(parsed) => {
+                let id = self.registry.submit(parsed);
+                ServeFrame::Status(SessionStatus {
+                    id,
+                    phase: SessionPhase::Queued,
+                    rounds: 0,
+                    detail: String::new(),
+                })
+            }
+            Err((code, reason)) => ServeFrame::Reject { code, reason },
+        };
+        send_frame(&mut self.clients, client, &frame);
+    }
+
+    fn on_status(&mut self, client: u64, id: u64) {
+        let frame = match self.registry.sessions.get(&id) {
+            Some(sess) => ServeFrame::Status(status_of(sess)),
+            None => unknown_session(id),
+        };
+        send_frame(&mut self.clients, client, &frame);
+    }
+
+    /// Attach: status, then a replay of every record so far; a running
+    /// (or queued) session then streams live until its result frame.
+    fn on_attach(&mut self, client: u64, id: u64) {
+        let Some(sess) = self.registry.sessions.get(&id) else {
+            let frame = unknown_session(id);
+            send_frame(&mut self.clients, client, &frame);
+            return;
+        };
+        let status = ServeFrame::Status(status_of(sess));
+        if !send_frame(&mut self.clients, client, &status) {
+            return;
+        }
+        for record in &sess.records {
+            let m = ServeFrame::Metric(MetricUpdate { id, record: record.clone() });
+            if !send_frame(&mut self.clients, client, &m) {
+                return;
+            }
+        }
+        if sess.terminal() {
+            if let Some(result) = &sess.result {
+                let frame = ServeFrame::Result(result.clone());
+                send_frame(&mut self.clients, client, &frame);
+            }
+            return;
+        }
+        let sent = sess.records.len();
+        if let Some(conn) = self.clients.get_mut(&client) {
+            conn.attached = Some((id, sent));
+        }
+    }
+
+    fn on_cancel(&mut self, client: u64, id: u64) {
+        match self.registry.sessions.get_mut(&id) {
+            None => {
+                let frame = unknown_session(id);
+                send_frame(&mut self.clients, client, &frame);
+                return;
+            }
+            Some(sess) if sess.terminal() => {} // idempotent
+            Some(sess) => match sess.phase {
+                SessionPhase::Queued => {
+                    sess.phase = SessionPhase::Cancelled;
+                    sess.detail = "cancelled".into();
+                    sess.result = Some(synthetic_result(id, "cancelled"));
+                }
+                SessionPhase::Running => {
+                    // Stop at the current round boundary; the link's
+                    // clean drop returns the workers to the fleet.
+                    let driver = sess.driver.take().expect("running session has a driver");
+                    let result = driver.finish();
+                    sess.rounds = result.rounds_run as u64;
+                    sess.records = result.records.clone();
+                    let mut wire = result_to_wire(id, &result);
+                    wire.error.get_or_insert_with(|| "cancelled".into());
+                    sess.phase = SessionPhase::Cancelled;
+                    sess.detail = "cancelled".into();
+                    sess.result = Some(wire);
+                }
+                _ => unreachable!("terminal phases handled above"),
+            },
+        }
+        self.notify_terminal(id);
+        let frame = match self.registry.sessions.get(&id) {
+            Some(sess) => ServeFrame::Status(status_of(sess)),
+            None => unknown_session(id),
+        };
+        send_frame(&mut self.clients, client, &frame);
+    }
+
+    /// Grant workers to queued sessions, in id order, first-fit: a
+    /// session whose worker count fits the idle fleet starts now; one
+    /// that doesn't waits without blocking smaller sessions behind it.
+    fn admit(&mut self) {
+        let queued: Vec<u64> = self
+            .registry
+            .sessions
+            .values()
+            .filter(|s| s.phase == SessionPhase::Queued)
+            .map(|s| s.id)
+            .collect();
+        for id in queued {
+            let n = self.registry.sessions[&id].spec.n_workers;
+            if n > self.idle.len() {
+                continue;
+            }
+            let granted: Vec<Stream> = self.idle.drain(..n).collect();
+            let sess = self.registry.sessions.get_mut(&id).expect("queued id");
+            match start_session(&sess.spec, granted, &self.pool, &self.fleet_return) {
+                Ok(driver) => {
+                    sess.driver = Some(driver);
+                    sess.phase = SessionPhase::Running;
+                }
+                Err(result) => {
+                    // The transport failed to stand up; the granted
+                    // streams are gone with it (their agents see a
+                    // disconnect and exit).
+                    sess.rounds = result.rounds_run as u64;
+                    sess.records = result.records.clone();
+                    let wire = result_to_wire(id, &result);
+                    sess.detail = wire.error.clone().unwrap_or_else(|| "start failed".into());
+                    sess.phase = SessionPhase::Failed;
+                    sess.result = Some(wire);
+                    self.notify_terminal(id);
+                }
+            }
+        }
+    }
+
+    /// One round for every running session, in id order.
+    fn step_all(&mut self) {
+        let running: Vec<u64> = self
+            .registry
+            .sessions
+            .values()
+            .filter(|s| s.phase == SessionPhase::Running)
+            .map(|s| s.id)
+            .collect();
+        for id in running {
+            let sess = self.registry.sessions.get_mut(&id).expect("running id");
+            let driver = sess.driver.as_mut().expect("running session has a driver");
+            let flow = driver.step();
+            sess.rounds = driver.rounds_done() as u64;
+            // Flush any new records to this session's attached clients.
+            let produced = driver.records();
+            if produced.len() > sess.records.len() {
+                sess.records.extend_from_slice(&produced[sess.records.len()..]);
+            }
+            flush_metrics(&mut self.clients, id, &sess.records);
+            if flow == StepFlow::Finished {
+                let driver = sess.driver.take().expect("finished driver");
+                let result = driver.finish();
+                sess.rounds = result.rounds_run as u64;
+                let wire = result_to_wire(id, &result);
+                sess.phase = if wire.error.is_some() {
+                    sess.detail = wire.error.clone().unwrap_or_default();
+                    SessionPhase::Failed
+                } else {
+                    SessionPhase::Done
+                };
+                sess.result = Some(wire);
+                self.notify_terminal(id);
+            }
+        }
+    }
+
+    /// Flush + result-frame + detach every client attached to `id`
+    /// (no-op unless the session is terminal with a result).
+    fn notify_terminal(&mut self, id: u64) {
+        let Some(sess) = self.registry.sessions.get(&id) else { return };
+        let Some(result) = sess.result.clone() else { return };
+        flush_metrics(&mut self.clients, id, &sess.records);
+        let frame = ServeFrame::Result(result);
+        let attached: Vec<u64> = self
+            .clients
+            .iter()
+            .filter(|(_, c)| c.attached.map(|(s, _)| s) == Some(id))
+            .map(|(cid, _)| *cid)
+            .collect();
+        for cid in attached {
+            send_frame(&mut self.clients, cid, &frame);
+            if let Some(conn) = self.clients.get_mut(&cid) {
+                conn.attached = None;
+            }
+        }
+    }
+
+    /// Graceful shutdown: drain running sessions at the current round
+    /// boundary (writing checkpoint state where configured), fail the
+    /// queued ones with "server shutdown", release the fleet.
+    fn drain_and_exit(&mut self) {
+        let ids: Vec<u64> = self.registry.sessions.keys().copied().collect();
+        for id in ids {
+            let sess = self.registry.sessions.get_mut(&id).expect("session id");
+            match sess.phase {
+                SessionPhase::Queued => {
+                    sess.phase = SessionPhase::Failed;
+                    sess.detail = "server shutdown".into();
+                    sess.result = Some(synthetic_result(id, "server shutdown"));
+                }
+                SessionPhase::Running => {
+                    let mut driver = sess.driver.take().expect("running session has a driver");
+                    if let Some((_, path)) = &sess.spec.checkpoint {
+                        match driver.checkpoint() {
+                            Ok(Some(cp)) => {
+                                if let Err(e) = cp.save(path) {
+                                    eprintln!(
+                                        "serve: shutdown checkpoint {}: {e:#}",
+                                        path.display()
+                                    );
+                                }
+                            }
+                            Ok(None) => {}
+                            Err(e) => eprintln!("serve: shutdown checkpoint: {e}"),
+                        }
+                    }
+                    let result = driver.finish();
+                    sess.rounds = result.rounds_run as u64;
+                    sess.records = result.records.clone();
+                    let mut wire = result_to_wire(id, &result);
+                    wire.error.get_or_insert_with(|| "server shutdown".into());
+                    sess.phase = SessionPhase::Failed;
+                    sess.detail = "server shutdown".into();
+                    sess.result = Some(wire);
+                }
+                _ => continue,
+            }
+            self.notify_terminal(id);
+        }
+        // Send the idle fleet (including streams the drained sessions
+        // just returned) its shutdown frames.
+        self.reclaim();
+        for mut stream in self.idle.drain(..) {
+            let _ = write_frame(&mut stream, &[proto::DOWN_SHUTDOWN], "fleet shutdown");
+        }
+    }
+}
+
+/// Build and start a session from its validated spec and granted
+/// streams. The `'static` driver is what makes this possible: the
+/// problem is regenerated on the stack here and borrowed only for the
+/// duration of the spawn (workers clone shards out of it).
+fn start_session(
+    spec: &SessionSpec,
+    granted: Vec<Stream>,
+    pool: &Option<Arc<ShardPool>>,
+    fleet_return: &Arc<FleetReturn>,
+) -> Result<SessionDriver<'static>, TrainResult> {
+    let problem = parse_problem_spec(&spec.problem_spec).expect("validated at admission");
+    let schedule = parse_schedule(&spec.schedule_spec).expect("validated at admission");
+    let transport: Box<dyn Transport> = Box::new(PreConnected::new(
+        granted,
+        spec.problem_spec.clone(),
+        spec.value_coding,
+        pool.clone(),
+        Arc::clone(fleet_return),
+    ));
+    let mut observers: Vec<Box<dyn RoundObserver + 'static>> = Vec::new();
+    if let Some((every, path)) = &spec.checkpoint {
+        observers.push(Box::new(CheckpointObserver::new(*every, path.clone())));
+    }
+    SessionDriver::spawn(&problem, schedule, None, spec.cfg.clone(), transport, observers)
+}
+
+fn status_of(sess: &Session) -> SessionStatus {
+    SessionStatus {
+        id: sess.id,
+        phase: sess.phase,
+        rounds: sess.rounds,
+        detail: sess.detail.clone(),
+    }
+}
+
+fn unknown_session(id: u64) -> ServeFrame {
+    ServeFrame::Reject {
+        code: RejectCode::UnknownSession,
+        reason: format!("no session with id {id}"),
+    }
+}
+
+/// A result for a session that never ran (cancelled while queued,
+/// failed at admission, server shutdown).
+fn synthetic_result(id: u64, error: &str) -> SessionResult {
+    SessionResult {
+        id,
+        rounds_run: 0,
+        converged: false,
+        diverged: false,
+        final_grad_norm_sq: f64::NAN,
+        total_bits_up: 0,
+        total_bits_down: 0,
+        wire_bytes_up: 0,
+        wire_bytes_down: 0,
+        error: Some(error.to_string()),
+    }
+}
+
+fn result_to_wire(id: u64, r: &TrainResult) -> SessionResult {
+    SessionResult {
+        id,
+        rounds_run: r.rounds_run as u64,
+        converged: r.converged,
+        diverged: r.diverged,
+        final_grad_norm_sq: r.final_grad_norm_sq,
+        total_bits_up: r.total_bits_up,
+        total_bits_down: r.total_bits_down,
+        wire_bytes_up: r.wire_bytes_up,
+        wire_bytes_down: r.wire_bytes_down,
+        error: r.transport_error.as_ref().map(|e| e.to_string()),
+    }
+}
+
+/// Send one frame to one client; a failed write drops the client (its
+/// reader thread notices the close when the peer goes away). Returns
+/// whether the client is still connected.
+fn send_frame(clients: &mut HashMap<u64, ClientConn>, client: u64, frame: &ServeFrame) -> bool {
+    let Some(conn) = clients.get_mut(&client) else { return false };
+    let encoded = match proto::encode_serve_frame(frame) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("serve: encoding reply: {e:#}");
+            return true;
+        }
+    };
+    if write_frame(&mut conn.stream, &encoded, "client reply").is_err() {
+        clients.remove(&client);
+        return false;
+    }
+    true
+}
+
+/// Stream `records[sent..]` to every client attached to `id`,
+/// advancing each client's cursor.
+fn flush_metrics(clients: &mut HashMap<u64, ClientConn>, id: u64, records: &[RoundRecord]) {
+    let attached: Vec<u64> = clients
+        .iter()
+        .filter(|(_, c)| c.attached.map(|(s, _)| s) == Some(id))
+        .map(|(cid, _)| *cid)
+        .collect();
+    for cid in attached {
+        let sent = match clients.get(&cid).and_then(|c| c.attached) {
+            Some((s, sent)) if s == id => sent,
+            _ => continue,
+        };
+        let mut ok = true;
+        for record in &records[sent..] {
+            let m = ServeFrame::Metric(MetricUpdate { id, record: record.clone() });
+            if !send_frame(clients, cid, &m) {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            if let Some(conn) = clients.get_mut(&cid) {
+                conn.attached = Some((id, records.len()));
+            }
+        }
+    }
+}

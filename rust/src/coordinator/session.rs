@@ -34,7 +34,7 @@ use super::observer::{
 };
 use super::protocol::{encode_mech_switch, MechSwitch};
 use super::server::Server;
-use super::transport::{InProcess, RoundAggregate, Transport, TransportError};
+use super::transport::{InProcess, RoundAggregate, Transport, TransportError, TransportLink};
 use super::worker::WorkerState;
 use super::{InitPolicy, ResumeState};
 use crate::mechanisms::schedule::{MechanismSchedule, RoundTelemetry, Static};
@@ -247,27 +247,121 @@ impl<'a> TrainSession<'a> {
     }
 
     /// Run Algorithm 1 on the configured problem/mechanism/transport.
-    pub fn run(mut self) -> TrainResult {
+    pub fn run(self) -> TrainResult {
+        match self.start() {
+            Ok(mut driver) => {
+                while driver.step() == StepFlow::Running {}
+                driver.finish()
+            }
+            Err(result) => result,
+        }
+    }
+
+    /// Stand the session up without running it: build workers, connect
+    /// the transport, and return a [`SessionDriver`] that executes
+    /// Algorithm 1 one round per [`SessionDriver::step`] call. This is
+    /// the resumable form of [`TrainSession::run`] — a scheduler (the
+    /// `threepc serve` daemon) interleaves rounds from many drivers
+    /// without any of them owning the loop, and the trace is
+    /// bit-identical to `run()`'s because `run()` *is* this driver,
+    /// stepped to completion.
+    ///
+    /// A transport that cannot stand up returns the same error-carrying
+    /// [`TrainResult`] that `run()` would (observers' `on_complete`
+    /// already notified).
+    // The Err arm intentionally carries the full error-bearing
+    // `TrainResult`, matching `run()`'s contract.
+    #[allow(clippy::result_large_err)]
+    pub fn start(self) -> Result<SessionDriver<'a>, TrainResult> {
+        SessionDriver::spawn(
+            self.problem,
+            self.schedule,
+            self.resume,
+            self.cfg,
+            self.transport,
+            self.observers,
+        )
+    }
+}
+
+/// Outcome of one [`SessionDriver::step`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepFlow {
+    /// The round ran; the session has more work.
+    Running,
+    /// The session is over (round cap, stop rule, or transport error) —
+    /// collect the result with [`SessionDriver::finish`].
+    Finished,
+}
+
+/// A running session, executed one round at a time.
+///
+/// Obtained from [`TrainSession::start`]; [`SessionDriver::step`] runs
+/// exactly one round of Algorithm 1 and [`SessionDriver::finish`]
+/// produces the [`TrainResult`]. `finish` may be called at any round
+/// boundary (the `serve` daemon's cancel path), yielding the rounds
+/// completed so far. The driver borrows nothing from the problem — the
+/// lifetime parameter bounds only the attached observers — so a
+/// scheduler can hold drivers whose problems were built on the fly.
+pub struct SessionDriver<'a> {
+    cfg: TrainConfig,
+    schedule: Box<dyn MechanismSchedule>,
+    observers: Vec<Box<dyn RoundObserver + 'a>>,
+    /// Built-in stop rules, in the legacy break-priority order.
+    stops: Vec<Box<dyn RoundObserver>>,
+    server: Server,
+    link: Box<dyn TransportLink>,
+    agg: RoundAggregate,
+    telemetry: RoundTelemetry,
+    current_map: Arc<dyn ThreePointMap>,
+    n: usize,
+    start: Instant,
+    start_round: usize,
+    /// The next round to execute.
+    t: usize,
+    records: Vec<RoundRecord>,
+    converged: bool,
+    diverged: bool,
+    final_grad_norm_sq: f64,
+    rounds_run: usize,
+    transport_error: Option<TransportError>,
+    finished: bool,
+}
+
+impl<'a> SessionDriver<'a> {
+    /// The deconstructed form of [`TrainSession::start`]: the problem is
+    /// borrowed only for the duration of this call (workers clone their
+    /// `Arc` shards out of it), so the returned driver's lifetime is
+    /// tied to the observers alone — what lets the service build a
+    /// problem from a wire spec on the stack and keep the driver.
+    #[allow(clippy::result_large_err)]
+    pub(crate) fn spawn(
+        problem: &Distributed,
+        mut schedule: Box<dyn MechanismSchedule>,
+        resume: Option<Arc<ResumeState>>,
+        cfg: TrainConfig,
+        transport: Box<dyn Transport>,
+        mut observers: Vec<Box<dyn RoundObserver + 'a>>,
+    ) -> Result<SessionDriver<'a>, TrainResult> {
         let start = Instant::now();
-        let cfg = self.cfg.clone();
-        let n = self.problem.n_workers();
-        let d = self.problem.dim();
+        let n = problem.n_workers();
+        let d = problem.dim();
 
         // Resumed sessions restart from the checkpointed iterate and
         // round number; fresh sessions from the problem's x⁰ at round 0.
-        let (x0, start_round) = match &self.resume {
+        let (x0, start_round) = match &resume {
             Some(rs) => (rs.x.clone(), rs.t + 1),
-            None => (self.problem.x0.clone(), 0),
+            None => (problem.x0.clone(), 0),
         };
-        let init = match &self.resume {
+        let init = match &resume {
             Some(rs) => InitPolicy::FromState(Arc::clone(rs)),
             None => cfg.init.clone(),
         };
 
         // The schedule's first pick is made at the starting round, so a
         // resumed piecewise run lands in the right segment.
-        let mut telemetry = RoundTelemetry::initial();
-        let mut current_map = self.schedule.pick(start_round as u64, &telemetry);
+        let telemetry = RoundTelemetry::initial();
+        let current_map = schedule.pick(start_round as u64, &telemetry);
 
         // Build workers (evaluates ∇f_i(x⁰) and applies the g⁰ policy).
         let workers: Vec<WorkerState> = (0..n)
@@ -275,7 +369,7 @@ impl<'a> TrainSession<'a> {
                 WorkerState::new(
                     i,
                     n,
-                    self.problem.locals[i].clone(),
+                    problem.locals[i].clone(),
                     current_map.clone(),
                     &x0,
                     init.clone(),
@@ -283,7 +377,7 @@ impl<'a> TrainSession<'a> {
                 )
             })
             .collect();
-        let mut server = match &self.resume {
+        let server = match &resume {
             Some(rs) => Server::from_state(x0, rs.g_sum.clone(), n),
             None => {
                 let g0s: Vec<&[f32]> = workers.iter().map(|w| w.g()).collect();
@@ -302,7 +396,7 @@ impl<'a> TrainSession<'a> {
         // transport with `FromState` — rejects at connect time instead
         // of silently desynchronising leader and agents.
         let link_cfg = TrainConfig { init: init.clone(), ..cfg.clone() };
-        let mut link = match self.transport.connect(workers, d, &link_cfg) {
+        let link = match transport.connect(workers, d, &link_cfg) {
             Ok(link) => link,
             Err(e) => {
                 let result = TrainResult {
@@ -311,8 +405,7 @@ impl<'a> TrainSession<'a> {
                     converged: false,
                     diverged: false,
                     final_x: server.x.clone(),
-                    final_grad_norm_sq: self
-                        .resume
+                    final_grad_norm_sq: resume
                         .as_ref()
                         .map_or(f64::NAN, |rs| rs.grad_norm_sq),
                     total_bits_up: server.total_bits_up(),
@@ -322,10 +415,10 @@ impl<'a> TrainSession<'a> {
                     transport_error: Some(e),
                     elapsed: start.elapsed(),
                 };
-                for obs in self.observers.iter_mut() {
+                for obs in observers.iter_mut() {
                     obs.on_complete(&result);
                 }
-                return result;
+                return Err(result);
             }
         };
 
@@ -343,165 +436,260 @@ impl<'a> TrainSession<'a> {
             stops.push(Box::new(TimeLimitStop { limit }));
         }
 
-        // One aggregate lives for the whole session: the O(d) fold
-        // vectors are reset and reused by the transport every round.
-        let mut agg = RoundAggregate::new(d, n);
-        let mut records: Vec<RoundRecord> = Vec::new();
-        let mut converged = false;
-        let mut diverged = false;
         // Resumed sessions seed the final norm from the checkpoint, so a
         // resume with no round headroom reports it instead of NaN.
-        let mut final_grad_norm_sq =
-            self.resume.as_ref().map_or(f64::NAN, |rs| rs.grad_norm_sq);
-        let mut rounds_run = 0usize;
-        let mut transport_error: Option<TransportError> = None;
+        let final_grad_norm_sq = resume.as_ref().map_or(f64::NAN, |rs| rs.grad_norm_sq);
 
-        for t in start_round..cfg.max_rounds {
-            rounds_run = t + 1 - start_round;
+        Ok(SessionDriver {
+            cfg,
+            schedule,
+            observers,
+            stops,
+            server,
+            link,
+            // One aggregate lives for the whole session: the O(d) fold
+            // vectors are reset and reused by the transport every round.
+            agg: RoundAggregate::new(d, n),
+            telemetry,
+            current_map,
+            n,
+            start,
+            start_round,
+            t: start_round,
+            records: Vec::new(),
+            converged: false,
+            diverged: false,
+            final_grad_norm_sq,
+            rounds_run: 0,
+            transport_error: None,
+            finished: false,
+        })
+    }
 
-            // Per-round schedule decision, made here on the coordinator
-            // and broadcast through the transport as a real downlink
-            // directive (billed into bits_down either way). The starting
-            // round's map was installed at worker construction; the
-            // directive carries both the display name (traces) and the
-            // parseable spec (what a remote worker rebuilds the map
-            // from).
-            let mut mech_switch: Option<String> = None;
-            if t > start_round {
-                let next = self.schedule.pick(t as u64, &telemetry);
-                if !Arc::ptr_eq(&next, &current_map) {
-                    let name = next.name();
-                    let switched = encode_mech_switch(&MechSwitch {
-                        round: t as u64,
-                        mech: name.clone(),
-                        spec: next.spec(),
-                    })
-                    .map_err(|e| {
-                        TransportError::Protocol(format!("encoding MechSwitch: {e:#}"))
-                    })
-                    .and_then(|frame| link.switch_mechanism(next.clone(), &frame));
-                    match switched {
-                        Ok(down_bits) => {
-                            server.bits_down += down_bits;
-                            mech_switch = Some(name);
-                            current_map = next;
-                        }
-                        Err(e) => {
-                            transport_error = Some(e);
-                            rounds_run = t - start_round;
-                            break;
-                        }
+    /// Execute one round of Algorithm 1: the schedule decision, the
+    /// iterate step + broadcast, the worker fan-out, the aggregate fold,
+    /// accounting, and the observer pass. Returns
+    /// [`StepFlow::Finished`] once the session is over (and on every
+    /// call thereafter).
+    pub fn step(&mut self) -> StepFlow {
+        if self.finished {
+            return StepFlow::Finished;
+        }
+        let t = self.t;
+        if t >= self.cfg.max_rounds {
+            self.finished = true;
+            return StepFlow::Finished;
+        }
+        self.t = t + 1;
+        self.rounds_run = t + 1 - self.start_round;
+
+        // Per-round schedule decision, made here on the coordinator
+        // and broadcast through the transport as a real downlink
+        // directive (billed into bits_down either way). The starting
+        // round's map was installed at worker construction; the
+        // directive carries both the display name (traces) and the
+        // parseable spec (what a remote worker rebuilds the map
+        // from).
+        let mut mech_switch: Option<String> = None;
+        if t > self.start_round {
+            let next = self.schedule.pick(t as u64, &self.telemetry);
+            if !Arc::ptr_eq(&next, &self.current_map) {
+                let name = next.name();
+                let switched = encode_mech_switch(&MechSwitch {
+                    round: t as u64,
+                    mech: name.clone(),
+                    spec: next.spec(),
+                })
+                .map_err(|e| TransportError::Protocol(format!("encoding MechSwitch: {e:#}")))
+                .and_then(|frame| self.link.switch_mechanism(next.clone(), &frame));
+                match switched {
+                    Ok(down_bits) => {
+                        self.server.bits_down += down_bits;
+                        mech_switch = Some(name);
+                        self.current_map = next;
+                    }
+                    Err(e) => {
+                        self.transport_error = Some(e);
+                        self.rounds_run = t - self.start_round;
+                        self.finished = true;
+                        return StepFlow::Finished;
                     }
                 }
             }
-            let mech_name = current_map.name();
+        }
+        let mech_name = self.current_map.name();
 
-            // x^{t+1} = x^t − γ g^t; broadcast (bills downlink). The
-            // session's own O(d) loops borrow the link's shard pool
-            // (idle between rounds); bit-identical to serial.
-            server.step_sh(cfg.gamma, link.shards());
-            let eval_loss = cfg.eval_loss_every > 0 && t % cfg.eval_loss_every == 0;
-            if let Err(e) = link.round(&server.x, mix_seed(cfg.seed, t as u64), eval_loss, &mut agg)
-            {
-                transport_error = Some(e);
-                rounds_run = t - start_round;
-                break;
-            }
+        // x^{t+1} = x^t − γ g^t; broadcast (bills downlink). The
+        // session's own O(d) loops borrow the link's shard pool
+        // (idle between rounds); bit-identical to serial.
+        self.server.step_sh(self.cfg.gamma, self.link.shards());
+        let eval_loss = self.cfg.eval_loss_every > 0 && t % self.cfg.eval_loss_every == 0;
+        if let Err(e) = self.link.round(
+            &self.server.x,
+            mix_seed(self.cfg.seed, t as u64),
+            eval_loss,
+            &mut self.agg,
+        ) {
+            self.transport_error = Some(e);
+            self.rounds_run = t - self.start_round;
+            self.finished = true;
+            return StepFlow::Finished;
+        }
 
-            server.fold_delta_sh(&agg.delta_sum, link.shards());
-            for &(wid, b) in &agg.bits {
-                server.add_bits(wid, b);
-            }
-            let inv_n = 1.0 / n as f64;
-            let grad_norm_sq =
-                crate::kernels::sqnorm_scaled_f64(link.shards(), &agg.grad_sum, inv_n);
-            final_grad_norm_sq = grad_norm_sq;
+        self.server.fold_delta_sh(&self.agg.delta_sum, self.link.shards());
+        for &(wid, b) in &self.agg.bits {
+            self.server.add_bits(wid, b);
+        }
+        let inv_n = 1.0 / self.n as f64;
+        let grad_norm_sq =
+            crate::kernels::sqnorm_scaled_f64(self.link.shards(), &self.agg.grad_sum, inv_n);
+        self.final_grad_norm_sq = grad_norm_sq;
 
-            let snap = RoundSnapshot {
-                t,
-                grad_norm_sq,
-                g_err: agg.g_err_sum * inv_n,
-                bits_up_cum: server.mean_bits_up(),
-                bits_up_max: server.max_bits_up(),
-                bits_down_cum: server.bits_down as f64,
-                skipped_frac: agg.skipped as f64 * inv_n,
-                loss: if eval_loss { Some(agg.loss_sum * inv_n) } else { None },
-                x: &server.x,
-                g_sum: server.g_sum(),
-                mech: &mech_name,
-                elapsed: start.elapsed(),
-                max_rounds: cfg.max_rounds,
-            };
+        let snap = RoundSnapshot {
+            t,
+            grad_norm_sq,
+            g_err: self.agg.g_err_sum * inv_n,
+            bits_up_cum: self.server.mean_bits_up(),
+            bits_up_max: self.server.max_bits_up(),
+            bits_down_cum: self.server.bits_down as f64,
+            skipped_frac: self.agg.skipped as f64 * inv_n,
+            loss: if eval_loss { Some(self.agg.loss_sum * inv_n) } else { None },
+            x: &self.server.x,
+            g_sum: self.server.g_sum(),
+            mech: &mech_name,
+            elapsed: self.start.elapsed(),
+            max_rounds: self.cfg.max_rounds,
+        };
 
-            // The schedule's next pick sees this round's observables.
-            telemetry = RoundTelemetry {
-                rounds_done: (t + 1) as u64,
-                grad_norm_sq,
-                g_err: snap.g_err,
-                bits_up_cum: snap.bits_up_cum,
-                bits_down_cum: snap.bits_down_cum,
-                skipped_frac: snap.skipped_frac,
-            };
+        // The schedule's next pick sees this round's observables.
+        self.telemetry = RoundTelemetry {
+            rounds_done: (t + 1) as u64,
+            grad_norm_sq,
+            g_err: snap.g_err,
+            bits_up_cum: snap.bits_up_cum,
+            bits_down_cum: snap.bits_down_cum,
+            skipped_frac: snap.skipped_frac,
+        };
 
-            // Every observer sees every round; the first Stop wins
-            // (built-ins run first — the legacy break priority).
-            let mut stop: Option<StopReason> = None;
-            {
-                let mut ctx = RoundCtx { snap, link: link.as_mut() };
-                for obs in stops.iter_mut() {
-                    if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
-                        stop.get_or_insert(reason);
-                    }
+        // Every observer sees every round; the first Stop wins
+        // (built-ins run first — the legacy break priority).
+        let mut stop: Option<StopReason> = None;
+        {
+            let mut ctx = RoundCtx { snap, link: self.link.as_mut() };
+            for obs in self.stops.iter_mut() {
+                if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
+                    stop.get_or_insert(reason);
                 }
-                for obs in self.observers.iter_mut() {
-                    if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
-                        stop.get_or_insert(reason);
-                    }
-                }
             }
-
-            let last = t + 1 == cfg.max_rounds;
-            if t % cfg.record_every.max(1) == 0 || stop.is_some() || last || mech_switch.is_some()
-            {
-                records.push(RoundRecord {
-                    t,
-                    grad_norm_sq,
-                    g_err: snap.g_err,
-                    bits_up_cum: snap.bits_up_cum,
-                    bits_up_max: snap.bits_up_max,
-                    bits_down_cum: snap.bits_down_cum,
-                    skipped_frac: snap.skipped_frac,
-                    loss: snap.loss,
-                    mech_switch,
-                });
-            }
-            match stop {
-                Some(StopReason::Diverged) => {
-                    diverged = true;
-                    break;
+            for obs in self.observers.iter_mut() {
+                if let RoundFlow::Stop(reason) = obs.on_round(&mut ctx) {
+                    stop.get_or_insert(reason);
                 }
-                Some(StopReason::Converged) => {
-                    converged = true;
-                    break;
-                }
-                Some(_) => break,
-                None => {}
             }
         }
 
+        let last = t + 1 == self.cfg.max_rounds;
+        if t % self.cfg.record_every.max(1) == 0
+            || stop.is_some()
+            || last
+            || mech_switch.is_some()
+        {
+            self.records.push(RoundRecord {
+                t,
+                grad_norm_sq,
+                g_err: snap.g_err,
+                bits_up_cum: snap.bits_up_cum,
+                bits_up_max: snap.bits_up_max,
+                bits_down_cum: snap.bits_down_cum,
+                skipped_frac: snap.skipped_frac,
+                loss: snap.loss,
+                mech_switch,
+            });
+        }
+        match stop {
+            Some(StopReason::Diverged) => {
+                self.diverged = true;
+                self.finished = true;
+                StepFlow::Finished
+            }
+            Some(StopReason::Converged) => {
+                self.converged = true;
+                self.finished = true;
+                StepFlow::Finished
+            }
+            Some(_) => {
+                self.finished = true;
+                StepFlow::Finished
+            }
+            None => {
+                if last {
+                    self.finished = true;
+                    StepFlow::Finished
+                } else {
+                    StepFlow::Running
+                }
+            }
+        }
+    }
+
+    /// Whether the session is over (further `step` calls are no-ops).
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Rounds executed so far (matching `TrainResult::rounds_run`).
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_run
+    }
+
+    /// The trace recorded so far — grows as rounds are stepped, which is
+    /// what the service's `attach` streaming tails.
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    /// The transport failure that ended the session, if any.
+    pub fn transport_error(&self) -> Option<&TransportError> {
+        self.transport_error.as_ref()
+    }
+
+    /// Snapshot the full optimizer state as a [`Checkpoint`] at the
+    /// current round boundary (`None` before any round has completed).
+    /// This is the service's drain path — a graceful shutdown persists
+    /// each running session exactly as a
+    /// [`CheckpointObserver`](super::CheckpointObserver) would have.
+    pub fn checkpoint(&mut self) -> Result<Option<Checkpoint>, TransportError> {
+        if self.rounds_run == 0 && self.start_round == 0 {
+            return Ok(None);
+        }
+        let worker_g = self.link.snapshot_g()?;
+        Ok(Some(Checkpoint {
+            t: self.t.saturating_sub(1),
+            grad_norm_sq: self.final_grad_norm_sq,
+            x: self.server.x.clone(),
+            g_sum: self.server.g_sum().to_vec(),
+            worker_g,
+        }))
+    }
+
+    /// Finalize the session into a [`TrainResult`] (notifying observer
+    /// `on_complete`s). Callable at any round boundary — an unfinished
+    /// session yields the rounds completed so far, and dropping the
+    /// transport link shuts its peers down cleanly.
+    pub fn finish(mut self) -> TrainResult {
         let result = TrainResult {
-            records,
-            rounds_run,
-            converged,
-            diverged,
-            final_x: server.x.clone(),
-            final_grad_norm_sq,
-            total_bits_up: server.total_bits_up(),
-            total_bits_down: server.bits_down,
-            wire_bytes_up: link.measured_bytes_up(),
-            wire_bytes_down: link.measured_bytes_down(),
-            transport_error,
-            elapsed: start.elapsed(),
+            records: self.records,
+            rounds_run: self.rounds_run,
+            converged: self.converged,
+            diverged: self.diverged,
+            final_x: self.server.x.clone(),
+            final_grad_norm_sq: self.final_grad_norm_sq,
+            total_bits_up: self.server.total_bits_up(),
+            total_bits_down: self.server.bits_down,
+            wire_bytes_up: self.link.measured_bytes_up(),
+            wire_bytes_down: self.link.measured_bytes_down(),
+            transport_error: self.transport_error,
+            elapsed: self.start.elapsed(),
         };
         for obs in self.observers.iter_mut() {
             obs.on_complete(&result);

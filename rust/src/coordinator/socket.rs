@@ -74,7 +74,7 @@ const MAX_FRAME_BYTES: u32 = 1 << 28;
 // ---------------------------------------------------------------------
 
 #[derive(Debug, Clone, PartialEq, Eq)]
-enum Addr {
+pub(crate) enum Addr {
     /// `tcp://host:port` (port 0 = kernel-assigned; read it back via
     /// [`Socket::local_addr`]).
     Tcp(String),
@@ -82,7 +82,7 @@ enum Addr {
     Uds(PathBuf),
 }
 
-fn parse_addr(addr: &str) -> Result<Addr, TransportError> {
+pub(crate) fn parse_addr(addr: &str) -> Result<Addr, TransportError> {
     if let Some(hostport) = addr.strip_prefix("tcp://") {
         if hostport.is_empty() {
             return Err(TransportError::Io(format!("empty tcp address '{addr}'")));
@@ -100,14 +100,14 @@ fn parse_addr(addr: &str) -> Result<Addr, TransportError> {
     )))
 }
 
-enum Listener {
+pub(crate) enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
     Uds(UnixListener),
 }
 
 impl Listener {
-    fn accept(&self) -> std::io::Result<Stream> {
+    pub(crate) fn accept(&self) -> std::io::Result<Stream> {
         match self {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
             #[cfg(unix)]
@@ -115,7 +115,7 @@ impl Listener {
         }
     }
 
-    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
         match self {
             Listener::Tcp(l) => l.set_nonblocking(nb),
             #[cfg(unix)]
@@ -124,7 +124,7 @@ impl Listener {
     }
 }
 
-enum Stream {
+pub(crate) enum Stream {
     Tcp(TcpStream),
     #[cfg(unix)]
     Uds(UnixStream),
@@ -134,7 +134,7 @@ impl Stream {
     /// Accepted/connected streams run blocking with per-op timeouts
     /// (zero = wait forever). TCP also disables Nagle: every frame is a
     /// latency-sensitive round-trip.
-    fn configure(&self, io_timeout: Duration) -> std::io::Result<()> {
+    pub(crate) fn configure(&self, io_timeout: Duration) -> std::io::Result<()> {
         let t = if io_timeout.is_zero() { None } else { Some(io_timeout) };
         match self {
             Stream::Tcp(s) => {
@@ -148,6 +148,38 @@ impl Stream {
                 s.set_nonblocking(false)?;
                 s.set_read_timeout(t)?;
                 s.set_write_timeout(t)
+            }
+        }
+    }
+
+    /// A second handle on the same socket (the `serve` daemon reads a
+    /// client connection on one thread and replies from another).
+    pub(crate) fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.try_clone().map(Stream::Uds),
+        }
+    }
+
+    /// Split read/write timeouts (`None` = wait forever). Timeouts are
+    /// per *socket*, not per handle: this configures every clone too —
+    /// which is the point for client connections, whose reader thread
+    /// blocks indefinitely while the daemon's replies stay bounded.
+    pub(crate) fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+            #[cfg(unix)]
+            Stream::Uds(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
             }
         }
     }
@@ -196,7 +228,7 @@ fn tag_worker(e: TransportError, wid: usize) -> TransportError {
 
 /// Map an io error onto the transport error taxonomy: EOF/reset means
 /// the peer is gone, EAGAIN/timeout means the link stalled.
-fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
+pub(crate) fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
     use std::io::ErrorKind;
     match e.kind() {
         ErrorKind::UnexpectedEof
@@ -211,7 +243,7 @@ fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
 }
 
 /// Write one length-prefixed frame (`len:u32 LE` + body).
-fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), TransportError> {
+pub(crate) fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), TransportError> {
     if body.len() as u64 > MAX_FRAME_BYTES as u64 {
         return Err(TransportError::Protocol(format!(
             "{ctx}: frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
@@ -225,7 +257,7 @@ fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), TransportEr
 
 /// Read one length-prefixed frame into `buf` (reused across calls).
 /// The wire-controlled length is capped before the buffer is sized.
-fn read_frame<'a>(
+pub(crate) fn read_frame<'a>(
     s: &mut Stream,
     buf: &'a mut Vec<u8>,
     ctx: &str,
@@ -371,7 +403,7 @@ impl Socket {
     }
 }
 
-fn bind_listener(addr: &str) -> Result<(Listener, String), TransportError> {
+pub(crate) fn bind_listener(addr: &str) -> Result<(Listener, String), TransportError> {
     match parse_addr(addr)? {
         Addr::Tcp(hostport) => {
             let l = TcpListener::bind(&hostport)
@@ -399,7 +431,10 @@ fn bind_listener(addr: &str) -> Result<(Listener, String), TransportError> {
     }
 }
 
-fn accept_with_deadline(l: &Listener, deadline: Instant) -> Result<Stream, TransportError> {
+pub(crate) fn accept_with_deadline(
+    l: &Listener,
+    deadline: Instant,
+) -> Result<Stream, TransportError> {
     l.set_nonblocking(true).map_err(|e| io_err("listener set_nonblocking", e))?;
     loop {
         match l.accept() {
@@ -414,6 +449,35 @@ fn accept_with_deadline(l: &Listener, deadline: Instant) -> Result<Stream, Trans
             }
             Err(e) => return Err(io_err("accept", e)),
         }
+    }
+}
+
+/// The `g⁰` policy bit a [`SessionHello`] can carry ([`InitPolicy`]
+/// minus `FromState`, which cannot cross the wire).
+pub(crate) fn wire_zero_init(cfg: &TrainConfig) -> Result<bool, TransportError> {
+    match &cfg.init {
+        InitPolicy::FullGradient => Ok(false),
+        InitPolicy::Zero => Ok(true),
+        InitPolicy::FromState(_) => Err(TransportError::Protocol(
+            "socket transport cannot resume from checkpointed state \
+             (a FromState g⁰ cannot cross the wire)"
+                .into(),
+        )),
+    }
+}
+
+/// Read timeout for a handshake frame: a peer that connects and then
+/// sends nothing must not stall setup past `deadline` — the same
+/// `--io-timeout-ms` discipline established links run under, but
+/// deadline-bounded, and *never* "wait forever" even when the
+/// steady-state io timeout is zero.
+pub(crate) fn handshake_read_timeout(io_timeout: Duration, deadline: Instant) -> Duration {
+    let remaining =
+        deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    if io_timeout.is_zero() || io_timeout > remaining {
+        remaining
+    } else {
+        io_timeout
     }
 }
 
@@ -432,17 +496,7 @@ impl Transport for Socket {
         if n == 0 {
             return Err(TransportError::Protocol("socket transport needs ≥ 1 worker".into()));
         }
-        let zero_init = match &cfg.init {
-            InitPolicy::FullGradient => false,
-            InitPolicy::Zero => true,
-            InitPolicy::FromState(_) => {
-                return Err(TransportError::Protocol(
-                    "socket transport cannot resume from checkpointed state \
-                     (a FromState g⁰ cannot cross the wire)"
-                        .into(),
-                ))
-            }
-        };
+        let zero_init = wire_zero_init(cfg)?;
         let mech_spec = workers[0].map_spec();
         let (listener, _local) = match self.listener.lock().expect("socket listener lock").take()
         {
@@ -458,13 +512,19 @@ impl Transport for Socket {
         let mut peers = Vec::with_capacity(n);
         for wid in 0..n {
             let mut stream = accept_with_deadline(&listener, deadline)?;
+            // The hello read is deadline-bounded: a silent peer must
+            // surface as Io, not stall the whole setup.
             stream
-                .configure(self.io_timeout)
+                .configure(handshake_read_timeout(self.io_timeout, deadline))
                 .map_err(|e| io_err("configuring accepted stream", e))?;
             let ctx = format!("handshake (worker {wid})");
             let body = read_frame(&mut stream, &mut scratch, &ctx)?;
             proto::decode_worker_hello(body)
                 .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+            // Handshake done — restore the steady-state io discipline.
+            stream
+                .configure(self.io_timeout)
+                .map_err(|e| io_err("configuring accepted stream", e))?;
             let hello = SessionHello {
                 worker_id: wid as u32,
                 n_workers: n as u32,
@@ -499,6 +559,125 @@ impl Transport for Socket {
             reply_buf: Vec::new(),
             bytes_up: 0,
             bytes_down: 0,
+            shard_pool: None,
+            failed: false,
+            return_to: None,
+        }))
+    }
+}
+
+/// Where a daemon-run session's worker streams go when its link drops
+/// cleanly: back to the daemon's idle fleet, each parked behind a
+/// [`DOWN_SESSION_END`](proto::DOWN_SESSION_END) and awaiting the next
+/// [`SessionHello`].
+pub(crate) struct FleetReturn {
+    pub(crate) streams: Mutex<Vec<Stream>>,
+}
+
+impl FleetReturn {
+    pub(crate) fn new() -> Arc<FleetReturn> {
+        Arc::new(FleetReturn { streams: Mutex::new(Vec::new()) })
+    }
+}
+
+/// The `threepc serve` daemon's transport: worker streams were already
+/// accepted and hello-validated by the daemon's demux, so `connect`
+/// only sends each its [`SessionHello`] (which rebuilds worker state
+/// remotely, exactly as [`Socket::connect`] does) and stands up the
+/// same [`SocketLink`] — the round path, fold order and byte accounting
+/// are *identical*, which is what makes daemon-run traces bit-for-bit
+/// equal to solo `Socket` runs. The link additionally carries the
+/// daemon's shared [`ShardPool`](kernels::ShardPool) handle (serial ≡
+/// sharded is the kernels contract, so the trace is unaffected) and
+/// returns its streams to `return_to` on clean shutdown.
+pub(crate) struct PreConnected {
+    /// Granted worker streams in worker-id order; taken by `connect`.
+    streams: Mutex<Vec<Stream>>,
+    problem_spec: String,
+    value_coding: WireValueCoding,
+    shard_pool: Option<Arc<kernels::ShardPool>>,
+    return_to: Arc<FleetReturn>,
+}
+
+impl PreConnected {
+    pub(crate) fn new(
+        streams: Vec<Stream>,
+        problem_spec: String,
+        value_coding: WireValueCoding,
+        shard_pool: Option<Arc<kernels::ShardPool>>,
+        return_to: Arc<FleetReturn>,
+    ) -> PreConnected {
+        PreConnected {
+            streams: Mutex::new(streams),
+            problem_spec,
+            value_coding,
+            shard_pool,
+            return_to,
+        }
+    }
+}
+
+impl Transport for PreConnected {
+    fn name(&self) -> &'static str {
+        "service"
+    }
+
+    fn connect(
+        &self,
+        workers: Vec<WorkerState>,
+        dim: usize,
+        cfg: &TrainConfig,
+    ) -> Result<Box<dyn TransportLink>, TransportError> {
+        let n = workers.len();
+        if n == 0 {
+            return Err(TransportError::Protocol("service transport needs ≥ 1 worker".into()));
+        }
+        let granted =
+            std::mem::take(&mut *self.streams.lock().expect("preconnected streams lock"));
+        if granted.len() != n {
+            return Err(TransportError::Protocol(format!(
+                "service granted {} worker streams for an {n}-worker session",
+                granted.len()
+            )));
+        }
+        let zero_init = wire_zero_init(cfg)?;
+        let mech_spec = workers[0].map_spec();
+        let mut peers = Vec::with_capacity(n);
+        for (wid, mut stream) in granted.into_iter().enumerate() {
+            let ctx = format!("session hello (worker {wid})");
+            let hello = SessionHello {
+                worker_id: wid as u32,
+                n_workers: n as u32,
+                dim: dim as u32,
+                seed: cfg.seed,
+                zero_init,
+                value_coding: self.value_coding,
+                mech_spec: mech_spec.clone(),
+                problem_spec: self.problem_spec.clone(),
+            };
+            let frame = proto::encode_session_hello(&hello)
+                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+            write_frame(&mut stream, &frame, &ctx)?;
+            peers.push(Peer { id: wid, stream });
+        }
+        let h: Vec<Vec<f32>> = workers.iter().map(|w| w.g().to_vec()).collect();
+        drop(workers);
+        Ok(Box::new(SocketLink {
+            peers,
+            dim,
+            round_idx: 0,
+            h,
+            state_buf: Vec::new(),
+            grad_buf: Vec::new(),
+            msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
+            pool: MechScratch::new(),
+            down_buf: Vec::new(),
+            reply_buf: Vec::new(),
+            bytes_up: 0,
+            bytes_down: 0,
+            shard_pool: self.shard_pool.clone(),
+            failed: false,
+            return_to: Some(Arc::clone(&self.return_to)),
         }))
     }
 }
@@ -534,10 +713,19 @@ struct SocketLink {
     reply_buf: Vec<u8>,
     bytes_up: u64,
     bytes_down: u64,
+    /// Present on daemon-run sessions: the daemon's shared helper
+    /// threads. Serial ≡ sharded is the kernels contract, so the trace
+    /// is the same either way.
+    shard_pool: Option<Arc<kernels::ShardPool>>,
+    /// Set when a round or switch failed mid-wire: the peers' state is
+    /// then unknown, so they are shut down instead of returned.
+    failed: bool,
+    /// Daemon path: streams go back to the idle fleet on clean drop.
+    return_to: Option<Arc<FleetReturn>>,
 }
 
-impl TransportLink for SocketLink {
-    fn round(
+impl SocketLink {
+    fn round_inner(
         &mut self,
         x: &[f32],
         round_seed: u64,
@@ -621,6 +809,22 @@ impl TransportLink for SocketLink {
         }
         Ok(())
     }
+}
+
+impl TransportLink for SocketLink {
+    fn round(
+        &mut self,
+        x: &[f32],
+        round_seed: u64,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
+        let r = self.round_inner(x, round_seed, eval_loss, out);
+        if r.is_err() {
+            self.failed = true;
+        }
+        r
+    }
 
     fn snapshot_g(&mut self) -> Result<Vec<(usize, Vec<f32>)>, TransportError> {
         // The mirrors are bit-exact copies of the agents' g_i (the
@@ -640,12 +844,21 @@ impl TransportLink for SocketLink {
         self.down_buf.clear();
         self.down_buf.push(proto::DOWN_SWITCH);
         self.down_buf.extend_from_slice(frame);
-        for p in self.peers.iter_mut() {
-            write_frame(&mut p.stream, &self.down_buf, "mech-switch broadcast")
-                .map_err(|e| tag_worker(e, p.id))?;
+        for i in 0..self.peers.len() {
+            let wid = self.peers[i].id;
+            if let Err(e) =
+                write_frame(&mut self.peers[i].stream, &self.down_buf, "mech-switch broadcast")
+            {
+                self.failed = true;
+                return Err(tag_worker(e, wid));
+            }
         }
         self.bytes_down += frame.len() as u64;
         Ok(8 * frame.len() as u64)
+    }
+
+    fn shards(&self) -> kernels::Shards<'_> {
+        self.shard_pool.as_deref()
     }
 
     fn measured_bytes_up(&self) -> u64 {
@@ -659,6 +872,22 @@ impl TransportLink for SocketLink {
 
 impl Drop for SocketLink {
     fn drop(&mut self) {
+        // Clean daemon-run sessions hand their workers back to the idle
+        // fleet (parked behind a session-end frame); solo sessions and
+        // any link whose wire state is suspect shut the agents down.
+        if let Some(fleet) = &self.return_to {
+            if !self.failed {
+                let mut idle = fleet.streams.lock().expect("fleet return lock");
+                for p in self.peers.drain(..) {
+                    let mut stream = p.stream;
+                    if write_frame(&mut stream, &[proto::DOWN_SESSION_END], "session end").is_ok()
+                    {
+                        idle.push(stream);
+                    }
+                }
+                return;
+            }
+        }
         // Best-effort orderly shutdown so agents exit cleanly.
         for p in self.peers.iter_mut() {
             let _ = write_frame(&mut p.stream, &[proto::DOWN_SHUTDOWN], "shutdown");
@@ -691,7 +920,7 @@ impl Default for AgentConfig {
     }
 }
 
-fn try_connect(addr: &Addr) -> std::io::Result<Stream> {
+pub(crate) fn try_connect(addr: &Addr) -> std::io::Result<Stream> {
     match addr {
         Addr::Tcp(hostport) => TcpStream::connect(hostport).map(Stream::Tcp),
         #[cfg(unix)]
@@ -708,11 +937,13 @@ fn try_connect(addr: &Addr) -> std::io::Result<Stream> {
 /// wait for the session hello; io-level failures (leader not up yet,
 /// accept backlog, timeouts) retry with backoff, protocol-level
 /// failures (bad magic, version mismatch) fail fast — retrying cannot
-/// fix those.
+/// fix those. `Ok(None)` is a clean end before any session: a
+/// `threepc serve` daemon shutting down releases fleet members that
+/// were never granted work with a shutdown frame.
 fn connect_and_handshake(
     addr: &str,
     cfg: &AgentConfig,
-) -> Result<(Stream, SessionHello), TransportError> {
+) -> Result<Option<(Stream, SessionHello)>, TransportError> {
     let parsed = parse_addr(addr)?;
     let attempts = cfg.connect_attempts.max(1);
     let mut last = TransportError::Io(format!("no connect attempts made for {addr}"));
@@ -739,6 +970,7 @@ fn connect_and_handshake(
         let hello = match read_frame(&mut stream, &mut buf, "awaiting session hello") {
             Ok(body) => match proto::decode_downlink(body) {
                 Ok(DownlinkFrame::Hello(h)) => h,
+                Ok(DownlinkFrame::Shutdown) => return Ok(None),
                 Ok(other) => {
                     // A leader speaking the right protocol but out of
                     // sequence: not transient.
@@ -758,20 +990,65 @@ fn connect_and_handshake(
                 continue;
             }
         };
-        return Ok((stream, hello));
+        return Ok(Some((stream, hello)));
     }
     Err(last)
 }
 
-/// Run a worker agent to session completion: connect to the leader at
+/// How a served session ended, from the agent's side.
+enum AgentFlow {
+    /// The connection is over ([`DOWN_SHUTDOWN`](proto::DOWN_SHUTDOWN)).
+    Shutdown,
+    /// The *session* is over but the daemon keeps the connection; the
+    /// agent discards its worker state and awaits the next hello.
+    SessionEnd,
+}
+
+/// Run a worker agent until its leader shuts it down: connect to
 /// `addr` (`tcp://host:port` or `uds://path`), handshake, reconstruct
-/// the local [`WorkerState`] from the hello, then serve rounds until a
-/// shutdown frame (clean `Ok`) or a wire failure (`Err`). This is the
-/// body of `threepc worker --connect <addr>`, and what loopback tests
-/// spawn on threads.
+/// the local [`WorkerState`] from the hello, then serve rounds. A solo
+/// leader ends the connection with a shutdown frame (clean `Ok`); the
+/// `threepc serve` daemon instead parks the agent with a session-end
+/// frame, after which it idles — without a read timeout, the next
+/// session may be far away — until a fresh hello rebuilds it for the
+/// next session. Any wire failure is `Err`. This is the body of
+/// `threepc worker --connect <addr>`, and what loopback tests spawn on
+/// threads.
 pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
-    let (mut stream, hello) =
-        connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let Some((mut stream, mut hello)) =
+        connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?
+    else {
+        return Ok(());
+    };
+    loop {
+        match serve_worker_session(&mut stream, &hello)? {
+            AgentFlow::Shutdown => return Ok(()),
+            AgentFlow::SessionEnd => {
+                stream
+                    .configure(Duration::ZERO)
+                    .map_err(|e| anyhow::anyhow!("{}", io_err("configuring idle stream", e)))?;
+                let mut buf = Vec::new();
+                let body = read_frame(&mut stream, &mut buf, "awaiting next session")
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let next = match proto::decode_downlink(body)? {
+                    DownlinkFrame::Hello(h) => h,
+                    DownlinkFrame::Shutdown => return Ok(()),
+                    other => anyhow::bail!(
+                        "expected a session hello after session end, got {other:?}"
+                    ),
+                };
+                stream
+                    .configure(cfg.io_timeout)
+                    .map_err(|e| anyhow::anyhow!("{}", io_err("configuring stream", e)))?;
+                hello = next;
+            }
+        }
+    }
+}
+
+/// Serve one session on an established, hello'd connection (the round
+/// loop the solo agent and the daemon-parked agent share).
+fn serve_worker_session(stream: &mut Stream, hello: &SessionHello) -> anyhow::Result<AgentFlow> {
     let d = hello.dim as usize;
     let n = hello.n_workers as usize;
     let wid = hello.worker_id as usize;
@@ -798,8 +1075,8 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
     let mut up = Vec::new();
     let mut reply = Vec::new();
     loop {
-        let body = read_frame(&mut stream, &mut buf, "awaiting round")
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let body =
+            read_frame(stream, &mut buf, "awaiting round").map_err(|e| anyhow::anyhow!("{e}"))?;
         match proto::decode_downlink(body)? {
             DownlinkFrame::Round { round_seed, eval_loss, x, .. } => {
                 anyhow::ensure!(
@@ -819,15 +1096,15 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
                 let loss = if eval_loss { Some(worker.loss(&x)) } else { None };
                 reply.clear();
                 proto::encode_round_reply(&up, worker.true_grad(), loss, &mut reply);
-                write_frame(&mut stream, &reply, "round reply")
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                write_frame(stream, &reply, "round reply").map_err(|e| anyhow::anyhow!("{e}"))?;
             }
             DownlinkFrame::Switch(ms) => {
                 let map = parse_mechanism(&ms.spec)
                     .with_context(|| format!("switch directive spec '{}'", ms.spec))?;
                 worker.swap_map(map);
             }
-            DownlinkFrame::Shutdown => return Ok(()),
+            DownlinkFrame::Shutdown => return Ok(AgentFlow::Shutdown),
+            DownlinkFrame::SessionEnd => return Ok(AgentFlow::SessionEnd),
             DownlinkFrame::Hello(_) => anyhow::bail!("unexpected mid-session hello"),
         }
     }
@@ -873,6 +1150,53 @@ mod tests {
             Err(TransportError::Protocol(_)) => {}
             other => panic!("expected protocol error, got {:?}", other.map(|_| ())),
         }
+    }
+
+    #[test]
+    fn handshake_timeout_is_deadline_bounded() {
+        let deadline = Instant::now() + Duration::from_millis(200);
+        // Zero io timeout ("forever") must still be deadline-bounded.
+        let t = handshake_read_timeout(Duration::ZERO, deadline);
+        assert!(!t.is_zero() && t <= Duration::from_millis(200), "{t:?}");
+        // A short io timeout wins over a far deadline.
+        let far = Instant::now() + Duration::from_secs(3600);
+        assert_eq!(handshake_read_timeout(Duration::from_secs(5), far), Duration::from_secs(5));
+        // An expired deadline clamps to a minimal (nonzero) wait.
+        let past = Instant::now() - Duration::from_secs(1);
+        let t = handshake_read_timeout(Duration::ZERO, past);
+        assert!(!t.is_zero() && t <= Duration::from_millis(1), "{t:?}");
+    }
+
+    #[test]
+    fn silent_peer_cannot_stall_the_handshake() {
+        // A peer that connects and then sends nothing must surface as a
+        // deadline-bounded Io error even when the steady-state io
+        // timeout is zero ("wait forever").
+        let sock = Socket::bind("tcp://127.0.0.1:0", "quad:1:4:0.01:0.5:1")
+            .unwrap()
+            .accept_timeout(Duration::from_millis(200))
+            .io_timeout(Duration::ZERO);
+        let addr = sock.local_addr().unwrap();
+        let hostport = addr.strip_prefix("tcp://").unwrap().to_string();
+        let _mute = TcpStream::connect(&hostport).unwrap();
+        let suite = crate::problems::quadratic::generate(1, 4, 1e-2, 0.5, 1);
+        let map = parse_mechanism("gd").unwrap();
+        let cfg = TrainConfig::default();
+        let w = WorkerState::new(
+            0,
+            1,
+            suite.problem.locals[0].clone(),
+            map,
+            &suite.problem.x0,
+            InitPolicy::FullGradient,
+            cfg.seed,
+        );
+        let t0 = Instant::now();
+        match sock.connect(vec![w], 4, &cfg) {
+            Err(TransportError::Io(m)) => assert!(m.contains("timed out"), "{m}"),
+            other => panic!("expected handshake timeout, got {:?}", other.map(|_| ())),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "handshake stalled: {:?}", t0.elapsed());
     }
 
     #[test]

@@ -10,9 +10,13 @@
 //! ```
 
 use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
-use threepc::coordinator::{AgentConfig, Framed, InProcess, Socket, TrainConfig, TrainSession};
+use threepc::coordinator::{
+    AgentConfig, Framed, InProcess, ServeFrame, ServeOptions, Service, ServiceClient,
+    SessionResult, Socket, TrainConfig, TrainSession,
+};
 use threepc::data;
 use threepc::experiments;
 use threepc::mechanisms::schedule::{parse_schedule, RoundTelemetry};
@@ -52,6 +56,11 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "train" => cmd_train(args),
         "worker" => cmd_worker(args),
+        "serve" => cmd_serve(args),
+        "submit" => cmd_submit(args),
+        "status" => cmd_status(args),
+        "attach" => cmd_attach(args),
+        "cancel" => cmd_cancel(args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -78,6 +87,215 @@ fn cmd_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the long-lived coordinator daemon: accept worker agents into a
+/// shared fleet and client submissions onto it, interleaving sessions.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --listen tcp://host:port or uds://path"))?;
+    let mut opts = ServeOptions::new(listen.as_str());
+    opts.fleet = args.get("fleet").map(|f| f.parse()).transpose()?;
+    opts.spawn_workers = args.flag("spawn-workers");
+    opts.threads = args.num_or("threads", 0usize);
+    opts.io_timeout = Duration::from_millis(args.num_or("io-timeout-ms", 30_000u64));
+    opts.handshake_timeout =
+        Duration::from_millis(args.num_or("handshake-timeout-ms", 10_000u64));
+    let service = Service::bind(opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("threepc serve: listening on {}", service.local_addr());
+    install_shutdown_handler(service.shutdown_flag());
+    service.run()?;
+    println!("threepc serve: drained and stopped");
+    Ok(())
+}
+
+/// Set by the signal handler; a watcher thread forwards it to the
+/// daemon's shutdown flag (handlers must stay async-signal-safe, so
+/// the handler itself only flips this static).
+#[cfg(unix)]
+static SHUTDOWN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    SHUTDOWN_REQUESTED.store(true, Ordering::SeqCst);
+}
+
+/// SIGINT/SIGTERM → graceful drain: running sessions stop at a round
+/// boundary (writing checkpoints where configured), queued ones fail
+/// with "server shutdown", the worker fleet gets shutdown frames.
+#[cfg(unix)]
+fn install_shutdown_handler(flag: Arc<AtomicBool>) {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_shutdown_signal as extern "C" fn(i32);
+    unsafe {
+        signal(SIGINT, handler as usize);
+        signal(SIGTERM, handler as usize);
+    }
+    std::thread::spawn(move || loop {
+        if SHUTDOWN_REQUESTED.load(Ordering::SeqCst) {
+            flag.store(true, Ordering::SeqCst);
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_handler(_flag: Arc<AtomicBool>) {
+    // No portable signal story off unix; stop the daemon by other
+    // means (e.g. killing the process outright).
+}
+
+fn connect_client(args: &Args) -> Result<ServiceClient> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("need --connect tcp://host:port or uds://path"))?;
+    let io = Duration::from_millis(args.num_or("io-timeout-ms", 30_000u64));
+    ServiceClient::connect(addr, io).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn session_id(args: &Args) -> Result<u64> {
+    args.get("id")
+        .ok_or_else(|| anyhow::anyhow!("need --id <session id>"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--id: {e}"))
+}
+
+/// Submit a session spec to a daemon; `--attach` streams it to the end.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let spec = args.get("spec").ok_or_else(|| {
+        anyhow::anyhow!("submit needs --spec \"problem=quad:…;mech=…[;rounds=…;gamma=…]\"")
+    })?;
+    let mut client = connect_client(args)?;
+    match client.submit(spec).map_err(|e| anyhow::anyhow!("{e}"))? {
+        ServeFrame::Status(s) => {
+            println!("session {}: {}", s.id, s.phase);
+            if args.flag("attach") {
+                return attach_and_print(&mut client, s.id);
+            }
+            Ok(())
+        }
+        ServeFrame::Reject { code, reason } => anyhow::bail!("rejected ({code}): {reason}"),
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    }
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let mut client = connect_client(args)?;
+    let id = session_id(args)?;
+    match client.status(id).map_err(|e| anyhow::anyhow!("{e}"))? {
+        ServeFrame::Status(s) => {
+            println!(
+                "session {}: {} ({} rounds){}",
+                s.id,
+                s.phase,
+                s.rounds,
+                if s.detail.is_empty() { String::new() } else { format!(" — {}", s.detail) }
+            );
+            Ok(())
+        }
+        ServeFrame::Reject { code, reason } => anyhow::bail!("rejected ({code}): {reason}"),
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    }
+}
+
+fn cmd_attach(args: &Args) -> Result<()> {
+    let mut client = connect_client(args)?;
+    let id = session_id(args)?;
+    attach_and_print(&mut client, id)
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let mut client = connect_client(args)?;
+    let id = session_id(args)?;
+    match client.cancel(id).map_err(|e| anyhow::anyhow!("{e}"))? {
+        ServeFrame::Status(s) => {
+            println!("session {}: {}", s.id, s.phase);
+            Ok(())
+        }
+        ServeFrame::Reject { code, reason } => anyhow::bail!("rejected ({code}): {reason}"),
+        other => anyhow::bail!("unexpected reply: {other:?}"),
+    }
+}
+
+/// Stream a session's records to stdout until its terminal frame.
+fn attach_and_print(client: &mut ServiceClient, id: u64) -> Result<()> {
+    let terminal = client
+        .attach(id, |frame| match frame {
+            ServeFrame::Status(s) => {
+                println!("session {}: {} ({} rounds)", s.id, s.phase, s.rounds)
+            }
+            ServeFrame::Metric(m) => {
+                let rec = &m.record;
+                println!(
+                    "round {}: |grad f|^2={} bits/worker={}{}",
+                    rec.t,
+                    fnum(rec.grad_norm_sq),
+                    fnum(rec.bits_up_cum),
+                    rec.mech_switch
+                        .as_deref()
+                        .map(|s| format!(" switch={s}"))
+                        .unwrap_or_default()
+                );
+            }
+            _ => {}
+        })
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    match terminal {
+        ServeFrame::Result(res) => {
+            print_session_result(&res);
+            Ok(())
+        }
+        ServeFrame::Reject { code, reason } => anyhow::bail!("rejected ({code}): {reason}"),
+        other => anyhow::bail!("unexpected terminal frame: {other:?}"),
+    }
+}
+
+fn print_session_result(res: &SessionResult) {
+    let outcome = if res.error.is_some() {
+        "failed"
+    } else if res.converged {
+        "converged"
+    } else if res.diverged {
+        "DIVERGED"
+    } else {
+        "stopped"
+    };
+    println!(
+        "session {} {}: {} rounds, ‖∇f‖²={}{}",
+        res.id,
+        outcome,
+        res.rounds_run,
+        fnum(res.final_grad_norm_sq),
+        res.error.as_deref().map(|e| format!(" ({e})")).unwrap_or_default()
+    );
+    println!(
+        "{}",
+        result_line(
+            res.rounds_run,
+            res.final_grad_norm_sq,
+            res.total_bits_up,
+            res.total_bits_down,
+            res.wire_bytes_up,
+            res.wire_bytes_down,
+        )
+    );
+}
+
+/// The machine-comparable result line: the gradient norm as exact IEEE
+/// bits plus every byte/bit counter, so the CI loopback job can diff a
+/// daemon-run session against its solo reference run textually.
+fn result_line(rounds: u64, gns: f64, tbu: u64, tbd: u64, wbu: u64, wbd: u64) -> String {
+    format!(
+        "result-bits: rounds={rounds} grad_norm_sq=0x{:016x} total_bits_up={tbu} \
+         total_bits_down={tbd} wire_bytes_up={wbu} wire_bytes_down={wbd}",
+        gns.to_bits()
+    )
+}
+
 fn print_help() {
     println!(
         "threepc — 3PC: Three Point Compressors (ICML 2022) reproduction\n\
@@ -86,6 +304,9 @@ fn print_help() {
            threepc exp list | <id> [flags]   regenerate paper figures/tables\n\
            threepc train [flags]             one training run (the leader)\n\
            threepc worker --connect <addr>   a remote worker agent (socket transport)\n\
+           threepc serve --listen <addr>     long-lived multi-session coordinator daemon\n\
+           threepc submit --connect <addr> --spec \"…\"   queue a session on a daemon\n\
+           threepc status|attach|cancel --connect <addr> --id N\n\
            threepc info                      build + artifact status\n\
          \n\
          train flags:\n\
@@ -113,7 +334,25 @@ fn print_help() {
            --connect tcp://host:port|uds://path  the leader's listen address\n\
            --retries N                bounded connect-and-handshake attempts (20)\n\
            --retry-backoff-ms M       sleep between attempts (100)\n\
-           --io-timeout-ms M          per-read/write timeout once connected (60000)\n"
+           --io-timeout-ms M          per-read/write timeout once connected (60000)\n\
+         \n\
+         serve flags:\n\
+           --listen tcp://host:port|uds://path  the daemon's listen address\n\
+           --fleet N                  worker-fleet ceiling for admission checks\n\
+           --spawn-workers            run the fleet as in-process loopback agents\n\
+           --threads P                shared coordinate-sharding helper threads\n\
+           --io-timeout-ms M          steady-state per-op socket timeout (30000)\n\
+           --handshake-timeout-ms M   budget for a connection's first frame (10000)\n\
+           SIGINT/SIGTERM drain running sessions to a round boundary\n\
+         \n\
+         submit/status/attach/cancel flags:\n\
+           --connect tcp://host:port|uds://path  the daemon's address\n\
+           --spec \"problem=quad:n:d:lambda:noise:seed;mech=ef21:top4;rounds=40;…\"\n\
+                                      (submit) keys: problem, mech|schedule, rounds,\n\
+                                      gamma, seed, tol, bits-budget, loss-every,\n\
+                                      record-every, init, coding, checkpoint[-every]\n\
+           --attach                   (submit) stream the new session to completion\n\
+           --id N                     (status/attach/cancel) the session id\n"
     );
 }
 
@@ -380,6 +619,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         } else {
             String::new()
         }
+    );
+    println!(
+        "{}",
+        result_line(
+            r.rounds_run as u64,
+            r.final_grad_norm_sq,
+            r.total_bits_up,
+            r.total_bits_down,
+            r.wire_bytes_up,
+            r.wire_bytes_down,
+        )
     );
     Ok(())
 }

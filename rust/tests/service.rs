@@ -1,0 +1,345 @@
+//! Acceptance suite for the `threepc serve` daemon: sessions submitted
+//! over the client protocol must reproduce their solo `Socket` traces
+//! bit-for-bit even while other sessions share the daemon and its
+//! worker fleet; malformed submissions must come back as structured
+//! rejects; cancel must free the fleet for the next session; and a
+//! shutdown request must drain running sessions at a round boundary,
+//! checkpointing where configured.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use threepc::coordinator::protocol::ROUND_PAYLOAD_BYTES;
+use threepc::coordinator::socket::quad_problem_spec;
+use threepc::coordinator::{
+    run_worker_agent, AgentConfig, Checkpoint, RejectCode, RoundRecord, ServeFrame, ServeOptions,
+    Service, ServiceClient, SessionPhase, SessionResult, SessionSpec, Socket, TrainResult,
+    TrainSession,
+};
+use threepc::problems::quadratic;
+
+const N: usize = 4;
+const D: usize = 30;
+const LAMBDA: f64 = 1e-2;
+const NOISE: f64 = 0.5;
+const QSEED: u64 = 21;
+
+fn problem_spec() -> String {
+    quad_problem_spec(N, D, LAMBDA, NOISE, QSEED)
+}
+
+fn spec_ef21() -> String {
+    format!("problem={};mech=ef21:top3;rounds=40;gamma=0.02;seed=13", problem_spec())
+}
+
+fn spec_clag() -> String {
+    format!("problem={};mech=clag:top3:2.0;rounds=40;gamma=0.02;seed=13", problem_spec())
+}
+
+fn spec_switch() -> String {
+    format!(
+        "problem={};schedule=ef21:top8@0..12,ef21:top2@12..;rounds=24;gamma=0.02;seed=13",
+        problem_spec()
+    )
+}
+
+fn spawn_agents(addr: &str, n: usize) -> Vec<thread::JoinHandle<anyhow::Result<()>>> {
+    (0..n)
+        .map(|_| {
+            let a = addr.to_string();
+            thread::spawn(move || run_worker_agent(&a, &AgentConfig::default()))
+        })
+        .collect()
+}
+
+/// The reference: the same spec run through a dedicated solo `Socket`
+/// leader, configured via the *same* parsed `SessionSpec` the daemon
+/// would build, so any divergence is the daemon's doing.
+fn solo_reference(spec: &str) -> TrainResult {
+    let parsed = SessionSpec::parse(spec, None).expect("valid spec");
+    let suite = quadratic::generate(N, D, LAMBDA, NOISE, QSEED);
+    let sock = Socket::bind("tcp://127.0.0.1:0", &parsed.problem_spec)
+        .expect("bind")
+        .accept_timeout(Duration::from_secs(60))
+        .io_timeout(Duration::from_secs(60));
+    let listen = sock.local_addr().expect("bound address");
+    let joins = spawn_agents(&listen, parsed.n_workers);
+    let r = TrainSession::builder(&suite.problem)
+        .schedule_spec(&parsed.schedule_spec)
+        .expect("schedule validated at parse")
+        .config(parsed.cfg.clone())
+        .transport(sock)
+        .run();
+    for j in joins {
+        j.join().expect("agent thread").expect("agent exits cleanly");
+    }
+    assert!(r.transport_error.is_none(), "solo run failed: {:?}", r.transport_error);
+    r
+}
+
+struct Daemon {
+    addr: String,
+    flag: Arc<AtomicBool>,
+    join: thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn start_daemon(fleet: usize) -> Daemon {
+    let mut opts = ServeOptions::new("tcp://127.0.0.1:0");
+    opts.fleet = Some(fleet);
+    opts.spawn_workers = true;
+    let service = Service::bind(opts).expect("bind daemon");
+    let addr = service.local_addr().to_string();
+    let flag = service.shutdown_flag();
+    let join = thread::spawn(move || service.run());
+    Daemon { addr, flag, join }
+}
+
+impl Daemon {
+    fn stop(self) {
+        self.flag.store(true, Ordering::SeqCst);
+        self.join.join().expect("daemon thread").expect("daemon exits cleanly");
+    }
+}
+
+fn client(addr: &str) -> ServiceClient {
+    ServiceClient::connect(addr, Duration::from_secs(60)).expect("connect to daemon")
+}
+
+fn submit(c: &mut ServiceClient, spec: &str) -> u64 {
+    match c.submit(spec).expect("submit") {
+        ServeFrame::Status(s) => {
+            assert_eq!(s.phase, SessionPhase::Queued, "fresh submissions queue");
+            s.id
+        }
+        other => panic!("unexpected submit reply: {other:?}"),
+    }
+}
+
+/// Attach and collect every streamed record plus the terminal result.
+fn attach_collect(c: &mut ServiceClient, id: u64) -> (Vec<RoundRecord>, SessionResult) {
+    let mut records = Vec::new();
+    let terminal = c
+        .attach(id, |f| {
+            if let ServeFrame::Metric(m) = f {
+                records.push(m.record.clone());
+            }
+        })
+        .expect("attach");
+    match terminal {
+        ServeFrame::Result(r) => (records, r),
+        other => panic!("unexpected terminal frame: {other:?}"),
+    }
+}
+
+fn daemon_run(addr: &str, spec: &str) -> (Vec<RoundRecord>, SessionResult) {
+    let mut c = client(addr);
+    let id = submit(&mut c, spec);
+    attach_collect(&mut c, id)
+}
+
+fn spawn_daemon_run(
+    addr: &str,
+    spec: &str,
+) -> thread::JoinHandle<(Vec<RoundRecord>, SessionResult)> {
+    let addr = addr.to_string();
+    let spec = spec.to_string();
+    thread::spawn(move || daemon_run(&addr, &spec))
+}
+
+fn wait_for_phase(c: &mut ServiceClient, id: u64, want: SessionPhase) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match c.status(id).expect("status") {
+            ServeFrame::Status(s) if s.phase == want => return,
+            ServeFrame::Status(_) => {}
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "session {id} never reached {want:?}");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Bit-for-bit physics equality between a daemon-run session (streamed
+/// records + wire result) and its solo `Socket` reference.
+fn assert_daemon_matches_solo(
+    solo: &TrainResult,
+    records: &[RoundRecord],
+    res: &SessionResult,
+    tag: &str,
+) {
+    assert!(res.error.is_none(), "{tag}: {:?}", res.error);
+    assert_eq!(res.rounds_run, solo.rounds_run as u64, "{tag}: rounds_run");
+    assert_eq!(records.len(), solo.records.len(), "{tag}: record count");
+    for (ra, rb) in records.iter().zip(&solo.records) {
+        assert_eq!(
+            ra.grad_norm_sq.to_bits(),
+            rb.grad_norm_sq.to_bits(),
+            "{tag} round {}: grad_norm_sq {} vs {}",
+            ra.t,
+            ra.grad_norm_sq,
+            rb.grad_norm_sq
+        );
+        assert_eq!(ra.g_err.to_bits(), rb.g_err.to_bits(), "{tag} round {}: g_err", ra.t);
+        assert_eq!(ra.bits_up_cum, rb.bits_up_cum, "{tag} round {}: bits_up_cum", ra.t);
+        assert_eq!(ra.bits_up_max, rb.bits_up_max, "{tag} round {}: bits_up_max", ra.t);
+        assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "{tag} round {}: bits_down_cum", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "{tag} round {}: skipped_frac", ra.t);
+        assert_eq!(ra.mech_switch, rb.mech_switch, "{tag} round {}: mech_switch", ra.t);
+        assert_eq!(ra.loss, rb.loss, "{tag} round {}: loss", ra.t);
+    }
+    assert_eq!(
+        res.final_grad_norm_sq.to_bits(),
+        solo.final_grad_norm_sq.to_bits(),
+        "{tag}: final_grad_norm_sq"
+    );
+    assert_eq!(res.converged, solo.converged, "{tag}: converged");
+    assert_eq!(res.diverged, solo.diverged, "{tag}: diverged");
+    assert_eq!(res.total_bits_up, solo.total_bits_up, "{tag}: total_bits_up");
+    assert_eq!(res.total_bits_down, solo.total_bits_down, "{tag}: total_bits_down");
+    assert_eq!(res.wire_bytes_up, solo.wire_bytes_up, "{tag}: wire_bytes_up");
+    assert_eq!(res.wire_bytes_down, solo.wire_bytes_down, "{tag}: wire_bytes_down");
+}
+
+#[test]
+fn concurrent_sessions_reproduce_solo_socket_traces() {
+    let specs = [spec_ef21(), spec_clag(), spec_switch()];
+    let solos: Vec<TrainResult> = specs.iter().map(|s| solo_reference(s)).collect();
+
+    // A fleet big enough for two sessions at once: each pair below
+    // runs concurrently, interleaved round-by-round by the scheduler.
+    let daemon = start_daemon(2 * N);
+    for (i, j) in [(0usize, 1usize), (2, 0)] {
+        let ta = spawn_daemon_run(&daemon.addr, &specs[i]);
+        let tb = spawn_daemon_run(&daemon.addr, &specs[j]);
+        let (recs_a, res_a) = ta.join().expect("client thread");
+        let (recs_b, res_b) = tb.join().expect("client thread");
+        assert_daemon_matches_solo(&solos[i], &recs_a, &res_a, &specs[i]);
+        assert_daemon_matches_solo(&solos[j], &recs_b, &res_b, &specs[j]);
+    }
+    daemon.stop();
+
+    // The measured-byte contracts (daemon results equal these solo
+    // values bit-for-bit, so they hold behind the daemon too).
+    let init_bits = (N * 32 * D) as u64;
+    let broadcast = |rounds: u64| rounds * (ROUND_PAYLOAD_BYTES as u64 + 4 * D as u64);
+    for (spec, solo) in specs.iter().zip(&solos) {
+        assert_eq!(
+            8 * solo.wire_bytes_up,
+            solo.total_bits_up - init_bits,
+            "{spec}: every billed uplink bit beyond g⁰ init is a measured wire byte"
+        );
+    }
+    assert_eq!(solos[0].wire_bytes_down, broadcast(solos[0].rounds_run as u64), "{}", specs[0]);
+    assert_eq!(solos[1].wire_bytes_down, broadcast(solos[1].rounds_run as u64), "{}", specs[1]);
+    assert!(
+        solos[2].wire_bytes_down > broadcast(solos[2].rounds_run as u64),
+        "{}: the mid-run switch directive is billed on top of broadcasts",
+        specs[2]
+    );
+}
+
+#[test]
+fn admission_rejects_are_structured() {
+    let daemon = start_daemon(N);
+    let mut c = client(&daemon.addr);
+    let oversized = format!(
+        "problem={};mech=ef21:top3",
+        quad_problem_spec(16, D, LAMBDA, NOISE, QSEED)
+    );
+    let cases: &[(&str, RejectCode)] = &[
+        ("rounds=40", RejectCode::BadSpec),
+        ("problem=quad:nope;mech=ef21:top3", RejectCode::BadSpec),
+        ("problem=logreg:a9a;mech=ef21:top3", RejectCode::UnsupportedProblem),
+        (oversized.as_str(), RejectCode::FleetMismatch),
+    ];
+    for (spec, want) in cases {
+        match c.submit(spec).expect("submit") {
+            ServeFrame::Reject { code, reason } => {
+                assert_eq!(code, *want, "spec '{spec}' → '{reason}'");
+                assert!(!reason.is_empty(), "spec '{spec}'");
+            }
+            other => panic!("spec '{spec}': expected a reject, got {other:?}"),
+        }
+    }
+    // Lookups on an id nobody was granted are structured too.
+    for reply in [c.status(404).expect("status"), c.cancel(404).expect("cancel")] {
+        match reply {
+            ServeFrame::Reject { code, .. } => assert_eq!(code, RejectCode::UnknownSession),
+            other => panic!("expected an unknown-session reject, got {other:?}"),
+        }
+    }
+    match c.attach(404, |_| {}).expect("attach") {
+        ServeFrame::Reject { code, .. } => assert_eq!(code, RejectCode::UnknownSession),
+        other => panic!("expected an unknown-session reject, got {other:?}"),
+    }
+    daemon.stop();
+}
+
+#[test]
+fn cancel_mid_run_returns_the_fleet() {
+    let daemon = start_daemon(N);
+    let mut c = client(&daemon.addr);
+    let long =
+        format!("problem={};mech=ef21:top3;rounds=1000000;gamma=0.001;seed=13", problem_spec());
+    let id = submit(&mut c, &long);
+    wait_for_phase(&mut c, id, SessionPhase::Running);
+    match c.cancel(id).expect("cancel") {
+        ServeFrame::Status(s) => assert_eq!(s.phase, SessionPhase::Cancelled),
+        other => panic!("unexpected cancel reply: {other:?}"),
+    }
+    // Cancelling again is idempotent.
+    match c.cancel(id).expect("cancel twice") {
+        ServeFrame::Status(s) => assert_eq!(s.phase, SessionPhase::Cancelled),
+        other => panic!("unexpected cancel reply: {other:?}"),
+    }
+    // The granted workers went back to the fleet: a fresh session runs
+    // to completion on them, matching its solo trace.
+    let solo = solo_reference(&spec_ef21());
+    let (records, res) = daemon_run(&daemon.addr, &spec_ef21());
+    assert_daemon_matches_solo(&solo, &records, &res, "post-cancel session");
+    daemon.stop();
+}
+
+#[test]
+fn shutdown_drains_running_and_fails_queued() {
+    let cp = std::env::temp_dir().join(format!("3pc-serve-drain-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&cp);
+    let daemon = start_daemon(N);
+    let running_spec = format!(
+        "problem={};mech=ef21:top3;rounds=1000000;gamma=0.001;seed=13;checkpoint={};\
+         checkpoint-every=1000000",
+        problem_spec(),
+        cp.display()
+    );
+    let mut c1 = client(&daemon.addr);
+    let id1 = submit(&mut c1, &running_spec);
+    let mut c2 = client(&daemon.addr);
+    // The fleet is fully granted to session 1, so this one stays queued.
+    let id2 = submit(&mut c2, &spec_ef21());
+    let mut c3 = client(&daemon.addr);
+    wait_for_phase(&mut c3, id1, SessionPhase::Running);
+
+    let t1 = thread::spawn(move || attach_collect(&mut c1, id1));
+    let t2 = thread::spawn(move || attach_collect(&mut c2, id2));
+    // Let both attach requests reach the scheduler before draining.
+    thread::sleep(Duration::from_millis(200));
+    daemon.flag.store(true, Ordering::SeqCst);
+
+    let (records1, res1) = t1.join().expect("attach thread");
+    let (records2, res2) = t2.join().expect("attach thread");
+    assert_eq!(res1.error.as_deref(), Some("server shutdown"), "running session drained");
+    assert!(res1.rounds_run > 0, "session 1 made progress before the drain");
+    assert_eq!(records1.len() as u64, res1.rounds_run, "every drained round streamed");
+    assert_eq!(res2.error.as_deref(), Some("server shutdown"), "queued session failed");
+    assert_eq!(res2.rounds_run, 0);
+    assert!(records2.is_empty());
+    daemon.stop();
+
+    // The drain wrote the configured checkpoint at the round boundary.
+    let written = Checkpoint::load(&cp).expect("drain checkpoint written");
+    assert_eq!(written.x.len(), D);
+    assert_eq!(written.worker_g.len(), N);
+    let _ = std::fs::remove_file(&cp);
+}

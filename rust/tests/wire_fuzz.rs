@@ -16,11 +16,15 @@ use std::cell::Cell;
 
 use threepc::compressors::{CVec, Ctx, CtxInfo, WireValueCoding};
 use threepc::coordinator::protocol::{
-    decode_downlink, decode_mech_switch, decode_worker_hello, encode_mech_switch,
-    encode_round_reply, encode_round_start, encode_session_hello, encode_uplink_with,
+    decode_client_frame, decode_downlink, decode_mech_switch, decode_serve_frame,
+    decode_worker_hello, encode_client_frame, encode_mech_switch, encode_round_reply,
+    encode_round_start, encode_serve_frame, encode_session_hello, encode_uplink_with,
     encode_worker_hello, split_round_reply, SessionHello,
 };
-use threepc::coordinator::{decode_uplink, Checkpoint, MechSwitch, UplinkMsg};
+use threepc::coordinator::{
+    decode_uplink, Checkpoint, ClientFrame, MechSwitch, MetricUpdate, RejectCode, RoundRecord,
+    ServeFrame, SessionPhase, SessionResult, SessionStatus, UplinkMsg,
+};
 use threepc::mechanisms::{parse_mechanism, MechWorker};
 use threepc::util::rng::Pcg64;
 
@@ -283,4 +287,74 @@ fn checkpoint_files_survive_truncation_and_bit_flips() {
     fuzz_decoder(&bytes, &|b| {
         let _ = Checkpoint::from_bytes(b);
     });
+}
+
+#[test]
+fn client_frames_survive_truncation_and_bit_flips() {
+    let frames = [
+        ClientFrame::Hello,
+        ClientFrame::Submit {
+            spec: "problem=quad:4:30:0.01:0.5:21;mech=ef21:top3;rounds=40".into(),
+        },
+        ClientFrame::Status { id: 7 },
+        ClientFrame::Attach { id: u64::MAX },
+        ClientFrame::Cancel { id: 0 },
+    ];
+    for f in &frames {
+        let buf = encode_client_frame(f).unwrap();
+        assert_eq!(&decode_client_frame(&buf).unwrap(), f);
+        fuzz_decoder(&buf, &|b| {
+            let _ = decode_client_frame(b);
+        });
+    }
+}
+
+#[test]
+fn serve_frames_survive_truncation_and_bit_flips() {
+    let record = RoundRecord {
+        t: 12,
+        grad_norm_sq: 0.5,
+        g_err: 0.125,
+        bits_up_cum: 1024.0,
+        bits_up_max: 2048,
+        bits_down_cum: 960.0,
+        skipped_frac: 0.25,
+        loss: Some(3.5),
+        mech_switch: Some("EF21(Top-4)".into()),
+    };
+    let frames = [
+        ServeFrame::Hello,
+        ServeFrame::Status(SessionStatus {
+            id: 3,
+            phase: SessionPhase::Running,
+            rounds: 17,
+            detail: "mid-run".into(),
+        }),
+        ServeFrame::Metric(MetricUpdate { id: 3, record: record.clone() }),
+        ServeFrame::Metric(MetricUpdate {
+            id: 4,
+            record: RoundRecord { loss: None, mech_switch: None, ..record },
+        }),
+        ServeFrame::Result(SessionResult {
+            id: 3,
+            rounds_run: 40,
+            converged: true,
+            diverged: false,
+            final_grad_norm_sq: 1e-9,
+            total_bits_up: 123_456,
+            total_bits_down: 7_890,
+            wire_bytes_up: 4_321,
+            wire_bytes_down: 987,
+            error: Some("server shutdown".into()),
+        }),
+        ServeFrame::Reject { code: RejectCode::BadSpec, reason: "unknown key 'turbo'".into() },
+        ServeFrame::Reject { code: RejectCode::UnknownSession, reason: "no session".into() },
+    ];
+    for f in &frames {
+        let buf = encode_serve_frame(f).unwrap();
+        assert_eq!(&decode_serve_frame(&buf).unwrap(), f);
+        fuzz_decoder(&buf, &|b| {
+            let _ = decode_serve_frame(b);
+        });
+    }
 }

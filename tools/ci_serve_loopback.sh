@@ -1,0 +1,114 @@
+#!/usr/bin/env bash
+# End-to-end exercise of the `threepc serve` daemon through the real
+# binary: two sessions submitted to a UDS daemon with an in-process
+# worker fleet must reproduce the exact `result-bits:` lines of solo
+# `threepc train` socket runs with the same parameters, and the
+# submit/status/attach/cancel client verbs plus a SIGINT drain must all
+# round-trip cleanly.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+cargo build --release
+BIN=target/release/threepc
+
+TMP="$(mktemp -d)"
+DAEMON_PID=""
+cleanup() {
+    [ -n "$DAEMON_PID" ] && kill -9 "$DAEMON_PID" 2>/dev/null || true
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+# Shared run parameters: the daemon spec strings below regenerate the
+# same quad:4:30:0.01:0.5:21 problem the solo flags do, and seed=21
+# matches `train`'s single --seed feeding both problem and config.
+TRAIN_COMMON=(--problem quad --workers 4 --d 30 --lambda 0.01 --noise-scale 0.5
+              --seed 21 --gamma 0.02 --rounds 40 --spawn-workers)
+PROBLEM="quad:4:30:0.01:0.5:21"
+SPEC_A="problem=$PROBLEM;mech=ef21:top3;rounds=40;gamma=0.02;seed=21"
+SPEC_B="problem=$PROBLEM;mech=clag:top3:2.0;rounds=40;gamma=0.02;seed=21"
+
+result_bits() { grep '^result-bits:' "$1" | tail -n1; }
+
+echo "=== solo socket reference runs ==="
+"$BIN" train "${TRAIN_COMMON[@]}" --mech ef21:top3 \
+    --transport "uds://$TMP/solo-a.sock" > "$TMP/ref-a.txt"
+"$BIN" train "${TRAIN_COMMON[@]}" --mech clag:top3:2.0 \
+    --transport "uds://$TMP/solo-b.sock" > "$TMP/ref-b.txt"
+REF_A="$(result_bits "$TMP/ref-a.txt")"
+REF_B="$(result_bits "$TMP/ref-b.txt")"
+echo "ref A: $REF_A"
+echo "ref B: $REF_B"
+[ -n "$REF_A" ] && [ -n "$REF_B" ]
+
+echo "=== daemon up ==="
+ADDR="uds://$TMP/daemon.sock"
+"$BIN" serve --listen "$ADDR" --fleet 8 --spawn-workers > "$TMP/serve.log" 2>&1 &
+DAEMON_PID=$!
+for _ in $(seq 1 100); do
+    [ -S "$TMP/daemon.sock" ] && break
+    kill -0 "$DAEMON_PID" || { cat "$TMP/serve.log"; exit 1; }
+    sleep 0.1
+done
+[ -S "$TMP/daemon.sock" ]
+
+echo "=== two concurrent sessions must match their solo traces ==="
+"$BIN" submit --connect "$ADDR" --spec "$SPEC_A" --attach > "$TMP/run-a.txt" &
+PID_A=$!
+"$BIN" submit --connect "$ADDR" --spec "$SPEC_B" --attach > "$TMP/run-b.txt" &
+PID_B=$!
+wait "$PID_A" "$PID_B"
+GOT_A="$(result_bits "$TMP/run-a.txt")"
+GOT_B="$(result_bits "$TMP/run-b.txt")"
+echo "got A: $GOT_A"
+echo "got B: $GOT_B"
+[ "$GOT_A" = "$REF_A" ] || { echo "FAIL: session A diverged from its solo run"; exit 1; }
+[ "$GOT_B" = "$REF_B" ] || { echo "FAIL: session B diverged from its solo run"; exit 1; }
+
+echo "=== attach replays a finished session identically ==="
+ID_A="$(sed -n 's/^session \([0-9]*\): queued$/\1/p' "$TMP/run-a.txt" | head -n1)"
+[ -n "$ID_A" ]
+"$BIN" attach --connect "$ADDR" --id "$ID_A" > "$TMP/replay-a.txt"
+[ "$(result_bits "$TMP/replay-a.txt")" = "$REF_A" ] \
+    || { echo "FAIL: attach replay diverged"; exit 1; }
+
+echo "=== status + cancel a running session ==="
+LONG="problem=$PROBLEM;mech=ef21:top3;rounds=1000000;gamma=0.001;seed=21"
+OUT="$("$BIN" submit --connect "$ADDR" --spec "$LONG")"
+echo "$OUT"
+ID="$(echo "$OUT" | sed -n 's/^session \([0-9]*\):.*/\1/p')"
+[ -n "$ID" ]
+for _ in $(seq 1 100); do
+    "$BIN" status --connect "$ADDR" --id "$ID" | grep -q 'running' && break
+    sleep 0.1
+done
+"$BIN" status --connect "$ADDR" --id "$ID" | grep -q 'running' \
+    || { echo "FAIL: long session never ran"; exit 1; }
+"$BIN" cancel --connect "$ADDR" --id "$ID" | grep -q 'cancelled' \
+    || { echo "FAIL: cancel did not report cancelled"; exit 1; }
+"$BIN" status --connect "$ADDR" --id "$ID" | grep -q 'cancelled' \
+    || { echo "FAIL: cancelled session lost its phase"; exit 1; }
+
+echo "=== rejects are structured, not dropped connections ==="
+if "$BIN" submit --connect "$ADDR" --spec "problem=logreg:a9a;mech=ef21:top3" \
+    > "$TMP/reject.txt" 2>&1; then
+    echo "FAIL: unsupported problem was accepted"; exit 1
+fi
+grep -q 'unsupported problem' "$TMP/reject.txt" \
+    || { cat "$TMP/reject.txt"; echo "FAIL: reject reason missing"; exit 1; }
+
+echo "=== SIGINT drains the daemon cleanly ==="
+kill -INT "$DAEMON_PID"
+for _ in $(seq 1 100); do
+    kill -0 "$DAEMON_PID" 2>/dev/null || break
+    sleep 0.1
+done
+if kill -0 "$DAEMON_PID" 2>/dev/null; then
+    echo "FAIL: daemon ignored SIGINT"; exit 1
+fi
+wait "$DAEMON_PID"
+grep -q 'drained and stopped' "$TMP/serve.log" \
+    || { cat "$TMP/serve.log"; echo "FAIL: no clean-drain message"; exit 1; }
+DAEMON_PID=""
+
+echo "serve loopback round-trip OK"
