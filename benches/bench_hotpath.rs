@@ -15,7 +15,7 @@
 #[path = "benchkit/mod.rs"]
 mod benchkit;
 
-use threepc::compressors::{CVec, Contractive, Ctx, CtxInfo, MechScratch, TopK};
+use threepc::compressors::{CVec, Contractive, Ctx, CtxInfo, MechScratch, TopK, WireValueCoding};
 use threepc::coordinator::{TrainConfig, TrainSession};
 use threepc::kernels::{self, ShardPool};
 use threepc::mechanisms::{parse_mechanism, recycle_update, ThreePointMap, Update};
@@ -25,6 +25,9 @@ use threepc::util::rng::Pcg64;
 fn main() {
     let mut report = benchkit::JsonReport::new("hotpath");
     println!("== hot path microbenches ==");
+    // Which chunk bodies the kernel layer dispatched to (AVX/NEON vs
+    // scalar) — the bits are identical either way, the speed is not.
+    println!("[bench] vectorized kernels active: {}", kernels::simd_active());
     let d = 25_088;
     let mut rng = Pcg64::seed(1);
     let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
@@ -63,6 +66,38 @@ fn main() {
         top.compress_into(&x, &mut ctx, &mut slot);
         std::hint::black_box(&slot);
     });
+    report.push(&s, &[]);
+
+    // Select→wire-encode: the two-step compress-then-encode the framed
+    // transport used to run per round vs the fused fast path that
+    // gathers the selected (index, value) pairs straight into the frame
+    // buffer. Byte-identical output (pinned by codec_props); the fused
+    // case measures what skipping the intermediate CVec walk buys.
+    let mut wirebuf = Vec::new();
+    let s = benchkit::measure(
+        "topk compress_into+encode_with k=251 (two-step)",
+        10,
+        benchkit::scaled(200),
+        || {
+            let mut ctx = Ctx::with_scratch(info, &mut r2, 0, &mut scratch);
+            top.compress_into(&x, &mut ctx, &mut slot);
+            wirebuf.clear();
+            slot.encode_with(WireValueCoding::RawF32, &mut wirebuf);
+            std::hint::black_box(&wirebuf);
+        },
+    );
+    report.push(&s, &[]);
+    let s = benchkit::measure(
+        "topk compress_encode_into k=251 (fused)",
+        10,
+        benchkit::scaled(200),
+        || {
+            let mut ctx = Ctx::with_scratch(info, &mut r2, 0, &mut scratch);
+            wirebuf.clear();
+            top.compress_encode_into(&x, &mut ctx, WireValueCoding::RawF32, &mut slot, &mut wirebuf);
+            std::hint::black_box(&wirebuf);
+        },
+    );
     report.push(&s, &[]);
 
     // Mechanism apply (EF21, CLAG skip and fire paths) through the

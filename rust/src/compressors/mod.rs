@@ -170,11 +170,16 @@ pub struct Ctx<'a> {
     /// loops (`None` = serial; bit-identical either way — see
     /// [`crate::kernels`]).
     shards: Shards<'a>,
+    /// Optional wire sink for the fused compress→encode fast path: a
+    /// transport attaches its frame scratch so a mechanism that opts in
+    /// can hand it to [`Contractive::compress_encode_into`] and skip
+    /// the codec's second walk over the compressed vector.
+    wire: Option<(WireValueCoding, &'a mut Vec<u8>)>,
 }
 
 impl<'a> Ctx<'a> {
     pub fn new(info: CtxInfo, rng: &'a mut Pcg64, round_seed: u64) -> Ctx<'a> {
-        Ctx { info, rng, round_seed, scratch: None, shards: None }
+        Ctx { info, rng, round_seed, scratch: None, shards: None, wire: None }
     }
 
     /// [`Ctx::new`] with a buffer pool attached — the steady-state
@@ -185,7 +190,7 @@ impl<'a> Ctx<'a> {
         round_seed: u64,
         scratch: &'a mut MechScratch,
     ) -> Ctx<'a> {
-        Ctx { info, rng, round_seed, scratch: Some(scratch), shards: None }
+        Ctx { info, rng, round_seed, scratch: Some(scratch), shards: None, wire: None }
     }
 
     /// Attach a coordinate shard pool (builder-style): mechanism and
@@ -202,6 +207,22 @@ impl<'a> Ctx<'a> {
     /// The attached shard pool handle (`None` when serial).
     pub fn shards(&self) -> Shards<'a> {
         self.shards
+    }
+
+    /// Attach a wire sink (builder-style): the transport passes its
+    /// frame scratch buffer down so a fusing mechanism can encode the
+    /// uplink payload during compression. A sink nobody consumes is
+    /// harmless — the transport falls back to the generic encoder when
+    /// the buffer comes back empty.
+    pub fn with_wire(mut self, coding: WireValueCoding, buf: &'a mut Vec<u8>) -> Ctx<'a> {
+        self.wire = Some((coding, buf));
+        self
+    }
+
+    /// Detach the wire sink, if any. Single consumer: the mechanism
+    /// that takes it owns the fused-encode decision for this call.
+    pub fn take_wire(&mut self) -> Option<(WireValueCoding, &'a mut Vec<u8>)> {
+        self.wire.take()
     }
 
     /// The round-shared RNG stream (same for every worker this round).
@@ -441,61 +462,19 @@ impl CVec {
     ///                        idx: nnz × ⌈log₂ d⌉ bits, byte-padded
     /// ```
     pub fn encode_with(&self, coding: WireValueCoding, out: &mut Vec<u8>) {
-        if coding == WireValueCoding::Natural && self.natural_codable() {
-            match self {
-                CVec::Zero { dim } => {
-                    out.push(0);
-                    out.extend_from_slice(&(*dim as u32).to_le_bytes());
-                }
-                CVec::Dense(v) => encode_dense_natural(v, out),
-                CVec::Sparse { dim, idx, val } => {
-                    if past_cap_crossover(*dim, idx.len(), 9) {
-                        // Crossover at natural value costs (9 bits):
-                        // sparsity stops paying earlier than in raw
-                        // coding, so the switch point is coding-aware.
-                        encode_dense_natural(&self.to_dense(), out);
-                        return;
-                    }
-                    out.push(4);
-                    out.extend_from_slice(&(*dim as u32).to_le_bytes());
-                    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-                    let ib = index_bits(*dim) as u32;
-                    let mut w = crate::util::bits::BitWriter::new(out);
-                    for &v in val {
-                        w.push(natural_code(v).expect("checked natural_codable") as u64, 9);
-                    }
-                    w.align();
-                    for &i in idx {
-                        w.push(i as u64, ib);
-                    }
-                }
-            }
-            return;
-        }
         match self {
             CVec::Zero { dim } => {
                 out.push(0);
                 out.extend_from_slice(&(*dim as u32).to_le_bytes());
             }
-            CVec::Dense(v) => encode_dense(v, out),
-            CVec::Sparse { dim, idx, val } => {
-                if past_cap_crossover(*dim, idx.len(), 32) {
-                    // Cap crossover: sparsity stopped paying.
-                    encode_dense(&self.to_dense(), out);
-                    return;
-                }
-                out.push(2);
-                out.extend_from_slice(&(*dim as u32).to_le_bytes());
-                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-                for v in val {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
-                let ib = index_bits(*dim) as u32;
-                let mut w = crate::util::bits::BitWriter::new(out);
-                for &i in idx {
-                    w.push(i as u64, ib);
+            CVec::Dense(v) => {
+                if coding == WireValueCoding::Natural && self.natural_codable() {
+                    encode_dense_natural(v, out);
+                } else {
+                    encode_dense(v, out);
                 }
             }
+            CVec::Sparse { dim, idx, val } => encode_sparse_frame(coding, *dim, idx, val, out),
         }
     }
 
@@ -695,6 +674,72 @@ fn ensure_unique_indices(idx: &[u32], pool: &mut MechScratch) -> anyhow::Result<
     }
 }
 
+/// Encode one sparse frame from its index/value streams. This is the
+/// single body behind both [`CVec::encode_with`]'s sparse arm and the
+/// fused [`Contractive::compress_encode_into`] fast path, so the two
+/// are byte-identical by construction. Applies the coding-aware
+/// rational-sender crossover, falling back to the dense formats when
+/// sparsity stops paying.
+fn encode_sparse_frame(
+    coding: WireValueCoding,
+    dim: usize,
+    idx: &[u32],
+    val: &[f32],
+    out: &mut Vec<u8>,
+) {
+    use crate::util::bits::BitWriter;
+    let nnz = idx.len();
+    debug_assert_eq!(nnz, val.len());
+    if coding == WireValueCoding::Natural && val.iter().all(|&v| natural_code(v).is_some()) {
+        if past_cap_crossover(dim, nnz, 9) {
+            // Crossover at natural value costs (9 bits): sparsity stops
+            // paying earlier than in raw coding, so the switch point is
+            // coding-aware.
+            encode_dense_natural(&scatter_dense(dim, idx, val), out);
+            return;
+        }
+        out.push(4);
+        out.extend_from_slice(&(dim as u32).to_le_bytes());
+        out.extend_from_slice(&(nnz as u32).to_le_bytes());
+        let ib = index_bits(dim) as u32;
+        let mut w = BitWriter::new(out);
+        for &v in val {
+            w.push(natural_code(v).expect("checked codable") as u64, 9);
+        }
+        w.align();
+        for &i in idx {
+            w.push(i as u64, ib);
+        }
+        return;
+    }
+    if past_cap_crossover(dim, nnz, 32) {
+        // Cap crossover: sparsity stopped paying.
+        encode_dense(&scatter_dense(dim, idx, val), out);
+        return;
+    }
+    out.push(2);
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    for v in val {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let ib = index_bits(dim) as u32;
+    let mut w = BitWriter::new(out);
+    for &i in idx {
+        w.push(i as u64, ib);
+    }
+}
+
+/// Materialise a sparse stream as dense — the crossover fallback of
+/// [`encode_sparse_frame`]; matches [`CVec::to_dense`] (`+=` scatter).
+fn scatter_dense(dim: usize, idx: &[u32], val: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; dim];
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] += v;
+    }
+    out
+}
+
 fn encode_dense(v: &[f32], out: &mut Vec<u8>) {
     out.push(1);
     out.extend_from_slice(&(v.len() as u32).to_le_bytes());
@@ -778,6 +823,26 @@ pub trait Contractive: Send + Sync {
         let mut out = CVec::Zero { dim: x.len() };
         self.compress_into(x, ctx, &mut out);
         out
+    }
+    /// Fused compress + wire encode: one call producing both the
+    /// compressed vector (the mechanism still needs it for its state
+    /// advance) and the exact bytes [`CVec::encode_with`] would emit
+    /// for it, appended to `wire`. The default is the generic two-step
+    /// and stays correct for every operator; Top-K overrides it to
+    /// stream the selected (index, value) pairs into the frame buffer
+    /// in the same pass that fills `out`, skipping the codec's second
+    /// walk. Overrides must keep the bytes identical to the default —
+    /// pinned by the `codec_props` property tests.
+    fn compress_encode_into(
+        &self,
+        x: &[f32],
+        ctx: &mut Ctx<'_>,
+        coding: WireValueCoding,
+        out: &mut CVec,
+        wire: &mut Vec<u8>,
+    ) {
+        self.compress_into(x, ctx, out);
+        out.encode_with(coding, wire);
     }
 }
 

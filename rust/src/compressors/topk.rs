@@ -5,7 +5,7 @@
 //! O(d) expected, no full sort — which is the compressor-throughput hot
 //! path measured in `benches/bench_hotpath.rs`.
 
-use super::{Contractive, Ctx, CtxInfo, CVec};
+use super::{encode_sparse_frame, Contractive, Ctx, CtxInfo, CVec, WireValueCoding};
 
 #[derive(Debug, Clone, Copy)]
 pub struct TopK {
@@ -83,6 +83,37 @@ impl Contractive for TopK {
         idx.truncate(k);
         let mut val = ctx.take_f32(k);
         val.extend(idx.iter().map(|&i| x[i as usize]));
+        *out = CVec::Sparse { dim: d, idx, val };
+    }
+
+    /// Fused fast path: the partitioned index prefix and the gathered
+    /// values stream straight into the wire frame via the same
+    /// [`encode_sparse_frame`] body the generic codec uses (identical
+    /// bytes by construction), while they are still hot from selection —
+    /// the codec's second walk over the sparse vector disappears.
+    fn compress_encode_into(
+        &self,
+        x: &[f32],
+        ctx: &mut Ctx<'_>,
+        coding: WireValueCoding,
+        out: &mut CVec,
+        wire: &mut Vec<u8>,
+    ) {
+        ctx.recycle_cvec(out);
+        let d = x.len();
+        let k = self.k.min(d);
+        if k == d {
+            *out = CVec::Dense(ctx.take_f32_copy(x));
+            out.encode_with(coding, wire);
+            return;
+        }
+        let mut idx = ctx.take_u32(d);
+        idx.extend(0..d as u32);
+        partition_top_k(x, &mut idx, k);
+        idx.truncate(k);
+        let mut val = ctx.take_f32(k);
+        val.extend(idx.iter().map(|&i| x[i as usize]));
+        encode_sparse_frame(coding, d, &idx, &val, wire);
         *out = CVec::Sparse { dim: d, idx, val };
     }
 }

@@ -122,6 +122,20 @@ pub fn encode_uplink_into(
     }
 }
 
+/// Assemble an uplink frame around `Increment` payload bytes the fused
+/// compress→encode path already produced (see
+/// [`Contractive::compress_encode_into`](crate::compressors::Contractive::compress_encode_into)):
+/// header + tag 1 + payload. Byte-identical to [`encode_uplink_into`]
+/// for an `Update::Increment` whose compressed vector encodes to
+/// `payload` — the payload bytes are what `CVec::encode_with` emits,
+/// by the fused path's contract.
+pub fn assemble_increment_uplink(worker_id: usize, g_err: f64, payload: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(worker_id as u32).to_le_bytes());
+    out.extend_from_slice(&g_err.to_le_bytes());
+    out.push(1);
+    out.extend_from_slice(payload);
+}
+
 fn encode_parts(parts: &[CVec], coding: WireValueCoding, out: &mut Vec<u8>) {
     assert!(parts.len() <= u8::MAX as usize, "replace decomposition too wide");
     out.push(parts.len() as u8);

@@ -142,7 +142,7 @@ impl Service {
         };
         drop(tx);
 
-        Scheduler::new(rx, Arc::clone(&shutdown), opts.fleet, pool).run();
+        Scheduler::new(rx, Arc::clone(&shutdown), opts.fleet, pool, opts.io_timeout).run();
         // The scheduler can also exit on channel disconnect; make sure
         // the accept loop (and any signal-race observer) sees the end.
         shutdown.store(true, Ordering::SeqCst);

@@ -56,6 +56,9 @@ pub(crate) struct Scheduler {
     fleet_return: Arc<FleetReturn>,
     /// Shared coordinate-sharding pool, handed to every session's link.
     pool: Option<Arc<ShardPool>>,
+    /// The daemon's per-op io timeout, handed to every session's link
+    /// (it bounds the link's readiness-drain poll waits).
+    io_timeout: Duration,
     rx: Receiver<Event>,
     shutdown: Arc<AtomicBool>,
     fleet_cap: Option<usize>,
@@ -67,6 +70,7 @@ impl Scheduler {
         shutdown: Arc<AtomicBool>,
         fleet_cap: Option<usize>,
         pool: Option<Arc<ShardPool>>,
+        io_timeout: Duration,
     ) -> Scheduler {
         Scheduler {
             registry: Registry::new(),
@@ -74,6 +78,7 @@ impl Scheduler {
             idle: Vec::new(),
             fleet_return: FleetReturn::new(),
             pool,
+            io_timeout,
             rx,
             shutdown,
             fleet_cap,
@@ -257,7 +262,8 @@ impl Scheduler {
             }
             let granted: Vec<Stream> = self.idle.drain(..n).collect();
             let sess = self.registry.sessions.get_mut(&id).expect("queued id");
-            match start_session(&sess.spec, granted, &self.pool, &self.fleet_return) {
+            match start_session(&sess.spec, granted, &self.pool, self.io_timeout, &self.fleet_return)
+            {
                 Ok(driver) => {
                     sess.driver = Some(driver);
                     sess.phase = SessionPhase::Running;
@@ -395,6 +401,7 @@ fn start_session(
     spec: &SessionSpec,
     granted: Vec<Stream>,
     pool: &Option<Arc<ShardPool>>,
+    io_timeout: Duration,
     fleet_return: &Arc<FleetReturn>,
 ) -> Result<SessionDriver<'static>, TrainResult> {
     let problem = parse_problem_spec(&spec.problem_spec).expect("validated at admission");
@@ -403,6 +410,7 @@ fn start_session(
         granted,
         spec.problem_spec.clone(),
         spec.value_coding,
+        io_timeout,
         pool.clone(),
         Arc::clone(fleet_return),
     ));

@@ -13,13 +13,18 @@
 //! `g_i^t` (exactly like a real parameter server).
 //!
 //! Per round the leader broadcasts one frame (`t`, the shared round
-//! seed, the eval flag, and the dense iterate `x^{t+1}`) and reads one
-//! reply per worker in id order: the billable uplink codec frame —
+//! seed, the eval flag, and the dense iterate `x^{t+1}`) — corked into
+//! a single vectored write per peer ([`write_frame`]) — and collects
+//! one reply per worker. On unix the collection is readiness-driven: a
+//! poll(2) loop reads each reply as it lands, so one slow worker's
+//! bytes overlap with — instead of serializing behind — everyone
+//! else's. Each reply carries the billable uplink codec frame —
 //! byte-identical to what [`Framed`](super::Framed) produces for the
 //! same worker state — plus a diagnostic sidecar (the exact local
 //! gradient for the `‖∇f‖²` metric, and the loss on eval rounds).
 //! Decoding, validation ([`validate_wire_msg`]) and the f64 folds run
-//! in the same order as `Framed`'s, so traces are bit-for-bit equal
+//! in strict worker-id order regardless of arrival order — the same
+//! order as `Framed`'s — so traces are bit-for-bit equal
 //! across `InProcess` ≡ `Framed` ≡ `Socket` (pinned by the
 //! `socket_transport` test target).
 //!
@@ -51,11 +56,13 @@ use super::worker::WorkerState;
 use super::InitPolicy;
 use crate::compressors::{MechScratch, WireValueCoding};
 use crate::kernels;
-use crate::mechanisms::{parse_mechanism, ThreePointMap};
+use crate::mechanisms::{parse_mechanism, ThreePointMap, Update};
 use crate::problems::Distributed;
 use anyhow::Context;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::io::{AsRawFd, RawFd};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
@@ -183,6 +190,26 @@ impl Stream {
             }
         }
     }
+
+    /// Toggle `O_NONBLOCK` — the readiness drain flips its peers
+    /// nonblocking for the duration of one reply collection, then
+    /// restores the blocking + per-op-timeout discipline.
+    #[cfg(unix)]
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Uds(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// The raw fd, for poll(2)-based readiness waits.
+    #[cfg(unix)]
+    pub(crate) fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            Stream::Uds(s) => s.as_raw_fd(),
+        }
+    }
 }
 
 impl Read for Stream {
@@ -201,6 +228,17 @@ impl Write for Stream {
             Stream::Tcp(s) => s.write(buf),
             #[cfg(unix)]
             Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+        // The default trait method would only write `bufs[0]`; forward
+        // to the sockets' real vectored write so a frame's length
+        // prefix and body leave in one syscall ([`write_frame`]).
+        match self {
+            Stream::Tcp(s) => s.write_vectored(bufs),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.write_vectored(bufs),
         }
     }
 
@@ -242,7 +280,12 @@ pub(crate) fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
     }
 }
 
-/// Write one length-prefixed frame (`len:u32 LE` + body).
+/// Write one length-prefixed frame (`len:u32 LE` + body), corked: the
+/// prefix and body leave in a single vectored write — one syscall and
+/// one TCP segment on the common path, where the old two-`write_all`
+/// shape could split every frame in two. Short writes finish the body
+/// with `write_all`; `Interrupted` retries. (The streams are raw fds,
+/// so there is no buffer to flush.)
 pub(crate) fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), TransportError> {
     if body.len() as u64 > MAX_FRAME_BYTES as u64 {
         return Err(TransportError::Protocol(format!(
@@ -250,9 +293,25 @@ pub(crate) fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), 
             body.len()
         )));
     }
-    s.write_all(&(body.len() as u32).to_le_bytes()).map_err(|e| io_err(ctx, e))?;
-    s.write_all(body).map_err(|e| io_err(ctx, e))?;
-    s.flush().map_err(|e| io_err(ctx, e))
+    let prefix = (body.len() as u32).to_le_bytes();
+    let total = prefix.len() + body.len();
+    let mut done = 0usize;
+    while done < prefix.len() {
+        let bufs = [IoSlice::new(&prefix[done..]), IoSlice::new(body)];
+        match s.write_vectored(&bufs) {
+            Ok(0) => {
+                let e = std::io::Error::new(std::io::ErrorKind::WriteZero, "wrote 0 bytes");
+                return Err(io_err(ctx, e));
+            }
+            Ok(n) => done += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_err(ctx, e)),
+        }
+    }
+    if done < total {
+        s.write_all(&body[done - prefix.len()..]).map_err(|e| io_err(ctx, e))?;
+    }
+    Ok(())
 }
 
 /// Read one length-prefixed frame into `buf` (reused across calls).
@@ -274,6 +333,80 @@ pub(crate) fn read_frame<'a>(
     buf.resize(len as usize, 0);
     s.read_exact(buf).map_err(|e| io_err(ctx, e))?;
     Ok(&buf[..])
+}
+
+// ---------------------------------------------------------------------
+// Readiness: a minimal poll(2) binding for the reply drain.
+// ---------------------------------------------------------------------
+
+/// Minimal poll(2) FFI for the readiness-driven reply drain. The crate
+/// links no libc wrapper, so the symbol is declared directly — the
+/// same idiom as the signal(2) binding in `main.rs`. Only `POLLIN` is
+/// requested; error/hangup conditions surface in `revents` regardless
+/// and are handled by attempting the read.
+#[cfg(unix)]
+mod readiness {
+    /// `struct pollfd` (POSIX layout).
+    #[repr(C)]
+    pub(super) struct PollFd {
+        pub(super) fd: i32,
+        pub(super) events: i16,
+        pub(super) revents: i16,
+    }
+
+    pub(super) const POLLIN: i16 = 0x001;
+
+    /// `nfds_t`: unsigned int on the BSD-descended libcs, unsigned
+    /// long on glibc/musl.
+    #[cfg(any(target_os = "macos", target_os = "ios", target_os = "freebsd"))]
+    type NFds = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "ios", target_os = "freebsd")))]
+    type NFds = std::os::raw::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: i32) -> i32;
+    }
+
+    /// Block until ≥ 1 entry is ready or `timeout_ms` expires (-1 =
+    /// wait forever). Entries with a negative fd are ignored — which is
+    /// how already-completed peers drop out of the set. Returns the
+    /// ready count (0 = timeout); EINTR retries internally.
+    pub(super) fn wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// One peer's in-flight reply during the readiness drain: the 4-byte
+/// length prefix, then the body, each read incrementally as poll(2)
+/// reports the socket readable. The body buffer persists across rounds
+/// so the steady-state drain never allocates.
+#[cfg(unix)]
+#[derive(Default)]
+struct ReplyRead {
+    buf: Vec<u8>,
+    len_buf: [u8; 4],
+    len_got: usize,
+    body_got: usize,
+    done: bool,
+}
+
+#[cfg(unix)]
+impl ReplyRead {
+    fn reset(&mut self) {
+        self.buf.clear();
+        self.len_got = 0;
+        self.body_got = 0;
+        self.done = false;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -556,7 +689,14 @@ impl Transport for Socket {
             msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
             pool: MechScratch::new(),
             down_buf: Vec::new(),
+            #[cfg(not(unix))]
             reply_buf: Vec::new(),
+            #[cfg(unix)]
+            io_timeout: self.io_timeout,
+            #[cfg(unix)]
+            reads: Vec::new(),
+            #[cfg(unix)]
+            pollfds: Vec::new(),
             bytes_up: 0,
             bytes_down: 0,
             shard_pool: None,
@@ -595,6 +735,10 @@ pub(crate) struct PreConnected {
     streams: Mutex<Vec<Stream>>,
     problem_spec: String,
     value_coding: WireValueCoding,
+    /// The daemon's per-op io timeout (zero = none), mirrored into the
+    /// link so its readiness drain waits under the same bound the
+    /// daemon configured on the streams themselves.
+    io_timeout: Duration,
     shard_pool: Option<Arc<kernels::ShardPool>>,
     return_to: Arc<FleetReturn>,
 }
@@ -604,6 +748,7 @@ impl PreConnected {
         streams: Vec<Stream>,
         problem_spec: String,
         value_coding: WireValueCoding,
+        io_timeout: Duration,
         shard_pool: Option<Arc<kernels::ShardPool>>,
         return_to: Arc<FleetReturn>,
     ) -> PreConnected {
@@ -611,6 +756,7 @@ impl PreConnected {
             streams: Mutex::new(streams),
             problem_spec,
             value_coding,
+            io_timeout,
             shard_pool,
             return_to,
         }
@@ -672,7 +818,14 @@ impl Transport for PreConnected {
             msg: WireMsg { worker_id: 0, g_err: 0.0, update: WireUpdate::Keep },
             pool: MechScratch::new(),
             down_buf: Vec::new(),
+            #[cfg(not(unix))]
             reply_buf: Vec::new(),
+            #[cfg(unix)]
+            io_timeout: self.io_timeout,
+            #[cfg(unix)]
+            reads: Vec::new(),
+            #[cfg(unix)]
+            pollfds: Vec::new(),
             bytes_up: 0,
             bytes_down: 0,
             shard_pool: self.shard_pool.clone(),
@@ -709,8 +862,20 @@ struct SocketLink {
     pool: MechScratch,
     /// Downlink frame encode scratch.
     down_buf: Vec<u8>,
-    /// Uplink frame read scratch.
+    /// Uplink frame read scratch (sequential-drain fallback).
+    #[cfg(not(unix))]
     reply_buf: Vec<u8>,
+    /// Readiness-drain state (unix): the per-op io timeout mirrored
+    /// from the transport config (zero = wait forever) bounds each
+    /// poll wait exactly as the per-read timeout bounds the sequential
+    /// drain; the per-peer incremental reads and the poll fd set are
+    /// reused across rounds.
+    #[cfg(unix)]
+    io_timeout: Duration,
+    #[cfg(unix)]
+    reads: Vec<ReplyRead>,
+    #[cfg(unix)]
+    pollfds: Vec<readiness::PollFd>,
     bytes_up: u64,
     bytes_down: u64,
     /// Present on daemon-run sessions: the daemon's shared helper
@@ -743,9 +908,10 @@ impl SocketLink {
         let t = self.round_idx;
         self.round_idx += 1;
 
-        // Broadcast the round frame to every agent, then collect one
-        // reply per agent in worker-id order — agents compute
-        // concurrently, the f64 folds stay in the id order every trace
+        // Broadcast the round frame to every agent — one vectored
+        // write (one syscall) per peer — then collect one reply per
+        // agent. Agents compute concurrently; replies are read as they
+        // land, but the f64 folds stay in the id order every trace
         // depends on.
         self.down_buf.clear();
         proto::encode_round_start(t, round_seed, eval_loss, x, &mut self.down_buf);
@@ -757,57 +923,232 @@ impl SocketLink {
         // kind tag and length prefix are transport framing).
         self.bytes_down += (proto::ROUND_PAYLOAD_BYTES + 4 * self.dim) as u64;
 
+        #[cfg(unix)]
+        self.drain_replies_ready(eval_loss, out)?;
+        #[cfg(not(unix))]
+        self.drain_replies_seq(eval_loss, out)?;
+        Ok(())
+    }
+
+    /// Decode, validate and fold one worker's reply — the shared tail
+    /// of both drains. `i` is the peer index, which is also the fold
+    /// position: the folds run in the same per-worker order as
+    /// `Framed`'s — exact gradient (metric), loss, then the update
+    /// delta — no matter when the bytes arrived.
+    fn fold_reply(
+        &mut self,
+        i: usize,
+        body: &[u8],
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
+        let wid = self.peers[i].id;
+        let reply = proto::split_round_reply(body)
+            .map_err(|e| TransportError::Protocol(format!("round reply (worker {wid}): {e:#}")))?;
+        if reply.loss.is_some() != eval_loss {
+            return Err(TransportError::Protocol(format!(
+                "round reply (worker {wid}): loss sidecar {} but eval_loss was {eval_loss}",
+                if reply.loss.is_some() { "present" } else { "absent" },
+            )));
+        }
+        if reply.grad.len() != 4 * self.dim {
+            return Err(TransportError::Protocol(format!(
+                "round reply (worker {wid}): gradient sidecar carries {} bytes (expected {})",
+                reply.grad.len(),
+                4 * self.dim
+            )));
+        }
+        let up_len = reply.upframe.len();
+        decode_uplink_into(reply.upframe, &mut self.msg, &mut self.pool)
+            .map_err(|e| TransportError::Protocol(format!("round reply (worker {wid}): {e:#}")))?;
+        validate_wire_msg(&self.msg, wid, self.dim)?;
+
+        self.grad_buf.clear();
+        for c in reply.grad.chunks_exact(4) {
+            self.grad_buf.push(f32::from_le_bytes(c.try_into().expect("4-byte chunk")));
+        }
+        kernels::fold_f64(None, &mut out.grad_sum, &self.grad_buf);
+        if let Some(l) = reply.loss {
+            out.loss_sum += l;
+        }
+        self.msg.update.fold_delta_scratch(&self.h[i], &mut out.delta_sum, &mut self.state_buf);
+        // Advance the mirror through the sender's own f32 op order.
+        self.msg.update.new_state_into(&self.h[i], &mut self.state_buf);
+        std::mem::swap(&mut self.h[i], &mut self.state_buf);
+        if self.msg.update.skipped() {
+            out.skipped += 1;
+        }
+        out.g_err_sum += self.msg.g_err;
+        // Measured billing: the codec frame that actually crossed.
+        out.bits.push((wid, 8 * up_len as u64));
+        self.bytes_up += up_len as u64;
+        Ok(())
+    }
+
+    /// Strict-order blocking drain — the non-unix fallback, and the
+    /// reference shape the readiness drain is trace-equivalent to.
+    #[cfg(not(unix))]
+    fn drain_replies_seq(
+        &mut self,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
         for i in 0..self.peers.len() {
             let wid = self.peers[i].id;
-            let body = read_frame(&mut self.peers[i].stream, &mut self.reply_buf, "round reply")
-                .map_err(|e| tag_worker(e, wid))?;
-            let reply = proto::split_round_reply(body).map_err(|e| {
-                TransportError::Protocol(format!("round reply (worker {wid}): {e:#}"))
-            })?;
-            if reply.loss.is_some() != eval_loss {
-                return Err(TransportError::Protocol(format!(
-                    "round reply (worker {wid}): loss sidecar {} but eval_loss was {eval_loss}",
-                    if reply.loss.is_some() { "present" } else { "absent" },
-                )));
-            }
-            if reply.grad.len() != 4 * self.dim {
-                return Err(TransportError::Protocol(format!(
-                    "round reply (worker {wid}): gradient sidecar carries {} bytes (expected {})",
-                    reply.grad.len(),
-                    4 * self.dim
-                )));
-            }
-            let up_len = reply.upframe.len();
-            decode_uplink_into(reply.upframe, &mut self.msg, &mut self.pool).map_err(|e| {
-                TransportError::Protocol(format!("round reply (worker {wid}): {e:#}"))
-            })?;
-            validate_wire_msg(&self.msg, wid, self.dim)?;
-
-            // Folds in the same per-worker order as Framed: exact
-            // gradient (metric), loss, then the update delta.
-            self.grad_buf.clear();
-            for c in reply.grad.chunks_exact(4) {
-                self.grad_buf.push(f32::from_le_bytes(c.try_into().expect("4-byte chunk")));
-            }
-            kernels::fold_f64(None, &mut out.grad_sum, &self.grad_buf);
-            if let Some(l) = reply.loss {
-                out.loss_sum += l;
-            }
-            self.msg
-                .update
-                .fold_delta_scratch(&self.h[i], &mut out.delta_sum, &mut self.state_buf);
-            // Advance the mirror through the sender's own f32 op order.
-            self.msg.update.new_state_into(&self.h[i], &mut self.state_buf);
-            std::mem::swap(&mut self.h[i], &mut self.state_buf);
-            if self.msg.update.skipped() {
-                out.skipped += 1;
-            }
-            out.g_err_sum += self.msg.g_err;
-            // Measured billing: the codec frame that actually crossed.
-            out.bits.push((wid, 8 * up_len as u64));
-            self.bytes_up += up_len as u64;
+            let mut buf = std::mem::take(&mut self.reply_buf);
+            let read = read_frame(&mut self.peers[i].stream, &mut buf, "round reply")
+                .map(|b| b.len())
+                .map_err(|e| tag_worker(e, wid));
+            let folded = read.and_then(|_| self.fold_reply(i, &buf, eval_loss, out));
+            self.reply_buf = buf;
+            folded?;
         }
         Ok(())
+    }
+
+    /// Readiness-driven drain: flip every peer nonblocking, poll(2)
+    /// for readable replies, read frames incrementally as bytes land,
+    /// and fold completed replies in worker-id order. A slow worker's
+    /// reply bytes overlap with everyone else's instead of serializing
+    /// the reads behind worker 0, 1, 2, …; the trace is bit-identical
+    /// to the sequential drain because fold order is by id, never by
+    /// arrival.
+    #[cfg(unix)]
+    fn drain_replies_ready(
+        &mut self,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
+        for p in &self.peers {
+            p.stream
+                .set_nonblocking(true)
+                .map_err(|e| tag_worker(io_err("round reply (set_nonblocking)", e), p.id))?;
+        }
+        let drained = self.drain_ready_inner(eval_loss, out);
+        // Restore the blocking + per-op-timeout discipline whatever
+        // happened; a restore failure only matters if the drain itself
+        // succeeded.
+        let mut restore = Ok(());
+        for p in &self.peers {
+            if let Err(e) = p.stream.set_nonblocking(false) {
+                restore = Err(tag_worker(io_err("round reply (restore blocking)", e), p.id));
+            }
+        }
+        drained.and(restore)
+    }
+
+    #[cfg(unix)]
+    fn drain_ready_inner(
+        &mut self,
+        eval_loss: bool,
+        out: &mut RoundAggregate,
+    ) -> Result<(), TransportError> {
+        let n = self.peers.len();
+        if self.reads.len() < n {
+            self.reads.resize_with(n, ReplyRead::default);
+        }
+        for r in &mut self.reads[..n] {
+            r.reset();
+        }
+        // Each poll wait is bounded by the per-op io timeout, matching
+        // the sequential drain's per-read bound: any readiness progress
+        // restarts the clock, a full timeout with zero readiness fails.
+        let timeout_ms: i32 = if self.io_timeout.is_zero() {
+            -1
+        } else {
+            self.io_timeout.as_millis().clamp(1, i32::MAX as u128) as i32
+        };
+        let mut next_fold = 0;
+        while next_fold < n {
+            // Completed peers park with fd = -1 (poll ignores them).
+            self.pollfds.clear();
+            for (i, p) in self.peers.iter().enumerate() {
+                let fd = if self.reads[i].done { -1 } else { p.stream.as_raw_fd() };
+                self.pollfds.push(readiness::PollFd {
+                    fd,
+                    events: readiness::POLLIN,
+                    revents: 0,
+                });
+            }
+            let ready = readiness::wait(&mut self.pollfds, timeout_ms)
+                .map_err(|e| io_err("round reply (poll)", e))?;
+            if ready == 0 {
+                return Err(TransportError::Io(
+                    "round reply (poll): timed out waiting for worker replies".into(),
+                ));
+            }
+            for i in 0..n {
+                if !self.reads[i].done && self.pollfds[i].revents != 0 {
+                    self.pump_peer(i)?;
+                }
+            }
+            // Fold every reply whose turn has come, in id order.
+            while next_fold < n && self.reads[next_fold].done {
+                let body = std::mem::take(&mut self.reads[next_fold].buf);
+                let folded = self.fold_reply(next_fold, &body, eval_loss, out);
+                self.reads[next_fold].buf = body;
+                folded?;
+                next_fold += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Pump one readable peer: advance its length-prefix/body read as
+    /// far as the socket allows without blocking. Completing the frame
+    /// sets `done`; `WouldBlock` just returns (poll will call back).
+    #[cfg(unix)]
+    fn pump_peer(&mut self, i: usize) -> Result<(), TransportError> {
+        fn eof() -> std::io::Error {
+            std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "connection closed mid-frame")
+        }
+        let wid = self.peers[i].id;
+        let stream = &mut self.peers[i].stream;
+        let r = &mut self.reads[i];
+        loop {
+            if r.len_got < r.len_buf.len() {
+                match stream.read(&mut r.len_buf[r.len_got..]) {
+                    Ok(0) => return Err(tag_worker(io_err("round reply", eof()), wid)),
+                    Ok(k) => {
+                        r.len_got += k;
+                        if r.len_got == r.len_buf.len() {
+                            let len = u32::from_le_bytes(r.len_buf);
+                            if len > MAX_FRAME_BYTES {
+                                return Err(TransportError::Protocol(format!(
+                                    "round reply (worker {wid}): frame length {len} exceeds \
+                                     the {MAX_FRAME_BYTES}-byte cap"
+                                )));
+                            }
+                            r.buf.clear();
+                            r.buf.resize(len as usize, 0);
+                            r.body_got = 0;
+                            if len == 0 {
+                                r.done = true;
+                                return Ok(());
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(tag_worker(io_err("round reply", e), wid)),
+                }
+            } else {
+                let got = r.body_got;
+                match stream.read(&mut r.buf[got..]) {
+                    Ok(0) => return Err(tag_worker(io_err("round reply", eof()), wid)),
+                    Ok(k) => {
+                        r.body_got += k;
+                        if r.body_got == r.buf.len() {
+                            r.done = true;
+                            return Ok(());
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(tag_worker(io_err("round reply", e), wid)),
+                }
+            }
+        }
     }
 }
 
@@ -908,6 +1249,12 @@ pub struct AgentConfig {
     pub retry_backoff: Duration,
     /// Per-operation read/write timeout once connected (zero = none).
     pub io_timeout: Duration,
+    /// Diagnostics knob: delay every round reply by this much — a
+    /// deliberately slow worker, for exercising the leader's
+    /// readiness-driven reply drain (which must produce bit-identical
+    /// traces no matter how late a reply lands). Zero = reply
+    /// immediately.
+    pub reply_delay: Duration,
 }
 
 impl Default for AgentConfig {
@@ -916,6 +1263,7 @@ impl Default for AgentConfig {
             connect_attempts: 20,
             retry_backoff: Duration::from_millis(100),
             io_timeout: Duration::from_secs(60),
+            reply_delay: Duration::ZERO,
         }
     }
 }
@@ -1021,7 +1369,7 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
         return Ok(());
     };
     loop {
-        match serve_worker_session(&mut stream, &hello)? {
+        match serve_worker_session(&mut stream, &hello, cfg.reply_delay)? {
             AgentFlow::Shutdown => return Ok(()),
             AgentFlow::SessionEnd => {
                 stream
@@ -1048,7 +1396,12 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
 
 /// Serve one session on an established, hello'd connection (the round
 /// loop the solo agent and the daemon-parked agent share).
-fn serve_worker_session(stream: &mut Stream, hello: &SessionHello) -> anyhow::Result<AgentFlow> {
+/// `reply_delay` is [`AgentConfig::reply_delay`].
+fn serve_worker_session(
+    stream: &mut Stream,
+    hello: &SessionHello,
+    reply_delay: Duration,
+) -> anyhow::Result<AgentFlow> {
     let d = hello.dim as usize;
     let n = hello.n_workers as usize;
     let wid = hello.worker_id as usize;
@@ -1072,6 +1425,7 @@ fn serve_worker_session(stream: &mut Stream, hello: &SessionHello) -> anyhow::Re
 
     let mut buf = Vec::new();
     let mut no_acc: Vec<f64> = Vec::new();
+    let mut wire = Vec::new();
     let mut up = Vec::new();
     let mut reply = Vec::new();
     loop {
@@ -1084,18 +1438,41 @@ fn serve_worker_session(stream: &mut Stream, hello: &SessionHello) -> anyhow::Re
                     "round iterate has {} coords (session dimension {d})",
                     x.len()
                 );
-                let o = worker.round_acc(&x, round_seed, &mut no_acc);
-                up.clear();
-                encode_uplink_into(
-                    wid,
-                    o.g_err,
-                    worker.last_update(),
+                // Fused path: a fusing mechanism (EF21 over Top-K)
+                // encodes its Increment's frame bytes into `wire`
+                // during compression — identical bytes to the generic
+                // encoder; anything else leaves `wire` empty and falls
+                // back below.
+                wire.clear();
+                let o = worker.round_acc_wire(
+                    &x,
+                    round_seed,
+                    &mut no_acc,
+                    None,
                     hello.value_coding,
-                    &mut up,
+                    &mut wire,
                 );
+                up.clear();
+                if let (false, Update::Increment { inc, .. }) =
+                    (wire.is_empty(), worker.last_update())
+                {
+                    debug_assert_eq!(wire.len(), inc.encoded_len_with(hello.value_coding));
+                    proto::assemble_increment_uplink(wid, o.g_err, &wire, &mut up);
+                } else {
+                    encode_uplink_into(
+                        wid,
+                        o.g_err,
+                        worker.last_update(),
+                        hello.value_coding,
+                        &mut up,
+                    );
+                }
                 let loss = if eval_loss { Some(worker.loss(&x)) } else { None };
                 reply.clear();
                 proto::encode_round_reply(&up, worker.true_grad(), loss, &mut reply);
+                if !reply_delay.is_zero() {
+                    std::thread::sleep(reply_delay);
+                }
                 write_frame(stream, &reply, "round reply").map_err(|e| anyhow::anyhow!("{e}"))?;
             }
             DownlinkFrame::Switch(ms) => {

@@ -22,13 +22,14 @@
 //!   accounting.
 
 use super::protocol::{
-    decode_mech_switch, decode_uplink_into, encode_uplink_into, WireMsg, WireUpdate,
+    assemble_increment_uplink, decode_mech_switch, decode_uplink_into, encode_uplink_into, WireMsg,
+    WireUpdate,
 };
 use super::session::TrainConfig;
 use super::worker::WorkerState;
 use crate::compressors::{MechScratch, WireValueCoding};
 use crate::kernels::{self, ShardPool, Shards};
-use crate::mechanisms::ThreePointMap;
+use crate::mechanisms::{ThreePointMap, Update};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -576,6 +577,7 @@ impl Transport for Framed {
             bytes_down: 0,
             coding: self.value_coding,
             frame_buf: Vec::new(),
+            wire_scratch: Vec::new(),
             h_buf: Vec::new(),
             state_buf: Vec::new(),
             no_acc: Vec::new(),
@@ -594,6 +596,11 @@ struct FramedLink {
     /// Persistent per-link encode scratch (cleared per frame, never
     /// reallocated at steady state).
     frame_buf: Vec<u8>,
+    /// Fused-encode landing buffer: `round_acc_wire` lets the
+    /// compressor write the `Increment` payload bytes here during
+    /// compression; empty after the round means the mechanism didn't
+    /// fuse and the generic encoder runs instead.
+    wire_scratch: Vec<u8>,
     /// The leader's mirror of `g_i^t` for the worker currently being
     /// decoded — a reused buffer, not a per-round `to_vec` snapshot.
     h_buf: Vec<f32>,
@@ -622,13 +629,38 @@ impl TransportLink for FramedLink {
             // mirror buffer *before* the worker advances).
             self.h_buf.clear();
             self.h_buf.extend_from_slice(w.g());
-            let o = w.round_acc(x, round_seed, &mut self.no_acc);
+            self.wire_scratch.clear();
+            let o = w.round_acc_wire(
+                x,
+                round_seed,
+                &mut self.no_acc,
+                None,
+                self.coding,
+                &mut self.wire_scratch,
+            );
             kernels::fold_f64(None, &mut out.grad_sum, w.true_grad());
             if eval_loss {
                 out.loss_sum += w.loss(x);
             }
             self.frame_buf.clear();
-            encode_uplink_into(w.id, o.g_err, w.last_update(), self.coding, &mut self.frame_buf);
+            if let (false, Update::Increment { inc, .. }) =
+                (self.wire_scratch.is_empty(), w.last_update())
+            {
+                // Fused path: the compressor already streamed the
+                // payload; wrap it in the uplink header. Identical
+                // bytes to the generic encoder (codec_props pins the
+                // payload; the length check pins the framing).
+                debug_assert_eq!(self.wire_scratch.len(), inc.encoded_len_with(self.coding));
+                assemble_increment_uplink(w.id, o.g_err, &self.wire_scratch, &mut self.frame_buf);
+            } else {
+                encode_uplink_into(
+                    w.id,
+                    o.g_err,
+                    w.last_update(),
+                    self.coding,
+                    &mut self.frame_buf,
+                );
+            }
             self.bytes_up += self.frame_buf.len() as u64;
             decode_uplink_into(&self.frame_buf, &mut self.msg, &mut self.pool).map_err(|e| {
                 TransportError::Protocol(format!(

@@ -4,7 +4,7 @@
 
 use super::protocol::UplinkMsg;
 use super::InitPolicy;
-use crate::compressors::{Ctx, CtxInfo};
+use crate::compressors::{Ctx, CtxInfo, WireValueCoding};
 use crate::kernels::Shards;
 use crate::mechanisms::{update_bits, MechWorker, ThreePointMap, Update};
 use crate::problems::LocalProblem;
@@ -138,6 +138,33 @@ impl WorkerState {
         self.problem.grad_sh(x_new, &mut self.grad_buf, sh);
         let mut ctx = Ctx::new(self.info, &mut self.rng, round_seed).sharded(sh);
         let g_err = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
+        self.outcome(g_err)
+    }
+
+    /// [`Self::round_acc_sh`] with a wire sink attached: a fusing
+    /// mechanism (EF21 over Top-K) encodes its `Increment` payload into
+    /// `wire` during compression — exactly the bytes
+    /// `CVec::encode_with` would emit. A mechanism that doesn't fuse
+    /// leaves `wire` untouched; the transport checks and falls back to
+    /// the generic encoder, so the update semantics and traces are
+    /// identical either way.
+    pub fn round_acc_wire(
+        &mut self,
+        x_new: &[f32],
+        round_seed: u64,
+        delta_acc: &mut Vec<f64>,
+        sh: Shards<'_>,
+        coding: WireValueCoding,
+        wire: &mut Vec<u8>,
+    ) -> RoundOutcome {
+        self.problem.grad_sh(x_new, &mut self.grad_buf, sh);
+        let mut ctx =
+            Ctx::new(self.info, &mut self.rng, round_seed).sharded(sh).with_wire(coding, wire);
+        let g_err = self.mech.round_acc(&self.grad_buf, &mut ctx, delta_acc);
+        self.outcome(g_err)
+    }
+
+    fn outcome(&self, g_err: f64) -> RoundOutcome {
         let update = self.mech.last_update();
         RoundOutcome {
             worker_id: self.id,

@@ -27,11 +27,28 @@
 //! straight `for` fold over one f64 accumulator is a serial dependency
 //! chain the compiler must not reassociate, while eight independent
 //! lanes vectorize/pipeline and still have one fixed combine order.
+//!
+//! # Explicit vectorization
+//!
+//! The [`simd`] module maps the lane stripes onto real vector registers
+//! (`std::arch`, runtime-detected, `THREEPC_SIMD=off` to disable) with
+//! op-for-op identical IEEE arithmetic, so serial ≡ sharded ≡
+//! vectorized bit-for-bit. The scalar chunk bodies stay the source of
+//! truth and are exported unchanged under [`reference`] for
+//! equivalence testing. See PERF.md § "Vectorization contract".
 
 pub mod dense;
 pub mod pool;
+mod simd;
 
 pub use pool::ShardPool;
+
+/// Whether the explicit vector path is active for this process (feature
+/// detection passed and `THREEPC_SIMD` does not force scalar). Exposed
+/// so benches and tests can report which path they measured.
+pub fn simd_active() -> bool {
+    simd::on()
+}
 
 use std::cell::RefCell;
 
@@ -207,11 +224,21 @@ macro_rules! chunk_reduce1 {
     };
 }
 
-chunk_reduce1!(chunk_sqnorm, f32, |v: f32| {
+chunk_reduce1!(chunk_sqnorm_scalar, f32, |v: f32| {
     let v = v as f64;
     v * v
 });
 chunk_reduce1!(chunk_asum, f32, |v: f32| v.abs() as f64);
+
+/// Dispatching chunk reducer: vector path when active, scalar body
+/// otherwise — same bits either way (see [`simd`]).
+#[inline]
+fn chunk_sqnorm(x: &[f32]) -> f64 {
+    match simd::sqnorm(x) {
+        Some(v) => v,
+        None => chunk_sqnorm_scalar(x),
+    }
+}
 
 macro_rules! chunk_reduce2 {
     ($name:ident, $map:expr) => {
@@ -235,11 +262,27 @@ macro_rules! chunk_reduce2 {
     };
 }
 
-chunk_reduce2!(chunk_dot, |a: f32, b: f32| a as f64 * b as f64);
-chunk_reduce2!(chunk_dist_sq, |a: f32, b: f32| {
+chunk_reduce2!(chunk_dot_scalar, |a: f32, b: f32| a as f64 * b as f64);
+chunk_reduce2!(chunk_dist_sq_scalar, |a: f32, b: f32| {
     let d = a as f64 - b as f64;
     d * d
 });
+
+#[inline]
+fn chunk_dot(x: &[f32], y: &[f32]) -> f64 {
+    match simd::dot(x, y) {
+        Some(v) => v,
+        None => chunk_dot_scalar(x, y),
+    }
+}
+
+#[inline]
+fn chunk_dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    match simd::dist_sq(x, y) {
+        Some(v) => v,
+        None => chunk_dist_sq_scalar(x, y),
+    }
+}
 
 #[inline]
 fn chunk_sqnorm_scaled_f64(v: &[f64], scale: f64) -> f64 {
@@ -302,15 +345,55 @@ pub fn sqnorm_scaled_f64(sh: Shards<'_>, v: &[f64], scale: f64) -> f64 {
 
 // ---------------------------------------------------------------------
 // Elementwise kernels (disjoint chunk writes; sharding never changes
-// the per-coordinate arithmetic).
+// the per-coordinate arithmetic). Scalar chunk bodies live in their own
+// fns so the vector path and the `reference` mirrors share one source
+// of truth for the arithmetic.
+
+#[inline]
+fn chunk_axpy_scalar(a: f32, xc: &[f32], yc: &mut [f32]) {
+    for (yi, &xi) in yc.iter_mut().zip(xc) {
+        *yi += a * xi;
+    }
+}
+
+#[inline]
+fn chunk_diff_scalar(xc: &[f32], yc: &[f32], oc: &mut [f32]) {
+    let n = oc.len();
+    for i in 0..n {
+        oc[i] = xc[i] - yc[i];
+    }
+}
+
+#[inline]
+fn chunk_fold_f64_scalar(ac: &mut [f64], xc: &[f32]) {
+    for (a, &v) in ac.iter_mut().zip(xc) {
+        *a += v as f64;
+    }
+}
+
+#[inline]
+fn chunk_fold_delta_f64_scalar(ac: &mut [f64], nc: &[f32], oc: &[f32]) {
+    let n = ac.len();
+    for i in 0..n {
+        ac[i] += nc[i] as f64 - oc[i] as f64;
+    }
+}
+
+#[inline]
+fn chunk_scaled_to_f32_scalar(ac: &[f64], factor: f64, oc: &mut [f32]) {
+    for (o, &a) in oc.iter_mut().zip(ac) {
+        *o = (a * factor) as f32;
+    }
+}
 
 /// `y += a·x`.
 #[inline]
 pub fn axpy(sh: Shards<'_>, a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for_each_chunk_mut(sh, y, &|s, yc| {
-        for (yi, &xi) in yc.iter_mut().zip(&x[s..s + yc.len()]) {
-            *yi += a * xi;
+        let xc = &x[s..s + yc.len()];
+        if !simd::axpy(a, xc, yc) {
+            chunk_axpy_scalar(a, xc, yc);
         }
     });
 }
@@ -323,8 +406,8 @@ pub fn diff(sh: Shards<'_>, x: &[f32], y: &[f32], out: &mut [f32]) {
     for_each_chunk_mut(sh, out, &|s, oc| {
         let n = oc.len();
         let (xc, yc) = (&x[s..s + n], &y[s..s + n]);
-        for i in 0..n {
-            oc[i] = xc[i] - yc[i];
+        if !simd::diff(xc, yc, oc) {
+            chunk_diff_scalar(xc, yc, oc);
         }
     });
 }
@@ -364,8 +447,9 @@ pub fn add_assign(sh: Shards<'_>, x: &[f32], out: &mut [f32]) {
 pub fn fold_f64(sh: Shards<'_>, acc: &mut [f64], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     for_each_chunk_mut(sh, acc, &|s, ac| {
-        for (a, &v) in ac.iter_mut().zip(&x[s..s + ac.len()]) {
-            *a += v as f64;
+        let xc = &x[s..s + ac.len()];
+        if !simd::fold_f64(ac, xc) {
+            chunk_fold_f64_scalar(ac, xc);
         }
     });
 }
@@ -379,8 +463,8 @@ pub fn fold_delta_f64(sh: Shards<'_>, acc: &mut [f64], new: &[f32], old: &[f32])
     for_each_chunk_mut(sh, acc, &|s, ac| {
         let n = ac.len();
         let (nc, oc) = (&new[s..s + n], &old[s..s + n]);
-        for i in 0..n {
-            ac[i] += nc[i] as f64 - oc[i] as f64;
+        if !simd::fold_delta_f64(ac, nc, oc) {
+            chunk_fold_delta_f64_scalar(ac, nc, oc);
         }
     });
 }
@@ -412,10 +496,85 @@ pub fn fill_f64(sh: Shards<'_>, v: &mut [f64], val: f64) {
 pub fn scaled_to_f32(sh: Shards<'_>, acc: &[f64], factor: f64, out: &mut [f32]) {
     debug_assert_eq!(acc.len(), out.len());
     for_each_chunk_mut(sh, out, &|s, oc| {
-        for (o, &a) in oc.iter_mut().zip(&acc[s..s + oc.len()]) {
-            *o = (a * factor) as f32;
+        let ac = &acc[s..s + oc.len()];
+        if !simd::scaled_to_f32(ac, factor, oc) {
+            chunk_scaled_to_f32_scalar(ac, factor, oc);
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Reference mirrors.
+
+/// Always-scalar mirrors of every vectorized kernel, built from the
+/// same chunk drivers and the same scalar chunk bodies the dispatching
+/// kernels fall back to. The `kernels` test target pins the public
+/// kernels bit-identical to these for chunk-straddling sizes, which —
+/// combined with the serial ≡ sharded contract — proves the vector
+/// path is trace-invisible.
+pub mod reference {
+    use super::*;
+
+    /// Scalar `‖x‖²`.
+    pub fn sqnorm(x: &[f32]) -> f64 {
+        reduce_chunked(None, x.len(), &|s, e| chunk_sqnorm_scalar(&x[s..e]))
+    }
+
+    /// Scalar `‖x − y‖²`.
+    pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        reduce_chunked(None, x.len(), &|s, e| chunk_dist_sq_scalar(&x[s..e], &y[s..e]))
+    }
+
+    /// Scalar dot product.
+    pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        reduce_chunked(None, x.len(), &|s, e| chunk_dot_scalar(&x[s..e], &y[s..e]))
+    }
+
+    /// Scalar `y += a·x`.
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for_each_chunk_mut(None, y, &|s, yc| {
+            chunk_axpy_scalar(a, &x[s..s + yc.len()], yc);
+        });
+    }
+
+    /// Scalar `out = x − y`.
+    pub fn diff(x: &[f32], y: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        for_each_chunk_mut(None, out, &|s, oc| {
+            let n = oc.len();
+            chunk_diff_scalar(&x[s..s + n], &y[s..s + n], oc);
+        });
+    }
+
+    /// Scalar `acc += x`.
+    pub fn fold_f64(acc: &mut [f64], x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        for_each_chunk_mut(None, acc, &|s, ac| {
+            chunk_fold_f64_scalar(ac, &x[s..s + ac.len()]);
+        });
+    }
+
+    /// Scalar `acc += new − old`.
+    pub fn fold_delta_f64(acc: &mut [f64], new: &[f32], old: &[f32]) {
+        debug_assert_eq!(acc.len(), new.len());
+        debug_assert_eq!(acc.len(), old.len());
+        for_each_chunk_mut(None, acc, &|s, ac| {
+            let n = ac.len();
+            chunk_fold_delta_f64_scalar(ac, &new[s..s + n], &old[s..s + n]);
+        });
+    }
+
+    /// Scalar `out = (acc · factor) as f32`.
+    pub fn scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]) {
+        debug_assert_eq!(acc.len(), out.len());
+        for_each_chunk_mut(None, out, &|s, oc| {
+            chunk_scaled_to_f32_scalar(&acc[s..s + oc.len()], factor, oc);
+        });
+    }
 }
 
 #[cfg(test)]

@@ -11,6 +11,12 @@
 //! fixed-chunk accumulation contract). Which thread computed a chunk is
 //! therefore unobservable in the output bits.
 //!
+//! Sharding composes with the vectorized chunk bodies (the private
+//! `simd` sibling module): a helper thread executing a chunk runs the same
+//! SIMD (or scalar) body the serial path would, and the contract's
+//! LANES-striped accumulators make serial ≡ sharded ≡ vectorized
+//! bit-for-bit.
+//!
 //! Dispatch is a try-lock ([`ShardPool::try_run`]): if the pool is busy
 //! serving another caller the new caller simply runs its loop serially,
 //! which by the contract produces the same bits. No caller ever blocks

@@ -1,0 +1,547 @@
+//! Explicit vector lanes under the fixed-chunk contract.
+//!
+//! The chunk reducers in [`super`] already stripe their f64
+//! accumulation across [`LANES`](super::LANES) independent lanes with a
+//! fixed combine order — exactly the layout a 256-bit (or 2×128-bit)
+//! vector unit wants. This module maps those stripes onto real vector
+//! registers with `std::arch` intrinsics, behind runtime feature
+//! detection, **without changing a single bit of any result**:
+//!
+//! * every vector op is the same IEEE-754 operation, in the same
+//!   per-lane order, as the scalar chunk body it replaces (multiply
+//!   then add as two roundings — never an FMA, which rounds once);
+//! * f32 → f64 widening is exact, and f64 → f32 narrowing
+//!   (`vcvtpd2ps` / `vcvt_f32_f64`) rounds to nearest-even, which is
+//!   Rust's `as f32` semantics;
+//! * remainders (< one vector block) run the scalar body into the same
+//!   lane slots the scalar path uses, and the final lane fold is the
+//!   shared [`lanes_fold`](super::lanes_fold) either way.
+//!
+//! Dispatch: [`on`] resolves once per process — `THREEPC_SIMD` set to
+//! `off`/`0`/`scalar` forces the scalar bodies (the CI matrix runs the
+//! kernel and allocation suites both ways); otherwise x86_64 requires
+//! AVX at runtime (`is_x86_feature_detected!`), aarch64 always
+//! qualifies (NEON is baseline), and every other architecture stays
+//! scalar. The wrappers return `None`/`false` when disabled so the
+//! callers in [`super`] fall through to the scalar chunk bodies — which
+//! remain the single source of truth for the arithmetic and are
+//! re-exported untouched as [`super::reference`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// 0 = unresolved, 1 = scalar, 2 = vector.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the vector path is active for this process (cached after the
+/// first call; the one-time `THREEPC_SIMD` read happens well before any
+/// steady-state round, so the `alloc_steady` envelope is unaffected).
+#[inline]
+pub(super) fn on() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let enabled = resolve();
+            MODE.store(if enabled { 2 } else { 1 }, Ordering::Relaxed);
+            enabled
+        }
+    }
+}
+
+fn resolve() -> bool {
+    if matches!(
+        std::env::var("THREEPC_SIMD").as_deref(),
+        Ok("off") | Ok("0") | Ok("scalar")
+    ) {
+        return false;
+    }
+    arch_available()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn arch_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn arch_available() -> bool {
+    true
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn arch_available() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// Dispatch wrappers: reductions answer `Some(partial)` when the vector
+// path ran, elementwise kernels answer `true`. `None`/`false` means the
+// caller must run the scalar chunk body. The `unsafe` blocks are sound
+// because `on()` verified the required feature at runtime.
+
+macro_rules! reduce_wrapper {
+    ($name:ident($($arg:ident: $ty:ty),+)) => {
+        #[inline]
+        pub(super) fn $name($($arg: $ty),+) -> Option<f64> {
+            if !on() {
+                return None;
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                Some(unsafe { x86::$name($($arg),+) })
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                Some(unsafe { neon::$name($($arg),+) })
+            }
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            {
+                $(let _ = $arg;)+
+                None
+            }
+        }
+    };
+}
+
+macro_rules! elementwise_wrapper {
+    ($name:ident($($arg:ident: $ty:ty),+)) => {
+        #[inline]
+        pub(super) fn $name($($arg: $ty),+) -> bool {
+            if !on() {
+                return false;
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                unsafe { x86::$name($($arg),+) };
+                true
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                unsafe { neon::$name($($arg),+) };
+                true
+            }
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            {
+                $(let _ = $arg;)+
+                false
+            }
+        }
+    };
+}
+
+reduce_wrapper!(sqnorm(x: &[f32]));
+reduce_wrapper!(dot(x: &[f32], y: &[f32]));
+reduce_wrapper!(dist_sq(x: &[f32], y: &[f32]));
+elementwise_wrapper!(diff(x: &[f32], y: &[f32], out: &mut [f32]));
+elementwise_wrapper!(axpy(a: f32, x: &[f32], y: &mut [f32]));
+elementwise_wrapper!(fold_f64(acc: &mut [f64], x: &[f32]));
+elementwise_wrapper!(fold_delta_f64(acc: &mut [f64], new: &[f32], old: &[f32]));
+elementwise_wrapper!(scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]));
+
+// ---------------------------------------------------------------------
+// x86_64 / AVX: the 8 f64 lane stripes live in two 4-wide __m256d
+// accumulators (lanes 0–3 and 4–7, matching the scalar slot order when
+// spilled). No FMA anywhere — `mul` then `add` keeps the scalar path's
+// two-rounding semantics.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{lanes_fold, LANES};
+    use std::arch::x86_64::*;
+
+    /// Spill the two accumulator registers into the scalar lane slots.
+    #[inline]
+    unsafe fn spill(lo: __m256d, hi: __m256d) -> [f64; LANES] {
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), hi);
+        acc
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn sqnorm(x: &[f32]) -> f64 {
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut blocks = x.chunks_exact(LANES);
+        for blk in blocks.by_ref() {
+            let p = blk.as_ptr();
+            let v0 = _mm256_cvtps_pd(_mm_loadu_ps(p));
+            let v1 = _mm256_cvtps_pd(_mm_loadu_ps(p.add(4)));
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(v0, v0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(v1, v1));
+        }
+        let mut acc = spill(lo, hi);
+        for (l, &v) in blocks.remainder().iter().enumerate() {
+            let v = v as f64;
+            acc[l] += v * v;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn dot(x: &[f32], y: &[f32]) -> f64 {
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut xb = x.chunks_exact(LANES);
+        let mut yb = y.chunks_exact(LANES);
+        for (bx, by) in xb.by_ref().zip(yb.by_ref()) {
+            let (px, py) = (bx.as_ptr(), by.as_ptr());
+            let x0 = _mm256_cvtps_pd(_mm_loadu_ps(px));
+            let y0 = _mm256_cvtps_pd(_mm_loadu_ps(py));
+            let x1 = _mm256_cvtps_pd(_mm_loadu_ps(px.add(4)));
+            let y1 = _mm256_cvtps_pd(_mm_loadu_ps(py.add(4)));
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(x0, y0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(x1, y1));
+        }
+        let mut acc = spill(lo, hi);
+        for (l, (&a, &b)) in xb.remainder().iter().zip(yb.remainder()).enumerate() {
+            acc[l] += a as f64 * b as f64;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut xb = x.chunks_exact(LANES);
+        let mut yb = y.chunks_exact(LANES);
+        for (bx, by) in xb.by_ref().zip(yb.by_ref()) {
+            let (px, py) = (bx.as_ptr(), by.as_ptr());
+            let d0 = _mm256_sub_pd(
+                _mm256_cvtps_pd(_mm_loadu_ps(px)),
+                _mm256_cvtps_pd(_mm_loadu_ps(py)),
+            );
+            let d1 = _mm256_sub_pd(
+                _mm256_cvtps_pd(_mm_loadu_ps(px.add(4))),
+                _mm256_cvtps_pd(_mm_loadu_ps(py.add(4))),
+            );
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(d0, d0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(d1, d1));
+        }
+        let mut acc = spill(lo, hi);
+        for (l, (&a, &b)) in xb.remainder().iter().zip(yb.remainder()).enumerate() {
+            let d = a as f64 - b as f64;
+            acc[l] += d * d;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support; slices must have equal
+    /// lengths.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn diff(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let n8 = n - n % 8;
+        let (px, py, po) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < n8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(py.add(i)));
+            _mm256_storeu_ps(po.add(i), d);
+            i += 8;
+        }
+        for j in n8..n {
+            out[j] = x[j] - y[j];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support; slices must have equal
+    /// lengths.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let av = _mm256_set1_ps(a);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let mut i = 0;
+        while i < n8 {
+            let t = _mm256_add_ps(
+                _mm256_loadu_ps(py.add(i)),
+                _mm256_mul_ps(av, _mm256_loadu_ps(px.add(i))),
+            );
+            _mm256_storeu_ps(py.add(i), t);
+            i += 8;
+        }
+        for j in n8..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support; slices must have equal
+    /// lengths.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fold_f64(acc: &mut [f64], x: &[f32]) {
+        let n = acc.len();
+        let n4 = n - n % 4;
+        let (pa, px) = (acc.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(px.add(i)));
+            let a = _mm256_loadu_pd(pa.add(i));
+            _mm256_storeu_pd(pa.add(i), _mm256_add_pd(a, v));
+            i += 4;
+        }
+        for j in n4..n {
+            acc[j] += x[j] as f64;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support; slices must have equal
+    /// lengths.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fold_delta_f64(acc: &mut [f64], new: &[f32], old: &[f32]) {
+        let n = acc.len();
+        let n4 = n - n % 4;
+        let (pa, pn, po) = (acc.as_mut_ptr(), new.as_ptr(), old.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let d = _mm256_sub_pd(
+                _mm256_cvtps_pd(_mm_loadu_ps(pn.add(i))),
+                _mm256_cvtps_pd(_mm_loadu_ps(po.add(i))),
+            );
+            let a = _mm256_loadu_pd(pa.add(i));
+            _mm256_storeu_pd(pa.add(i), _mm256_add_pd(a, d));
+            i += 4;
+        }
+        for j in n4..n {
+            acc[j] += new[j] as f64 - old[j] as f64;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support; slices must have equal
+    /// lengths.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]) {
+        let n = out.len();
+        let n4 = n - n % 4;
+        let fv = _mm256_set1_pd(factor);
+        let (pa, po) = (acc.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < n4 {
+            // vcvtpd2ps rounds per MXCSR (nearest-even in Rust's default
+            // FP environment) — identical to the scalar `as f32`.
+            let v = _mm256_cvtpd_ps(_mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), fv));
+            _mm_storeu_ps(po.add(i), v);
+            i += 4;
+        }
+        for j in n4..n {
+            out[j] = (acc[j] * factor) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 / NEON: the 8 lane stripes live in four 2-wide float64x2_t
+// accumulators (lanes 0–1, 2–3, 4–5, 6–7). `vmulq`/`vaddq` only — the
+// fusing `vfmaq_f64` would change the rounding.
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::{lanes_fold, LANES};
+    use std::arch::aarch64::*;
+
+    /// Spill the four accumulator registers into the scalar lane slots.
+    #[inline]
+    unsafe fn spill(
+        a01: float64x2_t,
+        a23: float64x2_t,
+        a45: float64x2_t,
+        a67: float64x2_t,
+    ) -> [f64; LANES] {
+        let mut acc = [0.0f64; LANES];
+        vst1q_f64(acc.as_mut_ptr(), a01);
+        vst1q_f64(acc.as_mut_ptr().add(2), a23);
+        vst1q_f64(acc.as_mut_ptr().add(4), a45);
+        vst1q_f64(acc.as_mut_ptr().add(6), a67);
+        acc
+    }
+
+    /// Widen an 8-f32 block into four f64 pairs in lane order.
+    #[inline]
+    unsafe fn widen8(p: *const f32) -> (float64x2_t, float64x2_t, float64x2_t, float64x2_t) {
+        let v0 = vld1q_f32(p);
+        let v1 = vld1q_f32(p.add(4));
+        (
+            vcvt_f64_f32(vget_low_f32(v0)),
+            vcvt_high_f64_f32(v0),
+            vcvt_f64_f32(vget_low_f32(v1)),
+            vcvt_high_f64_f32(v1),
+        )
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn sqnorm(x: &[f32]) -> f64 {
+        let z = vdupq_n_f64(0.0);
+        let (mut a01, mut a23, mut a45, mut a67) = (z, z, z, z);
+        let mut blocks = x.chunks_exact(LANES);
+        for blk in blocks.by_ref() {
+            let (d0, d1, d2, d3) = widen8(blk.as_ptr());
+            a01 = vaddq_f64(a01, vmulq_f64(d0, d0));
+            a23 = vaddq_f64(a23, vmulq_f64(d1, d1));
+            a45 = vaddq_f64(a45, vmulq_f64(d2, d2));
+            a67 = vaddq_f64(a67, vmulq_f64(d3, d3));
+        }
+        let mut acc = spill(a01, a23, a45, a67);
+        for (l, &v) in blocks.remainder().iter().enumerate() {
+            let v = v as f64;
+            acc[l] += v * v;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(x: &[f32], y: &[f32]) -> f64 {
+        let z = vdupq_n_f64(0.0);
+        let (mut a01, mut a23, mut a45, mut a67) = (z, z, z, z);
+        let mut xb = x.chunks_exact(LANES);
+        let mut yb = y.chunks_exact(LANES);
+        for (bx, by) in xb.by_ref().zip(yb.by_ref()) {
+            let (x0, x1, x2, x3) = widen8(bx.as_ptr());
+            let (y0, y1, y2, y3) = widen8(by.as_ptr());
+            a01 = vaddq_f64(a01, vmulq_f64(x0, y0));
+            a23 = vaddq_f64(a23, vmulq_f64(x1, y1));
+            a45 = vaddq_f64(a45, vmulq_f64(x2, y2));
+            a67 = vaddq_f64(a67, vmulq_f64(x3, y3));
+        }
+        let mut acc = spill(a01, a23, a45, a67);
+        for (l, (&a, &b)) in xb.remainder().iter().zip(yb.remainder()).enumerate() {
+            acc[l] += a as f64 * b as f64;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+        let z = vdupq_n_f64(0.0);
+        let (mut a01, mut a23, mut a45, mut a67) = (z, z, z, z);
+        let mut xb = x.chunks_exact(LANES);
+        let mut yb = y.chunks_exact(LANES);
+        for (bx, by) in xb.by_ref().zip(yb.by_ref()) {
+            let (x0, x1, x2, x3) = widen8(bx.as_ptr());
+            let (y0, y1, y2, y3) = widen8(by.as_ptr());
+            let d0 = vsubq_f64(x0, y0);
+            let d1 = vsubq_f64(x1, y1);
+            let d2 = vsubq_f64(x2, y2);
+            let d3 = vsubq_f64(x3, y3);
+            a01 = vaddq_f64(a01, vmulq_f64(d0, d0));
+            a23 = vaddq_f64(a23, vmulq_f64(d1, d1));
+            a45 = vaddq_f64(a45, vmulq_f64(d2, d2));
+            a67 = vaddq_f64(a67, vmulq_f64(d3, d3));
+        }
+        let mut acc = spill(a01, a23, a45, a67);
+        for (l, (&a, &b)) in xb.remainder().iter().zip(yb.remainder()).enumerate() {
+            let d = a as f64 - b as f64;
+            acc[l] += d * d;
+        }
+        lanes_fold(acc)
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64); slices must have equal lengths.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn diff(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let n4 = n - n % 4;
+        let (px, py, po) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < n4 {
+            vst1q_f32(po.add(i), vsubq_f32(vld1q_f32(px.add(i)), vld1q_f32(py.add(i))));
+            i += 4;
+        }
+        for j in n4..n {
+            out[j] = x[j] - y[j];
+        }
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64); slices must have equal lengths.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let n4 = n - n % 4;
+        let av = vdupq_n_f32(a);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let t = vaddq_f32(vld1q_f32(py.add(i)), vmulq_f32(av, vld1q_f32(px.add(i))));
+            vst1q_f32(py.add(i), t);
+            i += 4;
+        }
+        for j in n4..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64); slices must have equal lengths.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn fold_f64(acc: &mut [f64], x: &[f32]) {
+        let n = acc.len();
+        let n2 = n - n % 2;
+        let (pa, px) = (acc.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i < n2 {
+            let v = vcvt_f64_f32(vld1_f32(px.add(i)));
+            vst1q_f64(pa.add(i), vaddq_f64(vld1q_f64(pa.add(i)), v));
+            i += 2;
+        }
+        for j in n2..n {
+            acc[j] += x[j] as f64;
+        }
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64); slices must have equal lengths.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn fold_delta_f64(acc: &mut [f64], new: &[f32], old: &[f32]) {
+        let n = acc.len();
+        let n2 = n - n % 2;
+        let (pa, pn, po) = (acc.as_mut_ptr(), new.as_ptr(), old.as_ptr());
+        let mut i = 0;
+        while i < n2 {
+            let d = vsubq_f64(vcvt_f64_f32(vld1_f32(pn.add(i))), vcvt_f64_f32(vld1_f32(po.add(i))));
+            vst1q_f64(pa.add(i), vaddq_f64(vld1q_f64(pa.add(i)), d));
+            i += 2;
+        }
+        for j in n2..n {
+            acc[j] += new[j] as f64 - old[j] as f64;
+        }
+    }
+
+    /// # Safety
+    /// NEON (baseline on aarch64); slices must have equal lengths.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn scaled_to_f32(acc: &[f64], factor: f64, out: &mut [f32]) {
+        let n = out.len();
+        let n2 = n - n % 2;
+        let fv = vdupq_n_f64(factor);
+        let (pa, po) = (acc.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < n2 {
+            // vcvt_f32_f64 rounds to nearest-even — identical to the
+            // scalar `as f32`.
+            vst1_f32(po.add(i), vcvt_f32_f64(vmulq_f64(vld1q_f64(pa.add(i)), fv)));
+            i += 2;
+        }
+        for j in n2..n {
+            out[j] = (acc[j] * factor) as f32;
+        }
+    }
+}

@@ -80,6 +80,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         connect_attempts: args.num_or("retries", 20u32),
         retry_backoff: Duration::from_millis(args.num_or("retry-backoff-ms", 100u64)),
         io_timeout: Duration::from_millis(args.num_or("io-timeout-ms", 60_000u64)),
+        reply_delay: Duration::from_millis(args.num_or("reply-delay-ms", 0u64)),
     };
     println!("threepc worker: connecting to {addr}");
     threepc::coordinator::run_worker_agent(addr, &cfg)?;

@@ -49,7 +49,15 @@ impl ThreePointMap for Ef21 {
         let mut residual = ctx.take_f32_zeroed(x.len());
         crate::kernels::diff(ctx.shards(), x, h, &mut residual);
         let mut inc = CVec::Zero { dim: 0 };
-        self.c.compress_into(&residual, ctx, &mut inc);
+        // When a transport attached a wire sink, fuse: the compressor
+        // encodes the increment's frame bytes in the same pass that
+        // produces it (Top-K's override — identical bytes to the
+        // generic encoder; see `Contractive::compress_encode_into`).
+        if let Some((coding, wire)) = ctx.take_wire() {
+            self.c.compress_encode_into(&residual, ctx, coding, &mut inc, wire);
+        } else {
+            self.c.compress_into(&residual, ctx, &mut inc);
+        }
         ctx.put_f32(residual);
         let bits = inc.wire_bits();
         *out = Update::Increment { inc, bits };

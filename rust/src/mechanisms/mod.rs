@@ -309,11 +309,19 @@ impl MechWorker {
         // inside the map) may fan out over idle pool threads with
         // bit-identical results (kernels fixed-chunk contract).
         let sh = ctx.shards();
+        // A wire sink attached by the transport transfers into the
+        // scratched context so the map can fuse compress + encode (a
+        // map that doesn't opt in simply leaves the buffer empty and
+        // the transport falls back to the generic encoder).
+        let wire = ctx.take_wire();
         let prev = std::mem::replace(&mut self.update, Update::Keep);
         self.scratch.reclaim_update(prev);
         let mut scratched =
             Ctx::with_scratch(ctx.info, &mut *ctx.rng, ctx.round_seed, &mut self.scratch)
                 .sharded(sh);
+        if let Some((coding, buf)) = wire {
+            scratched = scratched.with_wire(coding, buf);
+        }
         self.map.apply_into(&self.h, &self.y, grad_new, &mut scratched, &mut self.update);
         drop(scratched);
         if !delta_acc.is_empty() {

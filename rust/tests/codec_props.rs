@@ -3,7 +3,9 @@
 //! measured-bytes vs declared-`wire_bits` agreement for every mechanism
 //! the spec grammar can produce.
 
-use threepc::compressors::{index_bits, CVec, Ctx, CtxInfo};
+use threepc::compressors::{
+    index_bits, parse_contractive, CVec, Contractive, Ctx, CtxInfo, WireValueCoding,
+};
 use threepc::coordinator::protocol::{frame_overhead_bytes, wire_part_count};
 use threepc::coordinator::{decode_uplink, encode_uplink, UplinkMsg};
 use threepc::mechanisms::{parse_mechanism, update_bits, MechWorker, ReplaceWire, Update};
@@ -99,6 +101,79 @@ fn cap_crossover_boundary_is_exact() {
     assert_eq!(buf.len(), 5 + 4 * dim, "dense encoding at the cap");
     let mut pos = 0;
     assert_eq!(CVec::decode(&buf, &mut pos).unwrap().to_dense(), at.to_dense());
+}
+
+/// The fused `compress_encode_into` fast path must be byte-identical
+/// to compress-then-encode for every contractive spec the grammar can
+/// produce, under both value codings, across k < d, k = d, k > d and
+/// the sparse→dense cap-crossover regime — including natural-codable
+/// (power-of-two) inputs that take the 9-bit value path. Top-K carries
+/// the real override; the rest pin the default method so any future
+/// override starts from a passing equivalence.
+#[test]
+fn fused_compress_encode_matches_two_step_bytes() {
+    let specs = [
+        "top1",
+        "top3",
+        "top8",
+        "top24",
+        "top64",
+        "identity",
+        "crand4",
+        "cperm",
+        "bern0.5",
+        "sign",
+        "scaled-rand4",
+        "scaled-perm",
+        "scaled-natural",
+        "cperm*crand8",
+    ];
+    let dims = [1usize, 5, 24, 100];
+    for spec in specs {
+        let c = parse_contractive(spec).unwrap();
+        for &d in &dims {
+            for coding in [WireValueCoding::RawF32, WireValueCoding::Natural] {
+                for pow2 in [false, true] {
+                    let mut meta = Pcg64::seed(0xf00d ^ ((d as u64) << 8) ^ spec.len() as u64);
+                    let x: Vec<f32> = (0..d)
+                        .map(|_| {
+                            if pow2 {
+                                let e = meta.below(9) as i32 - 4;
+                                let s = if meta.below(2) == 0 { 1.0f32 } else { -1.0 };
+                                s * (2.0f32).powi(e)
+                            } else {
+                                meta.normal() as f32
+                            }
+                        })
+                        .collect();
+                    let info = CtxInfo { dim: d, n_workers: 1, worker_id: 0 };
+
+                    // Two-step reference.
+                    let mut rng_a = Pcg64::new(42, 7);
+                    let mut ctx_a = Ctx::new(info, &mut rng_a, 3);
+                    let mut cv_a = CVec::Zero { dim: 0 };
+                    c.compress_into(&x, &mut ctx_a, &mut cv_a);
+                    let mut bytes_a = Vec::new();
+                    cv_a.encode_with(coding, &mut bytes_a);
+
+                    // Fused path: identical RNG stream and round seed.
+                    let mut rng_b = Pcg64::new(42, 7);
+                    let mut ctx_b = Ctx::new(info, &mut rng_b, 3);
+                    let mut cv_b = CVec::Zero { dim: 0 };
+                    let mut bytes_b = Vec::new();
+                    c.compress_encode_into(&x, &mut ctx_b, coding, &mut cv_b, &mut bytes_b);
+
+                    let label = format!("{spec} d={d} coding={coding:?} pow2={pow2}");
+                    assert_eq!(bytes_a, bytes_b, "{label}: wire bytes");
+                    assert_eq!(
+                        cv_a.to_dense(),
+                        cv_b.to_dense(),
+                        "{label}: represented vector"
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// The declared `bits` of every Replace update equals the wire cost of

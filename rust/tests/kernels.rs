@@ -205,6 +205,70 @@ fn helper_count_is_unobservable_in_reduction_bits() {
     }
 }
 
+/// Vectorized ≡ scalar, bit for bit, on every kernel the SIMD layer
+/// covers. The public entry points dispatch to `std::arch` lanes when
+/// available (see `THREEPC_SIMD`); [`kernels::reference`] mirrors the
+/// always-scalar bodies. Equal bits across the issue's size ladder is
+/// the whole vectorization contract — when the SIMD path is disabled
+/// (env toggle, or a host without the features) both sides run the
+/// same scalar code and the test pins that the mirrors stay in sync.
+#[test]
+fn vectorized_equals_scalar_reference_bit_for_bit() {
+    use threepc::kernels::reference;
+    let mut rng = Pcg64::seed(0x51d);
+    eprintln!("simd_active = {}", kernels::simd_active());
+    for d in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 1 << 20] {
+        let x = vec_f32(&mut rng, d, 1.3);
+        let y = vec_f32(&mut rng, d, 0.9);
+        let label = format!("d={d}");
+
+        // Reductions.
+        assert_eq!(
+            kernels::sqnorm(None, &x).to_bits(),
+            reference::sqnorm(&x).to_bits(),
+            "sqnorm {label}"
+        );
+        assert_eq!(
+            kernels::dist_sq(None, &x, &y).to_bits(),
+            reference::dist_sq(&x, &y).to_bits(),
+            "dist_sq {label}"
+        );
+        assert_eq!(
+            kernels::dot(None, &x, &y).to_bits(),
+            reference::dot(&x, &y).to_bits(),
+            "dot {label}"
+        );
+
+        // f32 elementwise.
+        let mut a = y.clone();
+        let mut b = y.clone();
+        kernels::axpy(None, -0.62, &x, &mut a);
+        reference::axpy(-0.62, &x, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("axpy {label}"));
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        kernels::diff(None, &x, &y, &mut a);
+        reference::diff(&x, &y, &mut b);
+        assert_bits_eq_f32(&a, &b, &format!("diff {label}"));
+
+        // f64 folds and the readout.
+        let seed_acc = vec_f64(&mut rng, d);
+        let mut a = seed_acc.clone();
+        let mut b = seed_acc.clone();
+        kernels::fold_f64(None, &mut a, &x);
+        reference::fold_f64(&mut b, &x);
+        assert_bits_eq_f64(&a, &b, &format!("fold_f64 {label}"));
+        kernels::fold_delta_f64(None, &mut a, &x, &y);
+        reference::fold_delta_f64(&mut b, &x, &y);
+        assert_bits_eq_f64(&a, &b, &format!("fold_delta_f64 {label}"));
+        let mut fa = vec![0.0f32; d];
+        let mut fb = vec![0.0f32; d];
+        kernels::scaled_to_f32(None, &a, 0.2, &mut fa);
+        reference::scaled_to_f32(&b, 0.2, &mut fb);
+        assert_bits_eq_f32(&fa, &fb, &format!("scaled_to_f32 {label}"));
+    }
+}
+
 /// Two threads hammering one pool: the loser of the try-lock degrades
 /// to serial, so both still compute correct (identical) bits.
 #[test]

@@ -285,6 +285,49 @@ fn zero_init_crosses_the_wire() {
     assert_eq!(8 * sock.wire_bytes_up, sock.total_bits_up);
 }
 
+/// A deliberately slow worker ([`AgentConfig::reply_delay`]) makes
+/// replies land out of id order: three agents answer each round
+/// immediately while one sits on every reply for ~40 ms (connection
+/// order assigns ids, so the delay lands on *some* worker — which one
+/// doesn't matter). The leader's readiness-driven drain reads whatever
+/// arrives first but decodes, validates and folds in strict id order,
+/// so the trace and the byte accounting must stay bit-for-bit equal to
+/// both the all-fast socket run and the `Framed` reference.
+#[test]
+fn slow_worker_replies_do_not_perturb_trace_or_accounting() {
+    let s = suite();
+    let c = cfg(8);
+    let b = run_framed(&s, "ef21:top3", &c);
+    let fast = run_socket(&s, "ef21:top3", &c, "tcp://127.0.0.1:0");
+
+    let sock = bind_socket("tcp://127.0.0.1:0");
+    let listen = sock.local_addr().unwrap();
+    let joins: Vec<_> = (0..N)
+        .map(|i| {
+            let a = listen.clone();
+            thread::spawn(move || {
+                let mut acfg = AgentConfig::default();
+                if i == 0 {
+                    acfg.reply_delay = Duration::from_millis(40);
+                }
+                run_worker_agent(&a, &acfg)
+            })
+        })
+        .collect();
+    let slow = TrainSession::builder(&s.problem)
+        .mechanism_spec("ef21:top3")
+        .unwrap()
+        .config(c)
+        .transport(sock)
+        .run();
+    join_agents(joins);
+
+    let init_bits = (N * 32 * D) as u64;
+    assert_trace_eq(&b, &fast, "slow-worker control (framed vs fast socket)");
+    assert_trace_eq(&b, &slow, "slow worker (framed vs delayed socket)");
+    assert_socket_accounting(&b, &slow, init_bits, "slow worker");
+}
+
 // ---------------------------------------------------------------------
 // Hostile peers. A rogue client speaks just enough of the protocol to
 // reach the round loop, then misbehaves; the leader must end the run

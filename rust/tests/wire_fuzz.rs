@@ -6,7 +6,8 @@
 //! fail its bounds check *before* any allocation is sized from it).
 //!
 //! The corpus covers the uplink codec (all `parse_all_specs`
-//! mechanisms, both value codings), the standalone `CVec` codec, the
+//! mechanisms, both value codings, and frames produced by the fused
+//! compress→encode fast path), the standalone `CVec` codec, the
 //! `MechSwitch` directive, the socket transport's downlink vocabulary
 //! (session hello, round broadcast, shutdown), the round reply, and
 //! the checkpoint file format.
@@ -16,16 +17,16 @@ use std::cell::Cell;
 
 use threepc::compressors::{CVec, Ctx, CtxInfo, WireValueCoding};
 use threepc::coordinator::protocol::{
-    decode_client_frame, decode_downlink, decode_mech_switch, decode_serve_frame,
-    decode_worker_hello, encode_client_frame, encode_mech_switch, encode_round_reply,
-    encode_round_start, encode_serve_frame, encode_session_hello, encode_uplink_with,
-    encode_worker_hello, split_round_reply, SessionHello,
+    assemble_increment_uplink, decode_client_frame, decode_downlink, decode_mech_switch,
+    decode_serve_frame, decode_worker_hello, encode_client_frame, encode_mech_switch,
+    encode_round_reply, encode_round_start, encode_serve_frame, encode_session_hello,
+    encode_uplink_with, encode_worker_hello, split_round_reply, SessionHello,
 };
 use threepc::coordinator::{
     decode_uplink, Checkpoint, ClientFrame, MechSwitch, MetricUpdate, RejectCode, RoundRecord,
     ServeFrame, SessionPhase, SessionResult, SessionStatus, UplinkMsg,
 };
-use threepc::mechanisms::{parse_mechanism, MechWorker};
+use threepc::mechanisms::{parse_mechanism, MechWorker, Update};
 use threepc::util::rng::Pcg64;
 
 /// Byte-accounting global allocator (thread-local, like the
@@ -160,6 +161,67 @@ fn uplink_frames_survive_truncation_and_bit_flips() {
     };
     for frame in &corpus {
         // Corpus sanity: the unmutated frame decodes.
+        assert!(decode_uplink(frame).is_ok());
+        fuzz_decoder(frame, decode);
+    }
+}
+
+/// Uplink frames produced by the fused compress→encode fast path
+/// (`Ctx::with_wire` + `assemble_increment_uplink`, the route the
+/// socket agents and the framed transport take for EF21-over-Top-K)
+/// are byte-identical to the generic encoder's output and survive the
+/// same truncation/bit-flip battery.
+#[test]
+fn fused_encoder_uplink_frames_survive_truncation_and_bit_flips() {
+    let d = 24usize;
+    let n = 4usize;
+    let mut corpus = Vec::new();
+    // top4: the sparse gather override; top24 = d: the dense k==d
+    // branch of the override; top1: the minimal frame.
+    for spec in ["ef21:top1", "ef21:top4", "ef21:top24"] {
+        let map = parse_mechanism(spec).unwrap();
+        let mut meta = Pcg64::seed(0xfa5e ^ spec.len() as u64);
+        let g0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let grad0: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+        let mut worker = MechWorker::new(map, g0, grad0);
+        let mut rng = Pcg64::new(13, 0x99);
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: 2 };
+        let mut wire = Vec::new();
+        let mut no_acc = Vec::new();
+        for t in 0..6u64 {
+            let grad: Vec<f32> = (0..d).map(|_| meta.normal() as f32).collect();
+            for coding in [WireValueCoding::RawF32, WireValueCoding::Natural] {
+                wire.clear();
+                let mut ctx = Ctx::new(info, &mut rng, t).with_wire(coding, &mut wire);
+                let g_err = worker.round_acc(&grad, &mut ctx, &mut no_acc);
+                drop(ctx);
+                let Update::Increment { inc, .. } = worker.last_update() else {
+                    panic!("{spec} round {t}: expected an Increment update");
+                };
+                assert!(!wire.is_empty(), "{spec} round {t}: mechanism did not fuse");
+                assert_eq!(
+                    wire.len(),
+                    inc.encoded_len_with(coding),
+                    "{spec} round {t} {coding:?}: fused payload length"
+                );
+                let mut frame = Vec::new();
+                assemble_increment_uplink(2, g_err, &wire, &mut frame);
+                let msg =
+                    UplinkMsg { worker_id: 2, update: worker.last_update().clone(), g_err };
+                assert_eq!(
+                    frame,
+                    encode_uplink_with(&msg, coding),
+                    "{spec} round {t} {coding:?}: fused frame must match the generic encoder"
+                );
+                corpus.push(frame);
+            }
+        }
+    }
+    assert!(corpus.len() >= 36, "corpus too small: {}", corpus.len());
+    let decode: &dyn Fn(&[u8]) = &|b| {
+        let _ = decode_uplink(b);
+    };
+    for frame in &corpus {
         assert!(decode_uplink(frame).is_ok());
         fuzz_decoder(frame, decode);
     }

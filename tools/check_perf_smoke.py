@@ -27,6 +27,7 @@ Usage: tools/check_perf_smoke.py [FRESH_JSON] [--baseline FILE]
 """
 
 import json
+import math
 import subprocess
 import sys
 
@@ -69,6 +70,7 @@ def main(argv):
     same_mode = bool(fresh.get("smoke")) == bool(baseline.get("smoke"))
     failures = []
     checked = 0
+    speedups = []
     for base_case in baseline.get("cases", []):
         if "ms_per_round" not in base_case:
             continue  # baseline only gates round-latency cases
@@ -99,10 +101,14 @@ def main(argv):
             continue
         checked += 1
         ratio = fresh_ms / float(base_ms)
+        # Speedup is the baseline/fresh inverse: > 1.0 means this
+        # commit's hot path got faster than the committed figures.
+        speedup = float(base_ms) / fresh_ms if fresh_ms > 0 else float("inf")
+        speedups.append(speedup)
         verdict = "OK" if ratio <= REGRESSION_FACTOR else "REGRESSED"
         print(
             f"[perf-smoke] {name}: {fresh_ms:.2f} ms/round vs baseline "
-            f"{float(base_ms):.2f} ({ratio:.2f}x) {verdict}"
+            f"{float(base_ms):.2f} ({ratio:.2f}x, speedup {speedup:.2f}x) {verdict}"
         )
         if ratio > REGRESSION_FACTOR:
             failures.append(
@@ -110,6 +116,9 @@ def main(argv):
                 f"baseline {float(base_ms):.2f} (limit {REGRESSION_FACTOR}x)"
             )
 
+    if speedups and all(math.isfinite(s) and s > 0 for s in speedups):
+        geomean = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+        print(f"[perf-smoke] geomean speedup vs baseline: {geomean:.2f}x over {len(speedups)} cases")
     if failures:
         print("[perf-smoke] FAIL:")
         for f_ in failures:
