@@ -29,6 +29,11 @@ pub struct RoundRecord {
     /// round (`None` when the mechanism did not change). Rounds with a
     /// switch are always recorded, even on thinned traces.
     pub mech_switch: Option<String>,
+    /// Workers whose reply did not land this round (quorum mode): the
+    /// leader folded their persisted `g_i` mirror as a LAG-style lazy
+    /// stand-in and billed them zero uplink bits. Sorted ascending;
+    /// empty on full-participation rounds and for in-memory transports.
+    pub absent: Vec<u32>,
 }
 
 #[derive(Debug)]
@@ -142,6 +147,7 @@ mod tests {
             skipped_frac: 0.5,
             loss: if t % 2 == 0 { Some(gns * 2.0) } else { None },
             mech_switch: if t == 1 { Some("EF21(Top-2)".into()) } else { None },
+            absent: vec![],
         }
     }
 

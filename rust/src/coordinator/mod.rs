@@ -75,7 +75,7 @@ pub use protocol::{
 pub use server::Server;
 pub use service::{ServeOptions, Service, ServiceClient, SessionSpec};
 pub use session::{SessionBuilder, SessionDriver, StepFlow, TrainConfig, TrainSession};
-pub use socket::{run_worker_agent, AgentConfig, Socket};
+pub use socket::{run_worker_agent, AgentConfig, FaultPlan, FaultScript, Socket};
 pub use transport::{
     Framed, InProcess, RoundAggregate, Transport, TransportError, TransportLink,
 };

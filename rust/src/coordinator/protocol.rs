@@ -479,6 +479,11 @@ pub const DOWN_SHUTDOWN: u8 = 0xd4;
 /// follow when it is next granted to a session. A solo leader never
 /// sends this ([`DOWN_SHUTDOWN`] still ends the connection).
 pub const DOWN_SESSION_END: u8 = 0xd5;
+/// Mid-session state resync: sent instead of [`DOWN_ROUND`] to a worker
+/// that rejoined (or drifted past a demoted round) so it can rebuild
+/// its state from the leader's mirrors and answer the pending round.
+/// Recovery traffic — unbilled and unmeasured (like the handshakes).
+pub const DOWN_RESYNC: u8 = 0xd6;
 
 /// Uplink (worker → leader) frame kinds.
 pub const UP_HELLO: u8 = 0xe1;
@@ -679,6 +684,94 @@ pub fn encode_round_start(
     }
 }
 
+/// A mid-session state resync, as it crosses the wire: everything a
+/// fresh worker process needs to stand in for a lost slot — the full
+/// session hello (with the *current* mechanism spec, so missed
+/// [`MechSwitch`]es are absorbed), the pending round's directive, and
+/// the leader's `(x, g_i)` mirrors. The receiving agent rebuilds its
+/// [`WorkerState`](super::WorkerState) around the wire-carried `g_i`
+/// (see [`WorkerState::resync`](super::WorkerState::resync)) and
+/// replies to round `t` like any other round. The frame replaces the
+/// round broadcast for that slot that round; it is recovery traffic,
+/// so it is neither billed nor measured.
+///
+/// ```text
+/// resync := kind:u8(0xD6)  hello_len:u16  hello:[u8; hello_len]
+///           t:u64  round_seed:u64  flags:u8(bit0=eval_loss)
+///           x:[f32; d]  g:[f32; d]        (d = hello.dim)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResyncFrame {
+    /// The full session hello, mechanism spec current as of round `t`.
+    pub hello: SessionHello,
+    /// The pending round this resync doubles as the directive for.
+    pub t: u64,
+    pub round_seed: u64,
+    pub eval_loss: bool,
+    /// The round-`t` iterate `x^{t+1}`.
+    pub x: Vec<f32>,
+    /// The leader's `g_i` mirror for this slot.
+    pub g: Vec<f32>,
+}
+
+/// Serialize a resync frame (full body, kind tag included), appended to
+/// `out`. Errs only if the embedded hello is unencodable (over-long
+/// specs) — propagated, never asserted.
+pub fn encode_resync(r: &ResyncFrame, out: &mut Vec<u8>) -> Result<()> {
+    let hello = encode_session_hello(&r.hello)?;
+    ensure!(hello.len() <= u16::MAX as usize, "resync: hello too long for the wire");
+    out.push(DOWN_RESYNC);
+    out.extend_from_slice(&(hello.len() as u16).to_le_bytes());
+    out.extend_from_slice(&hello);
+    out.extend_from_slice(&r.t.to_le_bytes());
+    out.extend_from_slice(&r.round_seed.to_le_bytes());
+    out.push(u8::from(r.eval_loss));
+    for v in &r.x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &r.g {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Decode one resync frame body (exact inverse of [`encode_resync`];
+/// rejects truncations, bad embedded hellos, and any mismatch between
+/// the hello's dimension and the carried vectors). The `8·d` byte
+/// bound is checked against the buffer *before* the vectors are
+/// allocated, so a hostile dimension cannot force an allocation beyond
+/// the frame's own length.
+pub fn decode_resync(buf: &[u8]) -> Result<ResyncFrame> {
+    ensure!(buf.first() == Some(&DOWN_RESYNC), "resync: bad kind");
+    let mut pos = 1usize;
+    let hello_len = read_u16(buf, &mut pos)? as usize;
+    ensure!(pos + hello_len <= buf.len(), "resync: truncated hello");
+    let hello = decode_session_hello(&buf[pos..pos + hello_len])?;
+    pos += hello_len;
+    let t = read_u64(buf, &mut pos)?;
+    let round_seed = read_u64(buf, &mut pos)?;
+    let flags = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("resync: truncated flags"))?;
+    pos += 1;
+    ensure!(flags <= 1, "resync: unknown flags {flags:#04x}");
+    let d = hello.dim as usize;
+    // u64 math: a hostile dim (u32) times 8 must not wrap on 32-bit.
+    ensure!(
+        (buf.len() - pos) as u64 == 8 * hello.dim as u64,
+        "resync: body carries {} bytes for dimension {d} (expected {})",
+        buf.len() - pos,
+        8 * hello.dim as u64
+    );
+    let mut x = Vec::with_capacity(d);
+    for _ in 0..d {
+        x.push(read_f32(buf, &mut pos)?);
+    }
+    let mut g = Vec::with_capacity(d);
+    for _ in 0..d {
+        g.push(read_f32(buf, &mut pos)?);
+    }
+    Ok(ResyncFrame { hello, t, round_seed, eval_loss: flags & 1 == 1, x, g })
+}
+
 /// A decoded downlink frame, as the worker agent consumes them.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DownlinkFrame {
@@ -689,6 +782,8 @@ pub enum DownlinkFrame {
     /// Daemon-only: the session is over but the connection persists;
     /// the agent discards its worker state and awaits the next hello.
     SessionEnd,
+    /// Mid-session state resync (doubles as the round-`t` directive).
+    Resync(ResyncFrame),
 }
 
 /// Decode one downlink frame body (the bytes inside the length
@@ -727,23 +822,40 @@ pub fn decode_downlink(buf: &[u8]) -> Result<DownlinkFrame> {
             ensure!(buf.len() == 1, "session-end: unexpected body");
             Ok(DownlinkFrame::SessionEnd)
         }
+        DOWN_RESYNC => Ok(DownlinkFrame::Resync(decode_resync(buf)?)),
         other => bail!("downlink: unknown frame kind {other:#04x}"),
     }
 }
+
+/// Fixed round-reply framing: `kind:u8 + flags:u8 + t:u64 + up_len:u32`.
+/// Transport framing like the length prefix — excluded from the
+/// billed/measured `up_len`, so byte accounting is identical across
+/// transports.
+pub const ROUND_REPLY_HEADER_BYTES: usize = 14;
 
 /// Append a worker's round reply: the billable uplink codec frame plus
 /// the diagnostic sidecar (the exact local gradient for the leader's
 /// `‖∇f‖²` metric, and the local loss on evaluation rounds). Only
 /// `upframe` is measured/billed; the sidecar carries metrics the
-/// in-process transports read from shared memory for free.
+/// in-process transports read from shared memory for free. `t` echoes
+/// the round directive the reply answers — the leader discards replies
+/// to rounds it has already closed (a demoted straggler's late answer).
 ///
 /// ```text
-/// round-reply := kind:u8(0xE2)  flags:u8(bit0=has_loss)  up_len:u32
-///                upframe:[u8; up_len]  grad:[f32; d]  loss:f64?
+/// round-reply := kind:u8(0xE2)  flags:u8(bit0=has_loss)  t:u64
+///                up_len:u32  upframe:[u8; up_len]  grad:[f32; d]
+///                loss:f64?
 /// ```
-pub fn encode_round_reply(upframe: &[u8], grad: &[f32], loss: Option<f64>, out: &mut Vec<u8>) {
+pub fn encode_round_reply(
+    t: u64,
+    upframe: &[u8],
+    grad: &[f32],
+    loss: Option<f64>,
+    out: &mut Vec<u8>,
+) {
     out.push(UP_ROUND);
     out.push(u8::from(loss.is_some()));
+    out.extend_from_slice(&t.to_le_bytes());
     out.extend_from_slice(&(upframe.len() as u32).to_le_bytes());
     out.extend_from_slice(upframe);
     for v in grad {
@@ -757,6 +869,8 @@ pub fn encode_round_reply(upframe: &[u8], grad: &[f32], loss: Option<f64>, out: 
 /// Borrowed view of a round reply's parts.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundReply<'a> {
+    /// The round this reply answers (echo of the directive's `t`).
+    pub t: u64,
     /// The billable uplink codec frame ([`decode_uplink_into`] input).
     pub upframe: &'a [u8],
     /// The gradient sidecar, still as raw little-endian f32 bytes.
@@ -768,19 +882,21 @@ pub struct RoundReply<'a> {
 /// against the body (the gradient's length against the session `d` is
 /// the link layer's check — it knows `d`, this function doesn't).
 pub fn split_round_reply(buf: &[u8]) -> Result<RoundReply<'_>> {
+    const H: usize = ROUND_REPLY_HEADER_BYTES;
     ensure!(buf.first() == Some(&UP_ROUND), "round-reply: bad kind");
-    ensure!(buf.len() >= 6, "round-reply: truncated header");
+    ensure!(buf.len() >= H, "round-reply: truncated header");
     let flags = buf[1];
     ensure!(flags <= 1, "round-reply: unknown flags {flags:#04x}");
     let has_loss = flags & 1 == 1;
-    let up_len = u32::from_le_bytes(buf[2..6].try_into().expect("4-byte slice")) as usize;
+    let t = u64::from_le_bytes(buf[2..10].try_into().expect("8-byte slice"));
+    let up_len = u32::from_le_bytes(buf[10..14].try_into().expect("4-byte slice")) as usize;
     let tail = if has_loss { 8 } else { 0 };
     ensure!(
-        (buf.len() - 6) as u64 >= up_len as u64 + tail as u64,
+        (buf.len() - H) as u64 >= up_len as u64 + tail as u64,
         "round-reply: truncated uplink frame (up_len {up_len})"
     );
-    let upframe = &buf[6..6 + up_len];
-    let rest = &buf[6 + up_len..];
+    let upframe = &buf[H..H + up_len];
+    let rest = &buf[H + up_len..];
     let grad = &rest[..rest.len() - tail];
     ensure!(grad.len() % 4 == 0, "round-reply: gradient not a whole number of f32s");
     let loss = if has_loss {
@@ -790,7 +906,7 @@ pub fn split_round_reply(buf: &[u8]) -> Result<RoundReply<'_>> {
     } else {
         None
     };
-    Ok(RoundReply { upframe, grad, loss })
+    Ok(RoundReply { t, upframe, grad, loss })
 }
 
 /// Number of wire messages a decomposition contains (the padding bound
@@ -1062,8 +1178,9 @@ pub struct MetricUpdate {
 /// serve-metric := kind:u8(0xCB)  id:u64  t:u64  grad_norm_sq:f64
 ///                 g_err:f64  bits_up_cum:f64  bits_up_max:u64
 ///                 bits_down_cum:f64  skipped_frac:f64
-///                 flags:u8(bit0=loss|bit1=switch)  loss:f64?
+///                 flags:u8(bit0=loss|bit1=switch|bit2=absent)  loss:f64?
 ///                 switch_len:u16?  switch:[u8]?
+///                 absent_count:u16?  absent:[u32]?
 /// serve-reject := kind:u8(0xCC)  code:u8  reason_len:u16  reason:[u8]
 /// ```
 #[derive(Debug, Clone, PartialEq)]
@@ -1114,12 +1231,26 @@ pub fn encode_serve_frame(f: &ServeFrame) -> Result<Vec<u8>> {
             out.extend_from_slice(&rec.bits_up_max.to_le_bytes());
             out.extend_from_slice(&rec.bits_down_cum.to_le_bytes());
             out.extend_from_slice(&rec.skipped_frac.to_le_bytes());
-            out.push(u8::from(rec.loss.is_some()) | (u8::from(rec.mech_switch.is_some()) << 1));
+            out.push(
+                u8::from(rec.loss.is_some())
+                    | (u8::from(rec.mech_switch.is_some()) << 1)
+                    | (u8::from(!rec.absent.is_empty()) << 2),
+            );
             if let Some(l) = rec.loss {
                 out.extend_from_slice(&l.to_le_bytes());
             }
             if let Some(s) = &rec.mech_switch {
                 push_str(s, "metric: mech switch", &mut out)?;
+            }
+            if !rec.absent.is_empty() {
+                ensure!(
+                    rec.absent.len() <= u16::MAX as usize,
+                    "metric: absent set too wide for the wire"
+                );
+                out.extend_from_slice(&(rec.absent.len() as u16).to_le_bytes());
+                for &w in &rec.absent {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
             }
         }
         ServeFrame::Reject { code, reason } => {
@@ -1197,10 +1328,23 @@ pub fn decode_serve_frame(buf: &[u8]) -> Result<ServeFrame> {
             let skipped_frac = read_f64(buf, &mut pos)?;
             let flags = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("metric: truncated flags"))?;
             pos += 1;
-            ensure!(flags <= 3, "metric: unknown flags {flags:#04x}");
+            ensure!(flags <= 7, "metric: unknown flags {flags:#04x}");
             let loss = if flags & 1 == 1 { Some(read_f64(buf, &mut pos)?) } else { None };
             let mech_switch =
                 if flags & 2 == 2 { Some(read_str(buf, &mut pos, "mech switch")?) } else { None };
+            let mut absent = Vec::new();
+            if flags & 4 == 4 {
+                let count = read_u16(buf, &mut pos)? as usize;
+                ensure!(count > 0, "metric: absent flag set with empty set");
+                ensure!(
+                    (buf.len() - pos) as u64 >= 4 * count as u64,
+                    "metric: truncated absent set (count {count})"
+                );
+                absent.reserve_exact(count);
+                for _ in 0..count {
+                    absent.push(read_u32(buf, &mut pos)?);
+                }
+            }
             ServeFrame::Metric(MetricUpdate {
                 id,
                 record: RoundRecord {
@@ -1213,6 +1357,7 @@ pub fn decode_serve_frame(buf: &[u8]) -> Result<ServeFrame> {
                     skipped_frac,
                     loss,
                     mech_switch,
+                    absent,
                 },
             })
         }
@@ -1487,15 +1632,17 @@ mod tests {
         let up = encode_uplink(&UplinkMsg { worker_id: 2, update: Update::Keep, g_err: 0.5 });
         let grad = vec![1.0f32, 2.0, 3.0];
         let mut body = Vec::new();
-        encode_round_reply(&up, &grad, Some(1.25), &mut body);
+        encode_round_reply(77, &up, &grad, Some(1.25), &mut body);
         let r = split_round_reply(&body).unwrap();
+        assert_eq!(r.t, 77);
         assert_eq!(r.upframe, &up[..]);
         assert_eq!(r.grad.len(), 12);
         assert_eq!(r.loss, Some(1.25));
 
         let mut body = Vec::new();
-        encode_round_reply(&up, &grad, None, &mut body);
+        encode_round_reply(0, &up, &grad, None, &mut body);
         let r = split_round_reply(&body).unwrap();
+        assert_eq!(r.t, 0);
         assert_eq!(r.loss, None);
         assert_eq!(r.grad.len(), 12);
 
@@ -1510,8 +1657,55 @@ mod tests {
         }
         // A lying up_len is an Err.
         let mut bad = body.clone();
-        bad[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[10..14].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(split_round_reply(&bad).is_err());
+    }
+
+    #[test]
+    fn resync_frame_roundtrips_and_validates() {
+        let hello = SessionHello {
+            worker_id: 1,
+            n_workers: 4,
+            dim: 3,
+            seed: 21,
+            zero_init: false,
+            value_coding: crate::compressors::WireValueCoding::RawF32,
+            mech_spec: "ef21:top2".into(),
+            problem_spec: "quad:4:3:0.01:0.5:21".into(),
+        };
+        let r = ResyncFrame {
+            hello,
+            t: 12,
+            round_seed: 0xfeed_f00d,
+            eval_loss: true,
+            x: vec![1.0, -2.5, 0.25],
+            g: vec![0.0, 4.0, -8.0],
+        };
+        let mut bytes = Vec::new();
+        encode_resync(&r, &mut bytes).unwrap();
+        assert_eq!(decode_resync(&bytes).unwrap(), r);
+        match decode_downlink(&bytes).unwrap() {
+            DownlinkFrame::Resync(back) => assert_eq!(back, r),
+            other => panic!("expected resync, got {other:?}"),
+        }
+
+        // Truncation anywhere is an Err: the body must carry exactly
+        // 8·d bytes past the header for the hello's dimension.
+        for cut in 0..bytes.len() {
+            assert!(decode_resync(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_resync(&long).is_err());
+        // A corrupted embedded hello rejects the whole frame.
+        let mut bad = bytes.clone();
+        bad[4] = b'X'; // hello magic
+        assert!(decode_resync(&bad).is_err());
+        // Mismatched vector lengths (dim says 3, body carries 2+2).
+        let short = ResyncFrame { x: vec![1.0, 2.0], g: vec![3.0, 4.0], ..r.clone() };
+        let mut bytes = Vec::new();
+        encode_resync(&short, &mut bytes).unwrap();
+        assert!(decode_resync(&bytes).is_err());
     }
 
     #[test]
@@ -1614,6 +1808,7 @@ mod tests {
                     skipped_frac: 0.5,
                     loss: Some(1.75),
                     mech_switch: Some("ef21:top2".into()),
+                    absent: vec![1, 3],
                 },
             }),
             ServeFrame::Metric(MetricUpdate {
@@ -1628,6 +1823,7 @@ mod tests {
                     skipped_frac: 0.0,
                     loss: None,
                     mech_switch: None,
+                    absent: vec![],
                 },
             }),
             ServeFrame::Reject {

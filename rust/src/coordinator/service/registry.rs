@@ -27,7 +27,15 @@ use std::path::PathBuf;
 /// loss-every=<usize>  record-every=<usize>
 /// init=full|zero      coding=raw|natural
 /// checkpoint=<path>   checkpoint-every=<usize>
+/// quorum=<m>/<n>      absence-budget=<usize>
 /// ```
+///
+/// `quorum=m/n` asks for LAG-style degraded rounds: the leader
+/// proceeds once `m` of the problem's `n` workers reply, folding each
+/// missing worker's persisted `g_i` mirror as its stand-in (`n` must
+/// equal the problem's worker count — it is spelled out so the spec is
+/// self-describing). `absence-budget` bounds how many *consecutive*
+/// rounds a single worker may be absent before the session fails.
 ///
 /// Unknown keys are a [`RejectCode::BadSpec`]: a typo'd knob silently
 /// ignored would produce a *valid-looking but wrong* run.
@@ -75,6 +83,7 @@ impl SessionSpec {
         let mut coding = WireValueCoding::RawF32;
         let mut checkpoint_path: Option<PathBuf> = None;
         let mut checkpoint_every = 25usize;
+        let mut quorum_total: Option<usize> = None;
 
         for part in spec.split(';') {
             let part = part.trim();
@@ -124,6 +133,17 @@ impl SessionSpec {
                 }
                 "checkpoint" => checkpoint_path = Some(PathBuf::from(value)),
                 "checkpoint-every" => checkpoint_every = num(key, value)?,
+                "quorum" => {
+                    let Some((m, total)) = value.split_once('/') else {
+                        return Err(reject(
+                            RejectCode::BadSpec,
+                            format!("quorum: expected m/n, got '{value}'"),
+                        ));
+                    };
+                    cfg.quorum = Some(num::<usize>(key, m)?);
+                    quorum_total = Some(num::<usize>(key, total)?);
+                }
+                "absence-budget" => cfg.absence_budget = num(key, value)?,
                 other => {
                     return Err(reject(RejectCode::BadSpec, format!("unknown key '{other}'")))
                 }
@@ -156,6 +176,27 @@ impl SessionSpec {
 
         if checkpoint_every == 0 {
             return Err(reject(RejectCode::BadSpec, "checkpoint-every: must be ≥ 1"));
+        }
+        match (cfg.quorum, quorum_total) {
+            (None, _) => {}
+            (Some(m), Some(total)) => {
+                if total != n_workers {
+                    return Err(reject(
+                        RejectCode::BadSpec,
+                        format!("quorum: denominator {total} != problem worker count {n_workers}"),
+                    ));
+                }
+                if m == 0 || m > n_workers {
+                    return Err(reject(
+                        RejectCode::BadSpec,
+                        format!("quorum: need 1 ≤ m ≤ {n_workers}, got {m}"),
+                    ));
+                }
+            }
+            (Some(_), None) => unreachable!("quorum key always parses both halves"),
+        }
+        if cfg.absence_budget == 0 {
+            return Err(reject(RejectCode::BadSpec, "absence-budget: must be ≥ 1"));
         }
         if let Some(cap) = fleet_cap {
             if n_workers > cap {
@@ -293,6 +334,31 @@ mod tests {
         // Fleet ceiling: valid spec, impossible worker count.
         let (code, _) = SessionSpec::parse(OK_SPEC, Some(2)).expect_err("cap 2");
         assert_eq!(code, RejectCode::FleetMismatch);
+    }
+
+    #[test]
+    fn quorum_keys_parse_and_cross_check() {
+        let s =
+            SessionSpec::parse(&format!("{OK_SPEC};quorum=3/4;absence-budget=5"), None).unwrap();
+        assert_eq!(s.cfg.quorum, Some(3));
+        assert_eq!(s.cfg.absence_budget, 5);
+        // Default: no quorum, effectively unbounded absence budget.
+        let s = SessionSpec::parse(OK_SPEC, None).unwrap();
+        assert_eq!(s.cfg.quorum, None);
+        assert_eq!(s.cfg.absence_budget, usize::MAX);
+
+        for bad in [
+            "quorum=3",        // not m/n
+            "quorum=3/5",      // denominator != worker count (4)
+            "quorum=0/4",      // m out of range
+            "quorum=5/4",      // m out of range
+            "quorum=x/4",      // non-numeric
+            "absence-budget=0",
+        ] {
+            let spec = format!("{OK_SPEC};{bad}");
+            let (code, reason) = SessionSpec::parse(&spec, None).expect_err(&spec);
+            assert_eq!(code, RejectCode::BadSpec, "'{bad}' → '{reason}'");
+        }
     }
 
     #[test]

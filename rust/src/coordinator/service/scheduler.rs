@@ -303,6 +303,18 @@ impl Scheduler {
             if produced.len() > sess.records.len() {
                 sess.records.extend_from_slice(&produced[sess.records.len()..]);
             }
+            // Surface quorum degradation while the session is still
+            // running: a status poll shows *which* workers the latest
+            // recorded round folded as stand-ins.
+            match sess.records.last().filter(|r| !r.absent.is_empty()) {
+                Some(r) => {
+                    sess.detail = format!(
+                        "degraded: round {} folded stand-ins for workers {:?}",
+                        r.t, r.absent
+                    );
+                }
+                None => sess.detail.clear(),
+            }
             flush_metrics(&mut self.clients, id, &sess.records);
             if flow == StepFlow::Finished {
                 let driver = sess.driver.take().expect("finished driver");

@@ -70,6 +70,22 @@ pub struct TrainConfig {
     /// Abort when `‖∇f‖²` exceeds this (divergent stepsize in a sweep;
     /// installed as [`DivergenceGuard`]).
     pub divergence_guard: f64,
+    /// Quorum round mode (socket transport only): proceed once this
+    /// many replies have landed; each missing worker's persisted `g_i`
+    /// mirror stands in (a LAG-style lazy update — zero uplink bits,
+    /// mirror unchanged). `None` (the default) means every round waits
+    /// for full participation, with dead slots blocking the round until
+    /// a replacement worker reconnects and resyncs.
+    pub quorum: Option<usize>,
+    /// Consecutive rounds a slot may be absent (stand-in folds) before
+    /// the leader declares `transport_error`. The default is effectively
+    /// unlimited; quorum-less rounds are still bounded by the socket
+    /// i/o timeout.
+    pub absence_budget: usize,
+    /// How long a quorum round keeps waiting for stragglers after the
+    /// quorum itself is met, before demoting the laggards to stand-ins
+    /// for the round. Zero demotes immediately at quorum.
+    pub quorum_grace: Duration,
 }
 
 impl Default for TrainConfig {
@@ -86,6 +102,9 @@ impl Default for TrainConfig {
             threads: 0,
             init: InitPolicy::FullGradient,
             divergence_guard: 1e15,
+            quorum: None,
+            absence_budget: usize::MAX,
+            quorum_grace: Duration::from_millis(50),
         }
     }
 }
@@ -604,6 +623,8 @@ impl<'a> SessionDriver<'a> {
                 skipped_frac: snap.skipped_frac,
                 loss: snap.loss,
                 mech_switch,
+                // Move, don't clone: reset_sh clears the slot next round.
+                absent: std::mem::take(&mut self.agg.absent),
             });
         }
         match stop {

@@ -43,6 +43,28 @@
 //! (length prefixes, kind tags, handshakes) and the diagnostic sidecar
 //! are not billed or measured, mirroring how the in-process transports
 //! read metrics from shared memory for free. See PROTOCOL.md.
+//!
+//! Self-healing (unix): the leader retains its listener for the whole
+//! session, so a worker lost mid-run can be replaced mid-round — a
+//! fresh `threepc worker --connect` re-handshakes and receives a
+//! [`DOWN_RESYNC`](proto::DOWN_RESYNC) frame carrying the full session
+//! hello plus the leader's `(t, x, g_i)` mirrors, rebuilding the slot's
+//! state bit-for-bit ([`WorkerState::resync`]). Without a quorum a dead
+//! slot *blocks* the pending round until its replacement resyncs, so
+//! recovered runs reproduce the uninterrupted trace exactly. With
+//! `TrainConfig::quorum = Some(m)` the round instead completes once
+//! every live worker replied (and ≥ m did): each missing worker's
+//! contribution is its persisted `g_i` mirror — a LAG-style lazy
+//! stand-in, semantically a `Keep` update billed zero uplink bits — and
+//! the absent ids are recorded per round. Stragglers demoted after
+//! `TrainConfig::quorum_grace` (or immediately, via a test-side
+//! [`FaultPlan`]) keep their connection: the next round boundary sends
+//! them a resync instead of a round frame, and any late reply is
+//! discarded by its echoed round index. A slot absent more than
+//! `TrainConfig::absence_budget` consecutive rounds fails the run with
+//! a `transport_error` naming the worker and peer address. Recovery
+//! traffic (resync frames, rejoin handshakes, discarded stale replies)
+//! is neither billed nor measured.
 
 use super::protocol::{
     self as proto, decode_uplink_into, encode_uplink_into, DownlinkFrame, SessionHello, WireMsg,
@@ -129,6 +151,16 @@ impl Listener {
             Listener::Uds(l) => l.set_nonblocking(nb),
         }
     }
+
+    /// The raw fd, so the reply drain can poll for rejoin attempts
+    /// alongside its peers while a slot is dead.
+    #[cfg(unix)]
+    pub(crate) fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Uds(l) => l.as_raw_fd(),
+        }
+    }
 }
 
 pub(crate) enum Stream {
@@ -210,6 +242,23 @@ impl Stream {
             Stream::Uds(s) => s.as_raw_fd(),
         }
     }
+
+    /// Best-effort peer address for error contexts ("which machine was
+    /// worker 3"). UDS clients are usually autobound/unnamed.
+    pub(crate) fn peer_desc(&self) -> String {
+        match self {
+            Stream::Tcp(s) => s
+                .peer_addr()
+                .map(|a| format!("tcp://{a}"))
+                .unwrap_or_else(|_| "tcp://<unknown>".into()),
+            #[cfg(unix)]
+            Stream::Uds(s) => s
+                .peer_addr()
+                .ok()
+                .and_then(|a| a.as_pathname().map(|p| format!("uds://{}", p.display())))
+                .unwrap_or_else(|| "uds://<unnamed>".into()),
+        }
+    }
 }
 
 impl Read for Stream {
@@ -251,15 +300,19 @@ impl Write for Stream {
     }
 }
 
-/// Prefix an error with the worker it concerns — formatted only on the
-/// error path, so the steady-state round loop never allocates for
-/// context strings.
-fn tag_worker(e: TransportError, wid: usize) -> TransportError {
+/// Prefix an error with the worker it concerns plus its peer address —
+/// the leader-side round path always knows which remote endpoint a
+/// slot maps to, and every i/o failure it reports names both.
+/// Formatted only on the error path, so the steady-state round loop
+/// never allocates for context strings.
+fn tag_peer(e: TransportError, wid: usize, addr: &str) -> TransportError {
     match e {
-        TransportError::Io(m) => TransportError::Io(format!("worker {wid}: {m}")),
-        TransportError::Protocol(m) => TransportError::Protocol(format!("worker {wid}: {m}")),
+        TransportError::Io(m) => TransportError::Io(format!("worker {wid} ({addr}): {m}")),
+        TransportError::Protocol(m) => {
+            TransportError::Protocol(format!("worker {wid} ({addr}): {m}"))
+        }
         TransportError::Disconnected(m) => {
-            TransportError::Disconnected(format!("worker {wid}: {m}"))
+            TransportError::Disconnected(format!("worker {wid} ({addr}): {m}"))
         }
     }
 }
@@ -454,6 +507,36 @@ pub fn parse_problem_spec(spec: &str) -> anyhow::Result<Distributed> {
 // The leader side: Socket (Transport) and SocketLink.
 // ---------------------------------------------------------------------
 
+/// Leader-side scripted demotions, for the fault-injection harness:
+/// `demote(t, ids)` makes the listed workers absent at round `t`
+/// *without* waiting out the quorum grace window — the round frame is
+/// withheld, their mirrors fold as LAG stand-ins immediately, and the
+/// next round boundary resyncs them. Because no timing is involved,
+/// per-round absent sets (and therefore traces and byte accounting)
+/// are bit-reproducible across reruns. Attach via
+/// [`Socket::fault_plan`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    demotions: Vec<(u64, Vec<usize>)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Demote `ids` at round `t` (builder-style; rounds may repeat).
+    pub fn demote(mut self, t: u64, ids: &[usize]) -> FaultPlan {
+        self.demotions.push((t, ids.to_vec()));
+        self
+    }
+
+    #[cfg(unix)]
+    fn demoted(&self, t: u64, id: usize) -> bool {
+        self.demotions.iter().any(|(r, ids)| *r == t && ids.contains(&id))
+    }
+}
+
 /// The socket transport configuration (leader side).
 ///
 /// ```no_run
@@ -485,6 +568,8 @@ pub struct Socket {
     io_timeout: Duration,
     /// Deadline for all `n` workers to connect and handshake.
     accept_timeout: Duration,
+    /// Scripted demotions for the fault-injection harness.
+    fault_plan: Option<FaultPlan>,
 }
 
 impl Socket {
@@ -498,6 +583,7 @@ impl Socket {
             value_coding: WireValueCoding::RawF32,
             io_timeout: Duration::from_secs(30),
             accept_timeout: Duration::from_secs(30),
+            fault_plan: None,
         }
     }
 
@@ -532,6 +618,13 @@ impl Socket {
     /// Deadline for all workers to connect and complete the handshake.
     pub fn accept_timeout(mut self, d: Duration) -> Socket {
         self.accept_timeout = d;
+        self
+    }
+
+    /// Attach a scripted [`FaultPlan`] (deterministic demotions, for
+    /// the fault-injection test harness).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Socket {
+        self.fault_plan = Some(plan);
         self
     }
 }
@@ -629,6 +722,7 @@ impl Transport for Socket {
         if n == 0 {
             return Err(TransportError::Protocol("socket transport needs ≥ 1 worker".into()));
         }
+        validate_quorum(cfg, n)?;
         let zero_init = wire_zero_init(cfg)?;
         let mech_spec = workers[0].map_spec();
         let (listener, _local) = match self.listener.lock().expect("socket listener lock").take()
@@ -671,7 +765,16 @@ impl Transport for Socket {
             let frame = proto::encode_session_hello(&hello)
                 .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
             write_frame(&mut stream, &frame, &ctx)?;
-            peers.push(Peer { id: wid, stream });
+            let addr = stream.peer_desc();
+            peers.push(Peer {
+                id: wid,
+                stream: Some(stream),
+                addr,
+                #[cfg(unix)]
+                needs_resync: false,
+                #[cfg(unix)]
+                absent_streak: 0,
+            });
         }
 
         // The leader keeps only the g_i^t mirrors; the heavy worker
@@ -702,7 +805,76 @@ impl Transport for Socket {
             shard_pool: None,
             failed: false,
             return_to: None,
+            // Retained for the whole session: rejoin attempts are
+            // accepted at round boundaries and mid-drain while any
+            // slot is dead.
+            #[cfg(unix)]
+            listener: Some(listener),
+            #[cfg(unix)]
+            hello_template: hello_template(
+                n,
+                dim,
+                cfg,
+                self.value_coding,
+                &mech_spec,
+                &self.problem_spec,
+                zero_init,
+            ),
+            #[cfg(unix)]
+            quorum: cfg.quorum,
+            #[cfg(unix)]
+            absence_budget: cfg.absence_budget,
+            #[cfg(unix)]
+            quorum_grace: cfg.quorum_grace,
+            #[cfg(unix)]
+            fault_plan: self.fault_plan.clone(),
+            #[cfg(unix)]
+            absent_scratch: Vec::new(),
+            #[cfg(unix)]
+            resync_buf: Vec::new(),
         }))
+    }
+}
+
+/// Bounds-check a quorum request against the fleet size. Quorum rounds
+/// need the readiness-driven drain; on non-unix platforms they are
+/// rejected up front rather than silently ignored.
+pub(crate) fn validate_quorum(cfg: &TrainConfig, n: usize) -> Result<(), TransportError> {
+    if let Some(m) = cfg.quorum {
+        if m == 0 || m > n {
+            return Err(TransportError::Protocol(format!(
+                "quorum {m}/{n} out of range (need 1 ≤ m ≤ n)"
+            )));
+        }
+        #[cfg(not(unix))]
+        return Err(TransportError::Protocol(
+            "quorum rounds need the readiness-driven drain, absent on this platform".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// The per-slot [`SessionHello`] template a resync embeds (worker id
+/// rewritten per slot; mech spec tracks schedule switches).
+#[cfg(unix)]
+fn hello_template(
+    n: usize,
+    dim: usize,
+    cfg: &TrainConfig,
+    value_coding: WireValueCoding,
+    mech_spec: &str,
+    problem_spec: &str,
+    zero_init: bool,
+) -> SessionHello {
+    SessionHello {
+        worker_id: 0,
+        n_workers: n as u32,
+        dim: dim as u32,
+        seed: cfg.seed,
+        zero_init,
+        value_coding,
+        mech_spec: mech_spec.to_string(),
+        problem_spec: problem_spec.to_string(),
     }
 }
 
@@ -786,6 +958,7 @@ impl Transport for PreConnected {
                 granted.len()
             )));
         }
+        validate_quorum(cfg, n)?;
         let zero_init = wire_zero_init(cfg)?;
         let mech_spec = workers[0].map_spec();
         let mut peers = Vec::with_capacity(n);
@@ -804,7 +977,16 @@ impl Transport for PreConnected {
             let frame = proto::encode_session_hello(&hello)
                 .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
             write_frame(&mut stream, &frame, &ctx)?;
-            peers.push(Peer { id: wid, stream });
+            let addr = stream.peer_desc();
+            peers.push(Peer {
+                id: wid,
+                stream: Some(stream),
+                addr,
+                #[cfg(unix)]
+                needs_resync: false,
+                #[cfg(unix)]
+                absent_streak: 0,
+            });
         }
         let h: Vec<Vec<f32>> = workers.iter().map(|w| w.g().to_vec()).collect();
         drop(workers);
@@ -831,13 +1013,54 @@ impl Transport for PreConnected {
             shard_pool: self.shard_pool.clone(),
             failed: false,
             return_to: Some(Arc::clone(&self.return_to)),
+            // Daemon sessions own no listener, so lost slots cannot be
+            // replaced — quorum stand-ins and straggler resync still
+            // work, rejoin does not (documented in PROTOCOL.md).
+            #[cfg(unix)]
+            listener: None,
+            #[cfg(unix)]
+            hello_template: hello_template(
+                n,
+                dim,
+                cfg,
+                self.value_coding,
+                &mech_spec,
+                &self.problem_spec,
+                zero_init,
+            ),
+            #[cfg(unix)]
+            quorum: cfg.quorum,
+            #[cfg(unix)]
+            absence_budget: cfg.absence_budget,
+            #[cfg(unix)]
+            quorum_grace: cfg.quorum_grace,
+            #[cfg(unix)]
+            fault_plan: None,
+            #[cfg(unix)]
+            absent_scratch: Vec::new(),
+            #[cfg(unix)]
+            resync_buf: Vec::new(),
         }))
     }
 }
 
 struct Peer {
     id: usize,
-    stream: Stream,
+    /// `None` = the slot is dead: the connection dropped and no
+    /// replacement has resynced yet. Without a quorum a dead slot
+    /// blocks round completion; with one it folds as a lazy stand-in.
+    stream: Option<Stream>,
+    /// Peer address, for error contexts (best-effort).
+    addr: String,
+    /// Send a resync instead of the round frame at the next boundary
+    /// (set when the slot was demoted or a replacement arrived after
+    /// its round had already folded).
+    #[cfg(unix)]
+    needs_resync: bool,
+    /// Consecutive rounds this slot folded as a stand-in; exceeding
+    /// the absence budget fails the run.
+    #[cfg(unix)]
+    absent_streak: usize,
 }
 
 /// The leader side of a running socket session: one stream per worker,
@@ -887,6 +1110,33 @@ struct SocketLink {
     failed: bool,
     /// Daemon path: streams go back to the idle fleet on clean drop.
     return_to: Option<Arc<FleetReturn>>,
+    /// Retained session listener (solo sessions): accepts mid-session
+    /// rejoins while any slot is dead. `None` on daemon-run sessions.
+    #[cfg(unix)]
+    listener: Option<Listener>,
+    /// The hello a resync embeds; `mech_spec` tracks schedule switches
+    /// so a rejoining worker absorbs directives it missed.
+    #[cfg(unix)]
+    hello_template: SessionHello,
+    /// `Some(m)`: rounds complete with ≥ m live replies, missing slots
+    /// folding as lazy stand-ins. `None`: full participation, dead
+    /// slots block until replaced.
+    #[cfg(unix)]
+    quorum: Option<usize>,
+    #[cfg(unix)]
+    absence_budget: usize,
+    /// How long to keep waiting for live stragglers once quorum is met.
+    #[cfg(unix)]
+    quorum_grace: Duration,
+    #[cfg(unix)]
+    fault_plan: Option<FaultPlan>,
+    /// Per-slot "absent this round" flags (reused across rounds).
+    #[cfg(unix)]
+    absent_scratch: Vec<bool>,
+    /// Resync frame encode scratch (`down_buf` still holds the round
+    /// broadcast when a resync goes out).
+    #[cfg(unix)]
+    resync_buf: Vec<u8>,
 }
 
 impl SocketLink {
@@ -915,18 +1165,152 @@ impl SocketLink {
         // depends on.
         self.down_buf.clear();
         proto::encode_round_start(t, round_seed, eval_loss, x, &mut self.down_buf);
-        for p in self.peers.iter_mut() {
-            write_frame(&mut p.stream, &self.down_buf, "round broadcast")
-                .map_err(|e| tag_worker(e, p.id))?;
-        }
-        // Per-worker semantic downlink bytes: header + iterate (the
-        // kind tag and length prefix are transport framing).
-        self.bytes_down += (proto::ROUND_PAYLOAD_BYTES + 4 * self.dim) as u64;
-
         #[cfg(unix)]
-        self.drain_replies_ready(eval_loss, out)?;
+        {
+            self.begin_round(t, round_seed, eval_loss, x)?;
+            // Per-worker semantic downlink bytes: header + iterate (the
+            // kind tag and length prefix are transport framing). Billed
+            // once per round regardless of absences — the broadcast is
+            // dense either way, and the identity keeps degraded traces
+            // byte-comparable to full ones.
+            self.bytes_down += (proto::ROUND_PAYLOAD_BYTES + 4 * self.dim) as u64;
+            self.drain_replies_ready(t, round_seed, eval_loss, x, out)
+        }
         #[cfg(not(unix))]
-        self.drain_replies_seq(eval_loss, out)?;
+        {
+            for p in self.peers.iter_mut() {
+                let s = p.stream.as_mut().expect("peers never drop mid-session on this platform");
+                write_frame(s, &self.down_buf, "round broadcast")
+                    .map_err(|e| tag_peer(e, p.id, &p.addr))?;
+            }
+            self.bytes_down += (proto::ROUND_PAYLOAD_BYTES + 4 * self.dim) as u64;
+            self.drain_replies_seq(t, eval_loss, out)
+        }
+    }
+
+    /// Send each slot its round-`t` directive: the round broadcast for
+    /// healthy peers, a resync for freshly-rejoined or just-demoted
+    /// ones. Fault-plan demotions and dead slots are flagged absent
+    /// here (quorum mode); dead slots without a quorum stay pending and
+    /// block the drain until a replacement resyncs.
+    #[cfg(unix)]
+    fn begin_round(
+        &mut self,
+        t: u64,
+        round_seed: u64,
+        eval_loss: bool,
+        x: &[f32],
+    ) -> Result<(), TransportError> {
+        let n = self.peers.len();
+        self.absent_scratch.clear();
+        self.absent_scratch.resize(n, false);
+        for i in 0..n {
+            let demoted =
+                self.fault_plan.as_ref().is_some_and(|fp| fp.demoted(t, self.peers[i].id));
+            if demoted {
+                // Withhold the round frame entirely: the worker never
+                // computes round t, its mirror stays coherent, and the
+                // next boundary resyncs it — so scripted absent sets
+                // are pinned with no timing involved.
+                self.absent_scratch[i] = true;
+                self.peers[i].needs_resync = true;
+                continue;
+            }
+            if self.peers[i].stream.is_none() {
+                if self.quorum.is_some() {
+                    self.absent_scratch[i] = true;
+                }
+                continue;
+            }
+            let sent = if self.peers[i].needs_resync {
+                self.send_resync(i, t, round_seed, eval_loss, x)
+            } else {
+                let p = &mut self.peers[i];
+                write_frame(
+                    p.stream.as_mut().expect("checked live above"),
+                    &self.down_buf,
+                    "round broadcast",
+                )
+            };
+            match sent {
+                Ok(()) => self.peers[i].needs_resync = false,
+                Err(e @ TransportError::Disconnected(_)) => {
+                    // The slot died between rounds. Recoverable: fold a
+                    // stand-in (quorum mode) or await a replacement
+                    // (blocking mode, listener retained).
+                    self.peers[i].stream = None;
+                    self.peers[i].needs_resync = false;
+                    if self.quorum.is_some() {
+                        self.absent_scratch[i] = true;
+                    } else if self.listener.is_none() {
+                        return Err(tag_peer(e, self.peers[i].id, &self.peers[i].addr));
+                    }
+                }
+                Err(e) => return Err(tag_peer(e, self.peers[i].id, &self.peers[i].addr)),
+            }
+        }
+        if let Some(m) = self.quorum {
+            let live = self.absent_scratch.iter().filter(|a| !**a).count();
+            if live < m {
+                return Err(TransportError::Io(format!(
+                    "quorum {m}/{n}: only {live} workers live at round {t}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build and send slot `i`'s resync: the full current hello plus
+    /// `(t, round_seed, eval flag, x, g_i)`. Recovery traffic — neither
+    /// billed nor measured.
+    #[cfg(unix)]
+    fn send_resync(
+        &mut self,
+        i: usize,
+        t: u64,
+        round_seed: u64,
+        eval_loss: bool,
+        x: &[f32],
+    ) -> Result<(), TransportError> {
+        let mut hello = self.hello_template.clone();
+        hello.worker_id = self.peers[i].id as u32;
+        let frame = proto::ResyncFrame {
+            hello,
+            t,
+            round_seed,
+            eval_loss,
+            x: x.to_vec(),
+            g: self.h[i].clone(),
+        };
+        self.resync_buf.clear();
+        proto::encode_resync(&frame, &mut self.resync_buf)
+            .map_err(|e| TransportError::Protocol(format!("resync: {e:#}")))?;
+        let p = &mut self.peers[i];
+        write_frame(
+            p.stream.as_mut().expect("resync needs a live stream"),
+            &self.resync_buf,
+            "resync",
+        )
+    }
+
+    /// Fold slot `i` as a LAG-style lazy stand-in: its persisted mirror
+    /// `g_i` is the contribution (a `Keep` — zero delta, zero bits),
+    /// the id is recorded in the round's absent set, and the slot's
+    /// consecutive-absence streak is charged against the budget.
+    #[cfg(unix)]
+    fn fold_absent(&mut self, i: usize, out: &mut RoundAggregate) -> Result<(), TransportError> {
+        let budget = self.absence_budget;
+        let p = &mut self.peers[i];
+        p.absent_streak += 1;
+        if p.absent_streak > budget {
+            return Err(TransportError::Io(format!(
+                "worker {} ({}): absent {} consecutive rounds, exceeding the absence budget \
+                 of {budget}",
+                p.id, p.addr, p.absent_streak
+            )));
+        }
+        out.absent.push(p.id as u32);
+        out.skipped += 1;
         Ok(())
     }
 
@@ -939,12 +1323,21 @@ impl SocketLink {
         &mut self,
         i: usize,
         body: &[u8],
+        t: u64,
         eval_loss: bool,
         out: &mut RoundAggregate,
     ) -> Result<(), TransportError> {
         let wid = self.peers[i].id;
         let reply = proto::split_round_reply(body)
             .map_err(|e| TransportError::Protocol(format!("round reply (worker {wid}): {e:#}")))?;
+        if reply.t != t {
+            // Replies to *older* rounds are discarded before folding;
+            // anything else reaching here is a protocol violation.
+            return Err(TransportError::Protocol(format!(
+                "round reply (worker {wid}): answers round {} during round {t}",
+                reply.t
+            )));
+        }
         if reply.loss.is_some() != eval_loss {
             return Err(TransportError::Protocol(format!(
                 "round reply (worker {wid}): loss sidecar {} but eval_loss was {eval_loss}",
@@ -990,48 +1383,70 @@ impl SocketLink {
     #[cfg(not(unix))]
     fn drain_replies_seq(
         &mut self,
+        t: u64,
         eval_loss: bool,
         out: &mut RoundAggregate,
     ) -> Result<(), TransportError> {
         for i in 0..self.peers.len() {
-            let wid = self.peers[i].id;
             let mut buf = std::mem::take(&mut self.reply_buf);
-            let read = read_frame(&mut self.peers[i].stream, &mut buf, "round reply")
+            let read = {
+                let p = &mut self.peers[i];
+                let id = p.id;
+                let addr = p.addr.clone();
+                read_frame(
+                    p.stream.as_mut().expect("peers never drop mid-session on this platform"),
+                    &mut buf,
+                    "round reply",
+                )
                 .map(|b| b.len())
-                .map_err(|e| tag_worker(e, wid));
-            let folded = read.and_then(|_| self.fold_reply(i, &buf, eval_loss, out));
+                .map_err(|e| tag_peer(e, id, &addr))
+            };
+            let folded = read.and_then(|_| self.fold_reply(i, &buf, t, eval_loss, out));
             self.reply_buf = buf;
             folded?;
         }
         Ok(())
     }
 
-    /// Readiness-driven drain: flip every peer nonblocking, poll(2)
-    /// for readable replies, read frames incrementally as bytes land,
-    /// and fold completed replies in worker-id order. A slow worker's
-    /// reply bytes overlap with everyone else's instead of serializing
-    /// the reads behind worker 0, 1, 2, …; the trace is bit-identical
-    /// to the sequential drain because fold order is by id, never by
-    /// arrival.
+    /// Readiness-driven drain: flip every expected peer nonblocking,
+    /// poll(2) for readable replies, read frames incrementally as bytes
+    /// land, and fold completed replies in worker-id order. A slow
+    /// worker's reply bytes overlap with everyone else's instead of
+    /// serializing the reads behind worker 0, 1, 2, …; the trace is
+    /// bit-identical to the sequential drain because fold order is by
+    /// id, never by arrival. The same poll set watches the retained
+    /// listener while any slot is dead, so replacements resync
+    /// mid-round.
     #[cfg(unix)]
     fn drain_replies_ready(
         &mut self,
+        t: u64,
+        round_seed: u64,
         eval_loss: bool,
+        x: &[f32],
         out: &mut RoundAggregate,
     ) -> Result<(), TransportError> {
-        for p in &self.peers {
-            p.stream
-                .set_nonblocking(true)
-                .map_err(|e| tag_worker(io_err("round reply (set_nonblocking)", e), p.id))?;
+        for (i, p) in self.peers.iter().enumerate() {
+            if self.absent_scratch[i] {
+                continue;
+            }
+            if let Some(s) = &p.stream {
+                s.set_nonblocking(true).map_err(|e| {
+                    tag_peer(io_err("round reply (set_nonblocking)", e), p.id, &p.addr)
+                })?;
+            }
         }
-        let drained = self.drain_ready_inner(eval_loss, out);
+        let drained = self.drain_ready_inner(t, round_seed, eval_loss, x, out);
         // Restore the blocking + per-op-timeout discipline whatever
         // happened; a restore failure only matters if the drain itself
         // succeeded.
         let mut restore = Ok(());
         for p in &self.peers {
-            if let Err(e) = p.stream.set_nonblocking(false) {
-                restore = Err(tag_worker(io_err("round reply (restore blocking)", e), p.id));
+            if let Some(s) = &p.stream {
+                if let Err(e) = s.set_nonblocking(false) {
+                    restore =
+                        Err(tag_peer(io_err("round reply (restore blocking)", e), p.id, &p.addr));
+                }
             }
         }
         drained.and(restore)
@@ -1040,75 +1455,309 @@ impl SocketLink {
     #[cfg(unix)]
     fn drain_ready_inner(
         &mut self,
+        t: u64,
+        round_seed: u64,
         eval_loss: bool,
+        x: &[f32],
         out: &mut RoundAggregate,
     ) -> Result<(), TransportError> {
         let n = self.peers.len();
         if self.reads.len() < n {
             self.reads.resize_with(n, ReplyRead::default);
         }
-        for r in &mut self.reads[..n] {
-            r.reset();
-        }
+        // Note: per-peer read state is NOT reset here — a straggler
+        // demoted mid-frame finishes (and discards) that frame next
+        // round. Consumed frames reset at fold/discard time instead.
+        //
         // Each poll wait is bounded by the per-op io timeout, matching
         // the sequential drain's per-read bound: any readiness progress
         // restarts the clock, a full timeout with zero readiness fails.
-        let timeout_ms: i32 = if self.io_timeout.is_zero() {
+        let io_ms: i32 = if self.io_timeout.is_zero() {
             -1
         } else {
             self.io_timeout.as_millis().clamp(1, i32::MAX as u128) as i32
         };
-        let mut next_fold = 0;
-        while next_fold < n {
-            // Completed peers park with fd = -1 (poll ignores them).
+        let mut next_fold = 0usize;
+        // Real replies completed this round — what the quorum grace
+        // clock keys on (stand-ins and discarded stale frames don't
+        // count).
+        let mut real_done = 0usize;
+        let mut grace_deadline: Option<Instant> = None;
+        loop {
+            // Fold everything foldable, in strict id order: completed
+            // replies and flagged stand-ins alike.
+            while next_fold < n && (self.reads[next_fold].done || self.absent_scratch[next_fold]) {
+                if self.reads[next_fold].done {
+                    let body = std::mem::take(&mut self.reads[next_fold].buf);
+                    let folded = self.fold_reply(next_fold, &body, t, eval_loss, out);
+                    self.reads[next_fold].buf = body;
+                    folded?;
+                    self.reads[next_fold].reset();
+                    self.peers[next_fold].absent_streak = 0;
+                } else {
+                    self.fold_absent(next_fold, out)?;
+                }
+                next_fold += 1;
+            }
+            if next_fold == n {
+                return Ok(());
+            }
+
+            // Quorum met with stragglers outstanding: arm the grace
+            // clock, and demote the holdouts once it runs dry.
+            if let Some(m) = self.quorum {
+                if real_done >= m {
+                    let deadline =
+                        *grace_deadline.get_or_insert_with(|| Instant::now() + self.quorum_grace);
+                    if Instant::now() >= deadline {
+                        self.demote_pending(next_fold);
+                        continue;
+                    }
+                }
+            }
+
+            // Poll the live, still-pending peers — completed and absent
+            // slots park with fd = -1 — plus the listener while any
+            // slot awaits a replacement.
+            let any_dead = self.peers.iter().any(|p| p.stream.is_none());
             self.pollfds.clear();
+            let mut any_fd = false;
             for (i, p) in self.peers.iter().enumerate() {
-                let fd = if self.reads[i].done { -1 } else { p.stream.as_raw_fd() };
+                let pending = i >= next_fold && !self.reads[i].done && !self.absent_scratch[i];
+                let fd = match &p.stream {
+                    Some(s) if pending => {
+                        any_fd = true;
+                        s.as_raw_fd()
+                    }
+                    _ => -1,
+                };
                 self.pollfds.push(readiness::PollFd {
                     fd,
                     events: readiness::POLLIN,
                     revents: 0,
                 });
             }
+            let listener_idx = match &self.listener {
+                Some(l) if any_dead => {
+                    self.pollfds.push(readiness::PollFd {
+                        fd: l.as_raw_fd(),
+                        events: readiness::POLLIN,
+                        revents: 0,
+                    });
+                    any_fd = true;
+                    Some(n)
+                }
+                _ => None,
+            };
+            if !any_fd {
+                // Nothing can make progress: a dead slot is blocking
+                // the round and no listener is retained to replace it.
+                let p = &self.peers[next_fold];
+                return Err(TransportError::Disconnected(format!(
+                    "worker {} ({}): died mid-session and this transport cannot accept a \
+                     replacement",
+                    p.id, p.addr
+                )));
+            }
+            let mut timeout_ms = io_ms;
+            if let Some(dl) = grace_deadline {
+                let rem = dl.saturating_duration_since(Instant::now());
+                let rem_ms = rem.as_millis().clamp(1, i32::MAX as u128) as i32;
+                timeout_ms = if timeout_ms < 0 { rem_ms } else { timeout_ms.min(rem_ms) };
+            }
             let ready = readiness::wait(&mut self.pollfds, timeout_ms)
                 .map_err(|e| io_err("round reply (poll)", e))?;
             if ready == 0 {
-                return Err(TransportError::Io(
-                    "round reply (poll): timed out waiting for worker replies".into(),
-                ));
+                if let Some(dl) = grace_deadline {
+                    if Instant::now() >= dl {
+                        self.demote_pending(next_fold);
+                        continue;
+                    }
+                }
+                return Err(self.pending_timeout_error(next_fold));
             }
-            for i in 0..n {
-                if !self.reads[i].done && self.pollfds[i].revents != 0 {
-                    self.pump_peer(i)?;
+            if let Some(li) = listener_idx {
+                if self.pollfds[li].revents != 0 {
+                    self.accept_replacements(t, round_seed, eval_loss, x, next_fold)?;
                 }
             }
-            // Fold every reply whose turn has come, in id order.
-            while next_fold < n && self.reads[next_fold].done {
-                let body = std::mem::take(&mut self.reads[next_fold].buf);
-                let folded = self.fold_reply(next_fold, &body, eval_loss, out);
-                self.reads[next_fold].buf = body;
-                folded?;
-                next_fold += 1;
+            for i in 0..n {
+                if self.pollfds[i].fd < 0 || self.pollfds[i].revents == 0 {
+                    continue;
+                }
+                match self.pump_peer(i, t) {
+                    Ok(completed) => {
+                        if completed {
+                            real_done += 1;
+                        }
+                    }
+                    Err(e @ TransportError::Disconnected(_)) => {
+                        // The peer died mid-round. Recoverable unless
+                        // nothing can stand in or step in for it.
+                        self.reads[i].reset();
+                        self.peers[i].stream = None;
+                        if let Some(m) = self.quorum {
+                            self.absent_scratch[i] = true;
+                            let present = self.absent_scratch.iter().filter(|a| !**a).count();
+                            if present < m {
+                                return Err(TransportError::Io(format!(
+                                    "quorum {m}/{n}: {e} left only {present} workers in the \
+                                     round"
+                                )));
+                            }
+                        } else if self.listener.is_none() {
+                            return Err(e);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
             }
+        }
+    }
+
+    /// Grace expired: every live, still-pending slot becomes absent for
+    /// this round and is resynced at the next boundary (its late reply,
+    /// if any, is discarded by round index).
+    #[cfg(unix)]
+    fn demote_pending(&mut self, next_fold: usize) {
+        for i in next_fold..self.peers.len() {
+            if !self.reads[i].done && !self.absent_scratch[i] && self.peers[i].stream.is_some() {
+                self.absent_scratch[i] = true;
+                self.peers[i].needs_resync = true;
+            }
+        }
+    }
+
+    /// The timeout error names every worker the round is still waiting
+    /// on, with peer addresses.
+    #[cfg(unix)]
+    fn pending_timeout_error(&self, next_fold: usize) -> TransportError {
+        let pending: Vec<String> = self
+            .peers
+            .iter()
+            .enumerate()
+            .skip(next_fold)
+            .filter(|(i, _)| !self.reads[*i].done && !self.absent_scratch[*i])
+            .map(|(_, p)| format!("worker {} ({})", p.id, p.addr))
+            .collect();
+        TransportError::Io(format!(
+            "round reply (poll): timed out waiting for {}",
+            pending.join(", ")
+        ))
+    }
+
+    /// Drain the listener: accept every queued rejoin attempt, filling
+    /// the lowest dead slot first. A slot whose round has not folded
+    /// yet gets its resync immediately and participates in the pending
+    /// round — which is what lets a blocked round complete bit-for-bit
+    /// after a crash — while one already folded absent is held to the
+    /// next boundary. A broken rejoin attempt is dropped without
+    /// failing the round (the slot stays dead; the next attempt can
+    /// try again).
+    #[cfg(unix)]
+    fn accept_replacements(
+        &mut self,
+        t: u64,
+        round_seed: u64,
+        eval_loss: bool,
+        x: &[f32],
+        next_fold: usize,
+    ) -> Result<(), TransportError> {
+        loop {
+            let Some(slot) = self.peers.iter().position(|p| p.stream.is_none()) else {
+                return Ok(());
+            };
+            let listener = self.listener.as_ref().expect("accept_replacements needs a listener");
+            let stream = match listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) => return Err(io_err("rejoin accept", e)),
+            };
+            let _ = self.install_replacement(slot, stream, t, round_seed, eval_loss, x, next_fold);
+        }
+    }
+
+    /// Handshake an accepted rejoin connection into a dead slot and
+    /// resync it (now, or at the next boundary if this round already
+    /// folded the slot absent).
+    #[cfg(unix)]
+    #[allow(clippy::too_many_arguments)]
+    fn install_replacement(
+        &mut self,
+        slot: usize,
+        mut stream: Stream,
+        t: u64,
+        round_seed: u64,
+        eval_loss: bool,
+        x: &[f32],
+        next_fold: usize,
+    ) -> Result<(), TransportError> {
+        // The handshake runs blocking under a bounded timeout: a silent
+        // rejoiner must not stall the round past the io budget.
+        let hs = if self.io_timeout.is_zero() { Duration::from_secs(30) } else { self.io_timeout };
+        stream.configure(hs).map_err(|e| io_err("configuring rejoin stream", e))?;
+        let wid = self.peers[slot].id;
+        let ctx = format!("rejoin handshake (worker {wid})");
+        let mut scratch = Vec::new();
+        let body = read_frame(&mut stream, &mut scratch, &ctx)?;
+        proto::decode_worker_hello(body)
+            .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+        stream.configure(self.io_timeout).map_err(|e| io_err("configuring rejoin stream", e))?;
+        let addr = stream.peer_desc();
+        self.peers[slot].stream = Some(stream);
+        self.peers[slot].addr = addr;
+        if slot >= next_fold && !self.absent_scratch[slot] {
+            // The pending round is blocked on this slot: resync now so
+            // its reply completes the round.
+            if let Err(e) = self.send_resync(slot, t, round_seed, eval_loss, x) {
+                self.peers[slot].stream = None;
+                return Err(tag_peer(e, wid, &self.peers[slot].addr));
+            }
+            self.reads[slot].reset();
+            if let Some(s) = &self.peers[slot].stream {
+                if let Err(e) = s.set_nonblocking(true) {
+                    self.peers[slot].stream = None;
+                    return Err(tag_peer(
+                        io_err("rejoin set_nonblocking", e),
+                        wid,
+                        &self.peers[slot].addr,
+                    ));
+                }
+            }
+        } else {
+            // Its round already folded absent: hold the resync to the
+            // next boundary.
+            self.peers[slot].needs_resync = true;
         }
         Ok(())
     }
 
     /// Pump one readable peer: advance its length-prefix/body read as
-    /// far as the socket allows without blocking. Completing the frame
-    /// sets `done`; `WouldBlock` just returns (poll will call back).
+    /// far as the socket allows without blocking. Completing a frame
+    /// for the current round `t` sets `done` and returns `Ok(true)`;
+    /// `Ok(false)` means would-block, or that a stale frame (answering
+    /// an earlier round than `t` — a demoted straggler's late reply)
+    /// was read and discarded.
     #[cfg(unix)]
-    fn pump_peer(&mut self, i: usize) -> Result<(), TransportError> {
+    fn pump_peer(&mut self, i: usize, t: u64) -> Result<bool, TransportError> {
+        self.pump_peer_tagless(i, t).map_err(|e| match e {
+            TransportError::Protocol(_) => e,
+            other => tag_peer(other, self.peers[i].id, &self.peers[i].addr),
+        })
+    }
+
+    #[cfg(unix)]
+    fn pump_peer_tagless(&mut self, i: usize, t: u64) -> Result<bool, TransportError> {
         fn eof() -> std::io::Error {
             std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "connection closed mid-frame")
         }
         let wid = self.peers[i].id;
-        let stream = &mut self.peers[i].stream;
+        let stream = self.peers[i].stream.as_mut().expect("pump_peer requires a live stream");
         let r = &mut self.reads[i];
         loop {
             if r.len_got < r.len_buf.len() {
                 match stream.read(&mut r.len_buf[r.len_got..]) {
-                    Ok(0) => return Err(tag_worker(io_err("round reply", eof()), wid)),
+                    Ok(0) => return Err(io_err("round reply", eof())),
                     Ok(k) => {
                         r.len_got += k;
                         if r.len_got == r.len_buf.len() {
@@ -1123,32 +1772,56 @@ impl SocketLink {
                             r.buf.resize(len as usize, 0);
                             r.body_got = 0;
                             if len == 0 {
+                                if reply_round(&r.buf).is_some_and(|rt| rt < t) {
+                                    r.reset();
+                                    continue;
+                                }
                                 r.done = true;
-                                return Ok(());
+                                return Ok(true);
                             }
                         }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                    Err(e) => return Err(tag_worker(io_err("round reply", e), wid)),
+                    Err(e) => return Err(io_err("round reply", e)),
                 }
             } else {
                 let got = r.body_got;
                 match stream.read(&mut r.buf[got..]) {
-                    Ok(0) => return Err(tag_worker(io_err("round reply", eof()), wid)),
+                    Ok(0) => return Err(io_err("round reply", eof())),
                     Ok(k) => {
                         r.body_got += k;
                         if r.body_got == r.buf.len() {
+                            // A reply answering an earlier round is a
+                            // demoted straggler's leftover: discard it
+                            // (unbilled, unmeasured) and keep reading
+                            // this peer for the current round's frame.
+                            if reply_round(&r.buf).is_some_and(|rt| rt < t) {
+                                r.reset();
+                                continue;
+                            }
                             r.done = true;
-                            return Ok(());
+                            return Ok(true);
                         }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                    Err(e) => return Err(tag_worker(io_err("round reply", e), wid)),
+                    Err(e) => return Err(io_err("round reply", e)),
                 }
             }
         }
+    }
+}
+
+/// Round index echoed by an UP_ROUND reply, if the body is one.
+/// Non-reply or short bodies return None (decode rejects them later
+/// with a precise error).
+#[cfg(unix)]
+fn reply_round(body: &[u8]) -> Option<u64> {
+    if body.len() >= proto::ROUND_REPLY_HEADER_BYTES && body.first() == Some(&proto::UP_ROUND) {
+        Some(u64::from_le_bytes(body[2..10].try_into().ok()?))
+    } else {
+        None
     }
 }
 
@@ -1181,17 +1854,32 @@ impl TransportLink for SocketLink {
     ) -> Result<u64, TransportError> {
         // Remote workers cannot take the map handle — they rebuild the
         // mechanism from the directive's parseable spec, which is the
-        // whole point of the MechSwitch wire format.
+        // whole point of the MechSwitch wire format. Decode it here too
+        // so rejoin hellos advertise the mechanism that is actually
+        // live from this round on.
+        #[cfg(unix)]
+        {
+            let ms = proto::decode_mech_switch(frame).map_err(|e| {
+                TransportError::Protocol(format!("mech-switch directive: {e:#}"))
+            })?;
+            self.hello_template.mech_spec = ms.spec;
+        }
         self.down_buf.clear();
         self.down_buf.push(proto::DOWN_SWITCH);
         self.down_buf.extend_from_slice(frame);
         for i in 0..self.peers.len() {
             let wid = self.peers[i].id;
-            if let Err(e) =
-                write_frame(&mut self.peers[i].stream, &self.down_buf, "mech-switch broadcast")
-            {
+            #[cfg(unix)]
+            if self.peers[i].stream.is_none() || self.peers[i].needs_resync {
+                // Dead or demoted slots absorb the switch through their
+                // next resync's hello, which now carries the new spec.
+                continue;
+            }
+            let addr = self.peers[i].addr.clone();
+            let stream = self.peers[i].stream.as_mut().expect("live slots have a stream");
+            if let Err(e) = write_frame(stream, &self.down_buf, "mech-switch broadcast") {
                 self.failed = true;
-                return Err(tag_worker(e, wid));
+                return Err(tag_peer(e, wid, &addr));
             }
         }
         self.bytes_down += frame.len() as u64;
@@ -1220,7 +1908,7 @@ impl Drop for SocketLink {
             if !self.failed {
                 let mut idle = fleet.streams.lock().expect("fleet return lock");
                 for p in self.peers.drain(..) {
-                    let mut stream = p.stream;
+                    let Some(mut stream) = p.stream else { continue };
                     if write_frame(&mut stream, &[proto::DOWN_SESSION_END], "session end").is_ok()
                     {
                         idle.push(stream);
@@ -1231,7 +1919,9 @@ impl Drop for SocketLink {
         }
         // Best-effort orderly shutdown so agents exit cleanly.
         for p in self.peers.iter_mut() {
-            let _ = write_frame(&mut p.stream, &[proto::DOWN_SHUTDOWN], "shutdown");
+            if let Some(stream) = p.stream.as_mut() {
+                let _ = write_frame(stream, &[proto::DOWN_SHUTDOWN], "shutdown");
+            }
         }
     }
 }
@@ -1240,13 +1930,100 @@ impl Drop for SocketLink {
 // The worker side: the agent the far end runs.
 // ---------------------------------------------------------------------
 
+/// A scripted fault schedule for a worker agent, keyed on round
+/// indices — the fault-injection harness behind `threepc worker
+/// --fault`. Grammar (comma-separated, any order):
+///
+/// ```text
+/// drop@N         read round N's frame, answer nothing (straggle)
+/// delay@N:Xms    answer round N only after sleeping X milliseconds
+/// crash@N        drop the connection just before processing round N
+/// reconnect@N    after a scripted crash, re-dial and resync
+/// ```
+///
+/// `reconnect@N`'s round index is accepted for grammar symmetry but
+/// ignored: the agent re-dials as soon as the scripted crash has
+/// happened (the leader decides, via its retained listener, when the
+/// rejoin is admitted). Reconnection never arms for *unscripted*
+/// failures — a real wire error still kills the agent loudly.
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    drops: Vec<u64>,
+    delays: Vec<(u64, Duration)>,
+    crashes: Vec<u64>,
+    reconnect: bool,
+}
+
+impl FaultScript {
+    /// Parse the `--fault` grammar, e.g.
+    /// `drop@12,delay@30:500ms,crash@50,reconnect@55`.
+    pub fn parse(s: &str) -> anyhow::Result<FaultScript> {
+        let mut out = FaultScript::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (verb, at) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault '{part}': expected <verb>@<round>"))?;
+            match verb {
+                "drop" => out.drops.push(parse_round_index(at, part)?),
+                "crash" => out.crashes.push(parse_round_index(at, part)?),
+                "reconnect" => {
+                    parse_round_index(at, part)?;
+                    out.reconnect = true;
+                }
+                "delay" => {
+                    let (t, ms) = at.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("fault '{part}': expected delay@<round>:<ms>ms")
+                    })?;
+                    let t = parse_round_index(t, part)?;
+                    let ms: u64 = ms
+                        .strip_suffix("ms")
+                        .unwrap_or(ms)
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("fault '{part}': bad delay: {e}"))?;
+                    out.delays.push((t, Duration::from_millis(ms)));
+                }
+                other => anyhow::bail!(
+                    "fault '{part}': unknown verb '{other}' (want drop, delay, crash, reconnect)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    fn drop_at(&self, t: u64) -> bool {
+        self.drops.contains(&t)
+    }
+
+    fn crash_at(&self, t: u64) -> bool {
+        self.crashes.contains(&t)
+    }
+
+    fn delay_at(&self, t: u64) -> Option<Duration> {
+        self.delays.iter().find(|(r, _)| *r == t).map(|(_, d)| *d)
+    }
+
+    /// Whether the script arms auto-reconnect after a scripted crash.
+    pub fn reconnects(&self) -> bool {
+        self.reconnect
+    }
+}
+
+fn parse_round_index(s: &str, part: &str) -> anyhow::Result<u64> {
+    s.parse().map_err(|e| anyhow::anyhow!("fault '{part}': bad round index '{s}': {e}"))
+}
+
 /// Worker-agent resilience knobs.
 #[derive(Debug, Clone)]
 pub struct AgentConfig {
     /// Bounded connect-and-handshake attempts before giving up.
     pub connect_attempts: u32,
-    /// Sleep between attempts.
+    /// Initial sleep between connect attempts; doubles (jitter-free)
+    /// after every failed attempt up to [`retry_backoff_max`].
+    ///
+    /// [`retry_backoff_max`]: AgentConfig::retry_backoff_max
     pub retry_backoff: Duration,
+    /// Cap on the exponential connect backoff.
+    pub retry_backoff_max: Duration,
     /// Per-operation read/write timeout once connected (zero = none).
     pub io_timeout: Duration,
     /// Diagnostics knob: delay every round reply by this much — a
@@ -1255,6 +2032,9 @@ pub struct AgentConfig {
     /// traces no matter how late a reply lands). Zero = reply
     /// immediately.
     pub reply_delay: Duration,
+    /// Scripted faults (drops, delays, crashes, reconnection) for the
+    /// fault-injection harness; default = no faults.
+    pub fault: FaultScript,
 }
 
 impl Default for AgentConfig {
@@ -1262,8 +2042,10 @@ impl Default for AgentConfig {
         AgentConfig {
             connect_attempts: 20,
             retry_backoff: Duration::from_millis(100),
+            retry_backoff_max: Duration::from_secs(2),
             io_timeout: Duration::from_secs(60),
             reply_delay: Duration::ZERO,
+            fault: FaultScript::default(),
         }
     }
 }
@@ -1281,23 +2063,36 @@ pub(crate) fn try_connect(addr: &Addr) -> std::io::Result<Stream> {
     }
 }
 
+/// What the leader granted at handshake time: a fresh session, or a
+/// mid-session resync (the leader is re-admitting this connection into
+/// a live session whose round clock is already running).
+enum SessionStart {
+    Hello(SessionHello),
+    Resync(proto::ResyncFrame),
+}
+
 /// Bounded reconnect-with-handshake: dial, send the worker hello, and
-/// wait for the session hello; io-level failures (leader not up yet,
-/// accept backlog, timeouts) retry with backoff, protocol-level
-/// failures (bad magic, version mismatch) fail fast — retrying cannot
-/// fix those. `Ok(None)` is a clean end before any session: a
-/// `threepc serve` daemon shutting down releases fleet members that
-/// were never granted work with a shutdown frame.
+/// wait for the session hello (or, on a mid-session rejoin, a resync
+/// frame); io-level failures (leader not up yet, accept backlog,
+/// timeouts) retry with exponential backoff — jitter-free doubling
+/// from [`AgentConfig::retry_backoff`] capped at
+/// [`AgentConfig::retry_backoff_max`] — while protocol-level failures
+/// (bad magic, version mismatch) fail fast: retrying cannot fix those.
+/// `Ok(None)` is a clean end before any session: a `threepc serve`
+/// daemon shutting down releases fleet members that were never granted
+/// work with a shutdown frame.
 fn connect_and_handshake(
     addr: &str,
     cfg: &AgentConfig,
-) -> Result<Option<(Stream, SessionHello)>, TransportError> {
+) -> Result<Option<(Stream, SessionStart)>, TransportError> {
     let parsed = parse_addr(addr)?;
     let attempts = cfg.connect_attempts.max(1);
     let mut last = TransportError::Io(format!("no connect attempts made for {addr}"));
+    let mut backoff = cfg.retry_backoff;
     for attempt in 0..attempts {
         if attempt > 0 {
-            std::thread::sleep(cfg.retry_backoff);
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(cfg.retry_backoff_max.max(cfg.retry_backoff));
         }
         let mut stream = match try_connect(&parsed) {
             Ok(s) => s,
@@ -1315,9 +2110,10 @@ fn connect_and_handshake(
             continue;
         }
         let mut buf = Vec::new();
-        let hello = match read_frame(&mut stream, &mut buf, "awaiting session hello") {
+        let start = match read_frame(&mut stream, &mut buf, "awaiting session hello") {
             Ok(body) => match proto::decode_downlink(body) {
-                Ok(DownlinkFrame::Hello(h)) => h,
+                Ok(DownlinkFrame::Hello(h)) => SessionStart::Hello(h),
+                Ok(DownlinkFrame::Resync(r)) => SessionStart::Resync(r),
                 Ok(DownlinkFrame::Shutdown) => return Ok(None),
                 Ok(other) => {
                     // A leader speaking the right protocol but out of
@@ -1338,7 +2134,7 @@ fn connect_and_handshake(
                 continue;
             }
         };
-        return Ok(Some((stream, hello)));
+        return Ok(Some((stream, start)));
     }
     Err(last)
 }
@@ -1350,6 +2146,10 @@ enum AgentFlow {
     /// The *session* is over but the daemon keeps the connection; the
     /// agent discards its worker state and awaits the next hello.
     SessionEnd,
+    /// A scripted `crash@t` fired: the agent drops the connection
+    /// without replying, then (if the script says `reconnect`) re-dials
+    /// for a resync.
+    Crashed,
 }
 
 /// Run a worker agent until its leader shuts it down: connect to
@@ -1363,13 +2163,13 @@ enum AgentFlow {
 /// `threepc worker --connect <addr>`, and what loopback tests spawn on
 /// threads.
 pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
-    let Some((mut stream, mut hello)) =
+    let Some((mut stream, mut start)) =
         connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?
     else {
         return Ok(());
     };
     loop {
-        match serve_worker_session(&mut stream, &hello, cfg.reply_delay)? {
+        match serve_worker_session(&mut stream, start, cfg)? {
             AgentFlow::Shutdown => return Ok(()),
             AgentFlow::SessionEnd => {
                 stream
@@ -1388,23 +2188,33 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
                 stream
                     .configure(cfg.io_timeout)
                     .map_err(|e| anyhow::anyhow!("{}", io_err("configuring stream", e)))?;
-                hello = next;
+                start = SessionStart::Hello(next);
+            }
+            AgentFlow::Crashed => {
+                if !cfg.fault.reconnects() {
+                    // crash@t without reconnect: the process just dies,
+                    // as a real crash would.
+                    return Ok(());
+                }
+                drop(stream);
+                let Some((s, next)) =
+                    connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?
+                else {
+                    return Ok(());
+                };
+                stream = s;
+                start = next;
             }
         }
     }
 }
 
-/// Serve one session on an established, hello'd connection (the round
-/// loop the solo agent and the daemon-parked agent share).
-/// `reply_delay` is [`AgentConfig::reply_delay`].
-fn serve_worker_session(
-    stream: &mut Stream,
+/// Parse and cross-check a hello's problem + mechanism specs.
+fn parse_session_specs(
     hello: &SessionHello,
-    reply_delay: Duration,
-) -> anyhow::Result<AgentFlow> {
+) -> anyhow::Result<(Distributed, Arc<dyn ThreePointMap>)> {
     let d = hello.dim as usize;
     let n = hello.n_workers as usize;
-    let wid = hello.worker_id as usize;
     let problem = parse_problem_spec(&hello.problem_spec)
         .with_context(|| format!("hello problem spec '{}'", hello.problem_spec))?;
     anyhow::ensure!(
@@ -1419,61 +2229,187 @@ fn serve_worker_session(
     );
     let map = parse_mechanism(&hello.mech_spec)
         .with_context(|| format!("hello mech spec '{}'", hello.mech_spec))?;
-    let init = if hello.zero_init { InitPolicy::Zero } else { InitPolicy::FullGradient };
+    Ok((problem, map))
+}
+
+/// Reusable per-reply scratch buffers for the agent's round loop.
+#[derive(Default)]
+struct ReplyScratch {
+    no_acc: Vec<f64>,
+    wire: Vec<u8>,
+    up: Vec<u8>,
+    reply: Vec<u8>,
+}
+
+/// Run the worker's round-`t` computation and encode the full reply
+/// frame into `scratch.reply` (the caller writes it, possibly after a
+/// scripted delay).
+#[allow(clippy::too_many_arguments)]
+fn build_round_reply(
+    worker: &mut WorkerState,
+    wid: usize,
+    d: usize,
+    t: u64,
+    round_seed: u64,
+    eval_loss: bool,
+    x: &[f32],
+    value_coding: WireValueCoding,
+    scratch: &mut ReplyScratch,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(x.len() == d, "round iterate has {} coords (session dimension {d})", x.len());
+    // Fused path: a fusing mechanism (EF21 over Top-K) encodes its
+    // Increment's frame bytes into `wire` during compression —
+    // identical bytes to the generic encoder; anything else leaves
+    // `wire` empty and falls back below.
+    scratch.wire.clear();
+    let o = worker.round_acc_wire(
+        x,
+        round_seed,
+        &mut scratch.no_acc,
+        None,
+        value_coding,
+        &mut scratch.wire,
+    );
+    scratch.up.clear();
+    if let (false, Update::Increment { inc, .. }) = (scratch.wire.is_empty(), worker.last_update())
+    {
+        debug_assert_eq!(scratch.wire.len(), inc.encoded_len_with(value_coding));
+        proto::assemble_increment_uplink(wid, o.g_err, &scratch.wire, &mut scratch.up);
+    } else {
+        encode_uplink_into(wid, o.g_err, worker.last_update(), value_coding, &mut scratch.up);
+    }
+    let loss = if eval_loss { Some(worker.loss(x)) } else { None };
+    scratch.reply.clear();
+    proto::encode_round_reply(t, &scratch.up, worker.true_grad(), loss, &mut scratch.reply);
+    Ok(())
+}
+
+/// Rebuild worker state from a resync frame — the leader's persisted
+/// `(x, g_i)` for this slot — and answer the round the resync carries.
+/// Recovery traffic: the reply is written immediately, with no
+/// scripted delays (faults apply to normally-delivered round frames
+/// only, so a crash-at-`t` script cannot re-fire on its own resync and
+/// loop forever).
+fn resync_worker(
+    stream: &mut Stream,
+    r: proto::ResyncFrame,
+    scratch: &mut ReplyScratch,
+) -> anyhow::Result<WorkerState> {
+    let d = r.hello.dim as usize;
+    let n = r.hello.n_workers as usize;
+    let wid = r.hello.worker_id as usize;
+    let (problem, map) = parse_session_specs(&r.hello)?;
+    anyhow::ensure!(
+        r.x.len() == d,
+        "resync iterate has {} coords (session dimension {d})",
+        r.x.len()
+    );
+    anyhow::ensure!(
+        r.g.len() == d,
+        "resync mirror has {} coords (session dimension {d})",
+        r.g.len()
+    );
     let mut worker =
-        WorkerState::new(wid, n, problem.locals[wid].clone(), map, &problem.x0, init, hello.seed);
+        WorkerState::resync(wid, n, problem.locals[wid].clone(), map, &r.x, r.g, r.hello.seed);
+    build_round_reply(
+        &mut worker,
+        wid,
+        d,
+        r.t,
+        r.round_seed,
+        r.eval_loss,
+        &r.x,
+        r.hello.value_coding,
+        scratch,
+    )?;
+    write_frame(stream, &scratch.reply, "resync reply").map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(worker)
+}
+
+/// Serve one session on an established, hello'd (or resync'd)
+/// connection — the round loop the solo agent, the daemon-parked
+/// agent, and the mid-session rejoiner share. Scripted faults from
+/// [`AgentConfig::fault`] fire on round indices as the frames arrive.
+fn serve_worker_session(
+    stream: &mut Stream,
+    start: SessionStart,
+    cfg: &AgentConfig,
+) -> anyhow::Result<AgentFlow> {
+    let mut scratch = ReplyScratch::default();
+    let (hello, mut worker) = match start {
+        SessionStart::Hello(h) => {
+            let (problem, map) = parse_session_specs(&h)?;
+            let wid = h.worker_id as usize;
+            let init = if h.zero_init { InitPolicy::Zero } else { InitPolicy::FullGradient };
+            let worker = WorkerState::new(
+                wid,
+                h.n_workers as usize,
+                problem.locals[wid].clone(),
+                map,
+                &problem.x0,
+                init,
+                h.seed,
+            );
+            (h, worker)
+        }
+        SessionStart::Resync(r) => {
+            let h = r.hello.clone();
+            let worker = resync_worker(stream, r, &mut scratch)?;
+            (h, worker)
+        }
+    };
+    let d = hello.dim as usize;
+    let wid = hello.worker_id as usize;
 
     let mut buf = Vec::new();
-    let mut no_acc: Vec<f64> = Vec::new();
-    let mut wire = Vec::new();
-    let mut up = Vec::new();
-    let mut reply = Vec::new();
     loop {
         let body =
             read_frame(stream, &mut buf, "awaiting round").map_err(|e| anyhow::anyhow!("{e}"))?;
         match proto::decode_downlink(body)? {
-            DownlinkFrame::Round { round_seed, eval_loss, x, .. } => {
-                anyhow::ensure!(
-                    x.len() == d,
-                    "round iterate has {} coords (session dimension {d})",
-                    x.len()
-                );
-                // Fused path: a fusing mechanism (EF21 over Top-K)
-                // encodes its Increment's frame bytes into `wire`
-                // during compression — identical bytes to the generic
-                // encoder; anything else leaves `wire` empty and falls
-                // back below.
-                wire.clear();
-                let o = worker.round_acc_wire(
-                    &x,
+            DownlinkFrame::Round { t, round_seed, eval_loss, x } => {
+                if cfg.fault.crash_at(t) {
+                    // Scripted crash: die without replying, mid-round
+                    // from the leader's point of view.
+                    return Ok(AgentFlow::Crashed);
+                }
+                if cfg.fault.drop_at(t) {
+                    // Scripted straggle: swallow the round whole. The
+                    // worker computes nothing, so its state stays equal
+                    // to the leader's mirror; the leader folds the
+                    // stand-in and resyncs us at the next boundary.
+                    continue;
+                }
+                build_round_reply(
+                    &mut worker,
+                    wid,
+                    d,
+                    t,
                     round_seed,
-                    &mut no_acc,
-                    None,
+                    eval_loss,
+                    &x,
                     hello.value_coding,
-                    &mut wire,
+                    &mut scratch,
+                )?;
+                if let Some(extra) = cfg.fault.delay_at(t) {
+                    std::thread::sleep(extra);
+                }
+                if !cfg.reply_delay.is_zero() {
+                    std::thread::sleep(cfg.reply_delay);
+                }
+                write_frame(stream, &scratch.reply, "round reply")
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            DownlinkFrame::Resync(r) => {
+                // Mid-session resync: the leader demoted us (straggle,
+                // scripted fault) and is re-baselining this slot from
+                // its mirror before the round it carries.
+                anyhow::ensure!(
+                    r.hello.worker_id as usize == wid && r.hello.dim as usize == d,
+                    "resync rebinds worker {} (dim {}) on a worker-{wid} (dim {d}) session",
+                    r.hello.worker_id,
+                    r.hello.dim
                 );
-                up.clear();
-                if let (false, Update::Increment { inc, .. }) =
-                    (wire.is_empty(), worker.last_update())
-                {
-                    debug_assert_eq!(wire.len(), inc.encoded_len_with(hello.value_coding));
-                    proto::assemble_increment_uplink(wid, o.g_err, &wire, &mut up);
-                } else {
-                    encode_uplink_into(
-                        wid,
-                        o.g_err,
-                        worker.last_update(),
-                        hello.value_coding,
-                        &mut up,
-                    );
-                }
-                let loss = if eval_loss { Some(worker.loss(&x)) } else { None };
-                reply.clear();
-                proto::encode_round_reply(&up, worker.true_grad(), loss, &mut reply);
-                if !reply_delay.is_zero() {
-                    std::thread::sleep(reply_delay);
-                }
-                write_frame(stream, &reply, "round reply").map_err(|e| anyhow::anyhow!("{e}"))?;
+                worker = resync_worker(stream, r, &mut scratch)?;
             }
             DownlinkFrame::Switch(ms) => {
                 let map = parse_mechanism(&ms.spec)
@@ -1597,5 +2533,47 @@ mod tests {
             Err(TransportError::Io(m)) => assert!(m.contains("accept timed out"), "{m}"),
             other => panic!("expected accept timeout, got {:?}", other.map(|_| ())),
         }
+    }
+
+    #[test]
+    fn fault_script_grammar() {
+        let fs = FaultScript::parse("drop@12, delay@30:500ms, crash@50, reconnect@55").unwrap();
+        assert!(fs.drop_at(12) && !fs.drop_at(13));
+        assert_eq!(fs.delay_at(30), Some(Duration::from_millis(500)));
+        assert_eq!(fs.delay_at(31), None);
+        assert!(fs.crash_at(50) && !fs.crash_at(51));
+        assert!(fs.reconnects());
+
+        // The ms suffix is optional; reconnect is off by default.
+        let fs = FaultScript::parse("delay@7:25").unwrap();
+        assert_eq!(fs.delay_at(7), Some(Duration::from_millis(25)));
+        assert!(!fs.reconnects());
+        assert!(FaultScript::parse("").unwrap().delays.is_empty());
+
+        assert!(FaultScript::parse("explode@3").is_err());
+        assert!(FaultScript::parse("drop3").is_err());
+        assert!(FaultScript::parse("delay@3").is_err());
+        assert!(FaultScript::parse("drop@x").is_err());
+        assert!(FaultScript::parse("delay@3:xms").is_err());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn fault_plan_demotions_are_round_and_id_scoped() {
+        let plan = FaultPlan::new().demote(3, &[1]).demote(5, &[0, 2]);
+        assert!(plan.demoted(3, 1));
+        assert!(!plan.demoted(3, 0));
+        assert!(!plan.demoted(4, 1));
+        assert!(plan.demoted(5, 0) && plan.demoted(5, 2) && !plan.demoted(5, 1));
+    }
+
+    #[test]
+    fn quorum_validation_rejects_out_of_range() {
+        let quorum = |m| TrainConfig { quorum: m, ..TrainConfig::default() };
+        assert!(validate_quorum(&quorum(Some(0)), 4).is_err());
+        assert!(validate_quorum(&quorum(Some(5)), 4).is_err());
+        assert!(validate_quorum(&quorum(None), 4).is_ok());
+        #[cfg(unix)]
+        assert!(validate_quorum(&quorum(Some(4)), 4).is_ok());
     }
 }

@@ -110,6 +110,11 @@ pub struct RoundAggregate {
     pub g_err_sum: f64,
     /// Σ of per-worker losses (only meaningful on eval rounds).
     pub loss_sum: f64,
+    /// Workers folded as LAG-style lazy stand-ins this round (quorum
+    /// mode on the socket transport): their persisted `g_i` mirror
+    /// stood in, no uplink bits were billed, and no `bits` entry was
+    /// pushed. Sorted ascending; always empty for in-memory transports.
+    pub absent: Vec<u32>,
 }
 
 impl RoundAggregate {
@@ -125,6 +130,7 @@ impl RoundAggregate {
             skipped: 0,
             g_err_sum: 0.0,
             loss_sum: 0.0,
+            absent: Vec::new(),
         }
     }
 
@@ -154,6 +160,7 @@ impl RoundAggregate {
         self.skipped = 0;
         self.g_err_sum = 0.0;
         self.loss_sum = 0.0;
+        self.absent.clear();
     }
 }
 

@@ -73,6 +73,36 @@ impl WorkerState {
         WorkerState { id, problem, mech, rng, info, grad_buf: vec![0.0f32; d], init_bits }
     }
 
+    /// Rebuild worker `id` mid-session from a leader resync: `g⁰` is the
+    /// wire-carried mirror (already known to both sides — 0 init bits)
+    /// and the mechanism's third point is re-seated at `∇f_i(x)` for the
+    /// resync iterate. For mechanisms whose compressor ignores the `y`
+    /// point (EF21/Top-K families, LAG/CLAG triggers re-anchor next
+    /// round, GD) and that draw no worker-private randomness, a resynced
+    /// worker's subsequent replies are bit-identical to the replies the
+    /// lost worker would have sent — which is what the crash→rejoin
+    /// trace-equality suites pin.
+    pub fn resync(
+        id: usize,
+        n: usize,
+        problem: Arc<dyn LocalProblem>,
+        map: Arc<dyn ThreePointMap>,
+        x: &[f32],
+        g: Vec<f32>,
+        seed: u64,
+    ) -> WorkerState {
+        let d = problem.dim();
+        assert_eq!(g.len(), d, "resync mirror dim mismatch for worker {id}");
+        let info = CtxInfo { dim: d, n_workers: n, worker_id: id };
+        // Same per-worker stream construction as `new`: exact for
+        // mechanisms that draw no worker-private randomness.
+        let rng = Pcg64::new(seed, 0x1000 + id as u64);
+        let mut grad0 = vec![0.0f32; d];
+        problem.grad(x, &mut grad0);
+        let mech = MechWorker::new(map, g, grad0);
+        WorkerState { id, problem, mech, rng, info, grad_buf: vec![0.0f32; d], init_bits: 0 }
+    }
+
     /// Current `g_i^t`.
     pub fn g(&self) -> &[f32] {
         self.mech.g()
@@ -226,6 +256,29 @@ mod tests {
         let w = quad_worker(InitPolicy::FromState(rs));
         assert_eq!(w.g(), &[0.5, -0.5, 0.25]);
         assert_eq!(w.init_bits, 0);
+    }
+
+    #[test]
+    fn resync_reproduces_the_lost_workers_rounds() {
+        // Drive a reference worker a few rounds, then rebuild a
+        // stand-in from its mirror via resync: subsequent rounds must
+        // match bit-for-bit (EF21 ignores the y point and draws no
+        // worker-private randomness).
+        let mut a = quad_worker(InitPolicy::FullGradient);
+        let x = [0.5f32, -0.5, 0.25];
+        for t in 0..5 {
+            a.round(&x, t);
+        }
+        let p = Arc::new(QuadLocal::new(1.0, 0.5, vec![0.2, -0.1, 0.4]));
+        let map = parse_mechanism("ef21:top1").unwrap();
+        let mut b = WorkerState::resync(0, 1, p, map, &x, a.g().to_vec(), 42);
+        assert_eq!(b.init_bits, 0);
+        for t in 5..10 {
+            let ma = a.round(&x, t);
+            let mb = b.round(&x, t);
+            assert_eq!(a.g(), b.g(), "round {t}");
+            assert_eq!(ma.g_err.to_bits(), mb.g_err.to_bits(), "round {t}");
+        }
     }
 
     #[test]

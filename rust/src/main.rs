@@ -76,11 +76,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.get("connect").ok_or_else(|| {
         anyhow::anyhow!("worker needs --connect tcp://host:port or uds://path")
     })?;
+    let fault = match args.get("fault") {
+        Some(script) => threepc::coordinator::FaultScript::parse(script)?,
+        None => threepc::coordinator::FaultScript::default(),
+    };
     let cfg = AgentConfig {
         connect_attempts: args.num_or("retries", 20u32),
         retry_backoff: Duration::from_millis(args.num_or("retry-backoff-ms", 100u64)),
+        retry_backoff_max: Duration::from_millis(args.num_or("retry-backoff-max-ms", 2_000u64)),
         io_timeout: Duration::from_millis(args.num_or("io-timeout-ms", 60_000u64)),
         reply_delay: Duration::from_millis(args.num_or("reply-delay-ms", 0u64)),
+        fault,
     };
     println!("threepc worker: connecting to {addr}");
     threepc::coordinator::run_worker_agent(addr, &cfg)?;
@@ -330,12 +336,24 @@ fn print_help() {
                                       socket: --wire-natural for the same, and\n\
                                       --spawn-workers to run the agents in-process\n\
                                       over loopback; quad problems only)\n\
+           --quorum m/n               (socket only) complete each round once m of the\n\
+                                      n workers reply; the rest fold as LAG-style\n\
+                                      stand-ins from their persisted g_i mirrors\n\
+           --quorum-grace-ms M        extra wait for stragglers once quorum met (50)\n\
+           --absence-budget K         fail after K consecutive stand-in rounds for\n\
+                                      one worker (default: unbounded)\n\
          \n\
          worker flags:\n\
            --connect tcp://host:port|uds://path  the leader's listen address\n\
            --retries N                bounded connect-and-handshake attempts (20)\n\
-           --retry-backoff-ms M       sleep between attempts (100)\n\
+           --retry-backoff-ms M       initial sleep between attempts (100); doubles\n\
+                                      per failed attempt (exponential backoff)\n\
+           --retry-backoff-max-ms M   cap on the exponential backoff (2000)\n\
            --io-timeout-ms M          per-read/write timeout once connected (60000)\n\
+           --fault <script>           scripted fault injection, e.g.\n\
+                                      drop@12,delay@30:500ms,crash@50,reconnect@55\n\
+                                      (reconnect re-dials after a scripted crash and\n\
+                                      resyncs from the leader's state mirror)\n\
          \n\
          serve flags:\n\
            --listen tcp://host:port|uds://path  the daemon's listen address\n\
@@ -351,7 +369,8 @@ fn print_help() {
            --spec \"problem=quad:n:d:lambda:noise:seed;mech=ef21:top4;rounds=40;…\"\n\
                                       (submit) keys: problem, mech|schedule, rounds,\n\
                                       gamma, seed, tol, bits-budget, loss-every,\n\
-                                      record-every, init, coding, checkpoint[-every]\n\
+                                      record-every, init, coding, checkpoint[-every],\n\
+                                      quorum=m/n, absence-budget\n\
            --attach                   (submit) stream the new session to completion\n\
            --id N                     (status/attach/cancel) the session id\n"
     );
@@ -500,6 +519,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         .map(|g| g.parse::<f64>())
         .transpose()?
         .unwrap_or(base * args.num_or("gamma-mult", 1.0));
+    let transport = args.str_or("transport", "inproc");
+    let quorum = match args.get("quorum") {
+        Some(q) => {
+            anyhow::ensure!(
+                transport.starts_with("tcp://") || transport.starts_with("uds://"),
+                "--quorum only applies to socket transports (tcp://…|uds://…): degraded \
+                 rounds stand in for *remote* workers that fail to reply"
+            );
+            let (m, total) = q
+                .split_once('/')
+                .ok_or_else(|| anyhow::anyhow!("--quorum expects m/n, got '{q}'"))?;
+            let m: usize = m.parse().map_err(|e| anyhow::anyhow!("--quorum m: {e}"))?;
+            let total: usize = total.parse().map_err(|e| anyhow::anyhow!("--quorum n: {e}"))?;
+            anyhow::ensure!(
+                total == problem.n_workers(),
+                "--quorum denominator {total} != worker count {}",
+                problem.n_workers()
+            );
+            anyhow::ensure!((1..=total).contains(&m), "--quorum needs 1 ≤ m ≤ {total}, got {m}");
+            Some(m)
+        }
+        None => None,
+    };
     let cfg = TrainConfig {
         gamma,
         max_rounds: args.num_or("rounds", 500usize),
@@ -509,9 +551,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.num_or("seed", 42u64),
         threads: args.num_or("threads", 0usize),
         init: args.str_or("init", "full").parse()?,
+        quorum,
+        absence_budget: args.num_or("absence-budget", usize::MAX),
+        quorum_grace: Duration::from_millis(args.num_or("quorum-grace-ms", 50u64)),
         ..TrainConfig::default()
     };
-    let transport = args.str_or("transport", "inproc");
     println!(
         "threepc train: schedule={schedule_spec} backend={backend} transport={transport} n={} d={} gamma={} rounds={}",
         problem.n_workers(),

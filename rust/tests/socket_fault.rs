@@ -1,0 +1,245 @@
+//! Fault-injection acceptance suite for the self-healing socket
+//! transport (unix only — the recovery machinery rides on poll(2)):
+//!
+//! * **Quorum rounds** with scripted stragglers must be bit-identical
+//!   across reruns, with the per-round `absent` sets pinned to the
+//!   [`FaultPlan`], and a quorum session in which nobody is ever absent
+//!   must reproduce the full-participation trace bit-for-bit.
+//! * **Crash → reconnect → resync** in the default blocking mode must
+//!   reproduce the uninterrupted reference round-for-round, bit-for-bit,
+//!   with `transport_error: None`.
+//! * **Absence-budget exhaustion** must surface as a
+//!   `transport_error` naming the worker, with the partial trace
+//!   retained.
+#![cfg(unix)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::Duration;
+
+use threepc::coordinator::socket::quad_problem_spec;
+use threepc::coordinator::{
+    run_worker_agent, AgentConfig, FaultPlan, FaultScript, Socket, TrainConfig, TrainResult,
+    TrainSession, TransportError,
+};
+use threepc::problems::quadratic;
+
+const N: usize = 4;
+const D: usize = 30;
+const LAMBDA: f64 = 1e-2;
+const NOISE: f64 = 0.5;
+const QSEED: u64 = 21;
+
+/// EF21 over Top-K: y-independent and randomness-free, so a resynced
+/// worker reconstructs its mechanism state exactly from the leader's
+/// `g_i` mirror — the bit-equality assertions below rely on that.
+const SPEC: &str = "ef21:top3";
+
+fn suite() -> quadratic::QuadSuite {
+    quadratic::generate(N, D, LAMBDA, NOISE, QSEED)
+}
+
+fn problem_spec() -> String {
+    quad_problem_spec(N, D, LAMBDA, NOISE, QSEED)
+}
+
+/// A generous `quorum_grace` so a healthy-but-scheduled-out loopback
+/// worker is never demoted on timing — every demotion in this suite
+/// comes from the [`FaultPlan`], keeping the traces deterministic.
+fn cfg(rounds: usize, quorum: Option<usize>) -> TrainConfig {
+    TrainConfig {
+        gamma: 0.02,
+        max_rounds: rounds,
+        threads: 1,
+        seed: 13,
+        quorum,
+        quorum_grace: Duration::from_secs(5),
+        ..TrainConfig::default()
+    }
+}
+
+fn bind_socket(addr: &str) -> Socket {
+    Socket::bind(addr, &problem_spec())
+        .expect("bind")
+        .accept_timeout(Duration::from_secs(60))
+        .io_timeout(Duration::from_secs(60))
+}
+
+/// A fresh, short, unique uds path (parallel tests must not collide).
+fn uds_addr() -> String {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let id = NEXT.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!("3pcf-{}-{}.sock", std::process::id(), id));
+    format!("uds://{}", path.display())
+}
+
+/// Spawn one agent per config (index = spawn order, not worker id —
+/// ids are assigned by accept order, which loopback keeps aligned
+/// closely enough for these scripts to land on *some* worker
+/// deterministically only when every agent carries the same script;
+/// tests that pin a specific worker id do it through the leader-side
+/// [`FaultPlan`] instead).
+fn spawn_agents_with(
+    addr: &str,
+    cfgs: Vec<AgentConfig>,
+) -> Vec<thread::JoinHandle<anyhow::Result<()>>> {
+    cfgs.into_iter()
+        .map(|c| {
+            let a = addr.to_string();
+            thread::spawn(move || run_worker_agent(&a, &c))
+        })
+        .collect()
+}
+
+fn join_agents(joins: Vec<thread::JoinHandle<anyhow::Result<()>>>) {
+    for j in joins {
+        j.join().expect("agent thread").expect("agent exits cleanly");
+    }
+}
+
+fn run_session(sock: Socket, c: &TrainConfig, agent_cfgs: Vec<AgentConfig>) -> TrainResult {
+    let s = suite();
+    let listen = sock.local_addr().expect("bound address");
+    let joins = spawn_agents_with(&listen, agent_cfgs);
+    let r = TrainSession::builder(&s.problem)
+        .mechanism_spec(SPEC)
+        .unwrap()
+        .config(c.clone())
+        .transport(sock)
+        .run();
+    join_agents(joins);
+    r
+}
+
+fn default_agents(n: usize) -> Vec<AgentConfig> {
+    (0..n).map(|_| AgentConfig::default()).collect()
+}
+
+/// Bit-for-bit physics equality plus the billed-uplink ledger (the
+/// resync path must bill recovered replies exactly like ordinary ones).
+fn assert_trace_eq(a: &TrainResult, b: &TrainResult, tag: &str) {
+    assert_eq!(a.rounds_run, b.rounds_run, "{tag}: rounds_run");
+    assert_eq!(a.records.len(), b.records.len(), "{tag}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            ra.grad_norm_sq.to_bits(),
+            rb.grad_norm_sq.to_bits(),
+            "{tag} round {}: grad_norm_sq {} vs {}",
+            ra.t,
+            ra.grad_norm_sq,
+            rb.grad_norm_sq
+        );
+        assert_eq!(ra.g_err.to_bits(), rb.g_err.to_bits(), "{tag} round {}: g_err", ra.t);
+        assert_eq!(ra.skipped_frac, rb.skipped_frac, "{tag} round {}: skipped_frac", ra.t);
+        assert_eq!(ra.bits_up_cum, rb.bits_up_cum, "{tag} round {}: bits_up_cum", ra.t);
+        assert_eq!(ra.bits_down_cum, rb.bits_down_cum, "{tag} round {}: bits_down_cum", ra.t);
+        assert_eq!(ra.absent, rb.absent, "{tag} round {}: absent set", ra.t);
+        assert_eq!(ra.mech_switch, rb.mech_switch, "{tag} round {}: mech_switch", ra.t);
+        assert_eq!(ra.loss, rb.loss, "{tag} round {}: loss", ra.t);
+    }
+    for (i, (xa, xb)) in a.final_x.iter().zip(&b.final_x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{tag}: final_x[{i}]");
+    }
+}
+
+fn absent_at(r: &TrainResult, t: usize) -> Vec<u32> {
+    r.records
+        .iter()
+        .find(|rec| rec.t == t)
+        .unwrap_or_else(|| panic!("no record for round {t}"))
+        .absent
+        .clone()
+}
+
+/// A quorum session with leader-scripted demotions is deterministic:
+/// rerunning the identical plan reproduces the trace bit-for-bit, and
+/// every `absent` set is exactly what the plan demanded — never a
+/// timing artifact.
+#[test]
+fn scripted_quorum_stragglers_are_bit_reproducible() {
+    let plan = || FaultPlan::new().demote(3, &[1]).demote(5, &[0]).demote(6, &[0]);
+    let c = cfg(12, Some(3));
+    let run = || {
+        let sock = bind_socket(&uds_addr()).fault_plan(plan());
+        run_session(sock, &c, default_agents(N))
+    };
+    let a = run();
+    assert!(a.transport_error.is_none(), "{:?}", a.transport_error);
+    // The absent sets are pinned by the plan, round for round.
+    for rec in &a.records {
+        let expect: Vec<u32> = match rec.t {
+            3 => vec![1],
+            5 | 6 => vec![0],
+            _ => vec![],
+        };
+        assert_eq!(rec.absent, expect, "round {}: absent set", rec.t);
+    }
+    let b = run();
+    assert_trace_eq(&a, &b, "scripted quorum rerun");
+}
+
+/// A quorum session in which every worker always answers inside the
+/// grace window is indistinguishable — bit-for-bit — from the default
+/// full-participation mode.
+#[test]
+fn quorum_with_full_participation_matches_blocking_mode() {
+    let full = run_session(bind_socket(&uds_addr()), &cfg(12, None), default_agents(N));
+    assert!(full.transport_error.is_none(), "{:?}", full.transport_error);
+    let quorum = run_session(bind_socket(&uds_addr()), &cfg(12, Some(3)), default_agents(N));
+    assert!(quorum.transport_error.is_none(), "{:?}", quorum.transport_error);
+    for rec in &quorum.records {
+        assert!(rec.absent.is_empty(), "round {}: unexpected absence {:?}", rec.t, rec.absent);
+    }
+    assert_trace_eq(&full, &quorum, "quorum(4-of-4-answering) vs blocking");
+}
+
+/// The flagship recovery property: a worker that crashes mid-session
+/// and reconnects is resynced into the very round it abandoned, and
+/// the healed session reproduces the uninterrupted reference
+/// round-for-round, bit-for-bit — including the billed uplink ledger.
+#[test]
+fn crash_reconnect_resync_matches_uninterrupted_reference() {
+    let c = cfg(10, None);
+    let reference = run_session(bind_socket("tcp://127.0.0.1:0"), &c, default_agents(N));
+    assert!(reference.transport_error.is_none(), "{:?}", reference.transport_error);
+
+    let mut agents = default_agents(N - 1);
+    agents.push(AgentConfig {
+        fault: FaultScript::parse("crash@5,reconnect@5").expect("fault grammar"),
+        ..AgentConfig::default()
+    });
+    let healed = run_session(bind_socket("tcp://127.0.0.1:0"), &c, agents);
+    assert!(healed.transport_error.is_none(), "{:?}", healed.transport_error);
+    // Blocking mode: the rejoined worker answers the crashed round
+    // itself, so no round ever records an absence.
+    for rec in &healed.records {
+        assert!(rec.absent.is_empty(), "round {}: unexpected absence {:?}", rec.t, rec.absent);
+    }
+    assert_trace_eq(&reference, &healed, "crash@5 + reconnect vs uninterrupted");
+}
+
+/// Exhausting the absence budget is a hard failure: the run stops with
+/// a `transport_error` naming the worker and the budget, and the
+/// partial trace (with its recorded absences) survives for post-mortem.
+#[test]
+fn absence_budget_exhaustion_surfaces_transport_error() {
+    let plan = FaultPlan::new()
+        .demote(1, &[2])
+        .demote(2, &[2])
+        .demote(3, &[2])
+        .demote(4, &[2]);
+    let c = TrainConfig { absence_budget: 2, ..cfg(10, Some(3)) };
+    let sock = bind_socket(&uds_addr()).fault_plan(plan);
+    let r = run_session(sock, &c, default_agents(N));
+    match &r.transport_error {
+        Some(TransportError::Io(m)) => {
+            assert!(m.contains("absence budget"), "unexpected message: {m}");
+            assert!(m.contains("worker 2"), "unexpected message: {m}");
+        }
+        other => panic!("expected an io error, got {other:?}"),
+    }
+    // Rounds before the breach completed and kept their absence record.
+    assert_eq!(absent_at(&r, 1), vec![2]);
+    assert_eq!(absent_at(&r, 2), vec![2]);
+    assert!(r.records.iter().all(|rec| rec.t != 3), "round 3 must not have completed");
+}

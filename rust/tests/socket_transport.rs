@@ -389,7 +389,9 @@ fn spawn_rogue(addr: String, mode: Rogue) -> thread::JoinHandle<()> {
                 });
                 let grad = vec![0.0f32; d];
                 let mut body = Vec::new();
-                encode_round_reply(&up, &grad, None, &mut body);
+                // Echo round 0 — the round this reply answers — so the
+                // dimension check is what fires, not the stale-reply one.
+                encode_round_reply(0, &up, &grad, None, &mut body);
                 write_raw(&mut s, &body);
                 let _ = read_raw(&mut s);
             }
@@ -400,7 +402,9 @@ fn spawn_rogue(addr: String, mode: Rogue) -> thread::JoinHandle<()> {
 /// Run a session against N-1 honest agents and one rogue.
 fn run_with_rogue(mode: Rogue) -> TrainResult {
     let s = suite();
-    let sock = bind_socket("tcp://127.0.0.1:0");
+    // A short io timeout: a dead slot now waits for a rejoin before the
+    // round can finish, and no replacement is coming in these scenarios.
+    let sock = bind_socket("tcp://127.0.0.1:0").io_timeout(Duration::from_secs(2));
     let listen = sock.local_addr().unwrap();
     let rogue = spawn_rogue(listen.clone(), mode);
     let agents = spawn_agents(&listen, N - 1);

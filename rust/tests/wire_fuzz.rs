@@ -18,9 +18,10 @@ use std::cell::Cell;
 use threepc::compressors::{CVec, Ctx, CtxInfo, WireValueCoding};
 use threepc::coordinator::protocol::{
     assemble_increment_uplink, decode_client_frame, decode_downlink, decode_mech_switch,
-    decode_serve_frame, decode_worker_hello, encode_client_frame, encode_mech_switch,
-    encode_round_reply, encode_round_start, encode_serve_frame, encode_session_hello,
-    encode_uplink_with, encode_worker_hello, split_round_reply, SessionHello,
+    decode_resync, decode_serve_frame, decode_worker_hello, encode_client_frame,
+    encode_mech_switch, encode_resync, encode_round_reply, encode_round_start,
+    encode_serve_frame, encode_session_hello, encode_uplink_with, encode_worker_hello,
+    split_round_reply, ResyncFrame, SessionHello,
 };
 use threepc::coordinator::{
     decode_uplink, Checkpoint, ClientFrame, MechSwitch, MetricUpdate, RejectCode, RoundRecord,
@@ -287,6 +288,47 @@ fn downlink_frames_survive_truncation_and_bit_flips() {
     }
 }
 
+/// The rejoin vocabulary: the RESYNC downlink (embedded hello + round
+/// directive + `(x, g_i)` mirrors) must survive the same battery, both
+/// through the dedicated decoder and through the agent's downlink
+/// dispatch. The embedded length fields and the hello-carried dimension
+/// are the attack surface — a hostile `dim` must fail the body-length
+/// check before it sizes an allocation.
+#[test]
+fn resync_frames_survive_truncation_and_bit_flips() {
+    let d = 30usize;
+    let frame = {
+        let r = ResyncFrame {
+            hello: SessionHello {
+                worker_id: 3,
+                n_workers: 6,
+                dim: d as u32,
+                seed: 21,
+                zero_init: false,
+                value_coding: WireValueCoding::Natural,
+                mech_spec: "ef21:top4".into(),
+                problem_spec: "quad:6:30:0.01:0.5:21".into(),
+            },
+            t: 17,
+            round_seed: 0xdead_beef,
+            eval_loss: true,
+            x: (0..d).map(|i| i as f32 * 0.5 - 7.0).collect(),
+            g: (0..d).map(|i| 1.0 - i as f32 * 0.25).collect(),
+        };
+        let mut buf = Vec::new();
+        encode_resync(&r, &mut buf).unwrap();
+        assert_eq!(decode_resync(&buf).unwrap(), r);
+        buf
+    };
+    assert!(decode_downlink(&frame).is_ok());
+    fuzz_decoder(&frame, &|b| {
+        let _ = decode_resync(b);
+    });
+    fuzz_decoder(&frame, &|b| {
+        let _ = decode_downlink(b);
+    });
+}
+
 #[test]
 fn handshake_and_switch_frames_survive_truncation_and_bit_flips() {
     let wh = encode_worker_hello();
@@ -324,7 +366,7 @@ fn round_replies_survive_truncation_and_bit_flips() {
     let grad = vec![0.5f32, -1.0, 2.0, 0.0];
     for loss in [None, Some(3.5)] {
         let mut body = Vec::new();
-        encode_round_reply(&up, &grad, loss, &mut body);
+        encode_round_reply(9, &up, &grad, loss, &mut body);
         assert!(split_round_reply(&body).is_ok());
         fuzz_decoder(&body, &|b| {
             // Chain into the uplink decoder like the leader link does.
@@ -383,6 +425,7 @@ fn serve_frames_survive_truncation_and_bit_flips() {
         skipped_frac: 0.25,
         loss: Some(3.5),
         mech_switch: Some("EF21(Top-4)".into()),
+        absent: vec![1, 3],
     };
     let frames = [
         ServeFrame::Hello,
@@ -395,7 +438,7 @@ fn serve_frames_survive_truncation_and_bit_flips() {
         ServeFrame::Metric(MetricUpdate { id: 3, record: record.clone() }),
         ServeFrame::Metric(MetricUpdate {
             id: 4,
-            record: RoundRecord { loss: None, mech_switch: None, ..record },
+            record: RoundRecord { loss: None, mech_switch: None, absent: vec![], ..record },
         }),
         ServeFrame::Result(SessionResult {
             id: 3,

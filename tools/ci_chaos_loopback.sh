@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# Chaos gate for the self-healing socket transport, through the real
+# binary over UDS: a leader with four external `threepc worker`
+# processes loses one of them to SIGKILL mid-session; a fresh worker
+# re-dials with --connect, is resynced into the abandoned round, and
+# the healed session's final `result-bits:` line must equal an
+# uninterrupted reference run exactly — the recovery path may not
+# perturb a single bit of the trace.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+cargo build --release
+BIN=target/release/threepc
+
+TMP="$(mktemp -d)"
+PIDS=()
+cleanup() {
+    for p in ${PIDS[@]+"${PIDS[@]}"}; do kill -9 "$p" 2>/dev/null || true; done
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+# 300 rounds with a 10 ms worker-side reply delay keeps the session
+# alive for ~3 s, so a kill at the 2 s mark reliably lands mid-run.
+# The delay shifts timing only — the trace bits are delay-independent.
+TRAIN_COMMON=(--problem quad --workers 4 --d 30 --lambda 0.01 --noise-scale 0.5
+              --seed 21 --gamma 0.02 --rounds 300 --mech ef21:top3)
+result_bits() { grep '^result-bits:' "$1" | tail -n1; }
+
+echo "=== uninterrupted reference run ==="
+"$BIN" train "${TRAIN_COMMON[@]}" --spawn-workers \
+    --transport "uds://$TMP/ref.sock" > "$TMP/ref.txt"
+REF="$(result_bits "$TMP/ref.txt")"
+echo "ref: $REF"
+[ -n "$REF" ]
+
+echo "=== chaos run: external workers, one SIGKILLed mid-session ==="
+ADDR="uds://$TMP/chaos.sock"
+"$BIN" train "${TRAIN_COMMON[@]}" --transport "$ADDR" > "$TMP/chaos.txt" 2>&1 &
+LEADER=$!
+PIDS+=("$LEADER")
+for _ in $(seq 1 100); do
+    [ -S "$TMP/chaos.sock" ] && break
+    kill -0 "$LEADER" || { cat "$TMP/chaos.txt"; exit 1; }
+    sleep 0.1
+done
+[ -S "$TMP/chaos.sock" ]
+
+WORKERS=()
+for i in 1 2 3 4; do
+    "$BIN" worker --connect "$ADDR" --reply-delay-ms 10 \
+        > "$TMP/worker-$i.log" 2>&1 &
+    WORKERS+=("$!")
+    PIDS+=("$!")
+done
+
+sleep 2
+kill -0 "$LEADER" 2>/dev/null || {
+    echo "FAIL: session finished before the chaos landed (raise --rounds)"
+    cat "$TMP/chaos.txt"
+    exit 1
+}
+VICTIM="${WORKERS[1]}"
+kill -9 "$VICTIM"
+echo "SIGKILLed worker pid $VICTIM mid-session"
+
+echo "=== mid-session reconnection: a fresh worker takes the dead slot ==="
+"$BIN" worker --connect "$ADDR" --reply-delay-ms 10 \
+    > "$TMP/worker-rejoin.log" 2>&1 &
+PIDS+=("$!")
+
+if ! wait "$LEADER"; then
+    echo "FAIL: leader exited nonzero after the rejoin"
+    cat "$TMP/chaos.txt" "$TMP"/worker-*.log
+    exit 1
+fi
+GOT="$(result_bits "$TMP/chaos.txt")"
+echo "got: $GOT"
+[ "$GOT" = "$REF" ] || {
+    echo "FAIL: healed session diverged from the uninterrupted reference"
+    cat "$TMP/chaos.txt" "$TMP"/worker-*.log
+    exit 1
+}
+
+echo "chaos loopback kill-and-rejoin OK"
