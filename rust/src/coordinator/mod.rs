@@ -102,6 +102,17 @@ pub struct ResumeState {
     pub g_sum: Vec<f64>,
     /// Per-worker `g_i^{t+1}`, indexed by worker id.
     pub worker_g: Vec<Vec<f32>>,
+    /// Per-worker cumulative billed uplink bits at the checkpoint,
+    /// indexed by worker id — restored into the resumed [`Server`] so
+    /// the billing clock continues instead of restarting. All-zero when
+    /// resuming from a pre-ledger (version 2) checkpoint.
+    pub worker_bits: Vec<u64>,
+    /// Cumulative downlink bits per worker at the checkpoint.
+    pub bits_down: u64,
+    /// Measured transport bytes at the checkpoint (seeded into
+    /// byte-measuring links so `wire_bytes_*` also continue).
+    pub wire_bytes_up: u64,
+    pub wire_bytes_down: u64,
 }
 
 impl ResumeState {
@@ -126,16 +137,27 @@ impl ResumeState {
             anyhow::ensure!(slots[*id].is_none(), "checkpoint repeats worker id {id}");
             slots[*id] = Some(g.clone());
         }
-        let worker_g = slots
+        let worker_g: Vec<Vec<f32>> = slots
             .into_iter()
             .map(|s| s.expect("n entries, unique in-range ids → every slot filled"))
             .collect();
+        // The ledger reindexes by the same ids; a pre-ledger (v2)
+        // checkpoint has no entries and resumes with a zero clock.
+        let mut worker_bits = vec![0u64; n];
+        for (id, bits) in &cp.worker_bits {
+            anyhow::ensure!(*id < n, "checkpoint ledger id {id} out of range (n = {n})");
+            worker_bits[*id] = *bits;
+        }
         Ok(ResumeState {
             t: cp.t,
             grad_norm_sq: cp.grad_norm_sq,
             x: cp.x.clone(),
             g_sum: cp.g_sum.clone(),
             worker_g,
+            worker_bits,
+            bits_down: cp.bits_down,
+            wire_bytes_up: cp.wire_bytes_up,
+            wire_bytes_down: cp.wire_bytes_down,
         })
     }
 }

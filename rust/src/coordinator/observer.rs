@@ -37,6 +37,15 @@ pub struct RoundSnapshot<'a> {
     pub bits_up_max: u64,
     /// Cumulative downlink broadcast bits per worker.
     pub bits_down_cum: f64,
+    /// Per-worker cumulative billed uplink bits, indexed by worker id
+    /// (the server's exact ledger — what checkpoints persist so a
+    /// resumed run continues the billing clock instead of resetting it).
+    pub bits_up: &'a [u64],
+    /// Cumulative downlink bits per worker, as an exact integer.
+    pub bits_down: u64,
+    /// Measured transport bytes so far (0 on non-serializing links).
+    pub wire_bytes_up: u64,
+    pub wire_bytes_down: u64,
     pub skipped_frac: f64,
     /// `f(x^{t+1})` on evaluation rounds.
     pub loss: Option<f64>,
@@ -184,36 +193,55 @@ impl<F: FnMut(&RoundSnapshot<'_>)> RoundObserver for StreamObserver<F> {
 }
 
 /// A persisted optimizer state: the iterate, the leader's exact f64
-/// aggregate, and every worker's `g_i` — the entire Algorithm-1 state,
+/// aggregate, every worker's `g_i` — the entire Algorithm-1 state,
 /// so a resumed session ([`SessionBuilder::resume_from`](super::SessionBuilder::resume_from))
 /// continues the original trajectory exactly (up to worker-private
-/// randomness, which draw-free mechanisms never consume).
+/// randomness, which draw-free mechanisms never consume) — plus the
+/// bit/byte ledger as of round `t`, so the resumed run's accounting is
+/// the uninterrupted run's accounting, not a restarted clock.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// The last *committed* round: every round ≤ `t` is folded into
+    /// this state; a restart replays from `t + 1` with the same round
+    /// seeds (a round interrupted mid-fold was never committed and is
+    /// simply run again).
     pub t: usize,
     pub grad_norm_sq: f64,
     pub x: Vec<f32>,
     /// The leader's f64 aggregate fold state `n·g^{t+1}`.
     pub g_sum: Vec<f64>,
     pub worker_g: Vec<(usize, Vec<f32>)>,
+    /// Per-worker cumulative billed uplink bits, keyed by worker id
+    /// (same ids as `worker_g`). Empty on version-2 files.
+    pub worker_bits: Vec<(usize, u64)>,
+    /// Cumulative downlink bits per worker. Zero on version-2 files.
+    pub bits_down: u64,
+    /// Measured transport bytes. Zero on version-2 files and on
+    /// non-serializing transports.
+    pub wire_bytes_up: u64,
+    pub wire_bytes_down: u64,
 }
 
 const CHECKPOINT_MAGIC: &[u8; 4] = b"3PCK";
 
 impl Checkpoint {
-    /// Serialize to the flat binary checkpoint format (version 2; the
-    /// pre-schedule version 1 lacked `g_sum` and is no longer read).
+    /// Serialize to the flat binary checkpoint format (version 3;
+    /// version 2 — still read, with a zero ledger — lacked the ledger
+    /// fields, version 1 lacked `g_sum` and is no longer read).
     pub fn to_bytes(&self) -> Vec<u8> {
         let d = self.x.len();
         let mut out = Vec::with_capacity(
-            4 + 4 + 8 + 4 + 4 + 8 + 4 * d + 8 * d + self.worker_g.len() * (4 + 4 * d),
+            4 + 4 + 8 + 4 + 4 + 8 + 24 + 4 * d + 8 * d + self.worker_g.len() * (4 + 8 + 4 * d),
         );
         out.extend_from_slice(CHECKPOINT_MAGIC);
-        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&3u32.to_le_bytes());
         out.extend_from_slice(&(self.t as u64).to_le_bytes());
         out.extend_from_slice(&(d as u32).to_le_bytes());
         out.extend_from_slice(&(self.worker_g.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.grad_norm_sq.to_le_bytes());
+        out.extend_from_slice(&self.bits_down.to_le_bytes());
+        out.extend_from_slice(&self.wire_bytes_up.to_le_bytes());
+        out.extend_from_slice(&self.wire_bytes_down.to_le_bytes());
         for v in &self.x {
             out.extend_from_slice(&v.to_le_bytes());
         }
@@ -223,6 +251,13 @@ impl Checkpoint {
         }
         for (id, g) in &self.worker_g {
             out.extend_from_slice(&(*id as u32).to_le_bytes());
+            let bits = self
+                .worker_bits
+                .iter()
+                .find(|(wid, _)| wid == id)
+                .map(|(_, b)| *b)
+                .unwrap_or(0);
+            out.extend_from_slice(&bits.to_le_bytes());
             debug_assert_eq!(g.len(), d);
             for v in g {
                 out.extend_from_slice(&v.to_le_bytes());
@@ -236,20 +271,33 @@ impl Checkpoint {
         ensure!(buf.len() >= 4 && buf[..4] == CHECKPOINT_MAGIC[..], "not a 3PC checkpoint");
         let mut pos = 4usize;
         let version = read_u32(buf, &mut pos)?;
-        ensure!(version == 2, "unsupported checkpoint version {version}");
+        ensure!(
+            version == 2 || version == 3,
+            "unsupported checkpoint version {version}"
+        );
         ensure!(buf.len() >= pos + 8, "truncated checkpoint header");
         let t = u64::from_le_bytes(buf[pos..pos + 8].try_into().expect("8-byte slice")) as usize;
         pos += 8;
         let d = read_u32(buf, &mut pos)? as usize;
         let n = read_u32(buf, &mut pos)? as usize;
         let grad_norm_sq = read_f64(buf, &mut pos)?;
+        let (mut bits_down, mut wire_bytes_up, mut wire_bytes_down) = (0u64, 0u64, 0u64);
+        let per_worker_extra: u128 = if version >= 3 {
+            ensure!(buf.len() >= pos + 24, "truncated checkpoint ledger");
+            bits_down = read_u64_le(buf, &mut pos);
+            wire_bytes_up = read_u64_le(buf, &mut pos);
+            wire_bytes_down = read_u64_le(buf, &mut pos);
+            8
+        } else {
+            0
+        };
         // d and n are file-controlled: bound-check the whole body before
         // allocating so a corrupt file fails with Err, not an OOM abort
         // (u128 arithmetic — the products can overflow usize on hostile
         // input).
         ensure!(
             (buf.len() - pos) as u128
-                >= 4 * d as u128 + 8 * d as u128 + n as u128 * (4 + 4 * d as u128),
+                >= 4 * d as u128 + 8 * d as u128 + n as u128 * (4 + per_worker_extra + 4 * d as u128),
             "truncated checkpoint body (d {d}, n {n})"
         );
         let mut x = Vec::with_capacity(d);
@@ -261,8 +309,12 @@ impl Checkpoint {
             g_sum.push(read_f64(buf, &mut pos)?);
         }
         let mut worker_g = Vec::with_capacity(n);
+        let mut worker_bits = Vec::with_capacity(n);
         for _ in 0..n {
             let id = read_u32(buf, &mut pos)? as usize;
+            if version >= 3 {
+                worker_bits.push((id, read_u64_le(buf, &mut pos)));
+            }
             let mut g = Vec::with_capacity(d);
             for _ in 0..d {
                 g.push(read_f32(buf, &mut pos)?);
@@ -270,7 +322,17 @@ impl Checkpoint {
             worker_g.push((id, g));
         }
         ensure!(pos == buf.len(), "checkpoint has {} trailing bytes", buf.len() - pos);
-        Ok(Checkpoint { t, grad_norm_sq, x, g_sum, worker_g })
+        Ok(Checkpoint {
+            t,
+            grad_norm_sq,
+            x,
+            g_sum,
+            worker_g,
+            worker_bits,
+            bits_down,
+            wire_bytes_up,
+            wire_bytes_down,
+        })
     }
 
     /// Read a checkpoint file written by [`CheckpointObserver`].
@@ -278,24 +340,59 @@ impl Checkpoint {
         let buf = std::fs::read(path.as_ref())
             .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
         Checkpoint::from_bytes(&buf)
+            .with_context(|| format!("decoding checkpoint {}", path.as_ref().display()))
     }
 
-    /// Persist atomically to `path` (write-to-temp + rename), creating
-    /// parent directories — the write [`CheckpointObserver`] performs
-    /// every `every` rounds, also used directly by the `threepc serve`
-    /// drain path when shutdown interrupts a session mid-run.
+    /// Persist atomically *and durably* to `path`, creating parent
+    /// directories — the write [`CheckpointObserver`] performs every
+    /// `every` rounds, also used directly by the `threepc serve` drain
+    /// path when shutdown interrupts a session mid-run. See
+    /// [`persist_atomic`] for the crash-safety contract.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
+        persist_atomic(path.as_ref(), &self.to_bytes())
+    }
+}
+
+/// Bounds-unchecked u64 read — callers above have already ensured the
+/// buffer holds the bytes.
+fn read_u64_le(buf: &[u8], pos: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().expect("8-byte slice"));
+    *pos += 8;
+    v
+}
+
+/// Write `bytes` to `path` so that a crash at *any* instant leaves
+/// either the old file or the new one, never a torn mix: write to a
+/// uniquely named temp file in the same directory, fsync it, rename
+/// over the target, then fsync the directory so the rename itself is
+/// durable. Parent directories are created as needed.
+pub fn persist_atomic(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    // Unique per process: concurrent writers (two daemons pointed at
+    // the same path by mistake) cannot corrupt each other's temp file.
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            // Directory fsync: without it the rename may not survive a
+            // power loss even though the data blocks do.
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
             }
         }
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, self.to_bytes())?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
     }
+    Ok(())
 }
 
 /// Every `every` rounds, persists the full optimizer state — the
@@ -336,12 +433,20 @@ impl RoundObserver for CheckpointObserver {
                     return RoundFlow::Continue;
                 }
             };
+            let worker_bits = worker_g
+                .iter()
+                .map(|(id, _)| (*id, ctx.snap.bits_up.get(*id).copied().unwrap_or(0)))
+                .collect();
             let cp = Checkpoint {
                 t: ctx.snap.t,
                 grad_norm_sq: ctx.snap.grad_norm_sq,
                 x: ctx.snap.x.to_vec(),
                 g_sum: ctx.snap.g_sum.to_vec(),
                 worker_g,
+                worker_bits,
+                bits_down: ctx.snap.bits_down,
+                wire_bytes_up: ctx.snap.wire_bytes_up,
+                wire_bytes_down: ctx.snap.wire_bytes_down,
             };
             self.write(&cp);
         }
@@ -406,20 +511,99 @@ impl RoundObserver for ScheduleObserver {
 mod tests {
     use super::*;
 
-    #[test]
-    fn checkpoint_roundtrips() {
-        let cp = Checkpoint {
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
             t: 42,
             grad_norm_sq: 0.125,
             x: vec![1.0, -2.0, 3.5],
             g_sum: vec![-1.0, 0.5, 3.0],
             worker_g: vec![(0, vec![0.0, 0.5, 1.0]), (1, vec![-1.0, 0.0, 2.0])],
-        };
+            worker_bits: vec![(0, 321), (1, 1234)],
+            bits_down: 777,
+            wire_bytes_up: 4096,
+            wire_bytes_down: 8192,
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips() {
+        let cp = sample_checkpoint();
         let bytes = cp.to_bytes();
         let back = Checkpoint::from_bytes(&bytes).unwrap();
         assert_eq!(back, cp);
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 2]).is_err());
         assert!(Checkpoint::from_bytes(b"nope").is_err());
+    }
+
+    /// Every truncation of a valid checkpoint is an `Err`, never a
+    /// panic, and never a silently short decode — the guarantee a
+    /// crash-interrupted write path leans on.
+    #[test]
+    fn truncated_and_garbage_checkpoints_reject_cleanly() {
+        let bytes = sample_checkpoint().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Checkpoint::from_bytes(&long).is_err());
+        // Garbage with a valid magic still rejects (hostile d/n must
+        // fail the bound check before any allocation is sized).
+        let mut hostile = bytes;
+        hostile[16..20].copy_from_slice(&u32::MAX.to_le_bytes()); // d
+        assert!(Checkpoint::from_bytes(&hostile).is_err());
+        // And through the file path: a clean error, not a panic.
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("3pc-torn-{}.ckpt", std::process::id()));
+        std::fs::write(&p, b"3PCKgarbage").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    /// A version-2 file (no ledger) still loads, with a zero ledger.
+    #[test]
+    fn v2_checkpoint_loads_with_zero_ledger() {
+        let cp = sample_checkpoint();
+        let d = cp.x.len();
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(b"3PCK");
+        v2.extend_from_slice(&2u32.to_le_bytes());
+        v2.extend_from_slice(&(cp.t as u64).to_le_bytes());
+        v2.extend_from_slice(&(d as u32).to_le_bytes());
+        v2.extend_from_slice(&(cp.worker_g.len() as u32).to_le_bytes());
+        v2.extend_from_slice(&cp.grad_norm_sq.to_le_bytes());
+        for v in &cp.x {
+            v2.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &cp.g_sum {
+            v2.extend_from_slice(&v.to_le_bytes());
+        }
+        for (id, g) in &cp.worker_g {
+            v2.extend_from_slice(&(*id as u32).to_le_bytes());
+            for v in g {
+                v2.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let back = Checkpoint::from_bytes(&v2).unwrap();
+        assert_eq!(back.t, cp.t);
+        assert_eq!(back.worker_g, cp.worker_g);
+        assert!(back.worker_bits.is_empty());
+        assert_eq!(back.bits_down, 0);
+        assert_eq!(back.wire_bytes_up, 0);
+        assert_eq!(back.wire_bytes_down, 0);
+    }
+
+    #[test]
+    fn save_then_load_is_identity() {
+        let cp = sample_checkpoint();
+        let p = std::env::temp_dir()
+            .join(format!("3pc-save-{}.ckpt", std::process::id()));
+        cp.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), cp);
+        // Overwrite in place (the observer's steady state) still works.
+        cp.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), cp);
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]
@@ -431,12 +615,21 @@ mod tests {
             x: vec![0.0, 1.0],
             g_sum: vec![3.0, 4.0],
             worker_g: vec![(1, vec![2.0, 2.5]), (0, vec![1.0, 1.5])],
+            worker_bits: vec![(1, 20), (0, 10)],
+            bits_down: 5,
+            wire_bytes_up: 100,
+            wire_bytes_down: 200,
         };
         let rs = ResumeState::from_checkpoint(&cp).unwrap();
         assert_eq!(rs.t, 9);
         assert_eq!(rs.grad_norm_sq, 1.0);
         assert_eq!(rs.worker_g, vec![vec![1.0, 1.5], vec![2.0, 2.5]]);
         assert_eq!(rs.g_sum, vec![3.0, 4.0]);
+        // The ledger reindexes by worker id alongside the mirrors.
+        assert_eq!(rs.worker_bits, vec![10, 20]);
+        assert_eq!(rs.bits_down, 5);
+        assert_eq!(rs.wire_bytes_up, 100);
+        assert_eq!(rs.wire_bytes_down, 200);
 
         let mut dup = cp.clone();
         dup.worker_g[1].0 = 1;

@@ -539,7 +539,10 @@ pub struct SessionHello {
     pub dim: u32,
     pub seed: u64,
     /// `g⁰` policy: false = FullGradient, true = Zero. (`FromState`
-    /// resumes cannot cross the wire and are rejected at connect time.)
+    /// resumes never send a session hello at all — the leader installs
+    /// each worker through a [`DOWN_RESYNC`] frame that carries the
+    /// checkpointed `(x, g_i)` mirrors, so this flag is unused on the
+    /// resume path.)
     pub zero_init: bool,
     pub value_coding: WireValueCoding,
     /// Initial mechanism, as a parseable spec.
@@ -636,11 +639,26 @@ pub fn decode_session_hello(buf: &[u8]) -> Result<SessionHello> {
     })
 }
 
-/// Serialize a worker hello (the agent's first bytes after connecting).
+/// What a worker's opening frame declared: a fresh connect
+/// (`reattach == None`) or a re-attach after a lost established
+/// connection, carrying the worker id the agent last held so the
+/// leader can prefer seating it back in the same slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerHello {
+    pub reattach: Option<u32>,
+}
+
+/// Serialize a fresh worker hello (the agent's first bytes after
+/// connecting).
 ///
 /// ```text
 /// worker-hello := kind:u8(0xE1)  magic:"3PCW"  version:u16
+///                 [flags:u8(bit0=reattach)  [prev_wid:u32]]
 /// ```
+///
+/// The trailing fields are optional on the wire: the legacy 7-byte
+/// form decodes as a fresh connect, so old agents keep working against
+/// new leaders and vice versa.
 pub fn encode_worker_hello() -> Vec<u8> {
     let mut out = Vec::with_capacity(7);
     out.push(UP_HELLO);
@@ -649,17 +667,40 @@ pub fn encode_worker_hello() -> Vec<u8> {
     out
 }
 
-/// Validate a worker hello (exact inverse of [`encode_worker_hello`]).
-pub fn decode_worker_hello(buf: &[u8]) -> Result<()> {
+/// Serialize a re-attach worker hello: the agent held `prev_wid` on a
+/// connection that was established and then lost (leader restart), and
+/// asks to be seated back in that slot.
+pub fn encode_worker_hello_reattach(prev_wid: u32) -> Vec<u8> {
+    let mut out = encode_worker_hello();
+    out.push(1);
+    out.extend_from_slice(&prev_wid.to_le_bytes());
+    out
+}
+
+/// Decode a worker hello (exact inverse of [`encode_worker_hello`] /
+/// [`encode_worker_hello_reattach`]; rejects bad magic, version
+/// mismatch, unknown flags and trailing bytes).
+pub fn decode_worker_hello(buf: &[u8]) -> Result<WorkerHello> {
     ensure!(buf.first() == Some(&UP_HELLO), "worker-hello: bad kind");
-    ensure!(buf.len() == 7, "worker-hello: frame length {} (expected 7)", buf.len());
+    ensure!(buf.len() >= 7, "worker-hello: frame length {} (expected >= 7)", buf.len());
     ensure!(buf[1..5] == UP_MAGIC[..], "worker-hello: bad magic");
     let version = u16::from_le_bytes(buf[5..7].try_into().expect("2-byte slice"));
     ensure!(
         version == WIRE_VERSION,
         "worker-hello: protocol version {version} (this build speaks {WIRE_VERSION})"
     );
-    Ok(())
+    if buf.len() == 7 {
+        return Ok(WorkerHello { reattach: None });
+    }
+    let flags = buf[7];
+    ensure!(flags <= 1, "worker-hello: unknown flags {flags:#04x}");
+    if flags == 0 {
+        ensure!(buf.len() == 8, "worker-hello: {} trailing bytes", buf.len() - 8);
+        return Ok(WorkerHello { reattach: None });
+    }
+    ensure!(buf.len() == 12, "worker-hello: reattach frame length {} (expected 12)", buf.len());
+    let prev_wid = u32::from_le_bytes(buf[8..12].try_into().expect("4-byte slice"));
+    Ok(WorkerHello { reattach: Some(prev_wid) })
 }
 
 /// Append a round broadcast body: the round header plus the iterate.
@@ -1374,6 +1415,123 @@ pub fn decode_serve_frame(buf: &[u8]) -> Result<ServeFrame> {
     Ok(frame)
 }
 
+// ---------------------------------------------------------------------
+// Session-journal record vocabulary: the append-only durability log
+// `threepc serve --journal <path>` writes so a restarted daemon can
+// re-admit queued sessions and resume running ones from their latest
+// checkpoint. Same `u32 len LE | body` envelope as the wire (after a
+// `"3PCJ" version:u32` file header); the body's first byte is the kind
+// tag. Records are recovery bookkeeping — nothing here is billed.
+// ---------------------------------------------------------------------
+
+/// Journal file header magic (followed by [`JOURNAL_VERSION`] as u32 LE).
+pub const JOURNAL_MAGIC: &[u8; 4] = b"3PCJ";
+/// Journal format version.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Journal record kinds.
+pub const JR_ADMIT: u8 = 0xa1;
+pub const JR_PHASE: u8 = 0xa2;
+pub const JR_CKPT: u8 = 0xa3;
+pub const JR_RESULT: u8 = 0xa4;
+
+/// One durable event in a daemon's session journal.
+///
+/// ```text
+/// admit  := kind:u8(0xA1)  id:u64  spec_len:u16  spec:[u8]
+/// phase  := kind:u8(0xA2)  id:u64  phase:u8  detail_len:u16  detail:[u8]
+/// ckpt   := kind:u8(0xA3)  id:u64  t:u64  path_len:u16  path:[u8]
+/// result := kind:u8(0xA4)  <serve-result body after the kind tag>
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// A session spec was admitted under `id` (written before the
+    /// client's accept reply, so an admitted session is never lost).
+    Admit { id: u64, spec: String },
+    /// The session moved to `phase` (`detail` carries the failure
+    /// message for `Failed`, empty otherwise).
+    Phase { id: u64, phase: SessionPhase, detail: String },
+    /// The session persisted a checkpoint for committed round `t` at
+    /// `path` — the restart path resumes from the latest of these.
+    Ckpt { id: u64, t: u64, path: String },
+    /// The session's terminal summary (same body as [`SERVE_RESULT`]).
+    Result(SessionResult),
+}
+
+/// Serialize one journal record body (kind tag included, no length
+/// prefix — the journal writer adds the envelope).
+pub fn encode_journal_record(r: &JournalRecord) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(32);
+    match r {
+        JournalRecord::Admit { id, spec } => {
+            out.push(JR_ADMIT);
+            out.extend_from_slice(&id.to_le_bytes());
+            push_str(spec, "journal: session spec", &mut out)?;
+        }
+        JournalRecord::Phase { id, phase, detail } => {
+            out.push(JR_PHASE);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.push(phase.tag());
+            push_str(detail, "journal: phase detail", &mut out)?;
+        }
+        JournalRecord::Ckpt { id, t, path } => {
+            out.push(JR_CKPT);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&t.to_le_bytes());
+            push_str(path, "journal: checkpoint path", &mut out)?;
+        }
+        JournalRecord::Result(res) => {
+            let body = encode_serve_frame(&ServeFrame::Result(res.clone()))?;
+            out.push(JR_RESULT);
+            out.extend_from_slice(&body[1..]);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode one journal record body (exact inverse of
+/// [`encode_journal_record`]; rejects unknown tags, bad phases and
+/// trailing bytes).
+pub fn decode_journal_record(buf: &[u8]) -> Result<JournalRecord> {
+    let kind = *buf.first().ok_or_else(|| anyhow::anyhow!("journal: empty record"))?;
+    let mut pos = 1usize;
+    match kind {
+        JR_ADMIT => {
+            let id = read_u64(buf, &mut pos)?;
+            let spec = read_str(buf, &mut pos, "journal session spec")?;
+            ensure!(pos == buf.len(), "journal-admit: {} trailing bytes", buf.len() - pos);
+            Ok(JournalRecord::Admit { id, spec })
+        }
+        JR_PHASE => {
+            let id = read_u64(buf, &mut pos)?;
+            let tag = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("journal: truncated phase"))?;
+            pos += 1;
+            let phase = SessionPhase::from_tag(tag)?;
+            let detail = read_str(buf, &mut pos, "journal phase detail")?;
+            ensure!(pos == buf.len(), "journal-phase: {} trailing bytes", buf.len() - pos);
+            Ok(JournalRecord::Phase { id, phase, detail })
+        }
+        JR_CKPT => {
+            let id = read_u64(buf, &mut pos)?;
+            let t = read_u64(buf, &mut pos)?;
+            let path = read_str(buf, &mut pos, "journal checkpoint path")?;
+            ensure!(pos == buf.len(), "journal-ckpt: {} trailing bytes", buf.len() - pos);
+            Ok(JournalRecord::Ckpt { id, t, path })
+        }
+        JR_RESULT => {
+            // Reuse the serve-result decoder: same body after the tag.
+            let mut frame = Vec::with_capacity(buf.len());
+            frame.push(SERVE_RESULT);
+            frame.extend_from_slice(&buf[1..]);
+            match decode_serve_frame(&frame)? {
+                ServeFrame::Result(res) => Ok(JournalRecord::Result(res)),
+                _ => unreachable!("SERVE_RESULT tag decodes to Result"),
+            }
+        }
+        other => bail!("journal: unknown record kind {other:#04x}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1577,7 +1735,7 @@ mod tests {
     #[test]
     fn worker_hello_roundtrips_and_validates() {
         let bytes = encode_worker_hello();
-        assert!(decode_worker_hello(&bytes).is_ok());
+        assert_eq!(decode_worker_hello(&bytes).unwrap(), WorkerHello { reattach: None });
         assert!(decode_worker_hello(&bytes[..6]).is_err());
         let mut bad = bytes.clone();
         bad[2] = b'X';
@@ -1585,6 +1743,76 @@ mod tests {
         let mut bad = bytes.clone();
         bad[5] = 0x7f;
         assert!(decode_worker_hello(&bad).is_err());
+    }
+
+    #[test]
+    fn reattach_hello_roundtrips_and_validates() {
+        let bytes = encode_worker_hello_reattach(3);
+        assert_eq!(bytes.len(), 12);
+        assert_eq!(decode_worker_hello(&bytes).unwrap(), WorkerHello { reattach: Some(3) });
+        // Explicit flags:0 (future-proofing) also means fresh.
+        let mut fresh = encode_worker_hello();
+        fresh.push(0);
+        assert_eq!(decode_worker_hello(&fresh).unwrap(), WorkerHello { reattach: None });
+        // Every truncation of the extended form rejects (except the
+        // 7-byte prefix, which IS the legacy fresh hello).
+        for cut in 0..bytes.len() {
+            let d = decode_worker_hello(&bytes[..cut]);
+            if cut == 7 {
+                assert_eq!(d.unwrap(), WorkerHello { reattach: None });
+            } else {
+                assert!(d.is_err(), "cut {cut}");
+            }
+        }
+        // Unknown flags and trailing bytes reject.
+        let mut bad = bytes.clone();
+        bad[7] = 2;
+        assert!(decode_worker_hello(&bad).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_worker_hello(&long).is_err());
+        let mut long = encode_worker_hello();
+        long.push(0);
+        long.push(0);
+        assert!(decode_worker_hello(&long).is_err());
+    }
+
+    #[test]
+    fn journal_records_roundtrip_and_validate() {
+        let records = [
+            JournalRecord::Admit { id: 7, spec: "problem=quad:2:8:0.01:0.5:3 rounds=20".into() },
+            JournalRecord::Phase { id: 7, phase: SessionPhase::Running, detail: String::new() },
+            JournalRecord::Phase { id: 9, phase: SessionPhase::Failed, detail: "worker 2 hung".into() },
+            JournalRecord::Ckpt { id: 7, t: 14, path: "/tmp/s7.ckpt".into() },
+            JournalRecord::Result(SessionResult {
+                id: 7,
+                rounds_run: 20,
+                converged: true,
+                diverged: false,
+                final_grad_norm_sq: 1.5e-9,
+                total_bits_up: 123_456,
+                total_bits_down: 654_321,
+                wire_bytes_up: 9_876,
+                wire_bytes_down: 6_789,
+                error: None,
+            }),
+        ];
+        for r in &records {
+            let bytes = encode_journal_record(r).unwrap();
+            assert_eq!(&decode_journal_record(&bytes).unwrap(), r);
+            // Truncations reject; trailing bytes reject.
+            for cut in 0..bytes.len() {
+                assert!(decode_journal_record(&bytes[..cut]).is_err(), "cut {cut} of {r:?}");
+            }
+            let mut long = bytes.clone();
+            long.push(0);
+            assert!(decode_journal_record(&long).is_err(), "trailing byte on {r:?}");
+        }
+        // Unknown kinds and phases reject.
+        assert!(decode_journal_record(&[0x55]).is_err());
+        let mut bad = encode_journal_record(&records[1]).unwrap();
+        bad[9] = 9; // phase tag
+        assert!(decode_journal_record(&bad).is_err());
     }
 
     #[test]

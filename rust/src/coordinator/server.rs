@@ -40,14 +40,17 @@ impl Server {
         }
     }
 
-    /// Rebuild a leader from a checkpointed state: the iterate and the
+    /// Rebuild a leader from a checkpointed state: the iterate, the
     /// exact f64 aggregate fold state `n·g^t` (so a resumed run folds
-    /// from bit-identical leader state). Bit accountants restart at
-    /// zero — resumed sessions restart the accounting clock.
-    pub fn from_state(x: Vec<f32>, g_sum: Vec<f64>, n: usize) -> Server {
+    /// from bit-identical leader state), and the checkpointed bit
+    /// ledger — the resumed run's accounting continues the original
+    /// run's clock, so its final totals equal an uninterrupted
+    /// reference. (Resuming a pre-ledger checkpoint passes zeros.)
+    pub fn from_state(x: Vec<f32>, g_sum: Vec<f64>, bits_up: Vec<u64>, bits_down: u64) -> Server {
         let d = x.len();
+        let n = bits_up.len();
         debug_assert_eq!(g_sum.len(), d);
-        Server { x, g_sum, n, bits_up: vec![0; n], bits_down: 0, g_buf: vec![0.0f32; d] }
+        Server { x, g_sum, n, bits_up, bits_down, g_buf: vec![0.0f32; d] }
     }
 
     pub fn n_workers(&self) -> usize {

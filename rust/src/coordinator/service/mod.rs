@@ -67,6 +67,12 @@ pub struct ServeOptions {
     /// Budget for a connection's first frame (the accept-path
     /// `--io-timeout-ms` discipline; never "wait forever").
     pub handshake_timeout: Duration,
+    /// Durable session journal path (`--journal`). When set, every
+    /// admission, phase transition and checkpoint write is appended to
+    /// this file, and a restarted daemon pointed at the same path
+    /// re-admits queued sessions and resumes running ones from their
+    /// latest checkpoints instead of losing them. `None` = memory-only.
+    pub journal: Option<std::path::PathBuf>,
 }
 
 impl ServeOptions {
@@ -78,6 +84,7 @@ impl ServeOptions {
             threads: 0,
             io_timeout: Duration::from_secs(30),
             handshake_timeout: Duration::from_secs(10),
+            journal: None,
         }
     }
 }
@@ -117,6 +124,27 @@ impl Service {
     /// readers run on their own threads, sessions on this one.
     pub fn run(self) -> anyhow::Result<()> {
         let Service { opts, listener, local, shutdown } = self;
+        // Open (and replay) the journal before anything can connect:
+        // re-admitted sessions are queued before the first submit.
+        let (registry, journal) = match &opts.journal {
+            Some(path) => {
+                let (journal, records) = registry::Journal::open(path)?;
+                let restored = registry::Registry::restore(records, opts.fleet);
+                let pending = restored
+                    .sessions
+                    .values()
+                    .filter(|s| !s.terminal())
+                    .count();
+                if pending > 0 {
+                    println!(
+                        "threepc serve: journal {} re-admits {pending} unfinished session(s)",
+                        path.display()
+                    );
+                }
+                (restored, Some(journal))
+            }
+            None => (registry::Registry::new(), None),
+        };
         let pool =
             if opts.threads > 0 { Some(Arc::new(ShardPool::new(opts.threads))) } else { None };
         let (tx, rx) = mpsc::channel();
@@ -142,7 +170,16 @@ impl Service {
         };
         drop(tx);
 
-        Scheduler::new(rx, Arc::clone(&shutdown), opts.fleet, pool, opts.io_timeout).run();
+        Scheduler::new(
+            rx,
+            Arc::clone(&shutdown),
+            opts.fleet,
+            pool,
+            opts.io_timeout,
+            registry,
+            journal,
+        )
+        .run();
         // The scheduler can also exit on channel disconnect; make sure
         // the accept loop (and any signal-race observer) sees the end.
         shutdown.store(true, Ordering::SeqCst);

@@ -7,13 +7,19 @@
 //! wire instead of being discovered (and dropped) at start time.
 
 use super::super::metrics::RoundRecord;
-use super::super::protocol::{RejectCode, SessionPhase, SessionResult};
+use super::super::protocol::{
+    decode_journal_record, encode_journal_record, JournalRecord, RejectCode, SessionPhase,
+    SessionResult, JOURNAL_MAGIC, JOURNAL_VERSION,
+};
 use super::super::session::{SessionDriver, TrainConfig};
 use super::super::socket::parse_problem_spec;
 use crate::compressors::WireValueCoding;
 use crate::mechanisms::parse_schedule;
+use anyhow::Context;
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 /// A parsed, validated session submission.
 ///
@@ -235,6 +241,11 @@ pub(crate) struct Session {
     pub result: Option<SessionResult>,
     /// Present iff `phase == Running`.
     pub driver: Option<SessionDriver<'static>>,
+    /// Latest journaled checkpoint `(t, path)` for this session — what
+    /// a restarted daemon resumes a re-admitted session from. Only ever
+    /// set by journal replay; live sessions track their checkpoints
+    /// through the journal itself.
+    pub ckpt: Option<(u64, PathBuf)>,
 }
 
 impl Session {
@@ -273,9 +284,186 @@ impl Registry {
                 records: Vec::new(),
                 result: None,
                 driver: None,
+                ckpt: None,
             },
         );
         id
+    }
+
+    /// Rebuild the registry from a replayed journal. Sessions the
+    /// journal last saw `Queued` come back queued; ones it last saw
+    /// `Running` died with the previous daemon, so they re-queue and
+    /// carry their latest journaled checkpoint for admission to resume
+    /// from; terminal sessions come back terminal (their results
+    /// replayed for status/attach queries). A spec that no longer
+    /// parses — a fleet cap lowered across the restart, say — is
+    /// dropped with a warning rather than wedging startup.
+    pub(crate) fn restore(records: Vec<JournalRecord>, fleet_cap: Option<usize>) -> Registry {
+        let mut reg = Registry::new();
+        for rec in records {
+            match rec {
+                JournalRecord::Admit { id, spec } => {
+                    reg.next_id = reg.next_id.max(id + 1);
+                    match SessionSpec::parse(&spec, fleet_cap) {
+                        Ok(parsed) => {
+                            reg.sessions.insert(
+                                id,
+                                Session {
+                                    id,
+                                    spec: parsed,
+                                    phase: SessionPhase::Queued,
+                                    detail: String::new(),
+                                    rounds: 0,
+                                    records: Vec::new(),
+                                    result: None,
+                                    driver: None,
+                                    ckpt: None,
+                                },
+                            );
+                        }
+                        Err((code, reason)) => {
+                            eprintln!(
+                                "serve: journal replay: dropping session {id} \
+                                 (spec no longer admissible, {code}: {reason})"
+                            );
+                        }
+                    }
+                }
+                JournalRecord::Phase { id, phase, detail } => {
+                    if let Some(s) = reg.sessions.get_mut(&id) {
+                        s.phase = phase;
+                        s.detail = detail;
+                    }
+                }
+                JournalRecord::Ckpt { id, t, path } => {
+                    if let Some(s) = reg.sessions.get_mut(&id) {
+                        if s.ckpt.as_ref().map_or(true, |(prev, _)| t >= *prev) {
+                            s.ckpt = Some((t, PathBuf::from(path)));
+                        }
+                    }
+                }
+                JournalRecord::Result(res) => {
+                    if let Some(s) = reg.sessions.get_mut(&res.id) {
+                        s.rounds = res.rounds_run;
+                        s.result = Some(res);
+                    }
+                }
+            }
+        }
+        for s in reg.sessions.values_mut() {
+            if s.phase == SessionPhase::Running {
+                s.phase = SessionPhase::Queued;
+                s.detail.clear();
+            }
+        }
+        reg
+    }
+}
+
+/// Ceiling on one journal record body. Far above any real record (the
+/// embedded strings are u16-length-bounded), far below anything a
+/// corrupt length field could use to size a hostile allocation.
+const MAX_JOURNAL_RECORD: usize = 1 << 20;
+
+/// The daemon's append-only session journal (`threepc serve
+/// --journal <path>`): a `"3PCJ" version:u32` header followed by
+/// `u32 len LE | record` envelopes (see
+/// [`JournalRecord`] for the record grammar).
+///
+/// Durability contract: [`Journal::append`] writes the whole envelope
+/// in one `write_all` and then syncs file data, so a crash at any
+/// instant leaves either the record fully present or a torn tail —
+/// and [`Journal::open`] truncates a torn tail away on replay, so the
+/// next append always lands on a clean record boundary.
+pub(crate) struct Journal {
+    file: File,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replaying every complete
+    /// record. A torn tail — the footprint of a crash mid-append — is
+    /// silently truncated; a record that is complete but undecodable is
+    /// an error, because nothing after it can be trusted.
+    pub(crate) fn open(path: &Path) -> anyhow::Result<(Journal, Vec<JournalRecord>)> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        if buf.is_empty() {
+            let mut header = Vec::with_capacity(8);
+            header.extend_from_slice(JOURNAL_MAGIC);
+            header.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+            file.write_all(&header)
+                .with_context(|| format!("writing journal header {}", path.display()))?;
+            file.sync_data()
+                .with_context(|| format!("syncing journal {}", path.display()))?;
+            return Ok((Journal { file }, Vec::new()));
+        }
+        anyhow::ensure!(
+            buf.len() >= 8 && buf[..4] == JOURNAL_MAGIC[..],
+            "{} is not a 3PC session journal",
+            path.display()
+        );
+        let version = u32::from_le_bytes(buf[4..8].try_into().expect("4-byte slice"));
+        anyhow::ensure!(
+            version == JOURNAL_VERSION,
+            "journal {}: unsupported version {version}",
+            path.display()
+        );
+        let mut records = Vec::new();
+        let mut pos = 8usize;
+        let mut good_end = 8usize;
+        while pos < buf.len() {
+            if buf.len() - pos < 4 {
+                break; // torn length prefix
+            }
+            let len =
+                u32::from_le_bytes(buf[pos..pos + 4].try_into().expect("4-byte slice")) as usize;
+            anyhow::ensure!(
+                len <= MAX_JOURNAL_RECORD,
+                "journal {}: record at byte {pos} claims {len} bytes (bound {MAX_JOURNAL_RECORD})",
+                path.display()
+            );
+            if buf.len() - pos - 4 < len {
+                break; // torn body
+            }
+            let body = &buf[pos + 4..pos + 4 + len];
+            let rec = decode_journal_record(body)
+                .with_context(|| format!("journal {}: record at byte {pos}", path.display()))?;
+            records.push(rec);
+            pos += 4 + len;
+            good_end = pos;
+        }
+        if good_end < buf.len() {
+            file.set_len(good_end as u64)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        }
+        file.seek(SeekFrom::Start(good_end as u64))
+            .with_context(|| format!("seeking journal {}", path.display()))?;
+        Ok((Journal { file }, records))
+    }
+
+    /// Append one record durably: one `write_all` of `len | body`, then
+    /// a data sync.
+    pub(crate) fn append(&mut self, rec: &JournalRecord) -> anyhow::Result<()> {
+        let body = encode_journal_record(rec)?;
+        let mut framed = Vec::with_capacity(4 + body.len());
+        framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&body);
+        self.file.write_all(&framed).context("journal append")?;
+        self.file.sync_data().context("journal sync")?;
+        Ok(())
     }
 }
 
@@ -370,5 +558,115 @@ mod tests {
         assert!(b > a);
         assert_eq!(reg.sessions[&a].phase, SessionPhase::Queued);
         assert!(!reg.sessions[&a].terminal());
+    }
+
+    fn done_result(id: u64) -> SessionResult {
+        SessionResult {
+            id,
+            rounds_run: 40,
+            converged: true,
+            diverged: false,
+            final_grad_norm_sq: 1e-9,
+            total_bits_up: 1000,
+            total_bits_down: 2000,
+            wire_bytes_up: 300,
+            wire_bytes_down: 400,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn journal_appends_replays_and_truncates_torn_tails() {
+        let path = std::env::temp_dir().join(format!("3pc-journal-{}.jnl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let recs = vec![
+            JournalRecord::Admit { id: 1, spec: OK_SPEC.into() },
+            JournalRecord::Phase { id: 1, phase: SessionPhase::Running, detail: String::new() },
+            JournalRecord::Ckpt { id: 1, t: 24, path: "/tmp/s1.ckpt".into() },
+        ];
+        {
+            let (mut j, replayed) = Journal::open(&path).unwrap();
+            assert!(replayed.is_empty());
+            for r in &recs {
+                j.append(r).unwrap();
+            }
+        }
+        let (mut j, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed, recs);
+        j.append(&JournalRecord::Result(done_result(1))).unwrap();
+        drop(j);
+        let full = std::fs::read(&path).unwrap();
+        // A crash mid-append leaves a torn tail: every truncation of
+        // the final record replays the surviving three and drops the
+        // tail, never erroring, never yielding a partial record.
+        for cut in [1usize, 5, 9, 15] {
+            std::fs::write(&path, &full[..full.len() - cut]).unwrap();
+            let (_, replayed) = Journal::open(&path).unwrap();
+            assert_eq!(replayed.len(), recs.len(), "cut {cut}");
+            assert_eq!(replayed, recs, "cut {cut}");
+        }
+        // After a torn-tail truncation the next append lands cleanly.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let (mut j, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 3);
+        j.append(&JournalRecord::Phase {
+            id: 1,
+            phase: SessionPhase::Failed,
+            detail: "x".into(),
+        })
+        .unwrap();
+        drop(j);
+        let (_, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 4);
+        assert!(matches!(
+            &replayed[3],
+            JournalRecord::Phase { phase: SessionPhase::Failed, .. }
+        ));
+        // Not a journal at all: refuse.
+        std::fs::write(&path, b"NOPEnope").unwrap();
+        assert!(Journal::open(&path).is_err());
+        // A complete-but-corrupt record (bit-flipped kind byte, not a
+        // torn tail) refuses: nothing after it can be trusted.
+        let mut flipped = full.clone();
+        flipped[12] ^= 0xff;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(Journal::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn restore_requeues_running_sessions_with_their_checkpoints() {
+        let records = vec![
+            JournalRecord::Admit { id: 3, spec: OK_SPEC.into() },
+            JournalRecord::Phase { id: 3, phase: SessionPhase::Running, detail: String::new() },
+            JournalRecord::Ckpt { id: 3, t: 10, path: "/tmp/a.ckpt".into() },
+            JournalRecord::Ckpt { id: 3, t: 20, path: "/tmp/b.ckpt".into() },
+            JournalRecord::Admit { id: 4, spec: OK_SPEC.into() },
+            JournalRecord::Admit { id: 5, spec: OK_SPEC.into() },
+            JournalRecord::Phase { id: 5, phase: SessionPhase::Done, detail: String::new() },
+            JournalRecord::Result(done_result(5)),
+            // Valid at original admission, over the (new) fleet cap now.
+            JournalRecord::Admit {
+                id: 6,
+                spec: "problem=quad:64:16:0.01:0.5:7;mech=ef21:top4".into(),
+            },
+        ];
+        let mut reg = Registry::restore(records, Some(8));
+        // The mid-run session re-queues, carrying its *latest*
+        // journaled checkpoint for admission to resume from.
+        assert_eq!(reg.sessions[&3].phase, SessionPhase::Queued);
+        assert_eq!(reg.sessions[&3].ckpt, Some((20, PathBuf::from("/tmp/b.ckpt"))));
+        assert_eq!(reg.sessions[&4].phase, SessionPhase::Queued);
+        assert!(reg.sessions[&4].ckpt.is_none());
+        // The finished session replays terminal, result intact.
+        assert_eq!(reg.sessions[&5].phase, SessionPhase::Done);
+        assert!(reg.sessions[&5].terminal());
+        assert_eq!(reg.sessions[&5].result, Some(done_result(5)));
+        assert_eq!(reg.sessions[&5].rounds, 40);
+        // The no-longer-admissible spec is dropped, not wedged.
+        assert!(!reg.sessions.contains_key(&6));
+        // Fresh submissions never reuse a replayed id.
+        let id = reg.submit(SessionSpec::parse(OK_SPEC, None).unwrap());
+        assert_eq!(id, 7);
     }
 }

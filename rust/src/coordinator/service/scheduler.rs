@@ -10,15 +10,16 @@
 //! its trace — interleaving changes wall-clock, never values.
 
 use super::super::metrics::{RoundRecord, TrainResult};
-use super::super::observer::{CheckpointObserver, RoundObserver};
+use super::super::observer::{Checkpoint, CheckpointObserver, RoundObserver};
 use super::super::protocol::{
-    self as proto, ClientFrame, MetricUpdate, RejectCode, ServeFrame, SessionPhase, SessionResult,
-    SessionStatus,
+    self as proto, ClientFrame, JournalRecord, MetricUpdate, RejectCode, ServeFrame, SessionPhase,
+    SessionResult, SessionStatus,
 };
 use super::super::session::{SessionDriver, StepFlow};
 use super::super::socket::{parse_problem_spec, write_frame, FleetReturn, PreConnected, Stream};
 use super::super::transport::Transport;
-use super::registry::{Registry, Session, SessionSpec};
+use super::super::ResumeState;
+use super::registry::{Journal, Registry, Session, SessionSpec};
 use crate::kernels::ShardPool;
 use crate::mechanisms::parse_schedule;
 use std::collections::HashMap;
@@ -49,6 +50,9 @@ struct ClientConn {
 
 pub(crate) struct Scheduler {
     registry: Registry,
+    /// The durable session journal (`--journal`); `None` runs the
+    /// daemon memory-only, exactly as before the flag existed.
+    journal: Option<Journal>,
     clients: HashMap<u64, ClientConn>,
     /// Parked worker streams, grant order = FIFO.
     idle: Vec<Stream>,
@@ -71,9 +75,12 @@ impl Scheduler {
         fleet_cap: Option<usize>,
         pool: Option<Arc<ShardPool>>,
         io_timeout: Duration,
+        registry: Registry,
+        journal: Option<Journal>,
     ) -> Scheduler {
         Scheduler {
-            registry: Registry::new(),
+            registry,
+            journal,
             clients: HashMap::new(),
             idle: Vec::new(),
             fleet_return: FleetReturn::new(),
@@ -82,6 +89,17 @@ impl Scheduler {
             rx,
             shutdown,
             fleet_cap,
+        }
+    }
+
+    /// Append one record to the journal, if one is configured. Append
+    /// failures are surfaced, not fatal: the daemon keeps serving (the
+    /// journal degrades to a stale-but-valid prefix).
+    fn journal_append(&mut self, rec: &JournalRecord) {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append(rec) {
+                eprintln!("serve: journal append: {e:#}");
+            }
         }
     }
 
@@ -155,6 +173,9 @@ impl Scheduler {
         let frame = match SessionSpec::parse(spec, self.fleet_cap) {
             Ok(parsed) => {
                 let id = self.registry.submit(parsed);
+                // Journal before the accept reply: a session the client
+                // was told about is never lost to a crash.
+                self.journal_append(&JournalRecord::Admit { id, spec: spec.to_string() });
                 ServeFrame::Status(SessionStatus {
                     id,
                     phase: SessionPhase::Queued,
@@ -207,6 +228,7 @@ impl Scheduler {
     }
 
     fn on_cancel(&mut self, client: u64, id: u64) {
+        let mut jrecs: Vec<JournalRecord> = Vec::new();
         match self.registry.sessions.get_mut(&id) {
             None => {
                 let frame = unknown_session(id);
@@ -218,7 +240,9 @@ impl Scheduler {
                 SessionPhase::Queued => {
                     sess.phase = SessionPhase::Cancelled;
                     sess.detail = "cancelled".into();
-                    sess.result = Some(synthetic_result(id, "cancelled"));
+                    let wire = synthetic_result(id, "cancelled");
+                    jrecs.push(JournalRecord::Result(wire.clone()));
+                    sess.result = Some(wire);
                 }
                 SessionPhase::Running => {
                     // Stop at the current round boundary; the link's
@@ -231,10 +255,24 @@ impl Scheduler {
                     wire.error.get_or_insert_with(|| "cancelled".into());
                     sess.phase = SessionPhase::Cancelled;
                     sess.detail = "cancelled".into();
+                    jrecs.push(JournalRecord::Result(wire.clone()));
                     sess.result = Some(wire);
                 }
                 _ => unreachable!("terminal phases handled above"),
             },
+        }
+        if !jrecs.is_empty() {
+            jrecs.insert(
+                0,
+                JournalRecord::Phase {
+                    id,
+                    phase: SessionPhase::Cancelled,
+                    detail: "cancelled".into(),
+                },
+            );
+        }
+        for rec in &jrecs {
+            self.journal_append(rec);
         }
         self.notify_terminal(id);
         let frame = match self.registry.sessions.get(&id) {
@@ -261,25 +299,58 @@ impl Scheduler {
                 continue;
             }
             let granted: Vec<Stream> = self.idle.drain(..n).collect();
-            let sess = self.registry.sessions.get_mut(&id).expect("queued id");
-            match start_session(&sess.spec, granted, &self.pool, self.io_timeout, &self.fleet_return)
+            let mut jrecs: Vec<JournalRecord> = Vec::new();
+            let mut failed = false;
             {
-                Ok(driver) => {
-                    sess.driver = Some(driver);
-                    sess.phase = SessionPhase::Running;
+                let sess = self.registry.sessions.get_mut(&id).expect("queued id");
+                // A re-admitted session (journal replay after a daemon
+                // restart) resumes from its latest journaled checkpoint;
+                // a checkpoint that won't load falls back to a
+                // from-scratch rerun.
+                let resume = load_resume(sess);
+                match start_session(
+                    &sess.spec,
+                    granted,
+                    resume,
+                    &self.pool,
+                    self.io_timeout,
+                    &self.fleet_return,
+                ) {
+                    Ok(driver) => {
+                        sess.rounds = driver.rounds_done() as u64;
+                        sess.driver = Some(driver);
+                        sess.phase = SessionPhase::Running;
+                        jrecs.push(JournalRecord::Phase {
+                            id,
+                            phase: SessionPhase::Running,
+                            detail: String::new(),
+                        });
+                    }
+                    Err(result) => {
+                        // The transport failed to stand up; the granted
+                        // streams are gone with it (their agents see a
+                        // disconnect and exit).
+                        sess.rounds = result.rounds_run as u64;
+                        sess.records = result.records.clone();
+                        let wire = result_to_wire(id, &result);
+                        sess.detail = wire.error.clone().unwrap_or_else(|| "start failed".into());
+                        sess.phase = SessionPhase::Failed;
+                        jrecs.push(JournalRecord::Phase {
+                            id,
+                            phase: SessionPhase::Failed,
+                            detail: sess.detail.clone(),
+                        });
+                        jrecs.push(JournalRecord::Result(wire.clone()));
+                        sess.result = Some(wire);
+                        failed = true;
+                    }
                 }
-                Err(result) => {
-                    // The transport failed to stand up; the granted
-                    // streams are gone with it (their agents see a
-                    // disconnect and exit).
-                    sess.rounds = result.rounds_run as u64;
-                    sess.records = result.records.clone();
-                    let wire = result_to_wire(id, &result);
-                    sess.detail = wire.error.clone().unwrap_or_else(|| "start failed".into());
-                    sess.phase = SessionPhase::Failed;
-                    sess.result = Some(wire);
-                    self.notify_terminal(id);
-                }
+            }
+            for rec in &jrecs {
+                self.journal_append(rec);
+            }
+            if failed {
+                self.notify_terminal(id);
             }
         }
     }
@@ -294,40 +365,69 @@ impl Scheduler {
             .map(|s| s.id)
             .collect();
         for id in running {
-            let sess = self.registry.sessions.get_mut(&id).expect("running id");
-            let driver = sess.driver.as_mut().expect("running session has a driver");
-            let flow = driver.step();
-            sess.rounds = driver.rounds_done() as u64;
-            // Flush any new records to this session's attached clients.
-            let produced = driver.records();
-            if produced.len() > sess.records.len() {
-                sess.records.extend_from_slice(&produced[sess.records.len()..]);
-            }
-            // Surface quorum degradation while the session is still
-            // running: a status poll shows *which* workers the latest
-            // recorded round folded as stand-ins.
-            match sess.records.last().filter(|r| !r.absent.is_empty()) {
-                Some(r) => {
-                    sess.detail = format!(
-                        "degraded: round {} folded stand-ins for workers {:?}",
-                        r.t, r.absent
-                    );
+            let mut jrecs: Vec<JournalRecord> = Vec::new();
+            let mut terminal = false;
+            {
+                let sess = self.registry.sessions.get_mut(&id).expect("running id");
+                let driver = sess.driver.as_mut().expect("running session has a driver");
+                let flow = driver.step();
+                sess.rounds = driver.rounds_done() as u64;
+                // Flush any new records to this session's attached clients.
+                let produced = driver.records();
+                if produced.len() > sess.records.len() {
+                    sess.records.extend_from_slice(&produced[sess.records.len()..]);
                 }
-                None => sess.detail.clear(),
+                // Surface quorum degradation while the session is still
+                // running: a status poll shows *which* workers the latest
+                // recorded round folded as stand-ins.
+                match sess.records.last().filter(|r| !r.absent.is_empty()) {
+                    Some(r) => {
+                        sess.detail = format!(
+                            "degraded: round {} folded stand-ins for workers {:?}",
+                            r.t, r.absent
+                        );
+                    }
+                    None => sess.detail.clear(),
+                }
+                // The round the driver just ran is a checkpoint round
+                // exactly when its CheckpointObserver wrote one; journal
+                // it so a restarted daemon knows where to resume from.
+                if let Some((every, path)) = &sess.spec.checkpoint {
+                    let done = sess.rounds as usize;
+                    if done > 0 && (done - 1) % *every == 0 {
+                        jrecs.push(JournalRecord::Ckpt {
+                            id,
+                            t: (done - 1) as u64,
+                            path: path.display().to_string(),
+                        });
+                    }
+                }
+                flush_metrics(&mut self.clients, id, &sess.records);
+                if flow == StepFlow::Finished {
+                    let driver = sess.driver.take().expect("finished driver");
+                    let result = driver.finish();
+                    sess.rounds = result.rounds_run as u64;
+                    let wire = result_to_wire(id, &result);
+                    sess.phase = if wire.error.is_some() {
+                        sess.detail = wire.error.clone().unwrap_or_default();
+                        SessionPhase::Failed
+                    } else {
+                        SessionPhase::Done
+                    };
+                    jrecs.push(JournalRecord::Phase {
+                        id,
+                        phase: sess.phase,
+                        detail: sess.detail.clone(),
+                    });
+                    jrecs.push(JournalRecord::Result(wire.clone()));
+                    sess.result = Some(wire);
+                    terminal = true;
+                }
             }
-            flush_metrics(&mut self.clients, id, &sess.records);
-            if flow == StepFlow::Finished {
-                let driver = sess.driver.take().expect("finished driver");
-                let result = driver.finish();
-                sess.rounds = result.rounds_run as u64;
-                let wire = result_to_wire(id, &result);
-                sess.phase = if wire.error.is_some() {
-                    sess.detail = wire.error.clone().unwrap_or_default();
-                    SessionPhase::Failed
-                } else {
-                    SessionPhase::Done
-                };
-                sess.result = Some(wire);
+            for rec in &jrecs {
+                self.journal_append(rec);
+            }
+            if terminal {
                 self.notify_terminal(id);
             }
         }
@@ -355,44 +455,70 @@ impl Scheduler {
     }
 
     /// Graceful shutdown: drain running sessions at the current round
-    /// boundary (writing checkpoint state where configured), fail the
-    /// queued ones with "server shutdown", release the fleet.
+    /// boundary (writing checkpoint state where configured) and release
+    /// the fleet. Without a journal, queued sessions fail with "server
+    /// shutdown" and drained running ones fail too — the daemon's state
+    /// dies with it. *With* a journal, neither is journaled terminal:
+    /// the journal's last word stays `Queued`/`Running`, so a restart
+    /// with the same `--journal` re-admits the queued sessions and
+    /// resumes the running ones from the checkpoint written here.
     fn drain_and_exit(&mut self) {
+        let persist = self.journal.is_some();
         let ids: Vec<u64> = self.registry.sessions.keys().copied().collect();
         for id in ids {
-            let sess = self.registry.sessions.get_mut(&id).expect("session id");
-            match sess.phase {
-                SessionPhase::Queued => {
-                    sess.phase = SessionPhase::Failed;
-                    sess.detail = "server shutdown".into();
-                    sess.result = Some(synthetic_result(id, "server shutdown"));
-                }
-                SessionPhase::Running => {
-                    let mut driver = sess.driver.take().expect("running session has a driver");
-                    if let Some((_, path)) = &sess.spec.checkpoint {
-                        match driver.checkpoint() {
-                            Ok(Some(cp)) => {
-                                if let Err(e) = cp.save(path) {
-                                    eprintln!(
-                                        "serve: shutdown checkpoint {}: {e:#}",
-                                        path.display()
-                                    );
+            let mut jrecs: Vec<JournalRecord> = Vec::new();
+            {
+                let sess = self.registry.sessions.get_mut(&id).expect("session id");
+                match sess.phase {
+                    SessionPhase::Queued if persist => continue,
+                    SessionPhase::Queued => {
+                        sess.phase = SessionPhase::Failed;
+                        sess.detail = "server shutdown".into();
+                        sess.result = Some(synthetic_result(id, "server shutdown"));
+                    }
+                    SessionPhase::Running => {
+                        let mut driver =
+                            sess.driver.take().expect("running session has a driver");
+                        if let Some((_, path)) = &sess.spec.checkpoint {
+                            match driver.checkpoint() {
+                                Ok(Some(cp)) => {
+                                    if let Err(e) = cp.save(path) {
+                                        eprintln!(
+                                            "serve: shutdown checkpoint {}: {e:#}",
+                                            path.display()
+                                        );
+                                    } else if persist {
+                                        jrecs.push(JournalRecord::Ckpt {
+                                            id,
+                                            t: cp.t as u64,
+                                            path: path.display().to_string(),
+                                        });
+                                    }
                                 }
+                                Ok(None) => {}
+                                Err(e) => eprintln!("serve: shutdown checkpoint: {e}"),
                             }
-                            Ok(None) => {}
-                            Err(e) => eprintln!("serve: shutdown checkpoint: {e}"),
+                        }
+                        let result = driver.finish();
+                        sess.rounds = result.rounds_run as u64;
+                        sess.records = result.records.clone();
+                        if persist {
+                            // Deliberately not journaled terminal: the
+                            // restart path resumes this session.
+                            sess.detail = "server shutdown (resumes on restart)".into();
+                        } else {
+                            let mut wire = result_to_wire(id, &result);
+                            wire.error.get_or_insert_with(|| "server shutdown".into());
+                            sess.phase = SessionPhase::Failed;
+                            sess.detail = "server shutdown".into();
+                            sess.result = Some(wire);
                         }
                     }
-                    let result = driver.finish();
-                    sess.rounds = result.rounds_run as u64;
-                    sess.records = result.records.clone();
-                    let mut wire = result_to_wire(id, &result);
-                    wire.error.get_or_insert_with(|| "server shutdown".into());
-                    sess.phase = SessionPhase::Failed;
-                    sess.detail = "server shutdown".into();
-                    sess.result = Some(wire);
+                    _ => continue,
                 }
-                _ => continue,
+            }
+            for rec in &jrecs {
+                self.journal_append(rec);
             }
             self.notify_terminal(id);
         }
@@ -412,6 +538,7 @@ impl Scheduler {
 fn start_session(
     spec: &SessionSpec,
     granted: Vec<Stream>,
+    resume: Option<Arc<ResumeState>>,
     pool: &Option<Arc<ShardPool>>,
     io_timeout: Duration,
     fleet_return: &Arc<FleetReturn>,
@@ -430,7 +557,41 @@ fn start_session(
     if let Some((every, path)) = &spec.checkpoint {
         observers.push(Box::new(CheckpointObserver::new(*every, path.clone())));
     }
-    SessionDriver::spawn(&problem, schedule, None, spec.cfg.clone(), transport, observers)
+    SessionDriver::spawn(&problem, schedule, resume, spec.cfg.clone(), transport, observers)
+}
+
+/// The resume state for a re-admitted session, from its latest
+/// journaled checkpoint. Every failure mode — no journaled checkpoint,
+/// a missing or torn file, a dimension mismatch — falls back to a
+/// from-scratch rerun (deterministic, just slower) instead of wedging
+/// the session.
+fn load_resume(sess: &Session) -> Option<Arc<ResumeState>> {
+    let (_, path) = sess.ckpt.as_ref()?;
+    let rs = match Checkpoint::load(path).and_then(|cp| ResumeState::from_checkpoint(&cp)) {
+        Ok(rs) => rs,
+        Err(e) => {
+            eprintln!(
+                "serve: session {}: resume from {}: {e:#}; restarting from round 0",
+                sess.id,
+                path.display()
+            );
+            return None;
+        }
+    };
+    if rs.x.len() != sess.spec.dim || rs.worker_g.len() != sess.spec.n_workers {
+        eprintln!(
+            "serve: session {}: checkpoint {} holds a {}-dim, {}-worker state but the spec \
+             wants {}×{}; restarting from round 0",
+            sess.id,
+            path.display(),
+            rs.x.len(),
+            rs.worker_g.len(),
+            sess.spec.dim,
+            sess.spec.n_workers
+        );
+        return None;
+    }
+    Some(Arc::new(rs))
 }
 
 fn status_of(sess: &Session) -> SessionStatus {

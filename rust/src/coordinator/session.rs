@@ -167,11 +167,12 @@ impl<'a> SessionBuilder<'a> {
     /// Resume from a [`Checkpoint`]: the session starts at round
     /// `checkpoint.t + 1` with the checkpointed iterate, the leader's
     /// exact f64 aggregate, and every worker's `g_i` (installed via
-    /// [`InitPolicy::FromState`], overriding `cfg.init`); bit
-    /// accountants restart at zero. Round seeds stay keyed to absolute
-    /// round numbers, so mechanisms that consume no worker-private
-    /// randomness (Top-K families, LAG/CLAG, GD) reproduce the original
-    /// trace round-for-round.
+    /// [`InitPolicy::FromState`], overriding `cfg.init`); the bit/byte
+    /// ledger continues from the checkpointed totals, so the resumed
+    /// run's final accounting equals an uninterrupted reference's.
+    /// Round seeds stay keyed to absolute round numbers, so mechanisms
+    /// that consume no worker-private randomness (Top-K families,
+    /// LAG/CLAG, GD) reproduce the original trace round-for-round.
     pub fn resume_from(mut self, cp: &Checkpoint) -> anyhow::Result<Self> {
         let rs = ResumeState::from_checkpoint(cp)?;
         anyhow::ensure!(
@@ -397,7 +398,9 @@ impl<'a> SessionDriver<'a> {
             })
             .collect();
         let server = match &resume {
-            Some(rs) => Server::from_state(x0, rs.g_sum.clone(), n),
+            Some(rs) => {
+                Server::from_state(x0, rs.g_sum.clone(), rs.worker_bits.clone(), rs.bits_down)
+            }
             None => {
                 let g0s: Vec<&[f32]> = workers.iter().map(|w| w.g()).collect();
                 let init_bits: Vec<u64> = workers.iter().map(|w| w.init_bits).collect();
@@ -410,10 +413,11 @@ impl<'a> SessionDriver<'a> {
         // fails mid-round (malformed frame, dead peer) ends the run
         // with `TrainResult::transport_error` set — peers' bytes can
         // never panic the leader. The transport sees the *effective*
-        // g⁰ policy (a `resume_from` overrides `cfg.init`), so a
-        // transport that cannot reproduce it remotely — the socket
-        // transport with `FromState` — rejects at connect time instead
-        // of silently desynchronising leader and agents.
+        // g⁰ policy (a `resume_from` overrides `cfg.init`): the socket
+        // transport installs `FromState` remotely through resync frames
+        // and rejects a state whose shape does not match the session at
+        // connect time instead of silently desynchronising leader and
+        // agents.
         let link_cfg = TrainConfig { init: init.clone(), ..cfg.clone() };
         let link = match transport.connect(workers, d, &link_cfg) {
             Ok(link) => link,
@@ -479,7 +483,10 @@ impl<'a> SessionDriver<'a> {
             converged: false,
             diverged: false,
             final_grad_norm_sq,
-            rounds_run: 0,
+            // Cumulative over the *logical* run: a resumed session
+            // already has `start_round` committed rounds behind it, so
+            // its reported totals match an uninterrupted reference.
+            rounds_run: start_round,
             transport_error: None,
             finished: false,
         })
@@ -500,7 +507,7 @@ impl<'a> SessionDriver<'a> {
             return StepFlow::Finished;
         }
         self.t = t + 1;
-        self.rounds_run = t + 1 - self.start_round;
+        self.rounds_run = t + 1;
 
         // Per-round schedule decision, made here on the coordinator
         // and broadcast through the transport as a real downlink
@@ -529,7 +536,7 @@ impl<'a> SessionDriver<'a> {
                     }
                     Err(e) => {
                         self.transport_error = Some(e);
-                        self.rounds_run = t - self.start_round;
+                        self.rounds_run = t;
                         self.finished = true;
                         return StepFlow::Finished;
                     }
@@ -550,7 +557,7 @@ impl<'a> SessionDriver<'a> {
             &mut self.agg,
         ) {
             self.transport_error = Some(e);
-            self.rounds_run = t - self.start_round;
+            self.rounds_run = t;
             self.finished = true;
             return StepFlow::Finished;
         }
@@ -572,6 +579,10 @@ impl<'a> SessionDriver<'a> {
             bits_up_max: self.server.max_bits_up(),
             bits_down_cum: self.server.bits_down as f64,
             skipped_frac: self.agg.skipped as f64 * inv_n,
+            bits_up: &self.server.bits_up,
+            bits_down: self.server.bits_down,
+            wire_bytes_up: self.link.measured_bytes_up(),
+            wire_bytes_down: self.link.measured_bytes_down(),
             loss: if eval_loss { Some(self.agg.loss_sum * inv_n) } else { None },
             x: &self.server.x,
             g_sum: self.server.g_sum(),
@@ -680,16 +691,24 @@ impl<'a> SessionDriver<'a> {
     /// each running session exactly as a
     /// [`CheckpointObserver`](super::CheckpointObserver) would have.
     pub fn checkpoint(&mut self) -> Result<Option<Checkpoint>, TransportError> {
-        if self.rounds_run == 0 && self.start_round == 0 {
+        if self.rounds_run == 0 {
             return Ok(None);
         }
         let worker_g = self.link.snapshot_g()?;
+        let worker_bits = worker_g
+            .iter()
+            .map(|(id, _)| (*id, self.server.bits_up.get(*id).copied().unwrap_or(0)))
+            .collect();
         Ok(Some(Checkpoint {
             t: self.t.saturating_sub(1),
             grad_norm_sq: self.final_grad_norm_sq,
             x: self.server.x.clone(),
             g_sum: self.server.g_sum().to_vec(),
             worker_g,
+            worker_bits,
+            bits_down: self.server.bits_down,
+            wire_bytes_up: self.link.measured_bytes_up(),
+            wire_bytes_down: self.link.measured_bytes_down(),
         }))
     }
 

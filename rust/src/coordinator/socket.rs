@@ -75,7 +75,7 @@ use super::transport::{
     validate_wire_msg, RoundAggregate, Transport, TransportError, TransportLink,
 };
 use super::worker::WorkerState;
-use super::InitPolicy;
+use super::{InitPolicy, ResumeState};
 use crate::compressors::{MechScratch, WireValueCoding};
 use crate::kernels;
 use crate::mechanisms::{parse_mechanism, ThreePointMap, Update};
@@ -678,17 +678,54 @@ pub(crate) fn accept_with_deadline(
     }
 }
 
-/// The `g⁰` policy bit a [`SessionHello`] can carry ([`InitPolicy`]
-/// minus `FromState`, which cannot cross the wire).
-pub(crate) fn wire_zero_init(cfg: &TrainConfig) -> Result<bool, TransportError> {
+/// How a socket session initialises its remote workers: a fresh
+/// session regenerates `g⁰` from the hello's init policy bit; a resumed
+/// one installs every worker through a resync frame carrying the
+/// checkpointed `(x, g_i)` mirrors — no hello crosses at connect time,
+/// and the recovery traffic is neither billed nor measured.
+pub(crate) enum WireInit {
+    Fresh { zero_init: bool },
+    Resume(Arc<ResumeState>),
+}
+
+pub(crate) fn wire_init(cfg: &TrainConfig) -> WireInit {
     match &cfg.init {
-        InitPolicy::FullGradient => Ok(false),
-        InitPolicy::Zero => Ok(true),
-        InitPolicy::FromState(_) => Err(TransportError::Protocol(
-            "socket transport cannot resume from checkpointed state \
-             (a FromState g⁰ cannot cross the wire)"
-                .into(),
-        )),
+        InitPolicy::FullGradient => WireInit::Fresh { zero_init: false },
+        InitPolicy::Zero => WireInit::Fresh { zero_init: true },
+        InitPolicy::FromState(rs) => WireInit::Resume(Arc::clone(rs)),
+    }
+}
+
+/// Split a [`WireInit`] for link construction: the hello's `zero_init`
+/// bit (irrelevant — and false — on resume, where resyncs carry
+/// explicit state) and the resume handle. Resume needs the mid-session
+/// resync path, which only the readiness-driven drain has.
+fn wire_init_parts(
+    cfg: &TrainConfig,
+    n: usize,
+    dim: usize,
+) -> Result<(bool, Option<Arc<ResumeState>>), TransportError> {
+    match wire_init(cfg) {
+        WireInit::Fresh { zero_init } => Ok((zero_init, None)),
+        #[cfg(unix)]
+        WireInit::Resume(rs) => {
+            if rs.worker_g.len() != n || rs.x.len() != dim {
+                return Err(TransportError::Protocol(format!(
+                    "resume state has {} workers of dim {} (session wants {n} of dim {dim})",
+                    rs.worker_g.len(),
+                    rs.x.len(),
+                )));
+            }
+            Ok((false, Some(rs)))
+        }
+        #[cfg(not(unix))]
+        WireInit::Resume(_) => {
+            let _ = (n, dim);
+            Err(TransportError::Protocol(
+                "socket resume needs the mid-session resync path, absent on this platform"
+                    .into(),
+            ))
+        }
     }
 }
 
@@ -723,7 +760,7 @@ impl Transport for Socket {
             return Err(TransportError::Protocol("socket transport needs ≥ 1 worker".into()));
         }
         validate_quorum(cfg, n)?;
-        let zero_init = wire_zero_init(cfg)?;
+        let (zero_init, resume) = wire_init_parts(cfg, n, dim)?;
         let mech_spec = workers[0].map_spec();
         let (listener, _local) = match self.listener.lock().expect("socket listener lock").take()
         {
@@ -731,61 +768,81 @@ impl Transport for Socket {
             None => bind_listener(&self.addr)?,
         };
 
-        // Accept exactly n agents under one deadline; connection order
+        // Accept exactly n agents under one deadline. Connection order
         // assigns worker ids (the hello tells each agent which shard it
-        // owns, so arrival order never changes the trace).
+        // owns, so arrival order never changes the trace) — unless an
+        // agent's hello claims a re-attach to a still-free slot, in
+        // which case it is seated back where it was (a restarted leader
+        // meeting its surviving fleet).
         let deadline = Instant::now() + self.accept_timeout;
         let mut scratch = Vec::new();
-        let mut peers = Vec::with_capacity(n);
-        for wid in 0..n {
+        let mut slots: Vec<Option<Peer>> = std::iter::repeat_with(|| None).take(n).collect();
+        for _ in 0..n {
             let mut stream = accept_with_deadline(&listener, deadline)?;
             // The hello read is deadline-bounded: a silent peer must
             // surface as Io, not stall the whole setup.
             stream
                 .configure(handshake_read_timeout(self.io_timeout, deadline))
                 .map_err(|e| io_err("configuring accepted stream", e))?;
-            let ctx = format!("handshake (worker {wid})");
-            let body = read_frame(&mut stream, &mut scratch, &ctx)?;
-            proto::decode_worker_hello(body)
-                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+            let body = read_frame(&mut stream, &mut scratch, "handshake")?;
+            let wh = proto::decode_worker_hello(body)
+                .map_err(|e| TransportError::Protocol(format!("handshake: {e:#}")))?;
+            let wid = match wh.reattach {
+                Some(prev) if (prev as usize) < n && slots[prev as usize].is_none() => {
+                    prev as usize
+                }
+                _ => slots.iter().position(|s| s.is_none()).expect("loop admits exactly n"),
+            };
             // Handshake done — restore the steady-state io discipline.
             stream
                 .configure(self.io_timeout)
                 .map_err(|e| io_err("configuring accepted stream", e))?;
-            let hello = SessionHello {
-                worker_id: wid as u32,
-                n_workers: n as u32,
-                dim: dim as u32,
-                seed: cfg.seed,
-                zero_init,
-                value_coding: self.value_coding,
-                mech_spec: mech_spec.clone(),
-                problem_spec: self.problem_spec.clone(),
-            };
-            let frame = proto::encode_session_hello(&hello)
-                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
-            write_frame(&mut stream, &frame, &ctx)?;
+            let ctx = format!("handshake (worker {wid})");
+            if resume.is_none() {
+                let hello = SessionHello {
+                    worker_id: wid as u32,
+                    n_workers: n as u32,
+                    dim: dim as u32,
+                    seed: cfg.seed,
+                    zero_init,
+                    value_coding: self.value_coding,
+                    mech_spec: mech_spec.clone(),
+                    problem_spec: self.problem_spec.clone(),
+                };
+                let frame = proto::encode_session_hello(&hello)
+                    .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+                write_frame(&mut stream, &frame, &ctx)?;
+            }
+            // On resume the slot gets no hello: its first downlink is
+            // the resync frame carrying the checkpointed `(x, g_i)`,
+            // sent when the session's first round begins.
             let addr = stream.peer_desc();
-            peers.push(Peer {
+            slots[wid] = Some(Peer {
                 id: wid,
                 stream: Some(stream),
                 addr,
                 #[cfg(unix)]
-                needs_resync: false,
+                needs_resync: resume.is_some(),
                 #[cfg(unix)]
                 absent_streak: 0,
             });
         }
+        let peers: Vec<Peer> =
+            slots.into_iter().map(|s| s.expect("n accepts fill every slot")).collect();
 
         // The leader keeps only the g_i^t mirrors; the heavy worker
         // state lives in the agents (which regenerate identical g⁰ from
-        // the hello, so the mirrors start in sync).
+        // the hello — or, on resume, rebuild it from the resync's
+        // explicit state — so the mirrors start in sync).
         let h: Vec<Vec<f32>> = workers.iter().map(|w| w.g().to_vec()).collect();
         drop(workers);
         Ok(Box::new(SocketLink {
             peers,
             dim,
-            round_idx: 0,
+            // A resumed link continues the original run's clocks: round
+            // frames stamp absolute indices and the measured-byte
+            // totals pick up where the checkpoint left them.
+            round_idx: resume.as_ref().map_or(0, |rs| rs.t as u64 + 1),
             h,
             state_buf: Vec::new(),
             grad_buf: Vec::new(),
@@ -800,8 +857,8 @@ impl Transport for Socket {
             reads: Vec::new(),
             #[cfg(unix)]
             pollfds: Vec::new(),
-            bytes_up: 0,
-            bytes_down: 0,
+            bytes_up: resume.as_ref().map_or(0, |rs| rs.wire_bytes_up),
+            bytes_down: resume.as_ref().map_or(0, |rs| rs.wire_bytes_down),
             shard_pool: None,
             failed: false,
             return_to: None,
@@ -959,31 +1016,36 @@ impl Transport for PreConnected {
             )));
         }
         validate_quorum(cfg, n)?;
-        let zero_init = wire_zero_init(cfg)?;
+        let (zero_init, resume) = wire_init_parts(cfg, n, dim)?;
         let mech_spec = workers[0].map_spec();
         let mut peers = Vec::with_capacity(n);
         for (wid, mut stream) in granted.into_iter().enumerate() {
-            let ctx = format!("session hello (worker {wid})");
-            let hello = SessionHello {
-                worker_id: wid as u32,
-                n_workers: n as u32,
-                dim: dim as u32,
-                seed: cfg.seed,
-                zero_init,
-                value_coding: self.value_coding,
-                mech_spec: mech_spec.clone(),
-                problem_spec: self.problem_spec.clone(),
-            };
-            let frame = proto::encode_session_hello(&hello)
-                .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
-            write_frame(&mut stream, &frame, &ctx)?;
+            if resume.is_none() {
+                let ctx = format!("session hello (worker {wid})");
+                let hello = SessionHello {
+                    worker_id: wid as u32,
+                    n_workers: n as u32,
+                    dim: dim as u32,
+                    seed: cfg.seed,
+                    zero_init,
+                    value_coding: self.value_coding,
+                    mech_spec: mech_spec.clone(),
+                    problem_spec: self.problem_spec.clone(),
+                };
+                let frame = proto::encode_session_hello(&hello)
+                    .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+                write_frame(&mut stream, &frame, &ctx)?;
+            }
+            // On resume (a journal-replayed daemon session) no hello is
+            // sent: the granted workers are installed through resync
+            // frames when the first round begins.
             let addr = stream.peer_desc();
             peers.push(Peer {
                 id: wid,
                 stream: Some(stream),
                 addr,
                 #[cfg(unix)]
-                needs_resync: false,
+                needs_resync: resume.is_some(),
                 #[cfg(unix)]
                 absent_streak: 0,
             });
@@ -993,7 +1055,7 @@ impl Transport for PreConnected {
         Ok(Box::new(SocketLink {
             peers,
             dim,
-            round_idx: 0,
+            round_idx: resume.as_ref().map_or(0, |rs| rs.t as u64 + 1),
             h,
             state_buf: Vec::new(),
             grad_buf: Vec::new(),
@@ -1008,8 +1070,8 @@ impl Transport for PreConnected {
             reads: Vec::new(),
             #[cfg(unix)]
             pollfds: Vec::new(),
-            bytes_up: 0,
-            bytes_down: 0,
+            bytes_up: resume.as_ref().map_or(0, |rs| rs.wire_bytes_up),
+            bytes_down: resume.as_ref().map_or(0, |rs| rs.wire_bytes_down),
             shard_pool: self.shard_pool.clone(),
             failed: false,
             return_to: Some(Arc::clone(&self.return_to)),
@@ -1646,14 +1708,15 @@ impl SocketLink {
         ))
     }
 
-    /// Drain the listener: accept every queued rejoin attempt, filling
-    /// the lowest dead slot first. A slot whose round has not folded
-    /// yet gets its resync immediately and participates in the pending
-    /// round — which is what lets a blocked round complete bit-for-bit
-    /// after a crash — while one already folded absent is held to the
-    /// next boundary. A broken rejoin attempt is dropped without
-    /// failing the round (the slot stays dead; the next attempt can
-    /// try again).
+    /// Drain the listener: accept every queued rejoin attempt. The
+    /// attempt's hello steers seating — a re-attach claim naming a dead
+    /// slot takes that slot, anything else fills the lowest dead slot.
+    /// A slot whose round has not folded yet gets its resync
+    /// immediately and participates in the pending round — which is
+    /// what lets a blocked round complete bit-for-bit after a crash —
+    /// while one already folded absent is held to the next boundary. A
+    /// broken rejoin attempt is dropped without failing the round (the
+    /// slot stays dead; the next attempt can try again).
     #[cfg(unix)]
     fn accept_replacements(
         &mut self,
@@ -1664,27 +1727,26 @@ impl SocketLink {
         next_fold: usize,
     ) -> Result<(), TransportError> {
         loop {
-            let Some(slot) = self.peers.iter().position(|p| p.stream.is_none()) else {
+            if !self.peers.iter().any(|p| p.stream.is_none()) {
                 return Ok(());
-            };
+            }
             let listener = self.listener.as_ref().expect("accept_replacements needs a listener");
             let stream = match listener.accept() {
                 Ok(s) => s,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
                 Err(e) => return Err(io_err("rejoin accept", e)),
             };
-            let _ = self.install_replacement(slot, stream, t, round_seed, eval_loss, x, next_fold);
+            let _ = self.install_replacement(stream, t, round_seed, eval_loss, x, next_fold);
         }
     }
 
-    /// Handshake an accepted rejoin connection into a dead slot and
-    /// resync it (now, or at the next boundary if this round already
-    /// folded the slot absent).
+    /// Handshake an accepted rejoin connection into a dead slot —
+    /// preferring the slot its hello re-attaches to, if that slot is
+    /// dead — and resync it (now, or at the next boundary if this round
+    /// already folded the slot absent).
     #[cfg(unix)]
-    #[allow(clippy::too_many_arguments)]
     fn install_replacement(
         &mut self,
-        slot: usize,
         mut stream: Stream,
         t: u64,
         round_seed: u64,
@@ -1693,15 +1755,29 @@ impl SocketLink {
         next_fold: usize,
     ) -> Result<(), TransportError> {
         // The handshake runs blocking under a bounded timeout: a silent
-        // rejoiner must not stall the round past the io budget.
+        // rejoiner must not stall the round past the io budget. The
+        // hello is read *before* the slot is chosen so a re-attach
+        // claim can steer the choice.
         let hs = if self.io_timeout.is_zero() { Duration::from_secs(30) } else { self.io_timeout };
         stream.configure(hs).map_err(|e| io_err("configuring rejoin stream", e))?;
-        let wid = self.peers[slot].id;
-        let ctx = format!("rejoin handshake (worker {wid})");
         let mut scratch = Vec::new();
-        let body = read_frame(&mut stream, &mut scratch, &ctx)?;
-        proto::decode_worker_hello(body)
-            .map_err(|e| TransportError::Protocol(format!("{ctx}: {e:#}")))?;
+        let body = read_frame(&mut stream, &mut scratch, "rejoin handshake")?;
+        let wh = proto::decode_worker_hello(body)
+            .map_err(|e| TransportError::Protocol(format!("rejoin handshake: {e:#}")))?;
+        let slot = match wh.reattach {
+            Some(prev)
+                if (prev as usize) < self.peers.len()
+                    && self.peers[prev as usize].stream.is_none() =>
+            {
+                prev as usize
+            }
+            _ => self
+                .peers
+                .iter()
+                .position(|p| p.stream.is_none())
+                .expect("caller admits rejoins only while a slot is dead"),
+        };
+        let wid = self.peers[slot].id;
         stream.configure(self.io_timeout).map_err(|e| io_err("configuring rejoin stream", e))?;
         let addr = stream.peer_desc();
         self.peers[slot].stream = Some(stream);
@@ -2035,6 +2111,15 @@ pub struct AgentConfig {
     /// Scripted faults (drops, delays, crashes, reconnection) for the
     /// fault-injection harness; default = no faults.
     pub fault: FaultScript,
+    /// Survive a *lost established connection* (the leader died or
+    /// restarted mid-session): keep re-dialing under the capped
+    /// backoff, forever, with a hello that claims the worker id this
+    /// agent last held — so a restarted leader seats it back in the
+    /// same slot and resyncs it from the checkpointed state. Protocol
+    /// errors still fail fast, and the *initial* connect stays bounded
+    /// by [`connect_attempts`](AgentConfig::connect_attempts). Default
+    /// off: an unexpected disconnect kills the agent loudly.
+    pub reattach: bool,
 }
 
 impl Default for AgentConfig {
@@ -2046,6 +2131,7 @@ impl Default for AgentConfig {
             io_timeout: Duration::from_secs(60),
             reply_delay: Duration::ZERO,
             fault: FaultScript::default(),
+            reattach: false,
         }
     }
 }
@@ -2078,26 +2164,39 @@ enum SessionStart {
 /// from [`AgentConfig::retry_backoff`] capped at
 /// [`AgentConfig::retry_backoff_max`] — while protocol-level failures
 /// (bad magic, version mismatch) fail fast: retrying cannot fix those.
-/// `Ok(None)` is a clean end before any session: a `threepc serve`
-/// daemon shutting down releases fleet members that were never granted
-/// work with a shutdown frame.
+/// `reattach = Some(prev_wid)` makes the retrying *unbounded* (the
+/// re-attach loop after a lost established connection: the leader may
+/// take arbitrarily long to restart) and sends the extended hello
+/// claiming that worker id. `Ok(None)` is a clean end before any
+/// session: a `threepc serve` daemon shutting down releases fleet
+/// members that were never granted work with a shutdown frame.
 fn connect_and_handshake(
     addr: &str,
     cfg: &AgentConfig,
+    reattach: Option<u32>,
 ) -> Result<Option<(Stream, SessionStart)>, TransportError> {
     let parsed = parse_addr(addr)?;
     let attempts = cfg.connect_attempts.max(1);
     let mut last = TransportError::Io(format!("no connect attempts made for {addr}"));
     let mut backoff = cfg.retry_backoff;
-    for attempt in 0..attempts {
+    let hello = match reattach {
+        Some(prev_wid) => proto::encode_worker_hello_reattach(prev_wid),
+        None => proto::encode_worker_hello(),
+    };
+    let mut attempt: u32 = 0;
+    loop {
+        if reattach.is_none() && attempt >= attempts {
+            return Err(last);
+        }
         if attempt > 0 {
             std::thread::sleep(backoff);
             backoff = (backoff * 2).min(cfg.retry_backoff_max.max(cfg.retry_backoff));
         }
+        attempt = attempt.saturating_add(1);
         let mut stream = match try_connect(&parsed) {
             Ok(s) => s,
             Err(e) => {
-                last = io_err(&format!("connecting to {addr} (attempt {})", attempt + 1), e);
+                last = io_err(&format!("connecting to {addr} (attempt {attempt})"), e);
                 continue;
             }
         };
@@ -2105,7 +2204,7 @@ fn connect_and_handshake(
             last = io_err("configuring stream", e);
             continue;
         }
-        if let Err(e) = write_frame(&mut stream, &proto::encode_worker_hello(), "worker hello") {
+        if let Err(e) = write_frame(&mut stream, &hello, "worker hello") {
             last = e;
             continue;
         }
@@ -2136,7 +2235,6 @@ fn connect_and_handshake(
         };
         return Ok(Some((stream, start)));
     }
-    Err(last)
 }
 
 /// How a served session ended, from the agent's side.
@@ -2150,6 +2248,10 @@ enum AgentFlow {
     /// without replying, then (if the script says `reconnect`) re-dials
     /// for a resync.
     Crashed,
+    /// The established connection died mid-session (io error — the
+    /// leader crashed or restarted). Carries the error so agents that
+    /// don't re-attach can report it.
+    Lost(TransportError),
 }
 
 /// Run a worker agent until its leader shuts it down: connect to
@@ -2164,31 +2266,60 @@ enum AgentFlow {
 /// threads.
 pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
     let Some((mut stream, mut start)) =
-        connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?
+        connect_and_handshake(addr, cfg, None).map_err(|e| anyhow::anyhow!("{e}"))?
     else {
         return Ok(());
     };
+    // The worker id this agent last held on an established session —
+    // what a re-attach hello claims after a lost connection.
+    let mut last_wid: Option<u32> = None;
     loop {
-        match serve_worker_session(&mut stream, start, cfg)? {
+        last_wid = Some(match &start {
+            SessionStart::Hello(h) => h.worker_id,
+            SessionStart::Resync(r) => r.hello.worker_id,
+        });
+        let flow = serve_worker_session(&mut stream, start, cfg)?;
+        start = match flow {
             AgentFlow::Shutdown => return Ok(()),
             AgentFlow::SessionEnd => {
                 stream
                     .configure(Duration::ZERO)
                     .map_err(|e| anyhow::anyhow!("{}", io_err("configuring idle stream", e)))?;
                 let mut buf = Vec::new();
-                let body = read_frame(&mut stream, &mut buf, "awaiting next session")
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let next = match proto::decode_downlink(body)? {
-                    DownlinkFrame::Hello(h) => h,
-                    DownlinkFrame::Shutdown => return Ok(()),
-                    other => anyhow::bail!(
-                        "expected a session hello after session end, got {other:?}"
-                    ),
+                let next = match read_frame(&mut stream, &mut buf, "awaiting next session") {
+                    Ok(body) => match proto::decode_downlink(body)? {
+                        DownlinkFrame::Hello(h) => SessionStart::Hello(h),
+                        // A journal-resumed daemon session grants parked
+                        // workers straight into a running round clock:
+                        // its opener is a resync, not a hello.
+                        DownlinkFrame::Resync(r) => SessionStart::Resync(r),
+                        DownlinkFrame::Shutdown => return Ok(()),
+                        other => anyhow::bail!(
+                            "expected a session hello after session end, got {other:?}"
+                        ),
+                    },
+                    Err(e @ TransportError::Protocol(_)) => return Err(anyhow::anyhow!("{e}")),
+                    Err(e) => {
+                        // The daemon died while this agent idled. With
+                        // re-attach armed, dial until it comes back.
+                        if !cfg.reattach {
+                            return Err(anyhow::anyhow!("{e}"));
+                        }
+                        drop(stream);
+                        let Some((s, next)) = connect_and_handshake(addr, cfg, last_wid)
+                            .map_err(|e| anyhow::anyhow!("{e}"))?
+                        else {
+                            return Ok(());
+                        };
+                        stream = s;
+                        start = next;
+                        continue;
+                    }
                 };
                 stream
                     .configure(cfg.io_timeout)
                     .map_err(|e| anyhow::anyhow!("{}", io_err("configuring stream", e)))?;
-                start = SessionStart::Hello(next);
+                next
             }
             AgentFlow::Crashed => {
                 if !cfg.fault.reconnects() {
@@ -2198,14 +2329,30 @@ pub fn run_worker_agent(addr: &str, cfg: &AgentConfig) -> anyhow::Result<()> {
                 }
                 drop(stream);
                 let Some((s, next)) =
-                    connect_and_handshake(addr, cfg).map_err(|e| anyhow::anyhow!("{e}"))?
+                    connect_and_handshake(addr, cfg, None).map_err(|e| anyhow::anyhow!("{e}"))?
                 else {
                     return Ok(());
                 };
                 stream = s;
-                start = next;
+                next
             }
-        }
+            AgentFlow::Lost(e) => {
+                if !cfg.reattach {
+                    return Err(anyhow::anyhow!("{e}"));
+                }
+                // The leader died under an established session: re-dial
+                // forever (capped backoff) claiming the slot this agent
+                // held, so the restarted leader can seat and resync it.
+                drop(stream);
+                let Some((s, next)) = connect_and_handshake(addr, cfg, last_wid)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                else {
+                    return Ok(());
+                };
+                stream = s;
+                next
+            }
+        };
     }
 }
 
@@ -2322,8 +2469,23 @@ fn resync_worker(
         r.hello.value_coding,
         scratch,
     )?;
-    write_frame(stream, &scratch.reply, "resync reply").map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Keep the typed error in the chain: the caller classifies io
+    // failures (lost connection → possible re-attach) by downcast.
+    write_frame(stream, &scratch.reply, "resync reply").map_err(anyhow::Error::new)?;
     Ok(worker)
+}
+
+/// Classify a worker-session failure: io-level errors mean the
+/// established connection was lost (the re-attach path may recover);
+/// protocol errors and local failures stay hard errors.
+fn lost_or_err(e: anyhow::Error) -> anyhow::Result<AgentFlow> {
+    match e.downcast::<TransportError>() {
+        Ok(te @ (TransportError::Io(_) | TransportError::Disconnected(_))) => {
+            Ok(AgentFlow::Lost(te))
+        }
+        Ok(te) => Err(anyhow::anyhow!("{te}")),
+        Err(e) => Err(e),
+    }
 }
 
 /// Serve one session on an established, hello'd (or resync'd)
@@ -2354,7 +2516,10 @@ fn serve_worker_session(
         }
         SessionStart::Resync(r) => {
             let h = r.hello.clone();
-            let worker = resync_worker(stream, r, &mut scratch)?;
+            let worker = match resync_worker(stream, r, &mut scratch) {
+                Ok(w) => w,
+                Err(e) => return lost_or_err(e),
+            };
             (h, worker)
         }
     };
@@ -2363,8 +2528,11 @@ fn serve_worker_session(
 
     let mut buf = Vec::new();
     loop {
-        let body =
-            read_frame(stream, &mut buf, "awaiting round").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let body = match read_frame(stream, &mut buf, "awaiting round") {
+            Ok(b) => b,
+            Err(e @ TransportError::Protocol(_)) => return Err(anyhow::anyhow!("{e}")),
+            Err(e) => return Ok(AgentFlow::Lost(e)),
+        };
         match proto::decode_downlink(body)? {
             DownlinkFrame::Round { t, round_seed, eval_loss, x } => {
                 if cfg.fault.crash_at(t) {
@@ -2396,8 +2564,12 @@ fn serve_worker_session(
                 if !cfg.reply_delay.is_zero() {
                     std::thread::sleep(cfg.reply_delay);
                 }
-                write_frame(stream, &scratch.reply, "round reply")
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                if let Err(e) = write_frame(stream, &scratch.reply, "round reply") {
+                    return match e {
+                        TransportError::Protocol(_) => Err(anyhow::anyhow!("{e}")),
+                        e => Ok(AgentFlow::Lost(e)),
+                    };
+                }
             }
             DownlinkFrame::Resync(r) => {
                 // Mid-session resync: the leader demoted us (straggle,
@@ -2409,7 +2581,10 @@ fn serve_worker_session(
                     r.hello.worker_id,
                     r.hello.dim
                 );
-                worker = resync_worker(stream, r, &mut scratch)?;
+                worker = match resync_worker(stream, r, &mut scratch) {
+                    Ok(w) => w,
+                    Err(e) => return lost_or_err(e),
+                };
             }
             DownlinkFrame::Switch(ms) => {
                 let map = parse_mechanism(&ms.spec)

@@ -575,13 +575,20 @@ impl Transport for Framed {
         &self,
         workers: Vec<WorkerState>,
         dim: usize,
-        _cfg: &TrainConfig,
+        cfg: &TrainConfig,
     ) -> Result<Box<dyn TransportLink>, TransportError> {
+        // A resumed session continues the checkpointed byte meters, so
+        // the resumed run's measured totals equal an uninterrupted
+        // reference's (same contract as the bit ledger).
+        let (bytes_up, bytes_down) = match &cfg.init {
+            super::InitPolicy::FromState(rs) => (rs.wire_bytes_up, rs.wire_bytes_down),
+            _ => (0, 0),
+        };
         Ok(Box::new(FramedLink {
             workers,
             dim,
-            bytes_up: 0,
-            bytes_down: 0,
+            bytes_up,
+            bytes_down,
             coding: self.value_coding,
             frame_buf: Vec::new(),
             wire_scratch: Vec::new(),

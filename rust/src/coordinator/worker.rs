@@ -252,6 +252,10 @@ mod tests {
             x: vec![1.0, 1.0, 1.0],
             g_sum: vec![0.5, -0.5, 0.25],
             worker_g: vec![vec![0.5f32, -0.5, 0.25]],
+            worker_bits: vec![0],
+            bits_down: 0,
+            wire_bytes_up: 0,
+            wire_bytes_down: 0,
         });
         let w = quad_worker(InitPolicy::FromState(rs));
         assert_eq!(w.g(), &[0.5, -0.5, 0.25]);

@@ -86,6 +86,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         retry_backoff_max: Duration::from_millis(args.num_or("retry-backoff-max-ms", 2_000u64)),
         io_timeout: Duration::from_millis(args.num_or("io-timeout-ms", 60_000u64)),
         reply_delay: Duration::from_millis(args.num_or("reply-delay-ms", 0u64)),
+        reattach: args.flag("reattach"),
         fault,
     };
     println!("threepc worker: connecting to {addr}");
@@ -107,6 +108,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.io_timeout = Duration::from_millis(args.num_or("io-timeout-ms", 30_000u64));
     opts.handshake_timeout =
         Duration::from_millis(args.num_or("handshake-timeout-ms", 10_000u64));
+    opts.journal = args.get("journal").map(std::path::PathBuf::from);
     let service = Service::bind(opts).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("threepc serve: listening on {}", service.local_addr());
     install_shutdown_handler(service.shutdown_flag());
@@ -342,6 +344,14 @@ fn print_help() {
            --quorum-grace-ms M        extra wait for stragglers once quorum met (50)\n\
            --absence-budget K         fail after K consecutive stand-in rounds for\n\
                                       one worker (default: unbounded)\n\
+           --checkpoint <path>        persist the full optimizer state (x, every\n\
+                                      g_i, the bit/byte ledger) atomically to <path>\n\
+           --checkpoint-every K       rounds between checkpoint writes (25)\n\
+           --resume-from <path>       restart a killed run from its checkpoint: the\n\
+                                      leader re-binds, reconnecting workers resync\n\
+                                      from the checkpointed state, and the resumed\n\
+                                      trace (rounds, bits, bytes) equals an\n\
+                                      uninterrupted run's bit for bit\n\
          \n\
          worker flags:\n\
            --connect tcp://host:port|uds://path  the leader's listen address\n\
@@ -350,6 +360,13 @@ fn print_help() {
                                       per failed attempt (exponential backoff)\n\
            --retry-backoff-max-ms M   cap on the exponential backoff (2000)\n\
            --io-timeout-ms M          per-read/write timeout once connected (60000)\n\
+           --reattach                 survive a crashed/restarted leader: after a\n\
+                                      lost established connection, re-dial forever\n\
+                                      under the capped backoff (announcing the old\n\
+                                      worker slot) instead of exiting; the restarted\n\
+                                      leader resyncs this worker's state over the\n\
+                                      wire. Initial connects stay bounded by\n\
+                                      --retries either way\n\
            --fault <script>           scripted fault injection, e.g.\n\
                                       drop@12,delay@30:500ms,crash@50,reconnect@55\n\
                                       (reconnect re-dials after a scripted crash and\n\
@@ -362,6 +379,12 @@ fn print_help() {
            --threads P                shared coordinate-sharding helper threads\n\
            --io-timeout-ms M          steady-state per-op socket timeout (30000)\n\
            --handshake-timeout-ms M   budget for a connection's first frame (10000)\n\
+           --journal <path>           durable session journal: admissions, phase\n\
+                                      transitions and checkpoint writes are synced\n\
+                                      to <path>, and a restarted daemon pointed at\n\
+                                      the same journal re-admits queued sessions\n\
+                                      and resumes running ones (spec checkpoint=…)\n\
+                                      from their latest checkpoints\n\
            SIGINT/SIGTERM drain running sessions to a round boundary\n\
          \n\
          submit/status/attach/cancel flags:\n\
@@ -563,7 +586,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         fnum(cfg.gamma),
         cfg.max_rounds
     );
-    let builder = TrainSession::builder(&problem).schedule_boxed(schedule).config(cfg.clone());
+    let mut builder =
+        TrainSession::builder(&problem).schedule_boxed(schedule).config(cfg.clone());
+    if let Some(path) = args.get("resume-from") {
+        let cp = threepc::coordinator::Checkpoint::load(path)?;
+        println!(
+            "threepc train: resuming from {path} (round {} committed; continuing at {})",
+            cp.t,
+            cp.t + 1
+        );
+        builder = builder.resume_from(&cp)?;
+    }
+    if let Some(path) = args.get("checkpoint") {
+        let every = args.num_or("checkpoint-every", 25usize);
+        builder = builder.observer(threepc::coordinator::CheckpointObserver::new(every, path));
+    }
     let r = match transport.as_str() {
         "inproc" | "inprocess" => builder.transport(InProcess::default()).run(),
         "framed" | "framed-natural" => {

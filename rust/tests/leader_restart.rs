@@ -1,0 +1,318 @@
+//! Crash-safe leader acceptance, end to end over the real `threepc`
+//! binary: a leader SIGKILLed mid-run and restarted — solo with
+//! `--resume-from`, or as a `--journal`ed daemon — must reproduce the
+//! undisturbed reference run's `result-bits:` line bit for bit (rounds,
+//! final gradient norm, billed bits, measured wire bytes), with the
+//! surviving worker processes re-attaching on their own under
+//! `--reattach`.
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use threepc::coordinator::Checkpoint;
+
+const N: usize = 4;
+const ROUNDS: usize = 400;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_threepc")
+}
+
+/// A scratch directory unique to this test process.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("3pc-lr-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+/// Kill-on-drop child guard: a panicking test must not leak worker
+/// processes that retry forever under `--reattach`.
+struct Proc(Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn(args: &[&str]) -> Child {
+    Command::new(bin())
+        .args(args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn threepc")
+}
+
+fn spawn_captured(args: &[&str]) -> Child {
+    Command::new(bin())
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn threepc")
+}
+
+/// The shared `train` argument tail: problem geometry, mechanism and
+/// horizon are identical across the reference, the killed run and the
+/// resumed run, so their traces are comparable bit for bit.
+fn train_args(addr: &str) -> Vec<String> {
+    [
+        "train",
+        "--problem",
+        "quad",
+        "--workers",
+        "4",
+        "--d",
+        "30",
+        "--lambda",
+        "0.01",
+        "--noise-scale",
+        "0.5",
+        "--seed",
+        "21",
+        "--mech",
+        "ef21:top3",
+        "--gamma",
+        "0.02",
+        "--rounds",
+        "400",
+        "--transport",
+        addr,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn worker_args(addr: &str) -> Vec<String> {
+    [
+        "worker",
+        "--connect",
+        addr,
+        "--reattach=true",
+        // The delay paces rounds (≥ 2 ms each) so the kill lands
+        // mid-run deterministically; it cannot change the trace.
+        "--reply-delay-ms",
+        "2",
+        "--retries",
+        "100000",
+        "--retry-backoff-ms",
+        "20",
+        "--retry-backoff-max-ms",
+        "200",
+        "--io-timeout-ms",
+        "60000",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn result_bits(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find(|l| l.starts_with("result-bits:"))
+        .unwrap_or_else(|| panic!("no result-bits line in:\n{stdout}"))
+        .to_string()
+}
+
+/// Block until the child exits successfully and return its stdout.
+fn wait_success(child: Child, what: &str) -> String {
+    let out = child.wait_with_output().unwrap_or_else(|e| panic!("{what}: {e}"));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\n{stdout}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    stdout
+}
+
+/// Poll the checkpoint file until it holds a committed round ≥ `min_t`
+/// (atomic persists mean a load never sees a torn file).
+fn wait_ckpt_round(path: &Path, min_t: usize) -> usize {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Ok(cp) = Checkpoint::load(path) {
+            if cp.t >= min_t {
+                return cp.t;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "checkpoint {} never reached round {min_t}",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The undisturbed reference: one solo leader over its own socket with
+/// in-process loopback agents, run to the full horizon.
+fn reference_result_bits(dir: &Path) -> String {
+    let addr = format!("uds://{}", dir.join("ref.sock").display());
+    let mut args = train_args(&addr);
+    args.push("--spawn-workers=true".into());
+    let argv: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let stdout = wait_success(spawn_captured(&argv), "reference train");
+    result_bits(&stdout)
+}
+
+#[test]
+fn sigkilled_solo_leader_resumes_bit_for_bit_and_workers_reattach() {
+    let dir = scratch("solo");
+    let reference = reference_result_bits(&dir);
+
+    // The doomed leader: external worker processes, periodic
+    // checkpoints, SIGKILL once round 50 is committed on disk.
+    let addr = format!("uds://{}", dir.join("run.sock").display());
+    let ckpt = dir.join("leader.ckpt");
+    let mut args = train_args(&addr);
+    args.extend(["--checkpoint".into(), ckpt.display().to_string()]);
+    args.extend(["--checkpoint-every".into(), "25".into()]);
+    let argv: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let mut doomed = Proc(spawn(&argv));
+    let wargs = worker_args(&addr);
+    let wargv: Vec<&str> = wargs.iter().map(|s| s.as_str()).collect();
+    let workers: Vec<Proc> = (0..N).map(|_| Proc(spawn(&wargv))).collect();
+    let killed_at = wait_ckpt_round(&ckpt, 50);
+    assert!(killed_at < ROUNDS, "the kill must land mid-run");
+    doomed.0.kill().expect("SIGKILL leader");
+    doomed.0.wait().expect("reap leader");
+
+    // The restarted leader re-binds the same address and resumes from
+    // the checkpoint; the orphaned workers re-dial it on their own.
+    let mut args = train_args(&addr);
+    args.extend(["--resume-from".into(), ckpt.display().to_string()]);
+    args.extend(["--checkpoint".into(), ckpt.display().to_string()]);
+    args.extend(["--checkpoint-every".into(), "25".into()]);
+    let argv: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let stdout = wait_success(spawn_captured(&argv), "resumed train");
+    assert!(stdout.contains("resuming from"), "resume banner missing:\n{stdout}");
+    assert_eq!(
+        result_bits(&stdout),
+        reference,
+        "the resumed run must reproduce the reference result and ledger exactly"
+    );
+
+    // The leader's shutdown frames end the re-attached workers cleanly.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for mut w in workers {
+        loop {
+            match w.0.try_wait().expect("poll worker") {
+                Some(status) => {
+                    assert!(status.success(), "worker exited with {status}");
+                    break;
+                }
+                None => {
+                    assert!(Instant::now() < deadline, "worker never shut down");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Probe a daemon: a structured reject on a bogus id proves the
+/// control plane is up (a refused connection does not print one).
+fn wait_daemon_ready(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let out = Command::new(bin())
+            .args(["status", "--connect", addr, "--id", "999999"])
+            .output()
+            .expect("run status probe");
+        if String::from_utf8_lossy(&out.stderr).contains("rejected") {
+            return;
+        }
+        assert!(Instant::now() < deadline, "daemon at {addr} never came up");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn sigkilled_journaled_daemon_resumes_its_session_bit_for_bit() {
+    let dir = scratch("daemon");
+    let reference = reference_result_bits(&dir);
+
+    let addr = format!("uds://{}", dir.join("daemon.sock").display());
+    let journal = dir.join("sessions.journal");
+    let ckpt = dir.join("daemon.ckpt");
+    let serve_args: Vec<String> = [
+        "serve",
+        "--listen",
+        &addr,
+        "--fleet",
+        "4",
+        "--journal",
+        &journal.display().to_string(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let serve_argv: Vec<&str> = serve_args.iter().map(|s| s.as_str()).collect();
+    let mut daemon = Proc(spawn(&serve_argv));
+    wait_daemon_ready(&addr);
+
+    // External worker processes form the fleet (their reply delay
+    // paces the rounds; their --reattach outlives the daemon).
+    let wargs = worker_args(&addr);
+    let wargv: Vec<&str> = wargs.iter().map(|s| s.as_str()).collect();
+    let workers: Vec<Proc> = (0..N).map(|_| Proc(spawn(&wargv))).collect();
+
+    // The same run as the reference, as a daemon session spec.
+    let spec = format!(
+        "problem=quad:4:30:0.01:0.5:21;mech=ef21:top3;rounds={ROUNDS};gamma=0.02;seed=21;\
+         checkpoint={};checkpoint-every=25",
+        ckpt.display()
+    );
+    let submit = Command::new(bin())
+        .args(["submit", "--connect", &addr, "--spec", &spec])
+        .output()
+        .expect("submit");
+    assert!(
+        submit.status.success(),
+        "submit failed:\n{}",
+        String::from_utf8_lossy(&submit.stderr)
+    );
+
+    // SIGKILL the daemon once round 50 is committed; the journal's
+    // last words are the admission and that checkpoint.
+    let killed_at = wait_ckpt_round(&ckpt, 50);
+    assert!(killed_at < ROUNDS, "the kill must land mid-run");
+    daemon.0.kill().expect("SIGKILL daemon");
+    daemon.0.wait().expect("reap daemon");
+
+    // A fresh daemon on the same journal re-admits the session and
+    // resumes it from the checkpoint; the orphaned workers re-dial
+    // into its fleet and are installed over the resync path.
+    let mut daemon = Proc(spawn(&serve_argv));
+    wait_daemon_ready(&addr);
+    let attach = Command::new(bin())
+        .args(["attach", "--connect", &addr, "--id", "1"])
+        .output()
+        .expect("attach");
+    let stdout = String::from_utf8_lossy(&attach.stdout).into_owned();
+    assert!(
+        attach.status.success(),
+        "attach failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&attach.stderr)
+    );
+    assert_eq!(
+        result_bits(&stdout),
+        reference,
+        "the journal-resumed session must reproduce the reference result and ledger exactly"
+    );
+
+    daemon.0.kill().expect("stop daemon");
+    daemon.0.wait().expect("reap daemon");
+    drop(workers);
+    let _ = std::fs::remove_dir_all(&dir);
+}

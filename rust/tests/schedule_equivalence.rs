@@ -221,7 +221,7 @@ fn kill_and_resume_reproduces_the_reference_trace() {
         .mechanism(parse_mechanism("clag:top3:2.0").unwrap())
         .config(c)
         .run();
-    assert_eq!(resumed.rounds_run, 15, "rounds 15..30");
+    assert_eq!(resumed.rounds_run, 30, "the round clock is cumulative across the resume");
     let tail: Vec<_> = reference.records.iter().filter(|r| r.t >= 15).collect();
     assert_eq!(resumed.records.len(), tail.len());
     for (rr, tr) in resumed.records.iter().zip(&tail) {
@@ -229,12 +229,15 @@ fn kill_and_resume_reproduces_the_reference_trace() {
         assert_eq!(rr.grad_norm_sq, tr.grad_norm_sq, "round {}", rr.t);
         assert_eq!(rr.g_err, tr.g_err, "round {}", rr.t);
         assert_eq!(rr.skipped_frac, tr.skipped_frac, "round {}", rr.t);
+        assert_eq!(rr.bits_up_cum, tr.bits_up_cum, "round {}", rr.t);
+        assert_eq!(rr.bits_down_cum, tr.bits_down_cum, "round {}", rr.t);
     }
     assert_eq!(resumed.final_x, reference.final_x);
-    // The accounting clock restarts on resume: only rounds 15..30 bill,
-    // and the free FromState init beats the reference's full-gradient
-    // g⁰ sync.
-    assert!(resumed.total_bits_up < reference.total_bits_up);
+    // The checkpoint carries the bit ledger: the resumed run's
+    // cumulative totals equal the undisturbed reference's (the resume
+    // itself bills nothing).
+    assert_eq!(resumed.total_bits_up, reference.total_bits_up);
+    assert_eq!(resumed.total_bits_down, reference.total_bits_down);
 }
 
 /// Natural value coding is transparent to the trajectory (lossless for

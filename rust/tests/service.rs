@@ -85,15 +85,24 @@ struct Daemon {
     join: thread::JoinHandle<anyhow::Result<()>>,
 }
 
-fn start_daemon(fleet: usize) -> Daemon {
+fn start_daemon_opts(
+    fleet: usize,
+    spawn_workers: bool,
+    journal: Option<std::path::PathBuf>,
+) -> Daemon {
     let mut opts = ServeOptions::new("tcp://127.0.0.1:0");
     opts.fleet = Some(fleet);
-    opts.spawn_workers = true;
+    opts.spawn_workers = spawn_workers;
+    opts.journal = journal;
     let service = Service::bind(opts).expect("bind daemon");
     let addr = service.local_addr().to_string();
     let flag = service.shutdown_flag();
     let join = thread::spawn(move || service.run());
     Daemon { addr, flag, join }
+}
+
+fn start_daemon(fleet: usize) -> Daemon {
+    start_daemon_opts(fleet, true, None)
 }
 
 impl Daemon {
@@ -342,4 +351,126 @@ fn shutdown_drains_running_and_fails_queued() {
     assert_eq!(written.x.len(), D);
     assert_eq!(written.worker_g.len(), N);
     let _ = std::fs::remove_file(&cp);
+}
+
+fn wait_for_rounds(c: &mut ServiceClient, id: u64, min: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match c.status(id).expect("status") {
+            ServeFrame::Status(s) if s.rounds >= min => return,
+            ServeFrame::Status(_) => {}
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "session {id} never reached {min} rounds");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The crash-safe daemon: a `--journal`ed daemon stopped mid-run and
+/// restarted on the same journal re-admits its queued session and
+/// resumes its running one from the drain checkpoint — and the resumed
+/// session's terminal result (rounds, final gradient norm, the full
+/// billed-bit and measured-byte ledger) equals the undisturbed solo
+/// reference's bit for bit, with the resumed round records matching the
+/// reference's at every round index. A third daemon on the same journal
+/// still knows both terminal results and never reuses their ids.
+#[test]
+fn journal_restart_resumes_running_and_readmits_queued_sessions() {
+    const ROUNDS: usize = 12000;
+    let dir = std::env::temp_dir();
+    let journal = dir.join(format!("3pc-serve-journal-{}.bin", std::process::id()));
+    let ckpt = dir.join(format!("3pc-serve-journal-ckpt-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&ckpt);
+    let long_spec = format!(
+        "problem={};mech=ef21:top3;rounds={ROUNDS};gamma=0.001;seed=13;checkpoint={};\
+         checkpoint-every=500",
+        problem_spec(),
+        ckpt.display()
+    );
+    let solo_long = solo_reference(&long_spec);
+    let solo_queued = solo_reference(&spec_ef21());
+
+    // Daemon 1: the long session runs (on the whole fleet), the second
+    // stays queued; the stop drains mid-run, checkpointing the runner.
+    let daemon = start_daemon_opts(N, true, Some(journal.clone()));
+    let mut c = client(&daemon.addr);
+    let id1 = submit(&mut c, &long_spec);
+    let id2 = submit(&mut c, &spec_ef21());
+    wait_for_rounds(&mut c, id1, 10);
+    drop(c);
+    daemon.stop();
+    let cp = Checkpoint::load(&ckpt).expect("drain checkpoint written");
+    let resume_t = cp.t;
+    assert!(resume_t + 1 < ROUNDS, "the drain landed mid-run");
+
+    // Daemon 2, same journal, fresh address, externally-run workers so
+    // both attaches are registered before any round can step.
+    let daemon2 = start_daemon_opts(N, false, Some(journal.clone()));
+    let t1 = {
+        let addr = daemon2.addr.to_string();
+        thread::spawn(move || {
+            let mut c = client(&addr);
+            attach_collect(&mut c, id1)
+        })
+    };
+    let t2 = {
+        let addr = daemon2.addr.to_string();
+        thread::spawn(move || {
+            let mut c = client(&addr);
+            attach_collect(&mut c, id2)
+        })
+    };
+    // Let both attach requests reach the scheduler before the fleet
+    // arrives and rounds start stepping.
+    thread::sleep(Duration::from_millis(200));
+    let agents = spawn_agents(&daemon2.addr, N);
+    let (recs1, res1) = t1.join().expect("attach thread");
+    let (recs2, res2) = t2.join().expect("attach thread");
+
+    // The resumed session finished the horizon from the checkpoint:
+    // records pick up at resume_t + 1 and match the reference's rounds.
+    assert!(res1.error.is_none(), "{:?}", res1.error);
+    assert_eq!(res1.rounds_run, ROUNDS as u64, "the round clock is cumulative");
+    assert_eq!(recs1.first().map(|r| r.t), Some(resume_t + 1), "resumed, not rerun");
+    assert_eq!(recs1.len(), ROUNDS - (resume_t + 1));
+    for r in &recs1 {
+        let want = &solo_long.records[r.t];
+        assert_eq!(want.t, r.t, "reference records every round");
+        assert_eq!(r.grad_norm_sq.to_bits(), want.grad_norm_sq.to_bits(), "round {}", r.t);
+        assert_eq!(r.g_err.to_bits(), want.g_err.to_bits(), "round {}", r.t);
+        assert_eq!(r.bits_up_cum, want.bits_up_cum, "round {}", r.t);
+        assert_eq!(r.bits_down_cum, want.bits_down_cum, "round {}", r.t);
+    }
+    assert_eq!(res1.final_grad_norm_sq.to_bits(), solo_long.final_grad_norm_sq.to_bits());
+    assert_eq!(res1.total_bits_up, solo_long.total_bits_up, "billed uplink continues");
+    assert_eq!(res1.total_bits_down, solo_long.total_bits_down, "billed downlink continues");
+    assert_eq!(res1.wire_bytes_up, solo_long.wire_bytes_up, "recovery traffic is unmeasured");
+    assert_eq!(res1.wire_bytes_down, solo_long.wire_bytes_down);
+
+    // The re-admitted queued session ran fresh and in full.
+    assert_daemon_matches_solo(&solo_queued, &recs2, &res2, "re-admitted queued session");
+    daemon2.stop();
+    for a in agents {
+        a.join().expect("agent thread").expect("agent exits cleanly");
+    }
+
+    // Daemon 3, same journal: both results survive, ids are not reused.
+    let daemon3 = start_daemon_opts(N, false, Some(journal.clone()));
+    let mut c3 = client(&daemon3.addr);
+    for (id, rounds) in [(id1, ROUNDS as u64), (id2, 40u64)] {
+        match c3.status(id).expect("status") {
+            ServeFrame::Status(s) => {
+                assert_eq!(s.phase, SessionPhase::Done, "session {id}");
+                assert_eq!(s.rounds, rounds, "session {id}");
+            }
+            other => panic!("unexpected status reply: {other:?}"),
+        }
+    }
+    let id3 = submit(&mut c3, &spec_ef21());
+    assert!(id3 > id2, "terminal ids are never reused after a replay");
+    drop(c3);
+    daemon3.stop();
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&ckpt);
 }

@@ -476,44 +476,87 @@ fn missing_workers_surface_as_connect_error() {
     assert!(r.records.is_empty());
 }
 
+/// A socket session resumed from a checkpoint reproduces the
+/// uninterrupted reference trace bit-for-bit: the restarted leader
+/// re-binds, installs the fresh agents through resync frames (no
+/// connect-time hello), and continues the round clock and the bit/byte
+/// ledger from the checkpoint — so the cumulative totals equal the
+/// undisturbed run's, with the recovery traffic neither billed nor
+/// measured.
+#[cfg(unix)]
 #[test]
-fn resume_from_builder_cannot_cross_the_wire_either() {
-    // `resume_from` overrides cfg.init inside the session; the socket
-    // transport must see the *effective* policy and reject it, not the
-    // stale cfg.init (regression: a resumed socket session would
-    // otherwise silently desynchronise leader mirrors and agents).
-    use threepc::coordinator::Checkpoint;
+fn socket_resume_reproduces_the_reference_trace_and_ledger() {
+    use threepc::coordinator::{Checkpoint, CheckpointObserver};
     let s = suite();
-    let cp = Checkpoint {
-        t: 2,
-        grad_norm_sq: 1.0,
-        x: s.problem.x0.clone(),
-        g_sum: vec![0.0; D],
-        worker_g: (0..N).map(|i| (i, vec![0.0f32; D])).collect(),
-    };
-    let sock = Socket::bind("tcp://127.0.0.1:0", &problem_spec()).unwrap();
-    let r = TrainSession::resume(&s.problem, &cp)
+    let reference = run_socket(&s, "ef21:top3", &cfg(12), &uds_addr());
+    assert!(reference.transport_error.is_none(), "{:?}", reference.transport_error);
+
+    // The "killed" leader: 8 rounds, checkpointing at t = 7.
+    let path =
+        std::env::temp_dir().join(format!("3pc-wire-resume-{}.ckpt", std::process::id()));
+    let sock = bind_socket(&uds_addr());
+    let listen = sock.local_addr().expect("bound address");
+    let joins = spawn_agents(&listen, N);
+    let killed = TrainSession::builder(&s.problem)
+        .mechanism_spec("ef21:top3")
         .unwrap()
-        .mechanism_spec("gd")
-        .unwrap()
-        .config(cfg(5))
+        .config(cfg(8))
+        .observer(CheckpointObserver::new(7, path.clone()))
         .transport(sock)
         .run();
-    match &r.transport_error {
-        Some(TransportError::Protocol(m)) => assert!(m.contains("FromState"), "{m}"),
-        other => panic!("expected a protocol error, got {other:?}"),
+    join_agents(joins);
+    assert!(killed.transport_error.is_none(), "{:?}", killed.transport_error);
+    let cp = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(cp.t, 7, "last committed round");
+
+    // The restarted leader finishes the horizon with a fresh fleet.
+    let sock = bind_socket(&uds_addr());
+    let listen = sock.local_addr().expect("bound address");
+    let joins = spawn_agents(&listen, N);
+    let resumed = TrainSession::resume(&s.problem, &cp)
+        .unwrap()
+        .mechanism_spec("ef21:top3")
+        .unwrap()
+        .config(cfg(12))
+        .transport(sock)
+        .run();
+    join_agents(joins);
+    assert!(resumed.transport_error.is_none(), "{:?}", resumed.transport_error);
+
+    assert_eq!(resumed.rounds_run, reference.rounds_run, "the round clock is cumulative");
+    let tail: Vec<_> = reference.records.iter().filter(|r| r.t >= 8).collect();
+    assert_eq!(resumed.records.len(), tail.len());
+    for (rr, tr) in resumed.records.iter().zip(&tail) {
+        assert_eq!(rr.t, tr.t);
+        assert_eq!(rr.grad_norm_sq, tr.grad_norm_sq, "round {}", rr.t);
+        assert_eq!(rr.g_err, tr.g_err, "round {}", rr.t);
+        assert_eq!(rr.bits_up_cum, tr.bits_up_cum, "round {}", rr.t);
+        assert_eq!(rr.bits_down_cum, tr.bits_down_cum, "round {}", rr.t);
     }
+    assert_eq!(resumed.final_x, reference.final_x);
+    assert_eq!(resumed.total_bits_up, reference.total_bits_up);
+    assert_eq!(resumed.total_bits_down, reference.total_bits_down);
+    assert_eq!(resumed.wire_bytes_up, reference.wire_bytes_up);
+    assert_eq!(resumed.wire_bytes_down, reference.wire_bytes_down);
 }
 
+/// Resume state whose shape does not match the session is rejected at
+/// connect time, before any agent traffic — a mismatched checkpoint
+/// must never silently desynchronise leader mirrors and agents.
 #[test]
-fn checkpoint_resume_cannot_cross_the_wire() {
+fn socket_resume_rejects_a_mismatched_state() {
     let s = suite();
     let rs = ResumeState {
         t: 3,
         grad_norm_sq: 1.0,
         x: s.problem.x0.clone(),
         g_sum: vec![0.0; D],
-        worker_g: (0..N).map(|_| vec![0.0f32; D]).collect(),
+        worker_g: (0..N + 1).map(|_| vec![0.0f32; D]).collect(),
+        worker_bits: vec![0; N + 1],
+        bits_down: 0,
+        wire_bytes_up: 0,
+        wire_bytes_down: 0,
     };
     let mut c = cfg(5);
     c.init = InitPolicy::FromState(std::sync::Arc::new(rs));
@@ -525,7 +568,7 @@ fn checkpoint_resume_cannot_cross_the_wire() {
         .transport(sock)
         .run();
     match &r.transport_error {
-        Some(TransportError::Protocol(m)) => assert!(m.contains("FromState"), "{m}"),
+        Some(TransportError::Protocol(m)) => assert!(m.contains("resume"), "{m}"),
         other => panic!("expected a protocol error, got {other:?}"),
     }
 }

@@ -385,12 +385,74 @@ fn checkpoint_files_survive_truncation_and_bit_flips() {
         x: vec![1.0, -2.0, 3.5],
         g_sum: vec![-1.0, 0.5, 3.0],
         worker_g: vec![(0, vec![0.0, 0.5, 1.0]), (1, vec![-1.0, 0.0, 2.0])],
+        worker_bits: vec![(0, 4096), (1, 8192)],
+        bits_down: 1920,
+        wire_bytes_up: 333,
+        wire_bytes_down: 444,
     };
     let bytes = cp.to_bytes();
     assert!(Checkpoint::from_bytes(&bytes).is_ok());
     fuzz_decoder(&bytes, &|b| {
         let _ = Checkpoint::from_bytes(b);
     });
+}
+
+/// The re-attach worker hello (flags byte + previous worker id) must
+/// survive the battery through the same decoder the fresh 7-byte hello
+/// uses — a flipped flag bit must never panic the accept path.
+#[test]
+fn reattach_worker_hellos_survive_truncation_and_bit_flips() {
+    use threepc::coordinator::protocol::encode_worker_hello_reattach;
+    for prev in [0u32, 3, u32::MAX] {
+        let buf = encode_worker_hello_reattach(prev);
+        assert_eq!(decode_worker_hello(&buf).unwrap().reattach, Some(prev));
+        fuzz_decoder(&buf, &|b| {
+            let _ = decode_worker_hello(b);
+        });
+    }
+}
+
+/// Every journal-record family (admission, phase transition, checkpoint
+/// pointer, terminal result) must survive the battery — a daemon replays
+/// these bytes from disk at startup, where a torn or corrupted tail must
+/// surface as `Err`, never a panic or an unbounded allocation.
+#[test]
+fn journal_records_survive_truncation_and_bit_flips() {
+    use threepc::coordinator::protocol::{
+        decode_journal_record, encode_journal_record, JournalRecord,
+    };
+    let records = [
+        JournalRecord::Admit {
+            id: 7,
+            spec: "problem=quad:4:30:0.01:0.5:21;mech=ef21:top3;rounds=40".into(),
+        },
+        JournalRecord::Phase { id: 7, phase: SessionPhase::Running, detail: String::new() },
+        JournalRecord::Phase {
+            id: 7,
+            phase: SessionPhase::Failed,
+            detail: "worker 2: connection reset".into(),
+        },
+        JournalRecord::Ckpt { id: 7, t: 125, path: "/tmp/sessions/7.ckpt".into() },
+        JournalRecord::Result(SessionResult {
+            id: 7,
+            rounds_run: 400,
+            converged: false,
+            diverged: false,
+            final_grad_norm_sq: 1e-7,
+            total_bits_up: 987_654,
+            total_bits_down: 321_000,
+            wire_bytes_up: 55_555,
+            wire_bytes_down: 44_444,
+            error: None,
+        }),
+    ];
+    for r in &records {
+        let buf = encode_journal_record(r).unwrap();
+        assert_eq!(&decode_journal_record(&buf).unwrap(), r);
+        fuzz_decoder(&buf, &|b| {
+            let _ = decode_journal_record(b);
+        });
+    }
 }
 
 #[test]

@@ -1,0 +1,140 @@
+#!/usr/bin/env bash
+# Crash-safe-leader gate, through the real binary over UDS: a leader is
+# SIGKILLed mid-session and restarted — once as a solo `train` resuming
+# with --resume-from, once as a `serve --journal` daemon replaying its
+# session journal — while its four external `--reattach` workers
+# survive the crash and re-dial on their own. Each resumed run's final
+# `result-bits:` line must equal an uninterrupted reference run exactly
+# (rounds, final gradient norm, billed bits, measured wire bytes): the
+# crash, the recovery traffic and the resync must be invisible in the
+# trace and in the ledger.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+cargo build --release
+BIN=target/release/threepc
+
+TMP="$(mktemp -d)"
+PIDS=()
+cleanup() {
+    for p in ${PIDS[@]+"${PIDS[@]}"}; do kill -9 "$p" 2>/dev/null || true; done
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+# 400 rounds with a 5 ms worker-side reply delay keeps the session
+# alive for ~2 s, and --checkpoint-every 25 puts the first durable
+# checkpoint on disk well before the horizon, so the kill reliably
+# lands mid-run. The delay shifts timing only — the trace bits are
+# delay-independent.
+TRAIN_COMMON=(--problem quad --workers 4 --d 30 --lambda 0.01 --noise-scale 0.5
+              --seed 21 --gamma 0.02 --rounds 400 --mech ef21:top3)
+result_bits() { grep '^result-bits:' "$1" | tail -n1; }
+
+spawn_workers() { # $1 = addr, $2 = log prefix
+    for i in 1 2 3 4; do
+        "$BIN" worker --connect "$1" --reattach=true --reply-delay-ms 5 \
+            --retries 100000 --retry-backoff-ms 20 --retry-backoff-max-ms 200 \
+            --io-timeout-ms 60000 > "$TMP/$2-$i.log" 2>&1 &
+        PIDS+=("$!")
+    done
+}
+
+wait_ckpt() { # $1 = checkpoint path, $2 = pid that must stay alive
+    for _ in $(seq 1 600); do
+        [ -s "$1" ] && return 0
+        kill -0 "$2" 2>/dev/null || {
+            echo "FAIL: leader exited before writing a checkpoint"
+            return 1
+        }
+        sleep 0.05
+    done
+    echo "FAIL: checkpoint $1 never appeared"
+    return 1
+}
+
+echo "=== uninterrupted reference run ==="
+"$BIN" train "${TRAIN_COMMON[@]}" --spawn-workers \
+    --transport "uds://$TMP/ref.sock" > "$TMP/ref.txt"
+REF="$(result_bits "$TMP/ref.txt")"
+echo "ref: $REF"
+[ -n "$REF" ]
+
+echo "=== solo path: SIGKILL the leader, restart with --resume-from ==="
+ADDR="uds://$TMP/solo.sock"
+CKPT="$TMP/solo.ckpt"
+"$BIN" train "${TRAIN_COMMON[@]}" --transport "$ADDR" \
+    --checkpoint "$CKPT" --checkpoint-every 25 > "$TMP/solo-doomed.txt" 2>&1 &
+LEADER=$!
+PIDS+=("$LEADER")
+spawn_workers "$ADDR" solo-worker
+wait_ckpt "$CKPT" "$LEADER"
+kill -0 "$LEADER" 2>/dev/null || {
+    echo "FAIL: session finished before the kill landed (raise --rounds)"
+    cat "$TMP/solo-doomed.txt"
+    exit 1
+}
+kill -9 "$LEADER"
+wait "$LEADER" 2>/dev/null || true
+echo "SIGKILLed solo leader pid $LEADER mid-session"
+
+"$BIN" train "${TRAIN_COMMON[@]}" --transport "$ADDR" \
+    --resume-from "$CKPT" --checkpoint "$CKPT" --checkpoint-every 25 \
+    > "$TMP/solo-resumed.txt"
+grep -q 'resuming from' "$TMP/solo-resumed.txt" || {
+    echo "FAIL: resume banner missing"
+    cat "$TMP/solo-resumed.txt"
+    exit 1
+}
+GOT="$(result_bits "$TMP/solo-resumed.txt")"
+echo "got: $GOT"
+[ "$GOT" = "$REF" ] || {
+    echo "FAIL: resumed solo leader diverged from the uninterrupted reference"
+    cat "$TMP/solo-resumed.txt" "$TMP"/solo-worker-*.log
+    exit 1
+}
+
+echo "=== daemon path: SIGKILL a --journal daemon, restart, journal replay resumes ==="
+DADDR="uds://$TMP/daemon.sock"
+JOURNAL="$TMP/sessions.journal"
+DCKPT="$TMP/daemon.ckpt"
+wait_daemon() { # $1 = addr — a structured reject proves the control plane is up
+    for _ in $(seq 1 300); do
+        if "$BIN" status --connect "$1" --id 999999 2>&1 | grep -q rejected; then
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "FAIL: daemon at $1 never came up"
+    return 1
+}
+
+"$BIN" serve --listen "$DADDR" --fleet 4 --journal "$JOURNAL" \
+    > "$TMP/daemon1.txt" 2>&1 &
+DAEMON=$!
+PIDS+=("$DAEMON")
+wait_daemon "$DADDR"
+spawn_workers "$DADDR" daemon-worker
+SPEC="problem=quad:4:30:0.01:0.5:21;mech=ef21:top3;rounds=400;gamma=0.02;seed=21"
+SPEC="$SPEC;checkpoint=$DCKPT;checkpoint-every=25"
+"$BIN" submit --connect "$DADDR" --spec "$SPEC" > "$TMP/submit.txt"
+wait_ckpt "$DCKPT" "$DAEMON"
+kill -9 "$DAEMON"
+wait "$DAEMON" 2>/dev/null || true
+echo "SIGKILLed daemon pid $DAEMON mid-session"
+
+"$BIN" serve --listen "$DADDR" --fleet 4 --journal "$JOURNAL" \
+    > "$TMP/daemon2.txt" 2>&1 &
+DAEMON=$!
+PIDS+=("$DAEMON")
+wait_daemon "$DADDR"
+"$BIN" attach --connect "$DADDR" --id 1 > "$TMP/attach.txt"
+GOT="$(result_bits "$TMP/attach.txt")"
+echo "got: $GOT"
+[ "$GOT" = "$REF" ] || {
+    echo "FAIL: journal-resumed daemon session diverged from the reference"
+    cat "$TMP/daemon1.txt" "$TMP/daemon2.txt" "$TMP/attach.txt" "$TMP"/daemon-worker-*.log
+    exit 1
+}
+
+echo "leader kill-and-restart OK (solo --resume-from and daemon --journal)"
