@@ -1,0 +1,280 @@
+//! Comment/string-stripping lexer for the lint pass.
+//!
+//! The rules in [`super::rules`] are token-pattern checks; running them
+//! over raw source would trip on forbidden tokens that only appear in
+//! doc comments and error-message strings. This lexer blanks comments,
+//! string literals (plain, byte, raw) and char literals to spaces while
+//! preserving every newline, so the surviving text is *code only* and
+//! every byte keeps its original line number. Comment text is kept
+//! separately, per line, because the waiver grammar
+//! (`// lint:allow(<rule>): <reason>`) lives in comments.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A source file after lexing: code with comments/strings blanked, plus
+/// the comment text collected per (1-based) line.
+pub struct Stripped {
+    /// Source text with comments, string literals and char literals
+    /// replaced by spaces. Newlines (including those inside block
+    /// comments and multi-line strings) are preserved, so line `n` of
+    /// `code` is line `n` of the original file.
+    pub code: String,
+    /// Comment text (`//…` and `/*…*/` contents, markers included)
+    /// accumulated per line.
+    pub comments: BTreeMap<usize, String>,
+}
+
+/// Lex `text` into [`Stripped`]. The scan distinguishes line comments,
+/// nested block comments, plain/byte strings with escapes, raw strings
+/// (`r"…"`, `r#"…"#`, any number of hashes) and char literals; a lone
+/// `'` (a lifetime) is left in the code stream.
+pub fn strip(text: &str) -> Stripped {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut code: Vec<u8> = Vec::with_capacity(n);
+    let mut comments: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { 0 };
+        // Line comment: blank to end of line, collect the text.
+        if c == b'/' && nxt == b'/' {
+            while i < n && b[i] != b'\n' {
+                comments.entry(line).or_default().push(b[i]);
+                code.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == b'/' && nxt == b'*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    comments.entry(line).or_default().extend_from_slice(b"/*");
+                    code.push(b' ');
+                    code.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    comments.entry(line).or_default().extend_from_slice(b"*/");
+                    code.push(b' ');
+                    code.push(b' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                    continue;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                    code.push(b'\n');
+                } else {
+                    comments.entry(line).or_default().push(b[i]);
+                    code.push(b' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Raw string: r"…" or r#"…"# (any hash count).
+        if c == b'r' && (nxt == b'"' || nxt == b'#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                code.push(b'r');
+                for _ in 0..hashes {
+                    code.push(b'#');
+                }
+                code.push(b'"');
+                j += 1;
+                while j < n {
+                    if b[j] == b'\n' {
+                        line += 1;
+                        code.push(b'\n');
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == b'"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == b'#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            code.push(b'"');
+                            for _ in 0..hashes {
+                                code.push(b'#');
+                            }
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    code.push(b' ');
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // `r` not followed by a raw string — fall through as code.
+        }
+        // Plain or byte string with escape handling.
+        if c == b'"' || (c == b'b' && nxt == b'"') {
+            if c == b'b' {
+                code.push(b'b');
+                i += 1;
+            }
+            code.push(b'"');
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    code.push(b' ');
+                    if j + 1 < n {
+                        if b[j + 1] == b'\n' {
+                            line += 1;
+                            code.push(b'\n');
+                        } else {
+                            code.push(b' ');
+                        }
+                    }
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    code.push(b'"');
+                    j += 1;
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                    code.push(b'\n');
+                } else {
+                    code.push(b' ');
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: a char literal is `'` followed by
+        // an escape, or by one byte and a closing `'`. Anything else
+        // (e.g. `'a` in `&'a str`) stays in the code stream.
+        if c == b'\'' || (c == b'b' && nxt == b'\'') {
+            let k = i + if c == b'b' { 2 } else { 1 };
+            let is_char = (k < n && b[k] == b'\\') || (k + 1 < n && b[k + 1] == b'\'');
+            if is_char {
+                if c == b'b' {
+                    code.push(b'b');
+                    i += 1;
+                }
+                code.push(b'\'');
+                let mut j = i + 1;
+                while j < n {
+                    if b[j] == b'\\' {
+                        code.push(b' ');
+                        if j + 1 < n {
+                            code.push(b' ');
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == b'\'' {
+                        code.push(b'\'');
+                        j += 1;
+                        break;
+                    }
+                    code.push(b' ');
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        if c == b'\n' {
+            line += 1;
+        }
+        code.push(c);
+        i += 1;
+    }
+    Stripped {
+        code: String::from_utf8_lossy(&code).into_owned(),
+        comments: comments
+            .into_iter()
+            .map(|(l, v)| (l, String::from_utf8_lossy(&v).into_owned()))
+            .collect(),
+    }
+}
+
+/// The (1-based) line numbers covered by `#[cfg(test)] mod … { … }`
+/// blocks in stripped code. The rules skip these lines: tests are free
+/// to unwrap, iterate HashMaps and build struct literals.
+pub fn test_lines(code: &str) -> BTreeSet<usize> {
+    let mut skip = BTreeSet::new();
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(at) = find_bytes(bytes, b"#[cfg(test)]", from) {
+        let start_line = newlines_before(bytes, at) + 1;
+        let Some(mod_at) = find_bytes(bytes, b"mod", at) else {
+            from = at + 1;
+            continue;
+        };
+        let Some(brace) = find_bytes(bytes, b"{", mod_at) else {
+            from = at + 1;
+            continue;
+        };
+        let mut depth: i64 = 0;
+        let mut j = brace;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end_line = newlines_before(bytes, j.min(bytes.len())) + 1;
+        for ln in start_line..=end_line {
+            skip.insert(ln);
+        }
+        from = if j < bytes.len() { j + 1 } else { bytes.len() };
+        if from >= bytes.len() {
+            break;
+        }
+    }
+    skip
+}
+
+/// Byte-wise substring search (avoids `str` slicing so non-ASCII code
+/// can never panic the scanner).
+pub fn find_bytes(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    let mut i = from;
+    while i + needle.len() <= hay.len() {
+        if &hay[i..i + needle.len()] == needle {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn newlines_before(bytes: &[u8], at: usize) -> usize {
+    bytes[..at].iter().filter(|&&c| c == b'\n').count()
+}

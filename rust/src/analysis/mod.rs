@@ -1,0 +1,163 @@
+//! `threepc lint` — project-specific static analysis.
+//!
+//! The repo's core verification asset is bit-for-bit trace equality
+//! across every execution mode (InProcess ≡ Framed ≡ Socket ≡ daemon ≡
+//! crash-and-resume). The invariants that make that hold — fixed-chunk
+//! f64 folds, deterministic iteration orders, no panics reachable from
+//! wire bytes, checked decode bounds — are enforced at runtime by the
+//! equivalence suites, but only on the paths those suites exercise.
+//! This module checks them *statically*, on every file, at check time:
+//!
+//! * **R1 `determinism`** — no `HashMap`/`HashSet` and no
+//!   `Instant::now`/`SystemTime` in trace-affecting modules.
+//! * **R2 `float-fold`** — no raw f32/f64 reductions (`.sum()`,
+//!   `.fold(`, scalar `+=` loops) outside `kernels/`.
+//! * **R3 `wire-panic` / `wire-cast`** — no `unwrap`/`expect`/`panic!`/
+//!   `assert!` and no unchecked length casts in the wire-reachable set.
+//! * **R4 `wire-registry`** — frame-tag constants unique, every
+//!   `encode_*` paired with a decoder, every frame family exercised by
+//!   the `wire_fuzz` corpus.
+//! * **R5 `struct-lit`** — `RoundRecord`/`TrainResult`/`Checkpoint`
+//!   literals outside their home modules.
+//!
+//! Sites the rules flag but a human judges sound carry an inline
+//! `// lint:allow(<rule>): <reason>` waiver — the reason is mandatory
+//! and a malformed waiver is itself a diagnostic. See `LINTS.md`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One lint finding, rustc-style: `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { file: file.to_string(), line, rule, message }
+    }
+
+    /// Render as `file:line: [rule] message`.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The outcome of a lint run.
+pub struct LintReport {
+    /// Findings, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of source files scanned.
+    pub files: usize,
+    /// Number of (well-formed) waivers parsed.
+    pub waivers: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Machine-readable report (`threepc lint --json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"diagnostics\":[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"file\":\"");
+            json_escape(&d.file, &mut out);
+            let _ = write!(out, "\",\"line\":{},\"rule\":\"", d.line);
+            json_escape(d.rule, &mut out);
+            out.push_str("\",\"message\":\"");
+            json_escape(&d.message, &mut out);
+            out.push_str("\"}");
+        }
+        let _ = write!(out, "],\"files\":{},\"waivers\":{}}}", self.files, self.waivers);
+        out
+    }
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Lint a set of in-memory sources. `files` is `(path, text)` where
+/// `path` is repo-relative with forward slashes (the rule file sets
+/// classify by path suffix/segment, e.g.
+/// `rust/src/coordinator/protocol.rs`). `fuzz` is the stripped source
+/// of the wire_fuzz corpus for R4's coverage check (`None` skips it).
+///
+/// This is the entry point the fixture tests drive directly.
+pub fn lint_sources(files: &[(String, String)], fuzz: Option<&str>) -> LintReport {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut waivers = 0usize;
+    let mut reg = rules::Registry::default();
+    for (path, text) in files {
+        let stripped = lexer::strip(text);
+        let skip: BTreeSet<usize> = lexer::test_lines(&stripped.code);
+        let waived = rules::parse_waivers(path, &stripped, &mut diags, &mut waivers);
+        rules::check_file(path, &stripped, &skip, &waived, &mut diags);
+        rules::collect_registry(path, &stripped, &skip, &waived, &mut reg);
+    }
+    reg.check(fuzz, &mut diags);
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    LintReport { diagnostics: diags, files: files.len(), waivers }
+}
+
+/// Lint the tree rooted at `root` (the repo checkout): every `.rs` file
+/// under `rust/src`, with `rust/tests/wire_fuzz.rs` as the R4 corpus.
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    let src = root.join("rust").join("src");
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut files: Vec<(String, String)> = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        let rel = match p.strip_prefix(root) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => p.to_string_lossy().replace('\\', "/"),
+        };
+        files.push((rel, text));
+    }
+    let fuzz_path = root.join("rust").join("tests").join("wire_fuzz.rs");
+    let fuzz = std::fs::read_to_string(&fuzz_path).ok().map(|t| lexer::strip(&t).code);
+    Ok(lint_sources(&files, fuzz.as_deref()))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,634 @@
+//! The lint rules (R1–R5) and the waiver grammar.
+//!
+//! Every rule is a token-pattern check over [`lexer::strip`]ped code —
+//! see `LINTS.md` for the invariant each rule protects and the exact
+//! file sets it applies to. Heuristics err on the side of firing: a
+//! site the rule cannot prove harmless takes either a fix or an
+//! explicit `// lint:allow(<rule>): <reason>` waiver, so the judgment
+//! call is recorded next to the code it covers.
+
+use super::lexer::{find_bytes, Stripped};
+use super::Diagnostic;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Every rule id the waiver grammar accepts.
+pub const RULE_NAMES: [&str; 6] =
+    ["determinism", "float-fold", "wire-panic", "wire-cast", "wire-registry", "struct-lit"];
+
+/// R1 file set: modules whose execution order or arithmetic feeds the
+/// bit-for-bit training trace.
+fn is_trace_file(path: &str) -> bool {
+    path.contains("/mechanisms/")
+        || path.contains("/compressors/")
+        || path.contains("/kernels/")
+        || path.ends_with("coordinator/server.rs")
+        || path.ends_with("coordinator/session.rs")
+        || path.ends_with("coordinator/protocol.rs")
+        || path.ends_with("coordinator/socket.rs")
+}
+
+/// R3/R4 file set: code that parses or frames bytes a remote peer
+/// controls (plus the in-process transport, whose link layer mirrors
+/// the same contract).
+fn is_wire_file(path: &str) -> bool {
+    path.ends_with("coordinator/protocol.rs")
+        || path.ends_with("coordinator/socket.rs")
+        || path.ends_with("coordinator/transport.rs")
+        || path.contains("/coordinator/service/")
+}
+
+/// R2 exemption: the kernel layer is the one legal home for raw float
+/// reductions (the fixed-chunk contract, PERF.md).
+fn is_kernels_file(path: &str) -> bool {
+    path.contains("/kernels/") || path.ends_with("/kernels.rs")
+}
+
+/// Word-boundary occurrences of `pat` in `line` (byte offsets). A hit
+/// requires the bytes on both sides to be non-identifier characters.
+fn word_hits(line: &[u8], pat: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(at) = find_bytes(line, pat, start) {
+        let before_ok = at == 0 || !is_ident_byte(line[at - 1]);
+        let end = at + pat.len();
+        let after_ok = end >= line.len() || !is_ident_byte(line[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + 1;
+    }
+    out
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn contains(line: &[u8], pat: &str) -> bool {
+    find_bytes(line, pat.as_bytes(), 0).is_some()
+}
+
+/// Parse waivers out of a file's comments. Returns the set of
+/// `(rule, line)` pairs suppressed; grammar errors (missing reason,
+/// unknown rule id) become diagnostics themselves, so a waiver can
+/// never silently fail to apply.
+pub fn parse_waivers(
+    path: &str,
+    stripped: &Stripped,
+    diags: &mut Vec<Diagnostic>,
+    count: &mut usize,
+) -> BTreeSet<(String, usize)> {
+    let code_lines: Vec<&str> = stripped.code.split('\n').collect();
+    let has_code =
+        |l: usize| l >= 1 && l <= code_lines.len() && !code_lines[l - 1].trim().is_empty();
+    let mut out = BTreeSet::new();
+    for (&ln, ctext) in &stripped.comments {
+        // A waiver is the whole comment, not prose mentioning the
+        // grammar: the marker must open a plain `//` comment (doc
+        // comments — `///`, `//!` — never carry waivers).
+        let body = ctext.trim_start();
+        let Some(body) = body.strip_prefix("//") else { continue };
+        if body.starts_with('/') || body.starts_with('!') {
+            continue;
+        }
+        let body = body.trim_start();
+        if !body.starts_with("lint:allow") {
+            continue;
+        }
+        let rest = &body["lint:allow".len()..];
+        if !rest.starts_with('(') {
+            diags.push(Diagnostic::new(
+                path,
+                ln,
+                "waiver",
+                "malformed waiver: expected lint:allow(<rule>): <reason>".into(),
+            ));
+            continue;
+        }
+        let Some(close) = rest.find(')') else {
+            diags.push(Diagnostic::new(
+                path,
+                ln,
+                "waiver",
+                "malformed waiver: unclosed rule list".into(),
+            ));
+            continue;
+        };
+        let rules_txt = &rest[1..close];
+        let tail = &rest[close + 1..];
+        if !tail.starts_with(':') || tail[1..].trim().is_empty() {
+            diags.push(Diagnostic::new(
+                path,
+                ln,
+                "waiver",
+                "waiver missing mandatory reason: lint:allow(<rule>): <reason>".into(),
+            ));
+            continue;
+        }
+        let mut names: Vec<String> = Vec::new();
+        let mut bad: Option<String> = None;
+        for r in rules_txt.split(',') {
+            let r = r.trim();
+            if RULE_NAMES.contains(&r) {
+                names.push(r.to_string());
+            } else {
+                bad = Some(r.to_string());
+                break;
+            }
+        }
+        if let Some(b) = bad {
+            diags.push(Diagnostic::new(
+                path,
+                ln,
+                "waiver",
+                format!("unknown lint rule '{b}' in waiver"),
+            ));
+            continue;
+        }
+        // A trailing waiver covers its own line; a comment-only line
+        // covers the next line that has code.
+        let mut target = ln;
+        if !has_code(ln) {
+            let mut t = ln + 1;
+            while t <= code_lines.len() && !has_code(t) {
+                t += 1; // lint:allow(float-fold): integer line cursor, not a float reduction
+            }
+            target = t;
+        }
+        *count += 1;
+        for nm in names {
+            out.insert((nm, target));
+        }
+    }
+    out
+}
+
+fn emit(
+    diags: &mut Vec<Diagnostic>,
+    waived: &BTreeSet<(String, usize)>,
+    path: &str,
+    ln: usize,
+    rule: &'static str,
+    msg: String,
+) {
+    if !waived.contains(&(rule.to_string(), ln)) {
+        diags.push(Diagnostic::new(path, ln, rule, msg));
+    }
+}
+
+/// `.fold(` whose first argument looks like a float accumulator
+/// (float literal or `f32::`/`f64::` constant).
+fn fold_arg_is_float(line: &[u8], at: usize) -> bool {
+    let open = at + ".fold(".len();
+    let end = (open + 48).min(line.len());
+    let seg = &line[open..end];
+    if contains(seg, "f32::") || contains(seg, "f64::") {
+        return true;
+    }
+    let head_end = find_bytes(seg, b",", 0).unwrap_or(seg.len());
+    let head = &seg[..head_end];
+    head.windows(3).any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+}
+
+/// Struct types R5 guards, with the home module whose constructors are
+/// allowed to build them literally.
+const GUARDED_STRUCTS: &[(&str, &str)] = &[
+    ("RoundRecord", "coordinator/metrics.rs"),
+    ("TrainResult", "coordinator/metrics.rs"),
+    ("Checkpoint", "coordinator/observer.rs"),
+];
+
+/// Run rules R1, R2, R3 and R5 over one stripped file.
+pub fn check_file(
+    path: &str,
+    stripped: &Stripped,
+    skip: &BTreeSet<usize>,
+    waived: &BTreeSet<(String, usize)>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let trace = is_trace_file(path);
+    let wire = is_wire_file(path);
+    let kernels = is_kernels_file(path);
+    let mut depth: i64 = 0;
+    let mut for_depths: Vec<i64> = Vec::new();
+    for (idx, line_str) in stripped.code.split('\n').enumerate() {
+        let ln = idx + 1;
+        let line = line_str.as_bytes();
+        let opens = line.iter().filter(|&&c| c == b'{').count() as i64;
+        let closes = line.iter().filter(|&&c| c == b'}').count() as i64;
+        if skip.contains(&ln) {
+            depth += opens - closes; // lint:allow(float-fold): integer brace depth, not a float reduction
+            continue;
+        }
+
+        // R1 — determinism: no unordered containers, no wall clock.
+        if trace {
+            for pat in ["HashMap", "HashSet"] {
+                for _ in word_hits(line, pat.as_bytes()) {
+                    emit(
+                        diags,
+                        waived,
+                        path,
+                        ln,
+                        "determinism",
+                        format!(
+                            "{pat} in a trace-affecting module (iteration order is \
+                             unspecified; use BTreeMap or an id-indexed Vec)"
+                        ),
+                    );
+                }
+            }
+            if contains(line, "Instant::now") {
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "determinism",
+                    "wall-clock read in a trace-affecting module".into(),
+                );
+            }
+            for _ in word_hits(line, b"SystemTime") {
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "determinism",
+                    "wall-clock type in a trace-affecting module".into(),
+                );
+            }
+        }
+
+        // R2 — float-fold: the fixed-chunk kernels are the only legal
+        // float reduction site.
+        if !kernels {
+            if contains(line, ".sum::<f32>") || contains(line, ".sum::<f64>") {
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "float-fold",
+                    "raw float iterator fold outside kernels (fixed-chunk contract)".into(),
+                );
+            }
+            if contains(line, ".sum()") {
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "float-fold",
+                    "untyped .sum() outside kernels (write .sum::<T>() for an integer, \
+                     or route floats through kernels)"
+                        .into(),
+                );
+            }
+            let mut start = 0usize;
+            while let Some(at) = find_bytes(line, b".fold(", start) {
+                if fold_arg_is_float(line, at) {
+                    emit(
+                        diags,
+                        waived,
+                        path,
+                        ln,
+                        "float-fold",
+                        "raw float .fold() outside kernels (fixed-chunk contract)".into(),
+                    );
+                }
+                start = at + 1;
+            }
+            if !for_depths.is_empty() {
+                let sl = line_str.trim();
+                if let Some(eq) = sl.find("+=") {
+                    let lhs = sl[..eq].trim();
+                    let lb = lhs.as_bytes();
+                    if !lb.is_empty()
+                        && lb.iter().all(|&c| is_ident_byte(c))
+                        && !lb[0].is_ascii_digit()
+                    {
+                        emit(
+                            diags,
+                            waived,
+                            path,
+                            ln,
+                            "float-fold",
+                            format!(
+                                "manual accumulation `{lhs} +=` in a loop outside kernels"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // R3 — wire-panic / wire-cast: nothing a peer's bytes reach may
+        // panic, and length narrowing must be checked.
+        if wire {
+            for (pat, msg) in [
+                (".unwrap()", "unwrap() in wire-reachable code"),
+                (".expect(", "expect() in wire-reachable code"),
+                ("panic!", "panic! in wire-reachable code"),
+                ("unreachable!", "unreachable! in wire-reachable code"),
+                ("todo!", "todo! in wire-reachable code"),
+                ("unimplemented!", "unimplemented! in wire-reachable code"),
+            ] {
+                if contains(line, pat) {
+                    emit(diags, waived, path, ln, "wire-panic", msg.into());
+                }
+            }
+            for pat in ["assert!", "assert_eq!", "assert_ne!"] {
+                for _ in word_hits(line, pat.as_bytes()) {
+                    emit(
+                        diags,
+                        waived,
+                        path,
+                        ln,
+                        "wire-panic",
+                        format!("{pat} in wire-reachable code (debug_assert is exempt)"),
+                    );
+                }
+            }
+            for pat in [".len() as u32", ".len() as u16", ".len() as u8"] {
+                if contains(line, pat) {
+                    emit(
+                        diags,
+                        waived,
+                        path,
+                        ln,
+                        "wire-cast",
+                        "unchecked length cast; use a checked wire-length helper".into(),
+                    );
+                }
+            }
+            if contains(line, " as usize")
+                && (contains(line, "read_u64") || contains(line, "u64::from_le_bytes"))
+            {
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "wire-cast",
+                    "u64 narrowed with `as usize`; use a checked conversion".into(),
+                );
+            }
+        }
+
+        // R5 — struct-literal guard: RoundRecord/TrainResult/Checkpoint
+        // literals outside their home module are the recurring "new
+        // field silently defaulted" migration hazard.
+        for &(name, home) in GUARDED_STRUCTS {
+            if path.ends_with(home) {
+                continue;
+            }
+            for at in word_hits(line, name.as_bytes()) {
+                let rest = line_str[at + name.len()..].trim_start();
+                if !rest.starts_with('{') {
+                    continue;
+                }
+                let before = line_str[..at].trim_end();
+                let skip_site = before.ends_with("->")
+                    || before.ends_with("struct")
+                    || before.ends_with("impl")
+                    || before.ends_with("fn")
+                    || before.ends_with("dyn")
+                    || before.ends_with("for")
+                    || before.ends_with('&');
+                if skip_site {
+                    continue;
+                }
+                emit(
+                    diags,
+                    waived,
+                    path,
+                    ln,
+                    "struct-lit",
+                    format!("{name} literal outside its home module ({home})"),
+                );
+            }
+        }
+
+        // A `for … {` line opens a loop body at depth+1; scalar `+=`
+        // checks above fire only while at least one such body is open.
+        if contains(line, "for ") && opens > 0 {
+            for_depths.push(depth + 1);
+        }
+        depth += opens - closes; // lint:allow(float-fold): integer brace depth, not a float reduction
+        while let Some(&d) = for_depths.last() {
+            if depth < d {
+                for_depths.pop();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R4 — wire-frame registry coherence.
+// ---------------------------------------------------------------------
+
+/// Encoders whose inverse does not follow the `encode_X`/`decode_X`
+/// naming convention.
+const DECODE_ALIASES: &[(&str, &str)] = &[
+    ("encode_round_start", "decode_downlink"),
+    ("encode_round_reply", "split_round_reply"),
+];
+
+/// Suffixes stripped before pairing (`encode_uplink_into` pairs with
+/// `decode_uplink` / `decode_uplink_into`).
+const ENCODE_SUFFIXES: &[&str] = &["_with", "_into", "_reattach"];
+
+/// Evidence tokens accepted (besides the constant's own name) when
+/// checking that a frame family is exercised by the wire_fuzz corpus.
+const FUZZ_EVIDENCE: &[(&str, &[&str])] = &[
+    ("DOWN_HELLO", &["encode_session_hello"]),
+    ("DOWN_ROUND", &["encode_round_start"]),
+    ("DOWN_SWITCH", &["encode_mech_switch"]),
+    ("DOWN_RESYNC", &["encode_resync"]),
+    ("UP_HELLO", &["encode_worker_hello"]),
+    ("UP_ROUND", &["encode_round_reply"]),
+    ("MECH_SWITCH_TAG", &["encode_mech_switch"]),
+    ("CLIENT_HELLO", &["ClientFrame::Hello"]),
+    ("CLIENT_SUBMIT", &["ClientFrame::Submit"]),
+    ("CLIENT_STATUS", &["ClientFrame::Status"]),
+    ("CLIENT_ATTACH", &["ClientFrame::Attach"]),
+    ("CLIENT_CANCEL", &["ClientFrame::Cancel"]),
+    ("SERVE_HELLO", &["ServeFrame::Hello"]),
+    ("SERVE_STATUS", &["ServeFrame::Status"]),
+    ("SERVE_RESULT", &["ServeFrame::Result"]),
+    ("SERVE_METRIC", &["ServeFrame::Metric"]),
+    ("SERVE_REJECT", &["ServeFrame::Reject"]),
+    ("JR_ADMIT", &["JournalRecord::Admit"]),
+    ("JR_PHASE", &["JournalRecord::Phase"]),
+    ("JR_CKPT", &["JournalRecord::Ckpt"]),
+    ("JR_RESULT", &["JournalRecord::Result"]),
+];
+
+/// Cross-file facts R4 accumulates while the per-file rules run.
+#[derive(Default)]
+pub struct Registry {
+    /// `u8` frame-tag constants in wire files: (name, value, file, line).
+    pub tags: Vec<(String, u32, String, usize)>,
+    /// Every function name defined in a wire file.
+    pub fns: BTreeSet<String>,
+    /// Public `encode_*` functions: (name, file, line).
+    pub encoders: Vec<(String, String, usize)>,
+    /// `(file, line)` pairs carrying a `wire-registry` waiver.
+    pub waived: BTreeSet<(String, usize)>,
+}
+
+/// Collect tag constants and codec function names from one wire file.
+pub fn collect_registry(
+    path: &str,
+    stripped: &Stripped,
+    skip: &BTreeSet<usize>,
+    waived: &BTreeSet<(String, usize)>,
+    reg: &mut Registry,
+) {
+    if !is_wire_file(path) {
+        return;
+    }
+    for (idx, line_str) in stripped.code.split('\n').enumerate() {
+        let ln = idx + 1;
+        if skip.contains(&ln) {
+            continue;
+        }
+        if waived.contains(&("wire-registry".to_string(), ln)) {
+            reg.waived.insert((path.to_string(), ln));
+        }
+        let line = line_str.as_bytes();
+        // `[pub] const NAME: u8 = 0xNN;`
+        for at in word_hits(line, b"const") {
+            let rest = &line_str[at + "const".len()..];
+            let Some(colon) = rest.find(':') else { continue };
+            let name = rest[..colon].trim();
+            if name.is_empty() || !name.bytes().all(is_ident_byte) {
+                continue;
+            }
+            let after = rest[colon + 1..].trim_start();
+            if !after.starts_with("u8") {
+                continue;
+            }
+            let Some(eq) = after.find('=') else { continue };
+            let val = after[eq + 1..].trim().trim_end_matches(';').trim();
+            let Some(hex) = val.strip_prefix("0x") else { continue };
+            if let Ok(v) = u32::from_str_radix(hex, 16) {
+                reg.tags.push((name.to_string(), v, path.to_string(), ln));
+            }
+        }
+        // Function names (for encode/decode pairing).
+        for at in word_hits(line, b"fn") {
+            let rest = &line_str[at + "fn".len()..];
+            let name: String =
+                rest.trim_start().chars().take_while(|&c| c.is_ascii_alphanumeric() || c == '_').collect();
+            if name.is_empty() {
+                continue;
+            }
+            reg.fns.insert(name.clone());
+            let head = line_str.trim_start();
+            let public = head.starts_with("pub fn ") || head.starts_with("pub(crate) fn ");
+            if public && name.starts_with("encode_") {
+                reg.encoders.push((name, path.to_string(), ln));
+            }
+        }
+    }
+}
+
+impl Registry {
+    /// Run the cross-file checks: unique tag constants, encode/decode
+    /// pairing, and wire_fuzz corpus coverage (when the corpus source
+    /// is available).
+    pub fn check(&self, fuzz: Option<&str>, diags: &mut Vec<Diagnostic>) {
+        let mut by_name: BTreeMap<&str, u32> = BTreeMap::new();
+        let mut by_value: BTreeMap<u32, &str> = BTreeMap::new();
+        for (name, value, file, line) in &self.tags {
+            let waived_here = self.waived.contains(&(file.clone(), *line));
+            let name = name.as_str();
+            if let Some(prev) = by_name.get(name) {
+                if !waived_here {
+                    diags.push(Diagnostic::new(
+                        file,
+                        *line,
+                        "wire-registry",
+                        format!("frame tag {name} defined more than once (first = {prev:#04x})"),
+                    ));
+                }
+                continue;
+            }
+            if let Some(prev_name) = by_value.get(value) {
+                if !waived_here {
+                    diags.push(Diagnostic::new(
+                        file,
+                        *line,
+                        "wire-registry",
+                        format!(
+                            "frame tag value {value:#04x} defined more than once \
+                             ({prev_name} and {name})"
+                        ),
+                    ));
+                }
+            }
+            by_name.insert(name, *value);
+            by_value.entry(*value).or_insert(name);
+        }
+        for (name, file, line) in &self.encoders {
+            if self.waived.contains(&(file.clone(), *line)) {
+                continue;
+            }
+            let target = match DECODE_ALIASES.iter().find(|e| e.0 == name.as_str()) {
+                Some(&(_, d)) => d.to_string(),
+                None => {
+                    let mut base = name.as_str();
+                    loop {
+                        let mut stripped_any = false;
+                        for suf in ENCODE_SUFFIXES {
+                            if let Some(b) = base.strip_suffix(suf) {
+                                base = b;
+                                stripped_any = true;
+                            }
+                        }
+                        if !stripped_any {
+                            break;
+                        }
+                    }
+                    let tail = base.strip_prefix("encode_").unwrap_or(base);
+                    format!("decode_{tail}")
+                }
+            };
+            if !self.fns.contains(&target) {
+                diags.push(Diagnostic::new(
+                    file,
+                    *line,
+                    "wire-registry",
+                    format!("{name} has no matching {target}"),
+                ));
+            }
+        }
+        if let Some(corpus) = fuzz {
+            let cb = corpus.as_bytes();
+            for (name, _value, file, line) in &self.tags {
+                if self.waived.contains(&(file.clone(), *line)) {
+                    continue;
+                }
+                let aliases: &[&str] = FUZZ_EVIDENCE
+                    .iter()
+                    .find(|e| e.0 == name.as_str())
+                    .map(|e| e.1)
+                    .unwrap_or(&[]);
+                let covered = find_bytes(cb, name.as_bytes(), 0).is_some()
+                    || aliases.iter().any(|a| find_bytes(cb, a.as_bytes(), 0).is_some());
+                if !covered {
+                    diags.push(Diagnostic::new(
+                        file,
+                        *line,
+                        "wire-registry",
+                        format!("frame tag {name} has no wire_fuzz corpus coverage"),
+                    ));
+                }
+            }
+        }
+    }
+}

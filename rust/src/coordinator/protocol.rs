@@ -22,6 +22,11 @@
 //!   tag 4 (Replace/FromPrev) body = nparts:u8  cvec*
 //! ```
 
+// Wire-reachable module: bytes a peer controls must never panic the
+// receiver. `threepc lint` enforces the contract textually (rule
+// `wire-panic`); the clippy denies make it a compile error too.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use super::metrics::RoundRecord;
 use crate::compressors::{read_f32, read_f64, read_u32, CVec, MechScratch, WireValueCoding};
 use crate::mechanisms::{update_bits, ReplaceWire, Update};
@@ -105,6 +110,7 @@ pub fn encode_uplink_into(
         Update::Replace { g, wire, .. } => match wire {
             ReplaceWire::Dense => {
                 out.push(2);
+                // lint:allow(wire-cast): g is the session iterate; dim is u32 by construction
                 out.extend_from_slice(&(g.len() as u32).to_le_bytes());
                 for v in g {
                     out.extend_from_slice(&v.to_le_bytes());
@@ -137,7 +143,9 @@ pub fn assemble_increment_uplink(worker_id: usize, g_err: f64, payload: &[u8], o
 }
 
 fn encode_parts(parts: &[CVec], coding: WireValueCoding, out: &mut Vec<u8>) {
+    // lint:allow(wire-panic): sender-side guard on our own decomposition, never peer bytes
     assert!(parts.len() <= u8::MAX as usize, "replace decomposition too wide");
+    // lint:allow(wire-cast): guarded by the width assert directly above
     out.push(parts.len() as u8);
     for p in parts {
         p.encode_with(coding, out);
@@ -415,15 +423,13 @@ pub const MECH_SWITCH_HEADER_BYTES: usize = 11;
 /// exceeds the wire's u16 length fields — propagated, not asserted, so
 /// an unencodable directive can never abort a running leader.
 pub fn encode_mech_switch(m: &MechSwitch) -> Result<Vec<u8>> {
-    ensure!(m.mech.len() <= u16::MAX as usize, "mech-switch: name too long for the wire");
-    ensure!(m.spec.len() <= u16::MAX as usize, "mech-switch: spec too long for the wire");
     let mut out =
         Vec::with_capacity(MECH_SWITCH_HEADER_BYTES + m.mech.len() + 2 + m.spec.len());
     out.push(MECH_SWITCH_TAG);
     out.extend_from_slice(&m.round.to_le_bytes());
-    out.extend_from_slice(&(m.mech.len() as u16).to_le_bytes());
+    out.extend_from_slice(&wire_len_u16(m.mech.len(), "mech-switch name")?.to_le_bytes());
     out.extend_from_slice(m.mech.as_bytes());
-    out.extend_from_slice(&(m.spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(&wire_len_u16(m.spec.len(), "mech-switch spec")?.to_le_bytes());
     out.extend_from_slice(m.spec.as_bytes());
     Ok(out)
 }
@@ -433,15 +439,14 @@ pub fn encode_mech_switch(m: &MechSwitch) -> Result<Vec<u8>> {
 pub fn decode_mech_switch(buf: &[u8]) -> Result<MechSwitch> {
     ensure!(buf.len() >= MECH_SWITCH_HEADER_BYTES, "mech-switch: truncated header");
     ensure!(buf[0] == MECH_SWITCH_TAG, "mech-switch: bad tag {:#04x}", buf[0]);
-    let round = u64::from_le_bytes(buf[1..9].try_into().expect("8-byte slice"));
-    let name_len = u16::from_le_bytes(buf[9..11].try_into().expect("2-byte slice")) as usize;
+    let round = u64::from_le_bytes(take(buf, 1, "mech-switch round")?);
+    let name_len = u16::from_le_bytes(take(buf, 9, "mech-switch name length")?) as usize;
     let spec_at = MECH_SWITCH_HEADER_BYTES + name_len;
     ensure!(buf.len() >= spec_at + 2, "mech-switch: truncated name/spec length");
     let mech = std::str::from_utf8(&buf[MECH_SWITCH_HEADER_BYTES..spec_at])
         .map_err(|e| anyhow::anyhow!("mech-switch: non-utf8 name: {e}"))?
         .to_string();
-    let spec_len =
-        u16::from_le_bytes(buf[spec_at..spec_at + 2].try_into().expect("2-byte slice")) as usize;
+    let spec_len = u16::from_le_bytes(take(buf, spec_at, "mech-switch spec length")?) as usize;
     ensure!(
         buf.len() == spec_at + 2 + spec_len,
         "mech-switch: frame length mismatch ({} vs {})",
@@ -553,11 +558,6 @@ pub struct SessionHello {
 
 /// Serialize a session hello (full body, kind tag included).
 pub fn encode_session_hello(h: &SessionHello) -> Result<Vec<u8>> {
-    ensure!(h.mech_spec.len() <= u16::MAX as usize, "hello: mech spec too long for the wire");
-    ensure!(
-        h.problem_spec.len() <= u16::MAX as usize,
-        "hello: problem spec too long for the wire"
-    );
     let mut out = Vec::with_capacity(29 + h.mech_spec.len() + 2 + h.problem_spec.len());
     out.push(DOWN_HELLO);
     out.extend_from_slice(DOWN_MAGIC);
@@ -571,16 +571,39 @@ pub fn encode_session_hello(h: &SessionHello) -> Result<Vec<u8>> {
         WireValueCoding::RawF32 => 0,
         WireValueCoding::Natural => 1,
     });
-    out.extend_from_slice(&(h.mech_spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(&wire_len_u16(h.mech_spec.len(), "hello mech spec")?.to_le_bytes());
     out.extend_from_slice(h.mech_spec.as_bytes());
-    out.extend_from_slice(&(h.problem_spec.len() as u16).to_le_bytes());
+    out.extend_from_slice(
+        &wire_len_u16(h.problem_spec.len(), "hello problem spec")?.to_le_bytes(),
+    );
     out.extend_from_slice(h.problem_spec.as_bytes());
     Ok(out)
 }
 
+/// Copy `N` bytes out of `buf` at `at` into a fixed array, or err with
+/// a truncation message naming `what`. The checked form of the
+/// `buf[a..b].try_into().expect(…)` idiom — a hostile or truncated
+/// frame propagates an error instead of panicking the receiver.
+pub(crate) fn take<const N: usize>(buf: &[u8], at: usize, what: &str) -> Result<[u8; N]> {
+    let end = at
+        .checked_add(N)
+        .ok_or_else(|| anyhow::anyhow!("codec: {what} offset overflow"))?;
+    let slice =
+        buf.get(at..end).ok_or_else(|| anyhow::anyhow!("codec: truncated {what}"))?;
+    let mut arr = [0u8; N];
+    arr.copy_from_slice(slice);
+    Ok(arr)
+}
+
+/// Checked narrowing for u16 wire length fields: errs (propagated, not
+/// asserted) when a value cannot be represented on the wire.
+fn wire_len_u16(len: usize, what: &str) -> Result<u16> {
+    u16::try_from(len)
+        .map_err(|_| anyhow::anyhow!("{what} too long for the wire ({len} bytes)"))
+}
+
 fn read_u16(buf: &[u8], pos: &mut usize) -> Result<u16> {
-    ensure!(*pos + 2 <= buf.len(), "codec: truncated u16");
-    let v = u16::from_le_bytes(buf[*pos..*pos + 2].try_into().expect("2-byte slice"));
+    let v = u16::from_le_bytes(take(buf, *pos, "u16")?);
     *pos += 2;
     Ok(v)
 }
@@ -610,8 +633,7 @@ pub fn decode_session_hello(buf: &[u8]) -> Result<SessionHello> {
     let worker_id = read_u32(buf, &mut pos)?;
     let n_workers = read_u32(buf, &mut pos)?;
     let dim = read_u32(buf, &mut pos)?;
-    ensure!(buf.len() >= pos + 8, "hello: truncated seed");
-    let seed = u64::from_le_bytes(buf[pos..pos + 8].try_into().expect("8-byte slice"));
+    let seed = u64::from_le_bytes(take(buf, pos, "hello seed")?);
     pos += 8;
     let init = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("hello: truncated init"))?;
     pos += 1;
@@ -684,7 +706,7 @@ pub fn decode_worker_hello(buf: &[u8]) -> Result<WorkerHello> {
     ensure!(buf.first() == Some(&UP_HELLO), "worker-hello: bad kind");
     ensure!(buf.len() >= 7, "worker-hello: frame length {} (expected >= 7)", buf.len());
     ensure!(buf[1..5] == UP_MAGIC[..], "worker-hello: bad magic");
-    let version = u16::from_le_bytes(buf[5..7].try_into().expect("2-byte slice"));
+    let version = u16::from_le_bytes(take(buf, 5, "worker-hello version")?);
     ensure!(
         version == WIRE_VERSION,
         "worker-hello: protocol version {version} (this build speaks {WIRE_VERSION})"
@@ -699,7 +721,7 @@ pub fn decode_worker_hello(buf: &[u8]) -> Result<WorkerHello> {
         return Ok(WorkerHello { reattach: None });
     }
     ensure!(buf.len() == 12, "worker-hello: reattach frame length {} (expected 12)", buf.len());
-    let prev_wid = u32::from_le_bytes(buf[8..12].try_into().expect("4-byte slice"));
+    let prev_wid = u32::from_le_bytes(take(buf, 8, "worker-hello reattach id")?);
     Ok(WorkerHello { reattach: Some(prev_wid) })
 }
 
@@ -760,9 +782,8 @@ pub struct ResyncFrame {
 /// specs) — propagated, never asserted.
 pub fn encode_resync(r: &ResyncFrame, out: &mut Vec<u8>) -> Result<()> {
     let hello = encode_session_hello(&r.hello)?;
-    ensure!(hello.len() <= u16::MAX as usize, "resync: hello too long for the wire");
     out.push(DOWN_RESYNC);
-    out.extend_from_slice(&(hello.len() as u16).to_le_bytes());
+    out.extend_from_slice(&wire_len_u16(hello.len(), "resync hello")?.to_le_bytes());
     out.extend_from_slice(&hello);
     out.extend_from_slice(&r.t.to_le_bytes());
     out.extend_from_slice(&r.round_seed.to_le_bytes());
@@ -841,8 +862,8 @@ pub fn decode_downlink(buf: &[u8]) -> Result<DownlinkFrame> {
                 "round: truncated header ({} bytes)",
                 buf.len()
             );
-            let t = u64::from_le_bytes(buf[1..9].try_into().expect("8-byte slice"));
-            let round_seed = u64::from_le_bytes(buf[9..17].try_into().expect("8-byte slice"));
+            let t = u64::from_le_bytes(take(buf, 1, "round t")?);
+            let round_seed = u64::from_le_bytes(take(buf, 9, "round seed")?);
             let flags = buf[17];
             ensure!(flags <= 1, "round: unknown flags {flags:#04x}");
             let body = &buf[1 + ROUND_PAYLOAD_BYTES..];
@@ -897,6 +918,7 @@ pub fn encode_round_reply(
     out.push(UP_ROUND);
     out.push(u8::from(loss.is_some()));
     out.extend_from_slice(&t.to_le_bytes());
+    // lint:allow(wire-cast): upframe is this worker's own codec output, bounded far below u32
     out.extend_from_slice(&(upframe.len() as u32).to_le_bytes());
     out.extend_from_slice(upframe);
     for v in grad {
@@ -929,8 +951,8 @@ pub fn split_round_reply(buf: &[u8]) -> Result<RoundReply<'_>> {
     let flags = buf[1];
     ensure!(flags <= 1, "round-reply: unknown flags {flags:#04x}");
     let has_loss = flags & 1 == 1;
-    let t = u64::from_le_bytes(buf[2..10].try_into().expect("8-byte slice"));
-    let up_len = u32::from_le_bytes(buf[10..14].try_into().expect("4-byte slice")) as usize;
+    let t = u64::from_le_bytes(take(buf, 2, "round-reply t")?);
+    let up_len = u32::from_le_bytes(take(buf, 10, "round-reply up_len")?) as usize;
     let tail = if has_loss { 8 } else { 0 };
     ensure!(
         (buf.len() - H) as u64 >= up_len as u64 + tail as u64,
@@ -941,9 +963,7 @@ pub fn split_round_reply(buf: &[u8]) -> Result<RoundReply<'_>> {
     let grad = &rest[..rest.len() - tail];
     ensure!(grad.len() % 4 == 0, "round-reply: gradient not a whole number of f32s");
     let loss = if has_loss {
-        Some(f64::from_le_bytes(
-            rest[rest.len() - 8..].try_into().expect("8-byte slice"),
-        ))
+        Some(f64::from_le_bytes(take(rest, rest.len() - 8, "round-reply loss")?))
     } else {
         None
     };
@@ -972,15 +992,13 @@ pub fn wire_part_count(u: &Update) -> usize {
 // ---------------------------------------------------------------------
 
 fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
-    ensure!(*pos + 8 <= buf.len(), "codec: truncated u64");
-    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().expect("8-byte slice"));
+    let v = u64::from_le_bytes(take(buf, *pos, "u64")?);
     *pos += 8;
     Ok(v)
 }
 
 fn push_str(s: &str, what: &str, out: &mut Vec<u8>) -> Result<()> {
-    ensure!(s.len() <= u16::MAX as usize, "{what} too long for the wire ({} bytes)", s.len());
-    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(&wire_len_u16(s.len(), what)?.to_le_bytes());
     out.extend_from_slice(s.as_bytes());
     Ok(())
 }
@@ -1284,11 +1302,9 @@ pub fn encode_serve_frame(f: &ServeFrame) -> Result<Vec<u8>> {
                 push_str(s, "metric: mech switch", &mut out)?;
             }
             if !rec.absent.is_empty() {
-                ensure!(
-                    rec.absent.len() <= u16::MAX as usize,
-                    "metric: absent set too wide for the wire"
+                out.extend_from_slice(
+                    &wire_len_u16(rec.absent.len(), "metric absent set")?.to_le_bytes(),
                 );
-                out.extend_from_slice(&(rec.absent.len() as u16).to_le_bytes());
                 for &w in &rec.absent {
                     out.extend_from_slice(&w.to_le_bytes());
                 }
@@ -1388,6 +1404,8 @@ pub fn decode_serve_frame(buf: &[u8]) -> Result<ServeFrame> {
             }
             ServeFrame::Metric(MetricUpdate {
                 id,
+                // lint:allow(struct-lit): the codec IS the record's wire form — a new
+                // RoundRecord field must change this literal and the encoder together
                 record: RoundRecord {
                     t: t as usize,
                     grad_norm_sq,
@@ -1525,7 +1543,7 @@ pub fn decode_journal_record(buf: &[u8]) -> Result<JournalRecord> {
             frame.extend_from_slice(&buf[1..]);
             match decode_serve_frame(&frame)? {
                 ServeFrame::Result(res) => Ok(JournalRecord::Result(res)),
-                _ => unreachable!("SERVE_RESULT tag decodes to Result"),
+                _ => bail!("journal-result: serve-result body decoded to a non-result frame"),
             }
         }
         other => bail!("journal: unknown record kind {other:#04x}"),
@@ -1533,6 +1551,7 @@ pub fn decode_journal_record(buf: &[u8]) -> Result<JournalRecord> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compressors::CVec;

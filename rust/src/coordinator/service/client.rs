@@ -2,6 +2,11 @@
 //! submit/status/attach/cancel` run, and what the loopback tests drive
 //! directly.
 
+// Wire-reachable module: a frame the daemon sends must never panic the
+// client. `threepc lint` enforces the same contract textually (rule
+// `wire-panic`); the clippy denies make it a compile error too.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use super::super::protocol::{self as proto, ClientFrame, ServeFrame};
 use super::super::socket::{io_err, parse_addr, read_frame, try_connect, write_frame, Stream};
 use super::super::transport::TransportError;

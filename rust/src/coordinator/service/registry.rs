@@ -8,7 +8,7 @@
 
 use super::super::metrics::RoundRecord;
 use super::super::protocol::{
-    decode_journal_record, encode_journal_record, JournalRecord, RejectCode, SessionPhase,
+    decode_journal_record, encode_journal_record, take, JournalRecord, RejectCode, SessionPhase,
     SessionResult, JOURNAL_MAGIC, JOURNAL_VERSION,
 };
 use super::super::session::{SessionDriver, TrainConfig};
@@ -199,6 +199,8 @@ impl SessionSpec {
                     ));
                 }
             }
+            // lint:allow(wire-panic): spec-parser invariant — the quorum key splits into
+            // exactly two halves by construction, independent of client input
             (Some(_), None) => unreachable!("quorum key always parses both halves"),
         }
         if cfg.absence_budget == 0 {
@@ -415,7 +417,7 @@ impl Journal {
             "{} is not a 3PC session journal",
             path.display()
         );
-        let version = u32::from_le_bytes(buf[4..8].try_into().expect("4-byte slice"));
+        let version = u32::from_le_bytes(take(&buf, 4, "journal version")?);
         anyhow::ensure!(
             version == JOURNAL_VERSION,
             "journal {}: unsupported version {version}",
@@ -428,8 +430,7 @@ impl Journal {
             if buf.len() - pos < 4 {
                 break; // torn length prefix
             }
-            let len =
-                u32::from_le_bytes(buf[pos..pos + 4].try_into().expect("4-byte slice")) as usize;
+            let len = u32::from_le_bytes(take(&buf, pos, "journal record length")?) as usize;
             anyhow::ensure!(
                 len <= MAX_JOURNAL_RECORD,
                 "journal {}: record at byte {pos} claims {len} bytes (bound {MAX_JOURNAL_RECORD})",
@@ -459,7 +460,9 @@ impl Journal {
     pub(crate) fn append(&mut self, rec: &JournalRecord) -> anyhow::Result<()> {
         let body = encode_journal_record(rec)?;
         let mut framed = Vec::with_capacity(4 + body.len());
-        framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let len32 = u32::try_from(body.len())
+            .map_err(|_| anyhow::anyhow!("journal record of {} bytes overflows the u32 length prefix", body.len()))?;
+        framed.extend_from_slice(&len32.to_le_bytes());
         framed.extend_from_slice(&body);
         self.file.write_all(&framed).context("journal append")?;
         self.file.sync_data().context("journal sync")?;

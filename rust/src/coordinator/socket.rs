@@ -333,6 +333,15 @@ pub(crate) fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
     }
 }
 
+/// Lock a mutex, recovering from poisoning instead of panicking: these
+/// mutexes guard plain handle/stream storage with no invariant a
+/// panicked holder could have half-applied, so the inner value is safe
+/// to keep using (and a poisoned-lock panic here would cascade a worker
+/// thread's death into the leader).
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Write one length-prefixed frame (`len:u32 LE` + body), corked: the
 /// prefix and body leave in a single vectored write — one syscall and
 /// one TCP segment on the common path, where the old two-`write_all`
@@ -346,7 +355,13 @@ pub(crate) fn write_frame(s: &mut Stream, body: &[u8], ctx: &str) -> Result<(), 
             body.len()
         )));
     }
-    let prefix = (body.len() as u32).to_le_bytes();
+    let len32 = u32::try_from(body.len()).map_err(|_| {
+        TransportError::Protocol(format!(
+            "{ctx}: frame of {} bytes overflows the u32 length prefix",
+            body.len()
+        ))
+    })?;
+    let prefix = len32.to_le_bytes();
     let total = prefix.len() + body.len();
     let mut done = 0usize;
     while done < prefix.len() {
@@ -592,14 +607,14 @@ impl Socket {
     pub fn bind(addr: &str, problem_spec: &str) -> Result<Socket, TransportError> {
         let sock = Socket::new(addr, problem_spec);
         let (listener, local) = bind_listener(&sock.addr)?;
-        *sock.listener.lock().expect("socket listener lock") = Some(listener);
-        *sock.local.lock().expect("socket local lock") = Some(local);
+        *lock_unpoisoned(&sock.listener) = Some(listener);
+        *lock_unpoisoned(&sock.local) = Some(local);
         Ok(sock)
     }
 
     /// The resolved listen address (available once bound).
     pub fn local_addr(&self) -> Option<String> {
-        self.local.lock().expect("socket local lock").clone()
+        lock_unpoisoned(&self.local).clone()
     }
 
     /// Natural (9-bit sign+exponent) uplink value coding — the
@@ -666,6 +681,7 @@ pub(crate) fn accept_with_deadline(
         match l.accept() {
             Ok(s) => return Ok(s),
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // lint:allow(determinism): accept deadline — wall time never reaches the trace
                 if Instant::now() >= deadline {
                     return Err(TransportError::Io(
                         "accept timed out waiting for workers to connect".into(),
@@ -736,6 +752,7 @@ fn wire_init_parts(
 /// steady-state io timeout is zero.
 pub(crate) fn handshake_read_timeout(io_timeout: Duration, deadline: Instant) -> Duration {
     let remaining =
+        // lint:allow(determinism): handshake timeout budget — wall time never reaches the trace
         deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
     if io_timeout.is_zero() || io_timeout > remaining {
         remaining
@@ -762,8 +779,7 @@ impl Transport for Socket {
         validate_quorum(cfg, n)?;
         let (zero_init, resume) = wire_init_parts(cfg, n, dim)?;
         let mech_spec = workers[0].map_spec();
-        let (listener, _local) = match self.listener.lock().expect("socket listener lock").take()
-        {
+        let (listener, _local) = match lock_unpoisoned(&self.listener).take() {
             Some(l) => (l, self.local_addr().unwrap_or_else(|| self.addr.clone())),
             None => bind_listener(&self.addr)?,
         };
@@ -774,6 +790,7 @@ impl Transport for Socket {
         // agent's hello claims a re-attach to a still-free slot, in
         // which case it is seated back where it was (a restarted leader
         // meeting its surviving fleet).
+        // lint:allow(determinism): accept deadline, not trace input
         let deadline = Instant::now() + self.accept_timeout;
         let mut scratch = Vec::new();
         let mut slots: Vec<Option<Peer>> = std::iter::repeat_with(|| None).take(n).collect();
@@ -791,6 +808,7 @@ impl Transport for Socket {
                 Some(prev) if (prev as usize) < n && slots[prev as usize].is_none() => {
                     prev as usize
                 }
+                // lint:allow(wire-panic): slot accounting — the loop admits exactly n peers
                 _ => slots.iter().position(|s| s.is_none()).expect("loop admits exactly n"),
             };
             // Handshake done — restore the steady-state io discipline.
@@ -828,6 +846,7 @@ impl Transport for Socket {
             });
         }
         let peers: Vec<Peer> =
+            // lint:allow(wire-panic): slot accounting — n accepts fill every slot
             slots.into_iter().map(|s| s.expect("n accepts fill every slot")).collect();
 
         // The leader keeps only the g_i^t mirrors; the heavy worker
@@ -1008,7 +1027,7 @@ impl Transport for PreConnected {
             return Err(TransportError::Protocol("service transport needs ≥ 1 worker".into()));
         }
         let granted =
-            std::mem::take(&mut *self.streams.lock().expect("preconnected streams lock"));
+            std::mem::take(&mut *lock_unpoisoned(&self.streams));
         if granted.len() != n {
             return Err(TransportError::Protocol(format!(
                 "service granted {} worker streams for an {n}-worker session",
@@ -1241,6 +1260,7 @@ impl SocketLink {
         #[cfg(not(unix))]
         {
             for p in self.peers.iter_mut() {
+                // lint:allow(wire-panic): non-unix builds never drop a peer mid-session
                 let s = p.stream.as_mut().expect("peers never drop mid-session on this platform");
                 write_frame(s, &self.down_buf, "round broadcast")
                     .map_err(|e| tag_peer(e, p.id, &p.addr))?;
@@ -1289,6 +1309,7 @@ impl SocketLink {
             } else {
                 let p = &mut self.peers[i];
                 write_frame(
+                    // lint:allow(wire-panic): liveness checked by the branch guard above
                     p.stream.as_mut().expect("checked live above"),
                     &self.down_buf,
                     "round broadcast",
@@ -1349,6 +1370,7 @@ impl SocketLink {
             .map_err(|e| TransportError::Protocol(format!("resync: {e:#}")))?;
         let p = &mut self.peers[i];
         write_frame(
+            // lint:allow(wire-panic): caller resyncs only freshly re-seated (live) slots
             p.stream.as_mut().expect("resync needs a live stream"),
             &self.resync_buf,
             "resync",
@@ -1420,7 +1442,7 @@ impl SocketLink {
 
         self.grad_buf.clear();
         for c in reply.grad.chunks_exact(4) {
-            self.grad_buf.push(f32::from_le_bytes(c.try_into().expect("4-byte chunk")));
+            self.grad_buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
         kernels::fold_f64(None, &mut out.grad_sum, &self.grad_buf);
         if let Some(l) = reply.loss {
@@ -1456,6 +1478,7 @@ impl SocketLink {
                 let id = p.id;
                 let addr = p.addr.clone();
                 read_frame(
+                    // lint:allow(wire-panic): non-unix builds never drop a peer mid-session
                     p.stream.as_mut().expect("peers never drop mid-session on this platform"),
                     &mut buf,
                     "round reply",
@@ -1570,7 +1593,10 @@ impl SocketLink {
             if let Some(m) = self.quorum {
                 if real_done >= m {
                     let deadline =
+                        // lint:allow(determinism): quorum grace clock — demotions land in
+                        // `absent` (pinned by the fault harness), never in committed fold order
                         *grace_deadline.get_or_insert_with(|| Instant::now() + self.quorum_grace);
+                    // lint:allow(determinism): quorum grace clock (see above)
                     if Instant::now() >= deadline {
                         self.demote_pending(next_fold);
                         continue;
@@ -1623,6 +1649,7 @@ impl SocketLink {
             }
             let mut timeout_ms = io_ms;
             if let Some(dl) = grace_deadline {
+                // lint:allow(determinism): poll timeout budget, not trace input
                 let rem = dl.saturating_duration_since(Instant::now());
                 let rem_ms = rem.as_millis().clamp(1, i32::MAX as u128) as i32;
                 timeout_ms = if timeout_ms < 0 { rem_ms } else { timeout_ms.min(rem_ms) };
@@ -1631,6 +1658,7 @@ impl SocketLink {
                 .map_err(|e| io_err("round reply (poll)", e))?;
             if ready == 0 {
                 if let Some(dl) = grace_deadline {
+                    // lint:allow(determinism): quorum grace clock — demotions land in `absent` only
                     if Instant::now() >= dl {
                         self.demote_pending(next_fold);
                         continue;
@@ -1650,6 +1678,7 @@ impl SocketLink {
                 match self.pump_peer(i, t) {
                     Ok(completed) => {
                         if completed {
+                            // lint:allow(float-fold): integer completion counter
                             real_done += 1;
                         }
                     }
@@ -1730,6 +1759,7 @@ impl SocketLink {
             if !self.peers.iter().any(|p| p.stream.is_none()) {
                 return Ok(());
             }
+            // lint:allow(wire-panic): rejoin path runs only on links built with a listener
             let listener = self.listener.as_ref().expect("accept_replacements needs a listener");
             let stream = match listener.accept() {
                 Ok(s) => s,
@@ -1775,6 +1805,7 @@ impl SocketLink {
                 .peers
                 .iter()
                 .position(|p| p.stream.is_none())
+                // lint:allow(wire-panic): caller admits rejoins only while a slot is dead
                 .expect("caller admits rejoins only while a slot is dead"),
         };
         let wid = self.peers[slot].id;
@@ -1828,6 +1859,7 @@ impl SocketLink {
             std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "connection closed mid-frame")
         }
         let wid = self.peers[i].id;
+        // lint:allow(wire-panic): pollfd registration implies the slot holds a live stream
         let stream = self.peers[i].stream.as_mut().expect("pump_peer requires a live stream");
         let r = &mut self.reads[i];
         loop {
@@ -1952,6 +1984,7 @@ impl TransportLink for SocketLink {
                 continue;
             }
             let addr = self.peers[i].addr.clone();
+            // lint:allow(wire-panic): dead/demoted slots were filtered directly above
             let stream = self.peers[i].stream.as_mut().expect("live slots have a stream");
             if let Err(e) = write_frame(stream, &self.down_buf, "mech-switch broadcast") {
                 self.failed = true;
@@ -1982,7 +2015,7 @@ impl Drop for SocketLink {
         // any link whose wire state is suspect shut the agents down.
         if let Some(fleet) = &self.return_to {
             if !self.failed {
-                let mut idle = fleet.streams.lock().expect("fleet return lock");
+                let mut idle = lock_unpoisoned(&fleet.streams);
                 for p in self.peers.drain(..) {
                     let Some(mut stream) = p.stream else { continue };
                     if write_frame(&mut stream, &[proto::DOWN_SESSION_END], "session end").is_ok()

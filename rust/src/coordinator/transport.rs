@@ -344,6 +344,8 @@ impl Transport for InProcess {
             let join = std::thread::Builder::new()
                 .name(format!("threepc-worker-{slot}"))
                 .spawn(move || pool_thread(slot, slice, dim, rx, reply, pool))
+                // lint:allow(wire-panic): in-process setup — no wire bytes; thread-spawn
+                // failure at connect time is unrecoverable resource exhaustion
                 .expect("spawning transport worker thread");
             joins.push(join);
         }
@@ -435,6 +437,8 @@ struct InProcessLink {
 impl InProcessLink {
     fn broadcast(&self, cmd: impl Fn() -> Cmd) {
         for tx in &self.cmd_txs {
+            // lint:allow(wire-panic): in-process channel — a dead worker thread already
+            // panicked; no peer bytes are involved
             tx.send(cmd()).expect("transport worker thread died");
         }
     }
@@ -466,6 +470,7 @@ impl TransportLink for InProcessLink {
         let task = Arc::new(RoundTask { x: Arc::clone(&self.x_arc), round_seed, eval_loss });
         for tx in &self.cmd_txs {
             tx.send(Cmd::Round(task.clone(), self.spare_reports.pop()))
+                // lint:allow(wire-panic): in-process channel — see `broadcast`
                 .expect("transport worker thread died");
         }
         drop(task);
@@ -475,13 +480,17 @@ impl TransportLink for InProcessLink {
         // the adds themselves are sharded — coordinates are independent,
         // so the chunk fan-out is invisible in the folded bits.)
         for _ in 0..self.cmd_txs.len() {
+            // lint:allow(wire-panic): in-process channel — see `broadcast`
             match self.reply_rx.recv().expect("transport worker thread died") {
                 Reply::Round { slot, report } => self.report_slots[slot] = Some(report),
+                // lint:allow(wire-panic): protocol invariant of our own thread pool — the
+                // round loop consumes exactly the replies it solicited
                 Reply::Snapshot { .. } => unreachable!("unsolicited snapshot reply"),
             }
         }
         out.reset_sh(self.dim, self.n, sh);
         for slot in self.report_slots.iter_mut() {
+            // lint:allow(wire-panic): every slot was filled by the recv loop above
             let rep = slot.take().expect("missing thread report");
             kernels::add_f64(sh, &mut out.delta_sum, &rep.delta_sum);
             kernels::add_f64(sh, &mut out.grad_sum, &rep.grad_sum);
@@ -501,13 +510,17 @@ impl TransportLink for InProcessLink {
         let mut per_slot: Vec<Option<Vec<(usize, Vec<f32>)>>> =
             (0..self.cmd_txs.len()).map(|_| None).collect();
         for _ in 0..self.cmd_txs.len() {
+            // lint:allow(wire-panic): in-process channel — see `broadcast`
             match self.reply_rx.recv().expect("transport worker thread died") {
                 Reply::Snapshot { slot, gs } => per_slot[slot] = Some(gs),
+                // lint:allow(wire-panic): protocol invariant of our own thread pool — the
+                // snapshot loop consumes exactly the replies it solicited
                 Reply::Round { .. } => unreachable!("unsolicited round reply"),
             }
         }
         Ok(per_slot
             .into_iter()
+            // lint:allow(wire-panic): every slot was filled by the recv loop above
             .flat_map(|gs| gs.expect("missing thread snapshot"))
             .collect())
     }

@@ -86,7 +86,7 @@ pub fn synthetic_libsvm(name: &str, full_size: bool, seed: u64) -> Result<Datase
             if rng.bernoulli(density) {
                 let v = rng.normal();
                 x[i * *d + j] = v as f32;
-                margin += v * w[j];
+                margin += v * w[j]; // lint:allow(float-fold): seeded data synthesis, fixed serial order
             }
         }
         // 10% label noise — keeps the problem non-separable like the

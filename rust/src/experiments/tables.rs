@@ -43,6 +43,8 @@ fn empirical_3pc_slack(spec: &str, info: CtxInfo, cases: usize, draws: usize) ->
             let mut rng = Pcg64::new(17, (case * draws + t) as u64);
             let mut ctx = Ctx::new(info, &mut rng, (case * draws + t) as u64);
             let u = map.apply(&h, &y, &x, &mut ctx);
+            // lint:allow(float-fold): Monte-Carlo validation table — seeded, serial,
+            // presentation only
             acc += dist_sq(&apply_update(&h, &u), &x);
         }
         let lhs = acc / draws as f64;

@@ -37,6 +37,7 @@
 // CI runs clippy with -D warnings, so the style exception is explicit.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod compressors;
 pub mod coordinator;
 pub mod data;

@@ -61,6 +61,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "status" => cmd_status(args),
         "attach" => cmd_attach(args),
         "cancel" => cmd_cancel(args),
+        "lint" => cmd_lint(args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -305,6 +306,32 @@ fn result_line(rounds: u64, gns: f64, tbu: u64, tbd: u64, wbu: u64, wbd: u64) ->
     )
 }
 
+/// Run the project lint rules (R1–R5, see LINTS.md) over `rust/src`.
+/// Exits non-zero when any diagnostic fires, so CI can gate on it.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("root", "."));
+    let report = threepc::analysis::lint_tree(&root)
+        .map_err(|e| anyhow::anyhow!("lint: walking {}: {e}", root.display()))?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        for d in &report.diagnostics {
+            println!("{}", d.render());
+        }
+        if report.is_clean() {
+            println!(
+                "lint: clean ({} files scanned, {} waivers in effect)",
+                report.files, report.waivers
+            );
+        }
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        anyhow::bail!("lint: {} diagnostic(s)", report.diagnostics.len())
+    }
+}
+
 fn print_help() {
     println!(
         "threepc — 3PC: Three Point Compressors (ICML 2022) reproduction\n\
@@ -316,6 +343,9 @@ fn print_help() {
            threepc serve --listen <addr>     long-lived multi-session coordinator daemon\n\
            threepc submit --connect <addr> --spec \"…\"   queue a session on a daemon\n\
            threepc status|attach|cancel --connect <addr> --id N\n\
+           threepc lint [--json] [--root DIR]   static analysis (LINTS.md): determinism,\n\
+                                      float-fold, wire-panic/cast, frame registry,\n\
+                                      struct-literal rules over rust/src\n\
            threepc info                      build + artifact status\n\
          \n\
          train flags:\n\

@@ -112,6 +112,7 @@ impl ReplaceWire {
         match self {
             ReplaceWire::Dense => 32 * dim as u64,
             ReplaceWire::Fresh(parts) | ReplaceWire::FromPrev(parts) => {
+                // lint:allow(float-fold): integer bit accounting
                 parts.iter().map(|p| p.wire_bits()).sum()
             }
         }

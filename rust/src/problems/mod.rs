@@ -70,6 +70,8 @@ impl Distributed {
 
     /// Global loss `f(x)` (mean of locals).
     pub fn loss(&self, x: &[f32]) -> f64 {
+        // lint:allow(float-fold): serial mean over shards in fixed index order —
+        // evaluation-only, identical across transports
         self.locals.iter().map(|l| l.loss(x)).sum::<f64>() / self.locals.len() as f64
     }
 

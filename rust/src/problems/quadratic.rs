@@ -131,6 +131,7 @@ pub fn generate(n: usize, d: usize, lambda: f64, s: f64, seed: u64) -> QuadSuite
     // Step 7–8: λ_min of the mean matrix (closed form — mean A is
     // (ν̄/4)·T, whose extreme eigenvalues are at t_min/t_max depending on
     // the sign of ν̄).
+    // lint:allow(float-fold): one-shot problem synthesis in fixed order
     let nu_bar: f64 = nus.iter().sum::<f64>() / n as f64;
     let lam_min_mean = if nu_bar >= 0.0 {
         nu_bar / 4.0 * t_min(d)
@@ -153,6 +154,7 @@ pub fn generate(n: usize, d: usize, lambda: f64, s: f64, seed: u64) -> QuadSuite
     x0[0] = (d as f64).sqrt() as f32;
 
     // Closed-form constants (see module docs).
+    // lint:allow(float-fold): one-shot problem synthesis in fixed order
     let m2: f64 = nus.iter().map(|v| v * v).sum::<f64>() / n as f64;
     let var_nu = (m2 - nu_bar * nu_bar).max(0.0);
     let tmax = t_max(d);

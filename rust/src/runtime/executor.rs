@@ -209,6 +209,7 @@ impl LocalProblem for HloQuad {
             .iter()
             .zip(ax.iter().zip(&g))
             .map(|(&xi, (&axi, &gi))| xi as f64 * (axi - gi) as f64)
+            // lint:allow(float-fold): PJRT cross-check diagnostic, serial fixed order
             .sum();
         0.5 * xtax - btx
     }

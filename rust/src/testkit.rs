@@ -65,7 +65,7 @@ pub fn empirical_mean<F: FnMut(&mut Pcg64) -> f64>(seed: u64, trials: usize, mut
     let mut rng = Pcg64::new(seed ^ 0xabcd_ef01, 0x3bc);
     let mut acc = 0.0;
     for _ in 0..trials {
-        acc += f(&mut rng);
+        acc += f(&mut rng); // lint:allow(float-fold): test-harness Monte-Carlo mean
     }
     acc / trials as f64
 }

@@ -7,6 +7,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
+    // lint:allow(float-fold): presentation statistics, serial fixed order
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
@@ -16,6 +17,7 @@ pub fn std_dev(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let m = mean(xs);
+    // lint:allow(float-fold): presentation statistics, serial fixed order
     (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
@@ -57,8 +59,8 @@ pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
     let mut sxx = 0.0;
     let mut sxy = 0.0;
     for i in 0..x.len() {
-        sxx += (x[i] - mx) * (x[i] - mx);
-        sxy += (x[i] - mx) * (y[i] - my);
+        sxx += (x[i] - mx) * (x[i] - mx); // lint:allow(float-fold): presentation regression
+        sxy += (x[i] - mx) * (y[i] - my); // lint:allow(float-fold): presentation regression
     }
     if sxx == 0.0 {
         return (my, 0.0);

@@ -1,0 +1,319 @@
+//! Fixture tests for `threepc lint` (the `analysis` module): every rule
+//! must fire on a minimal guilty snippet *at the right line*, stay
+//! quiet on the innocent near-miss, honor waivers, and reject malformed
+//! waivers. The final test runs the real linter over this checkout —
+//! the same gate CI applies — so a deleted waiver or a fresh violation
+//! fails the suite even before the CI lint step runs.
+
+use threepc::analysis::{lint_sources, lint_tree, Diagnostic, LintReport};
+
+/// Lint one in-memory file (no R4 corpus).
+fn lint_one(path: &str, text: &str) -> LintReport {
+    lint_sources(&[(path.to_string(), text.to_string())], None)
+}
+
+/// The (line, rule) pairs of a report, for order-insensitive asserts.
+fn hits(r: &LintReport) -> Vec<(usize, &'static str)> {
+    r.diagnostics.iter().map(|d| (d.line, d.rule)).collect()
+}
+
+fn assert_clean(r: &LintReport) {
+    assert!(
+        r.is_clean(),
+        "expected clean, got: {:?}",
+        r.diagnostics.iter().map(Diagnostic::render).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------- R1
+
+#[test]
+fn determinism_fires_on_trace_files_at_line() {
+    let src = "use std::collections::HashMap;\n\
+               fn f() {\n\
+               let m: HashMap<u32, u32> = HashMap::new();\n\
+               let t = Instant::now();\n\
+               let s = SystemTime::now();\n\
+               }\n";
+    let r = lint_one("rust/src/mechanisms/fixture.rs", src);
+    let h = hits(&r);
+    // Two HashMap mentions on line 3, one on line 1.
+    assert_eq!(h.iter().filter(|&&(l, ru)| l == 1 && ru == "determinism").count(), 1);
+    assert_eq!(h.iter().filter(|&&(l, ru)| l == 3 && ru == "determinism").count(), 2);
+    assert!(h.contains(&(4, "determinism")), "Instant::now must fire: {h:?}");
+    assert!(h.contains(&(5, "determinism")), "SystemTime must fire: {h:?}");
+}
+
+#[test]
+fn determinism_ignores_non_trace_files_and_identifier_prefixes() {
+    let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, u32>) {}\n";
+    assert_clean(&lint_one("rust/src/util/fixture.rs", src));
+    // `MyHashMapLike` is not a word-boundary hit.
+    let src = "struct MyHashMapLike;\nfn g(_: MyHashMapLike) {}\n";
+    assert_clean(&lint_one("rust/src/mechanisms/fixture.rs", src));
+}
+
+// ---------------------------------------------------------------- R2
+
+#[test]
+fn float_fold_fires_outside_kernels_at_line() {
+    let src = "fn f(xs: &[f64]) -> f64 {\n\
+               let a = xs.iter().sum::<f64>();\n\
+               let b = xs.iter().fold(0.0f64, |m, &v| m + v);\n\
+               let mut acc = 0.0;\n\
+               for &v in xs {\n\
+               acc += v;\n\
+               }\n\
+               a + b + acc\n\
+               }\n";
+    let r = lint_one("rust/src/experiments/fixture.rs", src);
+    let h = hits(&r);
+    assert!(h.contains(&(2, "float-fold")), "typed float sum must fire: {h:?}");
+    assert!(h.contains(&(3, "float-fold")), "float fold must fire: {h:?}");
+    assert!(h.contains(&(6, "float-fold")), "loop accumulation must fire: {h:?}");
+}
+
+#[test]
+fn float_fold_exempts_kernels_and_integer_folds() {
+    let src = "fn f(xs: &[f64]) -> f64 {\nxs.iter().sum::<f64>()\n}\n";
+    assert_clean(&lint_one("rust/src/kernels/fixture.rs", src));
+    // An explicitly integer-typed sum is fine anywhere.
+    let src = "fn f(xs: &[u64]) -> u64 {\nxs.iter().sum::<u64>()\n}\n";
+    assert_clean(&lint_one("rust/src/experiments/fixture.rs", src));
+    // `+=` outside any `for` loop body does not fire.
+    let src = "fn f(mut a: f64, b: f64) -> f64 {\na += b;\na\n}\n";
+    assert_clean(&lint_one("rust/src/experiments/fixture.rs", src));
+}
+
+// ---------------------------------------------------------------- R3
+
+#[test]
+fn wire_panic_and_cast_fire_in_wire_files_at_line() {
+    let src = "fn f(buf: &[u8], v: Vec<u8>) -> u32 {\n\
+               let a = buf.first().unwrap();\n\
+               let b: [u8; 2] = buf[0..2].try_into().expect(\"two\");\n\
+               assert!(buf.len() > 4);\n\
+               let n = v.len() as u32;\n\
+               let big = u64::from_le_bytes([0; 8]) as usize;\n\
+               n + *a as u32 + b[0] as u32 + big as u32\n\
+               }\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    let h = hits(&r);
+    assert!(h.contains(&(2, "wire-panic")), "unwrap must fire: {h:?}");
+    assert!(h.contains(&(3, "wire-panic")), "expect must fire: {h:?}");
+    assert!(h.contains(&(4, "wire-panic")), "assert! must fire: {h:?}");
+    assert!(h.contains(&(5, "wire-cast")), "length cast must fire: {h:?}");
+    assert!(h.contains(&(6, "wire-cast")), "u64-as-usize must fire: {h:?}");
+}
+
+#[test]
+fn wire_rules_exempt_non_wire_files_and_debug_assert() {
+    let src = "fn f(v: &[u8]) -> u32 {\nv.len() as u32\n}\n";
+    assert_clean(&lint_one("rust/src/experiments/fixture.rs", src));
+    let src = "fn f(buf: &[u8]) {\ndebug_assert!(buf.len() > 4);\n}\n";
+    assert_clean(&lint_one("rust/src/coordinator/service/fixture.rs", src));
+    // Poison recovery is the sanctioned lock idiom — must NOT fire.
+    let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n\
+               *m.lock().unwrap_or_else(|p| p.into_inner())\n\
+               }\n";
+    assert_clean(&lint_one("rust/src/coordinator/service/fixture.rs", src));
+}
+
+#[test]
+fn test_modules_are_skipped() {
+    let src = "fn f() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               #[test]\n\
+               fn t() {\n\
+               let v: Vec<u8> = vec![];\n\
+               let _ = v.first().unwrap();\n\
+               }\n\
+               }\n";
+    assert_clean(&lint_one("rust/src/coordinator/service/fixture.rs", src));
+}
+
+// ---------------------------------------------------------------- R4
+
+#[test]
+fn wire_registry_catches_duplicate_tags() {
+    let src = "pub const TAG_A: u8 = 0x01;\n\
+               pub const TAG_B: u8 = 0x01;\n\
+               pub const TAG_A2: u8 = 0x02;\n";
+    // Duplicate *name* across files.
+    let src2 = "pub const TAG_A2: u8 = 0x03;\n";
+    let r = lint_sources(
+        &[
+            ("rust/src/coordinator/service/a.rs".to_string(), src.to_string()),
+            ("rust/src/coordinator/service/b.rs".to_string(), src2.to_string()),
+        ],
+        None,
+    );
+    let dup_value = r
+        .diagnostics
+        .iter()
+        .any(|d| d.rule == "wire-registry" && d.line == 2 && d.message.contains("0x01"));
+    assert!(dup_value, "duplicate tag value must fire: {:?}", hits(&r));
+    let dup_name = r
+        .diagnostics
+        .iter()
+        .any(|d| d.rule == "wire-registry" && d.message.contains("TAG_A2"));
+    assert!(dup_name, "duplicate tag name must fire: {:?}", hits(&r));
+}
+
+#[test]
+fn wire_registry_requires_decode_partners() {
+    let src = "pub fn encode_widget(v: u8) -> Vec<u8> { vec![v] }\n\
+               pub fn encode_gadget(v: u8) -> Vec<u8> { vec![v] }\n\
+               pub fn decode_gadget(_: &[u8]) {}\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    let h = hits(&r);
+    assert!(
+        h.contains(&(1, "wire-registry")),
+        "unpaired encoder must fire: {h:?}"
+    );
+    assert!(!h.contains(&(2, "wire-registry")), "paired encoder must not fire: {h:?}");
+    // Buffer-reusing suffix forms pair with the base decoder.
+    let src = "pub fn encode_widget_into(v: u8, out: &mut Vec<u8>) { out.push(v) }\n\
+               fn decode_widget(_: &[u8]) {}\n";
+    assert_clean(&lint_one("rust/src/coordinator/service/fixture.rs", src));
+}
+
+#[test]
+fn wire_registry_requires_fuzz_corpus_coverage() {
+    let src = "pub const TAG_A: u8 = 0x31;\npub const TAG_B: u8 = 0x32;\n";
+    // Corpus mentions TAG_A only.
+    let r = lint_sources(
+        &[("rust/src/coordinator/service/fixture.rs".to_string(), src.to_string())],
+        Some("fn fuzz() { let _ = TAG_A; }"),
+    );
+    let h = hits(&r);
+    assert!(!h.contains(&(1, "wire-registry")), "covered tag must not fire: {h:?}");
+    assert!(h.contains(&(2, "wire-registry")), "uncovered tag must fire: {h:?}");
+    // No corpus supplied → the coverage check is skipped entirely.
+    assert_clean(&lint_one("rust/src/coordinator/service/fixture.rs", src));
+}
+
+// ---------------------------------------------------------------- R5
+
+#[test]
+fn struct_lit_fires_outside_home_module_at_line() {
+    let src = "fn f() {\n\
+               let r = RoundRecord { t: 0 };\n\
+               let c = Checkpoint { t: 1 };\n\
+               }\n";
+    let r = lint_one("rust/src/experiments/fixture.rs", src);
+    let h = hits(&r);
+    assert!(h.contains(&(2, "struct-lit")), "RoundRecord literal must fire: {h:?}");
+    assert!(h.contains(&(3, "struct-lit")), "Checkpoint literal must fire: {h:?}");
+}
+
+#[test]
+fn struct_lit_exempts_home_modules_and_type_positions() {
+    let src = "fn f() {\nlet r = RoundRecord { t: 0 };\n}\n";
+    assert_clean(&lint_one("rust/src/coordinator/metrics.rs", src));
+    let src = "pub fn run() -> TrainResult {\ntodo()\n}\n\
+               impl TrainResult {}\n\
+               struct TrainResult {}\n\
+               fn g(r: &TrainResult {}) {}\n";
+    assert_clean(&lint_one("rust/src/experiments/fixture.rs", src));
+}
+
+// ------------------------------------------------------------ waivers
+
+#[test]
+fn waivers_suppress_trailing_and_preceding_forms() {
+    let src = "fn f(buf: &[u8]) -> u8 {\n\
+               *buf.first().unwrap() // lint:allow(wire-panic): fixture — caller checks len\n\
+               }\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert_clean(&r);
+    assert_eq!(r.waivers, 1);
+
+    let src = "fn f(buf: &[u8]) -> u8 {\n\
+               // lint:allow(wire-panic): fixture — caller checks len\n\
+               *buf.first().unwrap()\n\
+               }\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert_clean(&r);
+    assert_eq!(r.waivers, 1);
+}
+
+#[test]
+fn waiver_covers_only_its_own_rule() {
+    // A float-fold waiver does not excuse a wire-panic on the same line.
+    let src = "fn f(buf: &[u8]) -> u8 {\n\
+               *buf.first().unwrap() // lint:allow(float-fold): wrong rule\n\
+               }\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert_eq!(hits(&r), vec![(2, "wire-panic")]);
+}
+
+#[test]
+fn waiver_without_reason_is_an_error() {
+    let src = "fn f(buf: &[u8]) -> u8 {\n\
+               *buf.first().unwrap() // lint:allow(wire-panic)\n\
+               }\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    let h = hits(&r);
+    assert!(h.contains(&(2, "waiver")), "reasonless waiver must be flagged: {h:?}");
+    assert!(h.contains(&(2, "wire-panic")), "a malformed waiver must not suppress: {h:?}");
+    // Same for a colon with only whitespace after it.
+    let src = "fn f() {}\n// lint:allow(wire-panic):   \n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert!(hits(&r).contains(&(2, "waiver")));
+}
+
+#[test]
+fn waiver_with_unknown_rule_is_an_error() {
+    let src = "fn f() {}\n// lint:allow(no-such-rule): reason text\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert_eq!(hits(&r), vec![(2, "waiver")]);
+    assert!(r.diagnostics[0].message.contains("no-such-rule"));
+}
+
+#[test]
+fn prose_mentions_of_the_grammar_are_not_waivers() {
+    // Doc comments describing `lint:allow(<rule>): <reason>` must parse
+    // as prose, not as (malformed) waivers.
+    let src = "//! Use `lint:allow(<rule>): <reason>` to waive a finding.\n\
+               /// See lint:allow(<rule>) for details.\n\
+               fn f() {}\n";
+    let r = lint_one("rust/src/coordinator/service/fixture.rs", src);
+    assert_clean(&r);
+    assert_eq!(r.waivers, 0);
+}
+
+#[test]
+fn tokens_inside_strings_and_comments_do_not_fire() {
+    let src = "fn f() -> &'static str {\n\
+               // HashMap in a comment is fine, as is .unwrap() here\n\
+               \"HashMap::new().unwrap() as u32\"\n\
+               }\n";
+    assert_clean(&lint_one("rust/src/coordinator/protocol.rs", src));
+}
+
+// --------------------------------------------------------- the gate
+
+/// The real gate: this checkout lints clean. Any new violation — or any
+/// deleted waiver — fails this test (and the CI lint step).
+#[test]
+fn tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("walking rust/src");
+    assert!(report.files > 50, "walked only {} files — wrong root?", report.files);
+    assert!(report.waivers > 30, "only {} waivers parsed — wrong root?", report.waivers);
+    assert!(
+        report.is_clean(),
+        "tree must lint clean:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(Diagnostic::render)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // The JSON rendering of a clean run is stable and parseable-ish.
+    let json = report.to_json();
+    assert!(json.starts_with("{\"diagnostics\":[]"), "unexpected json: {json}");
+}

@@ -21,7 +21,7 @@ use threepc::coordinator::protocol::{
     decode_resync, decode_serve_frame, decode_worker_hello, encode_client_frame,
     encode_mech_switch, encode_resync, encode_round_reply, encode_round_start,
     encode_serve_frame, encode_session_hello, encode_uplink_with, encode_worker_hello,
-    split_round_reply, ResyncFrame, SessionHello,
+    split_round_reply, ResyncFrame, SessionHello, DOWN_SESSION_END, DOWN_SHUTDOWN, DOWN_SWITCH,
 };
 use threepc::coordinator::{
     decode_uplink, Checkpoint, ClientFrame, MechSwitch, MetricUpdate, RejectCode, RoundRecord,
@@ -274,18 +274,26 @@ fn downlink_frames_survive_truncation_and_bit_flips() {
             spec: "ef21:top4".into(),
         })
         .unwrap();
-        let mut body = vec![0xd3u8]; // DOWN_SWITCH
+        let mut body = vec![DOWN_SWITCH];
         body.extend_from_slice(&inner);
         body
     };
-    let shutdown = vec![0xd4u8]; // DOWN_SHUTDOWN
+    let shutdown = vec![DOWN_SHUTDOWN];
+    let session_end = vec![DOWN_SESSION_END];
     let decode: &dyn Fn(&[u8]) = &|b| {
         let _ = decode_downlink(b);
     };
-    for frame in [&hello, &round, &switch, &shutdown] {
+    for frame in [&hello, &round, &switch, &shutdown, &session_end] {
         assert!(decode_downlink(frame).is_ok());
         fuzz_decoder(frame, decode);
     }
+    // The tagless control frames decode to their variants exactly and
+    // reject any body bytes.
+    use threepc::coordinator::protocol::DownlinkFrame;
+    assert_eq!(decode_downlink(&shutdown).unwrap(), DownlinkFrame::Shutdown);
+    assert_eq!(decode_downlink(&session_end).unwrap(), DownlinkFrame::SessionEnd);
+    assert!(decode_downlink(&[DOWN_SHUTDOWN, 0]).is_err());
+    assert!(decode_downlink(&[DOWN_SESSION_END, 0]).is_err());
 }
 
 /// The rejoin vocabulary: the RESYNC downlink (embedded hello + round

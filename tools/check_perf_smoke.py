@@ -5,21 +5,28 @@ Compares a fresh bench report against the baseline checked in at
 `HEAD:BENCH_hotpath.json` (the bench overwrites the working-tree copy,
 so the baseline is always read from git). Rules:
 
+* both files must pass the schema lint below — a malformed report is a
+  hard failure, not a silently-skipped gate;
 * every case the baseline tracks (its ``cases[].name`` list) must be
   present in the fresh report with a finite ``ms_per_round`` — coverage
   cannot silently disappear;
+* a ``"source": "bootstrap"`` baseline (the state the file is first
+  committed in, before any runner has measured it) gates *coverage
+  drift* instead of latency: the fresh report's case list must equal
+  the bootstrap's exactly. A bench that grew, dropped or renamed a case
+  fails loudly until the committed baseline is refreshed — otherwise
+  the unmeasured baseline would "pass" forever while tracking cases
+  that no longer exist;
 * when the baseline case carries a measured ``ms_per_round`` number
   *and* both files were produced in the same bench mode (the ``smoke``
   flag — PERF.md: compare trajectories only across same-mode runs),
   the fresh value must be <= REGRESSION_FACTOR x the baseline; a mode
-  mismatch downgrades the ratio check to a printed notice;
-* a baseline value of ``null`` (the ``"source": "bootstrap"`` state the
-  file is first committed in, before any runner has measured it) skips
-  the ratio check for that case and prints a refresh reminder. Arm the
-  CI gate by running ``BENCH_SMOKE=1 cargo bench --bench bench_hotpath``
-  on the reference runner (CI runs in smoke mode, so the baseline must
-  be smoke-mode to gate there) and committing the emitted file over the
-  baseline.
+  mismatch downgrades the ratio check to a printed notice.
+
+Arm the latency gate by running ``BENCH_SMOKE=1 cargo bench --bench
+bench_hotpath`` on the reference runner (CI runs in smoke mode, so the
+baseline must be smoke-mode to gate there) and committing the emitted
+file over the baseline.
 
 Usage: tools/check_perf_smoke.py [FRESH_JSON] [--baseline FILE]
        (FRESH_JSON defaults to BENCH_hotpath.json; the baseline
@@ -33,6 +40,66 @@ import sys
 
 REGRESSION_FACTOR = 2.0
 BASELINE_REF = "HEAD:BENCH_hotpath.json"
+SOURCES = ("measured", "bootstrap")
+
+
+def schema_lint(report, label):
+    """Validate one report against the BENCH_hotpath.json schema.
+
+    Top level: {"bench": "hotpath", "smoke": bool, "source":
+    "measured"|"bootstrap", "cases": [{"name": str, "ms_per_round":
+    finite number | null}]}. ``null`` figures are only legal while the
+    report is a bootstrap; duplicate case names are always an error.
+    Returns a list of problems (empty = clean).
+    """
+    errs = []
+    if not isinstance(report, dict):
+        return [f"{label}: top level must be a JSON object"]
+    for key in ("bench", "smoke", "source", "cases"):
+        if key not in report:
+            errs.append(f"{label}: missing required key {key!r}")
+    if report.get("bench") != "hotpath":
+        errs.append(f"{label}: \"bench\" must be \"hotpath\", got {report.get('bench')!r}")
+    if "smoke" in report and not isinstance(report["smoke"], bool):
+        errs.append(f"{label}: \"smoke\" must be a bool, got {report['smoke']!r}")
+    source = report.get("source")
+    if "source" in report and source not in SOURCES:
+        errs.append(f"{label}: \"source\" must be one of {SOURCES}, got {source!r}")
+    cases = report.get("cases")
+    if not isinstance(cases, list):
+        if "cases" in report:
+            errs.append(f"{label}: \"cases\" must be a list")
+        return errs
+    if not cases:
+        errs.append(f"{label}: \"cases\" is empty — the gate would check nothing")
+    seen = set()
+    for i, case in enumerate(cases):
+        where = f"{label}: cases[{i}]"
+        if not isinstance(case, dict):
+            errs.append(f"{where}: must be an object")
+            continue
+        name = case.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{where}: \"name\" must be a non-empty string")
+        elif name in seen:
+            errs.append(f"{where}: duplicate case name {name!r}")
+        else:
+            seen.add(name)
+        if "ms_per_round" not in case:
+            errs.append(f"{where}: missing \"ms_per_round\"")
+            continue
+        ms = case["ms_per_round"]
+        if ms is None:
+            if source == "measured":
+                errs.append(
+                    f"{where}: null ms_per_round in a \"measured\" report "
+                    "(null is only legal while \"source\" is \"bootstrap\")"
+                )
+        elif not isinstance(ms, (int, float)) or isinstance(ms, bool) or not math.isfinite(ms):
+            errs.append(f"{where}: \"ms_per_round\" must be a finite number or null, got {ms!r}")
+        elif ms < 0:
+            errs.append(f"{where}: negative ms_per_round {ms!r}")
+    return errs
 
 
 def load_baseline(path):
@@ -66,9 +133,43 @@ def main(argv):
         fresh = json.load(f)
     baseline = load_baseline(baseline_path)
 
+    # Schema first: a malformed report must fail loudly here rather than
+    # produce a vacuous PASS below.
+    schema_errs = schema_lint(fresh, f"fresh ({fresh_path})") + schema_lint(
+        baseline, f"baseline ({baseline_path or BASELINE_REF})"
+    )
+    if schema_errs:
+        print("[perf-smoke] FAIL: schema lint:")
+        for e in schema_errs:
+            print(f"  - {e}")
+        return 1
+
     fresh_cases = {c["name"]: c for c in fresh.get("cases", [])}
-    same_mode = bool(fresh.get("smoke")) == bool(baseline.get("smoke"))
     failures = []
+
+    # A bootstrap baseline cannot gate latency, so it must at least gate
+    # its own shape: the moment the bench's case list drifts from the
+    # committed bootstrap, fail until the baseline is refreshed.
+    if baseline.get("source") == "bootstrap":
+        base_names = [c["name"] for c in baseline.get("cases", [])]
+        fresh_names = [c["name"] for c in fresh.get("cases", [])]
+        if sorted(base_names) != sorted(fresh_names):
+            gone = sorted(set(base_names) - set(fresh_names))
+            new = sorted(set(fresh_names) - set(base_names))
+            detail = "; ".join(
+                part
+                for part in (
+                    f"tracked but no longer emitted: {gone}" if gone else "",
+                    f"emitted but untracked: {new}" if new else "",
+                )
+                if part
+            )
+            failures.append(
+                "bootstrap baseline case-list drift — refresh the committed "
+                f"BENCH_hotpath.json ({detail})"
+            )
+
+    same_mode = bool(fresh.get("smoke")) == bool(baseline.get("smoke"))
     checked = 0
     speedups = []
     for base_case in baseline.get("cases", []):
